@@ -1,0 +1,37 @@
+//! Shared helpers for the bench harnesses.
+//!
+//! The offline build has no criterion; every bench is a plain `main` that
+//! regenerates one of the paper's tables/figures on the deterministic
+//! virtual timeline (real numerics optional via GMI_DRL_BENCH_REAL=1 where
+//! supported) and prints the same rows/series the paper reports.
+
+#![allow(dead_code)]
+
+use gmi_drl::config::{static_registry, BenchInfo};
+use gmi_drl::drl::Compute;
+use gmi_drl::vtime::CostModel;
+
+pub fn bench(abbr: &str) -> (BenchInfo, CostModel) {
+    let b = static_registry()[abbr].clone();
+    let c = CostModel::new(&b);
+    (b, c)
+}
+
+/// Use real numerics if requested AND artifacts exist; otherwise Null.
+/// Returns the server guard (keep alive) and the compute handle.
+pub fn compute() -> (Option<gmi_drl::runtime::ExecServer>, Compute) {
+    let want_real = std::env::var("GMI_DRL_BENCH_REAL").map(|v| v == "1").unwrap_or(false);
+    if want_real {
+        if let Ok(server) = gmi_drl::runtime::ExecServer::start(gmi_drl::config::artifacts_dir()) {
+            let h = server.handle();
+            return (Some(server), Compute::Real { handle: h });
+        }
+        eprintln!("(GMI_DRL_BENCH_REAL=1 but artifacts unavailable; using Null compute)");
+    }
+    (None, Compute::Null)
+}
+
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n=== {title} ===");
+    println!("regenerates: {paper_ref}\n");
+}

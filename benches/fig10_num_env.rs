@@ -1,0 +1,55 @@
+//! Figure 10: sync training throughput and GPU memory vs num_env for AT
+//! and HM (1 GMI on 1 GPU).
+//!
+//! Expected shape: throughput rises with num_env with diminishing returns;
+//! memory grows steadily and sharply at the top end — the observation that
+//! drives the saturation metric of Algorithm 2.
+
+mod common;
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::metrics::{fmt_rate, Table};
+
+fn main() {
+    common::header(
+        "Fig 10: throughput and memory vs num_env (1 GMI / 1 GPU)",
+        "paper Fig 10; expectation: saturating throughput, growing memory",
+    );
+    let (_guard, compute) = common::compute();
+    for abbr in ["AT", "HM"] {
+        let (b, cost) = common::bench(abbr);
+        println!("--- {} ---", b.name);
+        let mut t = Table::new(&["num_env", "steps/s", "gain vs prev", "mem GiB"]);
+        let mut prev = 0.0f64;
+        for num_env in [512usize, 1024, 2048, 4096, 8192] {
+            let topo = Topology::dgx_a100(1);
+            let layout = build_sync_layout(
+                &topo,
+                MappingTemplate::TaskColocated,
+                1,
+                num_env,
+                &cost,
+                None,
+            )
+            .unwrap();
+            let cfg = SyncConfig { iterations: 10, ..Default::default() };
+            let r = run_sync(&layout, &b, &cost, &compute, &cfg).unwrap();
+            let gain = if prev > 0.0 {
+                format!("{:+.1}%", 100.0 * (r.metrics.steps_per_sec / prev - 1.0))
+            } else {
+                "-".to_string()
+            };
+            prev = r.metrics.steps_per_sec;
+            t.row(vec![
+                num_env.to_string(),
+                fmt_rate(r.metrics.steps_per_sec),
+                gain,
+                format!("{:.1}", r.metrics.peak_mem_gib),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+}

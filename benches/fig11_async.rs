@@ -1,0 +1,72 @@
+//! Figure 11: asynchronized DRL training throughput — GMI-DRL vs the
+//! non-GMI baseline on 2 and 4 GPUs, measuring predictions/s (PPS) and
+//! training-sample throughput (TTOP).
+//!
+//! Expected shape: GMI-DRL ~1.9x PPS and ~1.65x TTOP on average.
+
+mod common;
+
+use gmi_drl::baselines::non_gmi_async_layout;
+use gmi_drl::channels::ShareMode;
+use gmi_drl::cluster::Topology;
+use gmi_drl::drl::a3c::{run_async, AsyncConfig};
+use gmi_drl::mapping::build_async_layout;
+use gmi_drl::metrics::{fmt_rate, Table};
+
+fn main() {
+    common::header(
+        "Fig 11: async DRL training (A3C) — PPS and TTOP vs non-GMI",
+        "paper Fig 11; expectation: ~1.88x PPS, ~1.65x TTOP average",
+    );
+    let (_guard, compute) = common::compute();
+    let mut pps_gains = Vec::new();
+    let mut ttop_gains = Vec::new();
+    for gpus in [2usize, 4] {
+        println!("--- {gpus} GPUs (half serving, half training) ---");
+        let mut t = Table::new(&[
+            "Bench", "non-GMI PPS", "GMI PPS", "PPS gain", "non-GMI TTOP", "GMI TTOP",
+            "TTOP gain",
+        ]);
+        for abbr in ["AY", "FC", "AT", "HM"] {
+            let (b, cost) = common::bench(abbr);
+            let topo = Topology::dgx_a100(gpus);
+            let serving_gpus = gpus / 2;
+            let cfg = AsyncConfig {
+                rounds: 16,
+                share_mode: ShareMode::MultiChannel,
+                batch_samples: 8192,
+                ..Default::default()
+            };
+            // GMI-DRL: 3 serving GMIs and 2 trainer GMIs per GPU.
+            let ours_layout =
+                build_async_layout(&topo, serving_gpus, 3, 2, 2048, &cost).unwrap();
+            let ours = run_async(&ours_layout, &b, &cost, &compute, &cfg).unwrap();
+            // non-GMI: one process per GPU, uni-channel experience path.
+            let base_layout = non_gmi_async_layout(&topo, serving_gpus, 6144, &cost).unwrap();
+            let base_cfg = AsyncConfig { share_mode: ShareMode::UniChannel, ..cfg.clone() };
+            let base = run_async(&base_layout, &b, &cost, &compute, &base_cfg).unwrap();
+
+            let gp = ours.metrics.pps / base.metrics.pps;
+            let gt = ours.metrics.ttop / base.metrics.ttop.max(1e-9);
+            pps_gains.push(gp);
+            ttop_gains.push(gt);
+            t.row(vec![
+                abbr.to_string(),
+                fmt_rate(base.metrics.pps),
+                fmt_rate(ours.metrics.pps),
+                format!("{gp:.2}x"),
+                fmt_rate(base.metrics.ttop),
+                fmt_rate(ours.metrics.ttop),
+                format!("{gt:.2}x"),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "average: {:.2}x PPS (paper 1.88x), {:.2}x TTOP (paper 1.65x)",
+        avg(&pps_gains),
+        avg(&ttop_gains)
+    );
+}

@@ -1,0 +1,71 @@
+//! Figure 1(b): GPU utilization of Isaac Gym PPO training on one A100.
+//!
+//! The paper profiles AT/HM/SH for 10 epochs and finds utilization
+//! consistently under 50% (32% average). We reproduce the measurement on
+//! the virtual timeline, and add the GMI-DRL utilization for contrast
+//! (the §6.1 claim: +31.8% utilization on average).
+
+mod common;
+
+use gmi_drl::baselines;
+use gmi_drl::cluster::Topology;
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::metrics::Table;
+use gmi_drl::selection;
+
+fn main() {
+    common::header(
+        "Fig 1(b): GPU utilization, PPO on 1x A100, 10 epochs",
+        "paper Fig 1(b); expectation: baseline < 50% (avg ~32%), GMI-DRL much higher",
+    );
+    let (_guard, compute) = common::compute();
+    let topo = Topology::dgx_a100(1);
+    let cfg = SyncConfig { iterations: 10, ..Default::default() };
+
+    let mut t = Table::new(&["Bench", "Isaac Gym util", "GMI-DRL util", "delta"]);
+    let mut base_sum = 0.0;
+    let mut ours_sum = 0.0;
+    for abbr in ["AT", "HM", "SH"] {
+        let (b, cost) = common::bench(abbr);
+        // Baseline: one exclusive process, peak-tuned num_env.
+        let base = baselines::isaac_sync(
+            &topo,
+            &b,
+            &cost,
+            &compute,
+            baselines::CommBackend::Nccl,
+            8192,
+            &cfg,
+        )
+        .unwrap();
+        // GMI-DRL: Algorithm 2 configuration.
+        let (sel, _) = selection::explore(&b, &cost, GmiBackend::Mps, 1, b.horizon);
+        let sel = sel.unwrap();
+        let layout = build_sync_layout(
+            &topo,
+            MappingTemplate::TaskColocated,
+            sel.gmi_per_gpu,
+            sel.num_env,
+            &cost,
+            None,
+        )
+        .unwrap();
+        let ours = run_sync(&layout, &b, &cost, &compute, &cfg).unwrap();
+        base_sum += base.metrics.utilization;
+        ours_sum += ours.metrics.utilization;
+        t.row(vec![
+            abbr.to_string(),
+            format!("{:.1}%", 100.0 * base.metrics.utilization),
+            format!("{:.1}%", 100.0 * ours.metrics.utilization),
+            format!("+{:.1}pp", 100.0 * (ours.metrics.utilization - base.metrics.utilization)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nbaseline avg {:.1}% (paper: ~32%, <50%) | GMI-DRL avg {:.1}%",
+        100.0 * base_sum / 3.0,
+        100.0 * ours_sum / 3.0
+    );
+}

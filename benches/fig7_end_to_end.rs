@@ -1,0 +1,146 @@
+//! Figure 7: end-to-end computation throughput, normalized to Isaac Gym on
+//! a single GPU — the paper's headline result.
+//!
+//!   (a) DRL serving            — GMI-DRL vs Isaac Gym multi-GPU serving
+//!   (b) sync training vs NCCL  — GMI-DRL vs Isaac Gym (PPO) + NCCL
+//!   (c) sync training vs Horovod
+//!
+//! Expected shape: GMI-DRL wins up to ~2.6x serving (avg ~2.1x), up to
+//! ~2.8x vs NCCL (avg ~1.9x), up to ~2.3x vs Horovod (avg ~1.75x); gains
+//! grow with benchmark complexity.
+//!
+//! Usage: cargo bench --bench fig7_end_to_end [-- serving|sync-nccl|sync-horovod]
+
+mod common;
+
+use gmi_drl::baselines::{self, CommBackend};
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::PAPER_BENCHMARKS;
+use gmi_drl::drl::serving::{run_serving, ServingConfig};
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::mapping::{build_serving_layout, build_sync_layout, MappingTemplate};
+use gmi_drl::metrics::Table;
+use gmi_drl::selection;
+
+const GPU_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn serving(compute: &Compute) {
+    common::header(
+        "Fig 7(a): DRL serving throughput (normalized to 1-GPU Isaac Gym)",
+        "paper Fig 7(a); expectation: up to ~2.6x, ~2.1x average",
+    );
+    let mut t = Table::new(&["Bench", "1 GPU", "2 GPUs", "4 GPUs", "8 GPUs"]);
+    let mut gains = Vec::new();
+    for abbr in PAPER_BENCHMARKS {
+        let (b, cost) = common::bench(abbr);
+        // 1-GPU Isaac Gym reference for normalization.
+        let topo1 = Topology::dgx_a100(1);
+        let ref_m = baselines::isaac_serving(&topo1, &b, &cost, compute, 8192, 10).unwrap();
+        let mut row = vec![abbr.to_string()];
+        for gpus in GPU_COUNTS {
+            let topo = Topology::dgx_a100(gpus);
+            let (sel, _) =
+                selection::explore(&b, &cost, GmiBackend::Mig, gpus, b.horizon);
+            let sel = sel.unwrap();
+            let layout = build_serving_layout(
+                &topo,
+                MappingTemplate::TaskColocated,
+                sel.gmi_per_gpu,
+                sel.num_env,
+                &cost,
+                None,
+            )
+            .unwrap();
+            let ours = run_serving(&layout, &b, &cost, compute, &ServingConfig {
+                rounds: 10,
+                seed: 1,
+                real_replicas: 0,
+            })
+            .unwrap();
+            let base =
+                baselines::isaac_serving(&topo, &b, &cost, compute, 8192, 10).unwrap();
+            gains.push(ours.steps_per_sec / base.steps_per_sec);
+            row.push(format!(
+                "{:.2} vs {:.2} ({:.2}x)",
+                ours.steps_per_sec / ref_m.steps_per_sec,
+                base.steps_per_sec / ref_m.steps_per_sec,
+                ours.steps_per_sec / base.steps_per_sec
+            ));
+        }
+        t.row(row);
+    }
+    t.print();
+    summary(&gains, "2.62x max / 2.08x avg");
+}
+
+fn sync(compute: &Compute, backend: CommBackend, label: &str, expect: &str) {
+    common::header(
+        &format!("Fig 7({label}): sync DRL training throughput vs {backend:?}"),
+        &format!("paper Fig 7({label}); expectation: {expect}"),
+    );
+    let cfg = SyncConfig { iterations: 10, ..Default::default() };
+    let mut t = Table::new(&["Bench", "2 GPUs", "4 GPUs", "8 GPUs"]);
+    let mut gains = Vec::new();
+    for abbr in PAPER_BENCHMARKS {
+        let (b, cost) = common::bench(abbr);
+        let topo1 = Topology::dgx_a100(1);
+        let ref_r = baselines::isaac_sync(&topo1, &b, &cost, compute, backend, 8192, &cfg)
+            .unwrap();
+        let mut row = vec![abbr.to_string()];
+        for gpus in [2usize, 4, 8] {
+            let topo = Topology::dgx_a100(gpus);
+            let (sel, _) =
+                selection::explore(&b, &cost, GmiBackend::Mps, gpus, b.horizon);
+            let sel = sel.unwrap();
+            let layout = build_sync_layout(
+                &topo,
+                MappingTemplate::TaskColocated,
+                sel.gmi_per_gpu,
+                sel.num_env,
+                &cost,
+                None,
+            )
+            .unwrap();
+            let ours = run_sync(&layout, &b, &cost, compute, &cfg).unwrap();
+            let base =
+                baselines::isaac_sync(&topo, &b, &cost, compute, backend, 8192, &cfg)
+                    .unwrap();
+            gains.push(ours.metrics.steps_per_sec / base.metrics.steps_per_sec);
+            row.push(format!(
+                "{:.2} vs {:.2} ({:.2}x)",
+                ours.metrics.steps_per_sec / ref_r.metrics.steps_per_sec,
+                base.metrics.steps_per_sec / ref_r.metrics.steps_per_sec,
+                ours.metrics.steps_per_sec / base.metrics.steps_per_sec
+            ));
+        }
+        t.row(row);
+    }
+    t.print();
+    summary(&gains, expect);
+}
+
+fn summary(gains: &[f64], paper: &str) {
+    let max = gains.iter().cloned().fold(0.0f64, f64::max);
+    let avg = gains.iter().sum::<f64>() / gains.len() as f64;
+    println!("\nGMI-DRL speedup: max {max:.2}x, avg {avg:.2}x (paper: {paper})");
+}
+
+fn main() {
+    // cargo bench passes a `--bench` flag to the binary; ignore flags.
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_default();
+    let (_guard, compute) = common::compute();
+    if filter.is_empty() || filter == "serving" {
+        serving(&compute);
+    }
+    if filter.is_empty() || filter == "sync-nccl" {
+        sync(&compute, CommBackend::Nccl, "b", "2.81x max / 1.86x avg");
+    }
+    if filter.is_empty() || filter == "sync-horovod" {
+        sync(&compute, CommBackend::Horovod, "c", "2.34x max / 1.75x avg");
+    }
+}

@@ -1,0 +1,45 @@
+//! Figure 8: GMI backend comparison — MPS and MIG vs Direct-Share, for
+//! 2-serving and 3-serving layouts on one A100.
+//!
+//! Expected shape: MPS and MIG consistently beat Direct-Share; on the
+//! heavier benchmarks MIG's hardware isolation wins over MPS; on the light
+//! ones the difference is minor.
+
+mod common;
+
+use gmi_drl::baselines::backend_serving;
+use gmi_drl::config::PAPER_BENCHMARKS;
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::metrics::Table;
+
+fn main() {
+    common::header(
+        "Fig 8: backend comparison (normalized to Direct-Share)",
+        "paper Fig 8; expectation: MIG >= MPS > Direct-Share (1.0)",
+    );
+    let (_guard, compute) = common::compute();
+    for k in [2usize, 3] {
+        println!("--- {k}-serving on 1x A100 ---");
+        let mut t = Table::new(&["Bench", "Direct-Share", "MPS", "MIG"]);
+        for abbr in PAPER_BENCHMARKS {
+            let (b, cost) = common::bench(abbr);
+            let num_env = 2048;
+            let run = |be| {
+                backend_serving(&b, &cost, &compute, be, k, num_env, 10)
+                    .unwrap()
+                    .steps_per_sec
+            };
+            let ds = run(GmiBackend::DirectShare);
+            let mps = run(GmiBackend::Mps);
+            let mig = run(GmiBackend::Mig);
+            t.row(vec![
+                abbr.to_string(),
+                "1.00".to_string(),
+                format!("{:.2}", mps / ds),
+                format!("{:.2}", mig / ds),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,86 @@
+//! Figure 9: reward accumulation over training time for AT, AY, HM —
+//! GMI-DRL vs single-GPU Isaac Gym and its multi-GPU NCCL variant.
+//!
+//! With real numerics (GMI_DRL_BENCH_REAL=1 + `make artifacts`) the reward
+//! samples come from genuine PPO training through the artifacts; the time
+//! axis is virtual seconds in both modes, so the *curves' ordering* — GMI-
+//! DRL accumulates reward fastest per unit time — is the reproduced claim.
+
+mod common;
+
+use gmi_drl::baselines::{self, CommBackend};
+use gmi_drl::cluster::Topology;
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::metrics::Table;
+use gmi_drl::selection;
+
+fn main() {
+    common::header(
+        "Fig 9: reward accumulation over (virtual) training time, 20 epochs",
+        "paper Fig 9; expectation: GMI-DRL reaches any reward level sooner",
+    );
+    let (_guard, compute) = common::compute();
+    let epochs = 20;
+    for abbr in ["AT", "AY", "HM"] {
+        let (b, cost) = common::bench(abbr);
+        println!("--- {} ---", b.name);
+        let cfg = SyncConfig { iterations: epochs, real_replicas: 1, ..Default::default() };
+        let topo4 = Topology::dgx_a100(4);
+        let topo1 = Topology::dgx_a100(1);
+
+        // GMI-DRL on 4 GPUs.
+        let (sel, _) = selection::explore(&b, &cost, GmiBackend::Mps, 4, b.horizon);
+        let sel = sel.unwrap();
+        let layout = build_sync_layout(
+            &topo4,
+            MappingTemplate::TaskColocated,
+            sel.gmi_per_gpu,
+            sel.num_env,
+            &cost,
+            None,
+        )
+        .unwrap();
+        let ours = run_sync(&layout, &b, &cost, &compute, &cfg).unwrap();
+        // Baselines.
+        let single =
+            baselines::isaac_sync(&topo1, &b, &cost, &compute, CommBackend::Nccl, 8192, &cfg)
+                .unwrap();
+        let nccl4 =
+            baselines::isaac_sync(&topo4, &b, &cost, &compute, CommBackend::Nccl, 8192, &cfg)
+                .unwrap();
+
+        // Sample the three curves on a common virtual-time grid.
+        let t_max = ours
+            .metrics
+            .span_s
+            .max(single.metrics.span_s)
+            .max(nccl4.metrics.span_s);
+        let mut t = Table::new(&["t (s)", "Isaac 1GPU", "Isaac+NCCL 4GPU", "GMI-DRL 4GPU"]);
+        let at = |curve: &[(f64, f64)], tt: f64| -> f64 {
+            let mut last = 0.0;
+            for &(ts, r) in curve {
+                if ts > tt {
+                    break;
+                }
+                last = r;
+            }
+            last
+        };
+        for i in 1..=8 {
+            let tt = t_max * i as f64 / 8.0;
+            t.row(vec![
+                format!("{tt:.2}"),
+                format!("{:.3}", at(&single.metrics.reward_curve, tt)),
+                format!("{:.3}", at(&nccl4.metrics.reward_curve, tt)),
+                format!("{:.3}", at(&ours.metrics.reward_curve, tt)),
+            ]);
+        }
+        t.print();
+        println!(
+            "time to finish {epochs} epochs: GMI-DRL {:.2}s | NCCL-4GPU {:.2}s | 1GPU {:.2}s\n",
+            ours.metrics.span_s, nccl4.metrics.span_s, single.metrics.span_s
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! L3 hot-path micro-benchmarks (the §Perf deliverable): wall-clock timing
+//! of the coordinator's inner loops — LGR reduction arithmetic, the channel
+//! pipeline, and the sync orchestrator — independent of virtual time.
+//!
+//! Used by the performance pass to find and verify hot-path optimizations;
+//! before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::time::Instant;
+
+use gmi_drl::channels::{Compressor, Dispenser, RolloutSegment, ShareMode};
+use gmi_drl::cluster::Topology;
+use gmi_drl::comm::{LgrEngine, ReduceStrategy};
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::metrics::Table;
+use gmi_drl::vtime::Clock;
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    common::header("hotpath: coordinator wall-clock micro-benchmarks", "EXPERIMENTS.md §Perf");
+    let mut t = Table::new(&["path", "work", "wall-clock", "rate"]);
+
+    // 1. LGR reduction arithmetic (16 x 1.5M-float gradients, SH scale).
+    let mpl: Vec<Vec<usize>> = (0..4).map(|i| (0..4).map(|j| i * 4 + j).collect()).collect();
+    let engine = LgrEngine::new(Topology::dgx_a100(4), mpl).unwrap();
+    let grads: Vec<Vec<f32>> = (0..16).map(|_| vec![0.5f32; 1_500_000]).collect();
+    let s = time(5, || {
+        let _ = engine.allreduce(&grads, ReduceStrategy::Hierarchical).unwrap();
+    });
+    let gb = (16.0 * 1.5e6 * 4.0) / 1e9;
+    t.row(vec![
+        "LGR allreduce (real sum)".into(),
+        "16 x 1.5M f32".into(),
+        format!("{:.1} ms", s * 1e3),
+        format!("{:.1} GB/s", gb / s),
+    ]);
+
+    // 2. Channel pipeline: dispense + compress one SH-scale segment.
+    let seg = RolloutSegment::synthetic(16, 2048, 211, 20);
+    let mut dp = Dispenser::new(0, 211, 20);
+    let mut cp = Compressor::with_default_threshold(ShareMode::MultiChannel);
+    let s = time(10, || {
+        let chunks = dp.dispense(&seg, Clock(1.0), ShareMode::MultiChannel);
+        let _ = cp.push(chunks);
+    });
+    let seg_bytes = (16 * 2048 * (211 + 20 + 4) * 4) as f64 / 1e9;
+    t.row(vec![
+        "channel DP+CP".into(),
+        "16x2048 SH segment".into(),
+        format!("{:.2} ms", s * 1e3),
+        format!("{:.1} GB/s", seg_bytes / s),
+    ]);
+
+    // 3. Whole sync orchestrator iteration (Null compute, 4G4T).
+    let (b, cost) = common::bench("AT");
+    let topo = Topology::dgx_a100(4);
+    let layout =
+        build_sync_layout(&topo, MappingTemplate::TaskColocated, 4, 2048, &cost, None).unwrap();
+    let cfg = SyncConfig { iterations: 10, ..Default::default() };
+    let s = time(3, || {
+        let _ = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    });
+    t.row(vec![
+        "sync orchestrator".into(),
+        "10 iters, 16 GMIs".into(),
+        format!("{:.1} ms", s * 1e3),
+        format!("{:.2} ms/iter", s * 1e3 / 10.0),
+    ]);
+
+    t.print();
+}

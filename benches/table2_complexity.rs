@@ -1,0 +1,61 @@
+//! Table 2: analytical time complexities of MPR / MRR / HAR, cross-checked
+//! against the executable LGR engine's routing costs.
+//!
+//! The analytical forms (paper Table 2) and the engine's physical model
+//! (contended PCIe lanes, shared NVLink fabric, slow CPU reduce) must agree
+//! on ORDERING for every layout, even where absolute constants differ.
+
+mod common;
+
+use gmi_drl::cluster::{Topology, HOST_BW, NVLINK_BW};
+use gmi_drl::comm::lgr::analytical;
+use gmi_drl::comm::{LgrEngine, ReduceStrategy};
+use gmi_drl::metrics::Table;
+
+fn engine(g: usize, t: usize) -> LgrEngine {
+    let mpl: Vec<Vec<usize>> =
+        (0..g).map(|i| (0..t).map(|j| i * t + j).collect()).collect();
+    LgrEngine::new(Topology::dgx_a100(g), mpl).unwrap()
+}
+
+fn main() {
+    common::header(
+        "Table 2: MPR / MRR / HAR time complexity",
+        "paper Table 2; expectation: HAR <= MRR << MPR for multi-GPU multi-GMI",
+    );
+    let mp_params = [("AT", 1.1e5), ("HM", 2.9e5), ("SH", 1.5e6)];
+    let mut t = Table::new(&[
+        "Bench", "g", "t", "MPR ms (analytic)", "MRR ms (analytic)", "HAR ms (analytic)",
+        "MPR ms (engine)", "MRR ms (engine)", "HAR ms (engine)",
+    ]);
+    for (abbr, params) in mp_params {
+        for (g, tt) in [(2usize, 2usize), (4, 2), (4, 4), (8, 4)] {
+            let mp = params * 4.0;
+            let a_mpr = analytical::mpr(g, tt, mp, HOST_BW) * 1e3;
+            let a_mrr = analytical::mrr(g, tt, mp, NVLINK_BW) * 1e3;
+            let a_har = analytical::har(g, tt, mp, HOST_BW, NVLINK_BW) * 1e3;
+            let eng = engine(g, tt);
+            let grads: Vec<Vec<f32>> =
+                (0..g * tt).map(|_| vec![0.1f32; params as usize]).collect();
+            let (_, e_mpr) = eng.allreduce(&grads, ReduceStrategy::MultiProcess).unwrap();
+            let (_, e_mrr) = eng
+                .allreduce(&grads, ReduceStrategy::MultiRing)
+                .map(|(_, s)| ((), s))
+                .unwrap_or(((), f64::NAN));
+            let (_, e_har) = eng.allreduce(&grads, ReduceStrategy::Hierarchical).unwrap();
+            t.row(vec![
+                abbr.to_string(),
+                g.to_string(),
+                tt.to_string(),
+                format!("{a_mpr:.3}"),
+                format!("{a_mrr:.3}"),
+                format!("{a_har:.3}"),
+                format!("{:.3}", e_mpr * 1e3),
+                format!("{:.3}", e_mrr * 1e3),
+                format!("{:.3}", e_har * 1e3),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(engine MPR includes the CPU-reduce term the analytic form folds into B1)");
+}

@@ -1,0 +1,87 @@
+//! Tables 4 & 5: TDG vs TCG analytical comparison (resource size,
+//! communication size, projected throughput), cross-checked against the
+//! executable orchestrators.
+//!
+//! Expected shape: TCG ~2.5x TDG for serving (Eq. 2), TCG_EX ~5x TDG_EX
+//! for sync training (Eq. 3); the run-level orchestrators must agree on
+//! ordering.
+
+mod common;
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::drl::serving::{run_serving, ServingConfig};
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::mapping::cost::{serving_cost, sync_cost, TaskProfile};
+use gmi_drl::mapping::{
+    build_serving_layout, build_sync_layout, MappingTemplate,
+};
+use gmi_drl::metrics::Table;
+
+fn main() {
+    common::header(
+        "Tables 4+5: task-colocated vs task-dedicated GMI mapping",
+        "paper §5.1; expectation: TCG ~2.5x (serving), TCG_EX ~5x (sync)",
+    );
+    let (_guard, compute) = common::compute();
+
+    // ---- analytical (Tables 4/5 with the paper's measured constants) ----
+    let mut t = Table::new(&[
+        "Bench", "workload", "R(TDG)", "R(TCG)", "COM(TDG) B", "COM(TCG) B", "TOP ratio TCG/TDG",
+    ]);
+    for abbr in ["AT", "HM", "SH"] {
+        let (b, _) = common::bench(abbr);
+        let p = TaskProfile::paper_defaults(b.obs_dim, b.act_dim, b.param_bytes() as f64, 32, 8);
+        let s_tdg = serving_cost(&p, MappingTemplate::TaskDedicated);
+        let s_tcg = serving_cost(&p, MappingTemplate::TaskColocated);
+        t.row(vec![
+            abbr.to_string(),
+            "serving".to_string(),
+            format!("{:.2}", s_tdg.resource_size),
+            format!("{:.2}", s_tcg.resource_size),
+            format!("{:.0}", s_tdg.comm_bytes),
+            format!("{:.0}", s_tcg.comm_bytes),
+            format!("{:.2}x", s_tcg.throughput / s_tdg.throughput),
+        ]);
+        let x_tdg = sync_cost(&p, MappingTemplate::TaskDedicated);
+        let x_tcg = sync_cost(&p, MappingTemplate::TaskColocated);
+        t.row(vec![
+            abbr.to_string(),
+            "sync train".to_string(),
+            format!("{:.2}", x_tdg.resource_size),
+            format!("{:.2}", x_tcg.resource_size),
+            format!("{:.2e}", x_tdg.comm_bytes),
+            format!("{:.2e}", x_tcg.comm_bytes),
+            format!("{:.2}x", x_tcg.throughput / x_tdg.throughput),
+        ]);
+    }
+    t.print();
+
+    // ---- executable cross-check ----
+    println!("\nrun-level cross-check (steps/s, 2 GPUs, 3 GMIs/GPU):");
+    let mut t = Table::new(&["Bench", "serving TDG", "serving TCG", "sync TDG_EX", "sync TCG_EX"]);
+    for abbr in ["AT", "HM"] {
+        let (b, cost) = common::bench(abbr);
+        let topo = Topology::dgx_a100(2);
+        let scfg = ServingConfig { rounds: 8, ..Default::default() };
+        let run_serve = |tpl| {
+            let l = build_serving_layout(&topo, tpl, 3, 2048, &cost, None).unwrap();
+            run_serving(&l, &b, &cost, &compute, &scfg).unwrap().steps_per_sec
+        };
+        let ycfg = SyncConfig { iterations: 8, ..Default::default() };
+        let run_train = |tpl| {
+            let l = build_sync_layout(&topo, tpl, 3, 2048, &cost, None).unwrap();
+            run_sync(&l, &b, &cost, &compute, &ycfg)
+                .unwrap()
+                .metrics
+                .steps_per_sec
+        };
+        t.row(vec![
+            abbr.to_string(),
+            format!("{:.0}", run_serve(MappingTemplate::TaskDedicated)),
+            format!("{:.0}", run_serve(MappingTemplate::TaskColocated)),
+            format!("{:.0}", run_train(MappingTemplate::TaskDedicated)),
+            format!("{:.0}", run_train(MappingTemplate::TaskColocated)),
+        ]);
+    }
+    t.print();
+}

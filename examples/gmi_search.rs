@@ -1,0 +1,55 @@
+//! Workload-aware GMI selection (Algorithm 2) across all six paper
+//! benchmarks: prints the full profiling trace for one benchmark and the
+//! selected configuration for every benchmark at 1/2/4/8 GPUs.
+//!
+//!     cargo run --release --example gmi_search
+
+use gmi_drl::config::{static_registry, PAPER_BENCHMARKS};
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::metrics::{fmt_rate, Table};
+use gmi_drl::selection;
+use gmi_drl::vtime::CostModel;
+
+fn main() {
+    let reg = static_registry();
+
+    // Full trace for Ant on 4 GPUs.
+    let at = &reg["AT"];
+    let cost = CostModel::new(at);
+    let (_, trace) = selection::explore(at, &cost, GmiBackend::Mps, 4, at.horizon);
+    println!("Algorithm 2 trace for AT on 4 GPUs ({} points profiled):", trace.len());
+    let mut t = Table::new(&["GMI/GPU", "num_env", "runnable", "steps/s", "mem GiB"]);
+    for p in trace.iter().filter(|p| p.gmi_per_gpu <= 4) {
+        t.row(vec![
+            p.gmi_per_gpu.to_string(),
+            p.num_env.to_string(),
+            if p.runnable { "yes".into() } else { "NO".into() },
+            fmt_rate(p.top),
+            format!("{:.1}", p.mem_gib),
+        ]);
+    }
+    t.print();
+
+    // Selected configuration per benchmark per GPU count.
+    println!("\nSelected configurations (GMIperGPU / num_env / projected steps/s):");
+    let mut t = Table::new(&["Bench", "1 GPU", "2 GPUs", "4 GPUs", "8 GPUs"]);
+    for abbr in PAPER_BENCHMARKS {
+        let b = &reg[abbr];
+        let cost = CostModel::new(b);
+        let mut row = vec![abbr.to_string()];
+        for gpus in [1usize, 2, 4, 8] {
+            let (sel, _) = selection::explore(b, &cost, GmiBackend::Mps, gpus, b.horizon);
+            row.push(match sel {
+                Some(s) => format!(
+                    "{}x{} -> {}",
+                    s.gmi_per_gpu,
+                    s.num_env,
+                    fmt_rate(s.projected_top)
+                ),
+                None => "-".to_string(),
+            });
+        }
+        t.row(row);
+    }
+    t.print();
+}

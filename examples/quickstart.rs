@@ -1,0 +1,76 @@
+//! Quickstart: the smallest end-to-end GMI-DRL run with REAL numerics.
+//!
+//! Loads the AOT artifacts (run `make artifacts` first), asks Algorithm 2
+//! for a configuration, builds a TCG_EX layout on 2 simulated A100s, and
+//! trains BallBalance PPO for a handful of iterations through the PJRT CPU
+//! client — printing the loss and reward as it goes.
+//!
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::artifacts_dir;
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::runtime::ExecServer;
+use gmi_drl::selection;
+use gmi_drl::vtime::CostModel;
+use gmi_drl::Manifest;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let bench = manifest.bench("BB")?.clone();
+    println!(
+        "benchmark: {} ({}), obs {} act {} params {}",
+        bench.name, bench.abbr, bench.obs_dim, bench.act_dim, bench.num_params
+    );
+
+    // 1. Workload-aware GMI selection (Algorithm 2).
+    let cost = CostModel::new(&bench);
+    let (sel, _) = selection::explore(&bench, &cost, GmiBackend::Mps, 2, bench.horizon);
+    let sel = sel.expect("no runnable configuration");
+    println!(
+        "Algorithm 2 picked: GMIperGPU={} num_env={} (projected {:.0} steps/s)",
+        sel.gmi_per_gpu, sel.num_env, sel.projected_top
+    );
+
+    // 2. Task-aware GMI mapping: holistic training GMIs (TCG_EX).
+    let topo = Topology::dgx_a100(2);
+    let layout = build_sync_layout(
+        &topo,
+        MappingTemplate::TaskColocated,
+        sel.gmi_per_gpu,
+        sel.num_env,
+        &cost,
+        None,
+    )?;
+    println!(
+        "layout: {} GMIs on {} GPUs, backend {}",
+        layout.rollout_gmis.len(),
+        topo.num_gpus(),
+        layout.backend_name()
+    );
+
+    // 3. Real training through the PJRT runtime.
+    let server = ExecServer::start(dir)?;
+    let compute = Compute::Real { handle: server.handle() };
+    let cfg = SyncConfig { iterations: 8, real_replicas: 1, ..Default::default() };
+    let r = run_sync(&layout, &bench, &cost, &compute, &cfg)?;
+
+    println!("\niter |    loss | pi_loss |  v_loss | reward");
+    for (i, s) in r.stats_per_iter.iter().enumerate() {
+        println!(
+            "{:>4} | {:>7.4} | {:>7.4} | {:>7.4} | {:>6.3}",
+            i, s.loss, s.pi_loss, s.v_loss, s.mean_reward
+        );
+    }
+    r.metrics.print_summary(&format!("quickstart BB [{}]", r.strategy));
+    let (execs, compile_s, exec_s, _, _) = server.handle().stats().snapshot();
+    println!("PJRT: {execs} executions, {compile_s:.1}s compiling, {exec_s:.1}s executing");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT driver: lower every benchmark's compute graphs to HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly.
+
+Outputs, per benchmark abbr (e.g. artifacts/AT/):
+    init.hlo.txt  rollout.hlo.txt  grad.hlo.txt  apply.hlo.txt
+plus a global artifacts/manifest.json the rust runtime reads to know shapes.
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .envs import all_specs
+
+# Default shapes baked into the artifacts. Throughput *accounting* in rust
+# uses the virtual-timeline work model (DESIGN.md §5), so the artifact batch
+# only needs to be large enough for real numerics, not paper-scale.
+DEFAULT_NUM_ENV = 256
+DEFAULT_HORIZON = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32():
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def lower_benchmark(spec, num_env: int, horizon: int, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    P = model.num_params(spec)
+    D, A, m, n = spec.obs_dim, spec.act_dim, horizon, num_env
+
+    arts = {
+        "init": (model.build_init(spec, n), [i32()]),
+        "rollout": (
+            model.build_rollout(spec, n, m),
+            [f32(P), f32(n, D), i32()],
+        ),
+        "grad": (
+            model.build_grad(spec, n, m),
+            [f32(P), f32(m, n, D), f32(m, n, A), f32(m, n), f32(m, n), f32(m, n), f32(m, n), f32(n)],
+        ),
+        "apply": (
+            model.build_apply(spec),
+            [f32(P), f32(P), f32(P), i32(), f32(P), jax.ShapeDtypeStruct((), jnp.float32)],
+        ),
+    }
+    files = {}
+    for name, (fn, in_specs) in arts.items():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        files[name] = os.path.basename(path)
+        print(f"  {spec.abbr}/{name}: {len(text)} chars")
+
+    return {
+        "name": spec.name,
+        "abbr": spec.abbr,
+        "kind": spec.kind,
+        "obs_dim": D,
+        "act_dim": A,
+        "hidden": list(spec.hidden),
+        "num_params": P,
+        "num_env": n,
+        "horizon": m,
+        "files": files,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--benchmarks", default="", help="comma-separated abbrs (default: all)")
+    ap.add_argument("--num-env", type=int, default=DEFAULT_NUM_ENV)
+    ap.add_argument("--horizon", type=int, default=DEFAULT_HORIZON)
+    args = ap.parse_args()
+
+    specs = all_specs()
+    wanted = [s.strip() for s in args.benchmarks.split(",") if s.strip()] or list(specs)
+    out_root = args.out
+
+    manifest = {"version": 1, "benchmarks": {}}
+    # Merge into an existing manifest so partial rebuilds keep other entries.
+    man_path = os.path.join(out_root, "manifest.json")
+    if os.path.exists(man_path):
+        try:
+            with open(man_path) as f:
+                manifest = json.load(f)
+        except Exception:
+            pass
+
+    for abbr in wanted:
+        spec = specs[abbr]
+        print(f"lowering {abbr} ({spec.name}) num_env={args.num_env} horizon={args.horizon}")
+        entry = lower_benchmark(spec, args.num_env, args.horizon, os.path.join(out_root, abbr))
+        manifest["benchmarks"][abbr] = entry
+
+    os.makedirs(out_root, exist_ok=True)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Plain-text twin of the manifest for the rust side (the offline build
+    # environment has no JSON crate; this line-based format needs none).
+    txt_path = os.path.join(out_root, "manifest.txt")
+    with open(txt_path, "w") as f:
+        f.write("version 1\n")
+        for abbr, e in sorted(manifest["benchmarks"].items()):
+            f.write(f"bench {abbr}\n")
+            f.write(f"name {e['name']}\n")
+            f.write(f"kind {e['kind']}\n")
+            f.write(f"obs_dim {e['obs_dim']}\n")
+            f.write(f"act_dim {e['act_dim']}\n")
+            f.write("hidden " + ",".join(str(h) for h in e["hidden"]) + "\n")
+            f.write(f"num_params {e['num_params']}\n")
+            f.write(f"num_env {e['num_env']}\n")
+            f.write(f"horizon {e['horizon']}\n")
+            for k, v in sorted(e["files"].items()):
+                f.write(f"file {k} {v}\n")
+            f.write("end\n")
+    print(f"wrote {man_path} and {txt_path}")
+
+
+if __name__ == "__main__":
+    main()

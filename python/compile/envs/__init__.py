@@ -1,0 +1,4 @@
+"""Benchmark environment registry — the six DRL benchmarks of Table 6."""
+
+from . import ant, anymal, ballbalance, franka, humanoid, shadowhand  # noqa: F401
+from .base import EnvSpec, all_specs, get, init_state, split_state, step  # noqa: F401

@@ -1,0 +1,19 @@
+"""Ant (AT) — locomotion, Table 6 row 1: obs 60, act 8, policy 60:256:128:64:8."""
+
+from .base import EnvSpec, register
+
+SPEC = register(
+    EnvSpec(
+        name="Ant",
+        abbr="AT",
+        kind="L",
+        obs_dim=60,
+        act_dim=8,
+        hidden=(256, 128, 64),
+        dt=0.05,
+        damping=0.25,
+        stiffness=0.6,
+        act_gain=1.2,
+        reward="forward",
+    )
+)

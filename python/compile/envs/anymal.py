@@ -1,0 +1,19 @@
+"""Anymal (AY) — quadruped locomotion, Table 6: obs 48, act 12, policy 48:256:128:64:12."""
+
+from .base import EnvSpec, register
+
+SPEC = register(
+    EnvSpec(
+        name="Anymal",
+        abbr="AY",
+        kind="L",
+        obs_dim=48,
+        act_dim=12,
+        hidden=(256, 128, 64),
+        dt=0.04,
+        damping=0.25,
+        stiffness=0.8,
+        act_gain=1.0,
+        reward="forward",
+    )
+)

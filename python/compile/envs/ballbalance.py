@@ -1,0 +1,19 @@
+"""BallBalance (BB) — balance task, Table 6: obs 24, act 3, policy 24:256:128:64:3."""
+
+from .base import EnvSpec, register
+
+SPEC = register(
+    EnvSpec(
+        name="BallBalance",
+        abbr="BB",
+        kind="L",
+        obs_dim=24,
+        act_dim=3,
+        hidden=(256, 128, 64),
+        dt=0.02,
+        damping=0.2,
+        stiffness=1.2,
+        act_gain=0.8,
+        reward="forward",
+    )
+)

@@ -1,0 +1,21 @@
+"""FrankaCabinet (FC) — operational-space manipulation [Khatib 1987],
+Table 6: obs 23, act 9, policy 23:256:128:64:9. Reward: reach the cabinet
+handle pose stored in the task extras."""
+
+from .base import EnvSpec, register
+
+SPEC = register(
+    EnvSpec(
+        name="FrankaCabinet",
+        abbr="FC",
+        kind="F",
+        obs_dim=23,
+        act_dim=9,
+        hidden=(256, 128, 64),
+        dt=0.03,
+        damping=0.12,
+        stiffness=0.9,
+        act_gain=1.0,
+        reward="reach",
+    )
+)

@@ -1,0 +1,20 @@
+"""Humanoid (HM) — bipedal locomotion, Table 6: obs 108, act 21,
+policy 108:200:400:100:21 (note the paper's non-monotone hidden widths)."""
+
+from .base import EnvSpec, register
+
+SPEC = register(
+    EnvSpec(
+        name="Humanoid",
+        abbr="HM",
+        kind="L",
+        obs_dim=108,
+        act_dim=21,
+        hidden=(200, 400, 100),
+        dt=0.04,
+        damping=0.25,
+        stiffness=0.5,
+        act_gain=1.5,
+        reward="forward",
+    )
+)

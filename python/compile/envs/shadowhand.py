@@ -1,0 +1,21 @@
+"""ShadowHand (SH) — dexterous in-hand reorientation [Andrychowicz 2020],
+Table 6: obs 211, act 20, policy 211:512:512:512:256:20. Reward: align the
+object pose coordinates with the target orientation in the task extras."""
+
+from .base import EnvSpec, register
+
+SPEC = register(
+    EnvSpec(
+        name="ShadowHand",
+        abbr="SH",
+        kind="R",
+        obs_dim=211,
+        act_dim=20,
+        hidden=(512, 512, 512, 256),
+        dt=0.02,
+        damping=0.15,
+        stiffness=1.0,
+        act_gain=0.7,
+        reward="orient",
+    )
+)

@@ -1,0 +1,220 @@
+"""L1 — Pallas fused MLP-layer kernels (forward + backward).
+
+The compute hot-spot of GMI-DRL is the policy network: every
+agent-environment interaction runs an actor MLP forward, and every PPO
+update runs actor+critic forward/backward. We implement the fused
+``y = act(x @ W + b)`` layer as a Pallas kernel pair (forward and backward)
+wired together with ``jax.custom_vjp`` so the whole policy is
+differentiable while both directions run through Pallas.
+
+TPU adaptation (see DESIGN.md §2): the batch (num_env) dimension is the
+parallel grid axis, blocked so each grid step's operands fit VMEM; the
+feature dims are padded to a lane multiple so the inner matmul is
+MXU-shaped. ``interpret=True`` always — the CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret-mode lowers the kernel to plain HLO so the
+same artifact runs on the rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane multiple for feature-dim padding. 8 keeps CPU-interpret tests cheap;
+# on a real TPU this would be 128 (MXU systolic width) — the padding logic
+# is identical, only the constant changes.
+LANE = 8
+# Batch block: rows of x processed per grid step. 128 rows x 512 features
+# x 4 bytes = 256 KB per operand block — comfortably inside a 16 MB VMEM
+# budget even for the widest ShadowHand layer (512x512 weights = 1 MB).
+BLOCK_B = 128
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad2(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    r, c = a.shape
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: o = act(x @ w + b)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One grid step: a (BLOCK_B, din) block of x against the full (din, dout)
+    weight tile resident in VMEM; accumulate in f32 on the MXU."""
+    x = x_ref[...]
+    acc = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc
+
+
+def _fwd_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str) -> jnp.ndarray:
+    bsz, din = x.shape
+    dout = w.shape[1]
+    dinp, doutp = _pad_to(din, LANE), _pad_to(dout, LANE)
+    bp = _pad_to(bsz, BLOCK_B)
+    xp = _pad2(x, bp, dinp)
+    wp = _pad2(w, dinp, doutp)
+    bpd = jnp.pad(b, (0, doutp - dout))
+    grid = (bp // BLOCK_B,)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, dinp), lambda i: (i, 0)),
+            pl.BlockSpec((dinp, doutp), lambda i: (0, 0)),
+            pl.BlockSpec((doutp,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, doutp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, doutp), jnp.float32),
+        interpret=True,
+    )(xp, wp, bpd)
+    return out[:bsz, :dout]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.
+#
+# dz = g * act'(y);  dx = dz @ w^T;  dw = x^T @ dz;  db = sum_rows(dz)
+#
+# dx is blocked over the batch grid like the forward pass. dw/db need a
+# reduction over the whole batch: we accumulate across grid steps into the
+# output block (grid-sequential accumulation — the standard Pallas reduction
+# idiom; on TPU the grid is executed sequentially per core so this is safe,
+# and interpret mode preserves those semantics).
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dx_kernel(g_ref, y_ref, w_ref, dx_ref, *, activation: str):
+    g = g_ref[...]
+    if activation == "tanh":
+        y = y_ref[...]
+        g = g * (1.0 - y * y)
+    dx_ref[...] = jnp.dot(g, w_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def _bwd_dw_kernel(x_ref, g_ref, y_ref, dw_ref, db_ref, *, activation: str):
+    i = pl.program_id(0)
+    g = g_ref[...]
+    if activation == "tanh":
+        y = y_ref[...]
+        g = g * (1.0 - y * y)
+    dw = jnp.dot(x_ref[...].T, g, preferred_element_type=jnp.float32)
+    db = jnp.sum(g, axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = dw
+        db_ref[...] = db
+
+    @pl.when(i != 0)
+    def _acc():
+        dw_ref[...] += dw
+        db_ref[...] += db
+
+
+def _bwd_pallas(x, w, y, g, activation: str):
+    bsz, din = x.shape
+    dout = w.shape[1]
+    dinp, doutp = _pad_to(din, LANE), _pad_to(dout, LANE)
+    bp = _pad_to(bsz, BLOCK_B)
+    xp = _pad2(x, bp, dinp)
+    wp = _pad2(w, dinp, doutp)
+    yp = _pad2(y, bp, doutp)
+    gp = _pad2(g, bp, doutp)
+    grid = (bp // BLOCK_B,)
+
+    dx = pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, doutp), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, doutp), lambda i: (i, 0)),
+            pl.BlockSpec((dinp, doutp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, dinp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, dinp), jnp.float32),
+        interpret=True,
+    )(gp, yp, wp)
+
+    dw, db = pl.pallas_call(
+        functools.partial(_bwd_dw_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, dinp), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, doutp), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, doutp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((dinp, doutp), lambda i: (0, 0)),
+            pl.BlockSpec((doutp,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dinp, doutp), jnp.float32),
+            jax.ShapeDtypeStruct((doutp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, gp, yp)
+
+    return dx[:bsz, :din], dw[:din, :dout], db[:dout]
+
+
+# ---------------------------------------------------------------------------
+# Public differentiable entry points.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation: str = "tanh"):
+    """``act(x @ w + b)`` as a Pallas kernel, differentiable via custom_vjp.
+
+    activation: "tanh" or "none".
+    """
+    return _fwd_pallas(x, w, b, activation)
+
+
+def _fl_fwd(x, w, b, activation):
+    y = _fwd_pallas(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _fl_bwd(activation, res, g):
+    x, w, y = res
+    dx, dw, db = _bwd_pallas(x, w, y, g, activation)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)
+
+
+def mlp_forward(x, layers):
+    """Run a full MLP: ``layers`` is a list of (w, b); tanh on all but the
+    last layer, which is linear. Every layer is the Pallas fused kernel."""
+    n = len(layers)
+    for i, (w, b) in enumerate(layers):
+        x = fused_linear(x, w, b, "tanh" if i < n - 1 else "none")
+    return x
+
+
+def vmem_footprint_bytes(din: int, dout: int, block_b: int = BLOCK_B) -> int:
+    """Estimated VMEM bytes for one forward grid step (f32): the x block,
+    the full weight tile, bias, and the output block. Used by the perf pass
+    to validate block shapes against the 16 MB VMEM budget."""
+    dinp, doutp = _pad_to(din, 128), _pad_to(dout, 128)  # TPU lanes
+    return 4 * (block_b * dinp + dinp * doutp + doutp + block_b * doutp)
+
+
+def mxu_utilization_estimate(din: int, dout: int) -> float:
+    """Fraction of MXU work that is useful (un-padded) at 128-lane padding."""
+    dinp, doutp = _pad_to(din, 128), _pad_to(dout, 128)
+    return (din * dout) / float(dinp * doutp)

@@ -1,0 +1,264 @@
+"""L2 — the DRL compute graphs: actor-critic policy, rollout, PPO update.
+
+Everything here is lowered ONCE by aot.py to HLO text and executed from the
+rust coordinator; python never runs on the request path.
+
+Four artifacts per benchmark (all take/return a FLAT f32 parameter vector so
+the rust side moves exactly one buffer per direction — and so the LGR
+gradient-reduction strategies in rust operate on a single contiguous
+gradient vector, as the paper's §4.1 assumes):
+
+  init(seed)                          -> (params_flat, state0)
+  rollout(params_flat, state, seed)   -> (obs, actions, logps, rewards,
+                                          values, dones, last_state, last_value)
+  grad(params_flat, obs, actions, logps_old, rewards, values_old, dones,
+       last_value)                    -> (grads_flat, loss, pi_loss, v_loss,
+                                          entropy, approx_kl, mean_reward)
+  apply(params_flat, m, v, step, grads_flat, lr)
+                                      -> (params', m', v', step')
+
+The policy is the paper's Table 6 architecture: *separate* actor and critic
+MLPs with identical trunks (this matches the paper's reported parameter
+counts: AT 1.1e5, HM 2.9e5, SH 1.5e6) plus a state-independent log-std
+vector. Every MLP layer runs through the L1 Pallas fused kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .envs.base import EnvSpec, init_state, step
+from .kernels.fused_mlp import mlp_forward
+
+# PPO hyperparameters (fixed into the artifacts). Gamma/lambda are tuned to
+# the 16-step rollout window of the artifacts (credit assignment must fit
+# the horizon); entropy weight is kept small so the exploration-noise
+# control cost doesn't swamp the locomotion signal.
+GAMMA = 0.95
+LAM = 0.9
+CLIP = 0.2
+VCOEF = 1.0
+ENTCOEF = 0.001
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+LOGSTD_INIT = -1.0
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout: flat vector <-> structured actor/critic layers.
+# ---------------------------------------------------------------------------
+
+
+def layer_dims(spec: EnvSpec) -> List[Tuple[int, int]]:
+    dims = [spec.obs_dim, *spec.hidden]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def param_layout(spec: EnvSpec):
+    """Returns [(name, shape), ...] in flat-vector order."""
+    layout = []
+    trunk = layer_dims(spec)
+    for i, (din, dout) in enumerate(trunk):
+        layout.append((f"actor.w{i}", (din, dout)))
+        layout.append((f"actor.b{i}", (dout,)))
+    layout.append(("actor.head.w", (spec.hidden[-1], spec.act_dim)))
+    layout.append(("actor.head.b", (spec.act_dim,)))
+    for i, (din, dout) in enumerate(trunk):
+        layout.append((f"critic.w{i}", (din, dout)))
+        layout.append((f"critic.b{i}", (dout,)))
+    layout.append(("critic.head.w", (spec.hidden[-1], 1)))
+    layout.append(("critic.head.b", (1,)))
+    layout.append(("log_std", (spec.act_dim,)))
+    return layout
+
+
+def num_params(spec: EnvSpec) -> int:
+    return sum(math.prod(s) for _, s in param_layout(spec))
+
+
+def unflatten(spec: EnvSpec, flat: jnp.ndarray):
+    """Flat f32[P] -> dict of named arrays (pure reshape/slice; XLA fuses)."""
+    out = {}
+    ofs = 0
+    for name, shape in param_layout(spec):
+        n = math.prod(shape)
+        out[name] = flat[ofs : ofs + n].reshape(shape)
+        ofs += n
+    return out
+
+
+def flatten_tree(spec: EnvSpec, tree) -> jnp.ndarray:
+    return jnp.concatenate([tree[name].ravel() for name, _ in param_layout(spec)])
+
+
+def init_params(spec: EnvSpec, key) -> jnp.ndarray:
+    """Orthogonal-ish (scaled normal) init, flat vector."""
+    parts = []
+    for name, shape in param_layout(spec):
+        key, sub = jax.random.split(key)
+        if name == "log_std":
+            parts.append(jnp.full(shape, LOGSTD_INIT, dtype=jnp.float32).ravel())
+        elif name.endswith("head.w"):
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, dtype=jnp.float32) * (0.01 / math.sqrt(fan_in))
+            parts.append(w.ravel())
+        elif ".w" in name:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, dtype=jnp.float32) * math.sqrt(2.0 / fan_in)
+            parts.append(w.ravel())
+        else:
+            parts.append(jnp.zeros(shape, dtype=jnp.float32).ravel())
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Policy forward (actor + critic), all layers through the Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+def _mlp_layers(p, prefix: str, n_trunk: int):
+    layers = [(p[f"{prefix}.w{i}"], p[f"{prefix}.b{i}"]) for i in range(n_trunk)]
+    layers.append((p[f"{prefix}.head.w"], p[f"{prefix}.head.b"]))
+    return layers
+
+
+def policy_forward(spec: EnvSpec, params_flat: jnp.ndarray, obs: jnp.ndarray):
+    """Returns (action_mean [n,A], value [n], log_std [A])."""
+    p = unflatten(spec, params_flat)
+    n_trunk = len(spec.hidden)
+    mean = mlp_forward(obs, _mlp_layers(p, "actor", n_trunk))
+    value = mlp_forward(obs, _mlp_layers(p, "critic", n_trunk))[:, 0]
+    return mean, value, p["log_std"]
+
+
+def _gauss_logp(mean, log_std, act):
+    var = jnp.exp(2.0 * log_std)
+    return jnp.sum(
+        -0.5 * ((act - mean) ** 2) / var - log_std - 0.5 * math.log(2.0 * math.pi),
+        axis=-1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact bodies.
+# ---------------------------------------------------------------------------
+
+
+def build_init(spec: EnvSpec, num_env: int):
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        kp, ks = jax.random.split(key)
+        params = init_params(spec, kp)
+        state0 = init_state(spec, num_env, ks)
+        return (params, state0)
+
+    return init_fn
+
+
+def build_rollout(spec: EnvSpec, num_env: int, horizon: int):
+    """`horizon` interaction steps fused into one artifact via lax.scan —
+    this is the serving/experience-collection hot path (the paper's
+    Simulator+Agent co-located in one GMI; intra-GMI sharing is free)."""
+
+    def rollout_fn(params_flat, state, seed):
+        key = jax.random.PRNGKey(seed)
+
+        def body(carry, k):
+            st = carry
+            obs = st  # fully-observed: observation == state vector
+            mean, value, log_std = policy_forward(spec, params_flat, obs)
+            noise = jax.random.normal(k, mean.shape, dtype=jnp.float32)
+            act = mean + jnp.exp(log_std)[None, :] * noise
+            logp = _gauss_logp(mean, log_std[None, :], act)
+            st2, reward, done = step(spec, st, act)
+            return st2, (obs, act, logp, reward, value, done)
+
+        keys = jax.random.split(key, horizon)
+        last_state, (obs, acts, logps, rews, vals, dones) = jax.lax.scan(body, state, keys)
+        _, last_value, _ = policy_forward(spec, params_flat, last_state)
+        return (obs, acts, logps, rews, vals, dones, last_state, last_value)
+
+    return rollout_fn
+
+
+def gae(rewards, values, dones, last_value):
+    """Generalized advantage estimation over the scanned horizon."""
+
+    def body(carry, xs):
+        adv_next, v_next = carry
+        r, v, d = xs
+        nonterm = 1.0 - d
+        delta = r + GAMMA * v_next * nonterm - v
+        adv = delta + GAMMA * LAM * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        body,
+        (jnp.zeros_like(last_value), last_value),
+        (rewards, values, dones),
+        reverse=True,
+    )
+    returns = advs + values
+    return advs, returns
+
+
+def build_grad(spec: EnvSpec, num_env: int, horizon: int):
+    """PPO clipped-surrogate gradient over the full collected batch.
+
+    Outputs a FLAT gradient vector: the rust LGR layer (MPR/MRR/HAR)
+    allreduces it across trainer GMIs, then `apply` consumes the reduced
+    vector. This is exactly the decomposition the paper's §4.1 optimizes.
+    """
+
+    def grad_fn(params_flat, obs, acts, logps_old, rewards, values_old, dones, last_value):
+        advs, returns = gae(rewards, values_old, dones, last_value)
+        advs = (advs - jnp.mean(advs)) / (jnp.std(advs) + 1e-8)
+
+        obs_f = obs.reshape(horizon * num_env, spec.obs_dim)
+        acts_f = acts.reshape(horizon * num_env, spec.act_dim)
+        logp_f = logps_old.reshape(-1)
+        adv_f = advs.reshape(-1)
+        ret_f = returns.reshape(-1)
+
+        def loss_fn(pf):
+            mean, value, log_std = policy_forward(spec, pf, obs_f)
+            logp = _gauss_logp(mean, log_std[None, :], acts_f)
+            ratio = jnp.exp(logp - logp_f)
+            surr = jnp.minimum(
+                ratio * adv_f, jnp.clip(ratio, 1.0 - CLIP, 1.0 + CLIP) * adv_f
+            )
+            pi_loss = -jnp.mean(surr)
+            v_loss = 0.5 * jnp.mean((value - ret_f) ** 2)
+            ent = jnp.sum(log_std + 0.5 * math.log(2.0 * math.pi * math.e))
+            loss = pi_loss + VCOEF * v_loss - ENTCOEF * ent
+            kl = jnp.mean(logp_f - logp)
+            return loss, (pi_loss, v_loss, ent, kl)
+
+        (loss, (pi_loss, v_loss, ent, kl)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params_flat)
+        return (grads, loss, pi_loss, v_loss, ent, kl, jnp.mean(rewards))
+
+    return grad_fn
+
+
+def build_apply(spec: EnvSpec):
+    """Adam step on the flat vectors (buffers donated by the rust runtime —
+    the update loop is allocation-free after warmup)."""
+
+    def apply_fn(params_flat, m, v, step_i, grads_flat, lr):
+        t = step_i + 1
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * grads_flat
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * grads_flat * grads_flat
+        tf = t.astype(jnp.float32)
+        mhat = m2 / (1.0 - ADAM_B1**tf)
+        vhat = v2 / (1.0 - ADAM_B2**tf)
+        new_params = params_flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return (new_params, m2, v2, t)
+
+    return apply_fn

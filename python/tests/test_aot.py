@@ -1,0 +1,77 @@
+"""AOT driver tests: HLO text lowering + manifest formats."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("aot")
+    r = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(out),
+            "--benchmarks",
+            "BB",
+            "--num-env",
+            "16",
+            "--horizon",
+            "4",
+        ],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_all_artifacts_written(artifacts):
+    for name in ["init", "rollout", "grad", "apply"]:
+        p = artifacts / "BB" / f"{name}.hlo.txt"
+        assert p.exists(), f"missing {p}"
+        text = p.read_text()
+        # HLO text format, entry computation present
+        assert text.startswith("HloModule"), text[:60]
+        assert "ENTRY" in text
+        # tuple-rooted (return_tuple=True contract with the rust loader)
+        assert "ROOT" in text
+
+
+def test_manifest_json_and_txt_agree(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    bb = man["benchmarks"]["BB"]
+    assert bb["obs_dim"] == 24 and bb["act_dim"] == 3
+    assert bb["num_env"] == 16 and bb["horizon"] == 4
+    txt = (artifacts / "manifest.txt").read_text()
+    assert "bench BB" in txt
+    assert f"num_params {bb['num_params']}" in txt
+    assert "file rollout rollout.hlo.txt" in txt
+    assert txt.strip().endswith("end")
+
+
+def test_hlo_has_no_serialized_proto_markers(artifacts):
+    """Guard against regressing to .serialize() (xla_extension 0.5.1 rejects
+    jax>=0.5 64-bit-id protos; text is the contract)."""
+    blob = (artifacts / "BB" / "rollout.hlo.txt").read_bytes()
+    assert blob.isascii()
+
+
+def test_rollout_entry_has_expected_parameters(artifacts):
+    text = (artifacts / "BB" / "rollout.hlo.txt").read_text()
+    entry = text[text.index("ENTRY") :]
+    params = [l for l in entry.splitlines() if "parameter(" in l]
+    # params_flat, state, seed
+    assert len(params) == 3, params
+    assert any("f32[16,24]" in l for l in params), params  # state (n, obs)
+    assert any("s32[]" in l for l in params), params  # seed

@@ -1,0 +1,128 @@
+"""Environment tests: Table 6 registry, dynamics, rewards, resets."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.envs import all_specs, get, init_state, split_state, step
+
+TABLE6 = {
+    "AT": ("Ant", "L", 60, 8, (256, 128, 64)),
+    "AY": ("Anymal", "L", 48, 12, (256, 128, 64)),
+    "BB": ("BallBalance", "L", 24, 3, (256, 128, 64)),
+    "FC": ("FrankaCabinet", "F", 23, 9, (256, 128, 64)),
+    "HM": ("Humanoid", "L", 108, 21, (200, 400, 100)),
+    "SH": ("ShadowHand", "R", 211, 20, (512, 512, 512, 256)),
+}
+
+
+def test_registry_matches_table6():
+    specs = all_specs()
+    assert set(specs) == set(TABLE6)
+    for abbr, (name, kind, obs, act, hidden) in TABLE6.items():
+        s = specs[abbr]
+        assert s.name == name and s.kind == kind
+        assert s.obs_dim == obs and s.act_dim == act
+        assert tuple(s.hidden) == hidden
+
+
+@pytest.mark.parametrize("abbr", list(TABLE6))
+def test_step_shapes_and_finiteness(abbr):
+    spec = get(abbr)
+    n = 32
+    key = jax.random.PRNGKey(0)
+    s = init_state(spec, n, key)
+    assert s.shape == (n, spec.obs_dim)
+    a = 0.1 * jax.random.normal(key, (n, spec.act_dim))
+    s2, r, d = step(spec, s, a)
+    assert s2.shape == s.shape
+    assert r.shape == (n,)
+    assert d.shape == (n,)
+    assert np.all(np.isfinite(np.asarray(s2)))
+    assert np.all(np.isfinite(np.asarray(r)))
+    assert set(np.unique(np.asarray(d))) <= {0.0, 1.0}
+
+
+def test_step_deterministic():
+    spec = get("AT")
+    key = jax.random.PRNGKey(1)
+    s = init_state(spec, 8, key)
+    a = jnp.ones((8, spec.act_dim)) * 0.3
+    s1, r1, _ = step(spec, s, a)
+    s2, r2, _ = step(spec, s, a)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_dynamics_respond_to_actions():
+    """Actions must actually move the system (the policy has leverage)."""
+    spec = get("AT")
+    key = jax.random.PRNGKey(2)
+    s = init_state(spec, 8, key)
+    zero = jnp.zeros((8, spec.act_dim))
+    one = jnp.ones((8, spec.act_dim))
+    s_zero, _, _ = step(spec, s, zero)
+    s_one, _, _ = step(spec, s, one)
+    assert not np.allclose(np.asarray(s_zero), np.asarray(s_one))
+
+
+def test_control_cost_penalizes_large_actions():
+    spec = get("AT")
+    key = jax.random.PRNGKey(3)
+    s = init_state(spec, 64, key)
+    # same state, velocities zeroed -> reward difference is control cost +
+    # action-induced velocity; with clipped huge actions the ctrl term grows.
+    small = 0.01 * jnp.ones((64, spec.act_dim))
+    # actions are clipped to [-1,1]; compare |a|=0.01 vs |a|=1
+    big = jnp.ones((64, spec.act_dim))
+    _, r_small, _ = step(spec, s, small)
+    _, r_big, _ = step(spec, s, big)
+    # not a strict inequality env-wise (velocity reward differs), but the
+    # control penalty must show up in the mean for a zero-velocity start
+    assert float(jnp.mean(r_big)) < float(jnp.mean(r_small)) + 1.0
+
+
+def test_runaway_states_reset():
+    spec = get("BB")
+    n = 4
+    key = jax.random.PRNGKey(4)
+    s = init_state(spec, n, key)
+    q, v, extra = split_state(spec, s)
+    # blow up the coordinates past the reset limit
+    q = q.at[:2].set(spec.reset_limit * 10.0)
+    s_bad = jnp.concatenate([q, v, extra], axis=1)
+    s2, _, d = step(spec, s_bad, jnp.zeros((n, spec.act_dim)))
+    d = np.asarray(d)
+    assert d[0] == 1.0 and d[1] == 1.0
+    q2, _, _ = split_state(spec, s2)
+    assert np.all(np.abs(np.asarray(q2)[:2]) < spec.reset_limit)
+
+
+def test_velocity_increases_forward_reward():
+    """Locomotion reward must reward forward velocity — the learning signal."""
+    spec = get("AT")
+    n = 8
+    key = jax.random.PRNGKey(5)
+    s = init_state(spec, n, key)
+    q, v, extra = split_state(spec, s)
+    v_fast = v.at[:, 0].set(2.0)
+    s_fast = jnp.concatenate([q, v_fast, extra], axis=1)
+    a = jnp.zeros((n, spec.act_dim))
+    _, r_slow, _ = step(spec, s, a)
+    _, r_fast, _ = step(spec, s_fast, a)
+    assert float(jnp.mean(r_fast)) > float(jnp.mean(r_slow))
+
+
+@pytest.mark.parametrize("abbr,reward", [("FC", "reach"), ("SH", "orient")])
+def test_task_reward_styles(abbr, reward):
+    spec = get(abbr)
+    assert spec.reward == reward
+    key = jax.random.PRNGKey(6)
+    s = init_state(spec, 16, key)
+    _, r, _ = step(spec, s, jnp.zeros((16, spec.act_dim)))
+    r = np.asarray(r)
+    assert np.all(np.isfinite(r))
+    if reward == "orient":
+        # cosine-alignment reward is bounded
+        assert np.all(r <= 1.2) and np.all(r >= -1.2)

@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas fused kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the kernel layer: values AND
+custom-vjp gradients must match the oracle, across a hypothesis sweep of
+shapes (including non-multiples of the lane/block sizes, which exercise the
+padding paths).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels.fused_mlp import (
+    BLOCK_B,
+    LANE,
+    fused_linear,
+    mlp_forward,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import (
+    fused_linear_bwd_ref,
+    fused_linear_ref,
+    mlp_forward_ref,
+)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _mats(seed, b, din, dout):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    return _rand(k1, b, din), _rand(k2, din, dout) * 0.3, _rand(k3, dout) * 0.1, _rand(k4, b, dout)
+
+
+@pytest.mark.parametrize("act", ["tanh", "none"])
+@pytest.mark.parametrize(
+    "b,din,dout",
+    [(4, 8, 8), (7, 5, 3), (128, 60, 256), (130, 211, 512), (1, 1, 1), (256, 48, 12)],
+)
+def test_forward_matches_ref(act, b, din, dout):
+    x, w, bias, _ = _mats(0, b, din, dout)
+    got = fused_linear(x, w, bias, act)
+    want = fused_linear_ref(x, w, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["tanh", "none"])
+@pytest.mark.parametrize("b,din,dout", [(7, 5, 3), (64, 24, 16), (130, 60, 8)])
+def test_backward_matches_handwritten_ref(act, b, din, dout):
+    x, w, bias, g = _mats(1, b, din, dout)
+
+    def f(x, w, bias):
+        return jnp.sum(fused_linear(x, w, bias, act) * g)
+
+    dx, dw, db = jax.grad(f, argnums=(0, 1, 2))(x, w, bias)
+    rdx, rdw, rdb = fused_linear_bwd_ref(x, w, bias, g, act)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rdx), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(rdw), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(rdb), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["tanh", "none"])
+def test_backward_matches_autodiff_of_ref(act):
+    x, w, bias, g = _mats(2, 33, 19, 11)
+
+    def f_pallas(x, w, bias):
+        return jnp.sum(fused_linear(x, w, bias, act) * g)
+
+    def f_ref(x, w, bias):
+        return jnp.sum(fused_linear_ref(x, w, bias, act) * g)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_forward_matches_ref():
+    k = jax.random.PRNGKey(3)
+    dims = [60, 256, 128, 64, 8]
+    layers = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        k, k1, k2 = jax.random.split(k, 3)
+        layers.append((_rand(k1, din, dout) * 0.2, _rand(k2, dout) * 0.05))
+    x = _rand(k, 37, 60)
+    got = mlp_forward(x, layers)
+    want = mlp_forward_ref(x, layers)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_jit_consistency():
+    """The kernel must produce identical results jitted and unjitted
+    (the artifact path is always jitted)."""
+    x, w, bias, _ = _mats(4, 50, 23, 9)
+    eager = fused_linear(x, w, bias, "tanh")
+    jitted = jax.jit(lambda *a: fused_linear(*a, "tanh"))(x, w, bias)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-6, atol=1e-6)
+
+
+def test_batch_block_boundary():
+    """Batch sizes straddling BLOCK_B exercise grid + padding edge cases."""
+    for b in [BLOCK_B - 1, BLOCK_B, BLOCK_B + 1, 2 * BLOCK_B + 3]:
+        x, w, bias, _ = _mats(5, b, LANE + 1, LANE - 1)
+        got = fused_linear(x, w, bias, "tanh")
+        want = fused_linear_ref(x, w, bias, "tanh")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_within_budget():
+    """Perf invariant (DESIGN.md §6): every Table 6 layer's forward block
+    fits the 16 MB VMEM budget at the chosen BLOCK_B."""
+    layers = [(60, 256), (256, 128), (128, 64), (211, 512), (512, 512), (512, 256), (108, 200), (200, 400)]
+    for din, dout in layers:
+        assert vmem_footprint_bytes(din, dout) < 16 * 2**20
+
+
+def test_mxu_utilization_reasonable():
+    assert mxu_utilization_estimate(512, 512) == 1.0
+    assert 0.0 < mxu_utilization_estimate(60, 8) <= 1.0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=200),
+        din=st.integers(min_value=1, max_value=96),
+        dout=st.integers(min_value=1, max_value=96),
+        act=st.sampled_from(["tanh", "none"]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_shape_sweep(b, din, dout, act, seed):
+        x, w, bias, _ = _mats(seed, b, din, dout)
+        got = fused_linear(x, w, bias, act)
+        want = fused_linear_ref(x, w, bias, act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=64),
+        din=st.integers(min_value=1, max_value=48),
+        dout=st.integers(min_value=1, max_value=48),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_grad_sweep(b, din, dout, seed):
+        x, w, bias, g = _mats(seed, b, din, dout)
+
+        def f(x, w, bias):
+            return jnp.sum(fused_linear(x, w, bias, "tanh") * g)
+
+        dx, dw, db = jax.grad(f, argnums=(0, 1, 2))(x, w, bias)
+        rdx, rdw, rdb = fused_linear_bwd_ref(x, w, bias, g, "tanh")
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(rdx), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(rdw), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(rdb), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,185 @@
+//! The paper's baselines (§6 Implementations): NVIDIA Isaac Gym scaled to
+//! multiple GPUs — one exclusive process per GPU — with NCCL or Horovod as
+//! the data-parallel communication backend, plus the non-GMI A3C setup and
+//! the Direct-Share co-scheduling baseline of Fig 8.
+//!
+//! Baselines share the same compute artifacts and the same cost model as
+//! GMI-DRL; the ONLY differences are the resource layout (GPU-granularity
+//! processes) and the communication path — isolating the system effect the
+//! paper measures.
+
+use anyhow::Result;
+
+use crate::cluster::{Topology, NCCL_LAT};
+use crate::config::BenchInfo;
+use crate::drl::compute::Compute;
+use crate::drl::serving::{run_serving, ServingConfig};
+use crate::drl::sync::{run_sync, SyncConfig, SyncRunResult};
+use crate::gmi::GmiBackend;
+use crate::mapping::{build_serving_layout, build_sync_layout, Layout, MappingTemplate};
+use crate::metrics::RunMetrics;
+use crate::vtime::CostModel;
+
+/// Multi-GPU communication backend of the baseline trainer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommBackend {
+    /// One fused ring allreduce per gradient tensor (NCCL).
+    Nccl,
+    /// Horovod: tensor-fusion buffer — one fused op per cycle, plus the
+    /// background coordinator cycle latency.
+    Horovod,
+}
+
+/// Isaac-Gym-style multi-GPU serving: one full-GPU process per GPU
+/// (`gmi_per_gpu = 1`, exclusive; Fig 7a's baseline).
+pub fn isaac_serving(
+    topo: &Topology,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    num_env: usize,
+    rounds: usize,
+) -> Result<RunMetrics> {
+    let layout = build_serving_layout(
+        topo,
+        MappingTemplate::TaskColocated,
+        1,
+        num_env,
+        cost,
+        Some(GmiBackend::Mps), // single process; backend is irrelevant at k=1
+    )?;
+    run_serving(&layout, bench, cost, compute, &ServingConfig {
+        rounds,
+        seed: 1,
+        real_replicas: 1,
+    })
+}
+
+/// Isaac Gym (PPO) + NCCL/Horovod: data-parallel sync training, one
+/// exclusive process per GPU, GPU-granularity ring allreduce.
+pub fn isaac_sync(
+    topo: &Topology,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    backend: CommBackend,
+    num_env: usize,
+    cfg: &SyncConfig,
+) -> Result<SyncRunResult> {
+    let layout = build_sync_layout(
+        topo,
+        MappingTemplate::TaskColocated,
+        1,
+        num_env,
+        cost,
+        Some(GmiBackend::Mps),
+    )?;
+    let mut result = run_sync(&layout, bench, cost, compute, cfg)?;
+    // Replace the LGR comm cost with the baseline's GPU-level collective:
+    // run_sync charged the single-GMI-per-GPU ring already (MRR over g
+    // GPUs); adjust for the backend's per-tensor behaviour.
+    let g = topo.num_gpus();
+    if g > 1 {
+        let n_tensors = 2 * (bench.hidden.len() + 1) * 2 + 1; // per-layer w+b, actor+critic, log_std
+        let per_epoch_extra = match backend {
+            // NCCL: one launch per tensor (unfused).
+            CommBackend::Nccl => (n_tensors as f64 - 1.0) * NCCL_LAT * 2.0 * (g as f64 - 1.0),
+            // Horovod: fused, but pays the coordinator cycle (~2.5 ms).
+            CommBackend::Horovod => 2.5e-3,
+        };
+        let extra = per_epoch_extra * (cfg.ppo_epochs * cfg.iterations) as f64;
+        let m = &mut result.metrics;
+        let new_span = m.span_s + extra;
+        let scale = m.span_s / new_span;
+        m.steps_per_sec *= scale;
+        m.pps *= scale;
+        m.ttop *= scale;
+        m.comm_s += extra;
+        m.span_s = new_span;
+    }
+    Ok(result)
+}
+
+/// The Fig 8 backend study: k serving processes on ONE GPU under
+/// Direct-Share / MPS / MIG.
+pub fn backend_serving(
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    backend: GmiBackend,
+    k: usize,
+    num_env: usize,
+    rounds: usize,
+) -> Result<RunMetrics> {
+    let topo = Topology::dgx_a100(1);
+    let layout =
+        build_serving_layout(&topo, MappingTemplate::TaskColocated, k, num_env, cost, Some(backend))?;
+    run_serving(&layout, bench, cost, compute, &ServingConfig {
+        rounds,
+        seed: 1,
+        real_replicas: 1,
+    })
+}
+
+/// Non-GMI asynchronized baseline (Fig 11): serving GPUs and training GPUs
+/// each run ONE exclusive process; experience moves uni-channel.
+pub fn non_gmi_async_layout(
+    topo: &Topology,
+    serving_gpus: usize,
+    num_env: usize,
+    cost: &CostModel,
+) -> Result<Layout> {
+    crate::mapping::build_async_layout(topo, serving_gpus, 1, 1, num_env, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+
+    fn at() -> (BenchInfo, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let c = CostModel::new(&b);
+        (b, c)
+    }
+
+    #[test]
+    fn isaac_serving_runs() {
+        let (b, c) = at();
+        let topo = Topology::dgx_a100(2);
+        let m = isaac_serving(&topo, &b, &c, &Compute::Null, 4096, 5).unwrap();
+        assert!(m.steps_per_sec > 0.0);
+        // exclusive sim-dominated execution -> low utilization (Fig 1b)
+        assert!(m.utilization < 0.5, "baseline util {}", m.utilization);
+    }
+
+    #[test]
+    fn horovod_vs_nccl_close_but_distinct() {
+        let (b, c) = at();
+        let topo = Topology::dgx_a100(4);
+        let cfg = SyncConfig { iterations: 5, ..Default::default() };
+        let n = isaac_sync(&topo, &b, &c, &Compute::Null, CommBackend::Nccl, 4096, &cfg).unwrap();
+        let h =
+            isaac_sync(&topo, &b, &c, &Compute::Null, CommBackend::Horovod, 4096, &cfg).unwrap();
+        let ratio = n.metrics.steps_per_sec / h.metrics.steps_per_sec;
+        assert!(ratio > 0.9 && ratio < 1.1, "NCCL/Horovod ratio {ratio}");
+        assert_ne!(n.metrics.steps_per_sec, h.metrics.steps_per_sec);
+    }
+
+    #[test]
+    fn backend_ordering_on_heavy_bench() {
+        // Fig 8: MIG >= MPS > Direct-Share on HM.
+        let b = static_registry()["HM"].clone();
+        let c = CostModel::new(&b);
+        let run = |be| {
+            backend_serving(&b, &c, &Compute::Null, be, 3, 1024, 5)
+                .unwrap()
+                .steps_per_sec
+        };
+        let mig = run(GmiBackend::Mig);
+        let mps = run(GmiBackend::Mps);
+        let ds = run(GmiBackend::DirectShare);
+        assert!(mig >= mps, "mig {mig} mps {mps}");
+        assert!(mps > ds, "mps {mps} ds {ds}");
+    }
+}

@@ -1,0 +1,166 @@
+//! The experience batcher (BT): per-trainer data preparation — slicing and
+//! stacking channel packets back into training batches (paper §4.2).
+
+use std::collections::BTreeMap;
+
+use crate::vtime::Clock;
+
+use super::{ChannelKind, Packet, ShareMode};
+
+/// A training batch ready for the PPO/A3C update.
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub samples: usize,
+    /// Per-channel stacked data (multi-channel) or the interleaved blob
+    /// under the State key (uni-channel).
+    pub data: BTreeMap<ChannelKind, Vec<f32>>,
+    /// When the last contributing packet arrived at the trainer.
+    pub ready: Clock,
+}
+
+/// Per-trainer batcher: accumulates per-channel samples and emits a batch
+/// once `batch_samples` are available on every required channel. Supports
+/// the paper's two preparation modes: *slicing* (small batches for high
+/// update frequency) and *stacking* (large batches for noise reduction) —
+/// both fall out of the `batch_samples` knob.
+#[derive(Debug)]
+pub struct Batcher {
+    pub trainer: usize,
+    mode: ShareMode,
+    batch_samples: usize,
+    acc: BTreeMap<ChannelKind, Vec<f32>>,
+    samples: BTreeMap<ChannelKind, usize>,
+    latest: Clock,
+}
+
+impl Batcher {
+    pub fn new(trainer: usize, mode: ShareMode, batch_samples: usize) -> Self {
+        Batcher {
+            trainer,
+            mode,
+            batch_samples,
+            acc: BTreeMap::new(),
+            samples: BTreeMap::new(),
+            latest: Clock::zero(),
+        }
+    }
+
+    fn required_channels(&self) -> &'static [ChannelKind] {
+        // Both modes deliver per-component data (UCC just unbatched); a
+        // training batch needs every component.
+        let _ = self.mode;
+        &ChannelKind::ALL
+    }
+
+    /// Accept a routed packet (arrival time from the migrator's decision);
+    /// returns completed batches.
+    pub fn push(&mut self, pkt: Packet, arrival: Clock) -> Vec<TrainBatch> {
+        if arrival > self.latest {
+            self.latest = arrival;
+        }
+        let n = pkt.samples();
+        *self.samples.entry(pkt.channel).or_insert(0) += n;
+        let acc = self.acc.entry(pkt.channel).or_default();
+        for c in &pkt.chunks {
+            acc.extend_from_slice(&c.data);
+        }
+
+        let mut out = Vec::new();
+        while self.batch_ready() {
+            out.push(self.cut_batch());
+        }
+        out
+    }
+
+    fn batch_ready(&self) -> bool {
+        self.required_channels()
+            .iter()
+            .all(|ch| self.samples.get(ch).copied().unwrap_or(0) >= self.batch_samples)
+    }
+
+    /// Slice exactly `batch_samples` off the front of every channel.
+    fn cut_batch(&mut self) -> TrainBatch {
+        let mut data = BTreeMap::new();
+        for &ch in self.required_channels() {
+            let have = self.samples.get(&ch).copied().unwrap_or(0);
+            let buf = self.acc.get_mut(&ch).unwrap();
+            let per_sample = buf.len() / have.max(1);
+            let take = self.batch_samples * per_sample;
+            let rest = buf.split_off(take.min(buf.len()));
+            let head = std::mem::replace(buf, rest);
+            data.insert(ch, head);
+            *self.samples.get_mut(&ch).unwrap() -= self.batch_samples;
+        }
+        TrainBatch { samples: self.batch_samples, data, ready: self.latest }
+    }
+
+    pub fn pending_samples(&self, ch: ChannelKind) -> usize {
+        self.samples.get(&ch).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::Chunk;
+
+    fn pkt(ch: ChannelKind, steps: usize, envs: usize, width: usize, t: f64) -> Packet {
+        Packet {
+            channel: ch,
+            chunks: vec![Chunk {
+                channel: ch,
+                agent: 0,
+                seq: 0,
+                steps,
+                envs,
+                data: vec![1.0; steps * envs * width],
+                ready: Clock(t),
+            }],
+            ready: Clock(t),
+        }
+    }
+
+    #[test]
+    fn emits_when_all_channels_ready() {
+        let mut bt = Batcher::new(0, ShareMode::MultiChannel, 8);
+        // push 8 samples on every channel except Done: no batch yet
+        for &ch in &ChannelKind::ALL[..5] {
+            let w = ch.width(6, 2);
+            assert!(bt.push(pkt(ch, 2, 4, w, 1.0), Clock(1.1)).is_empty());
+        }
+        let out = bt.push(pkt(ChannelKind::Done, 2, 4, 1, 2.0), Clock(2.5));
+        assert_eq!(out.len(), 1);
+        let b = &out[0];
+        assert_eq!(b.samples, 8);
+        assert_eq!(b.data[&ChannelKind::State].len(), 8 * 6);
+        assert_eq!(b.data[&ChannelKind::Reward].len(), 8);
+        // batch readiness = last arrival
+        assert_eq!(b.ready, Clock(2.5));
+    }
+
+    #[test]
+    fn slicing_excess_into_multiple_batches() {
+        let mut bt = Batcher::new(0, ShareMode::MultiChannel, 4);
+        let mut batches = Vec::new();
+        for &ch in &ChannelKind::ALL {
+            let w = ch.width(6, 2);
+            batches.extend(bt.push(pkt(ch, 4, 2, w, 1.0), Clock(1.0)));
+        }
+        // 8 samples per channel, batch=4 -> two batches after the last push
+        assert_eq!(batches.len(), 2);
+        assert_eq!(bt.pending_samples(ChannelKind::State), 0);
+    }
+
+    #[test]
+    fn unichannel_needs_all_components_too() {
+        let mut bt = Batcher::new(0, ShareMode::UniChannel, 4);
+        assert!(bt.push(pkt(ChannelKind::State, 1, 4, 6, 1.0), Clock(1.0)).is_empty());
+        let mut out = Vec::new();
+        for &ch in &ChannelKind::ALL[1..] {
+            let w = ch.width(6, 2);
+            out.extend(bt.push(pkt(ch, 1, 4, w, 1.0), Clock(1.2)));
+        }
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].samples, 4);
+    }
+}

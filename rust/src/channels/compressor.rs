@@ -1,0 +1,190 @@
+//! The experience compressor (CP): system-wide service that concatenates
+//! per-channel chunks into transfer-sized packets (paper §4.2).
+//!
+//! The threshold is per-channel in *bytes*: a wide channel (states) crosses
+//! it every few steps while a narrow one (rewards) accumulates many more
+//! steps per transfer — "handling data collection and transferring at
+//! different levels of granularity and transmission rate" (§4.2). Channel
+//! alignment at the trainer is guaranteed by the migrator's sticky
+//! per-agent routing, not by synchronized flushing.
+
+use std::collections::BTreeMap;
+
+use crate::vtime::Clock;
+
+use super::{ChannelKind, Chunk, Packet, ShareMode};
+
+/// System-wide compressor. Multi-channel mode stages chunks per channel and
+/// emits one packet each time `threshold_bytes` accumulate; uni-channel
+/// mode forwards every chunk immediately (no batching — the Table 8
+/// baseline).
+#[derive(Debug)]
+pub struct Compressor {
+    mode: ShareMode,
+    threshold_bytes: usize,
+    staged: BTreeMap<(usize, ChannelKind), Vec<Chunk>>,
+}
+
+impl Compressor {
+    pub fn new(mode: ShareMode, threshold_bytes: usize) -> Self {
+        Compressor { mode, threshold_bytes, staged: BTreeMap::new() }
+    }
+
+    /// Default transfer granularity: 1 MiB per channel — large enough to
+    /// amortize the host-path per-message overhead (HOST_MSG_HALF_BYTES),
+    /// small enough to bound trainer staleness.
+    pub fn with_default_threshold(mode: ShareMode) -> Self {
+        Self::new(mode, 1 << 20)
+    }
+
+    /// Stage chunks; returns any packets that became ready. Staging is per
+    /// (agent, channel) so one agent's slow channel can't delay another's.
+    pub fn push(&mut self, chunks: Vec<Chunk>) -> Vec<Packet> {
+        let mut out = Vec::new();
+        for chunk in chunks {
+            match self.mode {
+                ShareMode::UniChannel => {
+                    // Ship every record as-is: maximal op count.
+                    out.push(Packet {
+                        channel: chunk.channel,
+                        ready: chunk.ready,
+                        chunks: vec![chunk],
+                    });
+                }
+                ShareMode::MultiChannel => {
+                    let key = (chunk.agent, chunk.channel);
+                    let q = self.staged.entry(key).or_default();
+                    q.push(chunk);
+                    let bytes: usize = q.iter().map(Chunk::bytes).sum();
+                    if bytes >= self.threshold_bytes {
+                        let chunks = std::mem::take(q);
+                        let ready = Clock::max_of(
+                            &chunks.iter().map(|c| c.ready).collect::<Vec<_>>(),
+                        );
+                        out.push(Packet { channel: chunks[0].channel, chunks, ready });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush all staging queues (end of segment batch or run).
+    pub fn flush(&mut self) -> Vec<Packet> {
+        let mut out = Vec::new();
+        for (_, chunks) in std::mem::take(&mut self.staged) {
+            if chunks.is_empty() {
+                continue;
+            }
+            let ready =
+                Clock::max_of(&chunks.iter().map(|c| c.ready).collect::<Vec<_>>());
+            out.push(Packet { channel: chunks[0].channel, chunks, ready });
+        }
+        out
+    }
+
+    pub fn staged_bytes(&self) -> usize {
+        self.staged.values().flatten().map(Chunk::bytes).sum()
+    }
+
+    pub fn staged_samples(&self, ch: ChannelKind) -> usize {
+        self.staged
+            .iter()
+            .filter(|((_, c), _)| *c == ch)
+            .flat_map(|(_, q)| q.iter())
+            .map(|c| c.steps * c.envs)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(ch: ChannelKind, envs: usize, width: usize, t: f64) -> Chunk {
+        Chunk {
+            channel: ch,
+            agent: 0,
+            seq: 0,
+            steps: 1,
+            envs,
+            data: vec![0.0; envs * width],
+            ready: Clock(t),
+        }
+    }
+
+    #[test]
+    fn multichannel_batches_to_byte_threshold() {
+        let mut cp = Compressor::new(ShareMode::MultiChannel, 4 * 120); // 120 floats
+        assert!(cp.push(vec![chunk(ChannelKind::State, 40, 1, 1.0)]).is_empty());
+        assert!(cp.push(vec![chunk(ChannelKind::State, 40, 1, 2.0)]).is_empty());
+        let out = cp.push(vec![chunk(ChannelKind::State, 40, 1, 3.0)]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].chunks.len(), 3);
+        // packet ready = latest member chunk
+        assert_eq!(out[0].ready, Clock(3.0));
+        assert_eq!(cp.staged_samples(ChannelKind::State), 0);
+    }
+
+    #[test]
+    fn narrow_channels_accumulate_more_steps() {
+        // The §4.2 point: rewards (1 float/sample) batch ~60x more steps
+        // per transfer than states (60 floats/sample).
+        let mut cp = Compressor::new(ShareMode::MultiChannel, 4 * 600);
+        let mut state_pkts = 0;
+        let mut reward_pkts = 0;
+        for t in 0..60 {
+            for p in cp.push(vec![
+                chunk(ChannelKind::State, 10, 60, t as f64),
+                chunk(ChannelKind::Reward, 10, 1, t as f64),
+            ]) {
+                match p.channel {
+                    ChannelKind::State => state_pkts += 1,
+                    ChannelKind::Reward => reward_pkts += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(state_pkts >= 50, "state {state_pkts}");
+        assert_eq!(reward_pkts, 1, "reward should batch ~60 steps");
+    }
+
+    #[test]
+    fn agents_stage_independently() {
+        let mut cp = Compressor::new(ShareMode::MultiChannel, 4 * 100);
+        let mut a = chunk(ChannelKind::State, 60, 1, 1.0);
+        let mut b = chunk(ChannelKind::State, 60, 1, 1.0);
+        a.agent = 0;
+        b.agent = 1;
+        // neither crosses alone
+        assert!(cp.push(vec![a.clone()]).is_empty());
+        assert!(cp.push(vec![b]).is_empty());
+        // agent 0's second chunk flushes only agent 0's queue
+        let out = cp.push(vec![a]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].chunks.iter().all(|c| c.agent == 0));
+        assert_eq!(cp.staged_bytes(), 4 * 60);
+    }
+
+    #[test]
+    fn unichannel_never_batches() {
+        let mut cp = Compressor::new(ShareMode::UniChannel, usize::MAX);
+        let out = cp.push(vec![
+            chunk(ChannelKind::State, 10, 12, 1.0),
+            chunk(ChannelKind::State, 10, 12, 1.5),
+        ]);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|p| p.chunks.len() == 1));
+        assert!(cp.flush().is_empty());
+    }
+
+    #[test]
+    fn flush_drains_everything() {
+        let mut cp = Compressor::new(ShareMode::MultiChannel, usize::MAX);
+        cp.push(vec![chunk(ChannelKind::State, 5, 2, 1.0)]);
+        cp.push(vec![chunk(ChannelKind::Reward, 5, 1, 2.0)]);
+        let out = cp.flush();
+        assert_eq!(out.len(), 2);
+        assert_eq!(cp.staged_bytes(), 0);
+    }
+}

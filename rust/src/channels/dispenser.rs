@@ -1,0 +1,217 @@
+//! The experience dispenser (DP): per-agent service that categorizes a
+//! rollout's experience into typed channel chunks (paper §4.2).
+
+use crate::vtime::Clock;
+
+use super::{ChannelKind, Chunk, ShareMode};
+
+/// Per-agent dispenser. In multi-channel mode one rollout segment becomes
+//  one chunk per channel; in uni-channel mode it becomes per-step
+/// interleaved chunks on the State channel only (the monolithic baseline:
+/// every step's full record ships as its own small message).
+#[derive(Debug)]
+pub struct Dispenser {
+    pub agent: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    seq: u64,
+}
+
+/// One rollout segment's experience as produced by the rollout artifact
+/// (row-major [steps, envs, width] buffers).
+#[derive(Debug, Clone)]
+pub struct RolloutSegment {
+    pub steps: usize,
+    pub envs: usize,
+    pub obs: Vec<f32>,
+    pub actions: Vec<f32>,
+    pub logps: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub values: Vec<f32>,
+    pub dones: Vec<f32>,
+}
+
+impl RolloutSegment {
+    /// Synthetic segment for cost-model-only runs (NullCompute).
+    pub fn synthetic(steps: usize, envs: usize, obs_dim: usize, act_dim: usize) -> Self {
+        let sn = steps * envs;
+        RolloutSegment {
+            steps,
+            envs,
+            obs: vec![0.1; sn * obs_dim],
+            actions: vec![0.2; sn * act_dim],
+            logps: vec![-1.0; sn],
+            rewards: vec![0.05; sn],
+            values: vec![0.0; sn],
+            dones: vec![0.0; sn],
+        }
+    }
+
+    pub fn channel_data(&self, ch: ChannelKind) -> &[f32] {
+        match ch {
+            ChannelKind::State => &self.obs,
+            ChannelKind::Action => &self.actions,
+            ChannelKind::Logp => &self.logps,
+            ChannelKind::Reward => &self.rewards,
+            ChannelKind::Value => &self.values,
+            ChannelKind::Done => &self.dones,
+        }
+    }
+}
+
+impl Dispenser {
+    pub fn new(agent: usize, obs_dim: usize, act_dim: usize) -> Self {
+        Dispenser { agent, obs_dim, act_dim, seq: 0 }
+    }
+
+    /// Categorize one rollout segment into chunks. `ready` is the agent's
+    /// virtual clock after producing the segment.
+    pub fn dispense(&mut self, seg: &RolloutSegment, ready: Clock, mode: ShareMode) -> Vec<Chunk> {
+        self.dispense_groups(seg, ready, mode, seg.steps)
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+
+    /// Like [`dispense`], but splits the segment along the step axis into
+    /// groups of at most `steps_per_group` steps, each group carrying every
+    /// channel for that step range. Groups are the routing granularity: the
+    /// migrator balances them across trainers (a whole segment routed as
+    /// one unit would serialize on a single trainer).
+    pub fn dispense_groups(
+        &mut self,
+        seg: &RolloutSegment,
+        ready: Clock,
+        mode: ShareMode,
+        steps_per_group: usize,
+    ) -> Vec<Vec<Chunk>> {
+        let seq = self.seq;
+        self.seq += 1;
+        match mode {
+            ShareMode::MultiChannel => {
+                let spg = steps_per_group.clamp(1, seg.steps);
+                let n = seg.envs;
+                (0..seg.steps)
+                    .step_by(spg)
+                    .map(|s0| {
+                        let s1 = (s0 + spg).min(seg.steps);
+                        ChannelKind::ALL
+                            .iter()
+                            .map(|&ch| {
+                                let w = match ch {
+                                    ChannelKind::State => self.obs_dim,
+                                    ChannelKind::Action => self.act_dim,
+                                    _ => 1,
+                                };
+                                Chunk {
+                                    channel: ch,
+                                    agent: self.agent,
+                                    seq,
+                                    steps: s1 - s0,
+                                    envs: n,
+                                    data: seg.channel_data(ch)[s0 * n * w..s1 * n * w]
+                                        .to_vec(),
+                                    ready,
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+            ShareMode::UniChannel => {
+                // Baseline: every experience component of every step ships
+                // as its own message through the single connection — the
+                // fine-grained pattern of Fig 5(b)'s uni-channel design.
+                let n = seg.envs;
+                (0..seg.steps)
+                    .map(|s| {
+                        ChannelKind::ALL
+                            .iter()
+                            .map(|&ch| {
+                                let w = ch.width(self.obs_dim, self.act_dim);
+                                Chunk {
+                                    channel: ch,
+                                    agent: self.agent,
+                                    seq,
+                                    steps: 1,
+                                    envs: n,
+                                    data: seg.channel_data(ch)[s * n * w..(s + 1) * n * w]
+                                        .to_vec(),
+                                    ready,
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multichannel_splits_by_type() {
+        let mut dp = Dispenser::new(3, 6, 2);
+        let seg = RolloutSegment::synthetic(4, 8, 6, 2);
+        let chunks = dp.dispense(&seg, Clock(1.0), ShareMode::MultiChannel);
+        assert_eq!(chunks.len(), 6);
+        let state = chunks.iter().find(|c| c.channel == ChannelKind::State).unwrap();
+        assert_eq!(state.data.len(), 4 * 8 * 6);
+        let rew = chunks.iter().find(|c| c.channel == ChannelKind::Reward).unwrap();
+        assert_eq!(rew.data.len(), 4 * 8);
+        assert!(chunks.iter().all(|c| c.agent == 3 && c.seq == 0));
+    }
+
+    #[test]
+    fn unichannel_is_per_step_per_component() {
+        let mut dp = Dispenser::new(0, 6, 2);
+        let seg = RolloutSegment::synthetic(4, 8, 6, 2);
+        let chunks = dp.dispense(&seg, Clock(0.5), ShareMode::UniChannel);
+        // one message per (step, component): maximally fine-grained
+        assert_eq!(chunks.len(), 4 * 6);
+        assert!(chunks.iter().all(|c| c.steps == 1));
+        // total bytes identical between modes (same information moves)
+        let mut dp2 = Dispenser::new(0, 6, 2);
+        let mc = dp2.dispense(&seg, Clock(0.5), ShareMode::MultiChannel);
+        let ub: usize = chunks.iter().map(Chunk::bytes).sum();
+        let mb: usize = mc.iter().map(Chunk::bytes).sum();
+        assert_eq!(ub, mb);
+        // but in far more messages
+        assert!(chunks.len() > mc.len());
+    }
+
+    #[test]
+    fn group_split_preserves_data() {
+        let mut dp = Dispenser::new(0, 6, 2);
+        let seg = RolloutSegment::synthetic(8, 4, 6, 2);
+        let groups = dp.dispense_groups(&seg, Clock(1.0), ShareMode::MultiChannel, 3);
+        // ceil(8/3) = 3 groups, each with all 6 channels
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|g| g.len() == 6));
+        let total_state: usize = groups
+            .iter()
+            .flatten()
+            .filter(|c| c.channel == ChannelKind::State)
+            .map(|c| c.data.len())
+            .sum();
+        assert_eq!(total_state, 8 * 4 * 6);
+        let steps: Vec<usize> = groups
+            .iter()
+            .map(|g| g.iter().find(|c| c.channel == ChannelKind::State).unwrap().steps)
+            .collect();
+        assert_eq!(steps, vec![3, 3, 2]);
+    }
+
+    #[test]
+    fn seq_increments() {
+        let mut dp = Dispenser::new(0, 4, 2);
+        let seg = RolloutSegment::synthetic(1, 2, 4, 2);
+        let a = dp.dispense(&seg, Clock(0.0), ShareMode::MultiChannel);
+        let b = dp.dispense(&seg, Clock(0.1), ShareMode::MultiChannel);
+        assert_eq!(a[0].seq, 0);
+        assert_eq!(b[0].seq, 1);
+    }
+}

@@ -1,0 +1,248 @@
+//! The experience migrator (MG): system-wide routing of experience packets
+//! from agent GMIs to trainer GMIs (paper §4.2).
+//!
+//! Routing is *sticky per agent*: all of an agent's channels flow to the
+//! same trainer so the batcher always sees aligned channel data, while
+//! load balance happens at agent granularity — a new agent is assigned to
+//! the least-loaded trainer, and an agent is re-assigned at a segment
+//! boundary (its State-channel packet) when its trainer's backlog runs
+//! more than 2x the lightest one. Same-GPU routes forward over the host
+//! path; cross-GPU routes gather over NVLink then hand off.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Topology;
+use crate::vtime::Clock;
+
+use super::{ChannelKind, Packet};
+
+/// Where a packet went and what it cost.
+#[derive(Debug, Clone)]
+pub struct RouteDecision {
+    pub trainer: usize,
+    /// Virtual time the packet arrives at the trainer.
+    pub arrival: Clock,
+    /// Link seconds charged for the move.
+    pub transfer_s: f64,
+    pub cross_gpu: bool,
+}
+
+/// Trainer endpoint registered with the migrator.
+#[derive(Debug, Clone)]
+pub struct TrainerEndpoint {
+    pub gmi: usize,
+    pub gpu: usize,
+}
+
+#[derive(Debug)]
+pub struct Migrator {
+    topology: Topology,
+    trainers: Vec<TrainerEndpoint>,
+    /// Outstanding queued samples per trainer (the load-balance signal).
+    outstanding: BTreeMap<usize, usize>,
+    /// GPU of each agent GMI (same- vs cross-GPU routing).
+    agent_gpu: BTreeMap<usize, usize>,
+    /// Sticky agent -> trainer assignment (channel alignment).
+    assignment: BTreeMap<usize, usize>,
+}
+
+impl Migrator {
+    pub fn new(topology: Topology, trainers: Vec<TrainerEndpoint>) -> Self {
+        let outstanding = trainers.iter().map(|t| (t.gmi, 0)).collect();
+        Migrator {
+            topology,
+            trainers,
+            outstanding,
+            agent_gpu: BTreeMap::new(),
+            assignment: BTreeMap::new(),
+        }
+    }
+
+    pub fn register_agent(&mut self, gmi: usize, gpu: usize) {
+        self.agent_gpu.insert(gmi, gpu);
+    }
+
+    /// Trainer finished `samples` of work: shrink its backlog.
+    pub fn complete(&mut self, trainer: usize, samples: usize) {
+        if let Some(v) = self.outstanding.get_mut(&trainer) {
+            *v = v.saturating_sub(samples);
+        }
+    }
+
+    pub fn outstanding(&self, trainer: usize) -> usize {
+        self.outstanding.get(&trainer).copied().unwrap_or(0)
+    }
+
+    pub fn assignment_of(&self, agent: usize) -> Option<usize> {
+        self.assignment.get(&agent).copied()
+    }
+
+    fn least_loaded(&self, prefer_gpu: usize) -> usize {
+        self.trainers
+            .iter()
+            .min_by_key(|t| {
+                (
+                    self.outstanding.get(&t.gmi).copied().unwrap_or(0),
+                    t.gpu != prefer_gpu,
+                    t.gmi,
+                )
+            })
+            .map(|t| t.gmi)
+            .expect("no trainer endpoints")
+    }
+
+    /// Route one packet to the source agent's sticky trainer; (re)assign at
+    /// State-channel packets (segment/group boundaries) so channels of one
+    /// group never split across trainers.
+    pub fn route(&mut self, pkt: &Packet) -> RouteDecision {
+        assert!(!self.trainers.is_empty(), "no trainer endpoints");
+        let agent = pkt.chunks.first().map(|c| c.agent).unwrap_or(0);
+        let src_gpu = self.agent_gpu.get(&agent).copied().unwrap_or(0);
+
+        let trainer = match self.assignment.get(&agent).copied() {
+            None => {
+                let t = self.least_loaded(src_gpu);
+                self.assignment.insert(agent, t);
+                t
+            }
+            Some(t) => {
+                // Rebalance opportunity at group boundaries only.
+                if pkt.channel == ChannelKind::State {
+                    let cur = self.outstanding.get(&t).copied().unwrap_or(0);
+                    let best = self.least_loaded(src_gpu);
+                    let best_load = self.outstanding.get(&best).copied().unwrap_or(0);
+                    if cur > 2 * best_load.max(1) {
+                        self.assignment.insert(agent, best);
+                        best
+                    } else {
+                        t
+                    }
+                } else {
+                    t
+                }
+            }
+        };
+
+        let chosen_gpu = self
+            .trainers
+            .iter()
+            .find(|t| t.gmi == trainer)
+            .map(|t| t.gpu)
+            .unwrap_or(0);
+        let bytes = pkt.bytes();
+        let cross = chosen_gpu != src_gpu;
+        let transfer_s = if cross {
+            // gather over NVLink to the destination GPU, then host handoff
+            // into the trainer GMI (memory barrier: MIG/MPS isolation).
+            let nv = bytes as f64 / self.topology.inter_gpu_bw() + crate::cluster::NCCL_LAT;
+            nv + self.topology.host_transfer_time(bytes, 1)
+        } else {
+            // same GPU: direct forward by channel over the host path.
+            self.topology.host_transfer_time(bytes, 1)
+        };
+        *self.outstanding.entry(trainer).or_insert(0) += pkt.samples();
+        RouteDecision {
+            trainer,
+            arrival: Clock(pkt.ready.0 + transfer_s),
+            transfer_s,
+            cross_gpu: cross,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::Chunk;
+
+    fn packet(agent: usize, ch: ChannelKind, floats: usize, t: f64) -> Packet {
+        Packet {
+            channel: ch,
+            chunks: vec![Chunk {
+                channel: ch,
+                agent,
+                seq: 0,
+                steps: 1,
+                envs: floats,
+                data: vec![0.0; floats],
+                ready: Clock(t),
+            }],
+            ready: Clock(t),
+        }
+    }
+
+    fn migrator() -> Migrator {
+        let topo = Topology::dgx_a100(4);
+        let trainers = vec![
+            TrainerEndpoint { gmi: 10, gpu: 2 },
+            TrainerEndpoint { gmi: 11, gpu: 3 },
+        ];
+        let mut m = Migrator::new(topo, trainers);
+        m.register_agent(0, 0);
+        m.register_agent(1, 2); // same GPU as trainer 10
+        m.register_agent(2, 0);
+        m
+    }
+
+    #[test]
+    fn sticky_per_agent_alignment() {
+        let mut m = migrator();
+        let d1 = m.route(&packet(0, ChannelKind::State, 100, 1.0));
+        // every other channel of agent 0 follows the same trainer
+        for ch in [ChannelKind::Action, ChannelKind::Reward, ChannelKind::Done] {
+            let d = m.route(&packet(0, ch, 10, 1.1));
+            assert_eq!(d.trainer, d1.trainer, "channel {ch:?} split from its group");
+        }
+    }
+
+    #[test]
+    fn new_agents_balance_across_trainers() {
+        let mut m = migrator();
+        let d0 = m.route(&packet(0, ChannelKind::State, 100, 1.0));
+        let d2 = m.route(&packet(2, ChannelKind::State, 100, 1.0));
+        assert_ne!(d0.trainer, d2.trainer, "second agent should take the idle trainer");
+    }
+
+    #[test]
+    fn prefers_same_gpu_when_balanced() {
+        let mut m = migrator();
+        let d = m.route(&packet(1, ChannelKind::State, 100, 1.0));
+        assert_eq!(d.trainer, 10);
+        assert!(!d.cross_gpu);
+    }
+
+    #[test]
+    fn rebalances_at_group_boundary_when_skewed() {
+        let mut m = migrator();
+        let d0 = m.route(&packet(0, ChannelKind::State, 4000, 1.0));
+        // trainer d0 now has a big backlog; agent 0's next group boundary
+        // should move it to the other trainer (backlog > 2x other).
+        let d1 = m.route(&packet(0, ChannelKind::State, 100, 2.0));
+        assert_ne!(d1.trainer, d0.trainer);
+        // non-boundary packets never migrate mid-group
+        let d2 = m.route(&packet(0, ChannelKind::Reward, 10, 2.1));
+        assert_eq!(d2.trainer, d1.trainer);
+    }
+
+    #[test]
+    fn completion_drains_backlog() {
+        let mut m = migrator();
+        let d = m.route(&packet(0, ChannelKind::State, 500, 1.0));
+        assert_eq!(m.outstanding(d.trainer), 500);
+        m.complete(d.trainer, 400);
+        assert_eq!(m.outstanding(d.trainer), 100);
+        m.complete(d.trainer, 200);
+        assert_eq!(m.outstanding(d.trainer), 0);
+    }
+
+    #[test]
+    fn cross_gpu_costs_more_and_arrival_after_ready() {
+        let mut m = migrator();
+        let same = m.route(&packet(1, ChannelKind::State, 40960, 5.0));
+        assert!(!same.cross_gpu);
+        assert!(same.arrival.0 > 5.0);
+        let cross = m.route(&packet(0, ChannelKind::State, 40960, 5.0));
+        assert!(cross.cross_gpu);
+        assert!(cross.transfer_s > same.transfer_s);
+    }
+}

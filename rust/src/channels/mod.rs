@@ -1,0 +1,164 @@
+//! Channel-based experience sharing (paper §4.2, Figure 5).
+//!
+//! Connects agent GMIs to trainer GMIs in asynchronized training. The
+//! experience record is heterogeneous (states are wide, rewards are one
+//! float), so a single monolithic stream ("uni-channel", UCC) wastes
+//! bandwidth on small ragged transfers. The multi-channel design (MCC)
+//! splits experience into typed channels and re-batches per channel:
+//!
+//! * [`Dispenser`] (per agent) categorizes experience into channels;
+//! * [`Compressor`] (system-wide) concatenates per-channel chunks until a
+//!   transfer-size threshold is met (the paper's "increase the size of
+//!   each data movement");
+//! * [`Migrator`] (system-wide) routes packets to the least-loaded trainer,
+//!   charging the right link cost (same-GPU host hop vs cross-GPU NVLink);
+//! * [`Batcher`] (per trainer) slices/stacks channel data back into
+//!   training batches.
+//!
+//! All components are deterministic queue machines driven by the async
+//! orchestrator (`drl::a3c`); items carry virtual timestamps.
+
+mod batcher;
+mod compressor;
+mod dispenser;
+mod migrator;
+
+pub use batcher::{Batcher, TrainBatch};
+pub use compressor::Compressor;
+pub use dispenser::{Dispenser, RolloutSegment};
+pub use migrator::{Migrator, RouteDecision, TrainerEndpoint};
+
+use crate::vtime::Clock;
+
+/// The typed experience channels (paper Fig 5(a): Exp_S, Exp_A, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ChannelKind {
+    State,
+    Action,
+    Logp,
+    Reward,
+    Value,
+    Done,
+}
+
+impl ChannelKind {
+    pub const ALL: [ChannelKind; 6] = [
+        ChannelKind::State,
+        ChannelKind::Action,
+        ChannelKind::Logp,
+        ChannelKind::Reward,
+        ChannelKind::Value,
+        ChannelKind::Done,
+    ];
+
+    /// Floats per (env, step) element in this channel for a benchmark with
+    /// `obs_dim` observations and `act_dim` actions.
+    pub fn width(&self, obs_dim: usize, act_dim: usize) -> usize {
+        match self {
+            ChannelKind::State => obs_dim,
+            ChannelKind::Action => act_dim,
+            ChannelKind::Logp | ChannelKind::Reward | ChannelKind::Value | ChannelKind::Done => 1,
+        }
+    }
+}
+
+/// Sharing mode: the paper's multi-channel design vs the uni-channel
+/// baseline (Table 8's UCC vs MCC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShareMode {
+    UniChannel,
+    MultiChannel,
+}
+
+/// One typed slice of experience from one agent rollout segment.
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    pub channel: ChannelKind,
+    pub agent: usize,
+    /// Rollout segment sequence number at the producing agent.
+    pub seq: u64,
+    /// (steps, envs) this chunk covers.
+    pub steps: usize,
+    pub envs: usize,
+    pub data: Vec<f32>,
+    /// Producer's virtual clock when the chunk became available.
+    pub ready: Clock,
+}
+
+impl Chunk {
+    pub fn bytes(&self) -> usize {
+        4 * self.data.len()
+    }
+}
+
+/// A transfer unit: one or more concatenated chunks of the same channel.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub channel: ChannelKind,
+    pub chunks: Vec<Chunk>,
+    /// max over member chunk ready times (can't ship before produced).
+    pub ready: Clock,
+}
+
+impl Packet {
+    pub fn bytes(&self) -> usize {
+        self.chunks.iter().map(Chunk::bytes).sum()
+    }
+
+    pub fn samples(&self) -> usize {
+        self.chunks.iter().map(|c| c.steps * c.envs).sum()
+    }
+}
+
+/// Pipeline traffic statistics (drives Table 8's analysis).
+#[derive(Debug, Default, Clone)]
+pub struct ChannelStats {
+    pub chunks_in: u64,
+    pub packets_out: u64,
+    pub bytes_moved: u64,
+    pub transfer_ops: u64,
+    pub transfer_seconds: f64,
+}
+
+impl ChannelStats {
+    pub fn mean_packet_bytes(&self) -> f64 {
+        if self.packets_out == 0 {
+            0.0
+        } else {
+            self.bytes_moved as f64 / self.packets_out as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_widths() {
+        assert_eq!(ChannelKind::State.width(60, 8), 60);
+        assert_eq!(ChannelKind::Action.width(60, 8), 8);
+        assert_eq!(ChannelKind::Reward.width(60, 8), 1);
+        assert_eq!(ChannelKind::ALL.len(), 6);
+    }
+
+    #[test]
+    fn packet_accounting() {
+        let c = |n: usize| Chunk {
+            channel: ChannelKind::State,
+            agent: 0,
+            seq: 0,
+            steps: 1,
+            envs: n,
+            data: vec![0.0; n * 60],
+            ready: Clock(1.0),
+        };
+        let p = Packet {
+            channel: ChannelKind::State,
+            chunks: vec![c(4), c(8)],
+            ready: Clock(2.0),
+        };
+        assert_eq!(p.samples(), 12);
+        assert_eq!(p.bytes(), 4 * 12 * 60);
+    }
+}

@@ -1,0 +1,173 @@
+//! Simulated multi-GPU node: DGX-A100 topology (8x A100, NVSwitch fabric,
+//! per-GPU PCIe host links). The interconnect bandwidth model feeds the
+//! inter-GMI communication costs (comm module).
+//!
+//! Substitution note (DESIGN.md §1): these are calibrated *effective*
+//! bandwidths — what collective libraries achieve in practice, not link
+//! peaks — so the LGR strategy crossovers match the paper's Table 7 shape.
+
+use crate::vtime::A100_SM_COUNT;
+
+/// A100 HBM capacity in GiB.
+pub const A100_MEM_GIB: f64 = 40.0;
+
+/// Effective NVLink/NVSwitch bandwidth per GPU pair for NCCL ring traffic
+/// (bytes/s). DGX-A100: 600 GB/s aggregate per GPU; a single NCCL ring
+/// sustains ~150 GB/s effective.
+pub const NVLINK_BW: f64 = 150e9;
+
+/// Per-operation latency of a NCCL collective launch (seconds).
+pub const NCCL_LAT: f64 = 30e-6;
+
+/// Effective host-staged inter-process bandwidth *per GPU's PCIe path*
+/// (bytes/s). This is the paper's `B1`: D2H copy + shared-memory handoff +
+/// H2D copy through a CPU-side collective (Gloo), far below PCIe peak.
+pub const HOST_BW: f64 = 5e9;
+
+/// Per-operation latency of a host-staged transfer (seconds): process
+/// wakeup + pickling + IPC rendezvous.
+pub const HOST_LAT: f64 = 150e-6;
+
+/// CPU-side reduction throughput (bytes/s of summed output) — the paper's
+/// MPR weakness (3): "relying on the slow CPU for reduction computation"
+/// (a python-side gloo reduce, not a vectorized native loop).
+pub const CPU_REDUCE_BW: f64 = 2e9;
+
+/// Message size at which the host path reaches half its peak bandwidth.
+/// Small transfers are dominated by per-message software overhead — the
+/// §4.2 observation that fine-grained UCC sharing "largely underutilizes"
+/// memory bandwidth, which the multi-channel compressor fixes by batching.
+pub const HOST_MSG_HALF_BYTES: f64 = 2.0 * 1024.0 * 1024.0;
+
+/// One physical GPU in the node.
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    pub id: usize,
+    pub sm_count: usize,
+    pub mem_gib: f64,
+    /// Compute capability; sm_80 (A100) supports MIG, sm_70 (V100) does not.
+    pub sm_arch: u32,
+}
+
+impl GpuDevice {
+    pub fn a100(id: usize) -> Self {
+        GpuDevice { id, sm_count: A100_SM_COUNT, mem_gib: A100_MEM_GIB, sm_arch: 80 }
+    }
+
+    pub fn v100(id: usize) -> Self {
+        GpuDevice { id, sm_count: 80, mem_gib: 32.0, sm_arch: 70 }
+    }
+
+    pub fn supports_mig(&self) -> bool {
+        self.sm_arch >= 80
+    }
+}
+
+/// A multi-GPU node with an all-to-all NVSwitch fabric (DGX-A100) or a
+/// PCIe-only box (no NVLink; NCCL falls back to host staging).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub gpus: Vec<GpuDevice>,
+    pub has_nvlink: bool,
+}
+
+impl Topology {
+    /// DGX-A100 with `n` of its 8 GPUs visible.
+    pub fn dgx_a100(n: usize) -> Self {
+        assert!(n >= 1 && n <= 8, "DGX-A100 has 8 GPUs, asked for {n}");
+        Topology { gpus: (0..n).map(GpuDevice::a100).collect(), has_nvlink: true }
+    }
+
+    /// A V100 box (sm_70): MPS only, no MIG (§3).
+    pub fn v100_box(n: usize) -> Self {
+        Topology { gpus: (0..n).map(GpuDevice::v100).collect(), has_nvlink: n > 1 }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Effective inter-GPU bandwidth for one NCCL ring (bytes/s).
+    pub fn inter_gpu_bw(&self) -> f64 {
+        if self.has_nvlink {
+            NVLINK_BW
+        } else {
+            HOST_BW
+        }
+    }
+
+    /// Time for a NCCL ring allreduce over `k` endpoints of `bytes` each,
+    /// with `rings_sharing` concurrent rings contending the fabric.
+    pub fn ring_allreduce_time(&self, k: usize, bytes: usize, rings_sharing: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let bw = self.inter_gpu_bw() / rings_sharing.max(1) as f64;
+        let steps = 2 * (k - 1);
+        NCCL_LAT * steps as f64 + steps as f64 * bytes as f64 / (k as f64 * bw)
+    }
+
+    /// Time to move `bytes` between two GMIs through host staging (D2H +
+    /// handoff + H2D). `procs_sharing` processes contend the same GPU's
+    /// PCIe path. Effective bandwidth degrades for small messages
+    /// (HOST_MSG_HALF_BYTES) — the batching incentive of §4.2.
+    pub fn host_transfer_time(&self, bytes: usize, procs_sharing: usize) -> f64 {
+        let b = bytes as f64;
+        let eff = (b / (b + HOST_MSG_HALF_BYTES)).max(0.02);
+        HOST_LAT + b * procs_sharing.max(1) as f64 / (HOST_BW * eff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgx_shape() {
+        let t = Topology::dgx_a100(8);
+        assert_eq!(t.num_gpus(), 8);
+        assert!(t.gpus[0].supports_mig());
+        assert_eq!(t.gpus[0].sm_count, 108);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dgx_limit() {
+        Topology::dgx_a100(9);
+    }
+
+    #[test]
+    fn v100_has_no_mig() {
+        let t = Topology::v100_box(2);
+        assert!(!t.gpus[0].supports_mig());
+    }
+
+    #[test]
+    fn ring_allreduce_scales() {
+        let t = Topology::dgx_a100(4);
+        let small = t.ring_allreduce_time(4, 1 << 20, 1);
+        let big = t.ring_allreduce_time(4, 64 << 20, 1);
+        // 64x the bytes: bandwidth term scales 64x, launch latency doesn't.
+        assert!(big > small * 3.0, "big {big} small {small}");
+        // contended rings are slower
+        assert!(t.ring_allreduce_time(4, 1 << 20, 4) > small);
+        // degenerate ring is free
+        assert_eq!(t.ring_allreduce_time(1, 1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn host_transfer_contention() {
+        let t = Topology::dgx_a100(1);
+        let solo = t.host_transfer_time(8 << 20, 1);
+        let shared = t.host_transfer_time(8 << 20, 4);
+        assert!(shared > solo * 2.0);
+    }
+
+    #[test]
+    fn nvlink_much_faster_than_host() {
+        let t = Topology::dgx_a100(2);
+        let nv = t.ring_allreduce_time(2, 16 << 20, 1);
+        let host = t.host_transfer_time(16 << 20, 1) * 2.0;
+        assert!(nv < host, "nvlink {nv} vs host {host}");
+    }
+}

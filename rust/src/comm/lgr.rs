@@ -1,0 +1,360 @@
+//! Layout-aware gradient reduction (LGR) — paper §4.1, Figure 4, Table 2,
+//! Algorithm 1.
+//!
+//! Three strategies for allreducing trainer gradients across GMIs:
+//!
+//! * **MPR** (Multi-Process Reduction): every GMI stages its gradient to
+//!   host memory, the CPU reduces, results broadcast back. Generic — works
+//!   for any layout — but hammers the PCIe paths and the slow CPU.
+//! * **MRR** (Multi-Ring Reduction): GMIs at the same intra-GPU ordinal
+//!   form non-intersecting NCCL rings across GPUs (NCCL *can* run between
+//!   GMIs on different GPUs, just not within one); a final ring merges the
+//!   per-ring partials. Only valid when t <= g, otherwise the final ring
+//!   would need two endpoints on one GPU ("multiple CUDA streams error").
+//! * **HAR** (Hierarchical Reduction): host-staged reduce *within* each GPU
+//!   (leader GMI per GPU: `GMI_id % M == t`), NCCL ring across the g
+//!   leaders, broadcast back down. Combines both levels.
+//!
+//! Every strategy here executes the *real* reduction arithmetic and returns
+//! both the reduced vector and the virtual-time cost of the chosen routing.
+
+use anyhow::{bail, Result};
+
+use super::reduce_mean;
+use crate::cluster::{Topology, CPU_REDUCE_BW, HOST_LAT};
+
+/// The three reduction strategies of Figure 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceStrategy {
+    MultiProcess,
+    MultiRing,
+    Hierarchical,
+}
+
+impl std::fmt::Display for ReduceStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ReduceStrategy::MultiProcess => "MPR",
+            ReduceStrategy::MultiRing => "MRR",
+            ReduceStrategy::Hierarchical => "HAR",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Algorithm 1: pick the strategy from the GMI-to-GPU mapping list `MPL`
+/// (one inner vec of GMI ids per GPU).
+pub fn select_strategy(mpl: &[Vec<usize>]) -> ReduceStrategy {
+    // All GMIs on the same GPU -> MPR.
+    if mpl.len() <= 1 {
+        return ReduceStrategy::MultiProcess;
+    }
+    // Different GPUs host different numbers of GMIs -> HAR.
+    let mut sizes: Vec<usize> = mpl.iter().map(|v| v.len()).collect();
+    sizes.dedup();
+    if sizes.len() > 1 {
+        return ReduceStrategy::Hierarchical;
+    }
+    // More GMIs per GPU than GPUs -> the final MRR ring would need multiple
+    // endpoints on one GPU -> HAR.
+    if mpl[0].len() > mpl.len() {
+        return ReduceStrategy::Hierarchical;
+    }
+    ReduceStrategy::MultiRing
+}
+
+/// Table 2 analytical time complexities (for the table2 bench and the cost
+/// cross-check test). `g` GPUs, `t` GMIs/GPU, `mp` parameter bytes, `b1`
+/// inter-GMI host bandwidth, `b2` NCCL bandwidth.
+pub mod analytical {
+    pub fn mpr(g: usize, t: usize, mp: f64, b1: f64) -> f64 {
+        let gt = (g * t) as f64;
+        2.0 * (gt - 1.0) * mp / (gt * b1)
+    }
+
+    pub fn mrr(g: usize, t: usize, mp: f64, b2: f64) -> f64 {
+        let g_ = g as f64;
+        2.0 * (g_ - 1.0) * (t as f64 + 1.0) * mp / (g_ * b2)
+    }
+
+    pub fn har(g: usize, t: usize, mp: f64, b1: f64, b2: f64) -> f64 {
+        let (g_, t_) = (g as f64, t as f64);
+        2.0 * (g_ - 1.0) * mp / (g_ * b2) + 2.0 * (t_ - 1.0) * mp / (t_ * b1)
+    }
+}
+
+/// The LGR engine: owns the layout (mapping list) and executes reductions.
+pub struct LgrEngine {
+    topology: Topology,
+    /// `mpl[i]` = GMI ids on GPU i (trainer GMIs only).
+    mpl: Vec<Vec<usize>>,
+}
+
+impl LgrEngine {
+    pub fn new(topology: Topology, mpl: Vec<Vec<usize>>) -> Result<Self> {
+        if mpl.is_empty() || mpl.iter().any(|v| v.is_empty()) {
+            bail!("empty GMI mapping list");
+        }
+        if mpl.len() > topology.num_gpus() {
+            bail!("mapping list has {} GPUs, topology {}", mpl.len(), topology.num_gpus());
+        }
+        Ok(LgrEngine { topology, mpl })
+    }
+
+    pub fn num_gmis(&self) -> usize {
+        self.mpl.iter().map(|v| v.len()).sum()
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.mpl.len()
+    }
+
+    pub fn strategy(&self) -> ReduceStrategy {
+        select_strategy(&self.mpl)
+    }
+
+    /// Allreduce (mean) the per-GMI gradients, flattened in mapping-list
+    /// order. Returns (reduced gradient, virtual seconds of the routing
+    /// chosen by `strategy`). Includes the final broadcast back to all GMIs.
+    pub fn allreduce(&self, grads: &[Vec<f32>], strategy: ReduceStrategy) -> Result<(Vec<f32>, f64)> {
+        let n = self.num_gmis();
+        if grads.len() != n {
+            bail!("expected {n} gradients, got {}", grads.len());
+        }
+        if n == 1 {
+            return Ok((grads[0].clone(), 0.0));
+        }
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let reduced = reduce_mean(&refs);
+        let time = self.reduce_time(4 * grads[0].len(), strategy)?;
+        Ok((reduced, time))
+    }
+
+    /// Virtual cost of one reduction of `bytes` under `strategy` (the
+    /// timing half of `allreduce`, for callers that charge several
+    /// minibatch reductions against one materialized gradient).
+    pub fn reduce_time(&self, bytes: usize, strategy: ReduceStrategy) -> Result<f64> {
+        if self.num_gmis() == 1 {
+            return Ok(0.0);
+        }
+        Ok(match strategy {
+            ReduceStrategy::MultiProcess => self.mpr_time(bytes),
+            ReduceStrategy::MultiRing => self.mrr_time(bytes)?,
+            ReduceStrategy::Hierarchical => self.har_time(bytes),
+        })
+    }
+
+    /// MPR: all g*t GMIs stage D2H (contending their GPU's host path), the
+    /// CPU reduces g*t buffers, H2D broadcast back (contended again).
+    fn mpr_time(&self, bytes: usize) -> f64 {
+        let t_max = self.mpl.iter().map(|v| v.len()).max().unwrap();
+        let gt = self.num_gmis();
+        // D2H: t GMIs per GPU share that GPU's PCIe path; GPUs in parallel.
+        let d2h = self.topology.host_transfer_time(bytes, t_max);
+        // CPU reduce over all g*t buffers (the slow part).
+        let cpu = (gt as f64 * bytes as f64) / CPU_REDUCE_BW + HOST_LAT;
+        // H2D broadcast, contended the same way.
+        let h2d = self.topology.host_transfer_time(bytes, t_max);
+        d2h + cpu + h2d
+    }
+
+    /// MRR: t parallel rings across g GPUs (contending NVLink), then a
+    /// final ring over the t ring-leaders, then intra-ring broadcast.
+    fn mrr_time(&self, bytes: usize) -> Result<f64> {
+        let g = self.num_gpus();
+        let t = self.mpl[0].len();
+        if self.mpl.iter().any(|v| v.len() != t) {
+            bail!("MRR requires equal GMIs per GPU");
+        }
+        if t > g {
+            bail!("MRR invalid: {t} GMIs/GPU > {g} GPUs (multiple CUDA streams error)");
+        }
+        // Phase 1: t rings of size g run concurrently, sharing the fabric.
+        let phase1 = self.topology.ring_allreduce_time(g, bytes, t);
+        // Phase 2: one ring over the t leaders (distinct GPUs by layout).
+        let phase2 = self.topology.ring_allreduce_time(t, bytes, 1);
+        // Broadcast back through the phase-1 rings (reverse direction).
+        let bcast = self.topology.ring_allreduce_time(g, bytes, t) / 2.0;
+        Ok(phase1 + phase2 + bcast)
+    }
+
+    /// HAR: host-staged intra-GPU reduce to a leader per GPU (all GPUs in
+    /// parallel), NCCL ring across leaders, host-staged broadcast down.
+    fn har_time(&self, bytes: usize) -> f64 {
+        let g = self.num_gpus();
+        let t_max = self.mpl.iter().map(|v| v.len()).max().unwrap();
+        // Step 1: within each GPU, t GMIs host-stage to the leader and the
+        // leader reduces (GPU-local CPU lanes; GPUs in parallel).
+        let local = if t_max > 1 {
+            self.topology.host_transfer_time(bytes, t_max - 1)
+                + (t_max as f64 * bytes as f64) / CPU_REDUCE_BW
+        } else {
+            0.0
+        };
+        // Step 2: NCCL ring across the g leaders.
+        let ring = self.topology.ring_allreduce_time(g, bytes, 1);
+        // Step 3: leaders broadcast down (host path, parallel per GPU).
+        let down = if t_max > 1 {
+            self.topology.host_transfer_time(bytes, t_max - 1)
+        } else {
+            0.0
+        };
+        local + ring + down
+    }
+
+    /// Broadcast cost of pushing the reduced gradient back out (the paper
+    /// notes this is cheap and parallel; included in allreduce already).
+    pub fn mapping_list(&self) -> &[Vec<usize>] {
+        &self.mpl
+    }
+
+    /// Leader GMI of each GPU under HAR: `GMI_id % M == t` rule of §4.1
+    /// (we take the first GMI of each GPU's list, which satisfies the
+    /// round-robin id layout the paper assumes).
+    pub fn leaders(&self) -> Vec<usize> {
+        self.mpl.iter().map(|v| v[0]).collect()
+    }
+
+    /// NCCL's constraint check: a ring may touch each GPU at most once.
+    pub fn validate_ring(&self, ring: &[usize]) -> bool {
+        let mut gpus = Vec::new();
+        for gmi in ring {
+            let Some(gpu) = self.gpu_of(*gmi) else { return false };
+            if gpus.contains(&gpu) {
+                return false;
+            }
+            gpus.push(gpu);
+        }
+        true
+    }
+
+    fn gpu_of(&self, gmi: usize) -> Option<usize> {
+        self.mpl.iter().position(|v| v.contains(&gmi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{HOST_BW, NVLINK_BW};
+
+    fn mpl(g: usize, t: usize) -> Vec<Vec<usize>> {
+        (0..g).map(|i| (0..t).map(|j| i * t + j).collect()).collect()
+    }
+
+    #[test]
+    fn algorithm1_selection() {
+        // All GMIs on one GPU -> MPR.
+        assert_eq!(select_strategy(&mpl(1, 3)), ReduceStrategy::MultiProcess);
+        // Unequal counts -> HAR.
+        assert_eq!(
+            select_strategy(&[vec![0, 1], vec![2]]),
+            ReduceStrategy::Hierarchical
+        );
+        // t > g -> HAR (paper: 2 GPUs, 3 trainers each).
+        assert_eq!(select_strategy(&mpl(2, 3)), ReduceStrategy::Hierarchical);
+        // t <= g with equal counts -> MRR.
+        assert_eq!(select_strategy(&mpl(4, 4)), ReduceStrategy::MultiRing);
+        assert_eq!(select_strategy(&mpl(4, 2)), ReduceStrategy::MultiRing);
+    }
+
+    #[test]
+    fn all_strategies_same_arithmetic() {
+        let topo = Topology::dgx_a100(4);
+        let engine = LgrEngine::new(topo, mpl(4, 2)).unwrap();
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|i| (0..64).map(|j| (i * 64 + j) as f32 * 0.01).collect())
+            .collect();
+        let (a, _) = engine.allreduce(&grads, ReduceStrategy::MultiProcess).unwrap();
+        let (b, _) = engine.allreduce(&grads, ReduceStrategy::MultiRing).unwrap();
+        let (c, _) = engine.allreduce(&grads, ReduceStrategy::Hierarchical).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        // Check against a hand-rolled mean.
+        let want: Vec<f32> = (0..64)
+            .map(|j| (0..8).map(|i| (i * 64 + j) as f32 * 0.01).sum::<f32>() / 8.0)
+            .collect();
+        for (x, y) in a.iter().zip(want.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn har_beats_mpr_on_multi_gpu_layouts() {
+        // Table 7's premise: on 4G4T the hierarchical strategy wins clearly.
+        let topo = Topology::dgx_a100(4);
+        let engine = LgrEngine::new(topo, mpl(4, 4)).unwrap();
+        let grads: Vec<Vec<f32>> = (0..16).map(|_| vec![0.5f32; 1_500_000]).collect();
+        let (_, t_mpr) = engine.allreduce(&grads, ReduceStrategy::MultiProcess).unwrap();
+        let (_, t_har) = engine.allreduce(&grads, ReduceStrategy::Hierarchical).unwrap();
+        assert!(t_har < t_mpr, "HAR {t_har} vs MPR {t_mpr}");
+        assert!(t_mpr / t_har > 1.5, "expected clear HAR win, got {}", t_mpr / t_har);
+    }
+
+    #[test]
+    fn mrr_between_mpr_and_nothing() {
+        let topo = Topology::dgx_a100(4);
+        let engine = LgrEngine::new(topo, mpl(4, 2)).unwrap();
+        let grads: Vec<Vec<f32>> = (0..8).map(|_| vec![0.5f32; 1_500_000]).collect();
+        let (_, t_mpr) = engine.allreduce(&grads, ReduceStrategy::MultiProcess).unwrap();
+        let (_, t_mrr) = engine.allreduce(&grads, ReduceStrategy::MultiRing).unwrap();
+        assert!(t_mrr < t_mpr, "MRR {t_mrr} vs MPR {t_mpr}");
+    }
+
+    #[test]
+    fn mrr_rejects_t_greater_g() {
+        let topo = Topology::dgx_a100(2);
+        let engine = LgrEngine::new(topo, mpl(2, 3)).unwrap();
+        let grads: Vec<Vec<f32>> = (0..6).map(|_| vec![1.0f32; 16]).collect();
+        assert!(engine.allreduce(&grads, ReduceStrategy::MultiRing).is_err());
+    }
+
+    #[test]
+    fn single_gmi_is_free() {
+        let topo = Topology::dgx_a100(1);
+        let engine = LgrEngine::new(topo, mpl(1, 1)).unwrap();
+        let grads = vec![vec![1.0f32, 2.0]];
+        let (r, t) = engine.allreduce(&grads, ReduceStrategy::MultiProcess).unwrap();
+        assert_eq!(r, vec![1.0, 2.0]);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn wrong_grad_count_rejected() {
+        let topo = Topology::dgx_a100(2);
+        let engine = LgrEngine::new(topo, mpl(2, 2)).unwrap();
+        let grads = vec![vec![1.0f32; 4]; 3];
+        assert!(engine.allreduce(&grads, ReduceStrategy::Hierarchical).is_err());
+    }
+
+    #[test]
+    fn ring_validation() {
+        let topo = Topology::dgx_a100(3);
+        let engine = LgrEngine::new(topo, mpl(3, 2)).unwrap();
+        // one GMI per GPU: valid ring
+        assert!(engine.validate_ring(&[0, 2, 4]));
+        // two GMIs of GPU 0: invalid
+        assert!(!engine.validate_ring(&[0, 1, 2]));
+        // unknown GMI: invalid
+        assert!(!engine.validate_ring(&[0, 99]));
+    }
+
+    #[test]
+    fn analytical_formulas_ordering() {
+        // Table 2 at the paper's own operating point: HAR <= MRR <= MPR for
+        // multi-GPU multi-GMI layouts with B2 >> B1.
+        let mp = 1.5e6 * 4.0;
+        let mpr = analytical::mpr(4, 4, mp, HOST_BW);
+        let mrr = analytical::mrr(4, 4, mp, NVLINK_BW);
+        let har = analytical::har(4, 4, mp, HOST_BW, NVLINK_BW);
+        assert!(har < mpr, "har {har} mpr {mpr}");
+        assert!(mrr < mpr, "mrr {mrr} mpr {mpr}");
+    }
+
+    #[test]
+    fn leaders_one_per_gpu() {
+        let topo = Topology::dgx_a100(4);
+        let engine = LgrEngine::new(topo, mpl(4, 3)).unwrap();
+        assert_eq!(engine.leaders(), vec![0, 3, 6, 9]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Specialized GMI communication (paper §4).
+//!
+//! GPU spatial multiplexing erects memory barriers between GMIs, so the
+//! stock GPU-granularity primitives (NCCL, CUDA IPC) don't apply at the
+//! sub-GPU granularity. This module provides the paper's two answers:
+//!
+//! * [`lgr`] — latency-optimized **layout-aware gradient reduction** for
+//!   synchronized training (§4.1): MPR / MRR / HAR + Algorithm 1 selection.
+//! * p2p transfer primitives used by the throughput-optimized
+//!   channel-based experience sharing (§4.2, see the `channels` module).
+//!
+//! All reductions do *real arithmetic* on the gradient vectors (bit-checked
+//! by tests); the *time* is charged to the virtual clocks by the cost model
+//! in [`lgr`] / `cluster`.
+
+pub mod lgr;
+pub mod multinode;
+
+pub use lgr::{select_strategy, LgrEngine, ReduceStrategy};
+pub use multinode::{MultiNodeLgr, MultiNodeTopology};
+
+/// Sum `srcs` element-wise into a fresh vector (the arithmetic every
+/// reduction strategy must produce, regardless of routing).
+///
+/// Blocked over columns so the destination block stays in L1/L2 while all
+/// sources stream through it once — on SH-sized gradients (16 x 6 MB) this
+/// is ~3x faster than source-major accumulation, which re-reads the full
+/// destination per source (EXPERIMENTS.md §Perf, L3 iteration 1).
+pub fn reduce_sum(srcs: &[&[f32]]) -> Vec<f32> {
+    assert!(!srcs.is_empty());
+    let n = srcs[0].len();
+    for s in srcs {
+        assert_eq!(s.len(), n, "gradient length mismatch");
+    }
+    const BLOCK: usize = 4096; // 16 KiB destination block
+    let mut out = vec![0.0f32; n];
+    let mut start = 0;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        let dst = &mut out[start..end];
+        for s in srcs {
+            let src = &s[start..end];
+            for (o, v) in dst.iter_mut().zip(src.iter()) {
+                *o += v;
+            }
+        }
+        start = end;
+    }
+    out
+}
+
+/// Average variant (gradient allreduce convention for data parallelism).
+pub fn reduce_mean(srcs: &[&[f32]]) -> Vec<f32> {
+    let mut out = reduce_sum(srcs);
+    let k = srcs.len() as f32;
+    for o in out.iter_mut() {
+        *o /= k;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_and_mean() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 2.0, 1.0];
+        let s = reduce_sum(&[&a, &b]);
+        assert_eq!(s, vec![4.0, 4.0, 4.0]);
+        let m = reduce_mean(&[&a, &b]);
+        assert_eq!(m, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let a = vec![1.0f32; 3];
+        let b = vec![1.0f32; 4];
+        reduce_sum(&[&a, &b]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Multi-node extension of layout-aware gradient reduction (paper §8, "For
+//! DRL scaling": *"our layout-aware gradient reduction technique can be
+//! extended to support efficient multi-node model synchronization by
+//! considering the intra- and inter-node GMI layout hierarchy"*).
+//!
+//! Three-level hierarchy:
+//!   1. intra-GPU:  host-staged reduce to a per-GPU leader (as HAR step 1);
+//!   2. intra-node: NCCL ring over the node's GPU leaders via NVLink;
+//!   3. inter-node: ring over per-node leaders via InfiniBand.
+//! Then broadcast back down the same tree.
+
+use anyhow::{bail, Result};
+
+use super::reduce_mean;
+use crate::cluster::{Topology, CPU_REDUCE_BW, NCCL_LAT};
+
+/// Effective per-node InfiniBand bandwidth (bytes/s): HDR 200 Gb/s link at
+/// NCCL efficiency.
+pub const IB_BW: f64 = 20e9;
+/// Per-operation latency of an inter-node collective step.
+pub const IB_LAT: f64 = 5e-6;
+
+/// A cluster of identical DGX nodes.
+#[derive(Debug, Clone)]
+pub struct MultiNodeTopology {
+    pub node: Topology,
+    pub num_nodes: usize,
+}
+
+impl MultiNodeTopology {
+    pub fn dgx_cluster(num_nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(num_nodes >= 1);
+        MultiNodeTopology { node: Topology::dgx_a100(gpus_per_node), num_nodes }
+    }
+
+    /// Inter-node ring allreduce over `k` node leaders.
+    pub fn ib_ring_time(&self, k: usize, bytes: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (k - 1);
+        steps as f64 * (IB_LAT + bytes as f64 / (k as f64 * IB_BW))
+    }
+}
+
+/// Hierarchical multi-node reducer: `t` trainer GMIs per GPU, `g` GPUs per
+/// node, `nodes` nodes.
+pub struct MultiNodeLgr {
+    topo: MultiNodeTopology,
+    g: usize,
+    t: usize,
+}
+
+impl MultiNodeLgr {
+    pub fn new(topo: MultiNodeTopology, gpus_per_node: usize, gmis_per_gpu: usize) -> Result<Self> {
+        if gpus_per_node == 0 || gmis_per_gpu == 0 {
+            bail!("empty layout");
+        }
+        if gpus_per_node > topo.node.num_gpus() {
+            bail!("node has {} GPUs, asked {gpus_per_node}", topo.node.num_gpus());
+        }
+        Ok(MultiNodeLgr { topo, g: gpus_per_node, t: gmis_per_gpu })
+    }
+
+    pub fn num_gmis(&self) -> usize {
+        self.topo.num_nodes * self.g * self.t
+    }
+
+    /// Allreduce (mean) over all GMIs' gradients, flattened node-major.
+    /// Returns (reduced gradient, virtual seconds of the 3-level routing).
+    pub fn allreduce(&self, grads: &[Vec<f32>]) -> Result<(Vec<f32>, f64)> {
+        let n = self.num_gmis();
+        if grads.len() != n {
+            bail!("expected {n} gradients, got {}", grads.len());
+        }
+        if n == 1 {
+            return Ok((grads[0].clone(), 0.0));
+        }
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let reduced = reduce_mean(&refs);
+        let time = self.reduce_time(4 * grads[0].len());
+        Ok((reduced, time))
+    }
+
+    /// Cost of the 3-level hierarchy for one reduction of `bytes`.
+    pub fn reduce_time(&self, bytes: usize) -> f64 {
+        // Level 1: intra-GPU host-staged reduce (all GPUs of all nodes in
+        // parallel; t-1 transfers contend each GPU's PCIe path).
+        let l1 = if self.t > 1 {
+            self.topo.node.host_transfer_time(bytes, self.t - 1)
+                + (self.t as f64 * bytes as f64) / CPU_REDUCE_BW
+        } else {
+            0.0
+        };
+        // Level 2: NVLink ring over the g per-GPU leaders (per node).
+        let l2 = self.topo.node.ring_allreduce_time(self.g, bytes, 1);
+        // Level 3: InfiniBand ring over node leaders.
+        let l3 = self.topo.ib_ring_time(self.topo.num_nodes, bytes);
+        // Broadcast back down: NVLink fan-out + host fan-out (overlapped
+        // per level; count the slower leg of each).
+        let down = if self.t > 1 {
+            self.topo.node.host_transfer_time(bytes, self.t - 1)
+        } else {
+            0.0
+        } + NCCL_LAT;
+        l1 + l2 + l3 + down
+    }
+
+    /// The naive flat alternative: a ring over all GMIs is *invalid*
+    /// (multiple endpoints per GPU — the same "multiple CUDA streams"
+    /// constraint as single-node MRR), so the only layout-oblivious option
+    /// at scale is MPR: every GMI host-stages to a global CPU reduction.
+    /// Used by tests/ablation to show the hierarchy is required at scale.
+    pub fn flat_mpr_time(&self, bytes: usize) -> f64 {
+        let k = self.num_gmis();
+        // D2H: t GMIs contend each GPU's PCIe path (GPUs/nodes parallel);
+        // the global CPU reduce is serial in the total volume; results
+        // additionally cross IB once to reach every node.
+        let d2h = self.topo.node.host_transfer_time(bytes, self.t);
+        let cpu = k as f64 * bytes as f64 / CPU_REDUCE_BW;
+        let ib = if self.topo.num_nodes > 1 {
+            bytes as f64 * (self.topo.num_nodes - 1) as f64 / IB_BW
+        } else {
+            0.0
+        };
+        let h2d = self.topo.node.host_transfer_time(bytes, self.t);
+        d2h + cpu + ib + h2d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| (0..len).map(|j| (i * len + j) as f32 * 1e-3).collect())
+            .collect()
+    }
+
+    #[test]
+    fn arithmetic_matches_flat_mean() {
+        let topo = MultiNodeTopology::dgx_cluster(2, 2);
+        let lgr = MultiNodeLgr::new(topo, 2, 2).unwrap();
+        let g = grads(8, 32);
+        let (got, secs) = lgr.allreduce(&g).unwrap();
+        let refs: Vec<&[f32]> = g.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(got, reduce_mean(&refs));
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn hierarchy_beats_flat_mpr_at_scale() {
+        // 4 nodes x 8 GPUs x 4 GMIs = 128 GMIs, SH-sized model.
+        let topo = MultiNodeTopology::dgx_cluster(4, 8);
+        let lgr = MultiNodeLgr::new(topo, 8, 4).unwrap();
+        let bytes = 6 * 1024 * 1024;
+        let hier = lgr.reduce_time(bytes);
+        let flat = lgr.flat_mpr_time(bytes);
+        assert!(
+            flat / hier > 4.0,
+            "hierarchy {hier}s vs flat MPR {flat}s should win clearly"
+        );
+    }
+
+    #[test]
+    fn single_node_reduces_to_har() {
+        // With 1 node the level-3 term vanishes; cost ~ HAR of the node.
+        let topo = MultiNodeTopology::dgx_cluster(1, 4);
+        let lgr = MultiNodeLgr::new(topo.clone(), 4, 2).unwrap();
+        let with_l3 = MultiNodeLgr::new(
+            MultiNodeTopology { node: topo.node.clone(), num_nodes: 2 },
+            4,
+            2,
+        )
+        .unwrap();
+        let bytes = 1 << 20;
+        assert!(lgr.reduce_time(bytes) < with_l3.reduce_time(bytes));
+    }
+
+    #[test]
+    fn cost_scales_sublinearly_in_nodes() {
+        // Ring allreduce: 2(k-1)/k -> time approaches 2x bytes/IB_BW, not
+        // linear in node count.
+        let bytes = 4 << 20;
+        let t2 = MultiNodeLgr::new(MultiNodeTopology::dgx_cluster(2, 4), 4, 2)
+            .unwrap()
+            .reduce_time(bytes);
+        let t8 = MultiNodeLgr::new(MultiNodeTopology::dgx_cluster(8, 4), 4, 2)
+            .unwrap()
+            .reduce_time(bytes);
+        assert!(t8 < t2 * 2.0, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn rejects_bad_layouts() {
+        let topo = MultiNodeTopology::dgx_cluster(2, 4);
+        assert!(MultiNodeLgr::new(topo.clone(), 0, 2).is_err());
+        assert!(MultiNodeLgr::new(topo.clone(), 5, 2).is_err());
+        let lgr = MultiNodeLgr::new(topo, 2, 2).unwrap();
+        assert!(lgr.allreduce(&grads(3, 8)).is_err());
+    }
+}

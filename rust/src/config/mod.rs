@@ -1,0 +1,297 @@
+//! Config system: the artifact manifest (written by `python -m compile.aot`),
+//! the static benchmark registry (paper Table 6), and run configuration.
+//!
+//! The manifest interchange format is the line-based `manifest.txt` twin of
+//! `manifest.json` (the offline build has no JSON crate; see DESIGN.md
+//! §Dependencies).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One benchmark entry from the artifact manifest (Table 6 row + the shapes
+/// baked into its HLO artifacts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchInfo {
+    pub name: String,
+    pub abbr: String,
+    pub kind: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: Vec<usize>,
+    pub num_params: usize,
+    pub num_env: usize,
+    pub horizon: usize,
+    pub files: BTreeMap<String, String>,
+}
+
+impl BenchInfo {
+    /// FLOPs of one policy forward pass per environment (actor + critic,
+    /// MACs x2). Drives the virtual-time cost model for GEMM-shaped work.
+    pub fn fwd_flops_per_env(&self) -> f64 {
+        let dims: Vec<usize> = std::iter::once(self.obs_dim)
+            .chain(self.hidden.iter().copied())
+            .collect();
+        let mut macs = 0usize;
+        for w in dims.windows(2) {
+            macs += w[0] * w[1];
+        }
+        // actor head + critic head; x2 for the two identical trunks.
+        let head = self.hidden.last().copied().unwrap_or(1);
+        let total = 2 * macs + head * self.act_dim + head;
+        2.0 * total as f64
+    }
+
+    /// FLOP-equivalents of one env simulation step per environment. Physics
+    /// is element-wise (springs, damping, trig) — cheap in FLOPs but poorly
+    /// parallelizable, which is exactly why it saturates at a small SM share.
+    /// The superlinear factor models contact/solver cost growing with body
+    /// complexity (ShadowHand physics is far heavier per state dim than
+    /// Ant's) — anchored to 1.0 at Ant's 60 dims.
+    pub fn sim_flops_per_env(&self) -> f64 {
+        let base = 40.0 * self.obs_dim as f64 + (self.act_dim * self.obs_dim) as f64;
+        base * (self.obs_dim as f64 / 60.0).powf(0.7)
+    }
+
+    /// Bytes of one experience record (state, action, reward, logp, value,
+    /// done) for one env for one step.
+    pub fn experience_bytes_per_step(&self) -> usize {
+        4 * (self.obs_dim + self.act_dim + 4)
+    }
+
+    /// Bytes of the flat policy parameter / gradient vector (f32).
+    pub fn param_bytes(&self) -> usize {
+        4 * self.num_params
+    }
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub benchmarks: BTreeMap<String, BenchInfo>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut version = 0u32;
+        let mut benchmarks = BTreeMap::new();
+        let mut cur: Option<BenchInfo> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.splitn(2, ' ');
+            let key = it.next().unwrap();
+            let val = it.next().unwrap_or("").trim();
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match key {
+                "version" => version = val.parse().with_context(ctx)?,
+                "bench" => {
+                    if cur.is_some() {
+                        bail!("manifest line {}: nested bench", lineno + 1);
+                    }
+                    cur = Some(BenchInfo {
+                        name: String::new(),
+                        abbr: val.to_string(),
+                        kind: String::new(),
+                        obs_dim: 0,
+                        act_dim: 0,
+                        hidden: vec![],
+                        num_params: 0,
+                        num_env: 0,
+                        horizon: 0,
+                        files: BTreeMap::new(),
+                    });
+                }
+                "end" => {
+                    let b = cur.take().context("end without bench")?;
+                    benchmarks.insert(b.abbr.clone(), b);
+                }
+                _ => {
+                    let b = cur.as_mut().with_context(ctx)?;
+                    match key {
+                        "name" => b.name = val.to_string(),
+                        "kind" => b.kind = val.to_string(),
+                        "obs_dim" => b.obs_dim = val.parse().with_context(ctx)?,
+                        "act_dim" => b.act_dim = val.parse().with_context(ctx)?,
+                        "hidden" => {
+                            b.hidden = val
+                                .split(',')
+                                .map(|s| s.trim().parse::<usize>())
+                                .collect::<std::result::Result<_, _>>()
+                                .with_context(ctx)?
+                        }
+                        "num_params" => b.num_params = val.parse().with_context(ctx)?,
+                        "num_env" => b.num_env = val.parse().with_context(ctx)?,
+                        "horizon" => b.horizon = val.parse().with_context(ctx)?,
+                        "file" => {
+                            let mut fit = val.splitn(2, ' ');
+                            let k = fit.next().unwrap_or("").to_string();
+                            let v = fit.next().unwrap_or("").trim().to_string();
+                            if k.is_empty() || v.is_empty() {
+                                bail!("manifest line {}: bad file entry", lineno + 1);
+                            }
+                            b.files.insert(k, v);
+                        }
+                        _ => bail!("manifest line {}: unknown key {key}", lineno + 1),
+                    }
+                }
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest: unterminated bench block");
+        }
+        Ok(Manifest { version, benchmarks })
+    }
+
+    pub fn bench(&self, abbr: &str) -> Result<&BenchInfo> {
+        self.benchmarks
+            .get(abbr)
+            .with_context(|| format!("benchmark {abbr} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, dir: &Path, abbr: &str, artifact: &str) -> Result<PathBuf> {
+        let b = self.bench(abbr)?;
+        let file = b
+            .files
+            .get(artifact)
+            .with_context(|| format!("artifact {artifact} missing for {abbr}"))?;
+        Ok(dir.join(abbr).join(file))
+    }
+}
+
+/// Static registry of the paper's Table 6 benchmarks. Used by cost-model-only
+/// code paths (unit tests, pure virtual benches) that must not require
+/// `make artifacts` to have run.
+pub fn static_registry() -> BTreeMap<String, BenchInfo> {
+    let rows: Vec<(&str, &str, &str, usize, usize, Vec<usize>)> = vec![
+        ("Ant", "AT", "L", 60, 8, vec![256, 128, 64]),
+        ("Anymal", "AY", "L", 48, 12, vec![256, 128, 64]),
+        ("BallBalance", "BB", "L", 24, 3, vec![256, 128, 64]),
+        ("FrankaCabinet", "FC", "F", 23, 9, vec![256, 128, 64]),
+        ("Humanoid", "HM", "L", 108, 21, vec![200, 400, 100]),
+        ("ShadowHand", "SH", "R", 211, 20, vec![512, 512, 512, 256]),
+    ];
+    rows.into_iter()
+        .map(|(name, abbr, kind, obs, act, hidden)| {
+            let num_params = param_count(obs, act, &hidden);
+            (
+                abbr.to_string(),
+                BenchInfo {
+                    name: name.to_string(),
+                    abbr: abbr.to_string(),
+                    kind: kind.to_string(),
+                    obs_dim: obs,
+                    act_dim: act,
+                    hidden,
+                    num_params,
+                    num_env: 256,
+                    horizon: 16,
+                    files: BTreeMap::new(),
+                },
+            )
+        })
+        .collect()
+}
+
+/// All six paper benchmark abbreviations in Table 6 order.
+pub const PAPER_BENCHMARKS: [&str; 6] = ["AT", "AY", "BB", "FC", "HM", "SH"];
+
+/// Mirror of python `model.num_params` (separate actor + critic trunks,
+/// heads, log_std). Kept in sync by an integration test against the
+/// manifest.
+pub fn param_count(obs: usize, act: usize, hidden: &[usize]) -> usize {
+    let dims: Vec<usize> = std::iter::once(obs).chain(hidden.iter().copied()).collect();
+    let mut trunk = 0usize;
+    for w in dims.windows(2) {
+        trunk += w[0] * w[1] + w[1];
+    }
+    let last = *hidden.last().unwrap();
+    // actor trunk + actor head + critic trunk + critic head + log_std
+    trunk + (last * act + act) + trunk + (last + 1) + act
+}
+
+/// Where the artifacts live; honours `GMI_DRL_ARTIFACTS` for tests.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("GMI_DRL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper_table6() {
+        let reg = static_registry();
+        assert_eq!(reg.len(), 6);
+        assert_eq!(reg["AT"].obs_dim, 60);
+        assert_eq!(reg["AT"].act_dim, 8);
+        assert_eq!(reg["HM"].hidden, vec![200, 400, 100]);
+        assert_eq!(reg["SH"].hidden, vec![512, 512, 512, 256]);
+    }
+
+    #[test]
+    fn param_counts_match_paper_table7() {
+        // Paper Table 7: AT 1.1e5, HM 2.9e5, SH 1.5e6.
+        let reg = static_registry();
+        let at = reg["AT"].num_params as f64;
+        let hm = reg["HM"].num_params as f64;
+        let sh = reg["SH"].num_params as f64;
+        assert!((at - 1.1e5).abs() / 1.1e5 < 0.1, "AT {at}");
+        assert!((hm - 2.9e5).abs() / 2.9e5 < 0.05, "HM {hm}");
+        assert!((sh - 1.5e6).abs() / 1.5e6 < 0.05, "SH {sh}");
+    }
+
+    #[test]
+    fn fwd_flops_positive_and_ordered() {
+        let reg = static_registry();
+        assert!(reg["SH"].fwd_flops_per_env() > reg["AT"].fwd_flops_per_env());
+        assert!(reg["AT"].fwd_flops_per_env() > 0.0);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let text = "\
+version 1
+bench AT
+name Ant
+kind L
+obs_dim 60
+act_dim 8
+hidden 256,128,64
+num_params 114129
+num_env 256
+horizon 16
+file init init.hlo.txt
+file rollout rollout.hlo.txt
+end
+";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.version, 1);
+        let b = m.bench("AT").unwrap();
+        assert_eq!(b.hidden, vec![256, 128, 64]);
+        assert_eq!(b.files["rollout"], "rollout.hlo.txt");
+        assert!(m.bench("ZZ").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_rejects_garbage() {
+        assert!(Manifest::parse("bench AT\nbench AY\n").is_err());
+        assert!(Manifest::parse("bench AT\nbogus 1\nend\n").is_err());
+        assert!(Manifest::parse("bench AT\n").is_err());
+        assert!(Manifest::parse("end\n").is_err());
+    }
+}

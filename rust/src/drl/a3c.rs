@@ -1,0 +1,337 @@
+//! Asynchronized DRL training (A3C-style) with channel-based experience
+//! sharing — paper §4.2, Fig 6b, Fig 11, Table 8.
+//!
+//! Serving GMIs (decoupled GPUs) continuously collect experience; the
+//! dispenser/compressor/migrator/batcher pipeline moves it to trainer GMIs
+//! on the training GPUs; trainers update asynchronously and periodically
+//! push fresh parameters back to the agents.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::compute::Compute;
+use crate::channels::{
+    Batcher, ChannelStats, Compressor, Dispenser, Migrator, RolloutSegment, ShareMode,
+    TrainerEndpoint,
+};
+use crate::config::BenchInfo;
+use crate::mapping::Layout;
+use crate::metrics::{RunMetrics, UtilizationTracker};
+use crate::vtime::{Clock, CostModel, OpKind};
+
+#[derive(Debug, Clone)]
+pub struct AsyncConfig {
+    /// Rollout rounds per serving GMI.
+    pub rounds: usize,
+    pub seed: i32,
+    pub share_mode: ShareMode,
+    /// Training batch size in samples (the BT slicing/stacking knob).
+    pub batch_samples: usize,
+    /// Push fresh params back to agents every k trainer updates.
+    pub param_sync_every: usize,
+    pub lr: f32,
+    pub real_replicas: usize,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            rounds: 10,
+            seed: 1,
+            share_mode: ShareMode::MultiChannel,
+            batch_samples: 8192,
+            param_sync_every: 4,
+            lr: super::DEFAULT_LR,
+            real_replicas: 1,
+        }
+    }
+}
+
+/// Result: run metrics + channel traffic statistics.
+pub struct AsyncRunResult {
+    pub metrics: RunMetrics,
+    pub channel_stats: ChannelStats,
+    /// trainer updates performed.
+    pub updates: usize,
+}
+
+pub fn run_async(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    cfg: &AsyncConfig,
+) -> Result<AsyncRunResult> {
+    let agents = &layout.rollout_gmis;
+    let trainers = &layout.trainer_gmis;
+    anyhow::ensure!(!agents.is_empty() && !trainers.is_empty(), "async layout needs both");
+
+    let topo = layout.manager.topology().clone();
+    let endpoints: Vec<TrainerEndpoint> = trainers
+        .iter()
+        .map(|&g| TrainerEndpoint { gmi: g, gpu: layout.manager.gmi(g).unwrap().gpu })
+        .collect();
+    let mut migrator = Migrator::new(topo.clone(), endpoints);
+    for &a in agents {
+        migrator.register_agent(a, layout.manager.gmi(a).unwrap().gpu);
+    }
+    let mut dispensers: Vec<Dispenser> = agents
+        .iter()
+        .map(|&a| Dispenser::new(a, bench.obs_dim, bench.act_dim))
+        .collect();
+    // Per-channel transfer granularity: 256 KiB balances host-path
+    // efficiency (HOST_MSG_HALF_BYTES) against staging latency on the
+    // narrow channels.
+    let mut compressor = Compressor::new(cfg.share_mode, 256 << 10);
+    let mut batchers: BTreeMap<usize, Batcher> = trainers
+        .iter()
+        .map(|&t| (t, Batcher::new(t, cfg.share_mode, cfg.batch_samples)))
+        .collect();
+
+    // Real numerics on replica 0 only (agents mirror; trainers re-use the
+    // last real rollout for real gradient calls — same bytes the pipeline
+    // carries, see DESIGN.md §5).
+    let real_n = cfg.real_replicas.min(agents.len()).max(1);
+    let mut agent_workers = Vec::with_capacity(real_n);
+    for _ in 0..real_n {
+        agent_workers.push(compute.init(bench, cfg.seed)?);
+    }
+    let mut trainer_worker = compute.init(bench, cfg.seed)?;
+    let mut last_real_rollout = None;
+
+    let mut agent_clocks = vec![Clock::zero(); agents.len()];
+    let mut trainer_clocks: BTreeMap<usize, Clock> =
+        trainers.iter().map(|&t| (t, Clock::zero())).collect();
+    let mut util = UtilizationTracker::new();
+    let mut stats = ChannelStats::default();
+    let m = bench.horizon;
+    let mut updates = 0usize;
+    let mut samples_trained = 0usize;
+    let mut reward_sum = 0.0f64;
+    let mut reward_n = 0usize;
+    // (trainer batch queue handled inline: batches process on arrival.)
+
+    for round in 0..cfg.rounds {
+        for (i, &agid) in agents.iter().enumerate() {
+            let spec = layout.manager.gmi(agid).context("agent gmi")?;
+            let co = layout.manager.co_resident(agid);
+            let share = spec.sm_share;
+            let inter = spec.interference(co, cost);
+            let n_env = spec.num_env;
+
+            // rollout segment (sim + fwd per step)
+            let t_sim = cost.op_time(OpKind::SimStep { num_env: n_env }, share, inter);
+            let t_fwd = cost.op_time(OpKind::PolicyFwd { num_env: n_env }, share, inter);
+            let dur = m as f64 * (t_sim + t_fwd);
+            let now = agent_clocks[i].advance(dur);
+            util.record(
+                spec.gpu,
+                cost.sm_occupancy(OpKind::SimStep { num_env: n_env }, share),
+                m as f64 * t_sim,
+                now.seconds(),
+            );
+
+            // experience: real on replicas, synthetic otherwise. In Null
+            // mode everything is synthetic at the GMI's own env count (the
+            // artifact batch size is irrelevant without real numerics).
+            let seg = if compute.is_real() && i < real_n {
+                let ro = compute.rollout(
+                    bench,
+                    &mut agent_workers[i],
+                    cfg.seed + (round * 257 + i) as i32,
+                )?;
+                reward_sum += ro.mean_reward as f64;
+                reward_n += 1;
+                let seg = RolloutSegment {
+                    steps: bench.horizon,
+                    envs: bench.num_env,
+                    obs: ro.obs.as_f32()?.to_vec(),
+                    actions: ro.actions.as_f32()?.to_vec(),
+                    logps: ro.logps.as_f32()?.to_vec(),
+                    rewards: ro.rewards.as_f32()?.to_vec(),
+                    values: ro.values.as_f32()?.to_vec(),
+                    dones: ro.dones.as_f32()?.to_vec(),
+                };
+                last_real_rollout = Some(ro);
+                seg
+            } else {
+                RolloutSegment::synthetic(m, n_env, bench.obs_dim, bench.act_dim)
+            };
+
+            // DP -> CP -> MG -> BT. Chunks are grouped along the step axis
+            // at training-batch granularity; the migrator's sticky
+            // per-agent routing keeps all channels of an agent aligned at
+            // one trainer while agents balance across trainers.
+            let steps_per_group = (cfg.batch_samples / n_env.max(1)).max(1);
+            let groups =
+                dispensers[i].dispense_groups(&seg, now, cfg.share_mode, steps_per_group);
+            let mut packets = Vec::new();
+            for group in groups {
+                stats.chunks_in += group.len() as u64;
+                packets.extend(compressor.push(group));
+            }
+            for pkt in packets {
+                // The sender pays a per-message submission overhead on its
+                // own timeline (IPC rendezvous + serialization) — the cost
+                // that makes fine-grained UCC sharing slow on the agent
+                // side (§4.2 / Table 8's PPS gap).
+                agent_clocks[i].advance(crate::cluster::HOST_LAT);
+                let decision = migrator.route(&pkt);
+                stats.transfer_seconds += decision.transfer_s;
+                stats.transfer_ops += 1;
+                stats.packets_out += 1;
+                stats.bytes_moved += pkt.bytes() as u64;
+                let ready_batches = {
+                    let batcher = batchers.get_mut(&decision.trainer).unwrap();
+                    batcher.push(pkt, decision.arrival)
+                };
+
+                // trainer consumes ready batches immediately (async)
+                for batch in ready_batches {
+                    let tclock = trainer_clocks.get_mut(&decision.trainer).unwrap();
+                    let tspec = layout.manager.gmi(decision.trainer).unwrap();
+                    let tco = layout.manager.co_resident(decision.trainer);
+                    let tshare = tspec.sm_share;
+                    let tinter = tspec.interference(tco, cost);
+                    let t_grad =
+                        cost.op_time(OpKind::TrainGrad { samples: batch.samples }, tshare, tinter);
+                    let t_apply = cost.op_time(OpKind::AdamApply, tshare, tinter);
+                    tclock.merge_then_advance(batch.ready, t_grad + t_apply);
+                    util.record(
+                        tspec.gpu,
+                        cost.sm_occupancy(
+                            OpKind::TrainGrad { samples: batch.samples },
+                            tshare,
+                        ),
+                        t_grad,
+                        tclock.seconds(),
+                    );
+                    migrator.complete(decision.trainer, batch.samples);
+                    samples_trained += batch.samples;
+                    updates += 1;
+
+                    // real gradient + update on the trainer worker
+                    if compute.is_real() {
+                        if let Some(ro) = &last_real_rollout {
+                            let (g, _) = compute.grad(bench, &trainer_worker, ro)?;
+                            compute.apply(bench, &mut trainer_worker, &g, cfg.lr)?;
+                        }
+                    }
+
+                    // param push-back every k updates. A3C is asynchronous:
+                    // agents never BLOCK on the trainer (they keep acting
+                    // on stale parameters); they only pay the receive cost
+                    // of the pushed tensor on their own timeline.
+                    if updates % cfg.param_sync_every == 0 {
+                        let t_push = topo.host_transfer_time(bench.param_bytes(), 1)
+                            + bench.param_bytes() as f64 / topo.inter_gpu_bw();
+                        for c in agent_clocks.iter_mut() {
+                            c.advance(t_push);
+                        }
+                        for w in agent_workers.iter_mut() {
+                            w.params = trainer_worker.params.clone();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // flush stragglers through the pipeline (counted but not trained)
+    let leftover = compressor.flush();
+    for pkt in leftover {
+        stats.packets_out += 1;
+        stats.bytes_moved += pkt.bytes() as u64;
+    }
+
+    let agent_span = Clock::max_of(&agent_clocks).seconds();
+    let trainer_span = trainer_clocks
+        .values()
+        .fold(0.0f64, |a, c| a.max(c.seconds()));
+    let span = agent_span.max(trainer_span);
+    let total_preds =
+        (cfg.rounds * m) as f64 * agents.len() as f64 * layout.num_env_per_gmi as f64;
+    let metrics = RunMetrics {
+        steps_per_sec: total_preds / span,
+        pps: total_preds / agent_span,
+        ttop: samples_trained as f64 / span,
+        span_s: span,
+        utilization: util.mean_utilization(),
+        final_reward: if reward_n > 0 { reward_sum / reward_n as f64 } else { 0.0 },
+        reward_curve: vec![],
+        comm_s: stats.transfer_seconds,
+        peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
+    };
+    Ok(AsyncRunResult { metrics, channel_stats: stats, updates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::mapping::build_async_layout;
+
+    fn setup() -> (Layout, BenchInfo, CostModel) {
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let layout = build_async_layout(&topo, 1, 3, 2, 2048, &cost).unwrap();
+        (layout, b, cost)
+    }
+
+    #[test]
+    fn async_runs_and_trains() {
+        let (layout, b, cost) = setup();
+        let cfg = AsyncConfig { rounds: 12, batch_samples: 4096, ..Default::default() };
+        let r = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert!(r.metrics.pps > 0.0);
+        assert!(r.updates > 0, "no trainer updates happened");
+        assert!(r.metrics.ttop > 0.0);
+        assert!(r.channel_stats.packets_out > 0);
+    }
+
+    #[test]
+    fn mcc_fewer_bigger_packets_than_ucc() {
+        // Table 8's mechanism: multi-channel moves the same bytes in fewer,
+        // larger transfers.
+        // Long enough that steady-state transfer efficiency dominates the
+        // pipeline fill/drain tails.
+        let (layout, b, cost) = setup();
+        let mk = |mode| AsyncConfig {
+            rounds: 40,
+            batch_samples: 4096,
+            share_mode: mode,
+            ..Default::default()
+        };
+        let mcc =
+            run_async(&layout, &b, &cost, &Compute::Null, &mk(ShareMode::MultiChannel)).unwrap();
+        let ucc =
+            run_async(&layout, &b, &cost, &Compute::Null, &mk(ShareMode::UniChannel)).unwrap();
+        assert!(
+            mcc.channel_stats.packets_out < ucc.channel_stats.packets_out,
+            "mcc {} vs ucc {} packets",
+            mcc.channel_stats.packets_out,
+            ucc.channel_stats.packets_out
+        );
+        assert!(mcc.channel_stats.mean_packet_bytes() > ucc.channel_stats.mean_packet_bytes());
+        // and higher training throughput
+        assert!(
+            mcc.metrics.ttop >= ucc.metrics.ttop,
+            "mcc ttop {} vs ucc {}",
+            mcc.metrics.ttop,
+            ucc.metrics.ttop
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (layout, b, cost) = setup();
+        let cfg = AsyncConfig { rounds: 6, ..Default::default() };
+        let a = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let c = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert_eq!(a.metrics.pps, c.metrics.pps);
+        assert_eq!(a.updates, c.updates);
+    }
+}

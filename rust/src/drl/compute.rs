@@ -1,0 +1,267 @@
+//! The numerics backend for DRL roles.
+//!
+//! `Real` drives the AOT artifacts through the PJRT executor — genuine
+//! policy forward/backward, physics, Adam. `Null` fabricates deterministic
+//! pseudo-values with the same shapes so layout/throughput benches run
+//! fast and without artifacts (virtual-time results are identical; only
+//! the numerics differ — see DESIGN.md §5).
+
+use anyhow::Result;
+
+use crate::config::BenchInfo;
+use crate::runtime::{ArtifactKind, ExecHandle, HostTensor};
+
+/// Output of one rollout segment (shapes per the rollout artifact).
+#[derive(Debug, Clone)]
+pub struct RolloutOut {
+    pub obs: HostTensor,
+    pub actions: HostTensor,
+    pub logps: HostTensor,
+    pub rewards: HostTensor,
+    pub values: HostTensor,
+    pub dones: HostTensor,
+    pub last_state: HostTensor,
+    pub last_value: HostTensor,
+    pub mean_reward: f32,
+}
+
+/// Scalar statistics of one PPO gradient step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub mean_reward: f32,
+}
+
+/// Mutable per-worker learning state.
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_step: i32,
+    pub env_state: HostTensor,
+}
+
+/// The numerics backend.
+#[derive(Clone)]
+pub enum Compute {
+    Real { handle: ExecHandle },
+    Null,
+}
+
+impl Compute {
+    pub fn is_real(&self) -> bool {
+        matches!(self, Compute::Real { .. })
+    }
+
+    /// Initialize params + env state for one worker.
+    pub fn init(&self, b: &BenchInfo, seed: i32) -> Result<WorkerState> {
+        let p = b.num_params;
+        match self {
+            Compute::Real { handle } => {
+                let out = handle.execute(&b.abbr, ArtifactKind::Init, vec![
+                    HostTensor::scalar_i32(seed),
+                ])?;
+                Ok(WorkerState {
+                    params: out[0].clone().into_f32()?,
+                    adam_m: vec![0.0; p],
+                    adam_v: vec![0.0; p],
+                    adam_step: 0,
+                    env_state: out[1].clone(),
+                })
+            }
+            Compute::Null => Ok(WorkerState {
+                params: pseudo_vec(p, seed as u64, 0.01),
+                adam_m: vec![0.0; p],
+                adam_v: vec![0.0; p],
+                adam_step: 0,
+                env_state: HostTensor::zeros_f32(&[b.num_env, b.obs_dim]),
+            }),
+        }
+    }
+
+    /// One rollout segment of `b.horizon` steps over `b.num_env` envs.
+    pub fn rollout(&self, b: &BenchInfo, w: &mut WorkerState, seed: i32) -> Result<RolloutOut> {
+        match self {
+            Compute::Real { handle } => {
+                let out = handle.execute(&b.abbr, ArtifactKind::Rollout, vec![
+                    HostTensor::f32(w.params.clone(), &[b.num_params]),
+                    w.env_state.clone(),
+                    HostTensor::scalar_i32(seed),
+                ])?;
+                let mut it = out.into_iter();
+                let (obs, actions, logps, rewards, values, dones, last_state, last_value) = (
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                );
+                let r = rewards.as_f32()?;
+                let mean_reward = r.iter().sum::<f32>() / r.len().max(1) as f32;
+                w.env_state = last_state.clone();
+                Ok(RolloutOut {
+                    obs,
+                    actions,
+                    logps,
+                    rewards,
+                    values,
+                    dones,
+                    last_state,
+                    last_value,
+                    mean_reward,
+                })
+            }
+            Compute::Null => {
+                let (m, n, d, a) = (b.horizon, b.num_env, b.obs_dim, b.act_dim);
+                let mk = |shape: &[usize], scale: f32| {
+                    HostTensor::f32(
+                        pseudo_vec(shape.iter().product(), seed as u64 ^ 0x9e37, scale),
+                        shape,
+                    )
+                };
+                Ok(RolloutOut {
+                    obs: mk(&[m, n, d], 0.1),
+                    actions: mk(&[m, n, a], 0.2),
+                    logps: mk(&[m, n], -1.0),
+                    rewards: mk(&[m, n], 0.05),
+                    values: mk(&[m, n], 0.0),
+                    dones: HostTensor::zeros_f32(&[m, n]),
+                    last_state: mk(&[n, d], 0.1),
+                    last_value: mk(&[n], 0.0),
+                    mean_reward: 0.05 + 0.001 * (seed % 97) as f32,
+                })
+            }
+        }
+    }
+
+    /// PPO gradient over a rollout. Returns (flat gradient, stats).
+    pub fn grad(
+        &self,
+        b: &BenchInfo,
+        w: &WorkerState,
+        ro: &RolloutOut,
+    ) -> Result<(Vec<f32>, TrainStats)> {
+        match self {
+            Compute::Real { handle } => {
+                let out = handle.execute(&b.abbr, ArtifactKind::Grad, vec![
+                    HostTensor::f32(w.params.clone(), &[b.num_params]),
+                    ro.obs.clone(),
+                    ro.actions.clone(),
+                    ro.logps.clone(),
+                    ro.rewards.clone(),
+                    ro.values.clone(),
+                    ro.dones.clone(),
+                    ro.last_value.clone(),
+                ])?;
+                let grads = out[0].clone().into_f32()?;
+                let stats = TrainStats {
+                    loss: out[1].scalar_value_f32()?,
+                    pi_loss: out[2].scalar_value_f32()?,
+                    v_loss: out[3].scalar_value_f32()?,
+                    entropy: out[4].scalar_value_f32()?,
+                    approx_kl: out[5].scalar_value_f32()?,
+                    mean_reward: out[6].scalar_value_f32()?,
+                };
+                Ok((grads, stats))
+            }
+            Compute::Null => Ok((
+                pseudo_vec(b.num_params, 0xabcd, 1e-3),
+                TrainStats { loss: 1.0, mean_reward: ro.mean_reward, ..Default::default() },
+            )),
+        }
+    }
+
+    /// Adam update with an (allreduced) flat gradient.
+    pub fn apply(
+        &self,
+        b: &BenchInfo,
+        w: &mut WorkerState,
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        match self {
+            Compute::Real { handle } => {
+                let p = b.num_params;
+                let out = handle.execute(&b.abbr, ArtifactKind::Apply, vec![
+                    HostTensor::f32(std::mem::take(&mut w.params), &[p]),
+                    HostTensor::f32(std::mem::take(&mut w.adam_m), &[p]),
+                    HostTensor::f32(std::mem::take(&mut w.adam_v), &[p]),
+                    HostTensor::scalar_i32(w.adam_step),
+                    HostTensor::f32(grads.to_vec(), &[p]),
+                    HostTensor::scalar_f32(lr),
+                ])?;
+                let mut it = out.into_iter();
+                w.params = it.next().unwrap().into_f32()?;
+                w.adam_m = it.next().unwrap().into_f32()?;
+                w.adam_v = it.next().unwrap().into_f32()?;
+                w.adam_step = it.next().unwrap().scalar_value_i32()?;
+                Ok(())
+            }
+            Compute::Null => {
+                // SGD stand-in keeps params moving deterministically.
+                for (p, g) in w.params.iter_mut().zip(grads.iter()) {
+                    *p -= lr * g;
+                }
+                w.adam_step += 1;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Deterministic pseudo-random vector (SplitMix64) for Null mode.
+pub fn pseudo_vec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+    (0..n)
+        .map(|_| {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^= z >> 31;
+            // map to [-1, 1) then scale
+            ((z >> 11) as f32 / (1u64 << 52) as f32 - 1.0) * scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+
+    #[test]
+    fn null_compute_full_cycle() {
+        let b = static_registry()["AT"].clone();
+        let c = Compute::Null;
+        let mut w = c.init(&b, 7).unwrap();
+        assert_eq!(w.params.len(), b.num_params);
+        let ro = c.rollout(&b, &mut w, 1).unwrap();
+        assert_eq!(ro.obs.shape(), &[b.horizon as i64, b.num_env as i64, b.obs_dim as i64]);
+        let (g, stats) = c.grad(&b, &w, &ro).unwrap();
+        assert_eq!(g.len(), b.num_params);
+        assert!(stats.loss.is_finite());
+        let before = w.params.clone();
+        c.apply(&b, &mut w, &g, 3e-4).unwrap();
+        assert_ne!(before, w.params);
+        assert_eq!(w.adam_step, 1);
+    }
+
+    #[test]
+    fn pseudo_vec_deterministic_and_bounded() {
+        let a = pseudo_vec(100, 42, 0.5);
+        let b = pseudo_vec(100, 42, 0.5);
+        let c = pseudo_vec(100, 43, 0.5);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|v| v.abs() <= 0.5));
+    }
+}

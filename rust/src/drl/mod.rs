@@ -1,0 +1,29 @@
+//! DRL roles and training orchestrators (paper §3, §5).
+//!
+//! * [`compute`] — the numerics backend: `Real` executes the AOT HLO
+//!   artifacts via PJRT, `Null` produces deterministic synthetic values so
+//!   throughput benches can run without artifacts.
+//! * [`serving`] — DRL serving (experience collection only, Fig 7a).
+//! * [`sync`] — synchronized PPO training over a GMI layout (Fig 7b/c),
+//!   with layout-aware gradient reduction.
+//! * [`a3c`] — asynchronized training with channel-based experience
+//!   sharing (Fig 11 / Table 8).
+
+pub mod a3c;
+pub mod compute;
+pub mod serving;
+pub mod sync;
+
+pub use compute::{Compute, RolloutOut, TrainStats};
+
+/// PPO hyperparameters mirrored from python/compile/model.py (fixed into
+/// the artifacts; listed here for reporting only).
+pub const GAMMA: f64 = 0.99;
+pub const DEFAULT_LR: f32 = 3e-4;
+/// PPO optimization epochs per collected batch (Isaac Gym PPO default).
+/// The calibrated `T_t ~= T_s/3` (§5.1) is the whole per-iteration training
+/// phase across all epochs — the cost model's per-pass rate accounts for
+/// this (see vtime::cost GEMM_UTIL_TRAIN).
+pub const DEFAULT_PPO_EPOCHS: usize = 5;
+/// PPO minibatches per epoch: each triggers one gradient reduction.
+pub const DEFAULT_MINIBATCHES: usize = 4;

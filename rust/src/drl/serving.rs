@@ -1,0 +1,175 @@
+//! DRL serving: continuous experience collection (paper §5.1, Fig 7a).
+//!
+//! Every serving GMI loops environment-simulator + agent interaction. For
+//! TCG layouts the state/action handoff is intra-GMI (free); for TDG
+//! layouts each interaction round ships `2S + A + W` bytes across the GMI
+//! boundary (Table 4's COM term) — the cost that motivates co-location.
+
+use anyhow::{Context, Result};
+
+use super::compute::Compute;
+use crate::config::BenchInfo;
+use crate::gmi::Role;
+use crate::mapping::Layout;
+use crate::metrics::{RunMetrics, UtilizationTracker};
+use crate::vtime::{Clock, CostModel, OpKind};
+
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Interaction rounds (each = horizon env steps).
+    pub rounds: usize,
+    pub seed: i32,
+    pub real_replicas: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { rounds: 10, seed: 1, real_replicas: 1 }
+    }
+}
+
+pub fn run_serving(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    cfg: &ServingConfig,
+) -> Result<RunMetrics> {
+    let gmis = &layout.rollout_gmis;
+    anyhow::ensure!(!gmis.is_empty(), "no serving GMIs");
+
+    // TDG pairs: each simulator GMI has a dedicated agent GMI (the paper's
+    // rejected design); interactions bounce state/action across the host.
+    let dedicated = layout
+        .manager
+        .all()
+        .any(|g| matches!(g.role, Role::Simulator | Role::Agent));
+
+    let real_n = cfg.real_replicas.min(gmis.len()).max(1);
+    let mut workers = Vec::with_capacity(real_n);
+    for _ in 0..real_n {
+        workers.push(compute.init(bench, cfg.seed)?);
+    }
+
+    let mut clocks = vec![Clock::zero(); gmis.len()];
+    let mut util = UtilizationTracker::new();
+    let m = bench.horizon;
+    let topo = layout.manager.topology().clone();
+    let mut reward_sum = 0.0f64;
+    let mut reward_count = 0usize;
+
+    for round in 0..cfg.rounds {
+        for (i, &gid) in gmis.iter().enumerate() {
+            let spec = layout.manager.gmi(gid).context("gmi missing")?;
+            let co = layout.manager.co_resident(gid);
+            let share = match spec.backend {
+                crate::gmi::GmiBackend::DirectShare => 1.0 / (co + 1) as f64,
+                _ => spec.sm_share,
+            };
+            let inter = spec.interference(co, cost);
+            let n_env = spec.num_env;
+
+            let t_sim = cost.op_time(OpKind::SimStep { num_env: n_env }, share, inter);
+            // In TDG the agent runs on its own small GMI; model its forward
+            // at the agent GMI's share (alpha ~ 0.2 of the pair budget).
+            let t_fwd = if dedicated {
+                cost.op_time(OpKind::PolicyFwd { num_env: n_env }, (share * 0.25).max(0.02), inter)
+            } else {
+                cost.op_time(OpKind::PolicyFwd { num_env: n_env }, share, inter)
+            };
+            // TDG: per interaction step, 2S + A + W bytes cross the GMI
+            // boundary through the host (Table 4).
+            let t_comm = if dedicated {
+                let bytes = n_env * 4 * (2 * bench.obs_dim + bench.act_dim + 1);
+                topo.host_transfer_time(bytes, co.max(1))
+            } else {
+                0.0
+            };
+            let dur = m as f64 * (t_sim + t_fwd + t_comm);
+            let end = clocks[i].advance(dur).seconds();
+            util.record(
+                spec.gpu,
+                cost.sm_occupancy(OpKind::SimStep { num_env: n_env }, share),
+                m as f64 * t_sim,
+                end,
+            );
+            util.record(
+                spec.gpu,
+                cost.sm_occupancy(OpKind::PolicyFwd { num_env: n_env }, share),
+                m as f64 * t_fwd,
+                end,
+            );
+
+            if i < real_n {
+                let ro =
+                    compute.rollout(bench, &mut workers[i], cfg.seed + (round * 37 + i) as i32)?;
+                reward_sum += ro.mean_reward as f64;
+                reward_count += 1;
+            }
+        }
+    }
+
+    let span = Clock::max_of(&clocks).seconds();
+    let total_steps = (cfg.rounds * m) as f64
+        * gmis.len() as f64
+        * layout.num_env_per_gmi as f64;
+    Ok(RunMetrics {
+        steps_per_sec: total_steps / span,
+        pps: total_steps / span,
+        ttop: 0.0,
+        span_s: span,
+        utilization: util.mean_utilization(),
+        final_reward: if reward_count > 0 { reward_sum / reward_count as f64 } else { 0.0 },
+        reward_curve: vec![],
+        comm_s: 0.0,
+        peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::mapping::{build_serving_layout, MappingTemplate};
+
+    #[test]
+    fn tcg_serving_beats_tdg() {
+        // Table 4 / Eq 2: co-location ~2.5x over dedicated GMIs.
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(1);
+        let cfg = ServingConfig { rounds: 5, ..Default::default() };
+        let tcg =
+            build_serving_layout(&topo, MappingTemplate::TaskColocated, 3, 1024, &cost, None)
+                .unwrap();
+        let tdg =
+            build_serving_layout(&topo, MappingTemplate::TaskDedicated, 3, 1024, &cost, None)
+                .unwrap();
+        let r1 = run_serving(&tcg, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let r2 = run_serving(&tdg, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let gain = r1.steps_per_sec / r2.steps_per_sec;
+        assert!(gain > 1.5, "TCG/TDG serving gain {gain}");
+    }
+
+    #[test]
+    fn multi_gmi_serving_beats_single_process() {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(1);
+        let cfg = ServingConfig { rounds: 5, ..Default::default() };
+        // 3 GMIs x 1024 envs vs 1 exclusive x 3072 envs: same total envs.
+        let multi =
+            build_serving_layout(&topo, MappingTemplate::TaskColocated, 3, 1024, &cost, None)
+                .unwrap();
+        let single =
+            build_serving_layout(&topo, MappingTemplate::TaskColocated, 1, 3072, &cost, None)
+                .unwrap();
+        let rm = run_serving(&multi, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let rs = run_serving(&single, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let gain = rm.steps_per_sec / rs.steps_per_sec;
+        assert!(gain > 1.5 && gain < 3.5, "multiplexing gain {gain}");
+        // And utilization improves (Fig 1b -> fixed).
+        assert!(rm.utilization > rs.utilization);
+    }
+}

@@ -1,0 +1,390 @@
+//! Synchronized DRL training (PPO) over a GMI layout — the paper's main
+//! workload (Fig 6a, Fig 7b/c, Table 7).
+//!
+//! Each iteration: (i) experience collection (rollout) on every
+//! rollout-capable GMI, (ii) PPO gradient epochs with layout-aware gradient
+//! reduction across trainer GMIs, (iii) Adam update everywhere. For TDG_EX
+//! layouts the experience additionally crosses GMI boundaries (the cost the
+//! paper's TCG_EX avoids).
+
+use anyhow::{Context, Result};
+
+use super::compute::{Compute, WorkerState};
+use crate::comm::{LgrEngine, ReduceStrategy};
+use crate::config::BenchInfo;
+use crate::gmi::GmiBackend;
+use crate::mapping::Layout;
+use crate::metrics::{RewardTracker, RunMetrics, UtilizationTracker};
+use crate::vtime::{Clock, CostModel, OpKind};
+
+/// Sync-training run configuration.
+#[derive(Debug, Clone)]
+pub struct SyncConfig {
+    pub iterations: usize,
+    pub ppo_epochs: usize,
+    /// PPO minibatches per epoch: each is a separate gradient + LGR
+    /// reduction (Isaac PPO runs epochs x minibatches collective ops per
+    /// iteration — the traffic pattern Table 7 measures).
+    pub minibatches: usize,
+    pub lr: f32,
+    pub seed: i32,
+    /// How many GMIs execute *real* numerics; the rest mirror replica 0's
+    /// results (data-parallel replicas are statistically identical; the
+    /// virtual timing is charged for every GMI regardless).
+    pub real_replicas: usize,
+    /// Force a reduction strategy (None = Algorithm 1).
+    pub strategy_override: Option<ReduceStrategy>,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig {
+            iterations: 10,
+            ppo_epochs: super::DEFAULT_PPO_EPOCHS,
+            minibatches: super::DEFAULT_MINIBATCHES,
+            lr: super::DEFAULT_LR,
+            seed: 1,
+            real_replicas: 1,
+            strategy_override: None,
+        }
+    }
+}
+
+/// Result of a sync-training run.
+pub struct SyncRunResult {
+    pub metrics: RunMetrics,
+    pub strategy: ReduceStrategy,
+    /// Final parameters of GMI 0 (for checkpoint-style consumers).
+    pub final_params: Vec<f32>,
+    pub stats_per_iter: Vec<super::TrainStats>,
+}
+
+/// Effective SM share of a GMI for timing: Direct-Share processes all see
+/// the whole GPU but time-slice it.
+fn eff_share(backend: GmiBackend, sm_share: f64, co_resident: usize) -> f64 {
+    match backend {
+        GmiBackend::DirectShare => 1.0 / (co_resident + 1) as f64,
+        _ => sm_share,
+    }
+}
+
+pub fn run_sync(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    cfg: &SyncConfig,
+) -> Result<SyncRunResult> {
+    let n_roll = layout.rollout_gmis.len();
+    let n_train = layout.trainer_gmis.len();
+    anyhow::ensure!(n_roll > 0 && n_train > 0, "layout has no rollout/trainer GMIs");
+    let colocated = layout.rollout_gmis == layout.trainer_gmis;
+
+    // LGR engine over the trainer GMIs.
+    let mpl = layout.manager.mapping_list(|r| r.has_trainer());
+    let lgr = LgrEngine::new(layout.manager.topology().clone(), mpl)?;
+    let strategy = cfg.strategy_override.unwrap_or_else(|| lgr.strategy());
+
+    // Worker state per rollout GMI (params/adam/env); trainers in TDG_EX
+    // share the leader worker state of their GPU's serving GMIs.
+    let real_n = cfg.real_replicas.min(n_roll).max(1);
+    let mut workers: Vec<WorkerState> = Vec::with_capacity(n_roll);
+    for (i, _) in layout.rollout_gmis.iter().enumerate() {
+        if i < real_n {
+            workers.push(compute.init(bench, cfg.seed)?);
+        } else {
+            workers.push(workers[0].clone());
+        }
+    }
+
+    let mut clocks = vec![Clock::zero(); n_roll.max(n_train)];
+    let mut trainer_clocks = vec![Clock::zero(); n_train];
+    let mut util = UtilizationTracker::new();
+    let mut rewards = RewardTracker::default();
+    let mut stats_per_iter = Vec::new();
+    let mut comm_s = 0.0f64;
+    let mut peak_mem: f64 = 0.0;
+
+    let m = bench.horizon;
+    let exp_bytes_per_gmi =
+        layout.num_env_per_gmi * m * bench.experience_bytes_per_step();
+
+    for iter in 0..cfg.iterations {
+        // ---- (i) experience collection on every rollout GMI ----
+        let mut rollouts: Vec<super::RolloutOut> = Vec::with_capacity(n_roll);
+        for (i, &gid) in layout.rollout_gmis.iter().enumerate() {
+            let spec = layout.manager.gmi(gid).context("gmi missing")?;
+            let co = layout.manager.co_resident(gid);
+            let share = eff_share(spec.backend, spec.sm_share, co);
+            let inter = spec.interference(co, cost);
+            let n_env = spec.num_env;
+
+            let t_sim = cost.op_time(OpKind::SimStep { num_env: n_env }, share, inter);
+            let t_fwd = cost.op_time(OpKind::PolicyFwd { num_env: n_env }, share, inter);
+            let dur = m as f64 * (t_sim + t_fwd);
+            let end = clocks[i].advance(dur).seconds();
+            let occ_sim = cost.sm_occupancy(OpKind::SimStep { num_env: n_env }, share);
+            let occ_fwd = cost.sm_occupancy(OpKind::PolicyFwd { num_env: n_env }, share);
+            util.record(spec.gpu, occ_sim, m as f64 * t_sim, end);
+            util.record(spec.gpu, occ_fwd, m as f64 * t_fwd, end);
+            peak_mem = peak_mem.max(cost.mem_gib(n_env, m, true, colocated));
+
+            let ro = if i < real_n {
+                compute.rollout(bench, &mut workers[i], cfg.seed + (iter * 131 + i) as i32)?
+            } else {
+                // mirror replica 0's experience (identical distribution)
+                rollouts[0].clone()
+            };
+            rollouts.push(ro);
+        }
+
+        // TDG_EX: ship experience from serving GMIs to their GPU's trainer
+        // and later ship parameters back (the Table 5 COM term).
+        if !colocated {
+            let topo = layout.manager.topology();
+            for (t_idx, &tgid) in layout.trainer_gmis.iter().enumerate() {
+                let tspec = layout.manager.gmi(tgid).unwrap();
+                // serving GMIs on the same GPU feed this trainer.
+                let feeders: Vec<usize> = layout
+                    .rollout_gmis
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &g)| layout.manager.gmi(g).unwrap().gpu == tspec.gpu)
+                    .map(|(i, _)| i)
+                    .collect();
+                let k = feeders.len().max(1);
+                let t_move = topo.host_transfer_time(exp_bytes_per_gmi, k);
+                // trainer waits for the slowest feeder, then the transfer.
+                let feed_max =
+                    Clock::max_of(&feeders.iter().map(|&i| clocks[i]).collect::<Vec<_>>());
+                trainer_clocks[t_idx].merge_then_advance(feed_max, t_move * k as f64);
+                comm_s += t_move * k as f64;
+            }
+        } else {
+            trainer_clocks[..n_train].copy_from_slice(&clocks[..n_train]);
+        }
+
+        // ---- (ii) PPO epochs of minibatch updates ----
+        // Virtual time: every (epoch, minibatch) is a gradient over
+        // samples/minibatches plus one LGR reduction plus an Adam apply —
+        // the collective traffic pattern Table 7 measures. Real numerics:
+        // the grad artifact operates on the full batch, so the real
+        // gradient/reduction/update runs once per epoch (the minibatch
+        // partitioning changes traffic, not the per-epoch math).
+        let mut iter_stats = super::TrainStats::default();
+        let mb = cfg.minibatches.max(1);
+        let t_red = lgr.reduce_time(bench.param_bytes(), strategy)?;
+        for _epoch in 0..cfg.ppo_epochs {
+            // Real gradients, once per epoch. Only the real replicas are
+            // materialized; the reduced gradient is their mean with
+            // replica 0 weighted by the mirror count (mirrors hold exact
+            // copies of replica 0's gradient, so this equals the full
+            // n_train-way mean without n_train vector clones — §Perf L3
+            // iteration 2).
+            let mut real_grads: Vec<Vec<f32>> = Vec::with_capacity(real_n);
+            for widx in 0..real_n.min(n_train) {
+                let (g, st) = compute.grad(bench, &workers[widx], &rollouts[widx])?;
+                if widx == 0 {
+                    iter_stats = st;
+                }
+                real_grads.push(g);
+            }
+            let reduced = if real_grads.len() == 1 || n_train == 1 {
+                real_grads.swap_remove(0)
+            } else {
+                let k = real_grads.len();
+                let w0 = (n_train - k + 1) as f32;
+                let mut acc = real_grads.swap_remove(0);
+                for v in acc.iter_mut() {
+                    *v *= w0;
+                }
+                for g in &real_grads {
+                    for (a, v) in acc.iter_mut().zip(g.iter()) {
+                        *a += v;
+                    }
+                }
+                let inv = 1.0 / n_train as f32;
+                for v in acc.iter_mut() {
+                    *v *= inv;
+                }
+                acc
+            };
+
+            // virtual minibatch loop: grad -> reduce barrier -> apply
+            for _mb in 0..mb {
+                for (t_idx, &tgid) in layout.trainer_gmis.iter().enumerate() {
+                    let spec = layout.manager.gmi(tgid).unwrap();
+                    let co = layout.manager.co_resident(tgid);
+                    let share = eff_share(spec.backend, spec.sm_share, co);
+                    let inter = spec.interference(co, cost);
+                    let total_samples = if colocated {
+                        layout.num_env_per_gmi * m
+                    } else {
+                        layout.num_env_per_gmi * m * (n_roll / n_train).max(1)
+                    };
+                    let samples = (total_samples / mb).max(1);
+                    let t_grad = cost.op_time(OpKind::TrainGrad { samples }, share, inter);
+                    let t_apply = cost.op_time(OpKind::AdamApply, share, inter);
+                    let end = trainer_clocks[t_idx].advance(t_grad + t_apply).seconds();
+                    util.record(
+                        spec.gpu,
+                        cost.sm_occupancy(OpKind::TrainGrad { samples }, share),
+                        t_grad,
+                        end,
+                    );
+                    util.record(
+                        spec.gpu,
+                        cost.sm_occupancy(OpKind::AdamApply, share),
+                        t_apply,
+                        end,
+                    );
+                }
+                // LGR reduction barrier per minibatch
+                let barrier = Clock::max_of(&trainer_clocks);
+                for c in trainer_clocks.iter_mut() {
+                    c.merge_then_advance(barrier, t_red);
+                }
+                comm_s += t_red;
+            }
+
+            // real update, once per epoch
+            for w in workers.iter_mut().take(real_n) {
+                compute.apply(bench, w, &reduced, cfg.lr)?;
+            }
+            for i in real_n..n_roll {
+                workers[i] = workers[0].clone();
+            }
+        }
+
+        // TDG_EX: parameters flow back to the serving GMIs.
+        if !colocated {
+            let topo = layout.manager.topology();
+            let t_back = topo.host_transfer_time(bench.param_bytes(), n_roll / n_train.max(1));
+            let tmax = Clock::max_of(&trainer_clocks);
+            for c in clocks.iter_mut().take(n_roll) {
+                c.merge_then_advance(tmax, t_back);
+            }
+            comm_s += t_back;
+        } else {
+            clocks[..n_train].copy_from_slice(&trainer_clocks[..n_train]);
+        }
+
+        let mean_r = rollouts.iter().map(|r| r.mean_reward as f64).sum::<f64>()
+            / rollouts.len() as f64;
+        let now = Clock::max_of(&clocks).seconds();
+        rewards.push(now, mean_r);
+        stats_per_iter.push(iter_stats);
+    }
+
+    // ---- metrics ----
+    let span = Clock::max_of(&clocks)
+        .seconds()
+        .max(Clock::max_of(&trainer_clocks).seconds());
+    let total_env_steps = (cfg.iterations * m) as f64
+        * layout.rollout_gmis.len() as f64
+        * layout.num_env_per_gmi as f64;
+    let total_samples = total_env_steps * cfg.ppo_epochs as f64;
+    let metrics = RunMetrics {
+        steps_per_sec: total_env_steps / span,
+        pps: total_env_steps / span,
+        ttop: total_samples / span,
+        span_s: span,
+        utilization: util.mean_utilization(),
+        final_reward: rewards.final_reward(),
+        reward_curve: rewards.curve.clone(),
+        comm_s,
+        peak_mem_gib: peak_mem,
+    };
+    Ok(SyncRunResult {
+        metrics,
+        strategy,
+        final_params: workers.into_iter().next().map(|w| w.params).unwrap_or_default(),
+        stats_per_iter,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::mapping::{build_sync_layout, MappingTemplate};
+
+    fn setup(gpus: usize, t: usize) -> (Layout, BenchInfo, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(gpus);
+        let layout =
+            build_sync_layout(&topo, MappingTemplate::TaskColocated, t, 1024, &cost, None)
+                .unwrap();
+        (layout, b, cost)
+    }
+
+    #[test]
+    fn runs_and_reports() {
+        let (layout, b, cost) = setup(2, 2);
+        let r = run_sync(&layout, &b, &cost, &Compute::Null, &SyncConfig::default()).unwrap();
+        assert!(r.metrics.steps_per_sec > 0.0);
+        assert!(r.metrics.span_s > 0.0);
+        assert!(r.metrics.utilization > 0.0 && r.metrics.utilization <= 1.0);
+        assert_eq!(r.metrics.reward_curve.len(), 10);
+        // 2 GPUs x 2 GMIs -> MRR by Algorithm 1
+        assert_eq!(r.strategy, ReduceStrategy::MultiRing);
+    }
+
+    #[test]
+    fn algorithm1_drives_strategy() {
+        let (layout, b, cost) = setup(2, 3);
+        let r = run_sync(&layout, &b, &cost, &Compute::Null, &SyncConfig::default()).unwrap();
+        assert_eq!(r.strategy, ReduceStrategy::Hierarchical);
+    }
+
+    #[test]
+    fn har_beats_mpr_in_throughput() {
+        // Table 7's claim at the run level.
+        let (layout, b, cost) = setup(4, 4);
+        let mut cfg = SyncConfig { iterations: 5, ..Default::default() };
+        cfg.strategy_override = Some(ReduceStrategy::MultiProcess);
+        let mpr = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        cfg.strategy_override = Some(ReduceStrategy::Hierarchical);
+        let har = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert!(
+            har.metrics.steps_per_sec > mpr.metrics.steps_per_sec,
+            "HAR {} vs MPR {}",
+            har.metrics.steps_per_sec,
+            mpr.metrics.steps_per_sec
+        );
+    }
+
+    #[test]
+    fn tcg_ex_beats_tdg_ex() {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let cfg = SyncConfig { iterations: 5, ..Default::default() };
+        let tcg =
+            build_sync_layout(&topo, MappingTemplate::TaskColocated, 3, 1024, &cost, None)
+                .unwrap();
+        let tdg =
+            build_sync_layout(&topo, MappingTemplate::TaskDedicated, 3, 1024, &cost, None)
+                .unwrap();
+        let r_tcg = run_sync(&tcg, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let r_tdg = run_sync(&tdg, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert!(
+            r_tcg.metrics.steps_per_sec > r_tdg.metrics.steps_per_sec,
+            "TCG {} vs TDG {}",
+            r_tcg.metrics.steps_per_sec,
+            r_tdg.metrics.steps_per_sec
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (layout, b, cost) = setup(2, 2);
+        let cfg = SyncConfig { iterations: 3, ..Default::default() };
+        let a = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let c = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert_eq!(a.metrics.steps_per_sec, c.metrics.steps_per_sec);
+        assert_eq!(a.final_params, c.final_params);
+    }
+}

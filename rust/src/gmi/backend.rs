@@ -1,0 +1,156 @@
+//! GMI backends: MPS, MIG, Direct-Share — Table 1 of the paper.
+
+/// A MIG profile on A100 (paper Fig 3): `Ng.Mgb` = N of 7 usable compute
+/// slices, M GiB of memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigProfile {
+    pub name: &'static str,
+    pub compute_slices: usize,
+    pub mem_gib: f64,
+}
+
+/// The A100 MIG profile table. The 8th compute slice is reserved by the
+/// hardware (grey boxes in the paper's Fig 3), so shares are out of 7.
+pub const MIG_PROFILES: [MigProfile; 5] = [
+    MigProfile { name: "1g.5gb", compute_slices: 1, mem_gib: 5.0 },
+    MigProfile { name: "2g.10gb", compute_slices: 2, mem_gib: 10.0 },
+    MigProfile { name: "3g.20gb", compute_slices: 3, mem_gib: 20.0 },
+    MigProfile { name: "4g.20gb", compute_slices: 4, mem_gib: 20.0 },
+    MigProfile { name: "7g.40gb", compute_slices: 7, mem_gib: 40.0 },
+];
+
+impl MigProfile {
+    pub fn sm_share(&self) -> f64 {
+        self.compute_slices as f64 / 7.0
+    }
+
+    /// Smallest profile whose compute share covers `share`, if any.
+    pub fn covering(share: f64) -> Option<MigProfile> {
+        MIG_PROFILES.iter().copied().find(|p| p.sm_share() + 1e-9 >= share)
+    }
+}
+
+/// How a GMI is realized on the physical GPU (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GmiBackend {
+    /// CUDA Multi-Process Service: logical partition, SM % isolation, no
+    /// memory QoS, intra-GPU inter-process communication possible.
+    Mps,
+    /// Multi-Instance GPU: physical partition, full isolation, memory QoS,
+    /// NO communication between instances on the same GPU.
+    Mig,
+    /// No partitioning: processes time-share the whole GPU (Fig 8 baseline).
+    DirectShare,
+}
+
+impl GmiBackend {
+    /// Table 1, "Com." column: can two GMIs on the SAME GPU exchange data
+    /// without bouncing through the host?
+    pub fn intra_gpu_comm(&self) -> bool {
+        match self {
+            GmiBackend::Mps => true,
+            GmiBackend::Mig => false,
+            GmiBackend::DirectShare => true,
+        }
+    }
+
+    /// Does the backend guarantee memory QoS (Table 1)?
+    pub fn mem_qos(&self) -> bool {
+        matches!(self, GmiBackend::Mig)
+    }
+
+    /// Quantize a requested SM share to what the backend can provision.
+    /// MPS provisions by percentage (1% granularity), MIG snaps UP to the
+    /// covering profile, Direct-Share has no notion of shares at all (every
+    /// process sees the whole GPU and contends).
+    pub fn quantize_share(&self, requested: f64) -> f64 {
+        match self {
+            GmiBackend::Mps => (requested * 100.0).ceil() / 100.0,
+            GmiBackend::Mig => MigProfile::covering(requested)
+                .map(|p| p.sm_share())
+                .unwrap_or(1.0),
+            GmiBackend::DirectShare => requested,
+        }
+    }
+
+    /// Memory quota the backend enforces for a share-`s` GMI on a 40 GiB
+    /// GPU; `None` = no quota (MPS / Direct-Share can oversubscribe and
+    /// crash, which Alg 2's runnable check models).
+    pub fn mem_quota_gib(&self, share: f64) -> Option<f64> {
+        match self {
+            GmiBackend::Mig => MigProfile::covering(share).map(|p| p.mem_gib),
+            _ => None,
+        }
+    }
+
+    /// Compute-interference multiplier (>= 1) when `co_resident` *other*
+    /// GMIs share the GPU. `heaviness` in [0,1] is the workload's contention
+    /// pressure (CostModel). Calibrated to Fig 8: Direct-Share loses
+    /// 15-45%, MPS a few %, MIG nothing.
+    pub fn interference(&self, co_resident: usize, heaviness: f64) -> f64 {
+        if co_resident == 0 {
+            return 1.0;
+        }
+        let k = co_resident as f64;
+        match self {
+            GmiBackend::Mig => 1.0,
+            GmiBackend::Mps => 1.0 + 0.03 * heaviness * k.min(4.0),
+            GmiBackend::DirectShare => 1.0 + (0.12 + 0.18 * heaviness) * k,
+        }
+    }
+
+    /// The paper's backend-selection rule (§3): training needs inter-GMI
+    /// communication -> MPS; serving is computation-only -> MIG; pre-Ampere
+    /// GPUs (sm < 80) only have MPS.
+    pub fn auto_select(for_training: bool, sm_arch: u32) -> GmiBackend {
+        if sm_arch < 80 || for_training {
+            GmiBackend::Mps
+        } else {
+            GmiBackend::Mig
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mig_profiles_match_a100_table() {
+        assert_eq!(MIG_PROFILES.len(), 5);
+        let p = MigProfile::covering(2.0 / 8.0).unwrap();
+        assert_eq!(p.name, "2g.10gb");
+        assert_eq!(MigProfile::covering(1.0).unwrap().name, "7g.40gb");
+        assert_eq!(MigProfile::covering(0.1).unwrap().name, "1g.5gb");
+        assert!(MigProfile::covering(1.1).is_none());
+    }
+
+    #[test]
+    fn quantization() {
+        assert!((GmiBackend::Mps.quantize_share(0.333) - 0.34).abs() < 1e-9);
+        assert!((GmiBackend::Mig.quantize_share(0.25) - 2.0 / 7.0).abs() < 1e-9);
+        assert_eq!(GmiBackend::DirectShare.quantize_share(0.4), 0.4);
+    }
+
+    #[test]
+    fn comm_capability_table1() {
+        assert!(GmiBackend::Mps.intra_gpu_comm());
+        assert!(!GmiBackend::Mig.intra_gpu_comm());
+        assert!(GmiBackend::Mig.mem_qos());
+        assert!(!GmiBackend::Mps.mem_qos());
+    }
+
+    #[test]
+    fn auto_selection_rule() {
+        assert_eq!(GmiBackend::auto_select(true, 80), GmiBackend::Mps);
+        assert_eq!(GmiBackend::auto_select(false, 80), GmiBackend::Mig);
+        // V100: MPS regardless
+        assert_eq!(GmiBackend::auto_select(false, 70), GmiBackend::Mps);
+    }
+
+    #[test]
+    fn mig_mem_quota() {
+        assert_eq!(GmiBackend::Mig.mem_quota_gib(0.25), Some(10.0));
+        assert_eq!(GmiBackend::Mps.mem_quota_gib(0.25), None);
+    }
+}

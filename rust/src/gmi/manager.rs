@@ -1,0 +1,232 @@
+//! The global GMI manager (paper §3, Listing 1): registration, GPU
+//! attachment, communication groups, and resource validation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{GmiBackend, GmiId, GmiSpec, Role};
+use crate::cluster::Topology;
+
+/// A communication group of GMIs (the paper's `get_group`): the unit over
+/// which collectives (gradient reduction) run.
+#[derive(Debug, Clone, Default)]
+pub struct GmiGroup {
+    pub members: Vec<GmiId>,
+}
+
+/// The global registry every `DRL_role.__init__` registers with
+/// (`GMI_DRL.GMI_manager.add_GMI`).
+#[derive(Debug)]
+pub struct GmiManager {
+    topology: Topology,
+    gmis: BTreeMap<GmiId, GmiSpec>,
+    groups: BTreeMap<String, GmiGroup>,
+}
+
+impl GmiManager {
+    pub fn new(topology: Topology) -> Self {
+        GmiManager { topology, gmis: BTreeMap::new(), groups: BTreeMap::new() }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Register a GMI and attach it to its GPU (`set_GPU`). Validates the
+    /// placement: GPU exists, backend supported by the architecture, SM
+    /// shares on the GPU don't exceed capacity, MIG memory quota respected.
+    pub fn add_gmi(&mut self, spec: GmiSpec) -> Result<GmiId> {
+        if self.gmis.contains_key(&spec.id) {
+            bail!("GMI {} already registered", spec.id);
+        }
+        let Some(gpu) = self.topology.gpus.get(spec.gpu) else {
+            bail!("GMI {}: GPU {} not in topology", spec.id, spec.gpu);
+        };
+        if spec.backend == GmiBackend::Mig && !gpu.supports_mig() {
+            bail!("GMI {}: MIG unsupported on sm_{} GPU {}", spec.id, gpu.sm_arch, spec.gpu);
+        }
+        if spec.sm_share <= 0.0 || spec.sm_share > 1.0 {
+            bail!("GMI {}: invalid SM share {}", spec.id, spec.sm_share);
+        }
+        // Direct-Share doesn't partition, so shares don't sum-constrain.
+        if spec.backend != GmiBackend::DirectShare {
+            let used: f64 = self
+                .gmis
+                .values()
+                .filter(|g| g.gpu == spec.gpu)
+                .map(|g| g.sm_share)
+                .sum();
+            if used + spec.sm_share > 1.0 + 1e-9 {
+                bail!(
+                    "GMI {}: GPU {} SM oversubscribed ({:.2} + {:.2} > 1)",
+                    spec.id,
+                    spec.gpu,
+                    used,
+                    spec.sm_share
+                );
+            }
+        }
+        if let Some(quota) = spec.backend.mem_quota_gib(spec.sm_share) {
+            if spec.mem_gib > quota + 1e-9 {
+                bail!(
+                    "GMI {}: MIG profile allows {quota} GiB, asked {}",
+                    spec.id,
+                    spec.mem_gib
+                );
+            }
+        }
+        let mem_used: f64 = self
+            .gmis
+            .values()
+            .filter(|g| g.gpu == spec.gpu)
+            .map(|g| g.mem_gib)
+            .sum();
+        if mem_used + spec.mem_gib > gpu.mem_gib + 1e-9 {
+            bail!(
+                "GMI {}: GPU {} memory oversubscribed ({:.1} + {:.1} > {} GiB)",
+                spec.id,
+                spec.gpu,
+                mem_used,
+                spec.mem_gib,
+                gpu.mem_gib
+            );
+        }
+        let id = spec.id;
+        self.gmis.insert(id, spec);
+        Ok(id)
+    }
+
+    pub fn gmi(&self, id: GmiId) -> Option<&GmiSpec> {
+        self.gmis.get(&id)
+    }
+
+    pub fn all(&self) -> impl Iterator<Item = &GmiSpec> {
+        self.gmis.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.gmis.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gmis.is_empty()
+    }
+
+    /// GMIs co-resident on the same GPU as `id` (excluding itself).
+    pub fn co_resident(&self, id: GmiId) -> usize {
+        let Some(g) = self.gmis.get(&id) else { return 0 };
+        self.gmis.values().filter(|o| o.gpu == g.gpu && o.id != id).count()
+    }
+
+    /// The GMI-to-GPU mapping list `MPL` of Algorithm 1: one inner list of
+    /// GMI ids per GPU, only for GMIs matching `role_filter`.
+    pub fn mapping_list(&self, role_filter: impl Fn(Role) -> bool) -> Vec<Vec<GmiId>> {
+        let mut per_gpu: BTreeMap<usize, Vec<GmiId>> = BTreeMap::new();
+        for g in self.gmis.values() {
+            if role_filter(g.role) {
+                per_gpu.entry(g.gpu).or_default().push(g.id);
+            }
+        }
+        per_gpu.into_values().collect()
+    }
+
+    /// Create or extend a named communication group.
+    pub fn join_group(&mut self, name: &str, id: GmiId) -> Result<()> {
+        if !self.gmis.contains_key(&id) {
+            bail!("GMI {id} not registered");
+        }
+        let group = self.groups.entry(name.to_string()).or_default();
+        if !group.members.contains(&id) {
+            group.members.push(id);
+        }
+        Ok(())
+    }
+
+    pub fn group(&self, name: &str) -> Option<&GmiGroup> {
+        self.groups.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+
+    fn spec(id: GmiId, gpu: usize, share: f64, backend: GmiBackend) -> GmiSpec {
+        GmiSpec {
+            id,
+            gpu,
+            sm_share: share,
+            mem_gib: 5.0,
+            backend,
+            role: Role::Holistic,
+            num_env: 512,
+        }
+    }
+
+    #[test]
+    fn register_and_group() {
+        let mut m = GmiManager::new(Topology::dgx_a100(2));
+        m.add_gmi(spec(0, 0, 0.5, GmiBackend::Mps)).unwrap();
+        m.add_gmi(spec(1, 0, 0.5, GmiBackend::Mps)).unwrap();
+        m.add_gmi(spec(2, 1, 0.5, GmiBackend::Mps)).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.co_resident(0), 1);
+        assert_eq!(m.co_resident(2), 0);
+        m.join_group("trainers", 0).unwrap();
+        m.join_group("trainers", 2).unwrap();
+        m.join_group("trainers", 0).unwrap(); // idempotent
+        assert_eq!(m.group("trainers").unwrap().members, vec![0, 2]);
+        assert!(m.join_group("x", 99).is_err());
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 0.6, GmiBackend::Mps)).unwrap();
+        assert!(m.add_gmi(spec(1, 0, 0.6, GmiBackend::Mps)).is_err());
+        // Direct-Share is exempt from share sums.
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 1.0, GmiBackend::DirectShare)).unwrap();
+        m.add_gmi(spec(1, 0, 1.0, GmiBackend::DirectShare)).unwrap();
+    }
+
+    #[test]
+    fn rejects_duplicate_and_bad_gpu() {
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 0.3, GmiBackend::Mps)).unwrap();
+        assert!(m.add_gmi(spec(0, 0, 0.3, GmiBackend::Mps)).is_err());
+        assert!(m.add_gmi(spec(1, 5, 0.3, GmiBackend::Mps)).is_err());
+    }
+
+    #[test]
+    fn rejects_mig_on_v100() {
+        let mut m = GmiManager::new(Topology::v100_box(1));
+        assert!(m.add_gmi(spec(0, 0, 0.3, GmiBackend::Mig)).is_err());
+        m.add_gmi(spec(1, 0, 0.3, GmiBackend::Mps)).unwrap();
+    }
+
+    #[test]
+    fn mapping_list_shape() {
+        let mut m = GmiManager::new(Topology::dgx_a100(2));
+        for (i, gpu) in [(0, 0), (1, 0), (2, 1), (3, 1)] {
+            m.add_gmi(spec(i, gpu, 0.4, GmiBackend::Mps)).unwrap();
+        }
+        let mpl = m.mapping_list(|r| r.has_trainer());
+        assert_eq!(mpl, vec![vec![0, 1], vec![2, 3]]);
+        let none = m.mapping_list(|r| matches!(r, Role::Agent));
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn rejects_memory_oversubscription() {
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        let mut s = spec(0, 0, 0.5, GmiBackend::Mps);
+        s.mem_gib = 30.0;
+        m.add_gmi(s).unwrap();
+        let mut s2 = spec(1, 0, 0.4, GmiBackend::Mps);
+        s2.mem_gib = 15.0;
+        assert!(m.add_gmi(s2).is_err());
+    }
+}

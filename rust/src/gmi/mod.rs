@@ -1,0 +1,113 @@
+//! The GPU Multiplexing Instance (GMI) abstraction — the paper's §3.
+//!
+//! A GMI is a resource-adjustable sub-GPU: a slice of one physical GPU's
+//! SMs and memory, realized by one of three backends:
+//!
+//! * **MPS** — logical partition by SM percentage; no memory QoS, weak SM
+//!   isolation (interference under load), but inter-GMI communication is
+//!   possible (the paper picks MPS for *training*).
+//! * **MIG** — physical partition following the A100 profile table
+//!   (1g.5gb … 7g.40gb, one slice reserved); full isolation, memory QoS,
+//!   but **no** inter-instance communication on the same GPU (picked for
+//!   *serving*).
+//! * **DirectShare** — plain process co-scheduling with no partitioning at
+//!   all; the Fig 8 baseline.
+
+mod backend;
+mod manager;
+pub mod scheduler;
+
+pub use backend::{GmiBackend, MigProfile, MIG_PROFILES};
+pub use manager::{GmiGroup, GmiManager};
+pub use scheduler::{pack_jobs, Job, Placement, Schedule};
+
+use crate::vtime::CostModel;
+
+/// Globally unique GMI identifier (the paper's `GMI_id`).
+pub type GmiId = usize;
+
+/// The DRL role(s) hosted by a GMI (paper §3: `DRL_role`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// Environment simulator + agent co-located (serving block, TCG).
+    SimAgent,
+    /// Dedicated trainer (TDG_EX / async training GMIs).
+    Trainer,
+    /// Simulator + agent + trainer (holistic training GMI, TCG_EX).
+    Holistic,
+    /// Dedicated simulator (TDG exploration only; the paper rejects this).
+    Simulator,
+    /// Dedicated agent (TDG exploration only).
+    Agent,
+}
+
+impl Role {
+    pub fn has_sim(&self) -> bool {
+        matches!(self, Role::SimAgent | Role::Holistic | Role::Simulator)
+    }
+
+    pub fn has_agent(&self) -> bool {
+        matches!(self, Role::SimAgent | Role::Holistic | Role::Agent)
+    }
+
+    pub fn has_trainer(&self) -> bool {
+        matches!(self, Role::Trainer | Role::Holistic)
+    }
+}
+
+/// Static description of one GMI: where it lives and what it gets.
+#[derive(Debug, Clone)]
+pub struct GmiSpec {
+    pub id: GmiId,
+    pub gpu: usize,
+    /// SM share in (0, 1]; for MIG this is quantized to a profile.
+    pub sm_share: f64,
+    /// Memory budget in GiB.
+    pub mem_gib: f64,
+    pub backend: GmiBackend,
+    pub role: Role,
+    /// Environments simulated by this GMI (0 for pure trainers).
+    pub num_env: usize,
+}
+
+impl GmiSpec {
+    /// Interference multiplier (>= 1) applied to compute on this GMI when
+    /// `co_resident` other GMIs share the GPU. Backend isolation quality is
+    /// the Fig 8 mechanism: MIG (hardware) < MPS (logical) < DirectShare.
+    pub fn interference(&self, co_resident: usize, cost: &CostModel) -> f64 {
+        self.backend.interference(co_resident, cost.heaviness)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+
+    #[test]
+    fn role_capabilities() {
+        assert!(Role::SimAgent.has_sim() && Role::SimAgent.has_agent());
+        assert!(!Role::SimAgent.has_trainer());
+        assert!(Role::Holistic.has_sim() && Role::Holistic.has_trainer());
+        assert!(Role::Trainer.has_trainer() && !Role::Trainer.has_sim());
+    }
+
+    #[test]
+    fn interference_ordering_matches_fig8() {
+        let cost = CostModel::new(&static_registry()["HM"]);
+        let spec = |backend| GmiSpec {
+            id: 0,
+            gpu: 0,
+            sm_share: 0.5,
+            mem_gib: 20.0,
+            backend,
+            role: Role::SimAgent,
+            num_env: 1024,
+        };
+        let mig = spec(GmiBackend::Mig).interference(1, &cost);
+        let mps = spec(GmiBackend::Mps).interference(1, &cost);
+        let ds = spec(GmiBackend::DirectShare).interference(1, &cost);
+        assert!(mig <= mps && mps < ds, "mig {mig} mps {mps} ds {ds}");
+        assert_eq!(spec(GmiBackend::Mig).interference(0, &cost), 1.0);
+    }
+}

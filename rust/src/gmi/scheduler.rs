@@ -1,0 +1,189 @@
+//! GMI-aware cluster scheduling (paper §8, "For cluster scheduling"):
+//! condensing fragmented GPU jobs into fewer GPUs via spatial multiplexing.
+//!
+//! Existing schedulers (Gandiva/AntMan-style) place one job per GPU even
+//! when jobs underutilize it. With GMIs, a job's profiled (SM, memory)
+//! demand becomes a packing item; best-fit-decreasing packing recycles the
+//! spare capacity and frees whole GPUs for jobs with GPU-affinity demands.
+
+use anyhow::{bail, Result};
+
+use super::GmiBackend;
+use crate::cluster::Topology;
+
+/// One GPU job with its profiled resource demand (fractions of one GPU).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    /// SM demand in (0, 1] — e.g. from Algorithm 2's saturation profile.
+    pub sm_demand: f64,
+    /// Memory demand in GiB.
+    pub mem_gib: f64,
+}
+
+/// Placement of one job as a GMI on a GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub job: usize,
+    pub gpu: usize,
+    /// Provisioned SM share after backend quantization.
+    pub sm_share: f64,
+}
+
+/// Result of a scheduling round.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub placements: Vec<Placement>,
+    pub gpus_used: usize,
+    /// Mean provisioned SM share across used GPUs (packing quality).
+    pub mean_gpu_load: f64,
+}
+
+/// Pack jobs onto the topology with best-fit-decreasing on SM demand.
+/// `backend` controls share quantization (MIG snaps to profiles).
+pub fn pack_jobs(topo: &Topology, jobs: &[Job], backend: GmiBackend) -> Result<Schedule> {
+    let n_gpus = topo.num_gpus();
+    let mut order: Vec<&Job> = jobs.iter().collect();
+    order.sort_by(|a, b| b.sm_demand.partial_cmp(&a.sm_demand).unwrap());
+
+    let mut sm_left = vec![1.0f64; n_gpus];
+    let mut mem_left: Vec<f64> = topo.gpus.iter().map(|g| g.mem_gib).collect();
+    let mut placements = Vec::with_capacity(jobs.len());
+
+    for job in order {
+        if job.sm_demand <= 0.0 || job.sm_demand > 1.0 {
+            bail!("job {}: invalid SM demand {}", job.id, job.sm_demand);
+        }
+        let share = backend.quantize_share(job.sm_demand).min(1.0);
+        let mem = backend
+            .mem_quota_gib(share)
+            .map(|q| q.max(job.mem_gib))
+            .unwrap_or(job.mem_gib);
+        // Best fit: the used GPU with the least leftover that still fits;
+        // fall back to a fresh GPU.
+        let mut best: Option<(usize, f64)> = None;
+        for gpu in 0..n_gpus {
+            if sm_left[gpu] + 1e-9 >= share && mem_left[gpu] + 1e-9 >= mem {
+                let leftover = sm_left[gpu] - share;
+                if best.map(|(_, l)| leftover < l).unwrap_or(true) {
+                    best = Some((gpu, leftover));
+                }
+            }
+        }
+        let Some((gpu, _)) = best else {
+            bail!("job {} ({}x SM, {} GiB) does not fit the cluster", job.id, share, mem);
+        };
+        sm_left[gpu] -= share;
+        mem_left[gpu] -= mem;
+        placements.push(Placement { job: job.id, gpu, sm_share: share });
+    }
+
+    let gpus_used = {
+        let mut used: Vec<usize> = placements.iter().map(|p| p.gpu).collect();
+        used.sort_unstable();
+        used.dedup();
+        used.len()
+    };
+    let mean_gpu_load = if gpus_used == 0 {
+        0.0
+    } else {
+        placements.iter().map(|p| p.sm_share).sum::<f64>() / gpus_used as f64
+    };
+    Ok(Schedule { placements, gpus_used, mean_gpu_load })
+}
+
+/// The incumbent baseline: one exclusive GPU per job.
+pub fn one_job_per_gpu(topo: &Topology, jobs: &[Job]) -> Result<Schedule> {
+    if jobs.len() > topo.num_gpus() {
+        bail!("{} jobs need {} exclusive GPUs, have {}", jobs.len(), jobs.len(), topo.num_gpus());
+    }
+    let placements: Vec<Placement> = jobs
+        .iter()
+        .enumerate()
+        .map(|(gpu, j)| Placement { job: j.id, gpu, sm_share: 1.0 })
+        .collect();
+    Ok(Schedule {
+        gpus_used: placements.len(),
+        mean_gpu_load: jobs.iter().map(|j| j.sm_demand).sum::<f64>() / jobs.len().max(1) as f64,
+        placements,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs(demands: &[(f64, f64)]) -> Vec<Job> {
+        demands
+            .iter()
+            .enumerate()
+            .map(|(id, &(sm, mem))| Job { id, sm_demand: sm, mem_gib: mem })
+            .collect()
+    }
+
+    #[test]
+    fn condenses_fragmented_jobs() {
+        // Six 30%-jobs: baseline burns 6 GPUs; GMI packing needs 2.
+        let topo = Topology::dgx_a100(8);
+        let js = jobs(&[(0.3, 8.0); 6]);
+        let base = one_job_per_gpu(&topo, &js).unwrap();
+        let packed = pack_jobs(&topo, &js, GmiBackend::Mps).unwrap();
+        assert_eq!(base.gpus_used, 6);
+        assert!(packed.gpus_used <= 2, "packed onto {} GPUs", packed.gpus_used);
+        assert!(packed.mean_gpu_load > base.mean_gpu_load);
+    }
+
+    #[test]
+    fn respects_memory_limits() {
+        // SM would fit 4 per GPU, but memory only 2 (18 GiB each on 40).
+        let topo = Topology::dgx_a100(8);
+        let js = jobs(&[(0.2, 18.0); 4]);
+        let s = pack_jobs(&topo, &js, GmiBackend::Mps).unwrap();
+        assert_eq!(s.gpus_used, 2);
+        for gpu in 0..2 {
+            let mem: f64 = s
+                .placements
+                .iter()
+                .filter(|p| p.gpu == gpu)
+                .map(|_| 18.0)
+                .sum();
+            assert!(mem <= 40.0);
+        }
+    }
+
+    #[test]
+    fn mig_quantization_changes_packing() {
+        // 0.3 SM snaps to 3/7 under MIG -> only 2 fit per GPU (6/7).
+        let topo = Topology::dgx_a100(8);
+        let js = jobs(&[(0.3, 4.0); 6]);
+        let mps = pack_jobs(&topo, &js, GmiBackend::Mps).unwrap();
+        let mig = pack_jobs(&topo, &js, GmiBackend::Mig).unwrap();
+        assert!(mig.gpus_used >= mps.gpus_used);
+        assert!(mig.placements.iter().all(|p| (p.sm_share - 3.0 / 7.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn rejects_unsatisfiable() {
+        let topo = Topology::dgx_a100(1);
+        // 2 full-GPU jobs on 1 GPU
+        assert!(pack_jobs(&topo, &jobs(&[(1.0, 10.0), (1.0, 10.0)]), GmiBackend::Mps).is_err());
+        // baseline can't host 3 jobs on 2 GPUs
+        let topo2 = Topology::dgx_a100(2);
+        assert!(one_job_per_gpu(&topo2, &jobs(&[(0.1, 1.0); 3])).is_err());
+        // invalid demand
+        assert!(pack_jobs(&topo, &jobs(&[(1.5, 1.0)]), GmiBackend::Mps).is_err());
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_gpu() {
+        let topo = Topology::dgx_a100(3);
+        // Seed: 0.7 on gpu A, 0.5 on gpu B (descending order packs these
+        // first onto separate GPUs), then a 0.3 job must choose the 0.7 GPU
+        // (leftover 0.0) over the 0.5 GPU (leftover 0.2).
+        let js = jobs(&[(0.7, 4.0), (0.5, 4.0), (0.3, 4.0)]);
+        let s = pack_jobs(&topo, &js, GmiBackend::Mps).unwrap();
+        let p07 = s.placements.iter().find(|p| p.job == 0).unwrap().gpu;
+        let p03 = s.placements.iter().find(|p| p.job == 2).unwrap().gpu;
+        assert_eq!(p07, p03, "0.3 job should co-locate with the 0.7 job");
+    }
+}

@@ -1,0 +1,34 @@
+//! # GMI-DRL
+//!
+//! Reproduction of *"GMI-DRL: Empowering Multi-GPU Deep Reinforcement
+//! Learning with GPU Spatial Multiplexing"* (Wang et al., 2022) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the GMI abstraction
+//! (resource-adjustable sub-GPU instances backed by simulated MPS / MIG
+//! partitions), the specialized inter-GMI communication layer (layout-aware
+//! gradient reduction, channel-based experience sharing), the adaptive GMI
+//! management strategy (task-aware mapping + workload-aware selection), and
+//! the DRL orchestrators (serving, sync PPO, async A3C) plus the Isaac-Gym
+//! style baselines the paper evaluates against.
+//!
+//! Real numerics (policy forward/backward, environment physics, Adam) run
+//! through AOT-lowered HLO artifacts executed on the PJRT CPU client
+//! ([`runtime`]); GPU *timing* is accounted by the calibrated virtual
+//! timeline ([`vtime`]) per DESIGN.md §5.
+
+pub mod baselines;
+pub mod channels;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod drl;
+pub mod gmi;
+pub mod mapping;
+pub mod metrics;
+pub mod runtime;
+pub mod selection;
+pub mod vtime;
+
+pub use config::{BenchInfo, Manifest};
+pub use runtime::{ArtifactKind, ExecHandle, HostTensor};

@@ -1,0 +1,373 @@
+//! GMI-DRL launcher: the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         show manifest + benchmark registry
+//!   serve       [opts]           DRL serving on a GMI layout
+//!   train-sync  [opts]           synchronized PPO training (LGR)
+//!   train-async [opts]           asynchronized A3C training (channels)
+//!   search      [opts]           Algorithm 2 configuration search
+//!
+//! Common options:
+//!   --bench AT --gpus 4 --gmi-per-gpu 3 --num-env 1024 --rounds 20
+//!   --real                       execute real numerics via PJRT artifacts
+//!   --template tcg|tdg           mapping template (default tcg)
+//!   --strategy mpr|mrr|har       force a reduction strategy
+//!   --backend mps|mig|direct     force a GMI backend
+//!   --mode ucc|mcc               experience sharing mode (async)
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use gmi_drl::baselines;
+use gmi_drl::cluster::Topology;
+use gmi_drl::comm::ReduceStrategy;
+use gmi_drl::config::{artifacts_dir, static_registry, Manifest};
+use gmi_drl::channels::ShareMode;
+use gmi_drl::drl::a3c::{run_async, AsyncConfig};
+use gmi_drl::drl::serving::{run_serving, ServingConfig};
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::gmi::GmiBackend;
+use gmi_drl::mapping::{
+    build_async_layout, build_serving_layout, build_sync_layout, MappingTemplate,
+};
+use gmi_drl::metrics::{fmt_rate, Table};
+use gmi_drl::runtime::ExecServer;
+use gmi_drl::selection;
+use gmi_drl::vtime::CostModel;
+
+/// Minimal `--key value` / `--flag` parser (offline build: no clap).
+struct Args {
+    cmd: String,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a}");
+            };
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(name.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(name.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, kv, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.kv.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+fn bench_info(abbr: &str, real: bool) -> Result<gmi_drl::BenchInfo> {
+    if real {
+        let m = Manifest::load(&artifacts_dir())?;
+        Ok(m.bench(abbr)?.clone())
+    } else {
+        static_registry()
+            .get(abbr)
+            .cloned()
+            .with_context(|| format!("unknown benchmark {abbr}"))
+    }
+}
+
+fn compute(real: bool) -> Result<(Compute, Option<ExecServer>)> {
+    if real {
+        let server = ExecServer::start(artifacts_dir())?;
+        Ok((Compute::Real { handle: server.handle() }, Some(server)))
+    } else {
+        Ok((Compute::Null, None))
+    }
+}
+
+fn parse_strategy(s: &str) -> Result<Option<ReduceStrategy>> {
+    Ok(match s {
+        "" | "auto" => None,
+        "mpr" => Some(ReduceStrategy::MultiProcess),
+        "mrr" => Some(ReduceStrategy::MultiRing),
+        "har" => Some(ReduceStrategy::Hierarchical),
+        other => bail!("unknown strategy {other}"),
+    })
+}
+
+fn parse_backend(s: &str) -> Result<Option<GmiBackend>> {
+    Ok(match s {
+        "" | "auto" => None,
+        "mps" => Some(GmiBackend::Mps),
+        "mig" => Some(GmiBackend::Mig),
+        "direct" => Some(GmiBackend::DirectShare),
+        other => bail!("unknown backend {other}"),
+    })
+}
+
+fn parse_template(s: &str) -> Result<MappingTemplate> {
+    Ok(match s {
+        "" | "tcg" => MappingTemplate::TaskColocated,
+        "tdg" => MappingTemplate::TaskDedicated,
+        other => bail!("unknown template {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(),
+        "serve" => cmd_serve(&args),
+        "train-sync" => cmd_train_sync(&args),
+        "train-async" => cmd_train_async(&args),
+        "search" => cmd_search(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other}; try `gmi-drl help`"),
+    }
+}
+
+const HELP: &str = "\
+gmi-drl — GPU spatial multiplexing for multi-GPU DRL (paper reproduction)
+
+USAGE: gmi-drl <COMMAND> [--key value] [--flag]
+
+COMMANDS:
+  info         show the artifact manifest and benchmark registry
+  serve        DRL serving (experience collection)
+  train-sync   synchronized PPO training with layout-aware gradient reduction
+  train-async  asynchronized A3C training with channel-based experience sharing
+  search       workload-aware GMI selection (Algorithm 2)
+
+COMMON OPTIONS:
+  --bench AT|AY|BB|FC|HM|SH   benchmark (default AT)
+  --gpus N                    GPUs of the DGX-A100 to use (default 4)
+  --gmi-per-gpu K             GMIs per GPU (default: from Algorithm 2)
+  --num-env N                 environments per GMI (default: from Algorithm 2)
+  --rounds / --iters N        run length (default 20)
+  --real                      real numerics via PJRT (needs `make artifacts`)
+  --template tcg|tdg          mapping template
+  --strategy mpr|mrr|har      force a gradient-reduction strategy
+  --backend mps|mig|direct    force a GMI backend
+  --mode mcc|ucc              async experience sharing mode
+";
+
+fn cmd_info() -> Result<()> {
+    let mut t = Table::new(&["Abbr", "Benchmark", "Type", "#Dim", "Policy NN", "Params"]);
+    for (abbr, b) in static_registry() {
+        let nn = std::iter::once(b.obs_dim.to_string())
+            .chain(b.hidden.iter().map(|h| h.to_string()))
+            .chain(std::iter::once(b.act_dim.to_string()))
+            .collect::<Vec<_>>()
+            .join(":");
+        t.row(vec![
+            abbr,
+            b.name.clone(),
+            b.kind.clone(),
+            b.obs_dim.to_string(),
+            nn,
+            fmt_rate(b.num_params as f64),
+        ]);
+    }
+    t.print();
+    match Manifest::load(&artifacts_dir()) {
+        Ok(m) => println!(
+            "\nartifacts: {} benchmarks lowered at {}",
+            m.benchmarks.len(),
+            artifacts_dir().display()
+        ),
+        Err(_) => println!("\nartifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn select_config(
+    args: &Args,
+    bench: &gmi_drl::BenchInfo,
+    cost: &CostModel,
+    gpus: usize,
+) -> Result<(usize, usize)> {
+    let mut gmi_per_gpu: usize = args.get("gmi-per-gpu", 0)?;
+    let mut num_env: usize = args.get("num-env", 0)?;
+    if gmi_per_gpu == 0 || num_env == 0 {
+        let (sel, _) = selection::explore(bench, cost, GmiBackend::Mps, gpus, bench.horizon);
+        let sel = sel.context("Algorithm 2 found no runnable configuration")?;
+        if gmi_per_gpu == 0 {
+            gmi_per_gpu = sel.gmi_per_gpu;
+        }
+        if num_env == 0 {
+            num_env = sel.num_env;
+        }
+        println!("[Algorithm 2] GMIperGPU={gmi_per_gpu} num_env={num_env}");
+    }
+    Ok((gmi_per_gpu, num_env))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let real = args.flag("real");
+    let bench = bench_info(&args.str("bench", "AT"), real)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 4)?;
+    let topo = Topology::dgx_a100(gpus);
+    let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
+    let template = parse_template(&args.str("template", "tcg"))?;
+    let backend = parse_backend(&args.str("backend", "auto"))?;
+    let rounds: usize = args.get("rounds", 20)?;
+
+    let layout = build_serving_layout(&topo, template, gmi_per_gpu, num_env, &cost, backend)?;
+    let (comp, _server) = compute(real)?;
+    let m = run_serving(&layout, &bench, &cost, &comp, &ServingConfig {
+        rounds,
+        seed: args.get("seed", 1)?,
+        real_replicas: if real { 1 } else { 0 },
+    })?;
+    m.print_summary(&format!(
+        "serve {} {}x{} GMIs ({})",
+        bench.abbr, gpus, gmi_per_gpu, layout.backend_name()
+    ));
+    // baseline comparison
+    let base = baselines::isaac_serving(&topo, &bench, &cost, &comp, num_env * gmi_per_gpu, rounds)?;
+    base.print_summary("baseline (Isaac Gym, 1 proc/GPU)");
+    println!("speedup: {:.2}x", m.steps_per_sec / base.steps_per_sec);
+    Ok(())
+}
+
+fn cmd_train_sync(args: &Args) -> Result<()> {
+    let real = args.flag("real");
+    let bench = bench_info(&args.str("bench", "AT"), real)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 4)?;
+    let topo = Topology::dgx_a100(gpus);
+    let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
+    let template = parse_template(&args.str("template", "tcg"))?;
+    let backend = parse_backend(&args.str("backend", "auto"))?;
+    let cfg = SyncConfig {
+        iterations: args.get("iters", 20)?,
+        ppo_epochs: args.get("ppo-epochs", gmi_drl::drl::DEFAULT_PPO_EPOCHS)?,
+        minibatches: args.get("minibatches", gmi_drl::drl::DEFAULT_MINIBATCHES)?,
+        lr: args.get("lr", 3e-4)?,
+        seed: args.get("seed", 1)?,
+        real_replicas: if real { 1 } else { 0 },
+        strategy_override: parse_strategy(&args.str("strategy", "auto"))?,
+    };
+
+    let layout = build_sync_layout(&topo, template, gmi_per_gpu, num_env, &cost, backend)?;
+    let (comp, _server) = compute(real)?;
+    let r = run_sync(&layout, &bench, &cost, &comp, &cfg)?;
+    r.metrics.print_summary(&format!(
+        "train-sync {} {}x{} GMIs [{}]",
+        bench.abbr, gpus, gmi_per_gpu, r.strategy
+    ));
+    let base = baselines::isaac_sync(
+        &topo,
+        &bench,
+        &cost,
+        &comp,
+        baselines::CommBackend::Nccl,
+        num_env * gmi_per_gpu,
+        &cfg,
+    )?;
+    base.metrics.print_summary("baseline (Isaac Gym PPO + NCCL)");
+    println!(
+        "speedup: {:.2}x",
+        r.metrics.steps_per_sec / base.metrics.steps_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_train_async(args: &Args) -> Result<()> {
+    let real = args.flag("real");
+    let bench = bench_info(&args.str("bench", "AY"), real)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 4)?;
+    let topo = Topology::dgx_a100(gpus);
+    let serving_gpus: usize = args.get("serving-gpus", (gpus / 2).max(1))?;
+    let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
+    let mode = match args.str("mode", "mcc").as_str() {
+        "mcc" => ShareMode::MultiChannel,
+        "ucc" => ShareMode::UniChannel,
+        other => bail!("unknown mode {other}"),
+    };
+    let cfg = AsyncConfig {
+        rounds: args.get("rounds", 20)?,
+        seed: args.get("seed", 1)?,
+        share_mode: mode,
+        batch_samples: args.get("batch-samples", 8192)?,
+        param_sync_every: args.get("param-sync-every", 4)?,
+        lr: args.get("lr", 3e-4)?,
+        real_replicas: if real { 1 } else { 0 },
+    };
+    let layout = build_async_layout(
+        &topo,
+        serving_gpus,
+        gmi_per_gpu,
+        args.get("trainers-per-gpu", 2)?,
+        num_env,
+        &cost,
+    )?;
+    let (comp, _server) = compute(real)?;
+    let r = run_async(&layout, &bench, &cost, &comp, &cfg)?;
+    r.metrics.print_summary(&format!(
+        "train-async {} ({} serving GPUs, {:?})",
+        bench.abbr, serving_gpus, mode
+    ));
+    println!(
+        "updates: {} | packets: {} | mean packet: {:.0} KiB",
+        r.updates,
+        r.channel_stats.packets_out,
+        r.channel_stats.mean_packet_bytes() / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let bench = bench_info(&args.str("bench", "AT"), false)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 4)?;
+    let (best, trace) = selection::explore(&bench, &cost, GmiBackend::Mps, gpus, bench.horizon);
+    let mut t = Table::new(&["GMI/GPU", "num_env", "runnable", "steps/s (1 GMI)", "mem GiB"]);
+    for p in &trace {
+        t.row(vec![
+            p.gmi_per_gpu.to_string(),
+            p.num_env.to_string(),
+            p.runnable.to_string(),
+            fmt_rate(p.top),
+            format!("{:.1}", p.mem_gib),
+        ]);
+    }
+    t.print();
+    match best {
+        Some(b) => println!(
+            "\nbest: GMIperGPU={} num_env={} projected {} steps/s on {gpus} GPUs",
+            b.gmi_per_gpu,
+            b.num_env,
+            fmt_rate(b.projected_top)
+        ),
+        None => println!("\nno runnable configuration found"),
+    }
+    Ok(())
+}

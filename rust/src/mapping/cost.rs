@@ -1,0 +1,208 @@
+//! The analytical mapping cost model: Tables 3-5 and Eqs. (1)-(3).
+//!
+//! Terms follow Table 3: `R_s/R_a/R_t` dominant-resource sizes, `T_s/T_a/
+//! T_t` phase times, `S/A/W` vector sizes, `BW` inter-GMI bandwidth, `M_p`
+//! model size, `m` sim steps per training, `n` total GMIs, `alpha/beta`
+//! sharing ratios. The paper's measured constants: alpha ~= 0.2, beta ~=
+//! 0.3, R_s ~= 10 R_a ~= 5 R_t, T_s ~= 6 T_a ~= 3 T_t.
+
+use super::MappingTemplate;
+
+/// Dominant resource type of Eq. (1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DominantResource {
+    Sm,
+    Memory,
+}
+
+/// Per-task profile feeding the Tables 4/5 formulas. Defaults implement the
+/// paper's measured constants; the selection module can override from
+/// profiled numbers.
+#[derive(Debug, Clone)]
+pub struct TaskProfile {
+    /// Dominant resource sizes (arbitrary units; ratios matter).
+    pub r_s: f64,
+    pub r_a: f64,
+    pub r_t: f64,
+    /// Phase times per iteration (seconds or ratios).
+    pub t_s: f64,
+    pub t_a: f64,
+    pub t_t: f64,
+    /// size ratios when simulators share agents / trainers.
+    pub alpha: f64,
+    pub beta: f64,
+    /// single state/action/reward vector bytes.
+    pub s_bytes: f64,
+    pub a_bytes: f64,
+    pub w_bytes: f64,
+    /// policy model bytes.
+    pub mp_bytes: f64,
+    /// sim steps per training iteration.
+    pub m: usize,
+    /// total GMIs.
+    pub n: usize,
+    /// inter-GMI bandwidth bytes/s.
+    pub bw: f64,
+    /// SM and memory consumption of one exclusive process, relative to one
+    /// GPU (Eq. 1 inputs).
+    pub sm_frac: f64,
+    pub mem_frac: f64,
+}
+
+impl TaskProfile {
+    /// Paper defaults for a benchmark with `obs/act` dims and `mp` bytes.
+    pub fn paper_defaults(obs_dim: usize, act_dim: usize, mp_bytes: f64, m: usize, n: usize) -> Self {
+        let t_s = 6.0;
+        TaskProfile {
+            r_s: 10.0,
+            r_a: 1.0,
+            r_t: 2.0,
+            t_s,
+            t_a: t_s / 6.0,
+            t_t: t_s / 3.0,
+            alpha: 0.2,
+            beta: 0.3,
+            s_bytes: 4.0 * obs_dim as f64,
+            a_bytes: 4.0 * act_dim as f64,
+            w_bytes: 4.0,
+            mp_bytes,
+            m,
+            n,
+            bw: crate::cluster::HOST_BW,
+            sm_frac: 0.9,
+            mem_frac: 0.3,
+        }
+    }
+
+    /// Eq. (1): the dominant resource.
+    pub fn dominant(&self) -> DominantResource {
+        if self.sm_frac >= self.mem_frac {
+            DominantResource::Sm
+        } else {
+            DominantResource::Memory
+        }
+    }
+}
+
+/// Output of the Table 4 / Table 5 comparison for one template.
+#[derive(Debug, Clone)]
+pub struct MappingCost {
+    pub template: MappingTemplate,
+    /// Time-weighted dominant-resource size R^I (Tables 4/5).
+    pub resource_size: f64,
+    /// Communication bytes per iteration COM (Tables 4/5).
+    pub comm_bytes: f64,
+    /// Projected throughput TOP (Eqs. 2/3) in iterations/s-equivalents.
+    pub throughput: f64,
+}
+
+/// Table 4 + Eq. (2): DRL serving (simulator + agent only).
+pub fn serving_cost(p: &TaskProfile, tpl: MappingTemplate) -> MappingCost {
+    let (resource, com) = match tpl {
+        MappingTemplate::TaskDedicated => (
+            (p.t_s * p.r_s + p.t_a * p.alpha * p.r_a) / (p.t_s + p.t_a),
+            2.0 * p.s_bytes + p.a_bytes + p.w_bytes,
+        ),
+        MappingTemplate::TaskColocated => (
+            (p.t_s + p.t_a) * p.r_s.max(p.r_a) / (p.t_s + p.t_a),
+            0.0,
+        ),
+    };
+    // Eq. (2): TOP = (R_all / R) * 1 / (T_s + T_a + COM/BW). The paper's
+    // profiling says COM/BW ~= 2 (T_s + T_a) for per-interaction sharing.
+    let comm_time = if com > 0.0 { 2.0 * (p.t_s + p.t_a) } else { 0.0 };
+    let r_all = p.r_s.max(p.r_a).max(p.r_t) * 10.0; // whole-system budget
+    let top = (r_all / resource) / (p.t_s + p.t_a + comm_time);
+    MappingCost { template: tpl, resource_size: resource, comm_bytes: com, throughput: top }
+}
+
+/// Table 5 + Eq. (3): synchronized DRL training.
+pub fn sync_cost(p: &TaskProfile, tpl: MappingTemplate) -> MappingCost {
+    let n = p.n as f64;
+    let (resource, com, comm_time) = match tpl {
+        MappingTemplate::TaskDedicated => {
+            let r = (p.t_s * p.r_s + p.t_a * p.alpha * p.r_a + p.t_t * p.beta * p.r_t)
+                / (p.t_s + p.t_a + p.t_t);
+            let com = p.m as f64 * (p.s_bytes + p.a_bytes + p.w_bytes)
+                + p.mp_bytes
+                + 2.0 * (n - 1.0) * p.mp_bytes / n;
+            // paper profiling: COM/BW ~= 7 (T_s + T_a + T_t) for TDG_EX.
+            (r, com, 7.0 * (p.t_s + p.t_a + p.t_t))
+        }
+        MappingTemplate::TaskColocated => {
+            let r = (p.t_s + p.t_a + p.t_t) * p.r_s.max(p.r_a).max(p.r_t)
+                / (p.t_s + p.t_a + p.t_t);
+            let com = 2.0 * (n - 1.0) * p.mp_bytes / n;
+            (r, com, com / p.bw)
+        }
+    };
+    let r_all = p.r_s.max(p.r_a).max(p.r_t) * 10.0;
+    let top = (r_all / resource) / (p.t_s + p.t_a + p.t_t + comm_time);
+    MappingCost { template: tpl, resource_size: resource, comm_bytes: com, throughput: top }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> TaskProfile {
+        TaskProfile::paper_defaults(60, 8, 4.0 * 1.1e5, 32, 8)
+    }
+
+    #[test]
+    fn dominant_resource_rule() {
+        let mut p = profile();
+        assert_eq!(p.dominant(), DominantResource::Sm);
+        p.mem_frac = 0.95;
+        assert_eq!(p.dominant(), DominantResource::Memory);
+    }
+
+    #[test]
+    fn tcg_beats_tdg_serving_by_about_2_5x() {
+        // §5.1: "the overall serving throughput of our TCG solution would
+        // be higher (about 2.5x) compared with TDG".
+        let p = profile();
+        let tcg = serving_cost(&p, MappingTemplate::TaskColocated);
+        let tdg = serving_cost(&p, MappingTemplate::TaskDedicated);
+        let gain = tcg.throughput / tdg.throughput;
+        assert!(gain > 2.0 && gain < 3.2, "serving TCG/TDG = {gain}");
+        assert_eq!(tcg.comm_bytes, 0.0);
+        assert!(tdg.comm_bytes > 0.0);
+    }
+
+    #[test]
+    fn tcg_ex_beats_tdg_ex_by_about_5x() {
+        // §5.1: "the overall system throughput of our TCG_EX would increase
+        // evidently (about 5x) compared with TDG_EX".
+        let p = profile();
+        let tcg = sync_cost(&p, MappingTemplate::TaskColocated);
+        let tdg = sync_cost(&p, MappingTemplate::TaskDedicated);
+        let gain = tcg.throughput / tdg.throughput;
+        assert!(gain > 3.5 && gain < 7.0, "sync TCG_EX/TDG_EX = {gain}");
+    }
+
+    #[test]
+    fn resource_penalty_of_colocation_is_modest() {
+        // §5.1: colocation's resource penalty ~0.16x for serving, ~0.5x for
+        // training — small against the 3x/8x communication savings.
+        let p = profile();
+        let tcg = serving_cost(&p, MappingTemplate::TaskColocated);
+        let tdg = serving_cost(&p, MappingTemplate::TaskDedicated);
+        let penalty = tcg.resource_size / tdg.resource_size - 1.0;
+        assert!(penalty > 0.0 && penalty < 0.35, "serving penalty {penalty}");
+
+        let tcgx = sync_cost(&p, MappingTemplate::TaskColocated);
+        let tdgx = sync_cost(&p, MappingTemplate::TaskDedicated);
+        let penalty = tcgx.resource_size / tdgx.resource_size - 1.0;
+        assert!(penalty > 0.2 && penalty < 0.8, "sync penalty {penalty}");
+    }
+
+    #[test]
+    fn tcg_ex_comm_is_gradient_only() {
+        let p = profile();
+        let tcg = sync_cost(&p, MappingTemplate::TaskColocated);
+        // 2 (n-1)/n * Mp
+        let want = 2.0 * 7.0 / 8.0 * p.mp_bytes;
+        assert!((tcg.comm_bytes - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,318 @@
+//! Layout builders: turn (benchmark, topology, template, GMIperGPU,
+//! num_env) into a concrete set of registered GMIs.
+
+use anyhow::Result;
+
+use super::MappingTemplate;
+use crate::cluster::Topology;
+use crate::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+use crate::vtime::CostModel;
+
+/// A fully-specified placement: the manager with every GMI registered.
+pub struct Layout {
+    pub manager: GmiManager,
+    /// GMIs that run rollouts (serving or holistic).
+    pub rollout_gmis: Vec<usize>,
+    /// GMIs that run training.
+    pub trainer_gmis: Vec<usize>,
+    pub gmi_per_gpu: usize,
+    pub num_env_per_gmi: usize,
+    pub backend: GmiBackend,
+}
+
+impl Layout {
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            GmiBackend::Mps => "MPS",
+            GmiBackend::Mig => "MIG",
+            GmiBackend::DirectShare => "Direct-Share",
+        }
+    }
+
+    /// Total environments simulated per step across the whole layout.
+    pub fn total_envs(&self) -> usize {
+        self.rollout_gmis.len() * self.num_env_per_gmi
+    }
+}
+
+/// DRL serving (Fig 6 context, §5.1): `gmi_per_gpu` TCG serving blocks per
+/// GPU (simulator+agent co-located), or TDG pairs (dedicated simulator and
+/// agent GMIs) for the rejected-baseline comparison.
+pub fn build_serving_layout(
+    topo: &Topology,
+    template: MappingTemplate,
+    gmi_per_gpu: usize,
+    num_env_per_gmi: usize,
+    cost: &CostModel,
+    backend_override: Option<GmiBackend>,
+) -> Result<Layout> {
+    let backend = backend_override
+        .unwrap_or_else(|| GmiBackend::auto_select(false, topo.gpus[0].sm_arch));
+    let mut manager = GmiManager::new(topo.clone());
+    let mut rollout = Vec::new();
+    let mut id = 0usize;
+    for gpu in 0..topo.num_gpus() {
+        match template {
+            MappingTemplate::TaskColocated => {
+                let share = backend.quantize_share(1.0 / gmi_per_gpu as f64);
+                for _ in 0..gmi_per_gpu {
+                    let mem = cost.mem_gib(num_env_per_gmi, 16, true, false);
+                    manager.add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: share.min(1.0 / gmi_per_gpu as f64),
+                        mem_gib: mem.min(topo.gpus[gpu].mem_gib / gmi_per_gpu as f64),
+                        backend,
+                        role: Role::SimAgent,
+                        num_env: num_env_per_gmi,
+                    })?;
+                    rollout.push(id);
+                    id += 1;
+                }
+            }
+            MappingTemplate::TaskDedicated => {
+                // alpha ~ 0.2: one agent GMI serves ~2 simulator GMIs; the
+                // simulator keeps the big share.
+                let pairs = gmi_per_gpu.max(2) / 2;
+                for _ in 0..pairs {
+                    let sim_share = 0.8 / pairs as f64;
+                    let agent_share = 0.2 / pairs as f64;
+                    manager.add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: sim_share,
+                        mem_gib: cost.mem_gib(num_env_per_gmi, 16, true, false),
+                        backend,
+                        role: Role::Simulator,
+                        num_env: num_env_per_gmi,
+                    })?;
+                    rollout.push(id);
+                    id += 1;
+                    manager.add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: agent_share,
+                        mem_gib: 2.0,
+                        backend,
+                        role: Role::Agent,
+                        num_env: 0,
+                    })?;
+                    id += 1;
+                }
+            }
+        }
+    }
+    Ok(Layout {
+        manager,
+        rollout_gmis: rollout,
+        trainer_gmis: vec![],
+        gmi_per_gpu,
+        num_env_per_gmi,
+        backend,
+    })
+}
+
+/// Synchronized training (Fig 6a): TCG_EX holistic GMIs (every GMI runs
+/// sim+agent+trainer and joins the gradient group) or TDG_EX (serving GMIs
+/// plus dedicated trainer GMIs; beta ~ 0.3 of a GPU per trainer).
+pub fn build_sync_layout(
+    topo: &Topology,
+    template: MappingTemplate,
+    gmi_per_gpu: usize,
+    num_env_per_gmi: usize,
+    cost: &CostModel,
+    backend_override: Option<GmiBackend>,
+) -> Result<Layout> {
+    // Training needs inter-GMI communication -> MPS by the §3 rule.
+    let backend = backend_override
+        .unwrap_or_else(|| GmiBackend::auto_select(true, topo.gpus[0].sm_arch));
+    let mut manager = GmiManager::new(topo.clone());
+    let mut rollout = Vec::new();
+    let mut trainers = Vec::new();
+    let mut id = 0usize;
+    for gpu in 0..topo.num_gpus() {
+        match template {
+            MappingTemplate::TaskColocated => {
+                for _ in 0..gmi_per_gpu {
+                    let mem = cost.mem_gib(num_env_per_gmi, 16, true, true);
+                    manager.add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: 1.0 / gmi_per_gpu as f64,
+                        mem_gib: mem.min(topo.gpus[gpu].mem_gib / gmi_per_gpu as f64),
+                        backend,
+                        role: Role::Holistic,
+                        num_env: num_env_per_gmi,
+                    })?;
+                    rollout.push(id);
+                    trainers.push(id);
+                    id += 1;
+                }
+            }
+            MappingTemplate::TaskDedicated => {
+                // serving GMIs + one dedicated trainer GMI per GPU.
+                let serving = gmi_per_gpu.max(2) - 1;
+                let trainer_share = 0.3;
+                let serve_share = (1.0 - trainer_share) / serving as f64;
+                for _ in 0..serving {
+                    manager.add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: serve_share,
+                        mem_gib: cost.mem_gib(num_env_per_gmi, 16, true, false),
+                        backend,
+                        role: Role::SimAgent,
+                        num_env: num_env_per_gmi,
+                    })?;
+                    rollout.push(id);
+                    id += 1;
+                }
+                manager.add_gmi(GmiSpec {
+                    id,
+                    gpu,
+                    sm_share: trainer_share,
+                    mem_gib: cost.mem_gib(num_env_per_gmi * serving, 16, false, true),
+                    backend,
+                    role: Role::Trainer,
+                    num_env: 0,
+                })?;
+                trainers.push(id);
+                id += 1;
+            }
+        }
+    }
+    Ok(Layout {
+        manager,
+        rollout_gmis: rollout,
+        trainer_gmis: trainers,
+        gmi_per_gpu,
+        num_env_per_gmi,
+        backend,
+    })
+}
+
+/// Asynchronized training (Fig 6b): serving GMIs packed on one subset of
+/// GPUs, trainer GMIs on the rest — the decoupled scheme.
+pub fn build_async_layout(
+    topo: &Topology,
+    serving_gpus: usize,
+    serving_per_gpu: usize,
+    trainers_per_gpu: usize,
+    num_env_per_gmi: usize,
+    cost: &CostModel,
+) -> Result<Layout> {
+    assert!(serving_gpus < topo.num_gpus(), "need at least one training GPU");
+    let backend = GmiBackend::Mps; // cross-GMI experience traffic -> MPS
+    let mut manager = GmiManager::new(topo.clone());
+    let mut rollout = Vec::new();
+    let mut trainers = Vec::new();
+    let mut id = 0usize;
+    for gpu in 0..serving_gpus {
+        for _ in 0..serving_per_gpu {
+            manager.add_gmi(GmiSpec {
+                id,
+                gpu,
+                sm_share: 1.0 / serving_per_gpu as f64,
+                mem_gib: cost
+                    .mem_gib(num_env_per_gmi, 16, true, false)
+                    .min(topo.gpus[gpu].mem_gib / serving_per_gpu as f64),
+                backend,
+                role: Role::SimAgent,
+                num_env: num_env_per_gmi,
+            })?;
+            rollout.push(id);
+            id += 1;
+        }
+    }
+    for gpu in serving_gpus..topo.num_gpus() {
+        for _ in 0..trainers_per_gpu {
+            manager.add_gmi(GmiSpec {
+                id,
+                gpu,
+                sm_share: 1.0 / trainers_per_gpu as f64,
+                mem_gib: cost
+                    .mem_gib(num_env_per_gmi, 16, false, true)
+                    .min(topo.gpus[gpu].mem_gib / trainers_per_gpu as f64),
+                backend,
+                role: Role::Trainer,
+                num_env: 0,
+            })?;
+            trainers.push(id);
+            id += 1;
+        }
+    }
+    Ok(Layout {
+        manager,
+        rollout_gmis: rollout,
+        trainer_gmis: trainers,
+        gmi_per_gpu: serving_per_gpu,
+        num_env_per_gmi,
+        backend,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+
+    fn cost() -> CostModel {
+        CostModel::new(&static_registry()["AT"])
+    }
+
+    #[test]
+    fn tcg_sync_layout_is_holistic() {
+        let topo = Topology::dgx_a100(2);
+        let l = build_sync_layout(&topo, MappingTemplate::TaskColocated, 3, 1024, &cost(), None)
+            .unwrap();
+        assert_eq!(l.manager.len(), 6);
+        assert_eq!(l.rollout_gmis, l.trainer_gmis);
+        assert_eq!(l.backend, GmiBackend::Mps);
+        let mpl = l.manager.mapping_list(|r| r.has_trainer());
+        assert_eq!(mpl.len(), 2);
+        assert_eq!(mpl[0].len(), 3);
+    }
+
+    #[test]
+    fn tdg_sync_layout_separates_trainers() {
+        let topo = Topology::dgx_a100(2);
+        let l = build_sync_layout(&topo, MappingTemplate::TaskDedicated, 3, 1024, &cost(), None)
+            .unwrap();
+        // 2 serving + 1 trainer per GPU
+        assert_eq!(l.manager.len(), 6);
+        assert_eq!(l.trainer_gmis.len(), 2);
+        assert_eq!(l.rollout_gmis.len(), 4);
+        assert!(l
+            .trainer_gmis
+            .iter()
+            .all(|&t| l.manager.gmi(t).unwrap().role == Role::Trainer));
+    }
+
+    #[test]
+    fn serving_layout_uses_mig_on_a100() {
+        let topo = Topology::dgx_a100(1);
+        let l = build_serving_layout(&topo, MappingTemplate::TaskColocated, 3, 512, &cost(), None)
+            .unwrap();
+        assert_eq!(l.backend, GmiBackend::Mig);
+        assert_eq!(l.rollout_gmis.len(), 3);
+    }
+
+    #[test]
+    fn serving_layout_uses_mps_on_v100() {
+        let topo = Topology::v100_box(1);
+        let l = build_serving_layout(&topo, MappingTemplate::TaskColocated, 2, 512, &cost(), None)
+            .unwrap();
+        assert_eq!(l.backend, GmiBackend::Mps);
+    }
+
+    #[test]
+    fn async_layout_decouples() {
+        let topo = Topology::dgx_a100(4);
+        let l = build_async_layout(&topo, 2, 3, 2, 1024, &cost()).unwrap();
+        assert_eq!(l.rollout_gmis.len(), 6);
+        assert_eq!(l.trainer_gmis.len(), 4);
+        // serving on GPUs 0-1, trainers on 2-3
+        assert!(l.rollout_gmis.iter().all(|&g| l.manager.gmi(g).unwrap().gpu < 2));
+        assert!(l.trainer_gmis.iter().all(|&g| l.manager.gmi(g).unwrap().gpu >= 2));
+    }
+}

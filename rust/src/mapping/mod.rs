@@ -1,0 +1,33 @@
+//! Task-aware GMI mapping (paper §5.1): design templates mapping DRL tasks
+//! onto GMIs, plus the analytical cost model of Tables 3-5 / Eqs. (1)-(3)
+//! that justifies them.
+//!
+//! * serving: **TCG** (task-colocated: simulator+agent per GMI) vs **TDG**
+//!   (task-dedicated GMIs); TCG wins ~2.5x (Table 4 / Eq. 2);
+//! * sync training: **TCG_EX** (holistic training GMIs) vs **TDG_EX**;
+//!   TCG_EX wins ~5x (Table 5 / Eq. 3);
+//! * async training: decoupled serving GPUs + training GPUs (Fig 6b).
+
+pub mod cost;
+mod layout;
+
+pub use cost::{MappingCost, TaskProfile};
+pub use layout::{build_async_layout, build_serving_layout, build_sync_layout, Layout};
+
+/// Template choice for serving / sync training (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingTemplate {
+    /// Task-colocated GMIs (the paper's choice).
+    TaskColocated,
+    /// Task-dedicated GMIs (the rejected alternative, kept as a baseline).
+    TaskDedicated,
+}
+
+impl std::fmt::Display for MappingTemplate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MappingTemplate::TaskColocated => f.write_str("TCG"),
+            MappingTemplate::TaskDedicated => f.write_str("TDG"),
+        }
+    }
+}

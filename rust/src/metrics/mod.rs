@@ -1,0 +1,159 @@
+//! Run metrics: throughput (steps/s, PPS, TTOP), per-GPU utilization
+//! (Fig 1b's quantity), and reward accumulation (Fig 9).
+
+pub mod report;
+
+pub use report::{fmt_rate, Table};
+
+use std::collections::BTreeMap;
+
+/// Per-GPU SM-time accounting: utilization = busy SM-seconds / (span * SMs).
+#[derive(Debug, Default, Clone)]
+pub struct UtilizationTracker {
+    /// gpu -> (busy sm-seconds, latest clock seen)
+    per_gpu: BTreeMap<usize, (f64, f64)>,
+}
+
+impl UtilizationTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an op: it occupied `occupancy` (fraction of the GPU's SMs)
+    /// for `dur` virtual seconds, finishing at `end` on `gpu`.
+    pub fn record(&mut self, gpu: usize, occupancy: f64, dur: f64, end: f64) {
+        let e = self.per_gpu.entry(gpu).or_insert((0.0, 0.0));
+        e.0 += occupancy * dur;
+        if end > e.1 {
+            e.1 = end;
+        }
+    }
+
+    /// Utilization of one GPU in [0, 1].
+    pub fn gpu_utilization(&self, gpu: usize) -> f64 {
+        match self.per_gpu.get(&gpu) {
+            Some((busy, span)) if *span > 0.0 => (busy / span).min(1.0),
+            _ => 0.0,
+        }
+    }
+
+    /// Mean utilization across all GPUs that saw work.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.per_gpu.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self.per_gpu.keys().map(|&g| self.gpu_utilization(g)).sum();
+        s / self.per_gpu.len() as f64
+    }
+}
+
+/// Throughput summary for one run (all rates in events per *virtual* second).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// aggregate simulation env-steps per second (the paper's steps/s).
+    pub steps_per_sec: f64,
+    /// agent predictions per second (Fig 11 PPS).
+    pub pps: f64,
+    /// training samples consumed per second (Fig 11 TTOP).
+    pub ttop: f64,
+    /// total virtual span of the run.
+    pub span_s: f64,
+    /// mean GPU utilization in [0,1].
+    pub utilization: f64,
+    /// mean reward of the final iteration (learning signal).
+    pub final_reward: f64,
+    /// (virtual seconds, mean reward) samples over the run (Fig 9).
+    pub reward_curve: Vec<(f64, f64)>,
+    /// communication seconds spent in gradient reduction.
+    pub comm_s: f64,
+    /// peak device memory of any GMI (GiB).
+    pub peak_mem_gib: f64,
+}
+
+impl RunMetrics {
+    pub fn print_summary(&self, label: &str) {
+        println!(
+            "{label}: {:.0} steps/s | pps {:.0} | ttop {:.0} | util {:.1}% | comm {:.3}s | span {:.2}s | reward {:.3}",
+            self.steps_per_sec,
+            self.pps,
+            self.ttop,
+            100.0 * self.utilization,
+            self.comm_s,
+            self.span_s,
+            self.final_reward,
+        );
+    }
+}
+
+/// Accumulates reward samples during a run.
+#[derive(Debug, Default, Clone)]
+pub struct RewardTracker {
+    pub curve: Vec<(f64, f64)>,
+    pub cumulative: f64,
+}
+
+impl RewardTracker {
+    pub fn push(&mut self, vtime: f64, mean_reward: f64) {
+        self.cumulative += mean_reward;
+        self.curve.push((vtime, self.cumulative));
+    }
+
+    pub fn final_reward(&self) -> f64 {
+        self.curve.last().map(|&(_, r)| r).unwrap_or(0.0)
+    }
+
+    /// Cumulative reward reached by `t` (linear scan; curves are short).
+    pub fn reward_at(&self, t: f64) -> f64 {
+        let mut last = 0.0;
+        for &(ts, r) in &self.curve {
+            if ts > t {
+                break;
+            }
+            last = r;
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_accounting() {
+        let mut u = UtilizationTracker::new();
+        // one op at 30% occupancy for the whole 10s span
+        u.record(0, 0.3, 10.0, 10.0);
+        assert!((u.gpu_utilization(0) - 0.3).abs() < 1e-9);
+        // add a concurrent op at 50% for half the span
+        u.record(0, 0.5, 5.0, 10.0);
+        assert!((u.gpu_utilization(0) - 0.55).abs() < 1e-9);
+        assert_eq!(u.gpu_utilization(3), 0.0);
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let mut u = UtilizationTracker::new();
+        u.record(0, 1.0, 20.0, 10.0); // oversubscribed
+        assert_eq!(u.gpu_utilization(0), 1.0);
+    }
+
+    #[test]
+    fn mean_across_gpus() {
+        let mut u = UtilizationTracker::new();
+        u.record(0, 0.2, 10.0, 10.0);
+        u.record(1, 0.6, 10.0, 10.0);
+        assert!((u.mean_utilization() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reward_tracker_accumulates() {
+        let mut r = RewardTracker::default();
+        r.push(1.0, 0.5);
+        r.push(2.0, 0.7);
+        assert!((r.final_reward() - 1.2).abs() < 1e-9);
+        assert!((r.reward_at(1.5) - 0.5).abs() < 1e-9);
+        assert_eq!(r.reward_at(0.5), 0.0);
+        assert!((r.reward_at(10.0) - 1.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,47 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts, compile them on the
+//! CPU PJRT client, and execute them from the coordinator hot path.
+//!
+//! The `xla` crate's client/executable types wrap raw pointers and are not
+//! `Send`, so all PJRT state is confined to a dedicated executor thread
+//! ([`ExecServer`]); coordinator tasks talk to it through a cloneable
+//! [`ExecHandle`] over crossbeam channels. One compiled executable per
+//! (benchmark, artifact) pair, compiled lazily and cached.
+
+mod server;
+mod tensor;
+
+pub use server::{ExecHandle, ExecServer, ExecStats};
+pub use tensor::HostTensor;
+
+/// The four artifacts each benchmark lowers to (see python/compile/aot.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(seed) -> (params_flat, state0)`
+    Init,
+    /// `(params_flat, state, seed) -> (obs, actions, logps, rewards, values,
+    /// dones, last_state, last_value)`
+    Rollout,
+    /// `(params_flat, obs, actions, logps_old, rewards, values_old, dones,
+    /// last_value) -> (grads_flat, loss, pi_loss, v_loss, entropy, kl,
+    /// mean_reward)`
+    Grad,
+    /// `(params_flat, m, v, step, grads_flat, lr) -> (params', m', v', step')`
+    Apply,
+}
+
+impl ArtifactKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::Init => "init",
+            ArtifactKind::Rollout => "rollout",
+            ArtifactKind::Grad => "grad",
+            ArtifactKind::Apply => "apply",
+        }
+    }
+}
+
+impl std::fmt::Display for ArtifactKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}

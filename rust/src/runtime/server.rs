@@ -1,0 +1,239 @@
+//! The PJRT executor thread: owns the (non-`Send`) client and compiled
+//! executables, serves execute requests from coordinator tasks.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{ArtifactKind, HostTensor};
+use crate::config::Manifest;
+
+/// Aggregate executor statistics (for the perf pass / EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    pub executions: AtomicU64,
+    pub compile_ns: AtomicU64,
+    pub execute_ns: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+impl ExecStats {
+    /// (executions, compile_s, execute_s, bytes_in, bytes_out)
+    pub fn snapshot(&self) -> (u64, f64, f64, u64, u64) {
+        (
+            self.executions.load(Ordering::Relaxed),
+            self.compile_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.execute_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.bytes_in.load(Ordering::Relaxed),
+            self.bytes_out.load(Ordering::Relaxed),
+        )
+    }
+}
+
+enum Request {
+    Execute {
+        bench: String,
+        kind: ArtifactKind,
+        inputs: Vec<HostTensor>,
+        reply: SyncSender<Result<Vec<HostTensor>>>,
+    },
+    Preload {
+        bench: String,
+        kind: ArtifactKind,
+        reply: SyncSender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle used by coordinator tasks; all methods are synchronous
+/// RPCs to the executor thread.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: Sender<Request>,
+    stats: Arc<ExecStats>,
+}
+
+// The handle only holds an mpsc Sender + Arc; safe to share across the
+// coordinator's worker threads.
+unsafe impl Sync for ExecHandle {}
+
+impl ExecHandle {
+    /// Run one artifact. The returned tensors are the flattened tuple
+    /// elements of the jax function's output.
+    pub fn execute(
+        &self,
+        bench: &str,
+        kind: ArtifactKind,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Execute { bench: bench.to_string(), kind, inputs, reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor thread dropped reply"))?
+    }
+
+    /// Compile an artifact ahead of time (otherwise compiled on first use).
+    pub fn preload(&self, bench: &str, kind: ArtifactKind) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Preload { bench: bench.to_string(), kind, reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor thread dropped reply"))?
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+}
+
+/// Spawns the executor thread; dropping the server shuts it down.
+pub struct ExecServer {
+    handle: ExecHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ExecServer {
+    /// `artifacts_dir` must contain `manifest.txt` (from `make artifacts`).
+    pub fn start(artifacts_dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(ExecStats::default());
+        let worker_stats = stats.clone();
+        let join = std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || worker(artifacts_dir, manifest, rx, worker_stats))
+            .context("spawning executor thread")?;
+        Ok(ExecServer { handle: ExecHandle { tx, stats }, join: Some(join) })
+    }
+
+    /// Start against the default artifacts dir (honours GMI_DRL_ARTIFACTS).
+    pub fn start_default() -> Result<Self> {
+        Self::start(crate::config::artifacts_dir())
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ExecServer {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker(
+    dir: PathBuf,
+    manifest: Manifest,
+    rx: Receiver<Request>,
+    stats: Arc<ExecStats>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("PJRT CPU client failed: {e}");
+            // Drain requests with errors so callers unblock.
+            for req in rx.iter() {
+                match req {
+                    Request::Execute { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Request::Preload { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<(String, ArtifactKind), xla::PjRtLoadedExecutable> = HashMap::new();
+
+    for req in rx.iter() {
+        match req {
+            Request::Shutdown => break,
+            Request::Preload { bench, kind, reply } => {
+                let r =
+                    ensure_compiled(&client, &dir, &manifest, &mut cache, &bench, kind, &stats)
+                        .map(|_| ());
+                let _ = reply.send(r);
+            }
+            Request::Execute { bench, kind, inputs, reply } => {
+                let r = (|| -> Result<Vec<HostTensor>> {
+                    ensure_compiled(&client, &dir, &manifest, &mut cache, &bench, kind, &stats)?;
+                    let exe = cache.get(&(bench.clone(), kind)).unwrap();
+                    for t in &inputs {
+                        stats.bytes_in.fetch_add(t.size_bytes() as u64, Ordering::Relaxed);
+                    }
+                    let lits: Vec<xla::Literal> =
+                        inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+                    let t0 = Instant::now();
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow!("execute {bench}/{kind}: {e}"))?;
+                    let result = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("to_literal {bench}/{kind}: {e}"))?;
+                    stats
+                        .execute_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    stats.executions.fetch_add(1, Ordering::Relaxed);
+                    // aot.py lowers with return_tuple=True: always a tuple.
+                    let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+                    let outs: Vec<HostTensor> =
+                        parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+                    for t in &outs {
+                        stats.bytes_out.fetch_add(t.size_bytes() as u64, Ordering::Relaxed);
+                    }
+                    Ok(outs)
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_compiled(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    manifest: &Manifest,
+    cache: &mut HashMap<(String, ArtifactKind), xla::PjRtLoadedExecutable>,
+    bench: &str,
+    kind: ArtifactKind,
+    stats: &ExecStats,
+) -> Result<()> {
+    let key = (bench.to_string(), kind);
+    if cache.contains_key(&key) {
+        return Ok(());
+    }
+    let path = manifest.hlo_path(dir, bench, kind.as_str())?;
+    let t0 = Instant::now();
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {bench}/{kind}: {e}"))?;
+    stats
+        .compile_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    log::info!(
+        "compiled {bench}/{kind} from {} in {:.2}s",
+        path.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    cache.insert(key, exe);
+    Ok(())
+}

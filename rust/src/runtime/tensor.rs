@@ -1,0 +1,136 @@
+//! Host-side tensor values crossing the coordinator <-> executor boundary.
+
+use anyhow::{bail, Context, Result};
+
+/// A host tensor: the only data type that crosses between coordinator tasks
+/// and the PJRT executor thread. Scalars use an empty shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<i64> },
+    I32 { data: Vec<i32>, shape: Vec<i64> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape: shape.iter().map(|&d| d as i64).collect() }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Self::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4 * self.len()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        self.as_f32()?.first().copied().context("empty tensor")
+    }
+
+    pub fn scalar_value_i32(&self) -> Result<i32> {
+        match self {
+            HostTensor::I32 { data, .. } => data.first().copied().context("empty tensor"),
+            HostTensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Convert to an xla literal (executor thread only).
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(shape)?
+                }
+            }
+            HostTensor::I32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(shape)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from an xla literal (executor thread only).
+    pub(crate) fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims = shape.dims().to_vec();
+        match shape.element_type() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { data: lit.to_vec::<f32>()?, shape: dims }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { data: lit.to_vec::<i32>()?, shape: dims }),
+            other => bail!("unsupported artifact output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_sizes() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(HostTensor::scalar_i32(7).scalar_value_i32().unwrap(), 7);
+        assert_eq!(HostTensor::scalar_f32(0.5).scalar_value_f32().unwrap(), 0.5);
+        assert!(HostTensor::scalar_f32(1.0).scalar_value_i32().is_err());
+    }
+
+    #[test]
+    fn zeros_builder() {
+        let z = HostTensor::zeros_f32(&[4, 5]);
+        assert_eq!(z.len(), 20);
+        assert!(z.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,71 @@
+//! Per-GMI virtual clocks with Lamport-style merging at sync points.
+
+/// A virtual clock in seconds. One per GMI role task; advanced by the cost
+/// model, merged (max) at communication points.
+#[derive(Debug, Clone, Copy, Default, PartialEq, PartialOrd)]
+pub struct Clock(pub f64);
+
+impl Clock {
+    pub fn zero() -> Self {
+        Clock(0.0)
+    }
+
+    pub fn advance(&mut self, dt: f64) -> Self {
+        debug_assert!(dt >= 0.0, "negative time advance {dt}");
+        self.0 += dt;
+        *self
+    }
+
+    /// Blocking receive / barrier: wait until `other` (the sender's send
+    /// timestamp or the group's max), then advance by the op cost.
+    pub fn merge_then_advance(&mut self, other: Clock, dt: f64) -> Self {
+        self.0 = self.0.max(other.0) + dt;
+        *self
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.0
+    }
+
+    pub fn max_of(clocks: &[Clock]) -> Clock {
+        Clock(clocks.iter().fold(0.0_f64, |a, c| a.max(c.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_accumulates() {
+        let mut c = Clock::zero();
+        c.advance(1.5);
+        c.advance(0.5);
+        assert!((c.seconds() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_takes_max() {
+        let mut c = Clock(1.0);
+        c.merge_then_advance(Clock(3.0), 0.5);
+        assert!((c.seconds() - 3.5).abs() < 1e-12);
+        // merging with an older clock only adds the op cost
+        let mut c2 = Clock(5.0);
+        c2.merge_then_advance(Clock(1.0), 0.25);
+        assert!((c2.seconds() - 5.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_of_group() {
+        let cs = [Clock(1.0), Clock(4.0), Clock(2.0)];
+        assert_eq!(Clock::max_of(&cs).0, 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // debug_assert! is compiled out in release
+    fn negative_advance_panics_in_debug() {
+        let mut c = Clock::zero();
+        c.advance(-1.0);
+    }
+}

@@ -1,0 +1,270 @@
+//! The calibrated A100 cost model.
+//!
+//! Calibration anchors (DESIGN.md §5):
+//!  * the paper's profiled phase ratios `T_s ≈ 6 T_a ≈ 3 T_t` (§5.1) — env
+//!    simulation dominates one training iteration (~2/3), agent inference is
+//!    small, policy training sits in between;
+//!  * env simulation *saturates* at a modest SM share (`sim_sat`, Fig 1b's
+//!    <50% utilization) — giving a simulator the whole GPU buys nothing past
+//!    saturation, which is exactly the headroom GMI multiplexing harvests;
+//!  * GEMM-shaped work (inference/training) partitions ~linearly in SM
+//!    share;
+//!  * absolute rates land in the paper's reported ranges (Table 7: AT 1e5
+//!    steps/s scale on a few GPUs).
+
+use crate::config::BenchInfo;
+
+/// A100 peak f32 (TF32 tensor-core path) FLOP/s used for GEMM work.
+pub const A100_F32_FLOPS: f64 = 156e12;
+/// SMs per A100.
+pub const A100_SM_COUNT: usize = 108;
+/// A100 HBM capacity in GiB.
+pub const A100_MEM_GIB: f64 = 40.0;
+
+/// Effective "element rate" of physics simulation on a full A100
+/// (flop-equivalents/s). Deliberately far below GEMM peak: physics is
+/// element-wise, divergent and launch-bound — this constant is calibrated so
+/// a full-GPU Ant simulation runs ~180k env-steps/s (Isaac Gym scale).
+const K_SIM: f64 = 5.4e8;
+
+/// Fixed per-sim-step launch/pipeline overhead (seconds): physics pipeline
+/// sync + kernel launches; does not shrink with num_env or SM share.
+const L_SIM: f64 = 1.0e-3;
+
+/// Fixed per-GEMM-phase launch overhead (seconds).
+const L_GEMM: f64 = 5.0e-5;
+
+/// Effective GEMM utilization for small-batch MLP inference.
+const GEMM_UTIL_INFER: f64 = 0.00156;
+/// Effective GEMM utilization for training (bigger fused batches). The
+/// T_t ~= T_s/3 anchor is the *total* training phase of one iteration,
+/// which Isaac PPO spends in DEFAULT_PPO_EPOCHS passes over the batch —
+/// so a single pass runs at epochs x the one-pass-calibrated rate.
+const GEMM_UTIL_TRAIN: f64 = 0.00235 * crate::drl::DEFAULT_PPO_EPOCHS as f64;
+// The two utilizations are calibrated so that at the reference config
+// (AT, num_env=4096, horizon=16) the paper's T_s ≈ 6 T_a ≈ 3 T_t holds:
+//   T_a = T_s/6  ->  util_infer such that fwd GEMM time = sim/6
+//   T_t = T_s/3  ->  util_train such that train GEMM time = sim/3
+// They look tiny because they also absorb framework overhead per op and the
+// fact that these MLPs are far too small to fill an A100's MXUs.
+
+/// One operation on the virtual timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// One environment-simulation step for `num_env` environments.
+    SimStep { num_env: usize },
+    /// One policy forward (action prediction) for `num_env` environments.
+    PolicyFwd { num_env: usize },
+    /// One PPO gradient computation over `samples` experience samples.
+    TrainGrad { samples: usize },
+    /// Adam parameter update (flat vectors).
+    AdamApply,
+}
+
+/// Per-benchmark cost model. `share` arguments are effective SM fractions in
+/// (0, 1]; interference multipliers come from the GMI backend (gmi module).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub abbr: String,
+    /// flop-equivalents per env per sim step.
+    pub sim_flops: f64,
+    /// policy forward flops per env.
+    pub fwd_flops: f64,
+    /// SM share where env simulation saturates (Fig 1b).
+    pub sim_sat: f64,
+    /// relative "complexity" of the benchmark, drives interference penalties
+    /// (Fig 8: HM/BB suffer more from weak isolation than AT).
+    pub heaviness: f64,
+    /// parameter count (for memory model).
+    pub num_params: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+}
+
+impl CostModel {
+    pub fn new(b: &BenchInfo) -> Self {
+        // Saturation share: heavier physics keeps more SMs busy. Ranges
+        // ~0.22 (BB) to ~0.41 (SH); mean ~0.3 matches Fig 1b's 32% average
+        // utilization for sim-dominated execution.
+        let sim_sat = (0.20 + b.obs_dim as f64 / 1100.0).min(0.45);
+        // Complexity proxy for contention penalties. BB is flagged complex
+        // in the paper (fast control loop); give control-heavy tasks a
+        // floor via actuator count relative to obs size.
+        let heaviness =
+            (b.obs_dim as f64 / 211.0).max(0.35 + 2.0 * b.act_dim as f64 / b.obs_dim as f64 / 3.0);
+        CostModel {
+            abbr: b.abbr.clone(),
+            sim_flops: b.sim_flops_per_env(),
+            fwd_flops: b.fwd_flops_per_env(),
+            sim_sat,
+            heaviness: heaviness.min(1.0),
+            num_params: b.num_params,
+            obs_dim: b.obs_dim,
+            act_dim: b.act_dim,
+        }
+    }
+
+    /// Time (s) of one op on a GMI holding `share` of the GPU's SMs.
+    /// `interference` is a >= 1.0 multiplier from the backend model.
+    pub fn op_time(&self, op: OpKind, share: f64, interference: f64) -> f64 {
+        assert!(share > 0.0 && share <= 1.0, "bad SM share {share}");
+        let t = match op {
+            OpKind::SimStep { num_env } => {
+                // Physics saturates: shares above sim_sat buy nothing.
+                let eff = (share / self.sim_sat).min(1.0);
+                L_SIM + num_env as f64 * self.sim_flops / (K_SIM * eff)
+            }
+            OpKind::PolicyFwd { num_env } => {
+                L_GEMM
+                    + num_env as f64 * self.fwd_flops
+                        / (A100_F32_FLOPS * GEMM_UTIL_INFER * share)
+            }
+            OpKind::TrainGrad { samples } => {
+                // fwd + bwd ~= 3x forward flops.
+                L_GEMM
+                    + 3.0 * samples as f64 * self.fwd_flops
+                        / (A100_F32_FLOPS * GEMM_UTIL_TRAIN * share)
+            }
+            OpKind::AdamApply => {
+                // Bandwidth-bound elementwise over 4 flat vectors.
+                L_GEMM + (4 * 4 * self.num_params) as f64 / (1.2e12 * share)
+            }
+        };
+        t * interference
+    }
+
+    /// Fraction of the GPU's SMs an op actually occupies while running on a
+    /// GMI with `share` (drives the utilization metric, Fig 1b). The MLPs
+    /// of Table 6 are far too small to fill an A100, so even the GEMM
+    /// phases occupy a modest fraction of an exclusive GPU — which is why
+    /// the paper's baseline profiles at ~32%.
+    pub fn sm_occupancy(&self, op: OpKind, share: f64) -> f64 {
+        match op {
+            OpKind::SimStep { .. } => share.min(self.sim_sat),
+            OpKind::PolicyFwd { .. } => share * 0.35,
+            OpKind::TrainGrad { .. } => share * 0.55,
+            OpKind::AdamApply => share * 0.30,
+        }
+    }
+
+    /// Device memory (GiB) needed by a role running `num_env` environments
+    /// with rollout length `horizon`. Drives Alg 2's runnable check and the
+    /// Fig 10 memory curve.
+    pub fn mem_gib(&self, num_env: usize, horizon: usize, has_sim: bool, has_trainer: bool) -> f64 {
+        let n = num_env as f64;
+        let mut bytes = 0.8e9; // CUDA context + framework + workspace
+        // Policy + optimizer state (params, adam m/v, grads).
+        bytes += (5 * 4 * self.num_params) as f64;
+        if has_sim {
+            // Physics buffers: bodies, contacts, solver scratch per env;
+            // mildly superlinear (contact broadphase) at large env counts.
+            let per_env = 1.0e5 + 2000.0 * self.obs_dim as f64;
+            bytes += n * per_env * (1.0 + n / 16384.0);
+        }
+        // Experience buffer (state/action/reward/logp/value/done).
+        let exp = 4.0 * (self.obs_dim + self.act_dim + 4) as f64;
+        bytes += n * horizon as f64 * exp;
+        if has_trainer {
+            // Activation storage for the training batch.
+            let acts: f64 = 4.0 * (self.obs_dim + self.act_dim) as f64 * 8.0;
+            bytes += n * horizon as f64 * acts;
+        }
+        bytes / 1.074e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+
+    fn at() -> CostModel {
+        CostModel::new(&static_registry()["AT"])
+    }
+
+    #[test]
+    fn sim_saturates_with_share() {
+        let m = at();
+        let full = m.op_time(OpKind::SimStep { num_env: 4096 }, 1.0, 1.0);
+        let at_sat = m.op_time(OpKind::SimStep { num_env: 4096 }, m.sim_sat, 1.0);
+        // Above saturation the share buys nothing.
+        assert!((full - at_sat).abs() < 1e-12);
+        // Below saturation time grows.
+        let small = m.op_time(OpKind::SimStep { num_env: 4096 }, m.sim_sat / 2.0, 1.0);
+        assert!(small > full * 1.5);
+    }
+
+    #[test]
+    fn gemm_scales_linearly_in_share() {
+        let m = at();
+        let t1 = m.op_time(OpKind::TrainGrad { samples: 65536 }, 1.0, 1.0) - L_GEMM;
+        let t4 = m.op_time(OpKind::TrainGrad { samples: 65536 }, 0.25, 1.0) - L_GEMM;
+        assert!((t4 / t1 - 4.0).abs() < 0.05, "ratio {}", t4 / t1);
+    }
+
+    #[test]
+    fn paper_phase_ratios_hold_at_reference_config() {
+        // T_s ~= 6 T_a ~= 3 T_t for AT at num_env=4096, horizon=16 (§5.1).
+        let m = at();
+        let n = 4096;
+        let h = 16;
+        let ts = h as f64 * m.op_time(OpKind::SimStep { num_env: n }, 1.0, 1.0);
+        let ta = h as f64 * m.op_time(OpKind::PolicyFwd { num_env: n }, 1.0, 1.0);
+        // T_t is the whole training phase: PPO runs DEFAULT_PPO_EPOCHS
+        // passes over the collected batch.
+        let tt = crate::drl::DEFAULT_PPO_EPOCHS as f64
+            * m.op_time(OpKind::TrainGrad { samples: n * h }, 1.0, 1.0);
+        let r_a = ts / ta;
+        let r_t = ts / tt;
+        assert!((r_a - 6.0).abs() < 1.2, "T_s/T_a = {r_a}");
+        assert!((r_t - 3.0).abs() < 0.6, "T_s/T_t = {r_t}");
+    }
+
+    #[test]
+    fn full_gpu_ant_sim_rate_is_isaac_scale() {
+        // ~180k env-steps/s for Ant on a full A100 (Isaac Gym magnitude).
+        let m = at();
+        let n = 4096;
+        let t = m.op_time(OpKind::SimStep { num_env: n }, 1.0, 1.0);
+        let rate = n as f64 / t;
+        assert!(rate > 8e4 && rate < 5e5, "sim rate {rate}");
+    }
+
+    #[test]
+    fn multiplexed_sim_beats_exclusive() {
+        // 4 concurrent GMIs at 1/4 share each should aggregate ~3x the
+        // exclusive sim rate (the paper's core mechanism).
+        let m = at();
+        let excl = 4096.0 / m.op_time(OpKind::SimStep { num_env: 4096 }, 1.0, 1.0);
+        let per_gmi = 1024.0 / m.op_time(OpKind::SimStep { num_env: 1024 }, 0.25, 1.0);
+        let agg = 4.0 * per_gmi;
+        assert!(agg / excl > 2.0, "aggregate gain {}", agg / excl);
+        assert!(agg / excl < 3.5, "aggregate gain {}", agg / excl);
+    }
+
+    #[test]
+    fn memory_monotone_in_num_env() {
+        let m = at();
+        let a = m.mem_gib(512, 16, true, true);
+        let b = m.mem_gib(4096, 16, true, true);
+        let c = m.mem_gib(8192, 16, true, true);
+        assert!(a < b && b < c);
+        assert!(c < A100_MEM_GIB, "8k envs must fit one A100: {c}");
+    }
+
+    #[test]
+    fn occupancy_bounded() {
+        let m = at();
+        for op in [
+            OpKind::SimStep { num_env: 1024 },
+            OpKind::PolicyFwd { num_env: 1024 },
+            OpKind::TrainGrad { samples: 1024 },
+            OpKind::AdamApply,
+        ] {
+            for share in [0.1, 0.25, 0.5, 1.0] {
+                let o = m.sm_occupancy(op, share);
+                assert!(o > 0.0 && o <= share + 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Virtual timeline: the GPU timing model (DESIGN.md §5).
+//!
+//! Real numerics execute on the PJRT CPU client, but wall-clock CPU time is
+//! meaningless as an A100 proxy. Every operation instead advances a per-GMI
+//! **virtual clock** by a cost from the calibrated model in [`CostModel`];
+//! synchronization points (allreduce, p2p receive) merge clocks Lamport
+//! style. Virtual time is deterministic, so every bench is reproducible.
+
+mod clock;
+mod cost;
+
+pub use clock::Clock;
+pub use cost::{CostModel, OpKind, A100_F32_FLOPS, A100_SM_COUNT};

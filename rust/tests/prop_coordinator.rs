@@ -1,0 +1,268 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The offline build has no proptest crate; these use a seeded SplitMix64
+//! generator over many random cases — same methodology (random inputs,
+//! universal assertions, deterministic on failure via the printed seed).
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::comm::{reduce_mean, select_strategy, LgrEngine, ReduceStrategy};
+use gmi_drl::channels::{Batcher, ChannelKind, Chunk, Compressor, Packet, ShareMode};
+use gmi_drl::config::static_registry;
+use gmi_drl::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+use gmi_drl::vtime::{Clock, CostModel, OpKind};
+
+/// Deterministic PRNG (SplitMix64).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+
+    fn f32(&mut self) -> f32 {
+        (self.next() >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+    }
+}
+
+#[test]
+fn prop_lgr_all_strategies_agree_with_naive_mean() {
+    let mut rng = Rng(0xfeed);
+    for case in 0..60 {
+        let g = rng.range(1, 8);
+        let t = rng.range(1, 4);
+        let len = rng.range(1, 300);
+        let mpl: Vec<Vec<usize>> =
+            (0..g).map(|i| (0..t).map(|j| i * t + j).collect()).collect();
+        let engine = LgrEngine::new(Topology::dgx_a100(g), mpl).unwrap();
+        let grads: Vec<Vec<f32>> =
+            (0..g * t).map(|_| (0..len).map(|_| rng.f32()).collect()).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let want = reduce_mean(&refs);
+
+        for strat in [
+            ReduceStrategy::MultiProcess,
+            ReduceStrategy::MultiRing,
+            ReduceStrategy::Hierarchical,
+        ] {
+            match engine.allreduce(&grads, strat) {
+                Ok((got, secs)) => {
+                    assert_eq!(got, want, "case {case} strat {strat} g={g} t={t}");
+                    assert!(secs >= 0.0 && secs.is_finite());
+                }
+                Err(_) => {
+                    // only MRR may reject, and only when t > g or t=1 cases
+                    assert_eq!(strat, ReduceStrategy::MultiRing, "case {case}");
+                    assert!(t > g, "MRR rejected valid layout g={g} t={t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_algorithm1_selects_valid_strategy() {
+    let mut rng = Rng(0xbeef);
+    for case in 0..200 {
+        let g = rng.range(1, 8);
+        // possibly unequal GMIs per GPU
+        let mpl: Vec<Vec<usize>> = {
+            let mut id = 0;
+            (0..g)
+                .map(|_| {
+                    let t = rng.range(1, 5);
+                    (0..t)
+                        .map(|_| {
+                            id += 1;
+                            id
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let strat = select_strategy(&mpl);
+        let sizes: Vec<usize> = mpl.iter().map(|v| v.len()).collect();
+        let equal = sizes.windows(2).all(|w| w[0] == w[1]);
+        match strat {
+            ReduceStrategy::MultiProcess => assert_eq!(g, 1, "case {case}"),
+            ReduceStrategy::MultiRing => {
+                // MRR must be executable: equal counts, t <= g
+                assert!(equal && sizes[0] <= g, "case {case}: invalid MRR for {sizes:?}");
+            }
+            ReduceStrategy::Hierarchical => {
+                assert!(g > 1, "case {case}");
+                assert!(!equal || sizes[0] > g, "case {case}: HAR chosen where MRR fits");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_samples() {
+    let mut rng = Rng(0xcafe);
+    for case in 0..50 {
+        let batch = rng.range(4, 64);
+        let mut bt = Batcher::new(0, ShareMode::MultiChannel, batch);
+        let mut pushed = 0usize;
+        let mut emitted = 0usize;
+        for i in 0..rng.range(5, 30) {
+            let envs = rng.range(1, 32);
+            let steps = rng.range(1, 4);
+            pushed += steps * envs;
+            for &ch in &ChannelKind::ALL {
+                let w = ch.width(6, 2);
+                let pkt = Packet {
+                    channel: ch,
+                    chunks: vec![Chunk {
+                        channel: ch,
+                        agent: 0,
+                        seq: i as u64,
+                        steps,
+                        envs,
+                        data: vec![1.0; steps * envs * w],
+                        ready: Clock(i as f64),
+                    }],
+                    ready: Clock(i as f64),
+                };
+                for b in bt.push(pkt, Clock(i as f64 + 0.5)) {
+                    emitted += b.samples;
+                    // every emitted batch is complete on all channels
+                    assert_eq!(b.data.len(), ChannelKind::ALL.len(), "case {case}");
+                    assert_eq!(b.data[&ChannelKind::State].len(), b.samples * 6);
+                }
+            }
+        }
+        let pending = bt.pending_samples(ChannelKind::State);
+        assert_eq!(pushed, emitted + pending, "case {case}: sample leak");
+        assert!(pending < batch, "case {case}: batcher under-emitted");
+    }
+}
+
+#[test]
+fn prop_compressor_conserves_bytes() {
+    let mut rng = Rng(0xd00d);
+    for _ in 0..40 {
+        let threshold = rng.range(8, 256);
+        let mut cp = Compressor::new(ShareMode::MultiChannel, threshold);
+        let mut bytes_in = 0usize;
+        let mut bytes_out = 0usize;
+        for i in 0..rng.range(3, 40) {
+            let envs = rng.range(1, 64);
+            let chunk = Chunk {
+                channel: ChannelKind::State,
+                agent: rng.range(0, 5),
+                seq: i as u64,
+                steps: 1,
+                envs,
+                data: vec![0.5; envs * 10],
+                ready: Clock(i as f64),
+            };
+            bytes_in += chunk.bytes();
+            for p in cp.push(vec![chunk]) {
+                bytes_out += p.bytes();
+            }
+        }
+        for p in cp.flush() {
+            bytes_out += p.bytes();
+        }
+        assert_eq!(bytes_in, bytes_out, "compressor must not drop/duplicate data");
+        assert_eq!(cp.staged_bytes(), 0);
+    }
+}
+
+#[test]
+fn prop_manager_never_oversubscribes() {
+    let mut rng = Rng(0xabad);
+    for _ in 0..60 {
+        let gpus = rng.range(1, 8);
+        let mut mgr = GmiManager::new(Topology::dgx_a100(gpus));
+        for id in 0..rng.range(1, 24) {
+            let share = rng.range(5, 60) as f64 / 100.0;
+            let _ = mgr.add_gmi(GmiSpec {
+                id,
+                gpu: rng.range(0, gpus - 1),
+                sm_share: share,
+                mem_gib: rng.range(1, 20) as f64,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 256,
+            });
+        }
+        // invariant: accepted shares and memory never exceed capacity
+        for gpu in 0..gpus {
+            let share: f64 =
+                mgr.all().filter(|g| g.gpu == gpu).map(|g| g.sm_share).sum();
+            let mem: f64 = mgr.all().filter(|g| g.gpu == gpu).map(|g| g.mem_gib).sum();
+            assert!(share <= 1.0 + 1e-9, "GPU {gpu} share {share}");
+            assert!(mem <= 40.0 + 1e-9, "GPU {gpu} mem {mem}");
+        }
+        // mapping list covers exactly the registered GMIs
+        let mpl = mgr.mapping_list(|_| true);
+        let count: usize = mpl.iter().map(|v| v.len()).sum();
+        assert_eq!(count, mgr.len());
+    }
+}
+
+#[test]
+fn prop_cost_model_monotonicity() {
+    let mut rng = Rng(0x1234);
+    let reg = static_registry();
+    let benches: Vec<_> = reg.values().collect();
+    for _ in 0..100 {
+        let b = benches[rng.range(0, benches.len() - 1)];
+        let cost = CostModel::new(b);
+        let n = rng.range(64, 8192);
+        let s1 = rng.range(10, 99) as f64 / 100.0;
+        let s2 = (s1 + 0.01).min(1.0);
+        for op in [
+            OpKind::SimStep { num_env: n },
+            OpKind::PolicyFwd { num_env: n },
+            OpKind::TrainGrad { samples: n },
+        ] {
+            // more share never hurts
+            let t1 = cost.op_time(op, s1, 1.0);
+            let t2 = cost.op_time(op, s2, 1.0);
+            assert!(t2 <= t1 + 1e-12, "{op:?} share {s1}->{s2}: {t1} -> {t2}");
+            // interference never helps
+            assert!(cost.op_time(op, s1, 1.3) >= t1);
+            // more work never takes less time
+            let big = match op {
+                OpKind::SimStep { .. } => OpKind::SimStep { num_env: n * 2 },
+                OpKind::PolicyFwd { .. } => OpKind::PolicyFwd { num_env: n * 2 },
+                OpKind::TrainGrad { .. } => OpKind::TrainGrad { samples: n * 2 },
+                x => x,
+            };
+            assert!(cost.op_time(big, s1, 1.0) > t1);
+        }
+        // memory monotone in num_env
+        assert!(cost.mem_gib(n * 2, 16, true, true) > cost.mem_gib(n, 16, true, true));
+    }
+}
+
+#[test]
+fn prop_clock_merges_are_monotone() {
+    let mut rng = Rng(0x777);
+    for _ in 0..100 {
+        let mut c = Clock::zero();
+        let mut last = 0.0f64;
+        for _ in 0..rng.range(1, 50) {
+            let before = c.seconds();
+            if rng.range(0, 1) == 0 {
+                c.advance(rng.range(0, 1000) as f64 / 1000.0);
+            } else {
+                let other = Clock(rng.range(0, 2000) as f64 / 1000.0);
+                c.merge_then_advance(other, rng.range(0, 100) as f64 / 1000.0);
+            }
+            assert!(c.seconds() >= before, "clock went backwards");
+            last = c.seconds();
+        }
+        assert!(last.is_finite());
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the python-AOT -> rust-load -> execute path, end to end.
+//!
+//! Requires `make artifacts` (or GMI_DRL_ARTIFACTS pointing at a manifest).
+//! Runs the full init -> rollout -> grad -> apply cycle of one benchmark on
+//! the PJRT CPU client and checks shapes and basic numerics.
+
+use gmi_drl::config::artifacts_dir;
+use gmi_drl::runtime::{ArtifactKind, ExecServer, HostTensor};
+use gmi_drl::Manifest;
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn full_training_cycle_roundtrip() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    // Use the cheapest benchmark present.
+    let abbr = if manifest.benchmarks.contains_key("BB") {
+        "BB".to_string()
+    } else {
+        manifest.benchmarks.keys().next().unwrap().clone()
+    };
+    let b = manifest.bench(&abbr).unwrap().clone();
+    let (n, m, d, a, p) = (b.num_env, b.horizon, b.obs_dim, b.act_dim, b.num_params);
+
+    let server = ExecServer::start(dir).unwrap();
+    let h = server.handle();
+
+    // init
+    let out = h
+        .execute(&abbr, ArtifactKind::Init, vec![HostTensor::scalar_i32(42)])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let params = out[0].clone();
+    let state = out[1].clone();
+    assert_eq!(params.len(), p);
+    assert_eq!(state.shape(), &[n as i64, d as i64]);
+    // init is deterministic in the seed
+    let out2 = h
+        .execute(&abbr, ArtifactKind::Init, vec![HostTensor::scalar_i32(42)])
+        .unwrap();
+    assert_eq!(out2[0], params);
+
+    // rollout
+    let out = h
+        .execute(
+            &abbr,
+            ArtifactKind::Rollout,
+            vec![params.clone(), state.clone(), HostTensor::scalar_i32(1)],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 8);
+    let (obs, acts, logps, rews, vals, dones, _last_state, last_value) = (
+        out[0].clone(),
+        out[1].clone(),
+        out[2].clone(),
+        out[3].clone(),
+        out[4].clone(),
+        out[5].clone(),
+        out[6].clone(),
+        out[7].clone(),
+    );
+    assert_eq!(obs.shape(), &[m as i64, n as i64, d as i64]);
+    assert_eq!(acts.shape(), &[m as i64, n as i64, a as i64]);
+    assert_eq!(logps.shape(), &[m as i64, n as i64]);
+    assert_eq!(last_value.shape(), &[n as i64]);
+    assert!(rews.as_f32().unwrap().iter().all(|v| v.is_finite()));
+
+    // grad
+    let out = h
+        .execute(
+            &abbr,
+            ArtifactKind::Grad,
+            vec![params.clone(), obs, acts, logps, rews, vals, dones, last_value],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 7);
+    let grads = out[0].clone();
+    assert_eq!(grads.len(), p);
+    let loss = out[1].scalar_value_f32().unwrap();
+    assert!(loss.is_finite(), "loss {loss}");
+    let gnorm: f32 = grads.as_f32().unwrap().iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 0.0 && gnorm.is_finite(), "grad norm {gnorm}");
+
+    // apply (Adam step actually changes the parameters)
+    let zeros = HostTensor::zeros_f32(&[p]);
+    let out = h
+        .execute(
+            &abbr,
+            ArtifactKind::Apply,
+            vec![
+                params.clone(),
+                zeros.clone(),
+                zeros,
+                HostTensor::scalar_i32(0),
+                grads,
+                HostTensor::scalar_f32(3e-4),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    let new_params = &out[0];
+    assert_eq!(new_params.len(), p);
+    assert_ne!(new_params.as_f32().unwrap(), params.as_f32().unwrap());
+    assert_eq!(out[3].scalar_value_i32().unwrap(), 1);
+
+    let (execs, _, _, _, _) = h.stats().snapshot();
+    assert!(execs >= 5);
+}

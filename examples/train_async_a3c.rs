@@ -51,6 +51,7 @@ fn main() -> Result<()> {
             param_sync_every: 4,
             lr: 3e-4,
             real_replicas: 1,
+            ..Default::default()
         };
         let r = run_async(&layout, &bench, &cost, &compute, &cfg)?;
         table.row(vec![

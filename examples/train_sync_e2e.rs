@@ -52,6 +52,7 @@ fn main() -> Result<()> {
         seed: 7,
         real_replicas: 1,
         strategy_override: None,
+        elastic: None,
     };
     let t0 = std::time::Instant::now();
     let r = run_sync(&layout, &bench, &cost, &compute, &cfg)?;

@@ -3,10 +3,11 @@
 //! the data-parallel communication backend, plus the non-GMI A3C setup and
 //! the Direct-Share co-scheduling baseline of Fig 8.
 //!
-//! Baselines share the same compute artifacts and the same cost model as
-//! GMI-DRL; the ONLY differences are the resource layout (GPU-granularity
-//! processes) and the communication path — isolating the system effect the
-//! paper measures.
+//! Baselines share the same compute artifacts, the same cost model, and
+//! the same discrete-event [`engine`](crate::engine) (via the orchestrators
+//! they delegate to) as GMI-DRL; the ONLY differences are the resource
+//! layout (GPU-granularity processes) and the communication path —
+//! isolating the system effect the paper measures.
 
 use anyhow::Result;
 
@@ -76,8 +77,8 @@ pub fn isaac_sync(
     )?;
     let mut result = run_sync(&layout, bench, cost, compute, cfg)?;
     // Replace the LGR comm cost with the baseline's GPU-level collective:
-    // run_sync charged the single-GMI-per-GPU ring already (MRR over g
-    // GPUs); adjust for the backend's per-tensor behaviour.
+    // the engine charged the single-GMI-per-GPU ring already (MRR over g
+    // GPUs); stretch the span for the backend's per-tensor behaviour.
     let g = topo.num_gpus();
     if g > 1 {
         let n_tensors = 2 * (bench.hidden.len() + 1) * 2 + 1; // per-layer w+b, actor+critic, log_std
@@ -88,14 +89,7 @@ pub fn isaac_sync(
             CommBackend::Horovod => 2.5e-3,
         };
         let extra = per_epoch_extra * (cfg.ppo_epochs * cfg.iterations) as f64;
-        let m = &mut result.metrics;
-        let new_span = m.span_s + extra;
-        let scale = m.span_s / new_span;
-        m.steps_per_sec *= scale;
-        m.pps *= scale;
-        m.ttop *= scale;
-        m.comm_s += extra;
-        m.span_s = new_span;
+        result.metrics.stretch_span(extra);
     }
     Ok(result)
 }

@@ -5,10 +5,14 @@
 //! dispenser/compressor/migrator/batcher pipeline moves it to trainer GMIs
 //! on the training GPUs; trainers update asynchronously and periodically
 //! push fresh parameters back to the agents.
+//!
+//! Timing runs on the shared [`engine`](crate::engine): agents and trainers
+//! are executors; batch consumption is a blocking-receive charge
+//! (`charge_after`) against the batch's pipeline arrival time.
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::compute::Compute;
 use crate::channels::{
@@ -16,9 +20,10 @@ use crate::channels::{
     TrainerEndpoint,
 };
 use crate::config::BenchInfo;
+use crate::engine::{Engine, ExecutorId, OpCharge};
 use crate::mapping::Layout;
-use crate::metrics::{RunMetrics, UtilizationTracker};
-use crate::vtime::{Clock, CostModel, OpKind};
+use crate::metrics::{RewardTracker, RunMetrics};
+use crate::vtime::{CostModel, OpKind};
 
 #[derive(Debug, Clone)]
 pub struct AsyncConfig {
@@ -32,6 +37,11 @@ pub struct AsyncConfig {
     pub param_sync_every: usize,
     pub lr: f32,
     pub real_replicas: usize,
+    /// Per-channel transfer granularity in bytes (the CP staging
+    /// threshold). The default balances host-path efficiency
+    /// (HOST_MSG_HALF_BYTES) against staging latency on the narrow
+    /// channels; Table-8-style sweeps vary it.
+    pub compressor_granularity: usize,
 }
 
 impl Default for AsyncConfig {
@@ -44,6 +54,7 @@ impl Default for AsyncConfig {
             param_sync_every: 4,
             lr: super::DEFAULT_LR,
             real_replicas: 1,
+            compressor_granularity: 256 << 10,
         }
     }
 }
@@ -80,10 +91,7 @@ pub fn run_async(
         .iter()
         .map(|&a| Dispenser::new(a, bench.obs_dim, bench.act_dim))
         .collect();
-    // Per-channel transfer granularity: 256 KiB balances host-path
-    // efficiency (HOST_MSG_HALF_BYTES) against staging latency on the
-    // narrow channels.
-    let mut compressor = Compressor::new(cfg.share_mode, 256 << 10);
+    let mut compressor = Compressor::new(cfg.share_mode, cfg.compressor_granularity);
     let mut batchers: BTreeMap<usize, Batcher> = trainers
         .iter()
         .map(|&t| (t, Batcher::new(t, cfg.share_mode, cfg.batch_samples)))
@@ -100,11 +108,15 @@ pub fn run_async(
     let mut trainer_worker = compute.init(bench, cfg.seed)?;
     let mut last_real_rollout = None;
 
-    let mut agent_clocks = vec![Clock::zero(); agents.len()];
-    let mut trainer_clocks: BTreeMap<usize, Clock> =
-        trainers.iter().map(|&t| (t, Clock::zero())).collect();
-    let mut util = UtilizationTracker::new();
+    let mut engine = Engine::new(&layout.manager, cost);
+    let agent_ids = engine.add_group(agents)?;
+    let trainer_ids: BTreeMap<usize, ExecutorId> = trainers
+        .iter()
+        .copied()
+        .zip(engine.add_group(trainers)?)
+        .collect();
     let mut stats = ChannelStats::default();
+    let mut rewards = RewardTracker::default();
     let m = bench.horizon;
     let mut updates = 0usize;
     let mut samples_trained = 0usize;
@@ -113,37 +125,51 @@ pub fn run_async(
     // (trainer batch queue handled inline: batches process on arrival.)
 
     for round in 0..cfg.rounds {
-        for (i, &agid) in agents.iter().enumerate() {
-            let spec = layout.manager.gmi(agid).context("agent gmi")?;
-            let co = layout.manager.co_resident(agid);
-            let share = spec.sm_share;
-            let inter = spec.interference(co, cost);
-            let n_env = spec.num_env;
+        let mut round_reward = 0.0f64;
+        let mut round_n = 0usize;
+        for i in 0..agents.len() {
+            let n_env = engine.num_env(agent_ids[i]);
 
-            // rollout segment (sim + fwd per step)
-            let t_sim = cost.op_time(OpKind::SimStep { num_env: n_env }, share, inter);
-            let t_fwd = cost.op_time(OpKind::PolicyFwd { num_env: n_env }, share, inter);
-            let dur = m as f64 * (t_sim + t_fwd);
-            let now = agent_clocks[i].advance(dur);
-            util.record(
-                spec.gpu,
-                cost.sm_occupancy(OpKind::SimStep { num_env: n_env }, share),
-                m as f64 * t_sim,
-                now.seconds(),
+            // rollout segment (sim + fwd per step); only the simulation
+            // records occupancy — the agent forward overlaps the pipeline.
+            let now = engine.charge_steps(
+                cost,
+                agent_ids[i],
+                m as f64,
+                &[
+                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
+                    OpCharge::unrecorded(OpKind::PolicyFwd { num_env: n_env }),
+                ],
+                0.0,
             );
 
-            // experience: real on replicas, synthetic otherwise. In Null
-            // mode everything is synthetic at the GMI's own env count (the
-            // artifact batch size is irrelevant without real numerics).
-            let seg = if compute.is_real() && i < real_n {
-                let ro = compute.rollout(
-                    bench,
-                    &mut agent_workers[i],
-                    cfg.seed + (round * 257 + i) as i32,
-                )?;
-                reward_sum += ro.mean_reward as f64;
+            // Rollout numerics on the real replicas. Under Null compute
+            // only the deterministic pseudo reward is needed for the
+            // Fig 9-style curve — no tensors are materialized.
+            let seed = cfg.seed + (round * 257 + i) as i32;
+            let ro = if compute.is_real() && i < real_n {
+                Some(compute.rollout(bench, &mut agent_workers[i], seed)?)
+            } else {
+                None
+            };
+            if i < real_n {
+                let r = ro
+                    .as_ref()
+                    .map(|ro| ro.mean_reward)
+                    .unwrap_or_else(|| Compute::null_mean_reward(seed))
+                    as f64;
+                reward_sum += r;
                 reward_n += 1;
-                let seg = RolloutSegment {
+                round_reward += r;
+                round_n += 1;
+            }
+
+            // experience: real bytes on real replicas, synthetic otherwise.
+            // In Null mode everything is synthetic at the GMI's own env
+            // count (the artifact batch size is irrelevant without real
+            // numerics).
+            let seg = match &ro {
+                Some(ro) => RolloutSegment {
                     steps: bench.horizon,
                     envs: bench.num_env,
                     obs: ro.obs.as_f32()?.to_vec(),
@@ -152,12 +178,12 @@ pub fn run_async(
                     rewards: ro.rewards.as_f32()?.to_vec(),
                     values: ro.values.as_f32()?.to_vec(),
                     dones: ro.dones.as_f32()?.to_vec(),
-                };
-                last_real_rollout = Some(ro);
-                seg
-            } else {
-                RolloutSegment::synthetic(m, n_env, bench.obs_dim, bench.act_dim)
+                },
+                None => RolloutSegment::synthetic(m, n_env, bench.obs_dim, bench.act_dim),
             };
+            if let Some(ro) = ro {
+                last_real_rollout = Some(ro);
+            }
 
             // DP -> CP -> MG -> BT. Chunks are grouped along the step axis
             // at training-batch granularity; the migrator's sticky
@@ -176,7 +202,7 @@ pub fn run_async(
                 // own timeline (IPC rendezvous + serialization) — the cost
                 // that makes fine-grained UCC sharing slow on the agent
                 // side (§4.2 / Table 8's PPS gap).
-                agent_clocks[i].advance(crate::cluster::HOST_LAT);
+                engine.pay(agent_ids[i], crate::cluster::HOST_LAT);
                 let decision = migrator.route(&pkt);
                 stats.transfer_seconds += decision.transfer_s;
                 stats.transfer_ops += 1;
@@ -189,23 +215,15 @@ pub fn run_async(
 
                 // trainer consumes ready batches immediately (async)
                 for batch in ready_batches {
-                    let tclock = trainer_clocks.get_mut(&decision.trainer).unwrap();
-                    let tspec = layout.manager.gmi(decision.trainer).unwrap();
-                    let tco = layout.manager.co_resident(decision.trainer);
-                    let tshare = tspec.sm_share;
-                    let tinter = tspec.interference(tco, cost);
-                    let t_grad =
-                        cost.op_time(OpKind::TrainGrad { samples: batch.samples }, tshare, tinter);
-                    let t_apply = cost.op_time(OpKind::AdamApply, tshare, tinter);
-                    tclock.merge_then_advance(batch.ready, t_grad + t_apply);
-                    util.record(
-                        tspec.gpu,
-                        cost.sm_occupancy(
-                            OpKind::TrainGrad { samples: batch.samples },
-                            tshare,
-                        ),
-                        t_grad,
-                        tclock.seconds(),
+                    let tid = trainer_ids[&decision.trainer];
+                    engine.charge_after(
+                        cost,
+                        tid,
+                        batch.ready,
+                        &[
+                            OpCharge::recorded(OpKind::TrainGrad { samples: batch.samples }),
+                            OpCharge::unrecorded(OpKind::AdamApply),
+                        ],
                     );
                     migrator.complete(decision.trainer, batch.samples);
                     samples_trained += batch.samples;
@@ -226,15 +244,23 @@ pub fn run_async(
                     if updates % cfg.param_sync_every == 0 {
                         let t_push = topo.host_transfer_time(bench.param_bytes(), 1)
                             + bench.param_bytes() as f64 / topo.inter_gpu_bw();
-                        for c in agent_clocks.iter_mut() {
-                            c.advance(t_push);
-                        }
+                        engine.pay_group(&agent_ids, t_push);
                         for w in agent_workers.iter_mut() {
                             w.params = trainer_worker.params.clone();
                         }
                     }
                 }
             }
+        }
+
+        // Fig 9-style learning signal: accumulate this round's mean reward
+        // into the cumulative curve at the agents' current virtual time
+        // (same RewardTracker semantics as run_sync).
+        if round_n > 0 {
+            rewards.push(
+                engine.max_time(&agent_ids).seconds(),
+                round_reward / round_n as f64,
+            );
         }
     }
 
@@ -245,11 +271,8 @@ pub fn run_async(
         stats.bytes_moved += pkt.bytes() as u64;
     }
 
-    let agent_span = Clock::max_of(&agent_clocks).seconds();
-    let trainer_span = trainer_clocks
-        .values()
-        .fold(0.0f64, |a, c| a.max(c.seconds()));
-    let span = agent_span.max(trainer_span);
+    let agent_span = engine.max_time(&agent_ids).seconds();
+    let span = engine.span();
     let total_preds =
         (cfg.rounds * m) as f64 * agents.len() as f64 * layout.num_env_per_gmi as f64;
     let metrics = RunMetrics {
@@ -257,9 +280,9 @@ pub fn run_async(
         pps: total_preds / agent_span,
         ttop: samples_trained as f64 / span,
         span_s: span,
-        utilization: util.mean_utilization(),
+        utilization: engine.mean_utilization(),
         final_reward: if reward_n > 0 { reward_sum / reward_n as f64 } else { 0.0 },
-        reward_curve: vec![],
+        reward_curve: rewards.curve.clone(),
         comm_s: stats.transfer_seconds,
         peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
     };
@@ -290,6 +313,14 @@ mod tests {
         assert!(r.updates > 0, "no trainer updates happened");
         assert!(r.metrics.ttop > 0.0);
         assert!(r.channel_stats.packets_out > 0);
+        // one cumulative learning-signal sample per round, monotone in
+        // both virtual time and accumulated reward
+        assert_eq!(r.metrics.reward_curve.len(), 12);
+        assert!(r
+            .metrics
+            .reward_curve
+            .windows(2)
+            .all(|w| w[1].0 >= w[0].0 && w[1].1 >= w[0].1));
     }
 
     #[test]
@@ -326,6 +357,31 @@ mod tests {
     }
 
     #[test]
+    fn granularity_knob_changes_packetization() {
+        // Satellite of the Table 8 sweep: a finer CP staging threshold
+        // moves the same bytes in more, smaller packets.
+        let (layout, b, cost) = setup();
+        let mk = |granularity| AsyncConfig {
+            rounds: 12,
+            batch_samples: 4096,
+            compressor_granularity: granularity,
+            ..Default::default()
+        };
+        let coarse = run_async(&layout, &b, &cost, &Compute::Null, &mk(256 << 10)).unwrap();
+        let fine = run_async(&layout, &b, &cost, &Compute::Null, &mk(4 << 10)).unwrap();
+        assert!(
+            fine.channel_stats.packets_out > coarse.channel_stats.packets_out,
+            "fine {} vs coarse {} packets",
+            fine.channel_stats.packets_out,
+            coarse.channel_stats.packets_out
+        );
+        assert_eq!(fine.channel_stats.bytes_moved, coarse.channel_stats.bytes_moved);
+        assert!(
+            fine.channel_stats.mean_packet_bytes() < coarse.channel_stats.mean_packet_bytes()
+        );
+    }
+
+    #[test]
     fn deterministic() {
         let (layout, b, cost) = setup();
         let cfg = AsyncConfig { rounds: 6, ..Default::default() };
@@ -333,5 +389,6 @@ mod tests {
         let c = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
         assert_eq!(a.metrics.pps, c.metrics.pps);
         assert_eq!(a.updates, c.updates);
+        assert_eq!(a.metrics.reward_curve, c.metrics.reward_curve);
     }
 }

@@ -84,6 +84,13 @@ impl Compute {
         }
     }
 
+    /// The deterministic pseudo reward a Null-compute rollout reports for
+    /// `seed` — exposed so reward-only consumers (the async learning
+    /// curve) can skip materializing the full synthetic tensors.
+    pub fn null_mean_reward(seed: i32) -> f32 {
+        0.05 + 0.001 * (seed % 97) as f32
+    }
+
     /// One rollout segment of `b.horizon` steps over `b.num_env` envs.
     pub fn rollout(&self, b: &BenchInfo, w: &mut WorkerState, seed: i32) -> Result<RolloutOut> {
         match self {
@@ -136,7 +143,7 @@ impl Compute {
                     dones: HostTensor::zeros_f32(&[m, n]),
                     last_state: mk(&[n, d], 0.1),
                     last_value: mk(&[n], 0.0),
-                    mean_reward: 0.05 + 0.001 * (seed % 97) as f32,
+                    mean_reward: Self::null_mean_reward(seed),
                 })
             }
         }

@@ -4,15 +4,20 @@
 //! TCG layouts the state/action handoff is intra-GMI (free); for TDG
 //! layouts each interaction round ships `2S + A + W` bytes across the GMI
 //! boundary (Table 4's COM term) — the cost that motivates co-location.
+//!
+//! Timing runs on the shared [`engine`](crate::engine): each serving GMI is
+//! one executor; the TDG boundary crossing is charged as unoccupied
+//! per-step time on the same timeline.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::compute::Compute;
 use crate::config::BenchInfo;
+use crate::engine::{Engine, OpCharge};
 use crate::gmi::Role;
 use crate::mapping::Layout;
-use crate::metrics::{RunMetrics, UtilizationTracker};
-use crate::vtime::{Clock, CostModel, OpKind};
+use crate::metrics::RunMetrics;
+use crate::vtime::{CostModel, OpKind};
 
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -51,54 +56,37 @@ pub fn run_serving(
         workers.push(compute.init(bench, cfg.seed)?);
     }
 
-    let mut clocks = vec![Clock::zero(); gmis.len()];
-    let mut util = UtilizationTracker::new();
+    let mut engine = Engine::new(&layout.manager, cost);
+    let ids = engine.add_group(gmis)?;
     let m = bench.horizon;
-    let topo = layout.manager.topology().clone();
     let mut reward_sum = 0.0f64;
     let mut reward_count = 0usize;
 
     for round in 0..cfg.rounds {
-        for (i, &gid) in gmis.iter().enumerate() {
-            let spec = layout.manager.gmi(gid).context("gmi missing")?;
-            let co = layout.manager.co_resident(gid);
-            let share = match spec.backend {
-                crate::gmi::GmiBackend::DirectShare => 1.0 / (co + 1) as f64,
-                _ => spec.sm_share,
-            };
-            let inter = spec.interference(co, cost);
-            let n_env = spec.num_env;
+        for (i, &id) in ids.iter().enumerate() {
+            let n_env = engine.num_env(id);
+            let share = engine.share(id);
 
-            let t_sim = cost.op_time(OpKind::SimStep { num_env: n_env }, share, inter);
+            let sim = OpCharge::recorded(OpKind::SimStep { num_env: n_env });
             // In TDG the agent runs on its own small GMI; model its forward
             // at the agent GMI's share (alpha ~ 0.2 of the pair budget).
-            let t_fwd = if dedicated {
-                cost.op_time(OpKind::PolicyFwd { num_env: n_env }, (share * 0.25).max(0.02), inter)
+            let fwd = if dedicated {
+                OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
+                    .with_time_share((share * 0.25).max(0.02))
             } else {
-                cost.op_time(OpKind::PolicyFwd { num_env: n_env }, share, inter)
+                OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
             };
             // TDG: per interaction step, 2S + A + W bytes cross the GMI
             // boundary through the host (Table 4).
             let t_comm = if dedicated {
                 let bytes = n_env * 4 * (2 * bench.obs_dim + bench.act_dim + 1);
-                topo.host_transfer_time(bytes, co.max(1))
+                engine
+                    .topology()
+                    .host_transfer_time(bytes, engine.co_resident(id).max(1))
             } else {
                 0.0
             };
-            let dur = m as f64 * (t_sim + t_fwd + t_comm);
-            let end = clocks[i].advance(dur).seconds();
-            util.record(
-                spec.gpu,
-                cost.sm_occupancy(OpKind::SimStep { num_env: n_env }, share),
-                m as f64 * t_sim,
-                end,
-            );
-            util.record(
-                spec.gpu,
-                cost.sm_occupancy(OpKind::PolicyFwd { num_env: n_env }, share),
-                m as f64 * t_fwd,
-                end,
-            );
+            engine.charge_steps(cost, id, m as f64, &[sim, fwd], t_comm);
 
             if i < real_n {
                 let ro =
@@ -109,7 +97,7 @@ pub fn run_serving(
         }
     }
 
-    let span = Clock::max_of(&clocks).seconds();
+    let span = engine.span();
     let total_steps = (cfg.rounds * m) as f64
         * gmis.len() as f64
         * layout.num_env_per_gmi as f64;
@@ -118,7 +106,7 @@ pub fn run_serving(
         pps: total_steps / span,
         ttop: 0.0,
         span_s: span,
-        utilization: util.mean_utilization(),
+        utilization: engine.mean_utilization(),
         final_reward: if reward_count > 0 { reward_sum / reward_count as f64 } else { 0.0 },
         reward_curve: vec![],
         comm_s: 0.0,

@@ -6,16 +6,22 @@
 //! reduction across trainer GMIs, (iii) Adam update everywhere. For TDG_EX
 //! layouts the experience additionally crosses GMI boundaries (the cost the
 //! paper's TCG_EX avoids).
+//!
+//! All timing runs on the shared [`engine`](crate::engine): this module
+//! describes *what* executes where; clocks, share math, and utilization
+//! accounting live in the engine. With [`SyncConfig::elastic`] set, the
+//! engine's elastic controller re-provisions SM shares between iterations
+//! toward the bottleneck role.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::compute::{Compute, WorkerState};
 use crate::comm::{LgrEngine, ReduceStrategy};
 use crate::config::BenchInfo;
-use crate::gmi::GmiBackend;
+use crate::engine::{ElasticConfig, ElasticController, Engine, OpCharge};
 use crate::mapping::Layout;
-use crate::metrics::{RewardTracker, RunMetrics, UtilizationTracker};
-use crate::vtime::{Clock, CostModel, OpKind};
+use crate::metrics::{RewardTracker, RunMetrics};
+use crate::vtime::{CostModel, OpKind};
 
 /// Sync-training run configuration.
 #[derive(Debug, Clone)]
@@ -34,6 +40,9 @@ pub struct SyncConfig {
     pub real_replicas: usize,
     /// Force a reduction strategy (None = Algorithm 1).
     pub strategy_override: Option<ReduceStrategy>,
+    /// Elastic mid-run re-provisioning: between iterations, shift SM share
+    /// toward the bottleneck role group (None = static provisioning).
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for SyncConfig {
@@ -46,6 +55,7 @@ impl Default for SyncConfig {
             seed: 1,
             real_replicas: 1,
             strategy_override: None,
+            elastic: None,
         }
     }
 }
@@ -57,15 +67,8 @@ pub struct SyncRunResult {
     /// Final parameters of GMI 0 (for checkpoint-style consumers).
     pub final_params: Vec<f32>,
     pub stats_per_iter: Vec<super::TrainStats>,
-}
-
-/// Effective SM share of a GMI for timing: Direct-Share processes all see
-/// the whole GPU but time-slice it.
-fn eff_share(backend: GmiBackend, sm_share: f64, co_resident: usize) -> f64 {
-    match backend {
-        GmiBackend::DirectShare => 1.0 / (co_resident + 1) as f64,
-        _ => sm_share,
-    }
+    /// Elastic re-provisioning adjustments applied (0 when disabled).
+    pub elastic_shifts: usize,
 }
 
 pub fn run_sync(
@@ -85,6 +88,13 @@ pub fn run_sync(
     let lgr = LgrEngine::new(layout.manager.topology().clone(), mpl)?;
     let strategy = cfg.strategy_override.unwrap_or_else(|| lgr.strategy());
 
+    // The execution engine: one executor per role task. Colocated layouts
+    // (TCG_EX holistic GMIs) alias rollout and trainer onto one timeline.
+    let mut engine = Engine::new(&layout.manager, cost);
+    let roll_ids = engine.add_group(&layout.rollout_gmis)?;
+    let tr_ids = engine.add_group(&layout.trainer_gmis)?;
+    let mut elastic = cfg.elastic.clone().map(ElasticController::new);
+
     // Worker state per rollout GMI (params/adam/env); trainers in TDG_EX
     // share the leader worker state of their GPU's serving GMIs.
     let real_n = cfg.real_replicas.min(n_roll).max(1);
@@ -97,12 +107,8 @@ pub fn run_sync(
         }
     }
 
-    let mut clocks = vec![Clock::zero(); n_roll.max(n_train)];
-    let mut trainer_clocks = vec![Clock::zero(); n_train];
-    let mut util = UtilizationTracker::new();
     let mut rewards = RewardTracker::default();
     let mut stats_per_iter = Vec::new();
-    let mut comm_s = 0.0f64;
     let mut peak_mem: f64 = 0.0;
 
     let m = bench.horizon;
@@ -112,21 +118,18 @@ pub fn run_sync(
     for iter in 0..cfg.iterations {
         // ---- (i) experience collection on every rollout GMI ----
         let mut rollouts: Vec<super::RolloutOut> = Vec::with_capacity(n_roll);
-        for (i, &gid) in layout.rollout_gmis.iter().enumerate() {
-            let spec = layout.manager.gmi(gid).context("gmi missing")?;
-            let co = layout.manager.co_resident(gid);
-            let share = eff_share(spec.backend, spec.sm_share, co);
-            let inter = spec.interference(co, cost);
-            let n_env = spec.num_env;
-
-            let t_sim = cost.op_time(OpKind::SimStep { num_env: n_env }, share, inter);
-            let t_fwd = cost.op_time(OpKind::PolicyFwd { num_env: n_env }, share, inter);
-            let dur = m as f64 * (t_sim + t_fwd);
-            let end = clocks[i].advance(dur).seconds();
-            let occ_sim = cost.sm_occupancy(OpKind::SimStep { num_env: n_env }, share);
-            let occ_fwd = cost.sm_occupancy(OpKind::PolicyFwd { num_env: n_env }, share);
-            util.record(spec.gpu, occ_sim, m as f64 * t_sim, end);
-            util.record(spec.gpu, occ_fwd, m as f64 * t_fwd, end);
+        for i in 0..n_roll {
+            let n_env = engine.num_env(roll_ids[i]);
+            engine.charge_steps(
+                cost,
+                roll_ids[i],
+                m as f64,
+                &[
+                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
+                    OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env }),
+                ],
+                0.0,
+            );
             peak_mem = peak_mem.max(cost.mem_gib(n_env, m, true, colocated));
 
             let ro = if i < real_n {
@@ -141,27 +144,20 @@ pub fn run_sync(
         // TDG_EX: ship experience from serving GMIs to their GPU's trainer
         // and later ship parameters back (the Table 5 COM term).
         if !colocated {
-            let topo = layout.manager.topology();
-            for (t_idx, &tgid) in layout.trainer_gmis.iter().enumerate() {
-                let tspec = layout.manager.gmi(tgid).unwrap();
+            for (t_idx, _) in layout.trainer_gmis.iter().enumerate() {
+                let tgpu = engine.gpu(tr_ids[t_idx]);
                 // serving GMIs on the same GPU feed this trainer.
-                let feeders: Vec<usize> = layout
-                    .rollout_gmis
+                let feeders: Vec<usize> = roll_ids
                     .iter()
-                    .enumerate()
-                    .filter(|(_, &g)| layout.manager.gmi(g).unwrap().gpu == tspec.gpu)
-                    .map(|(i, _)| i)
+                    .copied()
+                    .filter(|&e| engine.gpu(e) == tgpu)
                     .collect();
                 let k = feeders.len().max(1);
-                let t_move = topo.host_transfer_time(exp_bytes_per_gmi, k);
+                let t_move = engine.topology().host_transfer_time(exp_bytes_per_gmi, k);
                 // trainer waits for the slowest feeder, then the transfer.
-                let feed_max =
-                    Clock::max_of(&feeders.iter().map(|&i| clocks[i]).collect::<Vec<_>>());
-                trainer_clocks[t_idx].merge_then_advance(feed_max, t_move * k as f64);
-                comm_s += t_move * k as f64;
+                let feed_max = engine.max_time(&feeders);
+                engine.recv(tr_ids[t_idx], feed_max, t_move * k as f64);
             }
-        } else {
-            trainer_clocks[..n_train].copy_from_slice(&clocks[..n_train]);
         }
 
         // ---- (ii) PPO epochs of minibatch updates ----
@@ -212,39 +208,26 @@ pub fn run_sync(
 
             // virtual minibatch loop: grad -> reduce barrier -> apply
             for _mb in 0..mb {
-                for (t_idx, &tgid) in layout.trainer_gmis.iter().enumerate() {
-                    let spec = layout.manager.gmi(tgid).unwrap();
-                    let co = layout.manager.co_resident(tgid);
-                    let share = eff_share(spec.backend, spec.sm_share, co);
-                    let inter = spec.interference(co, cost);
+                for t_idx in 0..n_train {
                     let total_samples = if colocated {
                         layout.num_env_per_gmi * m
                     } else {
                         layout.num_env_per_gmi * m * (n_roll / n_train).max(1)
                     };
                     let samples = (total_samples / mb).max(1);
-                    let t_grad = cost.op_time(OpKind::TrainGrad { samples }, share, inter);
-                    let t_apply = cost.op_time(OpKind::AdamApply, share, inter);
-                    let end = trainer_clocks[t_idx].advance(t_grad + t_apply).seconds();
-                    util.record(
-                        spec.gpu,
-                        cost.sm_occupancy(OpKind::TrainGrad { samples }, share),
-                        t_grad,
-                        end,
-                    );
-                    util.record(
-                        spec.gpu,
-                        cost.sm_occupancy(OpKind::AdamApply, share),
-                        t_apply,
-                        end,
+                    engine.charge_steps(
+                        cost,
+                        tr_ids[t_idx],
+                        1.0,
+                        &[
+                            OpCharge::recorded(OpKind::TrainGrad { samples }),
+                            OpCharge::recorded(OpKind::AdamApply),
+                        ],
+                        0.0,
                     );
                 }
                 // LGR reduction barrier per minibatch
-                let barrier = Clock::max_of(&trainer_clocks);
-                for c in trainer_clocks.iter_mut() {
-                    c.merge_then_advance(barrier, t_red);
-                }
-                comm_s += t_red;
+                engine.barrier_advance(&tr_ids, t_red);
             }
 
             // real update, once per epoch
@@ -258,28 +241,26 @@ pub fn run_sync(
 
         // TDG_EX: parameters flow back to the serving GMIs.
         if !colocated {
-            let topo = layout.manager.topology();
-            let t_back = topo.host_transfer_time(bench.param_bytes(), n_roll / n_train.max(1));
-            let tmax = Clock::max_of(&trainer_clocks);
-            for c in clocks.iter_mut().take(n_roll) {
-                c.merge_then_advance(tmax, t_back);
-            }
-            comm_s += t_back;
-        } else {
-            clocks[..n_train].copy_from_slice(&trainer_clocks[..n_train]);
+            let t_back = engine
+                .topology()
+                .host_transfer_time(bench.param_bytes(), n_roll / n_train.max(1));
+            let tmax = engine.max_time(&tr_ids);
+            engine.broadcast(&roll_ids, tmax, t_back);
         }
 
         let mean_r = rollouts.iter().map(|r| r.mean_reward as f64).sum::<f64>()
             / rollouts.len() as f64;
-        let now = Clock::max_of(&clocks).seconds();
-        rewards.push(now, mean_r);
+        rewards.push(engine.max_time(&roll_ids).seconds(), mean_r);
         stats_per_iter.push(iter_stats);
+
+        // ---- (iii) elastic re-provisioning between iterations ----
+        if let Some(ctl) = elastic.as_mut() {
+            ctl.rebalance(&mut engine, &roll_ids, &tr_ids);
+        }
     }
 
     // ---- metrics ----
-    let span = Clock::max_of(&clocks)
-        .seconds()
-        .max(Clock::max_of(&trainer_clocks).seconds());
+    let span = engine.span();
     let total_env_steps = (cfg.iterations * m) as f64
         * layout.rollout_gmis.len() as f64
         * layout.num_env_per_gmi as f64;
@@ -289,10 +270,10 @@ pub fn run_sync(
         pps: total_env_steps / span,
         ttop: total_samples / span,
         span_s: span,
-        utilization: util.mean_utilization(),
+        utilization: engine.mean_utilization(),
         final_reward: rewards.final_reward(),
         reward_curve: rewards.curve.clone(),
-        comm_s,
+        comm_s: engine.comm_s(),
         peak_mem_gib: peak_mem,
     };
     Ok(SyncRunResult {
@@ -300,6 +281,7 @@ pub fn run_sync(
         strategy,
         final_params: workers.into_iter().next().map(|w| w.params).unwrap_or_default(),
         stats_per_iter,
+        elastic_shifts: elastic.map(|c| c.shifts()).unwrap_or(0),
     })
 }
 
@@ -308,6 +290,7 @@ mod tests {
     use super::*;
     use crate::cluster::Topology;
     use crate::config::static_registry;
+    use crate::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
     use crate::mapping::{build_sync_layout, MappingTemplate};
 
     fn setup(gpus: usize, t: usize) -> (Layout, BenchInfo, CostModel) {
@@ -330,6 +313,8 @@ mod tests {
         assert_eq!(r.metrics.reward_curve.len(), 10);
         // 2 GPUs x 2 GMIs -> MRR by Algorithm 1
         assert_eq!(r.strategy, ReduceStrategy::MultiRing);
+        // static provisioning by default
+        assert_eq!(r.elastic_shifts, 0);
     }
 
     #[test]
@@ -386,5 +371,99 @@ mod tests {
         let c = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
         assert_eq!(a.metrics.steps_per_sec, c.metrics.steps_per_sec);
         assert_eq!(a.final_params, c.final_params);
+    }
+
+    /// A deliberately imbalanced TDG_EX layout: starved rollout GMIs next
+    /// to an over-provisioned trainer on every GPU.
+    fn imbalanced_layout(topo: &Topology) -> Layout {
+        let mut manager = GmiManager::new(topo.clone());
+        let mut rollout = Vec::new();
+        let mut trainers = Vec::new();
+        let mut id = 0usize;
+        for gpu in 0..topo.num_gpus() {
+            for _ in 0..2 {
+                manager
+                    .add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: 0.15,
+                        mem_gib: 6.0,
+                        backend: GmiBackend::Mps,
+                        role: Role::SimAgent,
+                        num_env: 1024,
+                    })
+                    .unwrap();
+                rollout.push(id);
+                id += 1;
+            }
+            manager
+                .add_gmi(GmiSpec {
+                    id,
+                    gpu,
+                    sm_share: 0.7,
+                    mem_gib: 10.0,
+                    backend: GmiBackend::Mps,
+                    role: Role::Trainer,
+                    num_env: 0,
+                })
+                .unwrap();
+            trainers.push(id);
+            id += 1;
+        }
+        Layout {
+            manager,
+            rollout_gmis: rollout,
+            trainer_gmis: trainers,
+            gmi_per_gpu: 3,
+            num_env_per_gmi: 1024,
+            backend: GmiBackend::Mps,
+        }
+    }
+
+    #[test]
+    fn elastic_reprovisioning_beats_static_on_imbalanced_layout() {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let cfg_static = SyncConfig { iterations: 8, ..Default::default() };
+        let cfg_elastic = SyncConfig {
+            iterations: 8,
+            elastic: Some(ElasticConfig::default()),
+            ..Default::default()
+        };
+        let s =
+            run_sync(&imbalanced_layout(&topo), &b, &cost, &Compute::Null, &cfg_static).unwrap();
+        let e =
+            run_sync(&imbalanced_layout(&topo), &b, &cost, &Compute::Null, &cfg_elastic).unwrap();
+        assert!(e.elastic_shifts > 0, "controller never re-provisioned");
+        assert!(
+            e.metrics.steps_per_sec > s.metrics.steps_per_sec,
+            "elastic {} vs static {}",
+            e.metrics.steps_per_sec,
+            s.metrics.steps_per_sec
+        );
+        // The caller's layout is a static description: elastic runs never
+        // mutate it (the engine re-provisions its own live clone).
+        let layout = imbalanced_layout(&topo);
+        run_sync(&layout, &b, &cost, &Compute::Null, &cfg_elastic).unwrap();
+        assert_eq!(layout.manager.gmi(0).unwrap().sm_share, 0.15);
+    }
+
+    #[test]
+    fn elastic_is_noop_on_colocated_layouts() {
+        let (layout, b, cost) = setup(2, 2);
+        let cfg = SyncConfig {
+            iterations: 3,
+            elastic: Some(ElasticConfig::default()),
+            ..Default::default()
+        };
+        let e = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let s = run_sync(&layout, &b, &cost, &Compute::Null, &SyncConfig {
+            iterations: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(e.elastic_shifts, 0);
+        assert_eq!(e.metrics.steps_per_sec, s.metrics.steps_per_sec);
     }
 }

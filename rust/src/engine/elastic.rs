@@ -1,0 +1,303 @@
+//! Elastic mid-run re-provisioning — the adaptive piece of the paper's
+//! "resource-adjustable" GMI claim.
+//!
+//! Between sync iterations the controller inspects each role group's
+//! busy/idle fractions on the engine's timelines. When one group idles
+//! while the other saturates (a rollout-heavy or train-heavy imbalance),
+//! it shifts SM share on every GPU from the idle group's GMIs to the
+//! bottleneck group's GMIs, through the validated
+//! [`GmiManager::resize_gmi`](crate::gmi::GmiManager::resize_gmi) path, so
+//! the provisioning tracks what the stages actually need instead of the
+//! layout builder's static guess.
+
+use std::collections::BTreeMap;
+
+use super::{Engine, ExecutorId};
+use crate::gmi::GmiBackend;
+
+/// Tuning knobs of the elastic controller.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// SM share taken from each donor GMI per adjustment (absolute
+    /// fraction of its GPU).
+    pub step: f64,
+    /// No GMI is ever shrunk below this share.
+    pub min_share: f64,
+    /// Idle-fraction gap between the groups required before any shift
+    /// (hysteresis against oscillation).
+    pub threshold: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig { step: 0.05, min_share: 0.05, threshold: 0.05 }
+    }
+}
+
+/// Watches per-executor busy/clock deltas between rebalance calls and
+/// re-provisions SM shares toward the bottleneck role group.
+#[derive(Debug)]
+pub struct ElasticController {
+    cfg: ElasticConfig,
+    /// Per executor id: (busy_s, clock_s) at the last rebalance.
+    last: Vec<(f64, f64)>,
+    shifts: usize,
+}
+
+impl ElasticController {
+    pub fn new(cfg: ElasticConfig) -> Self {
+        ElasticController { cfg, last: Vec::new(), shifts: 0 }
+    }
+
+    /// Adjustments applied so far.
+    pub fn shifts(&self) -> usize {
+        self.shifts
+    }
+
+    /// Inspect the window since the previous call and, if one group's idle
+    /// fraction exceeds the other's by the configured threshold, shift SM
+    /// share toward the busier group on every GPU hosting both. Returns
+    /// whether any re-provisioning happened. Colocated layouts (the two
+    /// groups alias the same executors) have nothing to shift.
+    pub fn rebalance(
+        &mut self,
+        engine: &mut Engine,
+        rollout: &[ExecutorId],
+        trainers: &[ExecutorId],
+    ) -> bool {
+        if rollout.iter().any(|r| trainers.contains(r)) {
+            return false;
+        }
+        let idle_r = self.group_idle(engine, rollout);
+        let idle_t = self.group_idle(engine, trainers);
+        for &i in rollout.iter().chain(trainers) {
+            if self.last.len() <= i {
+                self.last.resize(i + 1, (0.0, 0.0));
+            }
+            self.last[i] = (engine.busy_seconds(i), engine.clock(i).seconds());
+        }
+        let (donors, receivers) = if idle_t > idle_r + self.cfg.threshold {
+            (trainers, rollout) // trainers wait on rollouts: rollout-bound
+        } else if idle_r > idle_t + self.cfg.threshold {
+            (rollout, trainers) // rollouts wait on trainers: train-bound
+        } else {
+            return false;
+        };
+        let moved = self.shift(engine, donors, receivers);
+        if moved {
+            self.shifts += 1;
+        }
+        moved
+    }
+
+    /// Idle fraction of a group over the window since the last rebalance.
+    fn group_idle(&self, engine: &Engine, ids: &[ExecutorId]) -> f64 {
+        let mut busy = 0.0f64;
+        let mut span = 0.0f64;
+        for &i in ids {
+            let (b0, c0) = self.last.get(i).copied().unwrap_or((0.0, 0.0));
+            busy += engine.busy_seconds(i) - b0;
+            span += engine.clock(i).seconds() - c0;
+        }
+        if span <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - busy / span).clamp(0.0, 1.0)
+    }
+
+    /// Per GPU hosting both groups: shrink every donor by up to `step`
+    /// (never below `min_share`), then grow the receivers evenly into the
+    /// freed share. Shrink-before-grow keeps every intermediate state
+    /// valid under the manager's oversubscription checks. A resize the
+    /// manager rejects (e.g. a MIG donor whose smaller profile can't hold
+    /// its memory) is skipped, not fatal: re-provisioning is best-effort
+    /// and the layout stays valid either way.
+    fn shift(
+        &self,
+        engine: &mut Engine,
+        donors: &[ExecutorId],
+        receivers: &[ExecutorId],
+    ) -> bool {
+        // Direct-Share GMIs time-slice the whole GPU regardless of their
+        // nominal share — resizing them changes nothing, so they neither
+        // donate nor receive.
+        let adjustable = |engine: &Engine, id: ExecutorId| {
+            engine
+                .manager()
+                .gmi(engine.gmi_of(id))
+                .is_some_and(|s| s.backend != GmiBackend::DirectShare)
+        };
+        let mut by_gpu: BTreeMap<usize, (Vec<ExecutorId>, Vec<ExecutorId>)> = BTreeMap::new();
+        for &d in donors.iter().filter(|&&d| adjustable(engine, d)) {
+            by_gpu.entry(engine.gpu(d)).or_default().0.push(d);
+        }
+        for &r in receivers.iter().filter(|&&r| adjustable(engine, r)) {
+            by_gpu.entry(engine.gpu(r)).or_default().1.push(r);
+        }
+        let mut moved = false;
+        for (ds, rs) in by_gpu.values() {
+            if ds.is_empty() || rs.is_empty() {
+                continue;
+            }
+            let mut freed = 0.0f64;
+            for &d in ds {
+                let gmi = engine.gmi_of(d);
+                let share = engine.manager().gmi(gmi).expect("donor registered").sm_share;
+                let take = (share - self.cfg.min_share).min(self.cfg.step).max(0.0);
+                if take <= 0.0 || engine.resize_share(gmi, share - take).is_err() {
+                    continue;
+                }
+                freed += take;
+            }
+            if freed <= 0.0 {
+                continue;
+            }
+            let gain = freed / rs.len() as f64;
+            for &r in rs {
+                let gmi = engine.gmi_of(r);
+                let share = engine.manager().gmi(gmi).expect("receiver registered").sm_share;
+                let _ = engine.resize_share(gmi, (share + gain).min(1.0));
+            }
+            moved = true;
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::engine::OpCharge;
+    use crate::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+    use crate::vtime::{CostModel, OpKind};
+
+    /// One GPU: two starved rollout GMIs + one over-provisioned trainer.
+    fn imbalanced() -> (Engine, Vec<ExecutorId>, Vec<ExecutorId>, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        for (id, (share, role, n_env)) in [
+            (0.15, Role::SimAgent, 1024),
+            (0.15, Role::SimAgent, 1024),
+            (0.70, Role::Trainer, 0),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            m.add_gmi(GmiSpec {
+                id,
+                gpu: 0,
+                sm_share: share,
+                mem_gib: 6.0,
+                backend: GmiBackend::Mps,
+                role,
+                num_env: n_env,
+            })
+            .unwrap();
+        }
+        let mut e = Engine::new(&m, &cost);
+        let roll = e.add_group(&[0, 1]).unwrap();
+        let tr = e.add_group(&[2]).unwrap();
+        (e, roll, tr, cost)
+    }
+
+    #[test]
+    fn shifts_share_toward_the_busy_group() {
+        let (mut e, roll, tr, cost) = imbalanced();
+        // Rollouts compute the whole window; the trainer computes briefly
+        // and then waits (merges forward) on the rollout timeline.
+        for &r in &roll {
+            let sim = OpCharge::recorded(OpKind::SimStep { num_env: 1024 });
+            e.charge_steps(&cost, r, 16.0, &[sim], 0.0);
+        }
+        let feed = e.max_time(&roll);
+        e.charge_after(&cost, tr[0], feed, &[OpCharge::recorded(OpKind::AdamApply)]);
+        let mut ctl = ElasticController::new(ElasticConfig::default());
+        assert!(ctl.rebalance(&mut e, &roll, &tr));
+        assert_eq!(ctl.shifts(), 1);
+        // Trainer donated one step; each rollout GMI gained half of it.
+        assert!((e.manager().gmi(2).unwrap().sm_share - 0.65).abs() < 1e-9);
+        assert!((e.manager().gmi(0).unwrap().sm_share - 0.175).abs() < 1e-9);
+        assert!((e.manager().gmi(1).unwrap().sm_share - 0.175).abs() < 1e-9);
+        // The layout stays valid: shares on the GPU still sum to 1.
+        let total: f64 = e.manager().all().map(|g| g.sm_share).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_min_share_floor() {
+        let (mut e, roll, tr, cost) = imbalanced();
+        let cfg = ElasticConfig { step: 1.0, min_share: 0.3, threshold: 0.05 };
+        for &r in &roll {
+            let sim = OpCharge::recorded(OpKind::SimStep { num_env: 1024 });
+            e.charge_steps(&cost, r, 16.0, &[sim], 0.0);
+        }
+        e.charge_after(&cost, tr[0], e.max_time(&roll), &[OpCharge::recorded(OpKind::AdamApply)]);
+        let mut ctl = ElasticController::new(cfg);
+        assert!(ctl.rebalance(&mut e, &roll, &tr));
+        // A full-step take is clamped to the floor: 0.7 -> 0.3.
+        assert!((e.manager().gmi(2).unwrap().sm_share - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_resizes_are_skipped_not_fatal() {
+        // MIG donors whose shrunk profile can't hold their memory: the
+        // manager rejects the resize and the controller moves on instead
+        // of aborting the run.
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        for (id, (role, n_env, mem)) in [
+            (Role::SimAgent, 1024, 5.0),
+            (Role::SimAgent, 1024, 5.0),
+            (Role::Trainer, 0, 6.0),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            m.add_gmi(GmiSpec {
+                id,
+                gpu: 0,
+                sm_share: 2.0 / 7.0,
+                mem_gib: mem,
+                backend: GmiBackend::Mig,
+                role,
+                num_env: n_env,
+            })
+            .unwrap();
+        }
+        let mut e = Engine::new(&m, &cost);
+        let roll = e.add_group(&[0, 1]).unwrap();
+        let tr = e.add_group(&[2]).unwrap();
+        for &r in &roll {
+            let sim = OpCharge::recorded(OpKind::SimStep { num_env: 1024 });
+            e.charge_steps(&cost, r, 16.0, &[sim], 0.0);
+        }
+        e.charge_after(&cost, tr[0], e.max_time(&roll), &[OpCharge::recorded(OpKind::AdamApply)]);
+        // step large enough to drop the trainer below 1g.5gb's 5 GiB quota
+        // for its 6 GiB of memory -> resize_gmi bails -> skipped.
+        let cfg = ElasticConfig { step: 0.2, min_share: 0.05, threshold: 0.05 };
+        let mut ctl = ElasticController::new(cfg);
+        assert!(!ctl.rebalance(&mut e, &roll, &tr));
+        assert_eq!(ctl.shifts(), 0);
+        assert!((e.manager().gmi(2).unwrap().sm_share - 2.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn colocated_groups_and_balanced_windows_are_noops() {
+        let (mut e, roll, tr, cost) = imbalanced();
+        let mut ctl = ElasticController::new(ElasticConfig::default());
+        // Shared executors: nothing to shift.
+        assert!(!ctl.rebalance(&mut e, &roll, &roll));
+        // Empty window: no signal, no shift.
+        assert!(!ctl.rebalance(&mut e, &roll, &tr));
+        // Both groups equally busy: inside the hysteresis band.
+        for &i in roll.iter().chain(&tr) {
+            e.charge_steps(&cost, i, 4.0, &[OpCharge::recorded(OpKind::AdamApply)], 0.0);
+        }
+        assert!(!ctl.rebalance(&mut e, &roll, &tr));
+        assert_eq!(ctl.shifts(), 0);
+    }
+}

@@ -1,0 +1,511 @@
+//! The discrete-event GMI executor.
+//!
+//! An [`Engine`] owns one [`GmiExecutor`] per role task: the GMI's virtual
+//! [`Clock`], its effective SM share (Direct-Share processes see the whole
+//! GPU but time-slice it), its interference multiplier, and its busy-time
+//! accounting. Orchestrators describe *work* ([`OpCharge`] sequences,
+//! barriers, transfers); the engine turns it into clock advances and
+//! utilization records, so no run loop touches `Clock`,
+//! `UtilizationTracker`, or share math directly.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Topology;
+use crate::gmi::{GmiBackend, GmiId, GmiManager};
+use crate::metrics::UtilizationTracker;
+use crate::vtime::{Clock, CostModel, OpKind};
+
+/// Handle to one executor inside an [`Engine`] (stable for the engine's
+/// lifetime; executors are never removed, only re-provisioned).
+pub type ExecutorId = usize;
+
+/// Longest op sequence one `charge` call accepts (rollout = sim + fwd,
+/// training = grad + apply; nothing in the paper's loops needs more).
+const MAX_OPS: usize = 8;
+
+/// Effective SM share of a GMI for *timing*: Direct-Share processes all see
+/// the whole GPU but time-slice it among `co_resident + 1` peers; MPS and
+/// MIG provision the configured share.
+pub fn eff_share(backend: GmiBackend, sm_share: f64, co_resident: usize) -> f64 {
+    match backend {
+        GmiBackend::DirectShare => 1.0 / (co_resident + 1) as f64,
+        _ => sm_share,
+    }
+}
+
+/// One operation inside a charge: what runs, at which timing share, and
+/// whether its SM occupancy is recorded (pipeline-overlapped ops like the
+/// A3C agent forward charge time but not utilization).
+#[derive(Debug, Clone, Copy)]
+pub struct OpCharge {
+    pub op: OpKind,
+    /// Override the share used for *timing* only (e.g. a TDG agent GMI
+    /// running the forward at a fraction of the pair budget); occupancy is
+    /// always recorded at the executor's own share.
+    pub time_share: Option<f64>,
+    pub record: bool,
+}
+
+impl OpCharge {
+    pub fn recorded(op: OpKind) -> Self {
+        OpCharge { op, time_share: None, record: true }
+    }
+
+    pub fn unrecorded(op: OpKind) -> Self {
+        OpCharge { op, time_share: None, record: false }
+    }
+
+    pub fn with_time_share(mut self, share: f64) -> Self {
+        self.time_share = Some(share);
+        self
+    }
+}
+
+/// Per-role-task execution state: the discrete-event unit of the engine.
+#[derive(Debug, Clone)]
+struct GmiExecutor {
+    gmi: GmiId,
+    gpu: usize,
+    num_env: usize,
+    co_resident: usize,
+    /// Effective timing share (see [`eff_share`]).
+    share: f64,
+    /// Interference multiplier (>= 1) from the backend isolation model.
+    interference: f64,
+    clock: Clock,
+    /// Virtual seconds spent computing (charges), as opposed to waiting at
+    /// barriers/transfers — the elastic controller's bottleneck signal.
+    busy_s: f64,
+}
+
+/// The discrete-event execution engine one run loop drives.
+///
+/// The engine clones the layout's [`GmiManager`] at construction and owns
+/// the *live* provisioning state: mid-run re-provisioning
+/// ([`Engine::resize_share`]) validates against the cloned manager and
+/// refreshes the affected executor, leaving the caller's static layout
+/// untouched.
+#[derive(Debug)]
+pub struct Engine {
+    manager: GmiManager,
+    heaviness: f64,
+    execs: Vec<GmiExecutor>,
+    util: UtilizationTracker,
+    comm_s: f64,
+}
+
+impl Engine {
+    pub fn new(manager: &GmiManager, cost: &CostModel) -> Self {
+        Engine {
+            manager: manager.clone(),
+            heaviness: cost.heaviness,
+            execs: Vec::new(),
+            util: UtilizationTracker::new(),
+            comm_s: 0.0,
+        }
+    }
+
+    /// Register an executor for `gmi`. A GMI that already has an executor
+    /// is not duplicated — the existing id is returned, so colocated roles
+    /// (TCG_EX holistic GMIs running rollout *and* training) share one
+    /// timeline.
+    pub fn add_executor(&mut self, gmi: GmiId) -> Result<ExecutorId> {
+        if let Some(i) = self.execs.iter().position(|e| e.gmi == gmi) {
+            return Ok(i);
+        }
+        let spec = self.manager.gmi(gmi).with_context(|| format!("GMI {gmi} not registered"))?;
+        let co = self.manager.co_resident(gmi);
+        self.execs.push(GmiExecutor {
+            gmi,
+            gpu: spec.gpu,
+            num_env: spec.num_env,
+            co_resident: co,
+            share: eff_share(spec.backend, spec.sm_share, co),
+            interference: spec.backend.interference(co, self.heaviness),
+            clock: Clock::zero(),
+            busy_s: 0.0,
+        });
+        Ok(self.execs.len() - 1)
+    }
+
+    /// Register one executor per GMI id, in order (deduplicating shared
+    /// GMIs — see [`Engine::add_executor`]).
+    pub fn add_group(&mut self, gmis: &[GmiId]) -> Result<Vec<ExecutorId>> {
+        gmis.iter().map(|&g| self.add_executor(g)).collect()
+    }
+
+    // ---- charging ----
+
+    /// Charge `reps` repetitions of an op sequence: the executor's clock
+    /// advances by `reps * (Σ op_time + extra_per_rep)` in one step (the
+    /// ops pipeline within a repetition), SM occupancy is recorded for
+    /// every op marked `record`, and the clock after the charge is
+    /// returned. `extra_per_rep` models per-repetition time that occupies
+    /// no SMs (e.g. a TDG boundary crossing per interaction step); it
+    /// extends the clock but not the busy accounting.
+    pub fn charge_steps(
+        &mut self,
+        cost: &CostModel,
+        id: ExecutorId,
+        reps: f64,
+        ops: &[OpCharge],
+        extra_per_rep: f64,
+    ) -> Clock {
+        self.charge_inner(cost, id, reps, ops, extra_per_rep, None)
+    }
+
+    /// Blocking-receive charge: wait until `ready`, then run the op
+    /// sequence once (the A3C trainer consuming a batch the moment it
+    /// arrives).
+    pub fn charge_after(
+        &mut self,
+        cost: &CostModel,
+        id: ExecutorId,
+        ready: Clock,
+        ops: &[OpCharge],
+    ) -> Clock {
+        self.charge_inner(cost, id, 1.0, ops, 0.0, Some(ready))
+    }
+
+    fn charge_inner(
+        &mut self,
+        cost: &CostModel,
+        id: ExecutorId,
+        reps: f64,
+        ops: &[OpCharge],
+        extra_per_rep: f64,
+        after: Option<Clock>,
+    ) -> Clock {
+        assert!(ops.len() <= MAX_OPS, "charge of {} ops (max {MAX_OPS})", ops.len());
+        let e = &mut self.execs[id];
+        let mut times = [0.0f64; MAX_OPS];
+        let mut op_sum = 0.0f64;
+        for (k, c) in ops.iter().enumerate() {
+            let t = cost.op_time(c.op, c.time_share.unwrap_or(e.share), e.interference);
+            times[k] = t;
+            op_sum += t;
+        }
+        let dur = reps * (op_sum + extra_per_rep);
+        let end = match after {
+            Some(ready) => e.clock.merge_then_advance(ready, dur),
+            None => e.clock.advance(dur),
+        };
+        e.busy_s += reps * op_sum;
+        let (gpu, share) = (e.gpu, e.share);
+        for (k, c) in ops.iter().enumerate() {
+            if c.record {
+                let occ = cost.sm_occupancy(c.op, share);
+                self.util.record(gpu, occ, reps * times[k], end.seconds());
+            }
+        }
+        end
+    }
+
+    // ---- communication primitives ----
+
+    /// Un-recorded time on one executor's own timeline (per-message IPC
+    /// submission, a pushed-parameter receive): advances the clock without
+    /// touching utilization, busy, or communication accounting.
+    pub fn pay(&mut self, id: ExecutorId, dt: f64) -> Clock {
+        self.execs[id].clock.advance(dt)
+    }
+
+    /// [`Engine::pay`] on every member of a group.
+    pub fn pay_group(&mut self, ids: &[ExecutorId], dt: f64) {
+        for &i in ids {
+            self.execs[i].clock.advance(dt);
+        }
+    }
+
+    /// Barrier + collective: every member waits for the group maximum,
+    /// then advances by `dt` (one LGR reduction). `dt` is counted once as
+    /// communication time.
+    pub fn barrier_advance(&mut self, ids: &[ExecutorId], dt: f64) {
+        let barrier = self.max_time(ids);
+        for &i in ids {
+            self.execs[i].clock.merge_then_advance(barrier, dt);
+        }
+        self.comm_s += dt;
+    }
+
+    /// Point-to-point receive: `id` waits until `ready` (the sender's send
+    /// timestamp or a feeder-group max), then pays `dt` of transfer time,
+    /// counted as communication.
+    pub fn recv(&mut self, id: ExecutorId, ready: Clock, dt: f64) -> Clock {
+        self.comm_s += dt;
+        self.execs[id].clock.merge_then_advance(ready, dt)
+    }
+
+    /// One-to-many broadcast: every receiver waits for `from`, then pays
+    /// `dt`; counted once as communication (a single fan-out transfer).
+    pub fn broadcast(&mut self, ids: &[ExecutorId], from: Clock, dt: f64) {
+        for &i in ids {
+            self.execs[i].clock.merge_then_advance(from, dt);
+        }
+        self.comm_s += dt;
+    }
+
+    // ---- timeline / accounting queries ----
+
+    pub fn clock(&self, id: ExecutorId) -> Clock {
+        self.execs[id].clock
+    }
+
+    /// Latest clock of a group (barrier value; `Clock::zero()` when empty).
+    pub fn max_time(&self, ids: &[ExecutorId]) -> Clock {
+        Clock(ids.iter().fold(0.0f64, |a, &i| a.max(self.execs[i].clock.seconds())))
+    }
+
+    /// Latest clock over every executor — the run's virtual span.
+    pub fn span(&self) -> f64 {
+        self.execs.iter().fold(0.0f64, |a, e| a.max(e.clock.seconds()))
+    }
+
+    /// Latest virtual time of any executor on `gpu` (per-GPU timeline).
+    pub fn gpu_time(&self, gpu: usize) -> f64 {
+        self.execs
+            .iter()
+            .filter(|e| e.gpu == gpu)
+            .fold(0.0f64, |a, e| a.max(e.clock.seconds()))
+    }
+
+    pub fn gpu_utilization(&self, gpu: usize) -> f64 {
+        self.util.gpu_utilization(gpu)
+    }
+
+    pub fn mean_utilization(&self) -> f64 {
+        self.util.mean_utilization()
+    }
+
+    /// Communication seconds charged through barrier/recv/broadcast.
+    pub fn comm_s(&self) -> f64 {
+        self.comm_s
+    }
+
+    /// Virtual seconds executor `id` spent computing (vs waiting).
+    pub fn busy_seconds(&self, id: ExecutorId) -> f64 {
+        self.execs[id].busy_s
+    }
+
+    pub fn gmi_of(&self, id: ExecutorId) -> GmiId {
+        self.execs[id].gmi
+    }
+
+    pub fn gpu(&self, id: ExecutorId) -> usize {
+        self.execs[id].gpu
+    }
+
+    pub fn num_env(&self, id: ExecutorId) -> usize {
+        self.execs[id].num_env
+    }
+
+    pub fn co_resident(&self, id: ExecutorId) -> usize {
+        self.execs[id].co_resident
+    }
+
+    /// Effective timing share currently provisioned for `id`.
+    pub fn share(&self, id: ExecutorId) -> f64 {
+        self.execs[id].share
+    }
+
+    /// The engine's live provisioning state (diverges from the layout's
+    /// manager once elastic re-provisioning runs).
+    pub fn manager(&self) -> &GmiManager {
+        &self.manager
+    }
+
+    pub fn topology(&self) -> &Topology {
+        self.manager.topology()
+    }
+
+    // ---- elastic re-provisioning ----
+
+    /// Re-provision a GMI's SM share (memory unchanged), validated by the
+    /// live manager, and refresh the executor's timing parameters. Charges
+    /// already on the timeline keep their historical cost; only subsequent
+    /// ops see the new share.
+    pub fn resize_share(&mut self, gmi: GmiId, sm_share: f64) -> Result<()> {
+        let mem = self
+            .manager
+            .gmi(gmi)
+            .with_context(|| format!("GMI {gmi} not registered"))?
+            .mem_gib;
+        self.resize(gmi, sm_share, mem)
+    }
+
+    /// Re-provision a GMI's SM share and memory budget (see
+    /// [`Engine::resize_share`]).
+    pub fn resize(&mut self, gmi: GmiId, sm_share: f64, mem_gib: f64) -> Result<()> {
+        self.manager.resize_gmi(gmi, sm_share, mem_gib)?;
+        self.refresh(gmi);
+        Ok(())
+    }
+
+    /// Recompute an executor's share/interference from the live manager.
+    fn refresh(&mut self, gmi: GmiId) {
+        let Some(pos) = self.execs.iter().position(|e| e.gmi == gmi) else { return };
+        let spec = self.manager.gmi(gmi).expect("refreshed GMI is registered");
+        let co = self.manager.co_resident(gmi);
+        let e = &mut self.execs[pos];
+        e.co_resident = co;
+        e.share = eff_share(spec.backend, spec.sm_share, co);
+        e.interference = spec.backend.interference(co, self.heaviness);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+    use crate::gmi::{GmiSpec, Role};
+
+    fn setup(shares: &[f64]) -> (Engine, Vec<ExecutorId>, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        for (id, &s) in shares.iter().enumerate() {
+            m.add_gmi(GmiSpec {
+                id,
+                gpu: 0,
+                sm_share: s,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 512,
+            })
+            .unwrap();
+        }
+        let mut e = Engine::new(&m, &cost);
+        let ids = e.add_group(&(0..shares.len()).collect::<Vec<_>>()).unwrap();
+        (e, ids, cost)
+    }
+
+    #[test]
+    fn executors_dedup_per_gmi() {
+        let (mut e, ids, _) = setup(&[0.4, 0.4]);
+        assert_eq!(ids, vec![0, 1]);
+        // A second group over the same GMIs aliases the same executors.
+        let again = e.add_group(&[0, 1]).unwrap();
+        assert_eq!(again, ids);
+        assert!(e.add_executor(9).is_err());
+    }
+
+    #[test]
+    fn charge_matches_manual_clock_arithmetic() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        let op = OpKind::SimStep { num_env: 512 };
+        let fwd = OpKind::PolicyFwd { num_env: 512 };
+        let t_sim = cost.op_time(op, e.share(ids[0]), 1.0 + 0.03 * cost.heaviness);
+        let t_fwd = cost.op_time(fwd, e.share(ids[0]), 1.0 + 0.03 * cost.heaviness);
+        let end = e.charge_steps(
+            &cost,
+            ids[0],
+            16.0,
+            &[OpCharge::recorded(op), OpCharge::recorded(fwd)],
+            0.0,
+        );
+        assert_eq!(end.seconds(), 16.0 * (t_sim + t_fwd));
+        assert_eq!(e.clock(ids[0]).seconds(), end.seconds());
+        assert_eq!(e.busy_seconds(ids[0]), end.seconds());
+        assert!(e.mean_utilization() > 0.0);
+        // The second executor never ran.
+        assert_eq!(e.clock(ids[1]).seconds(), 0.0);
+    }
+
+    #[test]
+    fn unrecorded_ops_charge_time_but_no_utilization() {
+        let (mut e, ids, cost) = setup(&[0.4]);
+        let end = e.charge_steps(
+            &cost,
+            ids[0],
+            4.0,
+            &[OpCharge::unrecorded(OpKind::AdamApply)],
+            0.0,
+        );
+        assert!(end.seconds() > 0.0);
+        assert_eq!(e.mean_utilization(), 0.0);
+    }
+
+    #[test]
+    fn pay_is_idle_time() {
+        let (mut e, ids, _) = setup(&[0.4, 0.4]);
+        e.pay(ids[0], 1.5);
+        e.pay_group(&ids, 0.5);
+        assert_eq!(e.clock(ids[0]).seconds(), 2.0);
+        assert_eq!(e.clock(ids[1]).seconds(), 0.5);
+        assert_eq!(e.busy_seconds(ids[0]), 0.0);
+        assert_eq!(e.comm_s(), 0.0);
+    }
+
+    #[test]
+    fn barrier_merges_to_max_and_counts_comm_once() {
+        let (mut e, ids, _) = setup(&[0.4, 0.4]);
+        e.pay(ids[0], 3.0);
+        e.pay(ids[1], 1.0);
+        e.barrier_advance(&ids, 0.25);
+        assert_eq!(e.clock(ids[0]).seconds(), 3.25);
+        assert_eq!(e.clock(ids[1]).seconds(), 3.25);
+        assert_eq!(e.comm_s(), 0.25);
+        assert_eq!(e.max_time(&ids).seconds(), 3.25);
+        assert_eq!(e.span(), 3.25);
+        assert_eq!(e.gpu_time(0), 3.25);
+        assert_eq!(e.gpu_time(3), 0.0);
+    }
+
+    #[test]
+    fn recv_and_broadcast_account_transfers() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        let sender_t = e.charge_after(
+            &cost,
+            ids[0],
+            Clock(2.0),
+            &[OpCharge::recorded(OpKind::AdamApply)],
+        );
+        assert!(sender_t.seconds() > 2.0);
+        e.recv(ids[1], sender_t, 0.5);
+        assert_eq!(e.clock(ids[1]).seconds(), sender_t.seconds() + 0.5);
+        e.broadcast(&ids, e.max_time(&ids), 0.1);
+        // comm counted once per primitive call.
+        assert!((e.comm_s() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resize_updates_timing_and_validates() {
+        let (mut e, ids, cost) = setup(&[0.5, 0.4]);
+        let slow = cost.op_time(OpKind::TrainGrad { samples: 1024 }, e.share(ids[1]), 1.0);
+        // Growing past the peer's reservation fails and changes nothing.
+        assert!(e.resize_share(0, 0.7).is_err());
+        assert_eq!(e.share(ids[0]), 0.5);
+        // Shrink the donor, then grow the receiver into the freed share.
+        e.resize_share(0, 0.3).unwrap();
+        e.resize_share(1, 0.6).unwrap();
+        assert_eq!(e.share(ids[1]), 0.6);
+        let fast = cost.op_time(OpKind::TrainGrad { samples: 1024 }, e.share(ids[1]), 1.0);
+        assert!(fast < slow, "more share must speed GEMM work up");
+        // The caller-visible manager reflects the live provisioning.
+        assert_eq!(e.manager().gmi(0).unwrap().sm_share, 0.3);
+    }
+
+    #[test]
+    fn direct_share_time_slices() {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        for id in 0..3 {
+            m.add_gmi(GmiSpec {
+                id,
+                gpu: 0,
+                sm_share: 1.0,
+                mem_gib: 5.0,
+                backend: GmiBackend::DirectShare,
+                role: Role::SimAgent,
+                num_env: 512,
+            })
+            .unwrap();
+        }
+        let mut e = Engine::new(&m, &cost);
+        let ids = e.add_group(&[0, 1, 2]).unwrap();
+        assert!((e.share(ids[0]) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(eff_share(GmiBackend::Mps, 0.4, 2), 0.4);
+    }
+}

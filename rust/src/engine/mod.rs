@@ -1,0 +1,29 @@
+//! The unified discrete-event GMI execution engine.
+//!
+//! Every orchestrator (serving, sync PPO, async A3C, and the Isaac-Gym
+//! baselines built on them) used to hand-roll its own virtual-time loop:
+//! per-GMI clock arrays, duplicated effective-share math, inline
+//! utilization bookkeeping. This module is the shared substrate instead:
+//!
+//! * [`Engine`] — owns one executor per GMI role task (its [`Clock`],
+//!   effective SM share, interference multiplier, busy accounting) plus the
+//!   run-wide utilization and communication totals. Work is described as
+//!   [`OpCharge`] sequences (`charge_steps` / `charge_after`) and
+//!   communication primitives (`barrier_advance`, `recv`, `broadcast`,
+//!   `pay`); timelines are queried per executor, per group, or per GPU.
+//! * [`elastic`] — the adaptive controller the paper promises: between
+//!   iterations it reads per-group busy/idle fractions off the engine and
+//!   re-provisions SM shares toward the bottleneck role through the
+//!   validated [`GmiManager::resize_gmi`](crate::gmi::GmiManager::resize_gmi)
+//!   path.
+//!
+//! The engine clones the layout's `GmiManager` at construction, so mid-run
+//! re-provisioning never mutates the caller's static layout.
+//!
+//! [`Clock`]: crate::vtime::Clock
+
+pub mod elastic;
+mod executor;
+
+pub use elastic::{ElasticConfig, ElasticController};
+pub use executor::{eff_share, Engine, ExecutorId, OpCharge};

@@ -16,8 +16,14 @@ pub struct GmiGroup {
 }
 
 /// The global registry every `DRL_role.__init__` registers with
-/// (`GMI_DRL.GMI_manager.add_GMI`).
-#[derive(Debug)]
+/// (`GMI_DRL.GMI_manager.add_GMI`). GMIs are *resource-adjustable*: besides
+/// registration, the manager supports mid-run [`resize_gmi`] and
+/// [`remove_gmi`] with the same placement validation — the substrate the
+/// engine's elastic re-provisioning builds on.
+///
+/// [`resize_gmi`]: GmiManager::resize_gmi
+/// [`remove_gmi`]: GmiManager::remove_gmi
+#[derive(Debug, Clone)]
 pub struct GmiManager {
     topology: Topology,
     gmis: BTreeMap<GmiId, GmiSpec>,
@@ -33,13 +39,12 @@ impl GmiManager {
         &self.topology
     }
 
-    /// Register a GMI and attach it to its GPU (`set_GPU`). Validates the
-    /// placement: GPU exists, backend supported by the architecture, SM
-    /// shares on the GPU don't exceed capacity, MIG memory quota respected.
-    pub fn add_gmi(&mut self, spec: GmiSpec) -> Result<GmiId> {
-        if self.gmis.contains_key(&spec.id) {
-            bail!("GMI {} already registered", spec.id);
-        }
+    /// Validate a placement against everything else on its GPU: GPU exists,
+    /// backend supported by the architecture, SM shares on the GPU don't
+    /// exceed capacity, MIG memory quota respected. `exclude` names a GMI
+    /// whose current provisioning is ignored (resize re-validates a GMI
+    /// against its *peers*, not its own old shape).
+    fn validate_placement(&self, spec: &GmiSpec, exclude: Option<GmiId>) -> Result<()> {
         let Some(gpu) = self.topology.gpus.get(spec.gpu) else {
             bail!("GMI {}: GPU {} not in topology", spec.id, spec.gpu);
         };
@@ -49,14 +54,14 @@ impl GmiManager {
         if spec.sm_share <= 0.0 || spec.sm_share > 1.0 {
             bail!("GMI {}: invalid SM share {}", spec.id, spec.sm_share);
         }
+        let peers = || {
+            self.gmis
+                .values()
+                .filter(|g| g.gpu == spec.gpu && exclude != Some(g.id))
+        };
         // Direct-Share doesn't partition, so shares don't sum-constrain.
         if spec.backend != GmiBackend::DirectShare {
-            let used: f64 = self
-                .gmis
-                .values()
-                .filter(|g| g.gpu == spec.gpu)
-                .map(|g| g.sm_share)
-                .sum();
+            let used: f64 = peers().map(|g| g.sm_share).sum();
             if used + spec.sm_share > 1.0 + 1e-9 {
                 bail!(
                     "GMI {}: GPU {} SM oversubscribed ({:.2} + {:.2} > 1)",
@@ -76,12 +81,7 @@ impl GmiManager {
                 );
             }
         }
-        let mem_used: f64 = self
-            .gmis
-            .values()
-            .filter(|g| g.gpu == spec.gpu)
-            .map(|g| g.mem_gib)
-            .sum();
+        let mem_used: f64 = peers().map(|g| g.mem_gib).sum();
         if mem_used + spec.mem_gib > gpu.mem_gib + 1e-9 {
             bail!(
                 "GMI {}: GPU {} memory oversubscribed ({:.1} + {:.1} > {} GiB)",
@@ -92,9 +92,48 @@ impl GmiManager {
                 gpu.mem_gib
             );
         }
+        Ok(())
+    }
+
+    /// Register a GMI and attach it to its GPU (`set_GPU`), after full
+    /// placement validation ([`Self::validate_placement`]).
+    pub fn add_gmi(&mut self, spec: GmiSpec) -> Result<GmiId> {
+        if self.gmis.contains_key(&spec.id) {
+            bail!("GMI {} already registered", spec.id);
+        }
+        self.validate_placement(&spec, None)?;
         let id = spec.id;
         self.gmis.insert(id, spec);
         Ok(id)
+    }
+
+    /// Re-provision an existing GMI to `(sm_share, mem_gib)`, re-running
+    /// the same placement validation as registration — the paper's
+    /// "resource-adjustable instance" property. On error the GMI keeps its
+    /// current provisioning.
+    pub fn resize_gmi(&mut self, id: GmiId, sm_share: f64, mem_gib: f64) -> Result<()> {
+        let Some(cur) = self.gmis.get(&id) else {
+            bail!("GMI {id} not registered");
+        };
+        let mut cand = cur.clone();
+        cand.sm_share = sm_share;
+        cand.mem_gib = mem_gib;
+        self.validate_placement(&cand, Some(id))?;
+        self.gmis.insert(id, cand);
+        Ok(())
+    }
+
+    /// Deregister a GMI, freeing its SM share and memory for co-residents
+    /// and dropping it from every communication group. Returns the removed
+    /// spec.
+    pub fn remove_gmi(&mut self, id: GmiId) -> Result<GmiSpec> {
+        let Some(spec) = self.gmis.remove(&id) else {
+            bail!("GMI {id} not registered");
+        };
+        for group in self.groups.values_mut() {
+            group.members.retain(|&m| m != id);
+        }
+        Ok(spec)
     }
 
     pub fn gmi(&self, id: GmiId) -> Option<&GmiSpec> {
@@ -217,6 +256,58 @@ mod tests {
         assert_eq!(mpl, vec![vec![0, 1], vec![2, 3]]);
         let none = m.mapping_list(|r| matches!(r, Role::Agent));
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn resize_revalidates_against_peers() {
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 0.5, GmiBackend::Mps)).unwrap();
+        m.add_gmi(spec(1, 0, 0.4, GmiBackend::Mps)).unwrap();
+        // Growing into free capacity is fine; the spec is updated.
+        m.resize_gmi(0, 0.6, 5.0).unwrap();
+        assert_eq!(m.gmi(0).unwrap().sm_share, 0.6);
+        // Growing past the peer's reservation is rejected and leaves the
+        // current provisioning untouched.
+        assert!(m.resize_gmi(0, 0.7, 5.0).is_err());
+        assert_eq!(m.gmi(0).unwrap().sm_share, 0.6);
+        // Invalid shares and unknown GMIs are rejected.
+        assert!(m.resize_gmi(0, 0.0, 5.0).is_err());
+        assert!(m.resize_gmi(0, 1.5, 5.0).is_err());
+        assert!(m.resize_gmi(7, 0.1, 1.0).is_err());
+    }
+
+    #[test]
+    fn resize_respects_mig_quota_and_memory() {
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 2.0 / 7.0, GmiBackend::Mig)).unwrap();
+        // 2g.10gb allows 10 GiB; asking for 12 without more slices fails.
+        assert!(m.resize_gmi(0, 2.0 / 7.0, 12.0).is_err());
+        // Growing to 3g.20gb makes the same memory legal.
+        m.resize_gmi(0, 3.0 / 7.0, 12.0).unwrap();
+        assert_eq!(m.gmi(0).unwrap().mem_gib, 12.0);
+
+        // GPU-level memory oversubscription via resize is rejected too.
+        let mut m2 = GmiManager::new(Topology::dgx_a100(1));
+        let mut a = spec(0, 0, 0.4, GmiBackend::Mps);
+        a.mem_gib = 30.0;
+        m2.add_gmi(a).unwrap();
+        m2.add_gmi(spec(1, 0, 0.4, GmiBackend::Mps)).unwrap();
+        assert!(m2.resize_gmi(1, 0.4, 15.0).is_err());
+        m2.resize_gmi(1, 0.4, 9.0).unwrap();
+    }
+
+    #[test]
+    fn remove_frees_capacity_and_groups() {
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 0.6, GmiBackend::Mps)).unwrap();
+        m.join_group("trainers", 0).unwrap();
+        assert!(m.add_gmi(spec(1, 0, 0.6, GmiBackend::Mps)).is_err());
+        let freed = m.remove_gmi(0).unwrap();
+        assert_eq!(freed.sm_share, 0.6);
+        assert!(m.group("trainers").unwrap().members.is_empty());
+        // The freed capacity is immediately reusable.
+        m.add_gmi(spec(1, 0, 0.6, GmiBackend::Mps)).unwrap();
+        assert!(m.remove_gmi(42).is_err());
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod scheduler;
 
 pub use backend::{GmiBackend, MigProfile, MIG_PROFILES};
 pub use manager::{GmiGroup, GmiManager};
-pub use scheduler::{pack_jobs, Job, Placement, Schedule};
+pub use scheduler::{one_job_per_gpu, pack_jobs, Job, Placement, Schedule};
 
 use crate::vtime::CostModel;
 

@@ -16,6 +16,29 @@
 //! through AOT-lowered HLO artifacts executed on the PJRT CPU client
 //! ([`runtime`]); GPU *timing* is accounted by the calibrated virtual
 //! timeline ([`vtime`]) per DESIGN.md §5.
+//!
+//! ## Architecture: how a run is put together
+//!
+//! ```text
+//! orchestrators   drl::{serving, sync, a3c}, baselines   what runs when
+//!       │  charge(ops) / barriers / transfers
+//!       ▼
+//! engine          engine::{Engine, elastic}              discrete-event executor:
+//!       │                                                clocks, shares, busy/idle,
+//!       │                                                utilization, elastic resize
+//!       ▼
+//! substrate       gmi (manager/backends), mapping,       placement + validation,
+//!                 comm (LGR), channels, cluster, vtime   costs and transports
+//! ```
+//!
+//! Orchestrators never touch `Clock`, `UtilizationTracker`, or share math:
+//! they describe work as [`engine::OpCharge`] sequences and synchronization
+//! as engine primitives (`barrier_advance`, `recv`, `broadcast`), and read
+//! span/utilization/communication totals back from the [`engine::Engine`].
+//! The engine in turn owns a live clone of the [`gmi::GmiManager`], which
+//! lets the [`engine::elastic`] controller re-provision SM shares between
+//! iterations (validated `resize_gmi`) without mutating the caller's
+//! static [`mapping::Layout`].
 
 pub mod baselines;
 pub mod channels;
@@ -23,6 +46,7 @@ pub mod cluster;
 pub mod comm;
 pub mod config;
 pub mod drl;
+pub mod engine;
 pub mod gmi;
 pub mod mapping;
 pub mod metrics;

@@ -174,6 +174,10 @@ COMMON OPTIONS:
   --strategy mpr|mrr|har      force a gradient-reduction strategy
   --backend mps|mig|direct    force a GMI backend
   --mode mcc|ucc              async experience sharing mode
+  --elastic                   re-provision SM shares toward the bottleneck
+                              role between sync iterations
+  --granularity BYTES         per-channel compressor staging threshold
+                              (async; default 256 KiB)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -273,6 +277,9 @@ fn cmd_train_sync(args: &Args) -> Result<()> {
         seed: args.get("seed", 1)?,
         real_replicas: if real { 1 } else { 0 },
         strategy_override: parse_strategy(&args.str("strategy", "auto"))?,
+        elastic: args
+            .flag("elastic")
+            .then(gmi_drl::engine::ElasticConfig::default),
     };
 
     let layout = build_sync_layout(&topo, template, gmi_per_gpu, num_env, &cost, backend)?;
@@ -320,6 +327,8 @@ fn cmd_train_async(args: &Args) -> Result<()> {
         param_sync_every: args.get("param-sync-every", 4)?,
         lr: args.get("lr", 3e-4)?,
         real_replicas: if real { 1 } else { 0 },
+        compressor_granularity: args
+            .get("granularity", AsyncConfig::default().compressor_granularity)?,
     };
     let layout = build_async_layout(
         &topo,

@@ -71,6 +71,24 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Lengthen the virtual span by `extra_s` seconds of communication
+    /// overhead, rescaling every throughput rate accordingly. Used by
+    /// baselines whose backend adds launch/coordination latency on top of
+    /// an engine-computed run (per-tensor NCCL launches, the Horovod
+    /// coordinator cycle).
+    pub fn stretch_span(&mut self, extra_s: f64) {
+        if extra_s <= 0.0 || self.span_s <= 0.0 {
+            return;
+        }
+        let new_span = self.span_s + extra_s;
+        let scale = self.span_s / new_span;
+        self.steps_per_sec *= scale;
+        self.pps *= scale;
+        self.ttop *= scale;
+        self.comm_s += extra_s;
+        self.span_s = new_span;
+    }
+
     pub fn print_summary(&self, label: &str) {
         println!(
             "{label}: {:.0} steps/s | pps {:.0} | ttop {:.0} | util {:.1}% | comm {:.3}s | span {:.2}s | reward {:.3}",
@@ -136,6 +154,27 @@ mod tests {
         let mut u = UtilizationTracker::new();
         u.record(0, 1.0, 20.0, 10.0); // oversubscribed
         assert_eq!(u.gpu_utilization(0), 1.0);
+    }
+
+    #[test]
+    fn stretch_span_rescales_rates() {
+        let mut m = RunMetrics {
+            steps_per_sec: 100.0,
+            pps: 100.0,
+            ttop: 50.0,
+            span_s: 10.0,
+            comm_s: 1.0,
+            ..Default::default()
+        };
+        m.stretch_span(10.0);
+        assert_eq!(m.span_s, 20.0);
+        assert_eq!(m.steps_per_sec, 50.0);
+        assert_eq!(m.ttop, 25.0);
+        assert_eq!(m.comm_s, 11.0);
+        // non-positive extras are no-ops
+        let before = m.steps_per_sec;
+        m.stretch_span(0.0);
+        assert_eq!(m.steps_per_sec, before);
     }
 
     #[test]

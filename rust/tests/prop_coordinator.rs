@@ -8,7 +8,7 @@ use gmi_drl::cluster::Topology;
 use gmi_drl::comm::{reduce_mean, select_strategy, LgrEngine, ReduceStrategy};
 use gmi_drl::channels::{Batcher, ChannelKind, Chunk, Compressor, Packet, ShareMode};
 use gmi_drl::config::static_registry;
-use gmi_drl::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+use gmi_drl::gmi::{one_job_per_gpu, pack_jobs, GmiBackend, GmiManager, GmiSpec, Job, Role};
 use gmi_drl::vtime::{Clock, CostModel, OpKind};
 
 /// Deterministic PRNG (SplitMix64).
@@ -207,6 +207,76 @@ fn prop_manager_never_oversubscribes() {
         let mpl = mgr.mapping_list(|_| true);
         let count: usize = mpl.iter().map(|v| v.len()).sum();
         assert_eq!(count, mgr.len());
+    }
+}
+
+#[test]
+fn prop_pack_jobs_never_oversubscribes_any_gpu() {
+    let mut rng = Rng(0x5eed);
+    let mut packed = 0usize;
+    for case in 0..150 {
+        let gpus = rng.range(1, 8);
+        let topo = Topology::dgx_a100(gpus);
+        let backend = if rng.range(0, 1) == 0 { GmiBackend::Mps } else { GmiBackend::Mig };
+        let jobs: Vec<Job> = (0..rng.range(1, 2 * gpus))
+            .map(|id| Job {
+                id,
+                sm_demand: rng.range(5, 100) as f64 / 100.0,
+                mem_gib: rng.range(1, 20) as f64,
+            })
+            .collect();
+        // Over-full job sets may legitimately be rejected; accepted
+        // schedules must satisfy every per-GPU invariant.
+        let Ok(s) = pack_jobs(&topo, &jobs, backend) else { continue };
+        packed += 1;
+        assert_eq!(s.placements.len(), jobs.len(), "case {case}: job dropped");
+        for gpu in 0..gpus {
+            let on_gpu: Vec<_> = s.placements.iter().filter(|p| p.gpu == gpu).collect();
+            let sm: f64 = on_gpu.iter().map(|p| p.sm_share).sum();
+            assert!(sm <= 1.0 + 1e-9, "case {case}: GPU {gpu} SM {sm}");
+            // Effective memory: MIG reserves at least the profile quota.
+            let mem: f64 = on_gpu
+                .iter()
+                .map(|p| {
+                    let want = jobs[p.job].mem_gib;
+                    backend.mem_quota_gib(p.sm_share).map(|q| q.max(want)).unwrap_or(want)
+                })
+                .sum();
+            assert!(mem <= 40.0 + 1e-9, "case {case}: GPU {gpu} mem {mem}");
+        }
+        // Quantization never under-provisions a job's demand.
+        for p in &s.placements {
+            assert!(p.sm_share + 1e-9 >= jobs[p.job].sm_demand, "case {case}");
+        }
+    }
+    assert!(packed > 50, "generator produced too few packable cases: {packed}");
+}
+
+#[test]
+fn prop_pack_jobs_never_uses_more_gpus_than_exclusive_baseline() {
+    let mut rng = Rng(0xa110);
+    for case in 0..150 {
+        let gpus = rng.range(1, 8);
+        let topo = Topology::dgx_a100(gpus);
+        // At most one job per GPU so the exclusive baseline is feasible.
+        let jobs: Vec<Job> = (0..rng.range(1, gpus))
+            .map(|id| Job {
+                id,
+                sm_demand: rng.range(5, 100) as f64 / 100.0,
+                mem_gib: rng.range(1, 20) as f64,
+            })
+            .collect();
+        let base = one_job_per_gpu(&topo, &jobs).unwrap();
+        for backend in [GmiBackend::Mps, GmiBackend::Mig, GmiBackend::DirectShare] {
+            let s = pack_jobs(&topo, &jobs, backend)
+                .unwrap_or_else(|e| panic!("case {case}: baseline-feasible set rejected: {e}"));
+            assert!(
+                s.gpus_used <= base.gpus_used,
+                "case {case} {backend:?}: packed onto {} GPUs, baseline {}",
+                s.gpus_used,
+                base.gpus_used
+            );
+        }
     }
 }
 

@@ -1,0 +1,70 @@
+//! Fabric allreduce crossover sweep: payload size x GMI layout, priced by
+//! the collective planner (paper Table 2's MPR / MRR / HAR crossover).
+//!
+//! The offline build has no criterion crate; like every bench here this is
+//! a plain deterministic `main` (`cargo bench --bench fabric_allreduce`)
+//! that prints the per-strategy plan costs, the planner's cheapest valid
+//! pick, and the Algorithm 1 heuristic pick for each point of the sweep —
+//! the crossover plot is the cheapest-strategy column flipping as payload
+//! grows.
+
+mod common;
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::comm::select_strategy;
+use gmi_drl::fabric::{Fabric, ReduceStrategy};
+use gmi_drl::metrics::Table;
+
+fn mpl(g: usize, t: usize) -> Vec<Vec<usize>> {
+    (0..g).map(|i| (0..t).map(|j| i * t + j).collect()).collect()
+}
+
+fn main() {
+    common::header(
+        "fabric_allreduce: MPR / MRR / HAR plan-cost crossover",
+        "paper Table 2 / Fig 4; planner pick vs Algorithm 1 heuristic",
+    );
+    let payloads: [(&str, usize); 5] = [
+        ("64 KiB", 64 << 10),
+        ("256 KiB", 256 << 10),
+        ("1 MiB", 1 << 20),
+        ("6 MiB", 6 << 20),
+        ("24 MiB", 24 << 20),
+    ];
+    let layouts: [(usize, usize); 6] = [(1, 3), (2, 2), (2, 3), (4, 2), (4, 4), (8, 4)];
+    let mut t = Table::new(&[
+        "payload", "g", "t", "MPR ms", "MRR ms", "HAR ms", "planner", "Alg 1",
+    ]);
+    for (label, bytes) in payloads {
+        for (g, tt) in layouts {
+            let fabric = Fabric::single_node(Topology::dgx_a100(g));
+            let layout = mpl(g, tt);
+            let cost_ms = |s: ReduceStrategy| -> String {
+                match fabric.plan_allreduce(&layout, bytes, s) {
+                    Ok(p) => format!("{:.3}", p.total_s() * 1e3),
+                    Err(_) => "invalid".to_string(),
+                }
+            };
+            let (cheapest, plan) = fabric.cheapest_allreduce(&layout, bytes);
+            let heuristic = select_strategy(&layout);
+            // The planner must never be costlier than the heuristic pick.
+            let h_cost = fabric
+                .plan_allreduce(&layout, bytes, heuristic)
+                .expect("Algorithm 1 only picks valid strategies")
+                .total_s();
+            assert!(plan.total_s() <= h_cost + 1e-15, "planner worse than Alg 1 at {label} {g}G{tt}T");
+            t.row(vec![
+                label.to_string(),
+                g.to_string(),
+                tt.to_string(),
+                cost_ms(ReduceStrategy::MultiProcess),
+                cost_ms(ReduceStrategy::MultiRing),
+                cost_ms(ReduceStrategy::Hierarchical),
+                cheapest.to_string(),
+                heuristic.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(planner == cheapest valid plan; asserted <= the Algorithm 1 pick everywhere)");
+}

@@ -53,6 +53,7 @@ fn main() -> Result<()> {
         real_replicas: 1,
         strategy_override: None,
         elastic: None,
+        overlap: true,
     };
     let t0 = std::time::Instant::now();
     let r = run_sync(&layout, &bench, &cost, &compute, &cfg)?;

@@ -11,8 +11,9 @@
 
 use anyhow::Result;
 
-use crate::cluster::{Topology, NCCL_LAT};
+use crate::cluster::Topology;
 use crate::config::BenchInfo;
+use crate::fabric::unfused_ring_launch_extra;
 use crate::drl::compute::Compute;
 use crate::drl::serving::{run_serving, ServingConfig};
 use crate::drl::sync::{run_sync, SyncConfig, SyncRunResult};
@@ -83,8 +84,8 @@ pub fn isaac_sync(
     if g > 1 {
         let n_tensors = 2 * (bench.hidden.len() + 1) * 2 + 1; // per-layer w+b, actor+critic, log_std
         let per_epoch_extra = match backend {
-            // NCCL: one launch per tensor (unfused).
-            CommBackend::Nccl => (n_tensors as f64 - 1.0) * NCCL_LAT * 2.0 * (g as f64 - 1.0),
+            // NCCL: one launch per tensor (unfused) — priced by the fabric.
+            CommBackend::Nccl => unfused_ring_launch_extra(g, n_tensors),
             // Horovod: fused, but pays the coordinator cycle (~2.5 ms).
             CommBackend::Horovod => 2.5e-3,
         };

@@ -7,6 +7,13 @@
 //! different levels of granularity and transmission rate" (§4.2). Channel
 //! alignment at the trainer is guaranteed by the migrator's sticky
 //! per-agent routing, not by synchronized flushing.
+//!
+//! Staging is additionally bounded in *age*: a partially filled queue whose
+//! oldest chunk is more than one staging interval old flushes even below
+//! the size threshold. Without this, a low-traffic channel (`Done` is one
+//! float per sample) can starve — its samples sit staged for the whole run
+//! while every other channel of the group reaches the trainer, and the
+//! batcher never completes a batch.
 
 use std::collections::BTreeMap;
 
@@ -15,19 +22,34 @@ use crate::vtime::Clock;
 use super::{ChannelKind, Chunk, Packet, ShareMode};
 
 /// System-wide compressor. Multi-channel mode stages chunks per channel and
-/// emits one packet each time `threshold_bytes` accumulate; uni-channel
-/// mode forwards every chunk immediately (no batching — the Table 8
-/// baseline).
+/// emits one packet each time `threshold_bytes` accumulate — or when the
+/// queue's oldest chunk turns one staging interval old; uni-channel mode
+/// forwards every chunk immediately (no batching — the Table 8 baseline).
 #[derive(Debug)]
 pub struct Compressor {
     mode: ShareMode,
     threshold_bytes: usize,
+    /// Max age (virtual seconds) a staged chunk may wait below the size
+    /// threshold before its queue flushes; `INFINITY` disables age flushes.
+    staging_interval_s: f64,
     staged: BTreeMap<(usize, ChannelKind), Vec<Chunk>>,
 }
 
 impl Compressor {
     pub fn new(mode: ShareMode, threshold_bytes: usize) -> Self {
-        Compressor { mode, threshold_bytes, staged: BTreeMap::new() }
+        Self::with_staging_interval(mode, threshold_bytes, f64::INFINITY)
+    }
+
+    /// Compressor with an anti-starvation staging interval: any queue whose
+    /// oldest chunk is `staging_interval_s` or more behind the newest
+    /// observed timestamp flushes regardless of accumulated size.
+    pub fn with_staging_interval(
+        mode: ShareMode,
+        threshold_bytes: usize,
+        staging_interval_s: f64,
+    ) -> Self {
+        assert!(staging_interval_s > 0.0, "staging interval must be positive");
+        Compressor { mode, threshold_bytes, staging_interval_s, staged: BTreeMap::new() }
     }
 
     /// Default transfer granularity: 1 MiB per channel — large enough to
@@ -37,11 +59,16 @@ impl Compressor {
         Self::new(mode, 1 << 20)
     }
 
-    /// Stage chunks; returns any packets that became ready. Staging is per
-    /// (agent, channel) so one agent's slow channel can't delay another's.
+    /// Stage chunks; returns any packets that became ready (by size, or by
+    /// the anti-starvation age bound). Staging is per (agent, channel) so
+    /// one agent's slow channel can't delay another's.
     pub fn push(&mut self, chunks: Vec<Chunk>) -> Vec<Packet> {
         let mut out = Vec::new();
+        let mut now = Clock::zero();
         for chunk in chunks {
+            if chunk.ready > now {
+                now = chunk.ready;
+            }
             match self.mode {
                 ShareMode::UniChannel => {
                     // Ship every record as-is: maximal op count.
@@ -65,6 +92,38 @@ impl Compressor {
                     }
                 }
             }
+        }
+        out.extend(self.flush_stale(now));
+        out
+    }
+
+    /// Flush every staging queue whose oldest chunk is at least one staging
+    /// interval behind `now` — the anti-starvation bound for low-traffic
+    /// channels. No-op when the interval is infinite.
+    pub fn flush_stale(&mut self, now: Clock) -> Vec<Packet> {
+        if !self.staging_interval_s.is_finite() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        // A queue's first chunk is its oldest: chunks arrive in the
+        // producing agent's clock order and queues are per (agent,
+        // channel), so no full scan is needed.
+        let stale: Vec<(usize, ChannelKind)> = self
+            .staged
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .is_some_and(|c| c.ready.seconds() + self.staging_interval_s <= now.seconds())
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for key in stale {
+            let chunks = self.staged.remove(&key).unwrap_or_default();
+            if chunks.is_empty() {
+                continue;
+            }
+            let ready = Clock::max_of(&chunks.iter().map(|c| c.ready).collect::<Vec<_>>());
+            out.push(Packet { channel: chunks[0].channel, chunks, ready });
         }
         out
     }
@@ -176,6 +235,37 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert!(out.iter().all(|p| p.chunks.len() == 1));
         assert!(cp.flush().is_empty());
+    }
+
+    #[test]
+    fn stale_partial_chunks_flush_by_age() {
+        // Regression: a partially filled low-traffic queue (Done is one
+        // float per sample) used to wait for the size threshold forever;
+        // it must flush once its oldest chunk is one staging interval old.
+        let mut cp = Compressor::with_staging_interval(ShareMode::MultiChannel, usize::MAX, 1.0);
+        assert!(cp.push(vec![chunk(ChannelKind::Done, 4, 1, 0.0)]).is_empty());
+        // Still young at t=0.5: stays staged.
+        assert!(cp.push(vec![chunk(ChannelKind::Done, 4, 1, 0.5)]).is_empty());
+        // Traffic on ANY channel advancing past the age bound flushes the
+        // stale Done queue (and only it — the fresh State chunk stays).
+        let out = cp.push(vec![chunk(ChannelKind::State, 4, 60, 1.25)]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].channel, ChannelKind::Done);
+        assert_eq!(out[0].chunks.len(), 2);
+        assert_eq!(out[0].ready, Clock(0.5));
+        assert_eq!(cp.staged_samples(ChannelKind::Done), 0);
+        assert_eq!(cp.staged_samples(ChannelKind::State), 4);
+        // Explicit sweep hook: nothing stale yet at t=1.5, State stale by
+        // t=3.
+        assert!(cp.flush_stale(Clock(1.5)).is_empty());
+        let late = cp.flush_stale(Clock(3.0));
+        assert_eq!(late.len(), 1);
+        assert_eq!(late[0].channel, ChannelKind::State);
+        // Default construction keeps the pure size-threshold behavior.
+        let mut plain = Compressor::new(ShareMode::MultiChannel, usize::MAX);
+        plain.push(vec![chunk(ChannelKind::Done, 4, 1, 0.0)]);
+        assert!(plain.push(vec![chunk(ChannelKind::Done, 4, 1, 1e9)]).is_empty());
+        assert_eq!(plain.staged_samples(ChannelKind::Done), 8);
     }
 
     #[test]

@@ -6,12 +6,19 @@
 //! load balance happens at agent granularity — a new agent is assigned to
 //! the least-loaded trainer, and an agent is re-assigned at a segment
 //! boundary (its State-channel packet) when its trainer's backlog runs
-//! more than 2x the lightest one. Same-GPU routes forward over the host
-//! path; cross-GPU routes gather over NVLink then hand off.
+//! more than 2x the lightest one.
+//!
+//! Transfer geometry and timing come from the communication
+//! [`fabric`](crate::fabric): the migrator resolves a [`Route`] (same-GPU
+//! host hop vs cross-GPU NVLink + host handoff) and executes it with
+//! per-link occupancy, so packets contending a link serialize instead of
+//! magically sharing it — the migrator holds no link math of its own.
+//!
+//! [`Route`]: crate::fabric::Route
 
 use std::collections::BTreeMap;
 
-use crate::cluster::Topology;
+use crate::fabric::Fabric;
 use crate::vtime::Clock;
 
 use super::{ChannelKind, Packet};
@@ -20,11 +27,15 @@ use super::{ChannelKind, Packet};
 #[derive(Debug, Clone)]
 pub struct RouteDecision {
     pub trainer: usize,
-    /// Virtual time the packet arrives at the trainer.
+    /// Virtual time the packet arrives at the trainer (includes queueing
+    /// behind earlier packets on contended links).
     pub arrival: Clock,
-    /// Link seconds charged for the move.
+    /// Link seconds charged for the move (uncontended route time).
     pub transfer_s: f64,
     pub cross_gpu: bool,
+    /// Sender-side per-message submission overhead (IPC rendezvous +
+    /// serialization), paid on the producing agent's own timeline.
+    pub sender_s: f64,
 }
 
 /// Trainer endpoint registered with the migrator.
@@ -36,7 +47,6 @@ pub struct TrainerEndpoint {
 
 #[derive(Debug)]
 pub struct Migrator {
-    topology: Topology,
     trainers: Vec<TrainerEndpoint>,
     /// Outstanding queued samples per trainer (the load-balance signal).
     outstanding: BTreeMap<usize, usize>,
@@ -47,10 +57,9 @@ pub struct Migrator {
 }
 
 impl Migrator {
-    pub fn new(topology: Topology, trainers: Vec<TrainerEndpoint>) -> Self {
+    pub fn new(trainers: Vec<TrainerEndpoint>) -> Self {
         let outstanding = trainers.iter().map(|t| (t.gmi, 0)).collect();
         Migrator {
-            topology,
             trainers,
             outstanding,
             agent_gpu: BTreeMap::new(),
@@ -93,8 +102,9 @@ impl Migrator {
 
     /// Route one packet to the source agent's sticky trainer; (re)assign at
     /// State-channel packets (segment/group boundaries) so channels of one
-    /// group never split across trainers.
-    pub fn route(&mut self, pkt: &Packet) -> RouteDecision {
+    /// group never split across trainers. The move executes on the fabric:
+    /// its links serialize contended packets and accumulate traffic stats.
+    pub fn route(&mut self, fabric: &mut Fabric, pkt: &Packet) -> RouteDecision {
         assert!(!self.trainers.is_empty(), "no trainer endpoints");
         let agent = pkt.chunks.first().map(|c| c.agent).unwrap_or(0);
         let src_gpu = self.agent_gpu.get(&agent).copied().unwrap_or(0);
@@ -129,23 +139,15 @@ impl Migrator {
             .find(|t| t.gmi == trainer)
             .map(|t| t.gpu)
             .unwrap_or(0);
-        let bytes = pkt.bytes();
-        let cross = chosen_gpu != src_gpu;
-        let transfer_s = if cross {
-            // gather over NVLink to the destination GPU, then host handoff
-            // into the trainer GMI (memory barrier: MIG/MPS isolation).
-            let nv = bytes as f64 / self.topology.inter_gpu_bw() + crate::cluster::NCCL_LAT;
-            nv + self.topology.host_transfer_time(bytes, 1)
-        } else {
-            // same GPU: direct forward by channel over the host path.
-            self.topology.host_transfer_time(bytes, 1)
-        };
+        let (arrival, transfer_s, cross_gpu) =
+            fabric.transfer(src_gpu, chosen_gpu, pkt.bytes(), pkt.ready);
         *self.outstanding.entry(trainer).or_insert(0) += pkt.samples();
         RouteDecision {
             trainer,
-            arrival: Clock(pkt.ready.0 + transfer_s),
+            arrival,
             transfer_s,
-            cross_gpu: cross,
+            cross_gpu,
+            sender_s: fabric.submission_lat(),
         }
     }
 }
@@ -154,6 +156,7 @@ impl Migrator {
 mod tests {
     use super::*;
     use crate::channels::Chunk;
+    use crate::cluster::Topology;
 
     fn packet(agent: usize, ch: ChannelKind, floats: usize, t: f64) -> Packet {
         Packet {
@@ -171,63 +174,63 @@ mod tests {
         }
     }
 
-    fn migrator() -> Migrator {
-        let topo = Topology::dgx_a100(4);
+    fn setup() -> (Migrator, Fabric) {
+        let fabric = Fabric::single_node(Topology::dgx_a100(4));
         let trainers = vec![
             TrainerEndpoint { gmi: 10, gpu: 2 },
             TrainerEndpoint { gmi: 11, gpu: 3 },
         ];
-        let mut m = Migrator::new(topo, trainers);
+        let mut m = Migrator::new(trainers);
         m.register_agent(0, 0);
         m.register_agent(1, 2); // same GPU as trainer 10
         m.register_agent(2, 0);
-        m
+        (m, fabric)
     }
 
     #[test]
     fn sticky_per_agent_alignment() {
-        let mut m = migrator();
-        let d1 = m.route(&packet(0, ChannelKind::State, 100, 1.0));
+        let (mut m, mut f) = setup();
+        let d1 = m.route(&mut f, &packet(0, ChannelKind::State, 100, 1.0));
         // every other channel of agent 0 follows the same trainer
         for ch in [ChannelKind::Action, ChannelKind::Reward, ChannelKind::Done] {
-            let d = m.route(&packet(0, ch, 10, 1.1));
+            let d = m.route(&mut f, &packet(0, ch, 10, 1.1));
             assert_eq!(d.trainer, d1.trainer, "channel {ch:?} split from its group");
         }
     }
 
     #[test]
     fn new_agents_balance_across_trainers() {
-        let mut m = migrator();
-        let d0 = m.route(&packet(0, ChannelKind::State, 100, 1.0));
-        let d2 = m.route(&packet(2, ChannelKind::State, 100, 1.0));
+        let (mut m, mut f) = setup();
+        let d0 = m.route(&mut f, &packet(0, ChannelKind::State, 100, 1.0));
+        let d2 = m.route(&mut f, &packet(2, ChannelKind::State, 100, 1.0));
         assert_ne!(d0.trainer, d2.trainer, "second agent should take the idle trainer");
     }
 
     #[test]
     fn prefers_same_gpu_when_balanced() {
-        let mut m = migrator();
-        let d = m.route(&packet(1, ChannelKind::State, 100, 1.0));
+        let (mut m, mut f) = setup();
+        let d = m.route(&mut f, &packet(1, ChannelKind::State, 100, 1.0));
         assert_eq!(d.trainer, 10);
         assert!(!d.cross_gpu);
     }
 
     #[test]
     fn rebalances_at_group_boundary_when_skewed() {
-        let mut m = migrator();
-        let d0 = m.route(&packet(0, ChannelKind::State, 4000, 1.0));
+        let (mut m, mut f) = setup();
+        let d0 = m.route(&mut f, &packet(0, ChannelKind::State, 4000, 1.0));
         // trainer d0 now has a big backlog; agent 0's next group boundary
         // should move it to the other trainer (backlog > 2x other).
-        let d1 = m.route(&packet(0, ChannelKind::State, 100, 2.0));
+        let d1 = m.route(&mut f, &packet(0, ChannelKind::State, 100, 2.0));
         assert_ne!(d1.trainer, d0.trainer);
         // non-boundary packets never migrate mid-group
-        let d2 = m.route(&packet(0, ChannelKind::Reward, 10, 2.1));
+        let d2 = m.route(&mut f, &packet(0, ChannelKind::Reward, 10, 2.1));
         assert_eq!(d2.trainer, d1.trainer);
     }
 
     #[test]
     fn completion_drains_backlog() {
-        let mut m = migrator();
-        let d = m.route(&packet(0, ChannelKind::State, 500, 1.0));
+        let (mut m, mut f) = setup();
+        let d = m.route(&mut f, &packet(0, ChannelKind::State, 500, 1.0));
         assert_eq!(m.outstanding(d.trainer), 500);
         m.complete(d.trainer, 400);
         assert_eq!(m.outstanding(d.trainer), 100);
@@ -237,12 +240,28 @@ mod tests {
 
     #[test]
     fn cross_gpu_costs_more_and_arrival_after_ready() {
-        let mut m = migrator();
-        let same = m.route(&packet(1, ChannelKind::State, 40960, 5.0));
+        let (mut m, mut f) = setup();
+        let same = m.route(&mut f, &packet(1, ChannelKind::State, 40960, 5.0));
         assert!(!same.cross_gpu);
         assert!(same.arrival.0 > 5.0);
-        let cross = m.route(&packet(0, ChannelKind::State, 40960, 5.0));
+        assert!(same.sender_s > 0.0);
+        let cross = m.route(&mut f, &packet(0, ChannelKind::State, 40960, 5.0));
         assert!(cross.cross_gpu);
         assert!(cross.transfer_s > same.transfer_s);
+    }
+
+    #[test]
+    fn contended_links_serialize_packets() {
+        let (mut m, mut f) = setup();
+        // Two packets from agent 1 to its same-GPU trainer, both ready at
+        // t=1: the second queues behind the first on the host link.
+        let a = m.route(&mut f, &packet(1, ChannelKind::State, 40960, 1.0));
+        let b = m.route(&mut f, &packet(1, ChannelKind::Action, 40960, 1.0));
+        assert_eq!(a.trainer, b.trainer);
+        assert!(b.arrival > a.arrival, "contended link must serialize");
+        assert!(b.arrival.seconds() >= a.arrival.seconds() + b.transfer_s - 1e-12);
+        // Fabric accounted the traffic.
+        let total: u64 = f.link_report().iter().map(|l| l.bytes).sum();
+        assert_eq!(total, 2 * 40960 * 4);
     }
 }

@@ -9,9 +9,12 @@
 //! * [`Dispenser`] (per agent) categorizes experience into channels;
 //! * [`Compressor`] (system-wide) concatenates per-channel chunks until a
 //!   transfer-size threshold is met (the paper's "increase the size of
-//!   each data movement");
-//! * [`Migrator`] (system-wide) routes packets to the least-loaded trainer,
-//!   charging the right link cost (same-GPU host hop vs cross-GPU NVLink);
+//!   each data movement"), with an age bound so low-traffic channels
+//!   can't starve below the threshold;
+//! * [`Migrator`] (system-wide) routes packets to the least-loaded trainer
+//!   over [`fabric`](crate::fabric) routes (same-GPU host hop vs cross-GPU
+//!   NVLink + handoff) with per-link occupancy, so contended links
+//!   serialize;
 //! * [`Batcher`] (per trainer) slices/stacks channel data back into
 //!   training batches.
 //!

@@ -1,6 +1,9 @@
 //! Simulated multi-GPU node: DGX-A100 topology (8x A100, NVSwitch fabric,
-//! per-GPU PCIe host links). The interconnect bandwidth model feeds the
-//! inter-GMI communication costs (comm module).
+//! per-GPU PCIe host links), plus the multi-node cluster extension
+//! ([`MultiNodeTopology`]: identical DGX nodes on an InfiniBand ring). The
+//! interconnect bandwidth model feeds the link-level communication fabric
+//! ([`fabric`](crate::fabric)), which is the only place link costs are
+//! assembled into transfer plans.
 //!
 //! Substitution note (DESIGN.md §1): these are calibrated *effective*
 //! bandwidths — what collective libraries achieve in practice, not link
@@ -115,6 +118,36 @@ impl Topology {
         let b = bytes as f64;
         let eff = (b / (b + HOST_MSG_HALF_BYTES)).max(0.02);
         HOST_LAT + b * procs_sharing.max(1) as f64 / (HOST_BW * eff)
+    }
+}
+
+/// Effective per-node InfiniBand bandwidth (bytes/s): HDR 200 Gb/s link at
+/// NCCL efficiency.
+pub const IB_BW: f64 = 20e9;
+/// Per-operation latency of an inter-node collective step.
+pub const IB_LAT: f64 = 5e-6;
+
+/// A cluster of identical DGX nodes joined by an InfiniBand ring (paper §8's
+/// "intra- and inter-node GMI layout hierarchy").
+#[derive(Debug, Clone)]
+pub struct MultiNodeTopology {
+    pub node: Topology,
+    pub num_nodes: usize,
+}
+
+impl MultiNodeTopology {
+    pub fn dgx_cluster(num_nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(num_nodes >= 1);
+        MultiNodeTopology { node: Topology::dgx_a100(gpus_per_node), num_nodes }
+    }
+
+    /// Inter-node ring allreduce over `k` node leaders.
+    pub fn ib_ring_time(&self, k: usize, bytes: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (k - 1);
+        steps as f64 * (IB_LAT + bytes as f64 / (k as f64 * IB_BW))
     }
 }
 

@@ -15,32 +15,20 @@
 //!   (leader GMI per GPU: `GMI_id % M == t`), NCCL ring across the g
 //!   leaders, broadcast back down. Combines both levels.
 //!
-//! Every strategy here executes the *real* reduction arithmetic and returns
-//! both the reduced vector and the virtual-time cost of the chosen routing.
+//! Every strategy executes the *real* reduction arithmetic (bit-checked by
+//! tests); the *time* is a transfer plan lowered by the communication
+//! [`fabric`](crate::fabric) — this module holds no link math of its own.
+//! [`select_strategy`] is the paper's Algorithm 1 layout heuristic;
+//! [`LgrEngine::cheapest_strategy`] is the fabric planner's cost-based
+//! replacement (validated against the heuristic by the property tests).
 
 use anyhow::{bail, Result};
 
 use super::reduce_mean;
-use crate::cluster::{Topology, CPU_REDUCE_BW, HOST_LAT};
+use crate::cluster::Topology;
+use crate::fabric::{Fabric, Plan};
 
-/// The three reduction strategies of Figure 4.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ReduceStrategy {
-    MultiProcess,
-    MultiRing,
-    Hierarchical,
-}
-
-impl std::fmt::Display for ReduceStrategy {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            ReduceStrategy::MultiProcess => "MPR",
-            ReduceStrategy::MultiRing => "MRR",
-            ReduceStrategy::Hierarchical => "HAR",
-        };
-        f.write_str(s)
-    }
-}
+pub use crate::fabric::ReduceStrategy;
 
 /// Algorithm 1: pick the strategy from the GMI-to-GPU mapping list `MPL`
 /// (one inner vec of GMI ids per GPU).
@@ -83,9 +71,10 @@ pub mod analytical {
     }
 }
 
-/// The LGR engine: owns the layout (mapping list) and executes reductions.
+/// The LGR engine: owns the layout (mapping list) and executes reductions,
+/// with all routing costs lowered through the communication fabric.
 pub struct LgrEngine {
-    topology: Topology,
+    fabric: Fabric,
     /// `mpl[i]` = GMI ids on GPU i (trainer GMIs only).
     mpl: Vec<Vec<usize>>,
 }
@@ -98,7 +87,7 @@ impl LgrEngine {
         if mpl.len() > topology.num_gpus() {
             bail!("mapping list has {} GPUs, topology {}", mpl.len(), topology.num_gpus());
         }
-        Ok(LgrEngine { topology, mpl })
+        Ok(LgrEngine { fabric: Fabric::single_node(topology), mpl })
     }
 
     pub fn num_gmis(&self) -> usize {
@@ -109,13 +98,27 @@ impl LgrEngine {
         self.mpl.len()
     }
 
+    /// Algorithm 1's heuristic pick for this layout.
     pub fn strategy(&self) -> ReduceStrategy {
         select_strategy(&self.mpl)
     }
 
+    /// The planner's pick: the cheapest valid plan for `bytes` under the
+    /// fabric cost model (never an invalid MRR, never costlier than the
+    /// Algorithm 1 heuristic's choice).
+    pub fn cheapest_strategy(&self, bytes: usize) -> ReduceStrategy {
+        self.fabric.cheapest_allreduce(&self.mpl, bytes).0
+    }
+
+    /// Lower one reduction of `bytes` under `strategy` into a fabric plan
+    /// (for callers that execute it as an engine event).
+    pub fn plan(&self, bytes: usize, strategy: ReduceStrategy) -> Result<Plan> {
+        self.fabric.plan_allreduce(&self.mpl, bytes, strategy)
+    }
+
     /// Allreduce (mean) the per-GMI gradients, flattened in mapping-list
-    /// order. Returns (reduced gradient, virtual seconds of the routing
-    /// chosen by `strategy`). Includes the final broadcast back to all GMIs.
+    /// order. Returns (reduced gradient, virtual seconds of the chosen
+    /// routing). Includes the final broadcast back to all GMIs.
     pub fn allreduce(&self, grads: &[Vec<f32>], strategy: ReduceStrategy) -> Result<(Vec<f32>, f64)> {
         let n = self.num_gmis();
         if grads.len() != n {
@@ -137,73 +140,9 @@ impl LgrEngine {
         if self.num_gmis() == 1 {
             return Ok(0.0);
         }
-        Ok(match strategy {
-            ReduceStrategy::MultiProcess => self.mpr_time(bytes),
-            ReduceStrategy::MultiRing => self.mrr_time(bytes)?,
-            ReduceStrategy::Hierarchical => self.har_time(bytes),
-        })
+        Ok(self.plan(bytes, strategy)?.total_s())
     }
 
-    /// MPR: all g*t GMIs stage D2H (contending their GPU's host path), the
-    /// CPU reduces g*t buffers, H2D broadcast back (contended again).
-    fn mpr_time(&self, bytes: usize) -> f64 {
-        let t_max = self.mpl.iter().map(|v| v.len()).max().unwrap();
-        let gt = self.num_gmis();
-        // D2H: t GMIs per GPU share that GPU's PCIe path; GPUs in parallel.
-        let d2h = self.topology.host_transfer_time(bytes, t_max);
-        // CPU reduce over all g*t buffers (the slow part).
-        let cpu = (gt as f64 * bytes as f64) / CPU_REDUCE_BW + HOST_LAT;
-        // H2D broadcast, contended the same way.
-        let h2d = self.topology.host_transfer_time(bytes, t_max);
-        d2h + cpu + h2d
-    }
-
-    /// MRR: t parallel rings across g GPUs (contending NVLink), then a
-    /// final ring over the t ring-leaders, then intra-ring broadcast.
-    fn mrr_time(&self, bytes: usize) -> Result<f64> {
-        let g = self.num_gpus();
-        let t = self.mpl[0].len();
-        if self.mpl.iter().any(|v| v.len() != t) {
-            bail!("MRR requires equal GMIs per GPU");
-        }
-        if t > g {
-            bail!("MRR invalid: {t} GMIs/GPU > {g} GPUs (multiple CUDA streams error)");
-        }
-        // Phase 1: t rings of size g run concurrently, sharing the fabric.
-        let phase1 = self.topology.ring_allreduce_time(g, bytes, t);
-        // Phase 2: one ring over the t leaders (distinct GPUs by layout).
-        let phase2 = self.topology.ring_allreduce_time(t, bytes, 1);
-        // Broadcast back through the phase-1 rings (reverse direction).
-        let bcast = self.topology.ring_allreduce_time(g, bytes, t) / 2.0;
-        Ok(phase1 + phase2 + bcast)
-    }
-
-    /// HAR: host-staged intra-GPU reduce to a leader per GPU (all GPUs in
-    /// parallel), NCCL ring across leaders, host-staged broadcast down.
-    fn har_time(&self, bytes: usize) -> f64 {
-        let g = self.num_gpus();
-        let t_max = self.mpl.iter().map(|v| v.len()).max().unwrap();
-        // Step 1: within each GPU, t GMIs host-stage to the leader and the
-        // leader reduces (GPU-local CPU lanes; GPUs in parallel).
-        let local = if t_max > 1 {
-            self.topology.host_transfer_time(bytes, t_max - 1)
-                + (t_max as f64 * bytes as f64) / CPU_REDUCE_BW
-        } else {
-            0.0
-        };
-        // Step 2: NCCL ring across the g leaders.
-        let ring = self.topology.ring_allreduce_time(g, bytes, 1);
-        // Step 3: leaders broadcast down (host path, parallel per GPU).
-        let down = if t_max > 1 {
-            self.topology.host_transfer_time(bytes, t_max - 1)
-        } else {
-            0.0
-        };
-        local + ring + down
-    }
-
-    /// Broadcast cost of pushing the reduced gradient back out (the paper
-    /// notes this is cheap and parallel; included in allreduce already).
     pub fn mapping_list(&self) -> &[Vec<usize>] {
         &self.mpl
     }
@@ -356,5 +295,17 @@ mod tests {
         let topo = Topology::dgx_a100(4);
         let engine = LgrEngine::new(topo, mpl(4, 3)).unwrap();
         assert_eq!(engine.leaders(), vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn cheapest_never_costlier_than_algorithm1() {
+        for (g, t) in [(1usize, 3usize), (2, 2), (2, 3), (4, 2), (4, 4), (8, 3)] {
+            let engine = LgrEngine::new(Topology::dgx_a100(g), mpl(g, t)).unwrap();
+            let bytes = 6 << 20;
+            let cheap = engine.cheapest_strategy(bytes);
+            let t_cheap = engine.reduce_time(bytes, cheap).unwrap();
+            let t_alg1 = engine.reduce_time(bytes, engine.strategy()).unwrap();
+            assert!(t_cheap <= t_alg1 + 1e-15, "{g}G{t}T: {cheap} {t_cheap} vs {t_alg1}");
+        }
     }
 }

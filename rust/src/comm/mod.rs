@@ -10,8 +10,9 @@
 //!   channel-based experience sharing (§4.2, see the `channels` module).
 //!
 //! All reductions do *real arithmetic* on the gradient vectors (bit-checked
-//! by tests); the *time* is charged to the virtual clocks by the cost model
-//! in [`lgr`] / `cluster`.
+//! by tests); the *time* comes from transfer plans lowered by the
+//! communication [`fabric`](crate::fabric) over the `cluster` link model —
+//! this module computes no link costs of its own.
 
 pub mod lgr;
 pub mod multinode;

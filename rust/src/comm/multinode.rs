@@ -8,45 +8,27 @@
 //!   2. intra-node: NCCL ring over the node's GPU leaders via NVLink;
 //!   3. inter-node: ring over per-node leaders via InfiniBand.
 //! Then broadcast back down the same tree.
+//!
+//! The routing costs are lowered by the communication
+//! [`fabric`](crate::fabric) (the hierarchy is
+//! [`Fabric::plan_multinode_allreduce`]; the flat ablation is
+//! [`Fabric::plan_flat_mpr`]); this module owns the layout validation and
+//! the real reduction arithmetic.
+//!
+//! [`Fabric::plan_multinode_allreduce`]: crate::fabric::Fabric::plan_multinode_allreduce
+//! [`Fabric::plan_flat_mpr`]: crate::fabric::Fabric::plan_flat_mpr
 
 use anyhow::{bail, Result};
 
 use super::reduce_mean;
-use crate::cluster::{Topology, CPU_REDUCE_BW, NCCL_LAT};
+use crate::fabric::Fabric;
 
-/// Effective per-node InfiniBand bandwidth (bytes/s): HDR 200 Gb/s link at
-/// NCCL efficiency.
-pub const IB_BW: f64 = 20e9;
-/// Per-operation latency of an inter-node collective step.
-pub const IB_LAT: f64 = 5e-6;
-
-/// A cluster of identical DGX nodes.
-#[derive(Debug, Clone)]
-pub struct MultiNodeTopology {
-    pub node: Topology,
-    pub num_nodes: usize,
-}
-
-impl MultiNodeTopology {
-    pub fn dgx_cluster(num_nodes: usize, gpus_per_node: usize) -> Self {
-        assert!(num_nodes >= 1);
-        MultiNodeTopology { node: Topology::dgx_a100(gpus_per_node), num_nodes }
-    }
-
-    /// Inter-node ring allreduce over `k` node leaders.
-    pub fn ib_ring_time(&self, k: usize, bytes: usize) -> f64 {
-        if k <= 1 {
-            return 0.0;
-        }
-        let steps = 2 * (k - 1);
-        steps as f64 * (IB_LAT + bytes as f64 / (k as f64 * IB_BW))
-    }
-}
+pub use crate::cluster::{MultiNodeTopology, IB_BW, IB_LAT};
 
 /// Hierarchical multi-node reducer: `t` trainer GMIs per GPU, `g` GPUs per
 /// node, `nodes` nodes.
 pub struct MultiNodeLgr {
-    topo: MultiNodeTopology,
+    fabric: Fabric,
     g: usize,
     t: usize,
 }
@@ -59,11 +41,11 @@ impl MultiNodeLgr {
         if gpus_per_node > topo.node.num_gpus() {
             bail!("node has {} GPUs, asked {gpus_per_node}", topo.node.num_gpus());
         }
-        Ok(MultiNodeLgr { topo, g: gpus_per_node, t: gmis_per_gpu })
+        Ok(MultiNodeLgr { fabric: Fabric::multi_node(topo), g: gpus_per_node, t: gmis_per_gpu })
     }
 
     pub fn num_gmis(&self) -> usize {
-        self.topo.num_nodes * self.g * self.t
+        self.fabric.multi_topology().expect("multi-node fabric").num_nodes * self.g * self.t
     }
 
     /// Allreduce (mean) over all GMIs' gradients, flattened node-major.
@@ -84,26 +66,7 @@ impl MultiNodeLgr {
 
     /// Cost of the 3-level hierarchy for one reduction of `bytes`.
     pub fn reduce_time(&self, bytes: usize) -> f64 {
-        // Level 1: intra-GPU host-staged reduce (all GPUs of all nodes in
-        // parallel; t-1 transfers contend each GPU's PCIe path).
-        let l1 = if self.t > 1 {
-            self.topo.node.host_transfer_time(bytes, self.t - 1)
-                + (self.t as f64 * bytes as f64) / CPU_REDUCE_BW
-        } else {
-            0.0
-        };
-        // Level 2: NVLink ring over the g per-GPU leaders (per node).
-        let l2 = self.topo.node.ring_allreduce_time(self.g, bytes, 1);
-        // Level 3: InfiniBand ring over node leaders.
-        let l3 = self.topo.ib_ring_time(self.topo.num_nodes, bytes);
-        // Broadcast back down: NVLink fan-out + host fan-out (overlapped
-        // per level; count the slower leg of each).
-        let down = if self.t > 1 {
-            self.topo.node.host_transfer_time(bytes, self.t - 1)
-        } else {
-            0.0
-        } + NCCL_LAT;
-        l1 + l2 + l3 + down
+        self.fabric.plan_multinode_allreduce(self.g, self.t, bytes).total_s()
     }
 
     /// The naive flat alternative: a ring over all GMIs is *invalid*
@@ -112,19 +75,7 @@ impl MultiNodeLgr {
     /// at scale is MPR: every GMI host-stages to a global CPU reduction.
     /// Used by tests/ablation to show the hierarchy is required at scale.
     pub fn flat_mpr_time(&self, bytes: usize) -> f64 {
-        let k = self.num_gmis();
-        // D2H: t GMIs contend each GPU's PCIe path (GPUs/nodes parallel);
-        // the global CPU reduce is serial in the total volume; results
-        // additionally cross IB once to reach every node.
-        let d2h = self.topo.node.host_transfer_time(bytes, self.t);
-        let cpu = k as f64 * bytes as f64 / CPU_REDUCE_BW;
-        let ib = if self.topo.num_nodes > 1 {
-            bytes as f64 * (self.topo.num_nodes - 1) as f64 / IB_BW
-        } else {
-            0.0
-        };
-        let h2d = self.topo.node.host_transfer_time(bytes, self.t);
-        d2h + cpu + ib + h2d
+        self.fabric.plan_flat_mpr(self.g, self.t, bytes).total_s()
     }
 }
 

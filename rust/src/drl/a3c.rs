@@ -8,7 +8,11 @@
 //!
 //! Timing runs on the shared [`engine`](crate::engine): agents and trainers
 //! are executors; batch consumption is a blocking-receive charge
-//! (`charge_after`) against the batch's pipeline arrival time.
+//! (`charge_after`) against the batch's pipeline arrival time. All
+//! experience and parameter movement flows over the communication
+//! [`fabric`](crate::fabric): the migrator executes per-packet routes with
+//! per-link occupancy (contended links serialize), and the periodic
+//! parameter push-back is a fabric plan.
 
 use std::collections::BTreeMap;
 
@@ -21,6 +25,7 @@ use crate::channels::{
 };
 use crate::config::BenchInfo;
 use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
 use crate::mapping::Layout;
 use crate::metrics::{RewardTracker, RunMetrics};
 use crate::vtime::{CostModel, OpKind};
@@ -42,6 +47,10 @@ pub struct AsyncConfig {
     /// (HOST_MSG_HALF_BYTES) against staging latency on the narrow
     /// channels; Table-8-style sweeps vary it.
     pub compressor_granularity: usize,
+    /// Anti-starvation staging bound (virtual seconds): a partially filled
+    /// channel queue older than this flushes below the size threshold, so
+    /// low-traffic channels (e.g. `Done`) can't stall the batcher.
+    pub staging_interval_s: f64,
 }
 
 impl Default for AsyncConfig {
@@ -55,6 +64,7 @@ impl Default for AsyncConfig {
             lr: super::DEFAULT_LR,
             real_replicas: 1,
             compressor_granularity: 256 << 10,
+            staging_interval_s: 1.0,
         }
     }
 }
@@ -78,20 +88,29 @@ pub fn run_async(
     let trainers = &layout.trainer_gmis;
     anyhow::ensure!(!agents.is_empty() && !trainers.is_empty(), "async layout needs both");
 
-    let topo = layout.manager.topology().clone();
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
     let endpoints: Vec<TrainerEndpoint> = trainers
         .iter()
         .map(|&g| TrainerEndpoint { gmi: g, gpu: layout.manager.gmi(g).unwrap().gpu })
         .collect();
-    let mut migrator = Migrator::new(topo.clone(), endpoints);
+    let mut migrator = Migrator::new(endpoints);
+    let mut agent_gpus: Vec<usize> = Vec::new();
     for &a in agents {
-        migrator.register_agent(a, layout.manager.gmi(a).unwrap().gpu);
+        let gpu = layout.manager.gmi(a).unwrap().gpu;
+        migrator.register_agent(a, gpu);
+        if !agent_gpus.contains(&gpu) {
+            agent_gpus.push(gpu);
+        }
     }
     let mut dispensers: Vec<Dispenser> = agents
         .iter()
         .map(|&a| Dispenser::new(a, bench.obs_dim, bench.act_dim))
         .collect();
-    let mut compressor = Compressor::new(cfg.share_mode, cfg.compressor_granularity);
+    let mut compressor = Compressor::with_staging_interval(
+        cfg.share_mode,
+        cfg.compressor_granularity,
+        cfg.staging_interval_s,
+    );
     let mut batchers: BTreeMap<usize, Batcher> = trainers
         .iter()
         .map(|&t| (t, Batcher::new(t, cfg.share_mode, cfg.batch_samples)))
@@ -198,12 +217,12 @@ pub fn run_async(
                 packets.extend(compressor.push(group));
             }
             for pkt in packets {
+                let decision = migrator.route(&mut fabric, &pkt);
                 // The sender pays a per-message submission overhead on its
                 // own timeline (IPC rendezvous + serialization) — the cost
                 // that makes fine-grained UCC sharing slow on the agent
                 // side (§4.2 / Table 8's PPS gap).
-                engine.pay(agent_ids[i], crate::cluster::HOST_LAT);
-                let decision = migrator.route(&pkt);
+                engine.pay(agent_ids[i], decision.sender_s);
                 stats.transfer_seconds += decision.transfer_s;
                 stats.transfer_ops += 1;
                 stats.packets_out += 1;
@@ -240,11 +259,13 @@ pub fn run_async(
                     // param push-back every k updates. A3C is asynchronous:
                     // agents never BLOCK on the trainer (they keep acting
                     // on stale parameters); they only pay the receive cost
-                    // of the pushed tensor on their own timeline.
+                    // of the pushed tensor on their own timeline. The push
+                    // is a fabric plan (NVLink crossing + host delivery
+                    // into each agent GMI).
                     if updates % cfg.param_sync_every == 0 {
-                        let t_push = topo.host_transfer_time(bench.param_bytes(), 1)
-                            + bench.param_bytes() as f64 / topo.inter_gpu_bw();
-                        engine.pay_group(&agent_ids, t_push);
+                        let push = fabric.plan_param_push(bench.param_bytes(), &agent_gpus);
+                        fabric.tally(&push, 1.0);
+                        engine.pay_group(&agent_ids, push.total_s());
                         for w in agent_workers.iter_mut() {
                             w.params = trainer_worker.params.clone();
                         }
@@ -285,6 +306,7 @@ pub fn run_async(
         reward_curve: rewards.curve.clone(),
         comm_s: stats.transfer_seconds,
         peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
+        links: fabric.link_report(),
     };
     Ok(AsyncRunResult { metrics, channel_stats: stats, updates })
 }
@@ -379,6 +401,23 @@ mod tests {
         assert!(
             fine.channel_stats.mean_packet_bytes() < coarse.channel_stats.mean_packet_bytes()
         );
+    }
+
+    #[test]
+    fn fabric_links_surface_in_metrics() {
+        let (layout, b, cost) = setup();
+        let cfg = AsyncConfig { rounds: 6, ..Default::default() };
+        let r = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert!(!r.metrics.links.is_empty(), "fabric traffic must be reported");
+        // Every packet crossed at least one fabric link; cross-GPU packets
+        // and parameter pushes cross more.
+        let total: u64 = r.metrics.links.iter().map(|l| l.bytes).sum();
+        assert!(
+            total >= r.channel_stats.bytes_moved,
+            "links {total} vs pipeline {}",
+            r.channel_stats.bytes_moved
+        );
+        assert!(r.metrics.links.iter().all(|l| l.busy_s >= 0.0));
     }
 
     #[test]

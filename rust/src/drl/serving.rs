@@ -6,14 +6,16 @@
 //! boundary (Table 4's COM term) — the cost that motivates co-location.
 //!
 //! Timing runs on the shared [`engine`](crate::engine): each serving GMI is
-//! one executor; the TDG boundary crossing is charged as unoccupied
-//! per-step time on the same timeline.
+//! one executor; the TDG boundary crossing is a [`fabric`](crate::fabric)
+//! intra-GPU plan charged as unoccupied per-step time on the same timeline
+//! (and tallied into the per-link traffic report).
 
 use anyhow::Result;
 
 use super::compute::Compute;
 use crate::config::BenchInfo;
 use crate::engine::{Engine, OpCharge};
+use crate::fabric::Fabric;
 use crate::gmi::Role;
 use crate::mapping::Layout;
 use crate::metrics::RunMetrics;
@@ -57,6 +59,7 @@ pub fn run_serving(
     }
 
     let mut engine = Engine::new(&layout.manager, cost);
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
     let ids = engine.add_group(gmis)?;
     let m = bench.horizon;
     let mut reward_sum = 0.0f64;
@@ -77,12 +80,14 @@ pub fn run_serving(
                 OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
             };
             // TDG: per interaction step, 2S + A + W bytes cross the GMI
-            // boundary through the host (Table 4).
+            // boundary through the host (Table 4) — a fabric intra-GPU
+            // plan, tallied once per step.
             let t_comm = if dedicated {
                 let bytes = n_env * 4 * (2 * bench.obs_dim + bench.act_dim + 1);
-                engine
-                    .topology()
-                    .host_transfer_time(bytes, engine.co_resident(id).max(1))
+                let hop =
+                    fabric.plan_intra_gpu(bytes, engine.co_resident(id).max(1), engine.gpu(id));
+                fabric.tally(&hop, m as f64);
+                hop.total_s()
             } else {
                 0.0
             };
@@ -111,6 +116,7 @@ pub fn run_serving(
         reward_curve: vec![],
         comm_s: 0.0,
         peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
+        links: fabric.link_report(),
     })
 }
 

@@ -9,19 +9,36 @@
 //!
 //! All timing runs on the shared [`engine`](crate::engine): this module
 //! describes *what* executes where; clocks, share math, and utilization
-//! accounting live in the engine. With [`SyncConfig::elastic`] set, the
+//! accounting live in the engine, and every transfer (gradient reduction,
+//! TDG experience/parameter movement) is a [`fabric`](crate::fabric) plan
+//! executed as an engine event. With [`SyncConfig::elastic`] set, the
 //! engine's elastic controller re-provisions SM shares between iterations
 //! toward the bottleneck role.
+//!
+//! ## Overlap semantics ([`SyncConfig::overlap`], on by default)
+//!
+//! With overlap, a minibatch's gradient reduction drains on the fabric
+//! links while the trainers already compute the next minibatch (bucketed
+//! DDP-style pipelining), and the *last* reduction of an iteration drains
+//! while the next iteration's rollout starts. The true data dependency is
+//! preserved where it lands: the first gradient of the next epoch (it
+//! consumes the reduced parameters) blocks on the previous epoch's final
+//! reduction via `charge_after`, and the run's span includes the final
+//! drain. The reduction *arithmetic* is unaffected — both schedules call
+//! the identical numerics, so reduced gradients are bit-identical; only
+//! the virtual timeline changes. `overlap: false` reproduces the strictly
+//! sequential per-minibatch barrier schedule.
 
 use anyhow::Result;
 
 use super::compute::{Compute, WorkerState};
-use crate::comm::{LgrEngine, ReduceStrategy};
+use crate::comm::ReduceStrategy;
 use crate::config::BenchInfo;
 use crate::engine::{ElasticConfig, ElasticController, Engine, OpCharge};
+use crate::fabric::Fabric;
 use crate::mapping::Layout;
 use crate::metrics::{RewardTracker, RunMetrics};
-use crate::vtime::{CostModel, OpKind};
+use crate::vtime::{Clock, CostModel, OpKind};
 
 /// Sync-training run configuration.
 #[derive(Debug, Clone)]
@@ -38,11 +55,16 @@ pub struct SyncConfig {
     /// results (data-parallel replicas are statistically identical; the
     /// virtual timing is charged for every GMI regardless).
     pub real_replicas: usize,
-    /// Force a reduction strategy (None = Algorithm 1).
+    /// Force a reduction strategy (`--reduce`; None = the fabric planner's
+    /// cheapest valid plan).
     pub strategy_override: Option<ReduceStrategy>,
     /// Elastic mid-run re-provisioning: between iterations, shift SM share
     /// toward the bottleneck role group (None = static provisioning).
     pub elastic: Option<ElasticConfig>,
+    /// Overlap gradient reductions with trainer compute and the next
+    /// rollout (paper §4.2 pipelined transfers); `false` reproduces the
+    /// strictly sequential per-minibatch barrier schedule.
+    pub overlap: bool,
 }
 
 impl Default for SyncConfig {
@@ -56,6 +78,7 @@ impl Default for SyncConfig {
             real_replicas: 1,
             strategy_override: None,
             elastic: None,
+            overlap: true,
         }
     }
 }
@@ -83,10 +106,17 @@ pub fn run_sync(
     anyhow::ensure!(n_roll > 0 && n_train > 0, "layout has no rollout/trainer GMIs");
     let colocated = layout.rollout_gmis == layout.trainer_gmis;
 
-    // LGR engine over the trainer GMIs.
+    // LGR over the trainer GMIs: the run's one fabric both plans the
+    // reduction (cheapest valid plan unless pinned via `--reduce`) and
+    // executes it, so every plan's link ids refer to the fabric that
+    // drains it. All transfer timing below runs through fabric plans
+    // executed as engine events.
     let mpl = layout.manager.mapping_list(|r| r.has_trainer());
-    let lgr = LgrEngine::new(layout.manager.topology().clone(), mpl)?;
-    let strategy = cfg.strategy_override.unwrap_or_else(|| lgr.strategy());
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
+    let (strategy, reduce_plan) = match cfg.strategy_override {
+        Some(s) => (s, fabric.plan_allreduce(&mpl, bench.param_bytes(), s)?),
+        None => fabric.cheapest_allreduce(&mpl, bench.param_bytes()),
+    };
 
     // The execution engine: one executor per role task. Colocated layouts
     // (TCG_EX holistic GMIs) alias rollout and trainer onto one timeline.
@@ -94,6 +124,9 @@ pub fn run_sync(
     let roll_ids = engine.add_group(&layout.rollout_gmis)?;
     let tr_ids = engine.add_group(&layout.trainer_gmis)?;
     let mut elastic = cfg.elastic.clone().map(ElasticController::new);
+    // Completion of the last issued overlapped reduction: the next
+    // parameter consumer blocks on it (None until the first reduction).
+    let mut params_ready: Option<Clock> = None;
 
     // Worker state per rollout GMI (params/adam/env); trainers in TDG_EX
     // share the leader worker state of their GPU's serving GMIs.
@@ -142,7 +175,9 @@ pub fn run_sync(
         }
 
         // TDG_EX: ship experience from serving GMIs to their GPU's trainer
-        // and later ship parameters back (the Table 5 COM term).
+        // and later ship parameters back (the Table 5 COM term). The gather
+        // is a fabric plan: the k feeders contend and serialize on the
+        // trainer GPU's host path.
         if !colocated {
             for (t_idx, _) in layout.trainer_gmis.iter().enumerate() {
                 let tgpu = engine.gpu(tr_ids[t_idx]);
@@ -153,10 +188,10 @@ pub fn run_sync(
                     .filter(|&e| engine.gpu(e) == tgpu)
                     .collect();
                 let k = feeders.len().max(1);
-                let t_move = engine.topology().host_transfer_time(exp_bytes_per_gmi, k);
+                let gather = fabric.plan_gather(k, exp_bytes_per_gmi, tgpu);
                 // trainer waits for the slowest feeder, then the transfer.
                 let feed_max = engine.max_time(&feeders);
-                engine.recv(tr_ids[t_idx], feed_max, t_move * k as f64);
+                engine.recv_plan(&mut fabric, tr_ids[t_idx], feed_max, &gather);
             }
         }
 
@@ -169,7 +204,6 @@ pub fn run_sync(
         // partitioning changes traffic, not the per-epoch math).
         let mut iter_stats = super::TrainStats::default();
         let mb = cfg.minibatches.max(1);
-        let t_red = lgr.reduce_time(bench.param_bytes(), strategy)?;
         for _epoch in 0..cfg.ppo_epochs {
             // Real gradients, once per epoch. Only the real replicas are
             // materialized; the reduced gradient is their mean with
@@ -206,8 +240,13 @@ pub fn run_sync(
                 acc
             };
 
-            // virtual minibatch loop: grad -> reduce barrier -> apply
-            for _mb in 0..mb {
+            // virtual minibatch loop: grad/apply on the compute stream, one
+            // LGR reduction per minibatch on the fabric. Sequential mode
+            // blocks every trainer on every reduction (the PR 1 schedule);
+            // overlap mode lets reduction k drain while minibatch k+1
+            // computes, re-synchronizing at the next epoch's first gradient
+            // (the point that consumes the reduced parameters).
+            for mb_i in 0..mb {
                 for t_idx in 0..n_train {
                     let total_samples = if colocated {
                         layout.num_env_per_gmi * m
@@ -215,19 +254,30 @@ pub fn run_sync(
                         layout.num_env_per_gmi * m * (n_roll / n_train).max(1)
                     };
                     let samples = (total_samples / mb).max(1);
-                    engine.charge_steps(
-                        cost,
-                        tr_ids[t_idx],
-                        1.0,
-                        &[
-                            OpCharge::recorded(OpKind::TrainGrad { samples }),
-                            OpCharge::recorded(OpKind::AdamApply),
-                        ],
-                        0.0,
-                    );
+                    let ops = [
+                        OpCharge::recorded(OpKind::TrainGrad { samples }),
+                        OpCharge::recorded(OpKind::AdamApply),
+                    ];
+                    match (mb_i, params_ready) {
+                        // First gradient after an overlapped reduction:
+                        // block on the reduced parameters landing.
+                        (0, Some(ready)) => {
+                            engine.charge_after(cost, tr_ids[t_idx], ready, &ops);
+                        }
+                        _ => {
+                            engine.charge_steps(cost, tr_ids[t_idx], 1.0, &ops, 0.0);
+                        }
+                    }
                 }
-                // LGR reduction barrier per minibatch
-                engine.barrier_advance(&tr_ids, t_red);
+                if reduce_plan.is_empty() {
+                    continue;
+                }
+                if cfg.overlap {
+                    params_ready =
+                        Some(engine.collective_overlapped(&mut fabric, &tr_ids, &reduce_plan));
+                } else {
+                    engine.collective(&mut fabric, &tr_ids, &reduce_plan);
+                }
             }
 
             // real update, once per epoch
@@ -239,13 +289,25 @@ pub fn run_sync(
             }
         }
 
-        // TDG_EX: parameters flow back to the serving GMIs.
+        // TDG_EX: parameters flow back to the serving GMIs once the last
+        // reduction has drained.
         if !colocated {
-            let t_back = engine
-                .topology()
-                .host_transfer_time(bench.param_bytes(), n_roll / n_train.max(1));
-            let tmax = engine.max_time(&tr_ids);
-            engine.broadcast(&roll_ids, tmax, t_back);
+            let roll_gpus: Vec<usize> = {
+                let mut g: Vec<usize> = roll_ids.iter().map(|&r| engine.gpu(r)).collect();
+                g.sort_unstable();
+                g.dedup();
+                g
+            };
+            let fan = fabric.plan_fanout(
+                bench.param_bytes(),
+                n_roll / n_train.max(1),
+                &roll_gpus,
+            );
+            let mut from = engine.max_time(&tr_ids);
+            if let Some(ready) = params_ready {
+                from = Clock(from.seconds().max(ready.seconds()));
+            }
+            engine.broadcast_plan(&mut fabric, &roll_ids, from, &fan);
         }
 
         let mean_r = rollouts.iter().map(|r| r.mean_reward as f64).sum::<f64>()
@@ -257,6 +319,12 @@ pub fn run_sync(
         if let Some(ctl) = elastic.as_mut() {
             ctl.rebalance(&mut engine, &roll_ids, &tr_ids);
         }
+    }
+
+    // The final overlapped reduction drains past the last compute charge:
+    // the run isn't over until its parameters landed.
+    if let Some(ready) = params_ready {
+        engine.wait_group(&tr_ids, ready);
     }
 
     // ---- metrics ----
@@ -275,6 +343,7 @@ pub fn run_sync(
         reward_curve: rewards.curve.clone(),
         comm_s: engine.comm_s(),
         peak_mem_gib: peak_mem,
+        links: fabric.link_report(),
     };
     Ok(SyncRunResult {
         metrics,
@@ -311,14 +380,19 @@ mod tests {
         assert!(r.metrics.span_s > 0.0);
         assert!(r.metrics.utilization > 0.0 && r.metrics.utilization <= 1.0);
         assert_eq!(r.metrics.reward_curve.len(), 10);
-        // 2 GPUs x 2 GMIs -> MRR by Algorithm 1
+        // 2 GPUs x 2 GMIs -> MRR: the planner's cheapest plan (rings over
+        // NVSwitch), agreeing with Algorithm 1 here.
         assert_eq!(r.strategy, ReduceStrategy::MultiRing);
         // static provisioning by default
         assert_eq!(r.elastic_shifts, 0);
+        // fabric traffic surfaced
+        assert!(!r.metrics.links.is_empty());
     }
 
     #[test]
-    fn algorithm1_drives_strategy() {
+    fn planner_drives_strategy() {
+        // t > g: MRR is invalid; the cheapest valid plan is hierarchical —
+        // the same verdict Algorithm 1 reaches.
         let (layout, b, cost) = setup(2, 3);
         let r = run_sync(&layout, &b, &cost, &Compute::Null, &SyncConfig::default()).unwrap();
         assert_eq!(r.strategy, ReduceStrategy::Hierarchical);
@@ -372,6 +446,10 @@ mod tests {
         assert_eq!(a.metrics.steps_per_sec, c.metrics.steps_per_sec);
         assert_eq!(a.final_params, c.final_params);
     }
+
+    // Overlap-vs-sequential behavior (strict speedup, bit-identical
+    // parameters, identical per-link traffic) is covered end-to-end by
+    // the integration suite in `rust/tests/fabric_overlap.rs`.
 
     /// A deliberately imbalanced TDG_EX layout: starved rollout GMIs next
     /// to an over-provisioned trainer on every GPU.

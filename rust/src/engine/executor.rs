@@ -11,6 +11,7 @@
 use anyhow::{Context, Result};
 
 use crate::cluster::Topology;
+use crate::fabric::{Fabric, Plan};
 use crate::gmi::{GmiBackend, GmiId, GmiManager};
 use crate::metrics::UtilizationTracker;
 use crate::vtime::{Clock, CostModel, OpKind};
@@ -243,6 +244,77 @@ impl Engine {
             self.execs[i].clock.merge_then_advance(from, dt);
         }
         self.comm_s += dt;
+    }
+
+    // ---- fabric collectives (transfer plans as engine events) ----
+
+    /// Merge every member's clock forward to `ready` (no communication
+    /// charge) — the drain point of an overlapped collective.
+    pub fn wait_group(&mut self, ids: &[ExecutorId], ready: Clock) {
+        for &i in ids {
+            self.execs[i].clock.merge_then_advance(ready, 0.0);
+        }
+    }
+
+    /// Issue a collective over `ids` *without blocking them*: the plan
+    /// starts at the group's current max clock (every participant's input
+    /// is ready), drains on the fabric — serializing against other plans on
+    /// the same links — and the completion clock is returned. Participant
+    /// clocks are untouched, so their compute overlaps the transfer; the
+    /// caller re-synchronizes where the data dependency actually lands
+    /// ([`Engine::wait_group`] or a `charge_after`). The plan's own link
+    /// time is counted once as communication (queueing behind an earlier
+    /// plan is that plan's already-counted drain, not new transfer time).
+    pub fn collective_overlapped(
+        &mut self,
+        fabric: &mut Fabric,
+        ids: &[ExecutorId],
+        plan: &Plan,
+    ) -> Clock {
+        let start = self.max_time(ids);
+        let done = fabric.execute(plan, start);
+        self.comm_s += plan.total_s();
+        done
+    }
+
+    /// Blocking collective: issue the plan at the group max and make every
+    /// participant wait for its completion (the sequential schedule).
+    pub fn collective(&mut self, fabric: &mut Fabric, ids: &[ExecutorId], plan: &Plan) -> Clock {
+        let done = self.collective_overlapped(fabric, ids, plan);
+        self.wait_group(ids, done);
+        done
+    }
+
+    /// Point-to-point / gather plan as a blocking receive: the transfer
+    /// starts when both the payload (`ready`) and the receiver are ready,
+    /// drains on the fabric, and the receiver's clock lands at the arrival.
+    pub fn recv_plan(
+        &mut self,
+        fabric: &mut Fabric,
+        id: ExecutorId,
+        ready: Clock,
+        plan: &Plan,
+    ) -> Clock {
+        let start = Clock(self.execs[id].clock.seconds().max(ready.seconds()));
+        let done = fabric.execute(plan, start);
+        self.comm_s += plan.total_s();
+        self.execs[id].clock.merge_then_advance(done, 0.0);
+        done
+    }
+
+    /// Fan-out plan: the payload leaves at `from`, drains once on the
+    /// fabric, and every receiver waits for the arrival.
+    pub fn broadcast_plan(
+        &mut self,
+        fabric: &mut Fabric,
+        ids: &[ExecutorId],
+        from: Clock,
+        plan: &Plan,
+    ) -> Clock {
+        let done = fabric.execute(plan, from);
+        self.comm_s += plan.total_s();
+        self.wait_group(ids, done);
+        done
     }
 
     // ---- timeline / accounting queries ----
@@ -484,6 +556,41 @@ mod tests {
         assert!(fast < slow, "more share must speed GEMM work up");
         // The caller-visible manager reflects the live provisioning.
         assert_eq!(e.manager().gmi(0).unwrap().sm_share, 0.3);
+    }
+
+    #[test]
+    fn fabric_collectives_overlap_and_serialize() {
+        let (mut e, ids, _) = setup(&[0.4, 0.4]);
+        let mut fabric = Fabric::single_node(Topology::dgx_a100(1));
+        let plan = fabric.plan_intra_gpu(8 << 20, 1, 0);
+        e.pay(ids[0], 1.0);
+        let done = e.collective_overlapped(&mut fabric, &ids, &plan);
+        assert!((done.seconds() - (1.0 + plan.total_s())).abs() < 1e-12);
+        // Overlapped: participants did not block on the drain.
+        assert_eq!(e.clock(ids[0]).seconds(), 1.0);
+        assert_eq!(e.clock(ids[1]).seconds(), 0.0);
+        assert!((e.comm_s() - plan.total_s()).abs() < 1e-12);
+        // Blocking variant lands everyone at completion and serializes
+        // against the first plan's link occupancy.
+        let done2 = e.collective(&mut fabric, &ids, &plan);
+        assert!(done2.seconds() >= done.seconds() + plan.total_s() - 1e-12);
+        assert_eq!(e.clock(ids[0]).seconds(), done2.seconds());
+        assert_eq!(e.clock(ids[1]).seconds(), done2.seconds());
+        // wait_group never moves clocks backwards.
+        e.wait_group(&ids, Clock(0.5));
+        assert_eq!(e.clock(ids[0]).seconds(), done2.seconds());
+    }
+
+    #[test]
+    fn recv_plan_merges_receiver_to_arrival() {
+        let (mut e, ids, _) = setup(&[0.4, 0.4]);
+        let mut fabric = Fabric::single_node(Topology::dgx_a100(1));
+        let plan = fabric.plan_gather(2, 1 << 20, 0);
+        let done = e.recv_plan(&mut fabric, ids[1], Clock(2.0), &plan);
+        assert_eq!(e.clock(ids[1]).seconds(), done.seconds());
+        assert!((done.seconds() - (2.0 + plan.total_s())).abs() < 1e-12);
+        // The sender-side executor is untouched.
+        assert_eq!(e.clock(ids[0]).seconds(), 0.0);
     }
 
     #[test]

@@ -11,6 +11,12 @@
 //!   [`OpCharge`] sequences (`charge_steps` / `charge_after`) and
 //!   communication primitives (`barrier_advance`, `recv`, `broadcast`,
 //!   `pay`); timelines are queried per executor, per group, or per GPU.
+//!   Fabric transfer plans execute as engine events (`collective`,
+//!   `collective_overlapped`, `recv_plan`, `broadcast_plan`): the plan
+//!   drains on the [`fabric`](crate::fabric)'s links (contended links
+//!   serialize) while the participating executors either block on the
+//!   completion or keep computing and re-synchronize at the true data
+//!   dependency — the compute/communication overlap of paper §4.2.
 //! * [`elastic`] — the adaptive controller the paper promises: between
 //!   iterations it reads per-group busy/idle fractions off the engine and
 //!   re-provisions SM shares toward the bottleneck role through the

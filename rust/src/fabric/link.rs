@@ -1,0 +1,57 @@
+//! Link-level primitives of the inter-GMI communication fabric.
+//!
+//! A [`Link`] is one contended transport resource derived from the cluster
+//! topology: a GPU's host-staged PCIe path, the node-wide NVSwitch fabric,
+//! the CPU reduction engine, or the inter-node InfiniBand ring. Transfer
+//! plans ([`super::Plan`]) name links by [`LinkId`]; the [`Fabric`]
+//! serializes concurrent plans on shared links and accumulates per-link
+//! traffic totals ([`LinkStats`]) for the metrics report.
+//!
+//! [`Fabric`]: super::Fabric
+
+/// Index of a link inside a [`Fabric`](super::Fabric) (stable for the
+/// fabric's lifetime).
+pub type LinkId = usize;
+
+/// The transport classes of the fabric (paper §4: host-staged inter-process
+/// paths, NVLink/NVSwitch NCCL rings, and — for the §8 multi-node
+/// extension — InfiniBand between node leaders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// One GPU's host-staged path: D2H copy + shared-memory handoff + H2D.
+    HostPath { gpu: usize },
+    /// The node-wide NVSwitch fabric NCCL rings run over.
+    NvSwitch,
+    /// The CPU-side reduction engine (the MPR bottleneck).
+    CpuReduce,
+    /// The inter-node InfiniBand ring.
+    InfiniBand,
+}
+
+/// One contended transport resource.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub id: LinkId,
+    pub kind: LinkKind,
+}
+
+impl Link {
+    /// Human-readable name for the per-link metrics report.
+    pub fn name(&self) -> String {
+        match self.kind {
+            LinkKind::HostPath { gpu } => format!("host:gpu{gpu}"),
+            LinkKind::NvSwitch => "nvswitch".to_string(),
+            LinkKind::CpuReduce => "cpu-reduce".to_string(),
+            LinkKind::InfiniBand => "ib".to_string(),
+        }
+    }
+}
+
+/// Accumulated traffic totals of one link.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinkStats {
+    /// Payload bytes that crossed the link.
+    pub bytes: u64,
+    /// Virtual seconds the link spent busy.
+    pub busy_s: f64,
+}

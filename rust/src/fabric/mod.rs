@@ -1,0 +1,249 @@
+//! The topology-aware inter-GMI communication fabric (paper §4, Figs 4-5).
+//!
+//! Before this layer existed, gradient reduction (`comm::lgr`), multi-node
+//! scaling (`comm::multinode`) and the channel pipeline (`channels`) each
+//! hand-rolled their own link-cost arithmetic. The fabric is the one
+//! substrate they all lower onto:
+//!
+//! * [`link`] — [`Link`]s: contended transport resources derived from
+//!   [`cluster::Topology`] / [`cluster::MultiNodeTopology`] (per-GPU
+//!   host-staged paths, the NVSwitch fabric, the CPU reduction engine, the
+//!   inter-node InfiniBand ring).
+//! * [`route`] — point-to-point [`Route`]s over those links (same-GPU host
+//!   hop vs cross-GPU NVLink + host handoff) for the experience migrator.
+//! * [`plan`] — the collective planner: lowers AllReduce requests into
+//!   per-link transfer [`Plan`]s for every strategy (MPR / MRR / HAR and
+//!   the 3-level multi-node hierarchy) under one cost model, and picks the
+//!   cheapest valid plan ([`Fabric::cheapest_allreduce`]).
+//!
+//! A [`Plan`] is *pure data* (phases of per-link usage); [`Fabric::execute`]
+//! turns it into virtual time, serializing plans that contend the same
+//! links (`free_at` occupancy) and accumulating per-link bytes/busy totals
+//! for [`metrics`](crate::metrics). The engine exposes plans as discrete
+//! events on the participating executors
+//! ([`Engine::collective`](crate::engine::Engine::collective) /
+//! [`collective_overlapped`](crate::engine::Engine::collective_overlapped)),
+//! which is what enables compute/communication overlap in `drl::sync`.
+//!
+//! [`cluster::Topology`]: crate::cluster::Topology
+//! [`cluster::MultiNodeTopology`]: crate::cluster::MultiNodeTopology
+
+pub mod link;
+pub mod plan;
+pub mod route;
+
+pub use link::{Link, LinkId, LinkKind, LinkStats};
+pub use plan::{unfused_ring_launch_extra, Plan, PlanStep, ReduceStrategy};
+pub use route::Route;
+
+use crate::cluster::{MultiNodeTopology, Topology, HOST_LAT};
+use crate::metrics::LinkReport;
+use crate::vtime::Clock;
+
+/// The link-level communication substrate: the link table derived from the
+/// topology plus the mutable per-link occupancy and traffic state.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    topo: Topology,
+    multi: Option<MultiNodeTopology>,
+    links: Vec<Link>,
+    /// Virtual time each link is busy until (plan serialization).
+    free_at: Vec<f64>,
+    stats: Vec<LinkStats>,
+    host: Vec<LinkId>,
+    nvswitch: LinkId,
+    cpu: LinkId,
+    ib: Option<LinkId>,
+}
+
+impl Fabric {
+    /// Fabric of one multi-GPU node: a host-staged link per GPU, the
+    /// NVSwitch fabric, and the CPU reduction engine.
+    pub fn single_node(topo: Topology) -> Self {
+        Self::build(topo, None)
+    }
+
+    /// Fabric of a multi-node cluster: the node links plus the InfiniBand
+    /// ring between node leaders.
+    pub fn multi_node(multi: MultiNodeTopology) -> Self {
+        Self::build(multi.node.clone(), Some(multi))
+    }
+
+    fn build(topo: Topology, multi: Option<MultiNodeTopology>) -> Self {
+        let mut links = Vec::new();
+        let mut host = Vec::new();
+        for gpu in 0..topo.num_gpus() {
+            let id = links.len();
+            links.push(Link { id, kind: LinkKind::HostPath { gpu } });
+            host.push(id);
+        }
+        let nvswitch = links.len();
+        links.push(Link { id: nvswitch, kind: LinkKind::NvSwitch });
+        let cpu = links.len();
+        links.push(Link { id: cpu, kind: LinkKind::CpuReduce });
+        let ib = multi.as_ref().map(|_| {
+            let id = links.len();
+            links.push(Link { id, kind: LinkKind::InfiniBand });
+            id
+        });
+        let n = links.len();
+        Fabric {
+            topo,
+            multi,
+            links,
+            free_at: vec![0.0; n],
+            stats: vec![LinkStats::default(); n],
+            host,
+            nvswitch,
+            cpu,
+            ib,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn multi_topology(&self) -> Option<&MultiNodeTopology> {
+        self.multi.as_ref()
+    }
+
+    pub(crate) fn host_link(&self, gpu: usize) -> LinkId {
+        self.host[gpu.min(self.host.len() - 1)]
+    }
+
+    pub(crate) fn nvswitch_link(&self) -> LinkId {
+        self.nvswitch
+    }
+
+    pub(crate) fn cpu_link(&self) -> LinkId {
+        self.cpu
+    }
+
+    pub(crate) fn ib_link(&self) -> Option<LinkId> {
+        self.ib
+    }
+
+    /// Per-message sender-side submission overhead of a host-staged
+    /// transfer (process wakeup + pickling + IPC rendezvous) — the cost a
+    /// producer pays on its own timeline per packet it ships.
+    pub fn submission_lat(&self) -> f64 {
+        HOST_LAT
+    }
+
+    /// Execute a plan no earlier than `ready`: each phase starts when every
+    /// link it uses is free (plans contending a link serialize), holds its
+    /// links until the phase ends, and accumulates per-link traffic.
+    /// Returns the completion time.
+    pub fn execute(&mut self, plan: &Plan, ready: Clock) -> Clock {
+        let mut t = ready.seconds();
+        for step in &plan.steps {
+            let start = step
+                .uses
+                .iter()
+                .fold(t, |acc, u| acc.max(self.free_at[u.link]));
+            let end = start + step.dur;
+            for u in &step.uses {
+                self.free_at[u.link] = end;
+                self.stats[u.link].busy_s += u.busy_s;
+                self.stats[u.link].bytes += u.bytes;
+            }
+            t = end;
+        }
+        Clock(t)
+    }
+
+    /// Account a plan's traffic without occupying links or taking time —
+    /// for per-step costs that are charged in aggregate on an executor's
+    /// timeline (e.g. the serving TDG boundary crossing).
+    pub fn tally(&mut self, plan: &Plan, reps: f64) {
+        for step in &plan.steps {
+            for u in &step.uses {
+                self.stats[u.link].busy_s += u.busy_s * reps;
+                self.stats[u.link].bytes += (u.bytes as f64 * reps) as u64;
+            }
+        }
+    }
+
+    /// Per-link traffic totals (links that saw no traffic are skipped).
+    pub fn link_report(&self) -> Vec<LinkReport> {
+        self.links
+            .iter()
+            .zip(&self.stats)
+            .filter(|(_, s)| s.bytes > 0 || s.busy_s > 0.0)
+            .map(|(l, s)| LinkReport { name: l.name(), bytes: s.bytes, busy_s: s.busy_s })
+            .collect()
+    }
+
+    /// Raw stats of one link (test/diagnostic hook).
+    pub fn link_stats(&self, id: LinkId) -> LinkStats {
+        self.stats[id]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::plan::LinkUse;
+
+    fn one_step_plan(link: LinkId, dur: f64, bytes: u64) -> Plan {
+        let mut p = Plan::new();
+        p.push_step(PlanStep {
+            dur,
+            uses: vec![LinkUse { link, busy_s: dur, bytes }],
+        });
+        p
+    }
+
+    #[test]
+    fn link_table_shape() {
+        let f = Fabric::single_node(Topology::dgx_a100(4));
+        // 4 host paths + nvswitch + cpu
+        assert_eq!(f.num_links(), 6);
+        assert!(f.ib_link().is_none());
+        let fm = Fabric::multi_node(MultiNodeTopology::dgx_cluster(2, 4));
+        assert_eq!(fm.num_links(), 7);
+        assert!(fm.ib_link().is_some());
+    }
+
+    #[test]
+    fn execute_serializes_contended_links() {
+        let mut f = Fabric::single_node(Topology::dgx_a100(2));
+        let l = f.host_link(0);
+        let p = one_step_plan(l, 1.0, 100);
+        let a = f.execute(&p, Clock(0.0));
+        assert_eq!(a.seconds(), 1.0);
+        // Same ready time, same link: the second plan queues behind.
+        let b = f.execute(&p, Clock(0.0));
+        assert_eq!(b.seconds(), 2.0);
+        // A different link is free.
+        let q = one_step_plan(f.host_link(1), 1.0, 100);
+        let c = f.execute(&q, Clock(0.0));
+        assert_eq!(c.seconds(), 1.0);
+    }
+
+    #[test]
+    fn stats_accumulate_and_report() {
+        let mut f = Fabric::single_node(Topology::dgx_a100(1));
+        let l = f.host_link(0);
+        f.execute(&one_step_plan(l, 0.5, 64), Clock(0.0));
+        f.tally(&one_step_plan(l, 0.25, 32), 2.0);
+        let s = f.link_stats(l);
+        assert_eq!(s.bytes, 64 + 64);
+        assert!((s.busy_s - 1.0).abs() < 1e-12);
+        let rep = f.link_report();
+        assert_eq!(rep.len(), 1);
+        assert_eq!(rep[0].name, "host:gpu0");
+    }
+
+    #[test]
+    fn empty_plan_is_free() {
+        let mut f = Fabric::single_node(Topology::dgx_a100(1));
+        let done = f.execute(&Plan::new(), Clock(3.0));
+        assert_eq!(done.seconds(), 3.0);
+    }
+}

@@ -1,0 +1,442 @@
+//! The collective planner: lowers AllReduce requests into per-link
+//! transfer plans (paper §4.1 Figure 4, Table 2; §8 multi-node hierarchy).
+//!
+//! Every reduction strategy becomes the same shape of object — a [`Plan`]:
+//! sequential phases, each occupying a set of links for a duration. One
+//! cost model (the calibrated link constants in [`cluster`](crate::cluster)
+//! plus the banned-elsewhere latency/CPU constants) prices every strategy,
+//! so "select a strategy" is simply "pick the cheapest valid plan"
+//! ([`Fabric::cheapest_allreduce`]) — validated against the paper's
+//! Algorithm 1 heuristic by the fabric property tests.
+
+use anyhow::{bail, Result};
+
+use super::link::LinkId;
+use super::Fabric;
+use crate::cluster::{CPU_REDUCE_BW, HOST_LAT, IB_BW, NCCL_LAT};
+
+/// The three single-node reduction strategies of Figure 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceStrategy {
+    MultiProcess,
+    MultiRing,
+    Hierarchical,
+}
+
+impl std::fmt::Display for ReduceStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ReduceStrategy::MultiProcess => "MPR",
+            ReduceStrategy::MultiRing => "MRR",
+            ReduceStrategy::Hierarchical => "HAR",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One link's share of a plan phase.
+#[derive(Debug, Clone)]
+pub struct LinkUse {
+    pub link: LinkId,
+    /// Seconds of busy time attributed to the link.
+    pub busy_s: f64,
+    /// Payload bytes attributed to the link.
+    pub bytes: u64,
+}
+
+/// One sequential phase of a plan: the links it occupies and how long the
+/// phase takes (links within a phase run in parallel; the phase ends when
+/// the slowest finishes, which is what `dur` encodes).
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    pub dur: f64,
+    pub uses: Vec<LinkUse>,
+}
+
+/// A lowered transfer schedule: sequential [`PlanStep`]s. Pure data — the
+/// fabric's `execute` turns it into virtual time and link occupancy.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub steps: Vec<PlanStep>,
+}
+
+impl Plan {
+    pub fn new() -> Self {
+        Plan { steps: Vec::new() }
+    }
+
+    pub fn push_step(&mut self, step: PlanStep) {
+        self.steps.push(step);
+    }
+
+    /// Uncontended duration of the plan (sum of phase durations) — the
+    /// planning-time cost used for strategy comparison.
+    pub fn total_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.dur).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Extra span a baseline pays for unfused per-tensor collective launches:
+/// `n_tensors - 1` additional ring launches of `2(g-1)` steps each (the
+/// fused op's launches are already in the engine-charged ring time).
+pub fn unfused_ring_launch_extra(g: usize, n_tensors: usize) -> f64 {
+    if g <= 1 || n_tensors <= 1 {
+        return 0.0;
+    }
+    (n_tensors as f64 - 1.0) * NCCL_LAT * 2.0 * (g as f64 - 1.0)
+}
+
+impl Fabric {
+    /// Lower an allreduce over the GMI mapping list `mpl` (one inner vec of
+    /// GMI ids per GPU) into a per-link plan under `strategy`. Fails for
+    /// strategies the layout cannot execute (MRR with unequal per-GPU
+    /// counts or `t > g` — the "multiple CUDA streams" constraint).
+    pub fn plan_allreduce(
+        &self,
+        mpl: &[Vec<usize>],
+        bytes: usize,
+        strategy: ReduceStrategy,
+    ) -> Result<Plan> {
+        if mpl.is_empty() || mpl.iter().any(|v| v.is_empty()) {
+            bail!("empty GMI mapping list");
+        }
+        let total: usize = mpl.iter().map(|v| v.len()).sum();
+        if total <= 1 {
+            return Ok(Plan::new());
+        }
+        match strategy {
+            ReduceStrategy::MultiProcess => Ok(self.plan_mpr(mpl, bytes)),
+            ReduceStrategy::MultiRing => self.plan_mrr(mpl, bytes),
+            ReduceStrategy::Hierarchical => Ok(self.plan_har(mpl, bytes)),
+        }
+    }
+
+    /// Pick the cheapest valid strategy for the layout under the one cost
+    /// model — the planner's replacement for the Algorithm 1 heuristic
+    /// (which it is validated against: never costlier, never an invalid
+    /// MRR).
+    pub fn cheapest_allreduce(&self, mpl: &[Vec<usize>], bytes: usize) -> (ReduceStrategy, Plan) {
+        let mut best: Option<(ReduceStrategy, Plan)> = None;
+        for s in [
+            ReduceStrategy::MultiProcess,
+            ReduceStrategy::MultiRing,
+            ReduceStrategy::Hierarchical,
+        ] {
+            let Ok(p) = self.plan_allreduce(mpl, bytes, s) else { continue };
+            let better = match &best {
+                None => true,
+                Some((_, b)) => p.total_s() < b.total_s(),
+            };
+            if better {
+                best = Some((s, p));
+            }
+        }
+        best.expect("MPR is always a valid plan")
+    }
+
+    /// MPR: all `g*t` GMIs stage D2H (contending their GPU's host path),
+    /// the CPU reduces `g*t` buffers, H2D broadcast back.
+    fn plan_mpr(&self, mpl: &[Vec<usize>], bytes: usize) -> Plan {
+        let t_max = mpl.iter().map(|v| v.len()).max().unwrap();
+        let gt: usize = mpl.iter().map(|v| v.len()).sum();
+        let topo = self.topology();
+        let stage_dur = topo.host_transfer_time(bytes, t_max);
+        let stage = |fab: &Fabric| PlanStep {
+            dur: stage_dur,
+            uses: mpl
+                .iter()
+                .enumerate()
+                .map(|(gpu, v)| LinkUse {
+                    link: fab.host_link(gpu),
+                    busy_s: topo.host_transfer_time(bytes, v.len()),
+                    bytes: (v.len() * bytes) as u64,
+                })
+                .collect(),
+        };
+        let mut plan = Plan::new();
+        plan.push_step(stage(self));
+        let cpu_dur = (gt * bytes) as f64 / CPU_REDUCE_BW + HOST_LAT;
+        plan.push_step(PlanStep {
+            dur: cpu_dur,
+            uses: vec![LinkUse {
+                link: self.cpu_link(),
+                busy_s: cpu_dur,
+                bytes: (gt * bytes) as u64,
+            }],
+        });
+        plan.push_step(stage(self));
+        plan
+    }
+
+    /// MRR: `t` non-intersecting rings across `g` GPUs (contending the
+    /// NVSwitch fabric), a final ring over the `t` ring leaders, then the
+    /// intra-ring broadcast back.
+    fn plan_mrr(&self, mpl: &[Vec<usize>], bytes: usize) -> Result<Plan> {
+        let g = mpl.len();
+        let t = mpl[0].len();
+        if mpl.iter().any(|v| v.len() != t) {
+            bail!("MRR requires equal GMIs per GPU");
+        }
+        if t > g {
+            bail!("MRR invalid: {t} GMIs/GPU > {g} GPUs (multiple CUDA streams error)");
+        }
+        let topo = self.topology();
+        let nv = self.nvswitch_link();
+        let ring_traffic = |k: usize, rings: usize| (rings * 2 * (k.max(1) - 1) * bytes) as u64;
+        let mut plan = Plan::new();
+        let phase1 = topo.ring_allreduce_time(g, bytes, t);
+        plan.push_step(PlanStep {
+            dur: phase1,
+            uses: vec![LinkUse { link: nv, busy_s: phase1, bytes: ring_traffic(g, t) }],
+        });
+        let phase2 = topo.ring_allreduce_time(t, bytes, 1);
+        plan.push_step(PlanStep {
+            dur: phase2,
+            uses: vec![LinkUse { link: nv, busy_s: phase2, bytes: ring_traffic(t, 1) }],
+        });
+        let bcast = topo.ring_allreduce_time(g, bytes, t) / 2.0;
+        plan.push_step(PlanStep {
+            dur: bcast,
+            uses: vec![LinkUse { link: nv, busy_s: bcast, bytes: ring_traffic(g, t) / 2 }],
+        });
+        Ok(plan)
+    }
+
+    /// HAR: host-staged reduce to a leader within each GPU (all GPUs in
+    /// parallel), NCCL ring across the `g` leaders, host-staged broadcast
+    /// back down.
+    fn plan_har(&self, mpl: &[Vec<usize>], bytes: usize) -> Plan {
+        let g = mpl.len();
+        let t_max = mpl.iter().map(|v| v.len()).max().unwrap();
+        let topo = self.topology();
+        let mut plan = Plan::new();
+        let host_uses = |fab: &Fabric| -> Vec<LinkUse> {
+            mpl.iter()
+                .enumerate()
+                .filter(|(_, v)| v.len() > 1)
+                .map(|(gpu, v)| LinkUse {
+                    link: fab.host_link(gpu),
+                    busy_s: topo.host_transfer_time(bytes, v.len() - 1),
+                    bytes: ((v.len() - 1) * bytes) as u64,
+                })
+                .collect()
+        };
+        if t_max > 1 {
+            let dur = topo.host_transfer_time(bytes, t_max - 1)
+                + (t_max * bytes) as f64 / CPU_REDUCE_BW;
+            let mut uses = host_uses(self);
+            uses.push(LinkUse {
+                link: self.cpu_link(),
+                busy_s: (t_max * bytes) as f64 / CPU_REDUCE_BW,
+                bytes: (t_max * bytes) as u64,
+            });
+            plan.push_step(PlanStep { dur, uses });
+        }
+        let ring = topo.ring_allreduce_time(g, bytes, 1);
+        if ring > 0.0 {
+            plan.push_step(PlanStep {
+                dur: ring,
+                uses: vec![LinkUse {
+                    link: self.nvswitch_link(),
+                    busy_s: ring,
+                    bytes: (2 * (g - 1) * bytes) as u64,
+                }],
+            });
+        }
+        if t_max > 1 {
+            let dur = topo.host_transfer_time(bytes, t_max - 1);
+            plan.push_step(PlanStep { dur, uses: host_uses(self) });
+        }
+        plan
+    }
+
+    /// The §8 three-level multi-node hierarchy: intra-GPU host-staged
+    /// reduce, NVLink ring over per-GPU leaders, InfiniBand ring over node
+    /// leaders, broadcast back down.
+    pub fn plan_multinode_allreduce(&self, g: usize, t: usize, bytes: usize) -> Plan {
+        let multi = self.multi_topology().expect("multi-node fabric required").clone();
+        let ib = self.ib_link().expect("multi-node fabric has an IB link");
+        let topo = self.topology();
+        let mut plan = Plan::new();
+        // Level 1: intra-GPU host-staged reduce (all GPUs/nodes parallel).
+        if t > 1 {
+            let dur = topo.host_transfer_time(bytes, t - 1) + (t * bytes) as f64 / CPU_REDUCE_BW;
+            plan.push_step(PlanStep {
+                dur,
+                uses: vec![
+                    LinkUse {
+                        link: self.host_link(0),
+                        busy_s: topo.host_transfer_time(bytes, t - 1),
+                        bytes: ((t - 1) * bytes) as u64,
+                    },
+                    LinkUse {
+                        link: self.cpu_link(),
+                        busy_s: (t * bytes) as f64 / CPU_REDUCE_BW,
+                        bytes: (t * bytes) as u64,
+                    },
+                ],
+            });
+        }
+        // Level 2: NVLink ring over the g per-GPU leaders (per node).
+        let l2 = topo.ring_allreduce_time(g, bytes, 1);
+        if l2 > 0.0 {
+            plan.push_step(PlanStep {
+                dur: l2,
+                uses: vec![LinkUse {
+                    link: self.nvswitch_link(),
+                    busy_s: l2,
+                    bytes: (2 * (g - 1) * bytes) as u64,
+                }],
+            });
+        }
+        // Level 3: InfiniBand ring over node leaders.
+        let l3 = multi.ib_ring_time(multi.num_nodes, bytes);
+        if l3 > 0.0 {
+            plan.push_step(PlanStep {
+                dur: l3,
+                uses: vec![LinkUse {
+                    link: ib,
+                    busy_s: l3,
+                    bytes: (2 * (multi.num_nodes - 1) * bytes) as u64,
+                }],
+            });
+        }
+        // Broadcast back down: host fan-out (parallel per level) + the
+        // NVLink launch of the downward ring.
+        let down_host = if t > 1 { topo.host_transfer_time(bytes, t - 1) } else { 0.0 };
+        let mut uses = vec![LinkUse {
+            link: self.nvswitch_link(),
+            busy_s: NCCL_LAT,
+            bytes: ((g.max(1) - 1) * bytes) as u64,
+        }];
+        if t > 1 {
+            uses.push(LinkUse {
+                link: self.host_link(0),
+                busy_s: down_host,
+                bytes: ((t - 1) * bytes) as u64,
+            });
+        }
+        plan.push_step(PlanStep { dur: down_host + NCCL_LAT, uses });
+        plan
+    }
+
+    /// The layout-oblivious flat alternative at cluster scale: every GMI
+    /// host-stages to a global CPU reduction, results cross IB once per
+    /// extra node (used by the ablation showing the hierarchy is required).
+    pub fn plan_flat_mpr(&self, g: usize, t: usize, bytes: usize) -> Plan {
+        let multi = self.multi_topology().expect("multi-node fabric required").clone();
+        let topo = self.topology();
+        let k = multi.num_nodes * g * t;
+        let mut plan = Plan::new();
+        let stage = |fab: &Fabric| PlanStep {
+            dur: topo.host_transfer_time(bytes, t),
+            uses: vec![LinkUse {
+                link: fab.host_link(0),
+                busy_s: topo.host_transfer_time(bytes, t),
+                bytes: (t * bytes) as u64,
+            }],
+        };
+        plan.push_step(stage(self));
+        let cpu = (k * bytes) as f64 / CPU_REDUCE_BW;
+        plan.push_step(PlanStep {
+            dur: cpu,
+            uses: vec![LinkUse { link: self.cpu_link(), busy_s: cpu, bytes: (k * bytes) as u64 }],
+        });
+        if multi.num_nodes > 1 {
+            let ib_dur = bytes as f64 * (multi.num_nodes - 1) as f64 / IB_BW;
+            plan.push_step(PlanStep {
+                dur: ib_dur,
+                uses: vec![LinkUse {
+                    link: self.ib_link().expect("multi-node fabric has an IB link"),
+                    busy_s: ib_dur,
+                    bytes: ((multi.num_nodes - 1) * bytes) as u64,
+                }],
+            });
+        }
+        plan.push_step(stage(self));
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{MultiNodeTopology, Topology};
+
+    fn mpl(g: usize, t: usize) -> Vec<Vec<usize>> {
+        (0..g).map(|i| (0..t).map(|j| i * t + j).collect()).collect()
+    }
+
+    #[test]
+    fn mrr_validity_rules() {
+        let f = Fabric::single_node(Topology::dgx_a100(2));
+        assert!(f.plan_allreduce(&mpl(2, 3), 1 << 20, ReduceStrategy::MultiRing).is_err());
+        assert!(f
+            .plan_allreduce(&[vec![0, 1], vec![2]], 1 << 20, ReduceStrategy::MultiRing)
+            .is_err());
+        assert!(f.plan_allreduce(&mpl(2, 2), 1 << 20, ReduceStrategy::MultiRing).is_ok());
+    }
+
+    #[test]
+    fn single_gmi_plans_are_empty() {
+        let f = Fabric::single_node(Topology::dgx_a100(1));
+        for s in [
+            ReduceStrategy::MultiProcess,
+            ReduceStrategy::MultiRing,
+            ReduceStrategy::Hierarchical,
+        ] {
+            let p = f.plan_allreduce(&mpl(1, 1), 1 << 20, s).unwrap();
+            assert!(p.is_empty());
+        }
+    }
+
+    #[test]
+    fn cheapest_is_min_over_valid_plans() {
+        let f = Fabric::single_node(Topology::dgx_a100(4));
+        let layout = mpl(4, 2);
+        let bytes = 6 << 20;
+        let (s, p) = f.cheapest_allreduce(&layout, bytes);
+        for cand in [
+            ReduceStrategy::MultiProcess,
+            ReduceStrategy::MultiRing,
+            ReduceStrategy::Hierarchical,
+        ] {
+            if let Ok(q) = f.plan_allreduce(&layout, bytes, cand) {
+                assert!(p.total_s() <= q.total_s() + 1e-15, "{s} beaten by {cand}");
+            }
+        }
+        // On NVLink boxes with t <= g, rings win clearly.
+        assert_eq!(s, ReduceStrategy::MultiRing);
+    }
+
+    #[test]
+    fn har_beats_mpr_on_multi_gpu_layouts() {
+        let f = Fabric::single_node(Topology::dgx_a100(4));
+        let bytes = 6 << 20;
+        let har = f.plan_allreduce(&mpl(4, 4), bytes, ReduceStrategy::Hierarchical).unwrap();
+        let mpr = f.plan_allreduce(&mpl(4, 4), bytes, ReduceStrategy::MultiProcess).unwrap();
+        assert!(har.total_s() < mpr.total_s());
+    }
+
+    #[test]
+    fn multinode_hierarchy_beats_flat() {
+        let f = Fabric::multi_node(MultiNodeTopology::dgx_cluster(4, 8));
+        let bytes = 6 * 1024 * 1024;
+        let hier = f.plan_multinode_allreduce(8, 4, bytes).total_s();
+        let flat = f.plan_flat_mpr(8, 4, bytes).total_s();
+        assert!(flat / hier > 4.0, "hier {hier} flat {flat}");
+    }
+
+    #[test]
+    fn unfused_launch_extra_shape() {
+        assert_eq!(unfused_ring_launch_extra(1, 10), 0.0);
+        assert_eq!(unfused_ring_launch_extra(4, 1), 0.0);
+        let e2 = unfused_ring_launch_extra(2, 10);
+        let e4 = unfused_ring_launch_extra(4, 10);
+        assert!(e4 > e2 && e2 > 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Point-to-point routes over fabric links (paper §4.2's experience
+//! movement): same-GPU transfers forward over the destination GPU's
+//! host-staged path; cross-GPU transfers gather over the NVSwitch fabric
+//! and then hand off through the destination's host path (the memory
+//! barrier between GMIs makes the final hop host-staged under MPS/MIG).
+
+use crate::cluster::NCCL_LAT;
+use crate::vtime::Clock;
+
+use super::link::LinkId;
+use super::plan::{LinkUse, Plan, PlanStep};
+use super::Fabric;
+
+/// A resolved point-to-point route: the link hops a payload crosses.
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub hops: Vec<LinkId>,
+    pub cross_gpu: bool,
+}
+
+impl Fabric {
+    /// Resolve the route between two GPUs' GMIs.
+    pub fn route(&self, src_gpu: usize, dst_gpu: usize) -> Route {
+        if src_gpu == dst_gpu {
+            Route { hops: vec![self.host_link(dst_gpu)], cross_gpu: false }
+        } else {
+            Route {
+                hops: vec![self.nvswitch_link(), self.host_link(dst_gpu)],
+                cross_gpu: true,
+            }
+        }
+    }
+
+    /// Lower a point-to-point transfer of `bytes` along `route` into a
+    /// plan: one phase per hop (NVLink gather, then host handoff).
+    pub fn plan_route(&self, route: &Route, bytes: usize) -> Plan {
+        let topo = self.topology();
+        let mut plan = Plan::new();
+        for &hop in &route.hops {
+            let dur = if hop == self.nvswitch_link() {
+                bytes as f64 / topo.inter_gpu_bw() + NCCL_LAT
+            } else {
+                topo.host_transfer_time(bytes, 1)
+            };
+            plan.push_step(PlanStep {
+                dur,
+                uses: vec![LinkUse { link: hop, busy_s: dur, bytes: bytes as u64 }],
+            });
+        }
+        plan
+    }
+
+    /// Route + execute a point-to-point transfer: the payload leaves at
+    /// `ready` (or later, if its links are busy — contended links
+    /// serialize) and the returned clock is the arrival at the destination.
+    pub fn transfer(
+        &mut self,
+        src_gpu: usize,
+        dst_gpu: usize,
+        bytes: usize,
+        ready: Clock,
+    ) -> (Clock, f64, bool) {
+        let route = self.route(src_gpu, dst_gpu);
+        let plan = self.plan_route(&route, bytes);
+        let transfer_s = plan.total_s();
+        let arrival = self.execute(&plan, ready);
+        (arrival, transfer_s, route.cross_gpu)
+    }
+
+    /// Gather `sources` same-sized payloads into `dst_gpu` through its host
+    /// path (the TDG_EX experience feed): the `k` feeders contend the path
+    /// and their transfers serialize on it.
+    pub fn plan_gather(&self, sources: usize, bytes_each: usize, dst_gpu: usize) -> Plan {
+        let k = sources.max(1);
+        let dur = k as f64 * self.topology().host_transfer_time(bytes_each, k);
+        let mut plan = Plan::new();
+        plan.push_step(PlanStep {
+            dur,
+            uses: vec![LinkUse {
+                link: self.host_link(dst_gpu),
+                busy_s: dur,
+                bytes: (k * bytes_each) as u64,
+            }],
+        });
+        plan
+    }
+
+    /// Fan one payload out to GMIs on `dst_gpus` through their host paths,
+    /// `sharing` receivers contending each path (the TDG_EX parameter
+    /// broadcast back to serving GMIs).
+    pub fn plan_fanout(&self, bytes: usize, sharing: usize, dst_gpus: &[usize]) -> Plan {
+        let dur = self.topology().host_transfer_time(bytes, sharing);
+        let mut plan = Plan::new();
+        plan.push_step(PlanStep {
+            dur,
+            uses: dst_gpus
+                .iter()
+                .map(|&gpu| LinkUse { link: self.host_link(gpu), busy_s: dur, bytes: bytes as u64 })
+                .collect(),
+        });
+        plan
+    }
+
+    /// The A3C parameter push-back: one NVLink crossing from the training
+    /// GPUs plus a host-staged delivery into each agent GMI.
+    pub fn plan_param_push(&self, bytes: usize, dst_gpus: &[usize]) -> Plan {
+        let topo = self.topology();
+        let mut plan = Plan::new();
+        let nv = bytes as f64 / topo.inter_gpu_bw();
+        plan.push_step(PlanStep {
+            dur: nv,
+            uses: vec![LinkUse { link: self.nvswitch_link(), busy_s: nv, bytes: bytes as u64 }],
+        });
+        let host = topo.host_transfer_time(bytes, 1);
+        plan.push_step(PlanStep {
+            dur: host,
+            uses: dst_gpus
+                .iter()
+                .map(|&gpu| LinkUse { link: self.host_link(gpu), busy_s: host, bytes: bytes as u64 })
+                .collect(),
+        });
+        plan
+    }
+
+    /// A within-GPU GMI boundary crossing (TDG serving's per-step
+    /// state/action bounce): one host-path hop with `sharing` contenders.
+    pub fn plan_intra_gpu(&self, bytes: usize, sharing: usize, gpu: usize) -> Plan {
+        let dur = self.topology().host_transfer_time(bytes, sharing);
+        let mut plan = Plan::new();
+        plan.push_step(PlanStep {
+            dur,
+            uses: vec![LinkUse { link: self.host_link(gpu), busy_s: dur, bytes: bytes as u64 }],
+        });
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+
+    #[test]
+    fn same_gpu_routes_host_only() {
+        let f = Fabric::single_node(Topology::dgx_a100(4));
+        let r = f.route(2, 2);
+        assert!(!r.cross_gpu);
+        assert_eq!(r.hops, vec![f.host_link(2)]);
+        let c = f.route(0, 2);
+        assert!(c.cross_gpu);
+        assert_eq!(c.hops.len(), 2);
+    }
+
+    #[test]
+    fn cross_gpu_costs_more() {
+        let f = Fabric::single_node(Topology::dgx_a100(4));
+        let bytes = 8 << 20;
+        let same = f.plan_route(&f.route(1, 1), bytes).total_s();
+        let cross = f.plan_route(&f.route(0, 1), bytes).total_s();
+        assert!(cross > same);
+    }
+
+    #[test]
+    fn contended_route_serializes() {
+        let mut f = Fabric::single_node(Topology::dgx_a100(2));
+        let (a1, t1, _) = f.transfer(0, 1, 4 << 20, Clock(1.0));
+        assert!((a1.seconds() - (1.0 + t1)).abs() < 1e-12);
+        // Same instant, same route: the second transfer queues behind.
+        let (a2, t2, cross) = f.transfer(0, 1, 4 << 20, Clock(1.0));
+        assert!(cross);
+        assert!(a2.seconds() > 1.0 + t2);
+        assert!(a2 > a1);
+    }
+
+    #[test]
+    fn gather_and_fanout_scale_with_contention() {
+        let f = Fabric::single_node(Topology::dgx_a100(2));
+        let g1 = f.plan_gather(1, 1 << 20, 0).total_s();
+        let g4 = f.plan_gather(4, 1 << 20, 0).total_s();
+        assert!(g4 > g1 * 3.0);
+        let f1 = f.plan_fanout(1 << 20, 1, &[0]).total_s();
+        let f4 = f.plan_fanout(1 << 20, 4, &[0, 1]).total_s();
+        assert!(f4 > f1);
+    }
+}

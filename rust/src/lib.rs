@@ -21,24 +21,35 @@
 //!
 //! ```text
 //! orchestrators   drl::{serving, sync, a3c}, baselines   what runs when
-//!       │  charge(ops) / barriers / transfers
+//!       │  charge(ops) / collectives / transfers
 //!       ▼
 //! engine          engine::{Engine, elastic}              discrete-event executor:
 //!       │                                                clocks, shares, busy/idle,
-//!       │                                                utilization, elastic resize
+//!       │  execute(plan)                                 utilization, elastic resize
 //!       ▼
+//! fabric          fabric::{Fabric, Plan, Route}          links + routes + collective
+//!       │                                                planner (MPR/MRR/HAR and the
+//!       │  link costs                                    multi-node hierarchy as plans),
+//!       ▼                                                per-link occupancy and stats
 //! substrate       gmi (manager/backends), mapping,       placement + validation,
-//!                 comm (LGR), channels, cluster, vtime   costs and transports
+//!                 comm (LGR arithmetic), channels,       reduction numerics, experience
+//!                 cluster (topology), vtime (cost)       pipeline, calibrated link model
 //! ```
 //!
-//! Orchestrators never touch `Clock`, `UtilizationTracker`, or share math:
-//! they describe work as [`engine::OpCharge`] sequences and synchronization
-//! as engine primitives (`barrier_advance`, `recv`, `broadcast`), and read
-//! span/utilization/communication totals back from the [`engine::Engine`].
-//! The engine in turn owns a live clone of the [`gmi::GmiManager`], which
-//! lets the [`engine::elastic`] controller re-provision SM shares between
-//! iterations (validated `resize_gmi`) without mutating the caller's
-//! static [`mapping::Layout`].
+//! Orchestrators never touch `Clock`, `UtilizationTracker`, share math, or
+//! link costs: they describe work as [`engine::OpCharge`] sequences and
+//! communication as [`fabric`] transfer plans executed through engine
+//! primitives (`collective`, `collective_overlapped`, `recv_plan`,
+//! `broadcast_plan`, plus the scalar `barrier_advance` / `recv` /
+//! `broadcast`), and read span/utilization/communication and per-link
+//! traffic totals back out. Overlapped collectives drain on the fabric's
+//! links while executors keep computing — the sync trainer starts the next
+//! rollout while the last gradient allreduce drains, re-synchronizing where
+//! the reduced parameters are actually consumed. The engine also owns a
+//! live clone of the [`gmi::GmiManager`], which lets the
+//! [`engine::elastic`] controller re-provision SM shares between iterations
+//! (validated `resize_gmi`) without mutating the caller's static
+//! [`mapping::Layout`].
 
 pub mod baselines;
 pub mod channels;
@@ -47,6 +58,7 @@ pub mod comm;
 pub mod config;
 pub mod drl;
 pub mod engine;
+pub mod fabric;
 pub mod gmi;
 pub mod mapping;
 pub mod metrics;

@@ -171,13 +171,19 @@ COMMON OPTIONS:
   --rounds / --iters N        run length (default 20)
   --real                      real numerics via PJRT (needs `make artifacts`)
   --template tcg|tdg          mapping template
-  --strategy mpr|mrr|har      force a gradient-reduction strategy
+  --reduce auto|mpr|mrr|har   gradient-reduction strategy: auto = the fabric
+                              planner's cheapest valid plan (alias --strategy)
   --backend mps|mig|direct    force a GMI backend
   --mode mcc|ucc              async experience sharing mode
   --elastic                   re-provision SM shares toward the bottleneck
                               role between sync iterations
+  --no-overlap                disable compute/communication overlap (sync):
+                              strictly sequential per-minibatch reductions
   --granularity BYTES         per-channel compressor staging threshold
                               (async; default 256 KiB)
+  --staging-interval SECS     flush partially filled channel queues older
+                              than SECS (async anti-starvation; default 1.0)
+  --links                     print the per-link fabric traffic table
 ";
 
 fn cmd_info() -> Result<()> {
@@ -253,6 +259,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve {} {}x{} GMIs ({})",
         bench.abbr, gpus, gmi_per_gpu, layout.backend_name()
     ));
+    if args.flag("links") {
+        m.print_links();
+    }
     // baseline comparison
     let base = baselines::isaac_serving(&topo, &bench, &cost, &comp, num_env * gmi_per_gpu, rounds)?;
     base.print_summary("baseline (Isaac Gym, 1 proc/GPU)");
@@ -269,6 +278,9 @@ fn cmd_train_sync(args: &Args) -> Result<()> {
     let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
     let template = parse_template(&args.str("template", "tcg"))?;
     let backend = parse_backend(&args.str("backend", "auto"))?;
+    // `--reduce` is the canonical strategy override; `--strategy` stays as
+    // an alias for older scripts.
+    let reduce = args.str("reduce", &args.str("strategy", "auto"));
     let cfg = SyncConfig {
         iterations: args.get("iters", 20)?,
         ppo_epochs: args.get("ppo-epochs", gmi_drl::drl::DEFAULT_PPO_EPOCHS)?,
@@ -276,10 +288,11 @@ fn cmd_train_sync(args: &Args) -> Result<()> {
         lr: args.get("lr", 3e-4)?,
         seed: args.get("seed", 1)?,
         real_replicas: if real { 1 } else { 0 },
-        strategy_override: parse_strategy(&args.str("strategy", "auto"))?,
+        strategy_override: parse_strategy(&reduce)?,
         elastic: args
             .flag("elastic")
             .then(gmi_drl::engine::ElasticConfig::default),
+        overlap: !args.flag("no-overlap"),
     };
 
     let layout = build_sync_layout(&topo, template, gmi_per_gpu, num_env, &cost, backend)?;
@@ -289,6 +302,9 @@ fn cmd_train_sync(args: &Args) -> Result<()> {
         "train-sync {} {}x{} GMIs [{}]",
         bench.abbr, gpus, gmi_per_gpu, r.strategy
     ));
+    if args.flag("links") {
+        r.metrics.print_links();
+    }
     let base = baselines::isaac_sync(
         &topo,
         &bench,
@@ -329,6 +345,8 @@ fn cmd_train_async(args: &Args) -> Result<()> {
         real_replicas: if real { 1 } else { 0 },
         compressor_granularity: args
             .get("granularity", AsyncConfig::default().compressor_granularity)?,
+        staging_interval_s: args
+            .get("staging-interval", AsyncConfig::default().staging_interval_s)?,
     };
     let layout = build_async_layout(
         &topo,
@@ -350,6 +368,9 @@ fn cmd_train_async(args: &Args) -> Result<()> {
         r.channel_stats.packets_out,
         r.channel_stats.mean_packet_bytes() / 1024.0
     );
+    if args.flag("links") {
+        r.metrics.print_links();
+    }
     Ok(())
 }
 

@@ -1,9 +1,22 @@
 //! Run metrics: throughput (steps/s, PPS, TTOP), per-GPU utilization
-//! (Fig 1b's quantity), and reward accumulation (Fig 9).
+//! (Fig 1b's quantity), reward accumulation (Fig 9), and per-link fabric
+//! traffic totals.
 
 pub mod report;
 
-pub use report::{fmt_rate, Table};
+pub use report::{fmt_rate, link_table, Table};
+
+/// Traffic totals of one fabric link over a run (produced by
+/// [`fabric::Fabric::link_report`](crate::fabric::Fabric::link_report)).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkReport {
+    /// Link name, e.g. `host:gpu0`, `nvswitch`, `cpu-reduce`, `ib`.
+    pub name: String,
+    /// Payload bytes that crossed the link.
+    pub bytes: u64,
+    /// Virtual seconds the link spent busy.
+    pub busy_s: f64,
+}
 
 use std::collections::BTreeMap;
 
@@ -68,6 +81,9 @@ pub struct RunMetrics {
     pub comm_s: f64,
     /// peak device memory of any GMI (GiB).
     pub peak_mem_gib: f64,
+    /// per-link fabric traffic (bytes / busy seconds), when the run went
+    /// through the communication fabric.
+    pub links: Vec<LinkReport>,
 }
 
 impl RunMetrics {
@@ -100,6 +116,15 @@ impl RunMetrics {
             self.span_s,
             self.final_reward,
         );
+    }
+
+    /// Print the per-link fabric traffic table (no-op when the run did not
+    /// go through the fabric).
+    pub fn print_links(&self) {
+        if self.links.is_empty() {
+            return;
+        }
+        link_table(&self.links).print();
     }
 }
 

@@ -52,6 +52,23 @@ impl Table {
     }
 }
 
+/// Render per-link fabric traffic (bytes moved, busy seconds, achieved
+/// bandwidth) as a table — the comm half of the run report.
+pub fn link_table(links: &[super::LinkReport]) -> Table {
+    let mut t = Table::new(&["Link", "MiB moved", "busy s", "MiB/s"]);
+    for l in links {
+        let mib = l.bytes as f64 / (1024.0 * 1024.0);
+        let rate = if l.busy_s > 0.0 { mib / l.busy_s } else { 0.0 };
+        t.row(vec![
+            l.name.clone(),
+            format!("{mib:.2}"),
+            format!("{:.4}", l.busy_s),
+            fmt_rate(rate),
+        ]);
+    }
+    t
+}
+
 /// Format a rate like the paper's tables (e.g. 207834 -> "207,834").
 pub fn fmt_rate(v: f64) -> String {
     let n = v.round() as i64;
@@ -91,6 +108,23 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn link_table_renders_rates() {
+        let links = vec![
+            crate::metrics::LinkReport {
+                name: "host:gpu0".into(),
+                bytes: 2 * 1024 * 1024,
+                busy_s: 0.5,
+            },
+            crate::metrics::LinkReport { name: "nvswitch".into(), bytes: 0, busy_s: 0.0 },
+        ];
+        let s = link_table(&links).render();
+        assert!(s.contains("host:gpu0"));
+        assert!(s.contains("2.00"));
+        // zero-busy links report a zero rate instead of dividing by zero
+        assert!(s.contains("nvswitch"));
     }
 
     #[test]

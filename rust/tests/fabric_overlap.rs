@@ -1,0 +1,95 @@
+//! Integration: compute/communication overlap through the fabric
+//! (ISSUE 2 acceptance): on a multi-GPU layout, sync training with
+//! overlapped allreduce finishes strictly faster than the sequential
+//! (PR 1-style) schedule, with bit-identical reduced gradients — the
+//! schedule moves, the arithmetic doesn't.
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::comm::ReduceStrategy;
+use gmi_drl::config::static_registry;
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::vtime::CostModel;
+
+fn setup(gpus: usize, t: usize) -> (gmi_drl::mapping::Layout, gmi_drl::BenchInfo, CostModel) {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(gpus);
+    let layout =
+        build_sync_layout(&topo, MappingTemplate::TaskColocated, t, 1024, &cost, None).unwrap();
+    (layout, b, cost)
+}
+
+#[test]
+fn overlapped_allreduce_beats_sequential_schedule() {
+    let (layout, b, cost) = setup(4, 4);
+    let mk = |overlap| SyncConfig { iterations: 6, overlap, ..Default::default() };
+    let seq = run_sync(&layout, &b, &cost, &Compute::Null, &mk(false)).unwrap();
+    let ovl = run_sync(&layout, &b, &cost, &Compute::Null, &mk(true)).unwrap();
+
+    // Strictly faster: the reductions drain on the fabric links while the
+    // trainers compute the next minibatch / the next rollout.
+    assert!(
+        ovl.metrics.span_s < seq.metrics.span_s,
+        "overlap {} must beat sequential {}",
+        ovl.metrics.span_s,
+        seq.metrics.span_s
+    );
+    assert!(ovl.metrics.steps_per_sec > seq.metrics.steps_per_sec);
+
+    // Bit-identical numerics: same strategy, same gradients, same final
+    // parameters (the schedule does not touch the arithmetic).
+    assert_eq!(ovl.strategy, seq.strategy);
+    assert_eq!(ovl.final_params, seq.final_params);
+    assert!(!ovl.final_params.is_empty());
+
+    // Same traffic crossed the same links — only the timing changed.
+    let bytes = |r: &gmi_drl::drl::sync::SyncRunResult| -> Vec<(String, u64)> {
+        r.metrics.links.iter().map(|l| (l.name.clone(), l.bytes)).collect()
+    };
+    assert_eq!(bytes(&ovl), bytes(&seq));
+}
+
+#[test]
+fn overlap_gains_across_strategies_and_layouts() {
+    // The gain must hold for every pinned strategy that is valid on the
+    // layout, not just the planner's pick.
+    for (gpus, t, strategy) in [
+        (2usize, 2usize, ReduceStrategy::MultiRing),
+        (4, 4, ReduceStrategy::Hierarchical),
+        (4, 4, ReduceStrategy::MultiProcess),
+    ] {
+        let (layout, b, cost) = setup(gpus, t);
+        let mk = |overlap| SyncConfig {
+            iterations: 4,
+            strategy_override: Some(strategy),
+            overlap,
+            ..Default::default()
+        };
+        let seq = run_sync(&layout, &b, &cost, &Compute::Null, &mk(false)).unwrap();
+        let ovl = run_sync(&layout, &b, &cost, &Compute::Null, &mk(true)).unwrap();
+        assert!(
+            ovl.metrics.span_s < seq.metrics.span_s,
+            "{gpus}G{t}T {strategy}: overlap {} vs sequential {}",
+            ovl.metrics.span_s,
+            seq.metrics.span_s
+        );
+        assert_eq!(ovl.final_params, seq.final_params, "{gpus}G{t}T {strategy}");
+    }
+}
+
+#[test]
+fn overlap_preserves_learning_signal() {
+    // The reward curve (what the run learned, when) is identical in reward
+    // values; only the virtual timestamps shift earlier.
+    let (layout, b, cost) = setup(2, 2);
+    let mk = |overlap| SyncConfig { iterations: 5, overlap, ..Default::default() };
+    let seq = run_sync(&layout, &b, &cost, &Compute::Null, &mk(false)).unwrap();
+    let ovl = run_sync(&layout, &b, &cost, &Compute::Null, &mk(true)).unwrap();
+    assert_eq!(seq.metrics.reward_curve.len(), ovl.metrics.reward_curve.len());
+    for ((ts, rs), (to, ro)) in seq.metrics.reward_curve.iter().zip(&ovl.metrics.reward_curve) {
+        assert_eq!(rs, ro, "reward values must not change");
+        assert!(to <= ts + 1e-12, "overlapped timestamps must not be later");
+    }
+}

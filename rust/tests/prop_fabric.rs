@@ -1,0 +1,193 @@
+//! Property-based tests on the communication fabric's collective planner.
+//!
+//! Same methodology as `prop_coordinator`: a seeded SplitMix64 generator
+//! over many random cases (the offline build has no proptest crate).
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::comm::select_strategy;
+use gmi_drl::fabric::{Fabric, Plan, ReduceStrategy};
+use gmi_drl::vtime::Clock;
+
+/// Deterministic PRNG (SplitMix64).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+}
+
+/// Random GMI-to-GPU layout: `g` GPUs, possibly unequal GMIs per GPU.
+fn random_mpl(rng: &mut Rng, equal: bool) -> Vec<Vec<usize>> {
+    let g = rng.range(1, 8);
+    let t_fixed = rng.range(1, 5);
+    let mut id = 0usize;
+    (0..g)
+        .map(|_| {
+            let t = if equal { t_fixed } else { rng.range(1, 5) };
+            (0..t)
+                .map(|_| {
+                    id += 1;
+                    id
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_planner_never_costlier_than_algorithm1() {
+    let mut rng = Rng(0xfab1);
+    for case in 0..300 {
+        let mpl = random_mpl(&mut rng, rng.range(0, 1) == 0);
+        let bytes = rng.range(1 << 10, 32 << 20);
+        let fabric = Fabric::single_node(Topology::dgx_a100(mpl.len()));
+        let (cheapest, plan) = fabric.cheapest_allreduce(&mpl, bytes);
+        // Algorithm 1 always picks a valid strategy; the planner's pick
+        // must never be costlier under the same cost model.
+        let heuristic = select_strategy(&mpl);
+        let h_plan = fabric
+            .plan_allreduce(&mpl, bytes, heuristic)
+            .unwrap_or_else(|e| panic!("case {case}: Alg 1 picked invalid {heuristic}: {e}"));
+        assert!(
+            plan.total_s() <= h_plan.total_s() + 1e-15,
+            "case {case}: planner {cheapest} ({}) costlier than Alg 1 {heuristic} ({}) for {mpl:?}",
+            plan.total_s(),
+            h_plan.total_s()
+        );
+        // The chosen plan must itself be valid and re-derivable.
+        let again = fabric.plan_allreduce(&mpl, bytes, cheapest).unwrap();
+        assert!((again.total_s() - plan.total_s()).abs() < 1e-15, "case {case}");
+    }
+}
+
+#[test]
+fn prop_mrr_never_selected_when_invalid() {
+    let mut rng = Rng(0x3a9);
+    for case in 0..300 {
+        let mpl = random_mpl(&mut rng, rng.range(0, 1) == 0);
+        let bytes = rng.range(1 << 10, 32 << 20);
+        let g = mpl.len();
+        let sizes: Vec<usize> = mpl.iter().map(|v| v.len()).collect();
+        let equal = sizes.windows(2).all(|w| w[0] == w[1]);
+        let fabric = Fabric::single_node(Topology::dgx_a100(g));
+        let (cheapest, _) = fabric.cheapest_allreduce(&mpl, bytes);
+        if cheapest == ReduceStrategy::MultiRing {
+            // MRR is only executable with equal per-GPU counts and t <= g.
+            assert!(equal, "case {case}: MRR on unequal layout {sizes:?}");
+            assert!(sizes[0] <= g, "case {case}: MRR with t {} > g {g}", sizes[0]);
+        }
+        // And asking for an invalid MRR directly must fail.
+        if !equal || sizes[0] > g {
+            assert!(
+                fabric
+                    .plan_allreduce(&mpl, bytes, ReduceStrategy::MultiRing)
+                    .is_err(),
+                "case {case}: invalid MRR plan accepted for {sizes:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_plan_costs_positive_and_monotone_in_bytes() {
+    let mut rng = Rng(0xbead);
+    for case in 0..150 {
+        let mpl = random_mpl(&mut rng, true);
+        let total: usize = mpl.iter().map(|v| v.len()).sum();
+        if total <= 1 {
+            continue;
+        }
+        let bytes = rng.range(1 << 10, 8 << 20);
+        let fabric = Fabric::single_node(Topology::dgx_a100(mpl.len()));
+        for s in [
+            ReduceStrategy::MultiProcess,
+            ReduceStrategy::MultiRing,
+            ReduceStrategy::Hierarchical,
+        ] {
+            let Ok(small) = fabric.plan_allreduce(&mpl, bytes, s) else { continue };
+            let big = fabric.plan_allreduce(&mpl, bytes * 2, s).unwrap();
+            assert!(small.total_s() > 0.0 && small.total_s().is_finite(), "case {case} {s}");
+            assert!(
+                big.total_s() > small.total_s(),
+                "case {case} {s}: more bytes must cost more"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_execute_serializes_and_conserves_traffic() {
+    let mut rng = Rng(0x5e1a);
+    for case in 0..100 {
+        let mpl = random_mpl(&mut rng, true);
+        let total: usize = mpl.iter().map(|v| v.len()).sum();
+        if total <= 1 {
+            continue;
+        }
+        let bytes = rng.range(1 << 12, 4 << 20);
+        let mut fabric = Fabric::single_node(Topology::dgx_a100(mpl.len()));
+        let (_, plan) = fabric.cheapest_allreduce(&mpl, bytes);
+        let reps = rng.range(2, 5);
+        let mut last = Clock::zero();
+        for k in 0..reps {
+            let done = fabric.execute(&plan, Clock::zero());
+            // Back-to-back executions of the same plan serialize on its
+            // links: completion times strictly increase.
+            assert!(done > last, "case {case} rep {k}: no serialization");
+            last = done;
+        }
+        // The busiest link bounds the pipeline: it is held for its phases'
+        // full duration on every repetition (phases on *other* links may
+        // overlap across repetitions — that's the point of the fabric).
+        let links: std::collections::BTreeSet<usize> = plan
+            .steps
+            .iter()
+            .flat_map(|s| s.uses.iter().map(|u| u.link))
+            .collect();
+        let bottleneck = links
+            .iter()
+            .map(|&l| {
+                plan.steps
+                    .iter()
+                    .filter(|s| s.uses.iter().any(|u| u.link == l))
+                    .map(|s| s.dur)
+                    .sum::<f64>()
+            })
+            .fold(0.0f64, f64::max);
+        assert!(
+            last.seconds() + 1e-12 >= bottleneck * reps as f64,
+            "case {case}: {} reps of bottleneck {bottleneck} finished at {}",
+            reps,
+            last.seconds()
+        );
+        let moved: u64 = fabric.link_report().iter().map(|l| l.bytes).sum();
+        let per_plan: u64 = plan
+            .steps
+            .iter()
+            .flat_map(|s| s.uses.iter())
+            .map(|u| u.bytes)
+            .sum();
+        assert_eq!(moved, per_plan * reps as u64, "case {case}: traffic not conserved");
+    }
+}
+
+#[test]
+fn prop_empty_plans_only_for_single_gmi() {
+    let mut rng = Rng(0x0eff);
+    for _ in 0..100 {
+        let mpl = random_mpl(&mut rng, false);
+        let total: usize = mpl.iter().map(|v| v.len()).sum();
+        let fabric = Fabric::single_node(Topology::dgx_a100(mpl.len()));
+        let (_, plan): (_, Plan) = fabric.cheapest_allreduce(&mpl, 1 << 20);
+        assert_eq!(plan.is_empty(), total <= 1);
+    }
+}

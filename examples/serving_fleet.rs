@@ -1,85 +1,108 @@
-//! Multi-GPU DRL serving fleet: GMI-based serving (MIG-backed TCG blocks)
-//! vs the Isaac-Gym-style one-process-per-GPU baseline, across GPU counts —
-//! the Fig 7(a) scenario as a runnable application.
+//! SLO-aware serving gateway over a diurnal day: the same seeded arrival
+//! trace replayed against (a) a statically provisioned GMI fleet and
+//! (b) the elastic fleet driven by the SLO autoscaler — with the scaling
+//! timeline the autoscaler produced. The open-loop successor of the
+//! Fig 7(a) serving scenario.
 //!
-//!     cargo run --release --example serving_fleet -- [bench] [--real]
+//!     cargo run --release --example serving_fleet -- [bench]
 
 use anyhow::Result;
 
-use gmi_drl::baselines;
 use gmi_drl::cluster::Topology;
-use gmi_drl::config::{artifacts_dir, static_registry};
-use gmi_drl::drl::serving::{run_serving, ServingConfig};
-use gmi_drl::drl::Compute;
-use gmi_drl::gmi::GmiBackend;
-use gmi_drl::mapping::{build_serving_layout, MappingTemplate};
+use gmi_drl::config::static_registry;
+use gmi_drl::mapping::build_gateway_fleet;
 use gmi_drl::metrics::{fmt_rate, Table};
-use gmi_drl::runtime::ExecServer;
-use gmi_drl::selection;
+use gmi_drl::serve::{
+    batch_seconds, generate_trace, run_gateway, scale_table, AutoscaleConfig, GatewayConfig,
+    TrafficPattern,
+};
 use gmi_drl::vtime::CostModel;
 
-fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let abbr = args.get(1).filter(|s| !s.starts_with("--")).cloned().unwrap_or("AT".into());
-    let real = args.iter().any(|a| a == "--real");
+const MAX_BATCH: usize = 32;
+const INITIAL_PER_GPU: usize = 1;
+const MAX_PER_GPU: usize = 4;
+const GPUS: usize = 2;
+const DAY_S: f64 = 1.0;
 
+fn main() -> Result<()> {
+    let abbr = std::env::args().nth(1).unwrap_or_else(|| "AT".into());
     let bench = static_registry()
         .get(&abbr)
         .cloned()
         .ok_or_else(|| anyhow::anyhow!("unknown benchmark {abbr}"))?;
     let cost = CostModel::new(&bench);
+    let topo = Topology::dgx_a100(GPUS);
 
-    let (_server, compute);
-    if real {
-        let s = ExecServer::start(artifacts_dir())?;
-        compute = Compute::Real { handle: s.handle() };
-        _server = Some(s);
-    } else {
-        compute = Compute::Null;
-        _server = None;
-    }
+    // Fleet: 1 GMI/GPU initially, validated headroom for 4/GPU.
+    let share = (100.0 / MAX_PER_GPU as f64).floor() / 100.0;
+    let gmi_rate = MAX_BATCH as f64 / batch_seconds(&bench, &cost, &topo, share, MAX_BATCH);
+    let static_capacity = gmi_rate * (GPUS * INITIAL_PER_GPU) as f64;
 
-    println!("serving fleet for {} ({})\n", bench.name, abbr);
-    let mut t = Table::new(&[
-        "GPUs",
-        "GMI steps/s",
-        "GMI util",
-        "baseline steps/s",
-        "baseline util",
-        "speedup",
-    ]);
-    for gpus in [1usize, 2, 4, 8] {
-        let topo = Topology::dgx_a100(gpus);
-        let (sel, _) = selection::explore(&bench, &cost, GmiBackend::Mig, gpus, bench.horizon);
-        let sel = sel.expect("no config");
-        let layout = build_serving_layout(
-            &topo,
-            MappingTemplate::TaskColocated,
-            sel.gmi_per_gpu,
-            sel.num_env,
-            &cost,
-            None, // auto: MIG for serving on A100 (§3)
-        )?;
-        let cfg = ServingConfig { rounds: 10, seed: 1, real_replicas: 1 };
-        let ours = run_serving(&layout, &bench, &cost, &compute, &cfg)?;
-        let base = baselines::isaac_serving(
-            &topo,
-            &bench,
-            &cost,
-            &compute,
-            sel.num_env * sel.gmi_per_gpu,
-            10,
-        )?;
+    // One virtual day compressed into a second: trough at 25% of the
+    // static fleet's capacity, peak at 2.2x (the fleet must grow or blow
+    // its SLO).
+    let trough = 0.25 * static_capacity;
+    let peak = 2.2 * static_capacity;
+    let pattern = TrafficPattern::Diurnal { base: trough, peak, period_s: DAY_S };
+    let trace = generate_trace(&pattern, DAY_S, 7, 16);
+    println!(
+        "{} diurnal day: {} requests over {DAY_S:.1}s (trough {} req/s, peak {} req/s)\n",
+        bench.name,
+        fmt_rate(trace.len() as f64),
+        fmt_rate(trough),
+        fmt_rate(peak),
+    );
+
+    let slo_s = 10e-3;
+    let base_cfg = GatewayConfig {
+        max_batch: MAX_BATCH,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s,
+        autoscale: None,
+    };
+    let static_fleet = build_gateway_fleet(&topo, INITIAL_PER_GPU, MAX_PER_GPU, MAX_BATCH, &cost, None)?;
+    let static_run = run_gateway(&static_fleet, &bench, &cost, &trace, &base_cfg)?;
+
+    let mut elastic_cfg = base_cfg.clone();
+    elastic_cfg.autoscale = Some(AutoscaleConfig {
+        window_s: 0.025,
+        slo_p99_s: slo_s,
+        min_fleet: GPUS, // never below one GMI per GPU
+        max_per_gpu: MAX_PER_GPU,
+        ..AutoscaleConfig::default()
+    });
+    let elastic_fleet =
+        build_gateway_fleet(&topo, INITIAL_PER_GPU, MAX_PER_GPU, MAX_BATCH, &cost, None)?;
+    let elastic_run = run_gateway(&elastic_fleet, &bench, &cost, &trace, &elastic_cfg)?;
+
+    let mut t = Table::new(&["fleet", "p50 (ms)", "p95 (ms)", "p99 (ms)", "SLO att.", "served"]);
+    for (name, r) in [("static", &static_run), ("autoscaled", &elastic_run)] {
         t.row(vec![
-            gpus.to_string(),
-            fmt_rate(ours.steps_per_sec),
-            format!("{:.0}%", 100.0 * ours.utilization),
-            fmt_rate(base.steps_per_sec),
-            format!("{:.0}%", 100.0 * base.utilization),
-            format!("{:.2}x", ours.steps_per_sec / base.steps_per_sec),
+            name.to_string(),
+            format!("{:.2}", r.latency.p50_s * 1e3),
+            format!("{:.2}", r.latency.p95_s * 1e3),
+            format!("{:.2}", r.latency.p99_s * 1e3),
+            format!("{:.1}%", 100.0 * r.latency.attainment),
+            fmt_rate(r.latency.served as f64),
         ]);
     }
     t.print();
-    println!("\n(backend: MIG serving blocks — the paper's §3 auto-selection)");
+
+    println!("\nscaling timeline (autoscaled fleet):");
+    scale_table(&elastic_run.scale_events).print();
+
+    let grows = elastic_run
+        .scale_events
+        .iter()
+        .filter(|e| e.action == gmi_drl::serve::ScaleAction::Grow)
+        .count();
+    let shrinks = elastic_run.scale_events.len() - grows;
+    println!(
+        "\n{} grow / {} shrink events; batch histogram (autoscaled): {:?}",
+        grows,
+        shrinks,
+        elastic_run.batch_histogram(),
+    );
     Ok(())
 }

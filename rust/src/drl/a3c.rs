@@ -307,6 +307,7 @@ pub fn run_async(
         comm_s: stats.transfer_seconds,
         peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
         links: fabric.link_report(),
+        latency: None,
     };
     Ok(AsyncRunResult { metrics, channel_stats: stats, updates })
 }

@@ -29,6 +29,26 @@ pub struct ServingConfig {
     pub real_replicas: usize,
 }
 
+/// Does the layout use dedicated simulator/agent GMIs — the TDG serving
+/// design the paper rejects? Such fleets pay [`tdg_agent_fwd`] plus the
+/// per-step boundary crossing; shared by the closed-loop model here and
+/// the open-loop gateway ([`serve`](crate::serve)).
+pub fn is_dedicated(layout: &Layout) -> bool {
+    layout
+        .manager
+        .all()
+        .any(|g| matches!(g.role, Role::Simulator | Role::Agent))
+}
+
+/// The TDG dedicated-agent policy forward: charged at the batch size but
+/// timed at the agent GMI's slice of the pair budget (alpha ~ 0.25 of
+/// `pair_share`, floored at 2% of the GPU). The one place this model is
+/// calibrated — both serving loops charge through it.
+pub fn tdg_agent_fwd(num_env: usize, pair_share: f64) -> OpCharge {
+    OpCharge::recorded(OpKind::PolicyFwd { num_env })
+        .with_time_share((pair_share * 0.25).max(0.02))
+}
+
 impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig { rounds: 10, seed: 1, real_replicas: 1 }
@@ -47,10 +67,7 @@ pub fn run_serving(
 
     // TDG pairs: each simulator GMI has a dedicated agent GMI (the paper's
     // rejected design); interactions bounce state/action across the host.
-    let dedicated = layout
-        .manager
-        .all()
-        .any(|g| matches!(g.role, Role::Simulator | Role::Agent));
+    let dedicated = is_dedicated(layout);
 
     let real_n = cfg.real_replicas.min(gmis.len()).max(1);
     let mut workers = Vec::with_capacity(real_n);
@@ -64,6 +81,9 @@ pub fn run_serving(
     let m = bench.horizon;
     let mut reward_sum = 0.0f64;
     let mut reward_count = 0usize;
+    // Fabric seconds of the TDG boundary crossings (charged in aggregate
+    // on the executors' timelines, tallied here for the comm report).
+    let mut comm_s = 0.0f64;
 
     for round in 0..cfg.rounds {
         for (i, &id) in ids.iter().enumerate() {
@@ -72,10 +92,9 @@ pub fn run_serving(
 
             let sim = OpCharge::recorded(OpKind::SimStep { num_env: n_env });
             // In TDG the agent runs on its own small GMI; model its forward
-            // at the agent GMI's share (alpha ~ 0.2 of the pair budget).
+            // at the agent GMI's slice of the pair budget.
             let fwd = if dedicated {
-                OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
-                    .with_time_share((share * 0.25).max(0.02))
+                tdg_agent_fwd(n_env, share)
             } else {
                 OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
             };
@@ -87,6 +106,7 @@ pub fn run_serving(
                 let hop =
                     fabric.plan_intra_gpu(bytes, engine.co_resident(id).max(1), engine.gpu(id));
                 fabric.tally(&hop, m as f64);
+                comm_s += hop.total_s() * m as f64;
                 hop.total_s()
             } else {
                 0.0
@@ -114,9 +134,10 @@ pub fn run_serving(
         utilization: engine.mean_utilization(),
         final_reward: if reward_count > 0 { reward_sum / reward_count as f64 } else { 0.0 },
         reward_curve: vec![],
-        comm_s: 0.0,
+        comm_s,
         peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
         links: fabric.link_report(),
+        latency: None,
     })
 }
 
@@ -144,6 +165,33 @@ mod tests {
         let r2 = run_serving(&tdg, &b, &cost, &Compute::Null, &cfg).unwrap();
         let gain = r1.steps_per_sec / r2.steps_per_sec;
         assert!(gain > 1.5, "TCG/TDG serving gain {gain}");
+    }
+
+    #[test]
+    fn tdg_reports_fabric_comm_time() {
+        // Regression: the TDG boundary crossings are tallied on the fabric
+        // but used to be reported as comm_s = 0.
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(1);
+        let cfg = ServingConfig { rounds: 5, ..Default::default() };
+        let tcg =
+            build_serving_layout(&topo, MappingTemplate::TaskColocated, 3, 1024, &cost, None)
+                .unwrap();
+        let tdg =
+            build_serving_layout(&topo, MappingTemplate::TaskDedicated, 3, 1024, &cost, None)
+                .unwrap();
+        let r_tcg = run_serving(&tcg, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let r_tdg = run_serving(&tdg, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert_eq!(r_tcg.comm_s, 0.0, "TCG crossings are intra-GMI (free)");
+        assert!(r_tdg.comm_s > 0.0, "TDG crossings must be reported");
+        // The reported figure is exactly the fabric's tallied busy time.
+        let tallied: f64 = r_tdg.links.iter().map(|l| l.busy_s).sum();
+        assert!(
+            (r_tdg.comm_s - tallied).abs() < 1e-9,
+            "comm_s {} vs fabric tally {tallied}",
+            r_tdg.comm_s
+        );
     }
 
     #[test]

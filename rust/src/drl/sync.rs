@@ -344,6 +344,7 @@ pub fn run_sync(
         comm_s: engine.comm_s(),
         peak_mem_gib: peak_mem,
         links: fabric.link_report(),
+        latency: None,
     };
     Ok(SyncRunResult {
         metrics,

@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::cluster::Topology;
 use crate::fabric::{Fabric, Plan};
-use crate::gmi::{GmiBackend, GmiId, GmiManager};
+use crate::gmi::{GmiBackend, GmiId, GmiManager, GmiSpec};
 use crate::metrics::UtilizationTracker;
 use crate::vtime::{Clock, CostModel, OpKind};
 
@@ -413,6 +413,51 @@ impl Engine {
         Ok(())
     }
 
+    /// Register and provision a NEW GMI mid-run (the autoscaler's
+    /// scale-up): the spec passes the live manager's full placement
+    /// validation, an executor is provisioned for it, and every
+    /// co-resident executor's timing parameters are refreshed for the
+    /// changed contention. A brand-new GMI gets a fresh executor (clock at
+    /// zero — immediately available); re-adding a previously removed GMI
+    /// id re-points its retired executor at the new placement, keeping the
+    /// clock monotone (available from its retirement time onward).
+    pub fn add_gmi(&mut self, spec: GmiSpec) -> Result<ExecutorId> {
+        let gpu = spec.gpu;
+        let id = spec.id;
+        self.manager.add_gmi(spec)?;
+        let ex = match self.execs.iter().position(|e| e.gmi == id) {
+            // A retired executor with this GMI id still exists: re-point
+            // it instead of aliasing its stale placement.
+            Some(pos) => {
+                let (new_gpu, new_env) = {
+                    let s = self.manager.gmi(id).expect("GMI just registered");
+                    (s.gpu, s.num_env)
+                };
+                let old_gpu = self.execs[pos].gpu;
+                self.execs[pos].gpu = new_gpu;
+                self.execs[pos].num_env = new_env;
+                if old_gpu != new_gpu {
+                    self.refresh_gpu(old_gpu);
+                }
+                pos
+            }
+            None => self.add_executor(id)?,
+        };
+        self.refresh_gpu(gpu);
+        Ok(ex)
+    }
+
+    /// Deregister a GMI mid-run (the autoscaler's scale-down): its SM share
+    /// and memory are freed for co-residents, whose executors are
+    /// refreshed. The retired GMI's executor stays in place with a frozen
+    /// clock (executor ids are stable for the engine's lifetime) — callers
+    /// must simply stop charging it.
+    pub fn remove_gmi(&mut self, gmi: GmiId) -> Result<GmiSpec> {
+        let spec = self.manager.remove_gmi(gmi)?;
+        self.refresh_gpu(spec.gpu);
+        Ok(spec)
+    }
+
     /// Recompute an executor's share/interference from the live manager.
     fn refresh(&mut self, gmi: GmiId) {
         let Some(pos) = self.execs.iter().position(|e| e.gmi == gmi) else { return };
@@ -422,6 +467,22 @@ impl Engine {
         e.co_resident = co;
         e.share = eff_share(spec.backend, spec.sm_share, co);
         e.interference = spec.backend.interference(co, self.heaviness);
+    }
+
+    /// Refresh every still-registered executor on `gpu` (after a GMI was
+    /// added to or removed from it).
+    fn refresh_gpu(&mut self, gpu: usize) {
+        let gmis: Vec<GmiId> = self
+            .execs
+            .iter()
+            .filter(|e| e.gpu == gpu)
+            .map(|e| e.gmi)
+            .collect();
+        for g in gmis {
+            if self.manager.gmi(g).is_some() {
+                self.refresh(g);
+            }
+        }
     }
 }
 
@@ -591,6 +652,75 @@ mod tests {
         assert!((done.seconds() - (2.0 + plan.total_s())).abs() < 1e-12);
         // The sender-side executor is untouched.
         assert_eq!(e.clock(ids[0]).seconds(), 0.0);
+    }
+
+    #[test]
+    fn add_and_remove_gmis_mid_run() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        assert_eq!(e.co_resident(ids[0]), 1);
+        // A new GMI lands in the free 0.2 of GPU 0; incumbents see the
+        // extra co-resident.
+        let ex = e
+            .add_gmi(GmiSpec {
+                id: 7,
+                gpu: 0,
+                sm_share: 0.2,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 128,
+            })
+            .unwrap();
+        assert_eq!(e.share(ex), 0.2);
+        assert_eq!(e.co_resident(ids[0]), 2);
+        assert_eq!(e.manager().len(), 3);
+        // Oversubscription is rejected by the live manager's validation.
+        assert!(e
+            .add_gmi(GmiSpec {
+                id: 8,
+                gpu: 0,
+                sm_share: 0.5,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 128,
+            })
+            .is_err());
+        // The new executor charges like any other.
+        let end = e.charge_steps(
+            &cost,
+            ex,
+            2.0,
+            &[OpCharge::recorded(OpKind::SimStep { num_env: 128 })],
+            0.0,
+        );
+        assert!(end.seconds() > 0.0);
+        // Removal frees the share for a peer to grow into.
+        let freed = e.remove_gmi(7).unwrap();
+        assert_eq!(freed.id, 7);
+        assert_eq!(e.co_resident(ids[0]), 1);
+        e.resize_share(0, 0.6).unwrap();
+        assert!(e.remove_gmi(42).is_err());
+        // Re-adding the same GMI id on ANOTHER GPU re-points the retired
+        // executor: placement and timing parameters track the new spec.
+        let ex2 = e
+            .add_gmi(GmiSpec {
+                id: 7,
+                gpu: 1,
+                sm_share: 0.5,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 256,
+            })
+            .unwrap();
+        assert_eq!(ex2, ex, "executor ids are stable across re-adds");
+        assert_eq!(e.gpu(ex2), 1);
+        assert_eq!(e.num_env(ex2), 256);
+        assert_eq!(e.share(ex2), 0.5);
+        assert_eq!(e.co_resident(ex2), 0);
+        // Its clock stayed monotone (frozen at the pre-removal charge).
+        assert_eq!(e.clock(ex2).seconds(), end.seconds());
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //!   iterations it reads per-group busy/idle fractions off the engine and
 //!   re-provisions SM shares toward the bottleneck role through the
 //!   validated [`GmiManager::resize_gmi`](crate::gmi::GmiManager::resize_gmi)
-//!   path.
+//!   path. The engine also supports whole-GMI elasticity
+//!   ([`Engine::add_gmi`] / [`Engine::remove_gmi`] with the same placement
+//!   validation) — the substrate of the serving autoscaler
+//!   ([`serve::autoscale`](crate::serve::autoscale)).
 //!
 //! The engine clones the layout's `GmiManager` at construction, so mid-run
 //! re-provisioning never mutates the caller's static layout.

@@ -20,7 +20,8 @@
 //! ## Architecture: how a run is put together
 //!
 //! ```text
-//! orchestrators   drl::{serving, sync, a3c}, baselines   what runs when
+//! orchestrators   drl::{serving, sync, a3c}, baselines,  what runs when
+//!                 serve::{gateway, autoscale}
 //!       │  charge(ops) / collectives / transfers
 //!       ▼
 //! engine          engine::{Engine, elastic}              discrete-event executor:
@@ -50,6 +51,15 @@
 //! [`engine::elastic`] controller re-provision SM shares between iterations
 //! (validated `resize_gmi`) without mutating the caller's static
 //! [`mapping::Layout`].
+//!
+//! The [`serve`] layer turns the same substrate into an SLO-aware serving
+//! system: an open-loop traffic generator ([`serve::traffic`]) drives a
+//! gateway with admission control and dynamic batching
+//! ([`serve::run_gateway`]), and an autoscaler ([`serve::autoscale`]) uses
+//! the whole-GMI elastic paths ([`engine::Engine::add_gmi`] /
+//! [`engine::Engine::remove_gmi`]) to track the latency target — per-request
+//! percentiles land in [`metrics::LatencyStats`] on the run's
+//! [`metrics::RunMetrics`].
 
 pub mod baselines;
 pub mod channels;
@@ -64,6 +74,7 @@ pub mod mapping;
 pub mod metrics;
 pub mod runtime;
 pub mod selection;
+pub mod serve;
 pub mod vtime;
 
 pub use config::{BenchInfo, Manifest};

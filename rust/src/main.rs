@@ -30,11 +30,15 @@ use gmi_drl::drl::sync::{run_sync, SyncConfig};
 use gmi_drl::drl::Compute;
 use gmi_drl::gmi::GmiBackend;
 use gmi_drl::mapping::{
-    build_async_layout, build_serving_layout, build_sync_layout, MappingTemplate,
+    build_async_layout, build_gateway_fleet, build_serving_layout, build_sync_layout,
+    MappingTemplate,
 };
-use gmi_drl::metrics::{fmt_rate, Table};
+use gmi_drl::metrics::{fmt_rate, latency_table, Table};
 use gmi_drl::runtime::ExecServer;
 use gmi_drl::selection;
+use gmi_drl::serve::{
+    generate_trace, run_gateway, scale_table, AutoscaleConfig, GatewayConfig, TrafficPattern,
+};
 use gmi_drl::vtime::CostModel;
 
 /// Minimal `--key value` / `--flag` parser (offline build: no clap).
@@ -158,7 +162,8 @@ USAGE: gmi-drl <COMMAND> [--key value] [--flag]
 
 COMMANDS:
   info         show the artifact manifest and benchmark registry
-  serve        DRL serving (experience collection)
+  serve        DRL serving: closed-loop throughput by default, or the
+               open-loop SLO gateway with --trace <pattern>
   train-sync   synchronized PPO training with layout-aware gradient reduction
   train-async  asynchronized A3C training with channel-based experience sharing
   search       workload-aware GMI selection (Algorithm 2)
@@ -184,6 +189,22 @@ COMMON OPTIONS:
   --staging-interval SECS     flush partially filled channel queues older
                               than SECS (async anti-starvation; default 1.0)
   --links                     print the per-link fabric traffic table
+
+OPEN-LOOP SERVING (serve --trace ...):
+  --trace constant|poisson|diurnal|burst   arrival pattern (enables the
+                              gateway; omit for the closed-loop model)
+  --rate R                    base arrival rate, req/s (default 50000)
+  --peak R                    peak rate for diurnal/burst (default 4x rate)
+  --duration S                trace length in virtual seconds (default 2)
+  --sources N                 client streams (default 8)
+  --max-batch N               dynamic batching: batch size cap (default 32)
+  --max-wait-ms MS            dynamic batching: wait deadline (default 2)
+  --admission-cap N           reject past N outstanding requests (0 = off)
+  --slo-ms MS                 p99 latency target (default 30)
+  --autoscale                 grow/shrink the fleet against the SLO
+  --window-ms MS              autoscaler evaluation window (default 50)
+  --max-per-gpu K             fleet headroom per GPU (default 3x initial)
+  --period S                  diurnal period (default duration/2)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -238,6 +259,10 @@ fn select_config(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let trace = args.str("trace", "");
+    if !trace.is_empty() {
+        return cmd_serve_open(args, &trace);
+    }
     let real = args.flag("real");
     let bench = bench_info(&args.str("bench", "AT"), real)?;
     let cost = CostModel::new(&bench);
@@ -266,6 +291,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let base = baselines::isaac_serving(&topo, &bench, &cost, &comp, num_env * gmi_per_gpu, rounds)?;
     base.print_summary("baseline (Isaac Gym, 1 proc/GPU)");
     println!("speedup: {:.2}x", m.steps_per_sec / base.steps_per_sec);
+    Ok(())
+}
+
+/// Open-loop gateway serving: `serve --trace <pattern>` replays a seeded
+/// arrival trace through the admission/batching gateway, optionally with
+/// the SLO-aware autoscaler.
+fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
+    let bench = bench_info(&args.str("bench", "AT"), false)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 4)?;
+    let topo = Topology::dgx_a100(gpus);
+
+    let rate: f64 = args.get("rate", 50_000.0)?;
+    let peak: f64 = args.get("peak", rate * 4.0)?;
+    let duration: f64 = args.get("duration", 2.0)?;
+    let seed: u64 = args.get("seed", 1)?;
+    let sources: usize = args.get("sources", 8)?;
+    let pat = match pattern {
+        "constant" => TrafficPattern::Constant { rate },
+        "poisson" => TrafficPattern::Poisson { rate },
+        "diurnal" => TrafficPattern::Diurnal {
+            base: rate,
+            peak,
+            period_s: args.get("period", duration / 2.0)?,
+        },
+        "burst" => TrafficPattern::Burst {
+            base: rate,
+            burst: peak,
+            start_s: duration * 0.25,
+            len_s: duration * 0.25,
+        },
+        other => bail!("unknown trace pattern {other} (constant|poisson|diurnal|burst)"),
+    };
+    let requests = generate_trace(&pat, duration, seed, sources);
+
+    let max_batch: usize = args.get("max-batch", 32)?;
+    let initial: usize = args.get("gmi-per-gpu", 2)?;
+    let max_per: usize = args.get("max-per-gpu", (initial * 3).min(8).max(initial))?;
+    let layout = build_gateway_fleet(
+        &topo,
+        initial,
+        max_per,
+        max_batch,
+        &cost,
+        parse_backend(&args.str("backend", "auto"))?,
+    )?;
+
+    let slo_ms: f64 = args.get("slo-ms", 30.0)?;
+    let window_ms: f64 = args.get("window-ms", 50.0)?;
+    let cap: usize = args.get("admission-cap", 0)?;
+    let cfg = GatewayConfig {
+        max_batch,
+        max_wait_s: args.get("max-wait-ms", 2.0)? / 1e3,
+        admission_cap: if cap > 0 { Some(cap) } else { None },
+        slo_s: slo_ms / 1e3,
+        autoscale: args.flag("autoscale").then(|| AutoscaleConfig {
+            window_s: window_ms / 1e3,
+            slo_p99_s: slo_ms / 1e3,
+            min_fleet: layout.rollout_gmis.len().min(gpus),
+            max_per_gpu: max_per,
+            ..AutoscaleConfig::default()
+        }),
+    };
+
+    println!(
+        "serve-gateway {} [{pattern}] {} requests over {duration:.2}s, fleet {}x{initial} GMIs\n",
+        bench.abbr,
+        fmt_rate(requests.len() as f64),
+        gpus
+    );
+    let r = run_gateway(&layout, &bench, &cost, &requests, &cfg)?;
+    r.metrics
+        .print_summary(&format!("serve-gateway {} ({pattern})", bench.abbr));
+    latency_table(&r.latency).print();
+    if !r.scale_events.is_empty() {
+        println!("\nscaling timeline:");
+        scale_table(&r.scale_events).print();
+    }
+    if args.flag("links") {
+        r.metrics.print_links();
+    }
     Ok(())
 }
 

@@ -191,6 +191,61 @@ pub fn build_sync_layout(
     })
 }
 
+/// Open-loop serving-gateway fleet ([`serve`](crate::serve)):
+/// `initial_per_gpu` inference GMIs per GPU, each provisioned at
+/// `1/max_per_gpu` of the GPU's SMs, so every GPU keeps validated headroom
+/// the SLO autoscaler can grow into (up to `max_per_gpu` members). Gateway
+/// request/response traffic crosses the GMI boundary through host IPC, so
+/// the §3 backend rule picks MPS unless overridden. `num_env` sizes the
+/// per-GMI inference slot (typically the gateway's max batch).
+pub fn build_gateway_fleet(
+    topo: &Topology,
+    initial_per_gpu: usize,
+    max_per_gpu: usize,
+    num_env: usize,
+    cost: &CostModel,
+    backend_override: Option<GmiBackend>,
+) -> Result<Layout> {
+    anyhow::ensure!(
+        initial_per_gpu >= 1 && initial_per_gpu <= max_per_gpu,
+        "initial fleet ({initial_per_gpu}/GPU) must fit under max_per_gpu ({max_per_gpu})"
+    );
+    let backend = backend_override.unwrap_or(GmiBackend::Mps);
+    // Floor to the MPS 1% granularity so max_per_gpu members always pack.
+    let share = ((100.0 / max_per_gpu as f64).floor() / 100.0).max(0.01);
+    let mut manager = GmiManager::new(topo.clone());
+    let mut rollout = Vec::new();
+    let mut id = 0usize;
+    for gpu in 0..topo.num_gpus() {
+        for _ in 0..initial_per_gpu {
+            // Inference-only footprint: context + parameters, no physics
+            // buffers, no optimizer batch.
+            let mem = cost
+                .mem_gib(num_env, 1, false, false)
+                .min(topo.gpus[gpu].mem_gib / max_per_gpu as f64);
+            manager.add_gmi(GmiSpec {
+                id,
+                gpu,
+                sm_share: share,
+                mem_gib: mem,
+                backend,
+                role: Role::SimAgent,
+                num_env,
+            })?;
+            rollout.push(id);
+            id += 1;
+        }
+    }
+    Ok(Layout {
+        manager,
+        rollout_gmis: rollout,
+        trainer_gmis: vec![],
+        gmi_per_gpu: initial_per_gpu,
+        num_env_per_gmi: num_env,
+        backend,
+    })
+}
+
 /// Asynchronized training (Fig 6b): serving GMIs packed on one subset of
 /// GPUs, trainer GMIs on the rest — the decoupled scheme.
 pub fn build_async_layout(
@@ -303,6 +358,30 @@ mod tests {
         let l = build_serving_layout(&topo, MappingTemplate::TaskColocated, 2, 512, &cost(), None)
             .unwrap();
         assert_eq!(l.backend, GmiBackend::Mps);
+    }
+
+    #[test]
+    fn gateway_fleet_leaves_validated_headroom() {
+        let topo = Topology::dgx_a100(2);
+        let l = build_gateway_fleet(&topo, 2, 6, 32, &cost(), None).unwrap();
+        assert_eq!(l.manager.len(), 4);
+        assert_eq!(l.rollout_gmis.len(), 4);
+        assert!(l.trainer_gmis.is_empty());
+        assert_eq!(l.backend, GmiBackend::Mps);
+        // Every GPU can still host (max - initial) more members.
+        for gpu in 0..2 {
+            let used: f64 = l
+                .manager
+                .all()
+                .filter(|g| g.gpu == gpu)
+                .map(|g| g.sm_share)
+                .sum();
+            let share = l.manager.all().next().unwrap().sm_share;
+            assert!(used + 4.0 * share <= 1.0 + 1e-9, "no headroom: used {used}");
+        }
+        // Degenerate configs are rejected.
+        assert!(build_gateway_fleet(&topo, 3, 2, 32, &cost(), None).is_err());
+        assert!(build_gateway_fleet(&topo, 0, 2, 32, &cost(), None).is_err());
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod cost;
 mod layout;
 
 pub use cost::{MappingCost, TaskProfile};
-pub use layout::{build_async_layout, build_serving_layout, build_sync_layout, Layout};
+pub use layout::{
+    build_async_layout, build_gateway_fleet, build_serving_layout, build_sync_layout, Layout,
+};
 
 /// Template choice for serving / sync training (paper §5.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -4,7 +4,7 @@
 
 pub mod report;
 
-pub use report::{fmt_rate, link_table, Table};
+pub use report::{fmt_rate, latency_table, link_table, Table};
 
 /// Traffic totals of one fabric link over a run (produced by
 /// [`fabric::Fabric::link_report`](crate::fabric::Fabric::link_report)).
@@ -19,6 +19,42 @@ pub struct LinkReport {
 }
 
 use std::collections::BTreeMap;
+
+/// Request-latency distribution of an open-loop serving run (produced by
+/// [`serve::run_gateway`](crate::serve::run_gateway)). All times are
+/// virtual seconds on the engine timeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Arrivals in the trace (admitted + rejected).
+    pub requests: usize,
+    pub served: usize,
+    /// Arrivals turned away by admission control.
+    pub rejected: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    /// The per-request latency SLO the run was measured against.
+    pub slo_s: f64,
+    /// Fraction of ALL requests served within the SLO (a rejection is an
+    /// SLO miss).
+    pub attainment: f64,
+    /// Mean dispatched batch size (the dynamic-batching outcome).
+    pub mean_batch: f64,
+    /// Peak outstanding requests (queued + in-flight) seen at any arrival.
+    pub max_queue_depth: usize,
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice, `q` in [0, 1].
+/// Empty input reports 0.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
 
 /// Per-GPU SM-time accounting: utilization = busy SM-seconds / (span * SMs).
 #[derive(Debug, Default, Clone)]
@@ -84,6 +120,9 @@ pub struct RunMetrics {
     /// per-link fabric traffic (bytes / busy seconds), when the run went
     /// through the communication fabric.
     pub links: Vec<LinkReport>,
+    /// request-latency distribution, for open-loop serving runs
+    /// (closed-loop runs have no request arrivals to measure).
+    pub latency: Option<LatencyStats>,
 }
 
 impl RunMetrics {
@@ -125,6 +164,13 @@ impl RunMetrics {
             return;
         }
         link_table(&self.links).print();
+    }
+
+    /// Print the request-latency table (no-op for closed-loop runs).
+    pub fn print_latency(&self) {
+        if let Some(l) = &self.latency {
+            latency_table(l).print();
+        }
     }
 }
 
@@ -208,6 +254,20 @@ mod tests {
         u.record(0, 0.2, 10.0, 10.0);
         u.record(1, 0.6, 10.0, 10.0);
         assert!((u.mean_utilization() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // three elements: p50 is the middle one
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 0.5), 2.0);
     }
 
     #[test]

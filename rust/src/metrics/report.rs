@@ -69,6 +69,31 @@ pub fn link_table(links: &[super::LinkReport]) -> Table {
     t
 }
 
+/// Render the request-latency distribution of an open-loop serving run
+/// (percentiles, SLO attainment, batching and queueing outcomes) — the
+/// latency half of the gateway report.
+pub fn latency_table(l: &super::LatencyStats) -> Table {
+    let mut t = Table::new(&["Latency", "value"]);
+    t.row(vec!["requests".into(), fmt_rate(l.requests as f64)]);
+    t.row(vec!["served".into(), fmt_rate(l.served as f64)]);
+    t.row(vec!["rejected".into(), fmt_rate(l.rejected as f64)]);
+    t.row(vec!["p50 (ms)".into(), format!("{:.3}", l.p50_s * 1e3)]);
+    t.row(vec!["p95 (ms)".into(), format!("{:.3}", l.p95_s * 1e3)]);
+    t.row(vec!["p99 (ms)".into(), format!("{:.3}", l.p99_s * 1e3)]);
+    t.row(vec!["mean (ms)".into(), format!("{:.3}", l.mean_s * 1e3)]);
+    t.row(vec!["SLO (ms)".into(), format!("{:.3}", l.slo_s * 1e3)]);
+    t.row(vec![
+        "SLO attainment".into(),
+        format!("{:.2}%", 100.0 * l.attainment),
+    ]);
+    t.row(vec!["mean batch".into(), format!("{:.1}", l.mean_batch)]);
+    t.row(vec![
+        "peak queue depth".into(),
+        fmt_rate(l.max_queue_depth as f64),
+    ]);
+    t
+}
+
 /// Format a rate like the paper's tables (e.g. 207834 -> "207,834").
 pub fn fmt_rate(v: f64) -> String {
     let n = v.round() as i64;
@@ -125,6 +150,28 @@ mod tests {
         assert!(s.contains("2.00"));
         // zero-busy links report a zero rate instead of dividing by zero
         assert!(s.contains("nvswitch"));
+    }
+
+    #[test]
+    fn latency_table_renders() {
+        let l = crate::metrics::LatencyStats {
+            requests: 1000,
+            served: 990,
+            rejected: 10,
+            p50_s: 1.5e-3,
+            p95_s: 4.0e-3,
+            p99_s: 9.25e-3,
+            mean_s: 2.0e-3,
+            slo_s: 10e-3,
+            attainment: 0.97,
+            mean_batch: 12.5,
+            max_queue_depth: 64,
+        };
+        let s = latency_table(&l).render();
+        assert!(s.contains("9.250"), "{s}");
+        assert!(s.contains("97.00%"), "{s}");
+        assert!(s.contains("12.5"), "{s}");
+        assert!(s.contains("64"), "{s}");
     }
 
     #[test]

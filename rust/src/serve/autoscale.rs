@@ -1,0 +1,432 @@
+//! SLO-aware elastic fleet scaling — JigsawRL-style resource re-assembly
+//! on the paper's resource-adjustable GMIs.
+//!
+//! Between evaluation windows the [`Autoscaler`] looks at the p99 latency
+//! of the requests the gateway dispatched during the window and drives the
+//! engine's validated provisioning paths:
+//!
+//! * **grow** (window p99 violates the SLO): register a new fleet GMI on
+//!   the GPU with the most free SM share ([`Engine::add_gmi`] →
+//!   `GmiManager::add_gmi` validation), or — when every GPU is at its
+//!   member cap — widen the smallest active GMI into the leftover share
+//!   ([`Engine::resize_share`] → `GmiManager::resize_gmi`).
+//! * **shrink** (window p99 comfortably clears the SLO): resize widened
+//!   GMIs back to the fleet's base share first, then retire the most
+//!   recently added member ([`Engine::remove_gmi`] →
+//!   `GmiManager::remove_gmi`), never dropping the fleet below
+//!   `min_fleet` and never resizing a GMI below its validated floor.
+//!
+//! Every step goes through the manager's placement validation, so an
+//! autoscaled fleet can never oversubscribe a GPU's SMs or memory — the
+//! property suite drives random traffic through this loop to check exactly
+//! that.
+
+use anyhow::Result;
+
+use crate::engine::{Engine, ExecutorId};
+use crate::gmi::GmiSpec;
+use crate::metrics::percentile;
+
+/// Tuning knobs of the SLO-aware autoscaler.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Evaluation window length (virtual seconds of arrival time).
+    pub window_s: f64,
+    /// The p99 latency target the fleet scales against.
+    pub slo_p99_s: f64,
+    /// Shrink when the window p99 is below `shrink_frac * slo_p99_s`.
+    pub shrink_frac: f64,
+    /// Never shrink the fleet below this many serving GMIs.
+    pub min_fleet: usize,
+    /// Never grow a GPU past this many registered GMIs.
+    pub max_per_gpu: usize,
+    /// Validated share floor: resize steps never drop a GMI below it.
+    pub min_share: f64,
+    /// Evaluation windows to skip after a scale action (hysteresis).
+    pub cooldown_windows: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            window_s: 0.05,
+            slo_p99_s: 30e-3,
+            shrink_frac: 0.35,
+            min_fleet: 1,
+            max_per_gpu: 8,
+            min_share: 0.05,
+            cooldown_windows: 0,
+        }
+    }
+}
+
+/// Direction of one scale step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// A GMI was added, or an existing one widened into free share.
+    Grow,
+    /// A GMI was removed, or a widened one resized back down.
+    Shrink,
+}
+
+impl std::fmt::Display for ScaleAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ScaleAction::Grow => "grow",
+            ScaleAction::Shrink => "shrink",
+        })
+    }
+}
+
+/// One applied scale step (the gateway's scaling timeline).
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    /// Window boundary (virtual seconds) the decision fired at.
+    pub t_s: f64,
+    pub action: ScaleAction,
+    pub fleet_before: usize,
+    pub fleet_after: usize,
+    /// The window p99 that triggered the decision.
+    pub p99_s: f64,
+    /// Human-readable description of the applied step.
+    pub detail: String,
+}
+
+/// Render a scaling timeline as a table (`t`, action, fleet size, window
+/// p99, detail) — shared by the CLI's `serve --trace` path and the
+/// serving-fleet example.
+pub fn scale_table(events: &[ScaleEvent]) -> crate::metrics::Table {
+    let mut t = crate::metrics::Table::new(&[
+        "t (s)",
+        "action",
+        "fleet",
+        "window p99 (ms)",
+        "detail",
+    ]);
+    for e in events {
+        t.row(vec![
+            format!("{:.3}", e.t_s),
+            e.action.to_string(),
+            format!("{} -> {}", e.fleet_before, e.fleet_after),
+            format!("{:.2}", e.p99_s * 1e3),
+            e.detail.clone(),
+        ]);
+    }
+    t
+}
+
+/// Watches per-window p99 latency and re-provisions the serving fleet.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    /// Prototype spec cloned for new fleet members (base share, memory,
+    /// backend, role, env count) — the fleet's validated floor.
+    template: GmiSpec,
+    next_gmi_id: usize,
+    /// Executors added by scale-up, most recent last (shrink retires these
+    /// first, LIFO).
+    grown: Vec<ExecutorId>,
+    cooldown: usize,
+}
+
+impl Autoscaler {
+    /// Build a scaler over an engine-managed fleet; the first active GMI's
+    /// spec becomes the template for scale-up members.
+    pub fn new(cfg: AutoscaleConfig, engine: &Engine, active: &[ExecutorId]) -> Result<Self> {
+        anyhow::ensure!(cfg.window_s > 0.0, "autoscale window must be positive");
+        anyhow::ensure!(!active.is_empty(), "autoscaler needs a non-empty fleet");
+        anyhow::ensure!(
+            cfg.min_fleet >= 1,
+            "min_fleet must be at least 1 (an empty fleet cannot serve)"
+        );
+        let first = engine.gmi_of(active[0]);
+        let template = engine
+            .manager()
+            .gmi(first)
+            .ok_or_else(|| anyhow::anyhow!("fleet GMI {first} not registered"))?
+            .clone();
+        let next_gmi_id = engine.manager().all().map(|g| g.id).max().unwrap_or(0) + 1;
+        Ok(Autoscaler { cfg, template, next_gmi_id, grown: Vec::new(), cooldown: 0 })
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.cfg.window_s
+    }
+
+    /// Evaluate one window: `window_lat` holds the latencies of every
+    /// request dispatched during it (unsorted). Applies at most one scale
+    /// step and returns it.
+    pub fn evaluate(
+        &mut self,
+        t: f64,
+        engine: &mut Engine,
+        active: &mut Vec<ExecutorId>,
+        window_lat: &[f64],
+    ) -> Option<ScaleEvent> {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return None;
+        }
+        if window_lat.is_empty() {
+            // Zero dispatches is NO signal, not a great p99: an idle fleet
+            // is indistinguishable here from one starved by admission
+            // control under total overload (rejected arrivals never
+            // dispatch), and shrinking in the latter case would scale down
+            // exactly when the SLO is violated hardest.
+            return None;
+        }
+        let mut lat = window_lat.to_vec();
+        lat.sort_by(f64::total_cmp);
+        let p99 = percentile(&lat, 0.99);
+        let before = active.len();
+        let ev = if p99 > self.cfg.slo_p99_s {
+            self.grow(engine, active).map(|detail| ScaleEvent {
+                t_s: t,
+                action: ScaleAction::Grow,
+                fleet_before: before,
+                fleet_after: active.len(),
+                p99_s: p99,
+                detail,
+            })
+        } else if p99 < self.cfg.shrink_frac * self.cfg.slo_p99_s {
+            // No fleet-size gate here: shrink() narrows widened members
+            // first (count-neutral, legal even at min_fleet) and enforces
+            // the min_fleet floor itself before removing anyone.
+            self.shrink(engine, active).map(|detail| ScaleEvent {
+                t_s: t,
+                action: ScaleAction::Shrink,
+                fleet_before: before,
+                fleet_after: active.len(),
+                p99_s: p99,
+                detail,
+            })
+        } else {
+            None
+        };
+        if ev.is_some() {
+            self.cooldown = self.cfg.cooldown_windows;
+        }
+        ev
+    }
+
+    /// Free SM share and registered-GMI count of one GPU, per the engine's
+    /// live manager.
+    fn gpu_room(engine: &Engine, gpu: usize) -> (f64, usize) {
+        let mut used = 0.0f64;
+        let mut count = 0usize;
+        for g in engine.manager().all() {
+            if g.gpu == gpu {
+                used += g.sm_share;
+                count += 1;
+            }
+        }
+        ((1.0 - used).max(0.0), count)
+    }
+
+    fn grow(&mut self, engine: &mut Engine, active: &mut Vec<ExecutorId>) -> Option<String> {
+        let want = self.template.sm_share;
+        // Prefer a whole new member on the GPU with the most free share.
+        let mut best: Option<(usize, f64)> = None;
+        for gpu in 0..engine.topology().num_gpus() {
+            let (free, count) = Self::gpu_room(engine, gpu);
+            if count < self.cfg.max_per_gpu && free + 1e-9 >= want {
+                let better = match best {
+                    None => true,
+                    Some((_, f)) => free > f,
+                };
+                if better {
+                    best = Some((gpu, free));
+                }
+            }
+        }
+        if let Some((gpu, _)) = best {
+            let mut spec = self.template.clone();
+            spec.id = self.next_gmi_id;
+            spec.gpu = gpu;
+            if let Ok(ex) = engine.add_gmi(spec) {
+                self.next_gmi_id += 1;
+                active.push(ex);
+                self.grown.push(ex);
+                return Some(format!("add GMI on gpu{gpu}"));
+            }
+        }
+        // No room for a whole member: widen the smallest active GMI into
+        // whatever share its GPU has left (validated resize).
+        let mut target: Option<(ExecutorId, f64, f64)> = None;
+        for &ex in active.iter() {
+            let gmi = engine.gmi_of(ex);
+            let Some(spec) = engine.manager().gmi(gmi) else { continue };
+            let (free, _) = Self::gpu_room(engine, spec.gpu);
+            if free < 0.01 {
+                continue;
+            }
+            let better = match target {
+                None => true,
+                Some((_, share, _)) => spec.sm_share < share,
+            };
+            if better {
+                target = Some((ex, spec.sm_share, free));
+            }
+        }
+        let (ex, cur, free) = target?;
+        let gmi = engine.gmi_of(ex);
+        let new_share = (cur + free).min(1.0);
+        match engine.resize_share(gmi, new_share) {
+            Ok(()) => Some(format!("widen GMI {gmi} {cur:.2} -> {new_share:.2}")),
+            Err(_) => None,
+        }
+    }
+
+    fn shrink(&mut self, engine: &mut Engine, active: &mut Vec<ExecutorId>) -> Option<String> {
+        // First undo any widening: resize back to the fleet's base share
+        // (never below the validated floor).
+        let base = self.template.sm_share.max(self.cfg.min_share);
+        for &ex in active.iter() {
+            let gmi = engine.gmi_of(ex);
+            let Some(spec) = engine.manager().gmi(gmi) else { continue };
+            if spec.sm_share > base + 1e-9 {
+                let cur = spec.sm_share;
+                if engine.resize_share(gmi, base).is_ok() {
+                    return Some(format!("narrow GMI {gmi} {cur:.2} -> {base:.2}"));
+                }
+            }
+        }
+        // Then retire a member: most recently grown first, else the
+        // highest-indexed active member.
+        if active.len() <= self.cfg.min_fleet {
+            return None;
+        }
+        let ex = match self.grown.pop() {
+            Some(e) if active.contains(&e) => e,
+            _ => *active.last()?,
+        };
+        self.grown.retain(|&e| e != ex);
+        let gmi = engine.gmi_of(ex);
+        match engine.remove_gmi(gmi) {
+            Ok(_) => {
+                active.retain(|&e| e != ex);
+                Some(format!("remove GMI {gmi}"))
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::gmi::{GmiBackend, GmiManager, Role};
+    use crate::vtime::CostModel;
+
+    fn fleet(gpus: usize, members_per_gpu: usize, share: f64) -> (Engine, Vec<ExecutorId>) {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let mut m = GmiManager::new(Topology::dgx_a100(gpus));
+        let mut id = 0usize;
+        for gpu in 0..gpus {
+            for _ in 0..members_per_gpu {
+                m.add_gmi(GmiSpec {
+                    id,
+                    gpu,
+                    sm_share: share,
+                    mem_gib: 2.0,
+                    backend: GmiBackend::Mps,
+                    role: Role::SimAgent,
+                    num_env: 64,
+                })
+                .unwrap();
+                id += 1;
+            }
+        }
+        let mut e = Engine::new(&m, &cost);
+        let ids = e.add_group(&(0..id).collect::<Vec<_>>()).unwrap();
+        (e, ids)
+    }
+
+    #[test]
+    fn violating_p99_grows_and_clearing_p99_shrinks() {
+        let (mut e, ids) = fleet(1, 2, 0.25);
+        let mut active = ids.clone();
+        let cfg = AutoscaleConfig {
+            window_s: 0.1,
+            slo_p99_s: 10e-3,
+            min_fleet: 2,
+            max_per_gpu: 4,
+            ..Default::default()
+        };
+        let mut s = Autoscaler::new(cfg, &e, &active).unwrap();
+        // SLO violated: one member added.
+        let ev = s.evaluate(0.1, &mut e, &mut active, &[0.05, 0.06, 0.07]).unwrap();
+        assert_eq!(ev.action, ScaleAction::Grow);
+        assert_eq!(ev.fleet_before, 2);
+        assert_eq!(ev.fleet_after, 3);
+        assert_eq!(e.manager().len(), 3);
+        // Comfortably under: the grown member is retired again (LIFO).
+        let ev = s.evaluate(0.2, &mut e, &mut active, &[1e-4, 2e-4]).unwrap();
+        assert_eq!(ev.action, ScaleAction::Shrink);
+        assert_eq!(active.len(), 2);
+        assert_eq!(e.manager().len(), 2);
+        // At the floor: no further shrink.
+        assert!(s.evaluate(0.3, &mut e, &mut active, &[1e-4]).is_none());
+        assert_eq!(active.len(), 2);
+    }
+
+    #[test]
+    fn grow_widens_when_member_cap_is_reached() {
+        // One GPU, cap 2, but only 0.6 of the GPU allocated: growth has to
+        // come from widening, and a later shrink narrows back to base EVEN
+        // at the min_fleet floor (narrowing is count-neutral).
+        let (mut e, ids) = fleet(1, 2, 0.3);
+        let mut active = ids.clone();
+        let cfg = AutoscaleConfig {
+            window_s: 0.1,
+            slo_p99_s: 10e-3,
+            min_fleet: 2,
+            max_per_gpu: 2,
+            ..Default::default()
+        };
+        let mut s = Autoscaler::new(cfg, &e, &active).unwrap();
+        let ev = s.evaluate(0.1, &mut e, &mut active, &[0.05]).unwrap();
+        assert_eq!(ev.action, ScaleAction::Grow);
+        assert_eq!(active.len(), 2, "widening adds no member");
+        let total: f64 = e.manager().all().map(|g| g.sm_share).sum();
+        assert!(total <= 1.0 + 1e-9);
+        assert!(total > 0.6 + 1e-9, "no share was actually grown");
+        // Shrink narrows the widened member back before removing anything
+        // (and despite the fleet sitting at min_fleet).
+        let ev = s.evaluate(0.2, &mut e, &mut active, &[1e-4]).unwrap();
+        assert_eq!(ev.action, ScaleAction::Shrink);
+        assert_eq!(active.len(), 2);
+        for g in e.manager().all() {
+            assert!((g.sm_share - 0.3).abs() < 1e-9);
+        }
+        // Fully narrowed and at the floor: no further shrink events.
+        assert!(s.evaluate(0.3, &mut e, &mut active, &[1e-4]).is_none());
+        assert_eq!(active.len(), 2);
+        // And a zero min_fleet is rejected outright.
+        let bad = AutoscaleConfig { min_fleet: 0, ..Default::default() };
+        assert!(Autoscaler::new(bad, &e, &active).is_err());
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_actions() {
+        let (mut e, ids) = fleet(1, 1, 0.2);
+        let mut active = ids.clone();
+        let cfg = AutoscaleConfig {
+            window_s: 0.1,
+            slo_p99_s: 10e-3,
+            min_fleet: 1,
+            max_per_gpu: 8,
+            cooldown_windows: 2,
+            ..Default::default()
+        };
+        let mut s = Autoscaler::new(cfg, &e, &active).unwrap();
+        assert!(s.evaluate(0.1, &mut e, &mut active, &[0.05]).is_some());
+        assert!(s.evaluate(0.2, &mut e, &mut active, &[0.05]).is_none());
+        assert!(s.evaluate(0.3, &mut e, &mut active, &[0.05]).is_none());
+        assert!(s.evaluate(0.4, &mut e, &mut active, &[0.05]).is_some());
+        assert_eq!(active.len(), 3);
+    }
+}

@@ -1,0 +1,554 @@
+//! The serving gateway: admission control + dynamic batching over an
+//! open-loop arrival trace, executed on the engine/fabric substrate.
+//!
+//! One gateway fronts one serving fleet (the layout's rollout GMIs). For
+//! every arrival it either admits the request into the batching queue or
+//! rejects it (admission control bounds outstanding work); a batch
+//! dispatches when it reaches `max_batch` requests or the oldest queued
+//! request has waited `max_wait_s` — the classic dynamic-batching policy.
+//! A dispatched batch becomes engine events on the least-loaded serving
+//! executor:
+//!
+//! 1. the request payload hops onto the GMI through its GPU's host path
+//!    (a [`fabric`](crate::fabric) plan — contended links serialize, so
+//!    co-resident GMIs queue behind each other's transfers),
+//! 2. [`OpKind::PolicyFwd`] is charged **at the batched size** (batching
+//!    amortizes the per-op launch overhead, the §4.2 incentive), and
+//! 3. the response payload hops back.
+//!
+//! Per-request latency is the gap between trace arrival and response
+//! completion. With [`GatewayConfig::autoscale`] set, every
+//! [`AutoscaleConfig::window_s`] of arrivals the window's p99 drives the
+//! SLO-aware [`Autoscaler`] (grow on violation, shrink on comfortable
+//! clearance) through the engine's validated `add_gmi` / `resize_share` /
+//! `remove_gmi` paths.
+//!
+//! The whole pipeline is deterministic: the same layout, trace, and config
+//! reproduce bit-identical metrics (locked in by `tests/determinism.rs`).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use anyhow::Result;
+
+use crate::cluster::Topology;
+use crate::config::BenchInfo;
+use crate::drl::serving::{is_dedicated, tdg_agent_fwd};
+use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
+use crate::gmi::GmiSpec;
+use crate::mapping::Layout;
+use crate::metrics::{percentile, LatencyStats, RunMetrics};
+use crate::vtime::{Clock, CostModel, OpKind};
+
+use super::autoscale::{Autoscaler, ScaleEvent};
+use super::traffic::Request;
+use super::AutoscaleConfig;
+
+/// Gateway policy: admission control, dynamic batching, SLO target, and
+/// the optional autoscaler.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Largest request batch one dispatch forms.
+    pub max_batch: usize,
+    /// Longest a queued request waits before its partial batch dispatches.
+    pub max_wait_s: f64,
+    /// Admission control: maximum outstanding requests (queued +
+    /// in-flight); arrivals beyond it are rejected. `None` admits all.
+    pub admission_cap: Option<usize>,
+    /// End-to-end latency SLO per request (drives SLO attainment).
+    pub slo_s: f64,
+    /// SLO-aware elastic scaling between evaluation windows.
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            max_batch: 32,
+            max_wait_s: 2e-3,
+            admission_cap: None,
+            slo_s: 30e-3,
+            autoscale: None,
+        }
+    }
+}
+
+/// Outcome of one admitted request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServedRequest {
+    pub id: usize,
+    pub source: usize,
+    pub arrival_s: f64,
+    /// Index of the dispatch batch that carried the request.
+    pub batch: usize,
+    pub dispatch_s: f64,
+    pub completion_s: f64,
+}
+
+impl ServedRequest {
+    pub fn latency_s(&self) -> f64 {
+        self.completion_s - self.arrival_s
+    }
+}
+
+/// Everything one gateway run produced.
+pub struct GatewayRunResult {
+    pub metrics: RunMetrics,
+    pub latency: LatencyStats,
+    /// Admitted requests in dispatch order (batch index ascending, FIFO
+    /// within a batch).
+    pub served: Vec<ServedRequest>,
+    pub rejected: usize,
+    /// Size of every dispatched batch, in dispatch order.
+    pub batch_sizes: Vec<usize>,
+    /// Applied scale steps (empty without an autoscaler).
+    pub scale_events: Vec<ScaleEvent>,
+    /// The live fleet provisioning at the end of the run (autoscaled runs
+    /// may differ from the input layout).
+    pub final_fleet: Vec<GmiSpec>,
+}
+
+impl GatewayRunResult {
+    /// `(batch size, dispatch count)` pairs, ascending by size.
+    pub fn batch_histogram(&self) -> Vec<(usize, usize)> {
+        let mut hist: BTreeMap<usize, usize> = BTreeMap::new();
+        for &b in &self.batch_sizes {
+            *hist.entry(b).or_insert(0) += 1;
+        }
+        hist.into_iter().collect()
+    }
+}
+
+/// Per-request gateway request payload: the observation in (Table 4's S).
+fn request_bytes(bench: &BenchInfo) -> usize {
+    4 * bench.obs_dim
+}
+
+/// Per-request gateway response payload: action + value out (A + W).
+fn response_bytes(bench: &BenchInfo) -> usize {
+    4 * (bench.act_dim + 1)
+}
+
+/// Serial end-to-end seconds of one `batch`-request dispatch on a
+/// share-`share` GMI: request hop + batched forward + response hop, using
+/// exactly the payload sizes and charging model [`run_gateway`] applies.
+/// `batch / batch_seconds(..)` is a sustainable per-GMI request rate — the
+/// capacity yardstick tests and examples derive offered-load levels from,
+/// kept here so it cannot drift from the gateway's own cost model.
+pub fn batch_seconds(
+    bench: &BenchInfo,
+    cost: &CostModel,
+    topo: &Topology,
+    share: f64,
+    batch: usize,
+) -> f64 {
+    let fabric = Fabric::single_node(topo.clone());
+    let req = fabric
+        .plan_intra_gpu(batch * request_bytes(bench), 1, 0)
+        .total_s();
+    let resp = fabric
+        .plan_intra_gpu(batch * response_bytes(bench), 1, 0)
+        .total_s();
+    let fwd = cost.op_time(OpKind::PolicyFwd { num_env: batch }, share, 1.0);
+    req + fwd + resp
+}
+
+/// Immutable per-run dispatch parameters.
+struct BatchSpec<'a> {
+    trace: &'a [Request],
+    max_batch: usize,
+    /// TDG fleets run the forward on the dedicated agent GMI at a fraction
+    /// of the pair budget (same model as drl::serving).
+    dedicated: bool,
+    req_bytes: usize,
+    resp_bytes: usize,
+}
+
+/// Mutable dispatch-loop bookkeeping.
+struct DispatchLog {
+    /// Admitted requests in dispatch order.
+    served: Vec<ServedRequest>,
+    /// Size of every dispatched batch, in dispatch order.
+    batch_sizes: Vec<usize>,
+    /// Latencies dispatched in the current autoscale window; `None` when
+    /// no autoscaler is configured (nothing would ever read or clear it).
+    window_lat: Option<Vec<f64>>,
+    /// Completion times (bit patterns) of everything in flight — the
+    /// admission-control ledger.
+    completions: BinaryHeap<Reverse<u64>>,
+}
+
+/// Dispatch up to `max_batch` queued requests at virtual time `t` onto the
+/// least-loaded active executor, as engine events.
+fn dispatch_batch(
+    t: f64,
+    engine: &mut Engine,
+    fabric: &mut Fabric,
+    cost: &CostModel,
+    active: &[ExecutorId],
+    pending: &mut VecDeque<usize>,
+    spec: &BatchSpec,
+    log: &mut DispatchLog,
+) {
+    let n = pending.len().min(spec.max_batch);
+    if n == 0 {
+        return;
+    }
+    // Least-loaded active executor: earliest clock, ties to the first.
+    let mut ex = active[0];
+    for &e in &active[1..] {
+        if engine.clock(e).seconds() < engine.clock(ex).seconds() {
+            ex = e;
+        }
+    }
+    let gpu = engine.gpu(ex);
+    let sharing = engine.co_resident(ex).max(1);
+    let batch_idx = log.batch_sizes.len();
+
+    // Request payload onto the GMI through its GPU's host path. Contention
+    // with co-resident GMIs' transfers is handled by the fabric's link
+    // occupancy, which this plan serializes against.
+    let req_plan = fabric.plan_intra_gpu(n * spec.req_bytes, sharing, gpu);
+    engine.recv_plan(fabric, ex, Clock(t), &req_plan);
+    // The batched policy forward (TDG fleets: the shared dedicated-agent
+    // model from drl::serving).
+    let fwd = if spec.dedicated {
+        let share = engine.share(ex);
+        tdg_agent_fwd(n, share)
+    } else {
+        OpCharge::recorded(OpKind::PolicyFwd { num_env: n })
+    };
+    engine.charge_steps(cost, ex, 1.0, &[fwd], 0.0);
+    // Response payload back to the gateway.
+    let resp_plan = fabric.plan_intra_gpu(n * spec.resp_bytes, sharing, gpu);
+    let after_fwd = engine.clock(ex);
+    let done = engine.recv_plan(fabric, ex, after_fwd, &resp_plan);
+
+    let done_s = done.seconds();
+    for _ in 0..n {
+        let idx = pending.pop_front().expect("batch under-run");
+        let r = spec.trace[idx];
+        log.served.push(ServedRequest {
+            id: r.id,
+            source: r.source,
+            arrival_s: r.arrival_s,
+            batch: batch_idx,
+            dispatch_s: t,
+            completion_s: done_s,
+        });
+        if let Some(w) = log.window_lat.as_mut() {
+            w.push(done_s - r.arrival_s);
+        }
+        // Completion times are non-negative finite, so their bit patterns
+        // order like the values (min-heap via Reverse).
+        log.completions.push(Reverse(done_s.to_bits()));
+    }
+    log.batch_sizes.push(n);
+}
+
+/// Run the gateway over an arrival trace (ascending `arrival_s`). The
+/// layout's rollout GMIs form the initial serving fleet.
+pub fn run_gateway(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    trace: &[Request],
+    cfg: &GatewayConfig,
+) -> Result<GatewayRunResult> {
+    anyhow::ensure!(!layout.rollout_gmis.is_empty(), "no serving GMIs in layout");
+    anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+    anyhow::ensure!(cfg.max_wait_s >= 0.0, "max_wait_s must be non-negative");
+
+    // TDG fleets (dedicated simulator/agent GMIs) pay the reduced-share
+    // forward of the rejected design — the same shared model drl::serving
+    // charges through.
+    let dedicated = is_dedicated(layout);
+
+    let mut engine = Engine::new(&layout.manager, cost);
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
+    let mut active: Vec<ExecutorId> = engine.add_group(&layout.rollout_gmis)?;
+    let mut scaler = match &cfg.autoscale {
+        Some(a) => Some(Autoscaler::new(a.clone(), &engine, &active)?),
+        None => None,
+    };
+    let window_s = cfg.autoscale.as_ref().map(|a| a.window_s);
+
+    let spec = BatchSpec {
+        trace,
+        max_batch: cfg.max_batch,
+        dedicated,
+        req_bytes: request_bytes(bench),
+        resp_bytes: response_bytes(bench),
+    };
+    let mut log = DispatchLog {
+        served: Vec::with_capacity(trace.len()),
+        batch_sizes: Vec::new(),
+        window_lat: window_s.map(|_| Vec::new()),
+        completions: BinaryHeap::new(),
+    };
+    let mut pending: VecDeque<usize> = VecDeque::new();
+    let mut rejected = 0usize;
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+
+    // Outstanding = admitted and not yet completed (queued + in-flight):
+    // the admission-control and queue-depth quantity.
+    let mut outstanding = 0usize;
+    let mut max_queue_depth = 0usize;
+    let mut next_window = window_s.unwrap_or(f64::INFINITY);
+
+    for (idx, r) in trace.iter().enumerate() {
+        let t = r.arrival_s;
+        // Timed events due before this arrival — batch-wait deadlines and
+        // autoscale window boundaries — fire in chronological order.
+        loop {
+            let deadline = match pending.front() {
+                Some(&i) => trace[i].arrival_s + cfg.max_wait_s,
+                None => f64::INFINITY,
+            };
+            if deadline <= t && deadline <= next_window {
+                dispatch_batch(
+                    deadline,
+                    &mut engine,
+                    &mut fabric,
+                    cost,
+                    &active,
+                    &mut pending,
+                    &spec,
+                    &mut log,
+                );
+            } else if next_window <= t {
+                if let Some(s) = scaler.as_mut() {
+                    let lat = log.window_lat.as_deref().unwrap_or(&[]);
+                    if let Some(ev) = s.evaluate(next_window, &mut engine, &mut active, lat) {
+                        scale_events.push(ev);
+                    }
+                }
+                if let Some(w) = log.window_lat.as_mut() {
+                    w.clear();
+                }
+                next_window += window_s.unwrap_or(f64::INFINITY);
+            } else {
+                break;
+            }
+        }
+        // Retire completions that landed before this arrival.
+        while let Some(&Reverse(bits)) = log.completions.peek() {
+            if f64::from_bits(bits) <= t {
+                log.completions.pop();
+                outstanding -= 1;
+            } else {
+                break;
+            }
+        }
+        // Admission control.
+        if cfg.admission_cap.is_some_and(|cap| outstanding >= cap) {
+            rejected += 1;
+            continue;
+        }
+        outstanding += 1;
+        max_queue_depth = max_queue_depth.max(outstanding);
+        pending.push_back(idx);
+        if pending.len() >= cfg.max_batch {
+            dispatch_batch(
+                t,
+                &mut engine,
+                &mut fabric,
+                cost,
+                &active,
+                &mut pending,
+                &spec,
+                &mut log,
+            );
+        }
+    }
+    // Trace over: remaining partial batches fire at their wait deadlines.
+    while !pending.is_empty() {
+        let deadline = trace[*pending.front().expect("non-empty queue")].arrival_s
+            + cfg.max_wait_s;
+        dispatch_batch(
+            deadline,
+            &mut engine,
+            &mut fabric,
+            cost,
+            &active,
+            &mut pending,
+            &spec,
+            &mut log,
+        );
+    }
+    let DispatchLog { served, batch_sizes, .. } = log;
+
+    // ---- latency distribution ----
+    let mut lats: Vec<f64> = served.iter().map(|s| s.latency_s()).collect();
+    lats.sort_by(f64::total_cmp);
+    let total = trace.len();
+    let served_n = served.len();
+    let within = served
+        .iter()
+        .filter(|s| s.latency_s() <= cfg.slo_s + 1e-12)
+        .count();
+    let mean_s = if served_n > 0 {
+        lats.iter().sum::<f64>() / served_n as f64
+    } else {
+        0.0
+    };
+    let mean_batch = if batch_sizes.is_empty() {
+        0.0
+    } else {
+        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
+    };
+    let latency = LatencyStats {
+        requests: total,
+        served: served_n,
+        rejected,
+        p50_s: percentile(&lats, 0.50),
+        p95_s: percentile(&lats, 0.95),
+        p99_s: percentile(&lats, 0.99),
+        mean_s,
+        slo_s: cfg.slo_s,
+        attainment: if total > 0 { within as f64 / total as f64 } else { 1.0 },
+        mean_batch,
+        max_queue_depth,
+    };
+
+    let span = engine.span();
+    let peak_mem = engine
+        .manager()
+        .all()
+        .map(|g| g.mem_gib)
+        .fold(0.0f64, f64::max);
+    let metrics = RunMetrics {
+        steps_per_sec: if span > 0.0 { served_n as f64 / span } else { 0.0 },
+        pps: if span > 0.0 { served_n as f64 / span } else { 0.0 },
+        ttop: 0.0,
+        span_s: span,
+        utilization: engine.mean_utilization(),
+        final_reward: 0.0,
+        reward_curve: vec![],
+        comm_s: engine.comm_s(),
+        peak_mem_gib: peak_mem,
+        links: fabric.link_report(),
+        latency: Some(latency.clone()),
+    };
+    let final_fleet = engine.manager().all().cloned().collect();
+    Ok(GatewayRunResult {
+        metrics,
+        latency,
+        served,
+        rejected,
+        batch_sizes,
+        scale_events,
+        final_fleet,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::mapping::build_gateway_fleet;
+    use crate::serve::traffic::{generate_trace, TrafficPattern};
+
+    fn setup() -> (Layout, BenchInfo, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(1);
+        let layout = build_gateway_fleet(&topo, 2, 4, 32, &cost, None).unwrap();
+        (layout, b, cost)
+    }
+
+    #[test]
+    fn serves_every_admitted_request_exactly_once() {
+        let (layout, b, cost) = setup();
+        let trace =
+            generate_trace(&TrafficPattern::Poisson { rate: 5000.0 }, 0.2, 9, 4);
+        let cfg = GatewayConfig { max_batch: 16, max_wait_s: 1e-3, ..Default::default() };
+        let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+        assert_eq!(r.served.len() + r.rejected, trace.len());
+        assert_eq!(r.rejected, 0, "no cap -> no rejections");
+        let mut ids: Vec<usize> = r.served.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "request served twice or dropped");
+        // Every completion is after its arrival and batches respect the cap.
+        for s in &r.served {
+            assert!(s.completion_s > s.arrival_s);
+        }
+        assert!(r.batch_sizes.iter().all(|&b| b >= 1 && b <= 16));
+        assert_eq!(
+            r.batch_sizes.iter().sum::<usize>(),
+            r.served.len(),
+            "batch sizes must partition the served requests"
+        );
+        // The latency table is surfaced through RunMetrics.
+        let l = r.metrics.latency.as_ref().unwrap();
+        assert_eq!(l.served, r.served.len());
+        assert!(l.p99_s >= l.p95_s && l.p95_s >= l.p50_s);
+        assert!(l.p50_s > 0.0);
+        // Gateway hops ride the fabric: comm time and link traffic exist.
+        assert!(r.metrics.comm_s > 0.0);
+        assert!(!r.metrics.links.is_empty());
+    }
+
+    #[test]
+    fn admission_cap_rejects_overload() {
+        let (layout, b, cost) = setup();
+        // Far beyond fleet capacity: outstanding work piles up.
+        let trace =
+            generate_trace(&TrafficPattern::Constant { rate: 200_000.0 }, 0.05, 1, 4);
+        let capped = GatewayConfig {
+            max_batch: 16,
+            max_wait_s: 1e-3,
+            admission_cap: Some(64),
+            ..Default::default()
+        };
+        let r = run_gateway(&layout, &b, &cost, &trace, &capped).unwrap();
+        assert!(r.rejected > 0, "overload under a cap must reject");
+        assert!(r.latency.max_queue_depth <= 64);
+        assert_eq!(r.served.len() + r.rejected, trace.len());
+        // Uncapped: everything is admitted, the queue grows past the cap.
+        let open = GatewayConfig { admission_cap: None, ..capped };
+        let r2 = run_gateway(&layout, &b, &cost, &trace, &open).unwrap();
+        assert_eq!(r2.rejected, 0);
+        assert!(r2.latency.max_queue_depth > 64);
+    }
+
+    #[test]
+    fn partial_batches_dispatch_at_the_wait_deadline() {
+        let (layout, b, cost) = setup();
+        // 10 req/s with a 1 ms wait: every batch times out at size 1.
+        let trace = generate_trace(&TrafficPattern::Constant { rate: 10.0 }, 0.5, 1, 1);
+        let cfg = GatewayConfig { max_batch: 32, max_wait_s: 1e-3, ..Default::default() };
+        let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+        assert!(r.batch_sizes.iter().all(|&n| n == 1));
+        for s in &r.served {
+            assert!((s.dispatch_s - s.arrival_s - 1e-3).abs() < 1e-12);
+        }
+        // And the batch histogram reflects it.
+        assert_eq!(r.batch_histogram(), vec![(1, trace.len())]);
+    }
+
+    #[test]
+    fn batching_amortizes_latency_under_load() {
+        // At a rate that keeps batches full, max_batch=16 must beat
+        // max_batch=1 on p99: the launch overhead amortizes.
+        let (layout, b, cost) = setup();
+        let trace =
+            generate_trace(&TrafficPattern::Constant { rate: 20_000.0 }, 0.1, 1, 4);
+        let mk = |mb: usize| GatewayConfig {
+            max_batch: mb,
+            max_wait_s: 5e-4,
+            ..Default::default()
+        };
+        let batched = run_gateway(&layout, &b, &cost, &trace, &mk(16)).unwrap();
+        let single = run_gateway(&layout, &b, &cost, &trace, &mk(1)).unwrap();
+        assert!(
+            batched.latency.p99_s < single.latency.p99_s,
+            "batched {} !< single {}",
+            batched.latency.p99_s,
+            single.latency.p99_s
+        );
+    }
+}

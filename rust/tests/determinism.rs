@@ -1,0 +1,153 @@
+//! Determinism golden tests: the discrete-event engine is a simulator, so
+//! the same seed + config must reproduce *bit-identical* `RunMetrics`
+//! (span, rates, percentiles, per-link traffic) across runs — replayability
+//! is what makes traces, regressions, and the autoscaler's decisions
+//! debuggable. Any nondeterminism (map iteration order, uninitialized
+//! accumulation order, wall-clock leakage) fails here first.
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::drl::a3c::{run_async, AsyncConfig};
+use gmi_drl::drl::serving::{run_serving, ServingConfig};
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::engine::ElasticConfig;
+use gmi_drl::mapping::{
+    build_async_layout, build_gateway_fleet, build_serving_layout, build_sync_layout,
+    MappingTemplate,
+};
+use gmi_drl::metrics::RunMetrics;
+use gmi_drl::serve::{generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, TrafficPattern};
+use gmi_drl::vtime::CostModel;
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Bit-exact equality over every RunMetrics field.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(bits(a.steps_per_sec), bits(b.steps_per_sec), "{what}: steps_per_sec");
+    assert_eq!(bits(a.pps), bits(b.pps), "{what}: pps");
+    assert_eq!(bits(a.ttop), bits(b.ttop), "{what}: ttop");
+    assert_eq!(bits(a.span_s), bits(b.span_s), "{what}: span_s");
+    assert_eq!(bits(a.utilization), bits(b.utilization), "{what}: utilization");
+    assert_eq!(bits(a.final_reward), bits(b.final_reward), "{what}: final_reward");
+    assert_eq!(bits(a.comm_s), bits(b.comm_s), "{what}: comm_s");
+    assert_eq!(bits(a.peak_mem_gib), bits(b.peak_mem_gib), "{what}: peak_mem_gib");
+    assert_eq!(a.reward_curve.len(), b.reward_curve.len(), "{what}: curve len");
+    for (i, (x, y)) in a.reward_curve.iter().zip(&b.reward_curve).enumerate() {
+        assert_eq!(bits(x.0), bits(y.0), "{what}: curve[{i}].t");
+        assert_eq!(bits(x.1), bits(y.1), "{what}: curve[{i}].r");
+    }
+    assert_eq!(a.links.len(), b.links.len(), "{what}: link count");
+    for (x, y) in a.links.iter().zip(&b.links) {
+        assert_eq!(x.name, y.name, "{what}: link name");
+        assert_eq!(x.bytes, y.bytes, "{what}: link bytes {}", x.name);
+        assert_eq!(bits(x.busy_s), bits(y.busy_s), "{what}: link busy {}", x.name);
+    }
+    // LatencyStats is PartialEq over plain fields; identical runs must
+    // produce the identical distribution.
+    assert_eq!(a.latency, b.latency, "{what}: latency stats");
+}
+
+#[test]
+fn sync_training_is_bit_identical_across_runs() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let layout =
+        build_sync_layout(&topo, MappingTemplate::TaskColocated, 2, 1024, &cost, None).unwrap();
+    let cfg = SyncConfig { iterations: 4, ..Default::default() };
+    let r1 = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    let r2 = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    assert_metrics_identical(&r1.metrics, &r2.metrics, "sync TCG");
+    assert_eq!(r1.final_params, r2.final_params, "sync params drifted");
+
+    // The elastic controller's decisions are part of the replay too.
+    let tdg =
+        build_sync_layout(&topo, MappingTemplate::TaskDedicated, 3, 1024, &cost, None).unwrap();
+    let ecfg = SyncConfig {
+        iterations: 4,
+        elastic: Some(ElasticConfig::default()),
+        ..Default::default()
+    };
+    let e1 = run_sync(&tdg, &b, &cost, &Compute::Null, &ecfg).unwrap();
+    let e2 = run_sync(&tdg, &b, &cost, &Compute::Null, &ecfg).unwrap();
+    assert_metrics_identical(&e1.metrics, &e2.metrics, "sync TDG elastic");
+    assert_eq!(e1.elastic_shifts, e2.elastic_shifts);
+}
+
+#[test]
+fn a3c_training_is_bit_identical_across_runs() {
+    let b = static_registry()["AY"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let layout = build_async_layout(&topo, 1, 3, 2, 2048, &cost).unwrap();
+    let cfg = AsyncConfig { rounds: 6, ..Default::default() };
+    let r1 = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    let r2 = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    assert_metrics_identical(&r1.metrics, &r2.metrics, "a3c");
+    assert_eq!(r1.updates, r2.updates);
+    assert_eq!(r1.channel_stats.packets_out, r2.channel_stats.packets_out);
+}
+
+#[test]
+fn serving_is_bit_identical_across_runs() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+    let cfg = ServingConfig { rounds: 5, ..Default::default() };
+    for template in [MappingTemplate::TaskColocated, MappingTemplate::TaskDedicated] {
+        let layout = build_serving_layout(&topo, template, 3, 1024, &cost, None).unwrap();
+        let r1 = run_serving(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let r2 = run_serving(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        assert_metrics_identical(&r1, &r2, &format!("serving {template:?}"));
+    }
+}
+
+#[test]
+fn gateway_is_bit_identical_across_runs() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+
+    // Trace generation itself is seed-deterministic.
+    let pattern = TrafficPattern::Burst { base: 3000.0, burst: 30000.0, start_s: 0.05, len_s: 0.05 };
+    let t1 = generate_trace(&pattern, 0.15, 11, 4);
+    let t2 = generate_trace(&pattern, 0.15, 11, 4);
+    assert_eq!(t1, t2, "trace generation drifted");
+
+    let cfg = GatewayConfig {
+        max_batch: 16,
+        max_wait_s: 1e-3,
+        admission_cap: Some(4096),
+        slo_s: 5e-3,
+        autoscale: Some(AutoscaleConfig {
+            window_s: 0.01,
+            slo_p99_s: 5e-3,
+            min_fleet: 2,
+            max_per_gpu: 6,
+            ..Default::default()
+        }),
+    };
+    let l1 = build_gateway_fleet(&topo, 2, 6, 16, &cost, None).unwrap();
+    let l2 = build_gateway_fleet(&topo, 2, 6, 16, &cost, None).unwrap();
+    let r1 = run_gateway(&l1, &b, &cost, &t1, &cfg).unwrap();
+    let r2 = run_gateway(&l2, &b, &cost, &t2, &cfg).unwrap();
+    assert_metrics_identical(&r1.metrics, &r2.metrics, "gateway");
+    assert_eq!(r1.served.len(), r2.served.len());
+    assert_eq!(r1.rejected, r2.rejected);
+    assert_eq!(r1.batch_sizes, r2.batch_sizes);
+    assert_eq!(r1.scale_events.len(), r2.scale_events.len());
+    for (x, y) in r1.scale_events.iter().zip(&r2.scale_events) {
+        assert_eq!(x.action, y.action);
+        assert_eq!(bits(x.t_s), bits(y.t_s));
+        assert_eq!(x.fleet_after, y.fleet_after);
+    }
+    // Per-request outcomes replay exactly.
+    for (x, y) in r1.served.iter().zip(&r2.served) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.batch, y.batch);
+        assert_eq!(bits(x.completion_s), bits(y.completion_s));
+    }
+}

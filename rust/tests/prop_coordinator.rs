@@ -280,6 +280,204 @@ fn prop_pack_jobs_never_uses_more_gpus_than_exclusive_baseline() {
     }
 }
 
+/// Per-GPU placement invariants that must hold after EVERY manager
+/// operation: SM shares within capacity, memory within HBM, each share in
+/// (0, 1], MIG memory within the covering profile's quota.
+fn assert_layout_valid(mgr: &GmiManager, gpus: usize, ctx: &str) {
+    for gpu in 0..gpus {
+        let share: f64 = mgr.all().filter(|g| g.gpu == gpu).map(|g| g.sm_share).sum();
+        let mem: f64 = mgr.all().filter(|g| g.gpu == gpu).map(|g| g.mem_gib).sum();
+        assert!(share <= 1.0 + 1e-9, "{ctx}: GPU {gpu} SM oversubscribed at {share}");
+        assert!(mem <= 40.0 + 1e-9, "{ctx}: GPU {gpu} memory oversubscribed at {mem}");
+    }
+    for g in mgr.all() {
+        assert!(
+            g.sm_share > 0.0 && g.sm_share <= 1.0 + 1e-9,
+            "{ctx}: GMI {} invalid share {}",
+            g.id,
+            g.sm_share
+        );
+        if let Some(quota) = g.backend.mem_quota_gib(g.sm_share) {
+            assert!(
+                g.mem_gib <= quota + 1e-9,
+                "{ctx}: GMI {} exceeds MIG quota ({} > {quota})",
+                g.id,
+                g.mem_gib
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_resize_remove_sequences_never_invalidate_layouts() {
+    // Arbitrary valid layouts + arbitrary resize_gmi / remove_gmi / re-add
+    // sequences (many of which the manager must reject): after every
+    // operation — accepted or not — the layout stays valid. This is the
+    // contract the serving autoscaler and the elastic controller lean on.
+    let mut rng = Rng(0xe1a571c);
+    for case in 0..60 {
+        let gpus = rng.range(1, 4);
+        let mut mgr = GmiManager::new(Topology::dgx_a100(gpus));
+        let backend = if rng.range(0, 1) == 0 { GmiBackend::Mps } else { GmiBackend::Mig };
+        let mut ids: Vec<usize> = Vec::new();
+        let mut next_id = 0usize;
+        for _ in 0..rng.range(2, 10) {
+            let share = if backend == GmiBackend::Mig {
+                rng.range(1, 3) as f64 / 7.0
+            } else {
+                rng.range(5, 30) as f64 / 100.0
+            };
+            let ok = mgr
+                .add_gmi(GmiSpec {
+                    id: next_id,
+                    gpu: rng.range(0, gpus - 1),
+                    sm_share: share,
+                    mem_gib: rng.range(1, 5) as f64,
+                    backend,
+                    role: Role::SimAgent,
+                    num_env: 64,
+                })
+                .is_ok();
+            if ok {
+                ids.push(next_id);
+            }
+            next_id += 1;
+        }
+        assert_layout_valid(&mgr, gpus, &format!("case {case} setup"));
+        for step in 0..40 {
+            let ctx = format!("case {case} step {step}");
+            match rng.range(0, 3) {
+                // resize, including deliberately invalid shares (> 1, too
+                // much memory) the manager must reject atomically.
+                0 | 1 => {
+                    if ids.is_empty() {
+                        continue;
+                    }
+                    let pick = ids[rng.range(0, ids.len() - 1)];
+                    let share = rng.range(1, 120) as f64 / 100.0;
+                    let mem = rng.range(1, 50) as f64;
+                    let _ = mgr.resize_gmi(pick, share, mem);
+                }
+                // remove: frees capacity and must drop group membership.
+                2 => {
+                    if ids.is_empty() {
+                        continue;
+                    }
+                    let pick = ids[rng.range(0, ids.len() - 1)];
+                    if mgr.remove_gmi(pick).is_ok() {
+                        ids.retain(|&i| i != pick);
+                    }
+                }
+                // re-add into whatever capacity the churn has freed.
+                _ => {
+                    let ok = mgr
+                        .add_gmi(GmiSpec {
+                            id: next_id,
+                            gpu: rng.range(0, gpus - 1),
+                            sm_share: if backend == GmiBackend::Mig {
+                                rng.range(1, 3) as f64 / 7.0
+                            } else {
+                                rng.range(5, 40) as f64 / 100.0
+                            },
+                            mem_gib: rng.range(1, 5) as f64,
+                            backend,
+                            role: Role::SimAgent,
+                            num_env: 64,
+                        })
+                        .is_ok();
+                    if ok {
+                        ids.push(next_id);
+                    }
+                    next_id += 1;
+                }
+            }
+            assert_layout_valid(&mgr, gpus, &ctx);
+        }
+    }
+}
+
+#[test]
+fn prop_engine_elastic_ops_keep_live_manager_valid() {
+    // The same invariants through the engine's elastic surface
+    // (resize_share / add_gmi / remove_gmi), which refreshes executors as
+    // provisioning changes — the autoscaler's actual call path.
+    use gmi_drl::engine::Engine;
+
+    let mut rng = Rng(0x11a57);
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    for case in 0..25 {
+        let gpus = rng.range(1, 3);
+        let mut mgr = GmiManager::new(Topology::dgx_a100(gpus));
+        let mut next_id = 0usize;
+        for gpu in 0..gpus {
+            for _ in 0..rng.range(1, 3) {
+                mgr.add_gmi(GmiSpec {
+                    id: next_id,
+                    gpu,
+                    sm_share: 0.2,
+                    mem_gib: 3.0,
+                    backend: GmiBackend::Mps,
+                    role: Role::SimAgent,
+                    num_env: 64,
+                })
+                .unwrap();
+                next_id += 1;
+            }
+        }
+        let all: Vec<usize> = mgr.all().map(|g| g.id).collect();
+        let mut engine = Engine::new(&mgr, &cost);
+        let mut live: Vec<usize> = Vec::new();
+        for &g in &all {
+            engine.add_executor(g).unwrap();
+            live.push(g);
+        }
+        for step in 0..30 {
+            let ctx = format!("case {case} step {step}");
+            match rng.range(0, 2) {
+                0 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let pick = live[rng.range(0, live.len() - 1)];
+                    let _ = engine.resize_share(pick, rng.range(1, 110) as f64 / 100.0);
+                }
+                1 => {
+                    if live.len() <= 1 {
+                        continue;
+                    }
+                    let pick = live[rng.range(0, live.len() - 1)];
+                    if engine.remove_gmi(pick).is_ok() {
+                        live.retain(|&i| i != pick);
+                    }
+                }
+                _ => {
+                    let spec = GmiSpec {
+                        id: next_id,
+                        gpu: rng.range(0, gpus - 1),
+                        sm_share: rng.range(5, 40) as f64 / 100.0,
+                        mem_gib: 3.0,
+                        backend: GmiBackend::Mps,
+                        role: Role::SimAgent,
+                        num_env: 64,
+                    };
+                    if engine.add_gmi(spec).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+            }
+            assert_layout_valid(engine.manager(), gpus, &ctx);
+            // Live executors track their manager spec: effective share for
+            // an MPS GMI is exactly the provisioned share.
+            for &g in &live {
+                let spec = engine.manager().gmi(g).expect("live GMI registered");
+                assert!(spec.sm_share > 0.0, "{ctx}: GMI {g} zero share");
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_cost_model_monotonicity() {
     let mut rng = Rng(0x1234);

@@ -1,0 +1,280 @@
+//! Queueing-theory property tests on the serving gateway.
+//!
+//! Same methodology as the other property suites (no proptest crate
+//! offline): seeded SplitMix64 case generation, universal assertions,
+//! deterministic on failure. Capacities are derived from the cost model
+//! itself — one batch's request hop + batched forward + response hop —
+//! so the properties stay valid if the calibrated constants move.
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::mapping::{build_gateway_fleet, Layout};
+use gmi_drl::serve::{
+    batch_seconds, generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, ScaleAction,
+    TrafficPattern,
+};
+use gmi_drl::vtime::CostModel;
+use gmi_drl::BenchInfo;
+
+/// Deterministic PRNG (SplitMix64).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+}
+
+fn bench_and_cost() -> (BenchInfo, CostModel) {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    (b, cost)
+}
+
+fn fleet(topo: &Topology, initial: usize, max: usize, batch: usize, cost: &CostModel) -> Layout {
+    build_gateway_fleet(topo, initial, max, batch, cost, None).unwrap()
+}
+
+#[test]
+fn prop_p99_monotone_nondecreasing_in_arrival_rate() {
+    // Fixed capacity, no batching slack (max_batch = 1, so the dynamic
+    // batching deadline cannot trade wait for service), constant arrivals:
+    // a faster arrival rate can only queue more. p99 must be monotone
+    // nondecreasing across the sweep, from well under to well past
+    // capacity.
+    let (b, cost) = bench_and_cost();
+    let topo = Topology::dgx_a100(1);
+    let layout = fleet(&topo, 2, 4, 1, &cost);
+    let serial = batch_seconds(&b, &cost, &topo, 0.25, 1);
+    let per_gmi = 1.0 / serial;
+    let cfg = GatewayConfig {
+        max_batch: 1,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s: 10e-3,
+        autoscale: None,
+    };
+    let mut last = 0.0f64;
+    for frac in [0.2, 0.5, 0.8, 1.2, 1.6, 2.0] {
+        let rate = frac * per_gmi;
+        let trace = generate_trace(&TrafficPattern::Constant { rate }, 0.4, 0, 4);
+        let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+        assert!(
+            r.latency.p99_s >= last - 1e-9,
+            "p99 decreased with load: {} -> {} at frac {frac}",
+            last,
+            r.latency.p99_s
+        );
+        last = r.latency.p99_s;
+    }
+    // And the sweep actually exercised queueing: overload p99 must far
+    // exceed the unloaded service time.
+    assert!(last > 10.0 * serial, "overload never queued: p99 {last}");
+}
+
+#[test]
+fn prop_queue_stays_bounded_below_capacity() {
+    // Offered load at half of one GMI's guaranteed serial rate (the fleet
+    // has two): outstanding work must stay bounded — a few batches, not a
+    // growing backlog — and the queue must drain right after the trace.
+    let (b, cost) = bench_and_cost();
+    let topo = Topology::dgx_a100(1);
+    let batch = 16;
+    let layout = fleet(&topo, 2, 4, batch, &cost);
+    let serial = batch_seconds(&b, &cost, &topo, 0.25, batch);
+    let rate = 0.5 * batch as f64 / serial;
+    let cfg = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s: 10e-3,
+        autoscale: None,
+    };
+    for (seed, duration) in [(1u64, 0.3f64), (2, 0.6)] {
+        let trace =
+            generate_trace(&TrafficPattern::Poisson { rate }, duration, seed, 4);
+        let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+        assert_eq!(r.served.len(), trace.len());
+        assert!(
+            r.latency.max_queue_depth <= 8 * batch,
+            "backlog grew under sub-capacity load: depth {} (seed {seed})",
+            r.latency.max_queue_depth
+        );
+        // Drain promptly: the last completion lands within a handful of
+        // batch times of the last arrival (no hidden unbounded queue).
+        let last_arrival = trace.last().unwrap().arrival_s;
+        let last_done = r
+            .served
+            .iter()
+            .map(|s| s.completion_s)
+            .fold(0.0f64, f64::max);
+        assert!(
+            last_done - last_arrival <= 12.0 * serial + cfg.max_wait_s,
+            "queue did not drain: {} past last arrival (seed {seed})",
+            last_done - last_arrival
+        );
+        // Doubling the duration must not change the conclusion (stationary
+        // backlog), which the loop's second iteration checks.
+    }
+}
+
+#[test]
+fn prop_batching_never_reorders_requests_from_one_source() {
+    // Across random load levels and batching configs: requests of the same
+    // source are dispatched in arrival order — batch indices nondecreasing
+    // and ids increasing along the dispatch sequence.
+    let (b, cost) = bench_and_cost();
+    let topo = Topology::dgx_a100(1);
+    let mut rng = Rng(0x5e8ef);
+    for case in 0..6 {
+        let batch = [1, 4, 16, 32][rng.range(0, 3)];
+        let layout = fleet(&topo, rng.range(1, 3), 4, batch, &cost);
+        let serial = batch_seconds(&b, &cost, &topo, 0.25, batch.max(1));
+        let rate = (rng.range(20, 300) as f64 / 100.0) * batch as f64 / serial;
+        let sources = rng.range(1, 6);
+        let trace = generate_trace(
+            &TrafficPattern::Poisson { rate },
+            0.15,
+            case as u64 + 77,
+            sources,
+        );
+        let cfg = GatewayConfig {
+            max_batch: batch,
+            max_wait_s: rng.range(1, 20) as f64 * 1e-4,
+            admission_cap: None,
+            slo_s: 10e-3,
+            autoscale: None,
+        };
+        let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+        assert_eq!(r.served.len(), trace.len(), "case {case}: request lost");
+        let mut last: Vec<Option<(usize, usize)>> = vec![None; sources];
+        for s in &r.served {
+            if let Some((prev_batch, prev_id)) = last[s.source] {
+                assert!(
+                    s.batch >= prev_batch,
+                    "case {case}: source {} batch order {prev_batch} -> {}",
+                    s.source,
+                    s.batch
+                );
+                assert!(
+                    s.id > prev_id,
+                    "case {case}: source {} id order {prev_id} -> {}",
+                    s.source,
+                    s.id
+                );
+            }
+            last[s.source] = Some((s.batch, s.id));
+        }
+    }
+}
+
+#[test]
+fn prop_autoscaler_never_oversubscribes_and_respects_floors() {
+    // Random traffic (bursts and diurnal swings) through the autoscaled
+    // gateway: whatever the scaler did, the final fleet must be a valid
+    // placement — per-GPU SM shares sum to <= 1, memory within capacity,
+    // every member at or above its validated share floor — and the fleet
+    // size must have stayed within [min_fleet, gpus * max_per_gpu].
+    let (b, cost) = bench_and_cost();
+    let mut rng = Rng(0xa5ca1e);
+    for case in 0..6 {
+        let gpus = rng.range(1, 2);
+        let topo = Topology::dgx_a100(gpus);
+        let batch = 16;
+        let initial = rng.range(1, 2);
+        let max_per = rng.range(3, 5);
+        let layout = fleet(&topo, initial, max_per, batch, &cost);
+        let base_share = layout.manager.all().next().unwrap().sm_share;
+        let serial = batch_seconds(&b, &cost, &topo, base_share, batch);
+        let cap = (gpus * initial) as f64 * batch as f64 / serial;
+        let pattern = if case % 2 == 0 {
+            TrafficPattern::Burst {
+                base: 0.4 * cap,
+                burst: (rng.range(15, 30) as f64 / 10.0) * cap,
+                start_s: 0.04,
+                len_s: 0.05,
+            }
+        } else {
+            TrafficPattern::Diurnal {
+                base: 0.3 * cap,
+                peak: (rng.range(15, 30) as f64 / 10.0) * cap,
+                period_s: 0.1,
+            }
+        };
+        let trace = generate_trace(&pattern, 0.15, case as u64 + 5, 4);
+        let min_fleet = rng.range(1, gpus * initial);
+        let auto = AutoscaleConfig {
+            window_s: 0.01,
+            slo_p99_s: 4e-3,
+            min_fleet,
+            max_per_gpu: max_per,
+            min_share: 0.05,
+            cooldown_windows: rng.range(0, 1),
+            ..Default::default()
+        };
+        let cfg = GatewayConfig {
+            max_batch: batch,
+            max_wait_s: 1e-3,
+            admission_cap: None,
+            slo_s: 4e-3,
+            autoscale: Some(auto.clone()),
+        };
+        let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+        // Placement validity of the final fleet.
+        for gpu in 0..gpus {
+            let share: f64 = r
+                .final_fleet
+                .iter()
+                .filter(|g| g.gpu == gpu)
+                .map(|g| g.sm_share)
+                .sum();
+            let mem: f64 = r
+                .final_fleet
+                .iter()
+                .filter(|g| g.gpu == gpu)
+                .map(|g| g.mem_gib)
+                .sum();
+            let members = r.final_fleet.iter().filter(|g| g.gpu == gpu).count();
+            assert!(share <= 1.0 + 1e-9, "case {case}: GPU {gpu} share {share}");
+            assert!(mem <= 40.0 + 1e-9, "case {case}: GPU {gpu} mem {mem}");
+            assert!(
+                members <= max_per,
+                "case {case}: GPU {gpu} holds {members} > max {max_per}"
+            );
+        }
+        // Every member at or above its validated floor.
+        for g in &r.final_fleet {
+            assert!(
+                g.sm_share + 1e-9 >= base_share.min(auto.min_share),
+                "case {case}: GMI {} below floor at {}",
+                g.id,
+                g.sm_share
+            );
+        }
+        // Fleet size stayed within bounds at every scale step.
+        for ev in &r.scale_events {
+            assert!(
+                ev.fleet_after >= min_fleet,
+                "case {case}: shrank below min_fleet"
+            );
+            assert!(
+                ev.fleet_after <= gpus * max_per,
+                "case {case}: grew past the GPU caps"
+            );
+            match ev.action {
+                ScaleAction::Grow => assert!(ev.fleet_after >= ev.fleet_before),
+                ScaleAction::Shrink => assert!(ev.fleet_after <= ev.fleet_before),
+            }
+        }
+        // Nothing was lost regardless of scaling.
+        assert_eq!(r.served.len(), trace.len(), "case {case}");
+    }
+}

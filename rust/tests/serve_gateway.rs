@@ -1,0 +1,164 @@
+//! End-to-end serving-gateway integration: the SLO autoscaler against a
+//! static fleet on identical seeded traces (the headline claim), and the
+//! diurnal grow-then-shrink cycle the example prints.
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::mapping::build_gateway_fleet;
+use gmi_drl::serve::{
+    batch_seconds, generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, ScaleAction,
+    TrafficPattern,
+};
+use gmi_drl::vtime::CostModel;
+
+#[test]
+fn autoscaled_fleet_beats_static_fleet_on_the_same_burst() {
+    let bench = static_registry()["AT"].clone();
+    let cost = CostModel::new(&bench);
+    // Two GPUs so scale-up spreads over independent host links.
+    let topo = Topology::dgx_a100(2);
+    let batch = 32;
+    let initial = 1; // per GPU
+    let max_per = 4;
+    let share = (100.0 / max_per as f64).floor() / 100.0;
+    let serial = batch_seconds(&bench, &cost, &topo, share, batch);
+    let static_cap = (2 * initial) as f64 * batch as f64 / serial;
+
+    // Base load well under the static fleet, a burst at 2.5x its capacity.
+    let pattern = TrafficPattern::Burst {
+        base: 0.3 * static_cap,
+        burst: 2.5 * static_cap,
+        start_s: 0.1,
+        len_s: 0.1,
+    };
+    let trace = generate_trace(&pattern, 0.35, 42, 8);
+    assert!(trace.len() > 1000, "burst trace unexpectedly small");
+
+    let slo_s = 8e-3;
+    let cfg_static = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s,
+        autoscale: None,
+    };
+    let mut cfg_auto = cfg_static.clone();
+    cfg_auto.autoscale = Some(AutoscaleConfig {
+        window_s: 0.01,
+        slo_p99_s: slo_s,
+        // Floor at the initial fleet: the comparison isolates scale-UP.
+        min_fleet: 2 * initial,
+        max_per_gpu: max_per,
+        ..Default::default()
+    });
+
+    let fleet_s = build_gateway_fleet(&topo, initial, max_per, batch, &cost, None).unwrap();
+    let fleet_a = build_gateway_fleet(&topo, initial, max_per, batch, &cost, None).unwrap();
+    let s = run_gateway(&fleet_s, &bench, &cost, &trace, &cfg_static).unwrap();
+    let a = run_gateway(&fleet_a, &bench, &cost, &trace, &cfg_auto).unwrap();
+
+    // Identical work: every request of the shared trace served, none
+    // rejected, in both runs.
+    assert_eq!(s.latency.served, trace.len());
+    assert_eq!(a.latency.served, trace.len());
+    assert_eq!(s.rejected, 0);
+    assert_eq!(a.rejected, 0);
+
+    // The scaler actually grew under the burst...
+    let grows = a
+        .scale_events
+        .iter()
+        .filter(|e| e.action == ScaleAction::Grow)
+        .count();
+    assert!(grows >= 1, "autoscaler never grew under a 2.5x burst");
+    assert!(
+        a.final_fleet.len() >= fleet_a.rollout_gmis.len(),
+        "fleet shrank below its floor"
+    );
+
+    // ...and the grown fleet is strictly better on both SLO metrics.
+    assert!(
+        a.latency.p99_s < s.latency.p99_s,
+        "autoscaled p99 {:.4}s !< static p99 {:.4}s",
+        a.latency.p99_s,
+        s.latency.p99_s
+    );
+    assert!(
+        a.latency.attainment > s.latency.attainment,
+        "autoscaled attainment {:.4} !> static {:.4}",
+        a.latency.attainment,
+        s.latency.attainment
+    );
+    // The static fleet really was in SLO trouble (the burst mattered).
+    assert!(
+        s.latency.p99_s > slo_s,
+        "static fleet never violated: p99 {:.4}s",
+        s.latency.p99_s
+    );
+}
+
+#[test]
+fn diurnal_day_produces_grow_and_shrink_events() {
+    // The example's scenario: a diurnal swing whose peak overloads the
+    // initial fleet and whose trough leaves it over-provisioned — the
+    // scaling timeline must contain at least one grow AND one shrink.
+    let bench = static_registry()["AT"].clone();
+    let cost = CostModel::new(&bench);
+    let topo = Topology::dgx_a100(2);
+    let batch = 32;
+    let max_per = 4;
+    let share = (100.0 / max_per as f64).floor() / 100.0;
+    let serial = batch_seconds(&bench, &cost, &topo, share, batch);
+    let static_cap = 2.0 * batch as f64 / serial; // 1 GMI/GPU initially
+
+    let pattern = TrafficPattern::Diurnal {
+        base: 0.25 * static_cap,
+        peak: 2.2 * static_cap,
+        period_s: 0.5,
+    };
+    let trace = generate_trace(&pattern, 0.5, 7, 16);
+
+    let slo_s = 10e-3;
+    let cfg = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s,
+        autoscale: Some(AutoscaleConfig {
+            window_s: 0.02,
+            slo_p99_s: slo_s,
+            min_fleet: 2,
+            max_per_gpu: max_per,
+            ..Default::default()
+        }),
+    };
+    let fleet = build_gateway_fleet(&topo, 1, max_per, batch, &cost, None).unwrap();
+    let r = run_gateway(&fleet, &bench, &cost, &trace, &cfg).unwrap();
+
+    let grows = r
+        .scale_events
+        .iter()
+        .filter(|e| e.action == ScaleAction::Grow)
+        .count();
+    let shrinks = r
+        .scale_events
+        .iter()
+        .filter(|e| e.action == ScaleAction::Shrink)
+        .count();
+    assert!(grows >= 1, "no grow event over the diurnal peak");
+    assert!(shrinks >= 1, "no shrink event over the diurnal trough");
+    // Growth precedes the matching shrink (ramp up at the peak, give back
+    // after it).
+    let first_grow = r
+        .scale_events
+        .iter()
+        .position(|e| e.action == ScaleAction::Grow)
+        .unwrap();
+    let last_shrink = r
+        .scale_events
+        .iter()
+        .rposition(|e| e.action == ScaleAction::Shrink)
+        .unwrap();
+    assert!(last_shrink > first_grow, "no give-back after the peak");
+    assert_eq!(r.latency.served, trace.len());
+}

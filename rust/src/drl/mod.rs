@@ -16,6 +16,20 @@ pub mod sync;
 
 pub use compute::{Compute, RolloutOut, TrainStats};
 
+use crate::engine::OpCharge;
+use crate::vtime::OpKind;
+
+/// The per-step experience-collection charge every rollout-capable GMI
+/// pays: one physics step plus one policy forward, both recorded. Shared
+/// by the sync trainer and the multi-tenant scheduler's training stepper
+/// so their rollouts cannot drift apart.
+pub fn rollout_charges(num_env: usize) -> [OpCharge; 2] {
+    [
+        OpCharge::recorded(OpKind::SimStep { num_env }),
+        OpCharge::recorded(OpKind::PolicyFwd { num_env }),
+    ]
+}
+
 /// PPO hyperparameters mirrored from python/compile/model.py (fixed into
 /// the artifacts; listed here for reporting only).
 pub const GAMMA: f64 = 0.99;

@@ -153,16 +153,7 @@ pub fn run_sync(
         let mut rollouts: Vec<super::RolloutOut> = Vec::with_capacity(n_roll);
         for i in 0..n_roll {
             let n_env = engine.num_env(roll_ids[i]);
-            engine.charge_steps(
-                cost,
-                roll_ids[i],
-                m as f64,
-                &[
-                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
-                    OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env }),
-                ],
-                0.0,
-            );
+            engine.charge_steps(cost, roll_ids[i], m as f64, &super::rollout_charges(n_env), 0.0);
             peak_mem = peak_mem.max(cost.mem_gib(n_env, m, true, colocated));
 
             let ro = if i < real_n {

@@ -77,6 +77,17 @@ struct GmiExecutor {
     /// Virtual seconds spent computing (charges), as opposed to waiting at
     /// barriers/transfers — the elastic controller's bottleneck signal.
     busy_s: f64,
+    /// Multi-tenant job tag ([`Engine::tag_job`]; None outside scheduler
+    /// runs — untagged executors attribute no cross-job overhead).
+    job: Option<usize>,
+    /// Co-residents owned by OTHER jobs (0 when untagged or single-tenant).
+    ext_co: usize,
+    /// Interference multiplier with only same-job co-residents present —
+    /// the counterfactual the cross-job attribution is measured against.
+    solo_interference: f64,
+    /// Accumulated compute seconds attributable to contention from other
+    /// jobs' co-resident GMIs (the cluster scheduler's interference bill).
+    xjob_s: f64,
 }
 
 /// The discrete-event execution engine one run loop drives.
@@ -93,6 +104,8 @@ pub struct Engine {
     execs: Vec<GmiExecutor>,
     util: UtilizationTracker,
     comm_s: f64,
+    /// Communication seconds attributed per job tag (multi-tenant runs).
+    job_comm: std::collections::BTreeMap<usize, f64>,
 }
 
 impl Engine {
@@ -103,6 +116,7 @@ impl Engine {
             execs: Vec::new(),
             util: UtilizationTracker::new(),
             comm_s: 0.0,
+            job_comm: std::collections::BTreeMap::new(),
         }
     }
 
@@ -116,15 +130,20 @@ impl Engine {
         }
         let spec = self.manager.gmi(gmi).with_context(|| format!("GMI {gmi} not registered"))?;
         let co = self.manager.co_resident(gmi);
+        let interference = spec.backend.interference(co, self.heaviness);
         self.execs.push(GmiExecutor {
             gmi,
             gpu: spec.gpu,
             num_env: spec.num_env,
             co_resident: co,
             share: eff_share(spec.backend, spec.sm_share, co),
-            interference: spec.backend.interference(co, self.heaviness),
+            interference,
             clock: Clock::zero(),
             busy_s: 0.0,
+            job: None,
+            ext_co: 0,
+            solo_interference: interference,
+            xjob_s: 0.0,
         });
         Ok(self.execs.len() - 1)
     }
@@ -192,6 +211,12 @@ impl Engine {
             None => e.clock.advance(dur),
         };
         e.busy_s += reps * op_sum;
+        // Cross-job interference bill: op_time scales linearly in the
+        // interference multiplier, so the share of this charge owed to
+        // other tenants' co-residents is exactly 1 - solo/actual.
+        if e.ext_co > 0 && e.interference > 0.0 {
+            e.xjob_s += reps * op_sum * (1.0 - e.solo_interference / e.interference);
+        }
         let (gpu, share) = (e.gpu, e.share);
         for (k, c) in ops.iter().enumerate() {
             if c.record {
@@ -218,6 +243,18 @@ impl Engine {
         }
     }
 
+    /// Count `dt` seconds of communication, attributing it to the job tag
+    /// of `carrier` (the first participant) when tagged — per-job comm
+    /// totals for multi-tenant runs, the global total always.
+    fn charge_comm(&mut self, carrier: Option<ExecutorId>, dt: f64) {
+        self.comm_s += dt;
+        if let Some(i) = carrier {
+            if let Some(j) = self.execs[i].job {
+                *self.job_comm.entry(j).or_insert(0.0) += dt;
+            }
+        }
+    }
+
     /// Barrier + collective: every member waits for the group maximum,
     /// then advances by `dt` (one LGR reduction). `dt` is counted once as
     /// communication time.
@@ -226,14 +263,14 @@ impl Engine {
         for &i in ids {
             self.execs[i].clock.merge_then_advance(barrier, dt);
         }
-        self.comm_s += dt;
+        self.charge_comm(ids.first().copied(), dt);
     }
 
     /// Point-to-point receive: `id` waits until `ready` (the sender's send
     /// timestamp or a feeder-group max), then pays `dt` of transfer time,
     /// counted as communication.
     pub fn recv(&mut self, id: ExecutorId, ready: Clock, dt: f64) -> Clock {
-        self.comm_s += dt;
+        self.charge_comm(Some(id), dt);
         self.execs[id].clock.merge_then_advance(ready, dt)
     }
 
@@ -243,7 +280,7 @@ impl Engine {
         for &i in ids {
             self.execs[i].clock.merge_then_advance(from, dt);
         }
-        self.comm_s += dt;
+        self.charge_comm(ids.first().copied(), dt);
     }
 
     // ---- fabric collectives (transfer plans as engine events) ----
@@ -273,7 +310,7 @@ impl Engine {
     ) -> Clock {
         let start = self.max_time(ids);
         let done = fabric.execute(plan, start);
-        self.comm_s += plan.total_s();
+        self.charge_comm(ids.first().copied(), plan.total_s());
         done
     }
 
@@ -297,7 +334,7 @@ impl Engine {
     ) -> Clock {
         let start = Clock(self.execs[id].clock.seconds().max(ready.seconds()));
         let done = fabric.execute(plan, start);
-        self.comm_s += plan.total_s();
+        self.charge_comm(Some(id), plan.total_s());
         self.execs[id].clock.merge_then_advance(done, 0.0);
         done
     }
@@ -312,7 +349,7 @@ impl Engine {
         plan: &Plan,
     ) -> Clock {
         let done = fabric.execute(plan, from);
-        self.comm_s += plan.total_s();
+        self.charge_comm(ids.first().copied(), plan.total_s());
         self.wait_group(ids, done);
         done
     }
@@ -357,6 +394,61 @@ impl Engine {
     /// Virtual seconds executor `id` spent computing (vs waiting).
     pub fn busy_seconds(&self, id: ExecutorId) -> f64 {
         self.execs[id].busy_s
+    }
+
+    // ---- multi-tenant job accounting ----
+
+    /// Tag an executor (and its GMI in the live manager) as owned by
+    /// `job`: subsequent charges attribute cross-job interference, comm
+    /// primitives bill the job's comm total, and the manager's removal
+    /// floor guard applies. Co-resident executors are refreshed so their
+    /// external-tenant counts see the new ownership.
+    pub fn tag_job(&mut self, id: ExecutorId, job: usize) -> Result<()> {
+        let (gmi, gpu) = (self.execs[id].gmi, self.execs[id].gpu);
+        // Manager first: a failure (retired executor, unknown GMI) must
+        // leave engine- and manager-side ownership consistent.
+        self.manager.tag_job(gmi, job)?;
+        self.execs[id].job = Some(job);
+        self.refresh_gpu(gpu);
+        Ok(())
+    }
+
+    /// Pass-through to [`GmiManager::set_job_floor`] on the live manager.
+    pub fn set_job_floor(&mut self, job: usize, min_total_share: f64) {
+        self.manager.set_job_floor(job, min_total_share);
+    }
+
+    /// Release a completed job's claim in the live manager (floor + tags);
+    /// executor tags stay for post-run accounting queries.
+    pub fn clear_job(&mut self, job: usize) {
+        self.manager.clear_job(job);
+    }
+
+    /// Job tag of an executor, if any.
+    pub fn job_of_executor(&self, id: ExecutorId) -> Option<usize> {
+        self.execs[id].job
+    }
+
+    /// Total busy seconds across every executor tagged to `job` (retired
+    /// executors included — service already rendered stays counted).
+    pub fn job_busy_s(&self, job: usize) -> f64 {
+        self.execs.iter().filter(|e| e.job == Some(job)).map(|e| e.busy_s).sum()
+    }
+
+    /// Communication seconds attributed to `job`'s executors.
+    pub fn job_comm_s(&self, job: usize) -> f64 {
+        self.job_comm.get(&job).copied().unwrap_or(0.0)
+    }
+
+    /// Compute seconds executor `id` lost to other tenants' co-resident
+    /// GMIs (the cross-job interference bill; 0 when untagged).
+    pub fn xjob_interference_s(&self, id: ExecutorId) -> f64 {
+        self.execs[id].xjob_s
+    }
+
+    /// Total cross-job interference seconds billed to `job`.
+    pub fn job_xjob_s(&self, job: usize) -> f64 {
+        self.execs.iter().filter(|e| e.job == Some(job)).map(|e| e.xjob_s).sum()
     }
 
     pub fn gmi_of(&self, id: ExecutorId) -> GmiId {
@@ -458,15 +550,31 @@ impl Engine {
         Ok(spec)
     }
 
-    /// Recompute an executor's share/interference from the live manager.
+    /// Recompute an executor's share/interference (and its external-tenant
+    /// co-resident count) from the live manager.
     fn refresh(&mut self, gmi: GmiId) {
         let Some(pos) = self.execs.iter().position(|e| e.gmi == gmi) else { return };
         let spec = self.manager.gmi(gmi).expect("refreshed GMI is registered");
         let co = self.manager.co_resident(gmi);
+        // Co-residents tagged to a DIFFERENT job; untagged peers count as
+        // same-tenant so single-tenant runs attribute nothing.
+        let ext = match self.execs[pos].job {
+            None => 0,
+            Some(j) => self
+                .manager
+                .all()
+                .filter(|o| o.gpu == spec.gpu && o.id != gmi)
+                .filter(|o| self.manager.job_of(o.id).is_some_and(|oj| oj != j))
+                .count(),
+        };
+        let backend = spec.backend;
+        let sm_share = spec.sm_share;
         let e = &mut self.execs[pos];
         e.co_resident = co;
-        e.share = eff_share(spec.backend, spec.sm_share, co);
-        e.interference = spec.backend.interference(co, self.heaviness);
+        e.share = eff_share(backend, sm_share, co);
+        e.interference = backend.interference(co, self.heaviness);
+        e.ext_co = ext;
+        e.solo_interference = backend.interference(co - ext, self.heaviness);
     }
 
     /// Refresh every still-registered executor on `gpu` (after a GMI was
@@ -721,6 +829,70 @@ mod tests {
         assert_eq!(e.co_resident(ex2), 0);
         // Its clock stayed monotone (frozen at the pre-removal charge).
         assert_eq!(e.clock(ex2).seconds(), end.seconds());
+    }
+
+    #[test]
+    fn job_tags_attribute_comm_and_cross_job_interference() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        e.tag_job(ids[0], 1).unwrap();
+        e.tag_job(ids[1], 2).unwrap();
+        // Both executors now see one external-tenant co-resident, so a
+        // charge splits into solo time + a cross-job interference bill.
+        let end = e.charge_steps(
+            &cost,
+            ids[0],
+            4.0,
+            &[OpCharge::recorded(OpKind::TrainGrad { samples: 1024 })],
+            0.0,
+        );
+        let interf = 1.0 + 0.03 * cost.heaviness; // MPS, 1 co-resident
+        let want_x = end.seconds() * (1.0 - 1.0 / interf);
+        assert!(e.xjob_interference_s(ids[0]) > 0.0);
+        assert!((e.xjob_interference_s(ids[0]) - want_x).abs() < 1e-12);
+        assert!((e.job_xjob_s(1) - want_x).abs() < 1e-12);
+        assert_eq!(e.xjob_interference_s(ids[1]), 0.0, "peer never charged");
+        assert_eq!(e.job_of_executor(ids[0]), Some(1));
+        assert!((e.job_busy_s(1) - end.seconds()).abs() < 1e-12);
+        assert_eq!(e.job_busy_s(2), 0.0);
+        // Comm primitives bill the carrier's job.
+        e.recv(ids[0], Clock(1.0), 0.25);
+        e.barrier_advance(&[ids[1]], 0.5);
+        assert!((e.job_comm_s(1) - 0.25).abs() < 1e-12);
+        assert!((e.job_comm_s(2) - 0.5).abs() < 1e-12);
+        assert!((e.comm_s() - 0.75).abs() < 1e-12);
+        // The live manager carries the ownership for the floor guard.
+        assert_eq!(e.manager().job_of(0), Some(1));
+        e.set_job_floor(1, 0.4);
+        assert!(e.remove_gmi(0).is_err(), "floor must block the removal");
+        e.clear_job(1);
+        e.remove_gmi(0).unwrap();
+    }
+
+    #[test]
+    fn same_job_co_residents_bill_no_cross_job_interference() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        e.tag_job(ids[0], 1).unwrap();
+        e.tag_job(ids[1], 1).unwrap();
+        e.charge_steps(
+            &cost,
+            ids[0],
+            4.0,
+            &[OpCharge::recorded(OpKind::TrainGrad { samples: 1024 })],
+            0.0,
+        );
+        assert_eq!(e.xjob_interference_s(ids[0]), 0.0);
+        assert_eq!(e.job_xjob_s(1), 0.0);
+        // Untagged runs (the single-tenant default) attribute nothing too.
+        let (mut u, uids, cost2) = setup(&[0.4, 0.4]);
+        u.charge_steps(
+            &cost2,
+            uids[0],
+            4.0,
+            &[OpCharge::recorded(OpKind::TrainGrad { samples: 1024 })],
+            0.0,
+        );
+        assert_eq!(u.xjob_interference_s(uids[0]), 0.0);
+        assert_eq!(u.job_comm_s(0), 0.0);
     }
 
     #[test]

@@ -1,12 +1,52 @@
 //! The global GMI manager (paper §3, Listing 1): registration, GPU
 //! attachment, communication groups, and resource validation.
+//!
+//! For multi-tenant clusters ([`sched`](crate::sched)) the manager also
+//! tracks which *job* owns each GMI ([`GmiManager::tag_job`]) and a
+//! per-job aggregate SM-share floor ([`GmiManager::set_job_floor`]):
+//! [`GmiManager::remove_gmi`] rejects a removal that would strand a job
+//! below its floor with a typed [`RemoveGmiError`], so preemption can
+//! never evict a tenant past its guaranteed minimum.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use anyhow::{bail, Result};
 
 use super::{GmiBackend, GmiId, GmiSpec, Role};
 use crate::cluster::Topology;
+
+/// Why a [`GmiManager::remove_gmi`] call was rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RemoveGmiError {
+    /// The GMI id is not registered.
+    NotRegistered(GmiId),
+    /// Removing the GMI would drop its job's aggregate SM share below the
+    /// floor registered via [`GmiManager::set_job_floor`].
+    BelowJobFloor {
+        gmi: GmiId,
+        job: usize,
+        /// The job's aggregate SM share after the removal would apply.
+        share_after: f64,
+        /// The registered minimum aggregate share.
+        floor: f64,
+    },
+}
+
+impl fmt::Display for RemoveGmiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RemoveGmiError::NotRegistered(id) => write!(f, "GMI {id} not registered"),
+            RemoveGmiError::BelowJobFloor { gmi, job, share_after, floor } => write!(
+                f,
+                "removing GMI {gmi} would drop job {job} to {share_after:.2} \
+                 aggregate SM share, below its {floor:.2} floor"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RemoveGmiError {}
 
 /// A communication group of GMIs (the paper's `get_group`): the unit over
 /// which collectives (gradient reduction) run.
@@ -28,11 +68,21 @@ pub struct GmiManager {
     topology: Topology,
     gmis: BTreeMap<GmiId, GmiSpec>,
     groups: BTreeMap<String, GmiGroup>,
+    /// Multi-tenant ownership: GMI -> job id (empty for single-tenant runs).
+    job_tags: BTreeMap<GmiId, usize>,
+    /// Per-job minimum aggregate SM share guarded by [`Self::remove_gmi`].
+    job_floors: BTreeMap<usize, f64>,
 }
 
 impl GmiManager {
     pub fn new(topology: Topology) -> Self {
-        GmiManager { topology, gmis: BTreeMap::new(), groups: BTreeMap::new() }
+        GmiManager {
+            topology,
+            gmis: BTreeMap::new(),
+            groups: BTreeMap::new(),
+            job_tags: BTreeMap::new(),
+            job_floors: BTreeMap::new(),
+        }
     }
 
     pub fn topology(&self) -> &Topology {
@@ -124,16 +174,83 @@ impl GmiManager {
     }
 
     /// Deregister a GMI, freeing its SM share and memory for co-residents
-    /// and dropping it from every communication group. Returns the removed
-    /// spec.
-    pub fn remove_gmi(&mut self, id: GmiId) -> Result<GmiSpec> {
-        let Some(spec) = self.gmis.remove(&id) else {
-            bail!("GMI {id} not registered");
+    /// and dropping it from every communication group and its job tag.
+    /// Returns the removed spec.
+    ///
+    /// When the GMI belongs to a job with a registered floor
+    /// ([`Self::set_job_floor`]), a removal that would drop the job's
+    /// aggregate SM share below that floor is rejected with
+    /// [`RemoveGmiError::BelowJobFloor`] — preemption can shrink a tenant
+    /// to its guaranteed minimum but never past it.
+    pub fn remove_gmi(&mut self, id: GmiId) -> Result<GmiSpec, RemoveGmiError> {
+        let Some(spec) = self.gmis.get(&id) else {
+            return Err(RemoveGmiError::NotRegistered(id));
         };
+        if let Some(&job) = self.job_tags.get(&id) {
+            if let Some(&floor) = self.job_floors.get(&job) {
+                let share_after = self.job_share(job) - spec.sm_share;
+                if share_after + 1e-9 < floor {
+                    return Err(RemoveGmiError::BelowJobFloor { gmi: id, job, share_after, floor });
+                }
+            }
+        }
+        let spec = self.gmis.remove(&id).expect("presence checked above");
+        self.job_tags.remove(&id);
         for group in self.groups.values_mut() {
             group.members.retain(|&m| m != id);
         }
         Ok(spec)
+    }
+
+    // ---- multi-tenant job ownership ----
+
+    /// Tag a registered GMI as owned by `job` (multi-tenant bookkeeping;
+    /// feeds [`Self::remove_gmi`]'s floor guard and the engine's cross-job
+    /// interference attribution).
+    pub fn tag_job(&mut self, id: GmiId, job: usize) -> Result<()> {
+        if !self.gmis.contains_key(&id) {
+            bail!("GMI {id} not registered");
+        }
+        self.job_tags.insert(id, job);
+        Ok(())
+    }
+
+    /// Register (or update) a job's minimum aggregate SM share. Removals
+    /// that would drop the job's tagged GMIs below it are rejected.
+    pub fn set_job_floor(&mut self, job: usize, min_total_share: f64) {
+        self.job_floors.insert(job, min_total_share);
+    }
+
+    /// Drop a job's floor and every tag pointing at it (its GMIs stay
+    /// registered) — the release path when a tenant completes.
+    pub fn clear_job(&mut self, job: usize) {
+        self.job_floors.remove(&job);
+        self.job_tags.retain(|_, &mut j| j != job);
+    }
+
+    /// The job a GMI is tagged to, if any.
+    pub fn job_of(&self, id: GmiId) -> Option<usize> {
+        self.job_tags.get(&id).copied()
+    }
+
+    /// Aggregate SM share currently held by `job`'s tagged GMIs.
+    pub fn job_share(&self, job: usize) -> f64 {
+        self.job_tags
+            .iter()
+            .filter(|&(_, &j)| j == job)
+            .filter_map(|(&id, _)| self.gmis.get(&id))
+            .map(|g| g.sm_share)
+            .sum()
+    }
+
+    /// Registered GMIs tagged to `job`, ascending by id.
+    pub fn job_members(&self, job: usize) -> Vec<GmiId> {
+        self.job_tags
+            .iter()
+            .filter(|&(_, &j)| j == job)
+            .map(|(&id, _)| id)
+            .filter(|id| self.gmis.contains_key(id))
+            .collect()
     }
 
     pub fn gmi(&self, id: GmiId) -> Option<&GmiSpec> {
@@ -308,6 +425,56 @@ mod tests {
         // The freed capacity is immediately reusable.
         m.add_gmi(spec(1, 0, 0.6, GmiBackend::Mps)).unwrap();
         assert!(m.remove_gmi(42).is_err());
+    }
+
+    #[test]
+    fn remove_below_job_floor_is_rejected_with_typed_error() {
+        // Regression: removal used to succeed silently regardless of the
+        // owning job's minimum; it must now return a typed error.
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 0.4, GmiBackend::Mps)).unwrap();
+        m.add_gmi(spec(1, 0, 0.4, GmiBackend::Mps)).unwrap();
+        m.tag_job(0, 7).unwrap();
+        m.tag_job(1, 7).unwrap();
+        m.set_job_floor(7, 0.6);
+        assert!((m.job_share(7) - 0.8).abs() < 1e-9);
+        assert_eq!(m.job_members(7), vec![0, 1]);
+        assert_eq!(m.job_of(1), Some(7));
+        // 0.8 - 0.4 = 0.4 < 0.6 floor: rejected, nothing removed.
+        match m.remove_gmi(1) {
+            Err(RemoveGmiError::BelowJobFloor { gmi, job, share_after, floor }) => {
+                assert_eq!((gmi, job), (1, 7));
+                assert!((share_after - 0.4).abs() < 1e-9);
+                assert!((floor - 0.6).abs() < 1e-9);
+            }
+            other => panic!("expected BelowJobFloor, got {other:?}"),
+        }
+        assert_eq!(m.len(), 2);
+        // Unknown ids keep their own typed error.
+        assert!(matches!(m.remove_gmi(42), Err(RemoveGmiError::NotRegistered(42))));
+        // Relaxing the floor (or clearing the job) makes removal legal,
+        // and removal drops the tag.
+        m.set_job_floor(7, 0.4);
+        m.remove_gmi(1).unwrap();
+        assert_eq!(m.job_of(1), None);
+        assert!((m.job_share(7) - 0.4).abs() < 1e-9);
+        // Now 0.4 - 0.4 = 0 < 0.4: the last member is protected...
+        assert!(m.remove_gmi(0).is_err());
+        // ...until the job releases its claim.
+        m.clear_job(7);
+        m.remove_gmi(0).unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn untagged_gmis_remove_freely() {
+        // Floors only guard tagged members: single-tenant behavior intact.
+        let mut m = GmiManager::new(Topology::dgx_a100(1));
+        m.add_gmi(spec(0, 0, 0.4, GmiBackend::Mps)).unwrap();
+        m.set_job_floor(7, 1.0);
+        m.remove_gmi(0).unwrap();
+        assert!(m.is_empty());
+        assert!(m.tag_job(3, 7).is_err(), "tagging unknown GMIs is rejected");
     }
 
     #[test]

@@ -18,7 +18,7 @@ mod manager;
 pub mod scheduler;
 
 pub use backend::{GmiBackend, MigProfile, MIG_PROFILES};
-pub use manager::{GmiGroup, GmiManager};
+pub use manager::{GmiGroup, GmiManager, RemoveGmiError};
 pub use scheduler::{one_job_per_gpu, pack_jobs, Job, Placement, Schedule};
 
 use crate::vtime::CostModel;

@@ -20,6 +20,10 @@
 //! ## Architecture: how a run is put together
 //!
 //! ```text
+//! scheduler       sched::{run_cluster, JobSpec}          multi-tenant co-scheduling:
+//!       │                                                admission, priority preemption,
+//!       │  admit / preempt / restore                     SLO pressure, restore, fairness
+//!       ▼
 //! orchestrators   drl::{serving, sync, a3c}, baselines,  what runs when
 //!                 serve::{gateway, autoscale}
 //!       │  charge(ops) / collectives / transfers
@@ -60,6 +64,16 @@
 //! [`engine::Engine::remove_gmi`]) to track the latency target — per-request
 //! percentiles land in [`metrics::LatencyStats`] on the run's
 //! [`metrics::RunMetrics`].
+//!
+//! The [`sched`] layer drops the one-job-per-cluster assumption: a queue
+//! of heterogeneous tenants ([`sched::JobSpec`] — training runs, serving
+//! fleets with SLO classes) co-executes on ONE shared engine. Executors
+//! carry job tags, so per-job busy/communication totals and cross-job
+//! interference seconds fall out of the same accounting, and the
+//! scheduler preempts (validated shrink + evict, floor-guarded by the
+//! manager's typed [`gmi::RemoveGmiError`]) and restores tenants as
+//! priorities and SLO pressure dictate — see `examples/shared_cluster.rs`
+//! for the preemption timeline against a statically partitioned baseline.
 
 pub mod baselines;
 pub mod channels;
@@ -73,6 +87,7 @@ pub mod gmi;
 pub mod mapping;
 pub mod metrics;
 pub mod runtime;
+pub mod sched;
 pub mod selection;
 pub mod serve;
 pub mod vtime;

@@ -35,6 +35,7 @@ use gmi_drl::mapping::{
 };
 use gmi_drl::metrics::{fmt_rate, latency_table, Table};
 use gmi_drl::runtime::ExecServer;
+use gmi_drl::sched::{corun_scenario, run_cluster, sched_table, SchedConfig};
 use gmi_drl::selection;
 use gmi_drl::serve::{
     generate_trace, run_gateway, scale_table, AutoscaleConfig, GatewayConfig, TrafficPattern,
@@ -146,6 +147,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "train-sync" => cmd_train_sync(&args),
         "train-async" => cmd_train_async(&args),
+        "multi" => cmd_multi(&args),
         "search" => cmd_search(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
@@ -166,6 +168,8 @@ COMMANDS:
                open-loop SLO gateway with --trace <pattern>
   train-sync   synchronized PPO training with layout-aware gradient reduction
   train-async  asynchronized A3C training with channel-based experience sharing
+  multi        multi-tenant co-run: training + a diurnal SLO serving fleet
+               preemptively co-scheduled on one shared cluster
   search       workload-aware GMI selection (Algorithm 2)
 
 COMMON OPTIONS:
@@ -205,6 +209,13 @@ OPEN-LOOP SERVING (serve --trace ...):
   --window-ms MS              autoscaler evaluation window (default 50)
   --max-per-gpu K             fleet headroom per GPU (default 3x initial)
   --period S                  diurnal period (default duration/2)
+
+MULTI-TENANT CO-RUN (multi):
+  --duration S                length of the serving day (default 1.0)
+  --quantum-ms MS             scheduling round length (default 20)
+  --static                    static partitioning baseline: tenants pinned
+                              to disjoint GPU halves, no preemption
+  --seed N                    trace seed (default 7)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -477,6 +488,44 @@ fn cmd_train_async(args: &Args) -> Result<()> {
     if args.flag("links") {
         r.metrics.print_links();
     }
+    Ok(())
+}
+
+/// Multi-tenant co-run: preemptively co-schedule a training tenant and a
+/// diurnal SLO serving fleet on one shared cluster (`--static` runs the
+/// pinned static-partitioning baseline instead).
+fn cmd_multi(args: &Args) -> Result<()> {
+    let bench = bench_info(&args.str("bench", "AT"), false)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 2)?;
+    anyhow::ensure!(gpus >= 2 && gpus % 2 == 0, "multi needs an even GPU count >= 2");
+    let topo = Topology::dgx_a100(gpus);
+    let duration: f64 = args.get("duration", 1.0)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let partitioned = args.flag("static");
+    let cfg = SchedConfig {
+        quantum_s: args.get("quantum-ms", 20.0)? / 1e3,
+        preemptive: !partitioned,
+        ..SchedConfig::default()
+    };
+    let jobs = corun_scenario(&topo, &bench, &cost, duration, seed, partitioned);
+    println!(
+        "multi {} on {gpus} GPUs [{}]: {} tenants over a {duration:.2}s serving day\n",
+        bench.abbr,
+        if partitioned { "static partition" } else { "preemptive co-schedule" },
+        jobs.len(),
+    );
+    let r = run_cluster(&topo, &bench, &cost, &jobs, &cfg)?;
+    r.job_table().print();
+    println!("\nscheduling timeline:");
+    sched_table(&r.events).print();
+    println!(
+        "\nmakespan {:.2}s | cluster util {:.1}% | fairness (Jain) {:.3} | peak GPU share {:.2}",
+        r.makespan_s,
+        100.0 * r.cluster_utilization,
+        r.fairness,
+        r.peak_gpu_share,
+    );
     Ok(())
 }
 

@@ -205,4 +205,84 @@ mod tests {
         let want = 2.0 * 7.0 / 8.0 * p.mp_bytes;
         assert!((tcg.comm_bytes - want).abs() < 1e-6);
     }
+
+    #[test]
+    fn sync_throughput_monotone_decreasing_in_payload() {
+        // Eq. (3): growing the model payload can only slow TCG_EX down —
+        // comm bytes rise with Mp, and throughput falls accordingly.
+        let mut prev_top = f64::INFINITY;
+        let mut prev_com = 0.0;
+        for mp in [1e5, 1e6, 1e7, 1e8] {
+            let mut p = profile();
+            p.mp_bytes = mp;
+            let c = sync_cost(&p, MappingTemplate::TaskColocated);
+            assert!(c.throughput < prev_top, "payload {mp}: top {} rose", c.throughput);
+            assert!(c.comm_bytes > prev_com, "payload {mp}: comm did not grow");
+            prev_top = c.throughput;
+            prev_com = c.comm_bytes;
+        }
+    }
+
+    #[test]
+    fn sync_throughput_monotone_decreasing_in_gmi_count() {
+        // More reducing GMIs = more gradient traffic (2 (n-1)/n Mp) and
+        // never a higher per-iteration rate for the same profile.
+        let mut prev = f64::INFINITY;
+        for n in [2usize, 4, 8, 32, 128] {
+            let mut p = profile();
+            p.n = n;
+            let c = sync_cost(&p, MappingTemplate::TaskColocated);
+            assert!(c.throughput <= prev + 1e-12, "n={n}: throughput rose");
+            prev = c.throughput;
+        }
+    }
+
+    #[test]
+    fn sync_throughput_monotone_increasing_in_bandwidth() {
+        let mut prev = 0.0;
+        for bw in [1e8, 1e9, 1e10, 1e11] {
+            let mut p = profile();
+            p.bw = bw;
+            let c = sync_cost(&p, MappingTemplate::TaskColocated);
+            assert!(c.throughput > prev, "bw {bw}: throughput did not improve");
+            prev = c.throughput;
+        }
+    }
+
+    #[test]
+    fn dedicated_resource_size_monotone_in_sharing_ratios() {
+        // Tables 4/5: alpha (agents shared per simulator) and beta
+        // (trainers shared) scale the dedicated templates' time-weighted
+        // resource size; colocated templates are flat in both.
+        let mut prev_serving = 0.0;
+        let mut prev_sync = 0.0;
+        for scale in [0.1, 0.3, 0.6, 1.0] {
+            let mut p = profile();
+            p.alpha = 0.2 * scale / 0.1;
+            p.beta = 0.3 * scale / 0.1;
+            let serving = serving_cost(&p, MappingTemplate::TaskDedicated);
+            let sync = sync_cost(&p, MappingTemplate::TaskDedicated);
+            assert!(serving.resource_size > prev_serving, "alpha scale {scale}");
+            assert!(sync.resource_size > prev_sync, "beta scale {scale}");
+            prev_serving = serving.resource_size;
+            prev_sync = sync.resource_size;
+
+            let tcg = serving_cost(&p, MappingTemplate::TaskColocated);
+            let flat = serving_cost(&profile(), MappingTemplate::TaskColocated);
+            assert!((tcg.resource_size - flat.resource_size).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn serving_tdg_comm_scales_with_vector_sizes() {
+        // Table 4's COM term is 2S + A + W: doubling the observation
+        // vector doubles the dominant term; the colocated template stays
+        // at zero no matter the sizes.
+        let mut p = profile();
+        let base = serving_cost(&p, MappingTemplate::TaskDedicated).comm_bytes;
+        p.s_bytes *= 2.0;
+        let doubled = serving_cost(&p, MappingTemplate::TaskDedicated).comm_bytes;
+        assert!((doubled - base - p.s_bytes).abs() < 1e-9, "COM must grow by 2*dS = S'");
+        assert_eq!(serving_cost(&p, MappingTemplate::TaskColocated).comm_bytes, 0.0);
+    }
 }

@@ -45,6 +45,23 @@ pub struct LatencyStats {
     pub max_queue_depth: usize,
 }
 
+/// Jain's fairness index over non-negative per-tenant service totals:
+/// 1.0 = perfectly even service, 1/n = one tenant got everything. The
+/// cluster scheduler reports it over per-job busy GPU-seconds. Empty (or
+/// all-zero) input reports 1.0 — nothing was served unfairly.
+pub fn jain_index(service: &[f64]) -> f64 {
+    let n = service.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let s: f64 = service.iter().sum();
+    let s2: f64 = service.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (n as f64 * s2)
+}
+
 /// Nearest-rank percentile of an ascending-sorted slice, `q` in [0, 1].
 /// Empty input reports 0.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
@@ -254,6 +271,20 @@ mod tests {
         u.record(0, 0.2, 10.0, 10.0);
         u.record(1, 0.6, 10.0, 10.0);
         assert!((u.mean_utilization() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jain_index_ranges() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // One tenant got everything: 1/n.
+        assert!((jain_index(&[5.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // Mild skew sits strictly between.
+        let j = jain_index(&[2.0, 1.0]);
+        assert!(j > 0.5 && j < 1.0, "jain {j}");
+        // Scale-invariant.
+        assert!((jain_index(&[2.0, 1.0]) - jain_index(&[20.0, 10.0])).abs() < 1e-12);
     }
 
     #[test]

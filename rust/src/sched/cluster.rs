@@ -1,0 +1,1171 @@
+//! The multi-tenant cluster scheduler: preemptive co-scheduling of
+//! heterogeneous DRL jobs on one shared [`Topology`].
+//!
+//! One [`run_cluster`] call owns a single shared [`Engine`] + [`Fabric`]
+//! pair and advances cluster time in fixed scheduling rounds
+//! ([`SchedConfig::quantum_s`]). Each round, in order:
+//!
+//! 1. **SLO decisions** — a serving tenant whose previous round's
+//!    dispatched p99 violated its SLO grows (a new member GMI, preempting
+//!    lower-priority tenants if placement needs room); one comfortably
+//!    under `restore_frac x SLO` retires its most recently grown member.
+//! 2. **Admissions** — arrived queued jobs admit in priority order; when
+//!    placement fails, lower-priority tenants are first *shrunk* to their
+//!    per-member `min_share` (validated resizes) and then *evicted* one
+//!    member at a time down to their `min_gmis` floor — the manager's
+//!    [`RemoveGmiError::BelowJobFloor`](crate::gmi::RemoveGmiError) guard
+//!    makes over-eviction impossible by construction.
+//! 3. **Restores** — when no serving tenant is under SLO pressure,
+//!    preempted tenants get one action per round back toward their
+//!    admitted provisioning: re-add an evicted member, else regrow
+//!    shrunken members into free share.
+//! 4. **Steps** — serving tenants batch and dispatch the round's arrivals
+//!    through the shared dispatch cost model
+//!    ([`serve::execute_dispatch`](crate::serve::execute_dispatch));
+//!    training tenants run whole sync iterations until their executor
+//!    frontier passes the round boundary.
+//!
+//! Every placement, resize, and removal goes through the engine's live
+//! [`GmiManager`](crate::gmi::GmiManager) validation, so no arrival
+//! sequence can oversubscribe a GPU's SMs or memory — `run_cluster`
+//! additionally tracks the worst per-GPU share/memory it ever observed
+//! ([`ClusterRunResult::peak_gpu_share`]) so the property suite can check
+//! exactly that. Per-job service (busy seconds, communication seconds,
+//! cross-job interference seconds) comes from the engine's job tagging;
+//! cluster fairness is Jain's index over per-job busy GPU-seconds.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
+
+use anyhow::Result;
+
+use super::job::{JobId, JobKind, JobSpec};
+use crate::cluster::Topology;
+use crate::config::BenchInfo;
+use crate::drl::rollout_charges;
+use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
+use crate::gmi::{GmiBackend, GmiId, GmiSpec};
+use crate::metrics::{jain_index, percentile, LatencyStats, RunMetrics, Table};
+use crate::serve::{execute_dispatch, least_loaded, Request};
+use crate::vtime::{CostModel, OpKind};
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Scheduling round length (virtual seconds): the cadence of
+    /// admission, preemption, SLO evaluation, and restore decisions.
+    pub quantum_s: f64,
+    /// Preemptive elasticity on (the scheduler) vs off (the static
+    /// baseline: jobs keep whatever they were admitted with).
+    pub preemptive: bool,
+    /// A serving round's p99 below `restore_frac x SLO` counts as
+    /// pressure-off: grown members retire and preempted tenants restore.
+    /// Between the two thresholds nothing moves (hysteresis).
+    pub restore_frac: f64,
+    /// Hard cap on scheduling rounds (runaway guard).
+    pub max_rounds: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { quantum_s: 0.02, preemptive: true, restore_frac: 0.5, max_rounds: 1_000_000 }
+    }
+}
+
+/// What one timeline entry records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedAction {
+    /// Job placed and started.
+    Admit,
+    /// Job arrived but could not be placed (logged once; retried every
+    /// round).
+    Queue,
+    /// A lower-priority tenant's members were shrunk to their share floor.
+    Preempt,
+    /// A lower-priority tenant lost a member GMI (down to its count floor).
+    Evict,
+    /// A serving tenant under SLO pressure gained a member.
+    Grow,
+    /// A serving tenant retired a grown member (pressure off).
+    Shrink,
+    /// A preempted tenant got provisioning back (re-add or regrow).
+    Restore,
+    /// Job finished and released its GMIs.
+    Complete,
+}
+
+impl std::fmt::Display for SchedAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SchedAction::Admit => "admit",
+            SchedAction::Queue => "queue",
+            SchedAction::Preempt => "preempt",
+            SchedAction::Evict => "evict",
+            SchedAction::Grow => "grow",
+            SchedAction::Shrink => "shrink",
+            SchedAction::Restore => "restore",
+            SchedAction::Complete => "complete",
+        })
+    }
+}
+
+/// One entry of the scheduling timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedEvent {
+    /// Cluster time the decision fired at (a round boundary).
+    pub t_s: f64,
+    pub job: JobId,
+    pub action: SchedAction,
+    /// The job's member count after the action.
+    pub members: usize,
+    /// The job's aggregate SM share after the action.
+    pub share: f64,
+    pub detail: String,
+}
+
+/// Render a scheduling timeline (the preemption timeline the shared
+/// cluster example prints).
+pub fn sched_table(events: &[SchedEvent]) -> Table {
+    let mut t = Table::new(&["t (s)", "job", "action", "members", "share", "detail"]);
+    for e in events {
+        t.row(vec![
+            format!("{:.3}", e.t_s),
+            e.job.to_string(),
+            e.action.to_string(),
+            e.members.to_string(),
+            format!("{:.2}", e.share),
+            e.detail.clone(),
+        ]);
+    }
+    t
+}
+
+/// Per-job outcome of a cluster run.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: JobId,
+    pub name: String,
+    pub priority: u8,
+    /// "training" or "serving".
+    pub kind: &'static str,
+    /// Per-job throughput/latency view; `latency` is set for serving
+    /// tenants, `steps_per_sec` is env-steps/s (training) or served
+    /// requests/s (serving) over the job's own admitted-to-completed span.
+    pub metrics: RunMetrics,
+    pub admitted_s: f64,
+    pub completed_s: f64,
+    /// Queue wait: admission minus arrival.
+    pub wait_s: f64,
+    /// Preemption actions suffered (shrinks + evictions).
+    pub preemptions: usize,
+    /// Restore actions received.
+    pub restores: usize,
+    /// Busy GPU-seconds across the job's executors (its service total).
+    pub busy_s: f64,
+    /// Compute seconds lost to other tenants' co-resident GMIs.
+    pub xjob_interference_s: f64,
+    /// Aggregate SM share held at completion (restored jobs end at their
+    /// admitted provisioning).
+    pub share_at_completion: f64,
+    pub gmis_at_completion: usize,
+}
+
+/// Everything one [`run_cluster`] call produced.
+#[derive(Debug, Clone)]
+pub struct ClusterRunResult {
+    /// One report per input job, in input order.
+    pub jobs: Vec<JobReport>,
+    /// The scheduling timeline, in decision order.
+    pub events: Vec<SchedEvent>,
+    /// Latest virtual time any executor reached.
+    pub makespan_s: f64,
+    /// Engine-wide mean GPU utilization.
+    pub cluster_utilization: f64,
+    /// Jain's index over per-job busy GPU-seconds.
+    pub fairness: f64,
+    /// Worst per-GPU SM-share sum ever observed at a round boundary
+    /// (must stay <= 1: the no-oversubscription invariant).
+    pub peak_gpu_share: f64,
+    /// Worst per-GPU memory sum ever observed (GiB).
+    pub peak_gpu_mem_gib: f64,
+}
+
+impl ClusterRunResult {
+    pub fn job(&self, id: JobId) -> Option<&JobReport> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    /// Render the per-job outcome table.
+    pub fn job_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "job",
+            "kind",
+            "prio",
+            "wait (ms)",
+            "span (s)",
+            "rate (/s)",
+            "p99 (ms)",
+            "preempt",
+            "restore",
+            "xjob (ms)",
+        ]);
+        for j in &self.jobs {
+            t.row(vec![
+                format!("{} ({})", j.id, j.name),
+                j.kind.to_string(),
+                j.priority.to_string(),
+                format!("{:.1}", j.wait_s * 1e3),
+                format!("{:.3}", j.metrics.span_s),
+                format!("{:.0}", j.metrics.steps_per_sec),
+                j.metrics
+                    .latency
+                    .as_ref()
+                    .map(|l| format!("{:.2}", l.p99_s * 1e3))
+                    .unwrap_or_else(|| "-".into()),
+                j.preemptions.to_string(),
+                j.restores.to_string(),
+                format!("{:.1}", j.xjob_interference_s * 1e3),
+            ]);
+        }
+        t
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Queued,
+    Running,
+    Done,
+}
+
+/// Per-tenant runtime bookkeeping.
+struct Tenant {
+    spec: JobSpec,
+    state: State,
+    /// Active member GMIs and their executors (parallel vectors).
+    gmis: Vec<GmiId>,
+    execs: Vec<ExecutorId>,
+    admitted_s: f64,
+    completed_s: f64,
+    queued_logged: bool,
+    preemptions: usize,
+    restores: usize,
+    share_at_completion: f64,
+    gmis_at_completion: usize,
+    // serving bookkeeping
+    next_req: usize,
+    queue: VecDeque<usize>,
+    latencies: Vec<f64>,
+    window_lat: Vec<f64>,
+    last_p99: Option<f64>,
+    grown: Vec<GmiId>,
+    batch_sizes: Vec<usize>,
+    inflight: BinaryHeap<Reverse<u64>>,
+    max_queue_depth: usize,
+    served: usize,
+    // training bookkeeping
+    iters_done: usize,
+    env_steps: f64,
+}
+
+impl Tenant {
+    fn new(spec: JobSpec) -> Self {
+        Tenant {
+            spec,
+            state: State::Queued,
+            gmis: Vec::new(),
+            execs: Vec::new(),
+            admitted_s: 0.0,
+            completed_s: 0.0,
+            queued_logged: false,
+            preemptions: 0,
+            restores: 0,
+            share_at_completion: 0.0,
+            gmis_at_completion: 0,
+            next_req: 0,
+            queue: VecDeque::new(),
+            latencies: Vec::new(),
+            window_lat: Vec::new(),
+            last_p99: None,
+            grown: Vec::new(),
+            batch_sizes: Vec::new(),
+            inflight: BinaryHeap::new(),
+            max_queue_depth: 0,
+            served: 0,
+            iters_done: 0,
+            env_steps: 0.0,
+        }
+    }
+}
+
+struct Cluster<'a> {
+    bench: &'a BenchInfo,
+    cost: &'a CostModel,
+    cfg: &'a SchedConfig,
+    engine: Engine,
+    fabric: Fabric,
+    tenants: Vec<Tenant>,
+    events: Vec<SchedEvent>,
+    next_gmi: GmiId,
+    peak_gpu_share: f64,
+    peak_gpu_mem: f64,
+}
+
+/// Admit, co-schedule, and run `jobs` to completion on one shared
+/// cluster. Deterministic: the same inputs reproduce the identical
+/// timeline and bit-identical per-job metrics.
+pub fn run_cluster(
+    topo: &Topology,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    jobs: &[JobSpec],
+    cfg: &SchedConfig,
+) -> Result<ClusterRunResult> {
+    anyhow::ensure!(cfg.quantum_s > 0.0, "scheduling quantum must be positive");
+    anyhow::ensure!(!jobs.is_empty(), "no jobs submitted");
+    let mut seen = BTreeSet::new();
+    for j in jobs {
+        j.validate(topo)?;
+        anyhow::ensure!(seen.insert(j.id), "duplicate job id {}", j.id);
+    }
+
+    let manager = crate::gmi::GmiManager::new(topo.clone());
+    let mut cluster = Cluster {
+        bench,
+        cost,
+        cfg,
+        engine: Engine::new(&manager, cost),
+        fabric: Fabric::single_node(topo.clone()),
+        tenants: jobs.iter().cloned().map(Tenant::new).collect(),
+        events: Vec::new(),
+        next_gmi: 0,
+        peak_gpu_share: 0.0,
+        peak_gpu_mem: 0.0,
+    };
+    cluster.run()?;
+    Ok(cluster.into_result())
+}
+
+impl Cluster<'_> {
+    // ---- the round loop ----
+
+    fn run(&mut self) -> Result<()> {
+        let q = self.cfg.quantum_s;
+        let mut round = 0usize;
+        while self.tenants.iter().any(|t| t.state != State::Done) {
+            anyhow::ensure!(
+                round < self.cfg.max_rounds,
+                "scheduler exceeded {} rounds (runaway guard)",
+                self.cfg.max_rounds
+            );
+            let now = round as f64 * q;
+            // Computed the same way the next round's `now` will be, so
+            // round boundaries are bit-identical across rounds.
+            let round_end = (round + 1) as f64 * q;
+            if self.cfg.preemptive {
+                self.slo_decisions(now);
+            }
+            self.admissions(now);
+            if self.cfg.preemptive {
+                self.restore_pass(now);
+            }
+            for idx in self.order_running(true) {
+                self.step_serving(idx, round_end);
+            }
+            for idx in self.order_running(false) {
+                self.step_training(idx, round_end);
+            }
+            // Sample occupancy peaks BEFORE completions release GMIs, so a
+            // tenant admitted and finished within one round is observed.
+            self.track_peaks();
+            self.completions(now, round_end);
+            round += 1;
+        }
+        Ok(())
+    }
+
+    /// Running tenants of one kind, priority-descending then id-ascending.
+    fn order_running(&self, serving: bool) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.tenants.len())
+            .filter(|&i| {
+                self.tenants[i].state == State::Running
+                    && self.tenants[i].spec.is_serving() == serving
+            })
+            .collect();
+        v.sort_by_key(|&i| (Reverse(self.tenants[i].spec.priority), self.tenants[i].spec.id));
+        v
+    }
+
+    fn push_event(&mut self, t_s: f64, idx: usize, action: SchedAction, detail: String) {
+        let job = self.tenants[idx].spec.id;
+        self.events.push(SchedEvent {
+            t_s,
+            job,
+            action,
+            members: self.tenants[idx].gmis.len(),
+            share: self.engine.manager().job_share(job),
+            detail,
+        });
+    }
+
+    // ---- capacity / placement ----
+
+    /// Used (SM share, memory GiB) of one GPU per the engine's live
+    /// manager — the one occupancy aggregation placement and peak
+    /// tracking both read.
+    fn gpu_used(&self, gpu: usize) -> (f64, f64) {
+        let mut sm = 0.0f64;
+        let mut mem = 0.0f64;
+        for g in self.engine.manager().all().filter(|g| g.gpu == gpu) {
+            sm += g.sm_share;
+            mem += g.mem_gib;
+        }
+        (sm, mem)
+    }
+
+    /// Free (SM share, memory GiB) of one GPU.
+    fn gpu_free(&self, gpu: usize) -> (f64, f64) {
+        let (sm, mem) = self.gpu_used(gpu);
+        let cap_mem = self.engine.topology().gpus[gpu].mem_gib;
+        ((1.0 - sm).max(0.0), (cap_mem - mem).max(0.0))
+    }
+
+    /// Place ONE member for tenant `idx` at its spec share on the allowed
+    /// GPU with the most free share (ties to the lowest index), register
+    /// its executor, tag its job, and advance its clock to `now`.
+    fn place_one(&mut self, idx: usize, now: f64) -> Option<GmiId> {
+        let (share, mem, role, num_env, job, allowed) = {
+            let s = &self.tenants[idx].spec;
+            (
+                s.share,
+                s.mem_gib,
+                s.role(),
+                s.member_num_env(),
+                s.id,
+                s.allowed_gpus(self.engine.topology()),
+            )
+        };
+        let mut best: Option<(usize, f64)> = None;
+        for &g in &allowed {
+            let (free_sm, free_mem) = self.gpu_free(g);
+            if free_sm + 1e-9 >= share && free_mem + 1e-9 >= mem {
+                if best.map_or(true, |(_, f)| free_sm > f + 1e-12) {
+                    best = Some((g, free_sm));
+                }
+            }
+        }
+        let (gpu, _) = best?;
+        let id = self.next_gmi;
+        let spec = GmiSpec {
+            id,
+            gpu,
+            sm_share: share,
+            mem_gib: mem,
+            backend: GmiBackend::Mps,
+            role,
+            num_env,
+        };
+        let ex = self.engine.add_gmi(spec).ok()?;
+        self.next_gmi += 1;
+        self.engine.tag_job(ex, job).expect("member registered above");
+        let lag = now - self.engine.clock(ex).seconds();
+        if lag > 0.0 {
+            self.engine.pay(ex, lag);
+        }
+        let t = &mut self.tenants[idx];
+        t.gmis.push(id);
+        t.execs.push(ex);
+        Some(id)
+    }
+
+    /// Place tenant `idx`'s full initial member set, or roll back and
+    /// report failure.
+    fn try_place_initial(&mut self, idx: usize, now: f64) -> bool {
+        let want = self.tenants[idx].spec.initial_gmis;
+        let mut placed = Vec::new();
+        for _ in 0..want {
+            match self.place_one(idx, now) {
+                Some(g) => placed.push(g),
+                None => {
+                    for g in placed.into_iter().rev() {
+                        let t = &mut self.tenants[idx];
+                        t.gmis.pop();
+                        t.execs.pop();
+                        let _ = self.engine.remove_gmi(g);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    // ---- preemption ----
+
+    /// Shrink every running tenant of lower priority to its per-member
+    /// share floor (validated resizes). Returns whether anything moved.
+    fn shrink_lower(&mut self, priority: u8, now: f64) -> bool {
+        let mut order: Vec<usize> = (0..self.tenants.len())
+            .filter(|&i| {
+                self.tenants[i].state == State::Running
+                    && self.tenants[i].spec.priority < priority
+            })
+            .collect();
+        order.sort_by_key(|&i| (self.tenants[i].spec.priority, self.tenants[i].spec.id));
+        let mut any = false;
+        for i in order {
+            let floor = self.tenants[i].spec.min_share;
+            let members = self.tenants[i].gmis.clone();
+            let mut changed = 0usize;
+            for gmi in members {
+                let cur = match self.engine.manager().gmi(gmi) {
+                    Some(s) => s.sm_share,
+                    None => continue,
+                };
+                if cur > floor + 1e-9 && self.engine.resize_share(gmi, floor).is_ok() {
+                    changed += 1;
+                }
+            }
+            if changed > 0 {
+                self.tenants[i].preemptions += 1;
+                self.push_event(
+                    now,
+                    i,
+                    SchedAction::Preempt,
+                    format!("shrunk {changed} member(s) to {floor:.2}"),
+                );
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Evict one member GMI from the lowest-priority tenant below
+    /// `priority` that still sits above its member-count floor. Returns
+    /// whether an eviction happened.
+    fn evict_one_lower(&mut self, priority: u8, now: f64) -> bool {
+        let mut cand: Option<usize> = None;
+        for i in 0..self.tenants.len() {
+            let t = &self.tenants[i];
+            if t.state != State::Running
+                || t.spec.priority >= priority
+                || t.gmis.len() <= t.spec.min_gmis
+            {
+                continue;
+            }
+            let better = match cand {
+                None => true,
+                Some(c) => {
+                    (t.spec.priority, t.spec.id)
+                        < (self.tenants[c].spec.priority, self.tenants[c].spec.id)
+                }
+            };
+            if better {
+                cand = Some(i);
+            }
+        }
+        let Some(i) = cand else { return false };
+        let gmi = *self.tenants[i].gmis.last().expect("above count floor");
+        if self.engine.remove_gmi(gmi).is_err() {
+            return false;
+        }
+        let t = &mut self.tenants[i];
+        t.gmis.pop();
+        t.execs.pop();
+        t.grown.retain(|&g| g != gmi);
+        t.preemptions += 1;
+        self.push_event(now, i, SchedAction::Evict, format!("evicted member GMI {gmi}"));
+        true
+    }
+
+    // ---- admission ----
+
+    fn admissions(&mut self, now: f64) {
+        let mut order: Vec<usize> = (0..self.tenants.len())
+            .filter(|&i| {
+                self.tenants[i].state == State::Queued
+                    && self.tenants[i].spec.arrival_s <= now + 1e-12
+            })
+            .collect();
+        order.sort_by(|&a, &b| {
+            let (ta, tb) = (&self.tenants[a].spec, &self.tenants[b].spec);
+            tb.priority
+                .cmp(&ta.priority)
+                .then(ta.arrival_s.total_cmp(&tb.arrival_s))
+                .then(ta.id.cmp(&tb.id))
+        });
+        for idx in order {
+            self.try_admit(idx, now);
+        }
+    }
+
+    fn try_admit(&mut self, idx: usize, now: f64) {
+        let prio = self.tenants[idx].spec.priority;
+        let mut ok = self.try_place_initial(idx, now);
+        if !ok && self.cfg.preemptive {
+            self.shrink_lower(prio, now);
+            ok = self.try_place_initial(idx, now);
+            while !ok && self.evict_one_lower(prio, now) {
+                ok = self.try_place_initial(idx, now);
+            }
+        }
+        if ok {
+            let (job, floor) = {
+                let t = &mut self.tenants[idx];
+                t.state = State::Running;
+                t.admitted_s = now;
+                (t.spec.id, t.spec.floor_share())
+            };
+            self.engine.set_job_floor(job, floor);
+            let n = self.tenants[idx].gmis.len();
+            self.push_event(now, idx, SchedAction::Admit, format!("placed {n} member(s)"));
+        } else if !self.tenants[idx].queued_logged {
+            self.tenants[idx].queued_logged = true;
+            self.push_event(now, idx, SchedAction::Queue, "insufficient capacity".into());
+        }
+    }
+
+    // ---- SLO pressure / elasticity ----
+
+    fn slo_decisions(&mut self, now: f64) {
+        for idx in self.order_running(true) {
+            let slo = match &self.tenants[idx].spec.kind {
+                JobKind::Serving { slo_p99_s, .. } => *slo_p99_s,
+                _ => continue,
+            };
+            let Some(p99) = self.tenants[idx].last_p99 else { continue };
+            if p99 > slo {
+                self.grow_serving(idx, now, p99);
+            } else if p99 < self.cfg.restore_frac * slo {
+                self.shrink_grown(idx, now, p99);
+            }
+        }
+    }
+
+    fn grow_serving(&mut self, idx: usize, now: f64, p99: f64) {
+        let (prio, max_gmis) =
+            (self.tenants[idx].spec.priority, self.tenants[idx].spec.max_gmis);
+        if self.tenants[idx].gmis.len() >= max_gmis {
+            return;
+        }
+        let mut placed = self.place_one(idx, now);
+        if placed.is_none() {
+            self.shrink_lower(prio, now);
+            placed = self.place_one(idx, now);
+            while placed.is_none() && self.evict_one_lower(prio, now) {
+                placed = self.place_one(idx, now);
+            }
+        }
+        if let Some(g) = placed {
+            self.tenants[idx].grown.push(g);
+            self.push_event(
+                now,
+                idx,
+                SchedAction::Grow,
+                format!("p99 {:.1}ms over SLO: added member GMI {g}", p99 * 1e3),
+            );
+        }
+    }
+
+    fn shrink_grown(&mut self, idx: usize, now: f64, p99: f64) {
+        let Some(gmi) = self.tenants[idx].grown.pop() else { return };
+        if self.engine.remove_gmi(gmi).is_err() {
+            self.tenants[idx].grown.push(gmi);
+            return;
+        }
+        let t = &mut self.tenants[idx];
+        if let Some(pos) = t.gmis.iter().position(|&g| g == gmi) {
+            t.gmis.remove(pos);
+            t.execs.remove(pos);
+        }
+        self.push_event(
+            now,
+            idx,
+            SchedAction::Shrink,
+            format!("p99 {:.1}ms comfortable: retired grown GMI {gmi}", p99 * 1e3),
+        );
+    }
+
+    /// When no serving tenant is under SLO pressure, give each
+    /// below-target tenant one step back toward its admitted
+    /// provisioning: re-add an evicted member, else regrow shrunken
+    /// members into free share.
+    fn restore_pass(&mut self, now: f64) {
+        let pressure = self.tenants.iter().any(|t| {
+            t.state == State::Running
+                && match (&t.spec.kind, t.last_p99) {
+                    (JobKind::Serving { slo_p99_s, .. }, Some(p)) => p > *slo_p99_s,
+                    _ => false,
+                }
+        });
+        if pressure {
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.tenants.len())
+            .filter(|&i| self.tenants[i].state == State::Running)
+            .collect();
+        order.sort_by_key(|&i| (Reverse(self.tenants[i].spec.priority), self.tenants[i].spec.id));
+        for idx in order {
+            let (initial, share) =
+                (self.tenants[idx].spec.initial_gmis, self.tenants[idx].spec.share);
+            if self.tenants[idx].gmis.len() < initial {
+                if let Some(g) = self.place_one(idx, now) {
+                    self.tenants[idx].restores += 1;
+                    self.push_event(
+                        now,
+                        idx,
+                        SchedAction::Restore,
+                        format!("re-added evicted member as GMI {g}"),
+                    );
+                    continue;
+                }
+            }
+            let members = self.tenants[idx].gmis.clone();
+            let mut grew = 0usize;
+            for gmi in members {
+                let (cur, gpu) = match self.engine.manager().gmi(gmi) {
+                    Some(s) => (s.sm_share, s.gpu),
+                    None => continue,
+                };
+                if cur + 1e-9 >= share {
+                    continue;
+                }
+                let (free, _) = self.gpu_free(gpu);
+                let target = (cur + free).min(share);
+                if target > cur + 0.009 && self.engine.resize_share(gmi, target).is_ok() {
+                    grew += 1;
+                }
+            }
+            if grew > 0 {
+                self.tenants[idx].restores += 1;
+                self.push_event(
+                    now,
+                    idx,
+                    SchedAction::Restore,
+                    format!("regrew {grew} member(s) toward {share:.2}"),
+                );
+            }
+        }
+    }
+
+    // ---- job steppers ----
+
+    /// One scheduling round of a serving tenant: drain the round's
+    /// arrivals, dispatch full batches at the arrival of their closing
+    /// request, flush the remainder at the round boundary, and evaluate
+    /// the round's p99 (next round's SLO signal).
+    fn step_serving(&mut self, idx: usize, round_end: f64) {
+        let cost = self.cost;
+        let bench = self.bench;
+        let t = &mut self.tenants[idx];
+        let Tenant {
+            spec,
+            execs,
+            next_req,
+            queue,
+            latencies,
+            window_lat,
+            last_p99,
+            batch_sizes,
+            inflight,
+            max_queue_depth,
+            served,
+            ..
+        } = t;
+        let (trace, max_batch) = match &spec.kind {
+            JobKind::Serving { trace, max_batch, .. } => (trace.as_slice(), *max_batch),
+            _ => return,
+        };
+        window_lat.clear();
+        while *next_req < trace.len() && trace[*next_req].arrival_s < round_end {
+            queue.push_back(*next_req);
+            *next_req += 1;
+        }
+        while queue.len() >= max_batch {
+            let t_d = trace[queue[max_batch - 1]].arrival_s;
+            dispatch_serving(
+                &mut self.engine,
+                &mut self.fabric,
+                cost,
+                bench,
+                execs,
+                trace,
+                queue,
+                max_batch,
+                t_d,
+                latencies,
+                window_lat,
+                batch_sizes,
+                inflight,
+                max_queue_depth,
+                served,
+            );
+        }
+        while !queue.is_empty() {
+            let n = queue.len().min(max_batch);
+            dispatch_serving(
+                &mut self.engine,
+                &mut self.fabric,
+                cost,
+                bench,
+                execs,
+                trace,
+                queue,
+                n,
+                round_end,
+                latencies,
+                window_lat,
+                batch_sizes,
+                inflight,
+                max_queue_depth,
+                served,
+            );
+        }
+        *last_p99 = if window_lat.is_empty() {
+            None
+        } else {
+            let mut w = window_lat.clone();
+            w.sort_by(f64::total_cmp);
+            Some(percentile(&w, 0.99))
+        };
+    }
+
+    /// Run whole sync-training iterations until the tenant's executor
+    /// frontier passes the round boundary (or the job finishes).
+    fn step_training(&mut self, idx: usize, round_end: f64) {
+        let cost = self.cost;
+        let bench = self.bench;
+        let (iterations, horizon, num_env, minibatches) = match &self.tenants[idx].spec.kind {
+            JobKind::Training { iterations, horizon, num_env, minibatches } => {
+                (*iterations, *horizon, *num_env, *minibatches)
+            }
+            _ => return,
+        };
+        // Membership is fixed for the whole round (placements, resizes,
+        // and evictions only happen at round boundaries), so the member
+        // set and the job-local allreduce plan are computed once per
+        // round, not once per iteration.
+        let execs = self.tenants[idx].execs.clone();
+        let gmis = self.tenants[idx].gmis.clone();
+        let mut per_gpu: BTreeMap<usize, Vec<GmiId>> = BTreeMap::new();
+        for (&g, &ex) in gmis.iter().zip(&execs) {
+            per_gpu.entry(self.engine.gpu(ex)).or_default().push(g);
+        }
+        let mpl: Vec<Vec<GmiId>> = per_gpu.into_values().collect();
+        let (_, plan) = self.fabric.cheapest_allreduce(&mpl, bench.param_bytes());
+        let mb = minibatches.max(1);
+        let samples = (num_env * horizon / mb).max(1);
+        let ops = [
+            OpCharge::recorded(OpKind::TrainGrad { samples }),
+            OpCharge::recorded(OpKind::AdamApply),
+        ];
+        while self.tenants[idx].iters_done < iterations
+            && self.engine.max_time(&execs).seconds() < round_end
+        {
+            // (i) rollout on every member
+            for &ex in &execs {
+                let n = self.engine.num_env(ex);
+                self.engine.charge_steps(cost, ex, horizon as f64, &rollout_charges(n), 0.0);
+            }
+            // (ii) minibatch gradients, each closed by the LGR reduction
+            for _ in 0..mb {
+                for &ex in &execs {
+                    self.engine.charge_steps(cost, ex, 1.0, &ops, 0.0);
+                }
+                if !plan.is_empty() {
+                    self.engine.collective(&mut self.fabric, &execs, &plan);
+                }
+            }
+            let t = &mut self.tenants[idx];
+            t.iters_done += 1;
+            t.env_steps += (horizon * num_env * execs.len()) as f64;
+        }
+    }
+
+    // ---- completion / release ----
+
+    fn completions(&mut self, now: f64, round_end: f64) {
+        for idx in 0..self.tenants.len() {
+            if self.tenants[idx].state != State::Running {
+                continue;
+            }
+            let done = match &self.tenants[idx].spec.kind {
+                JobKind::Training { iterations, .. } => {
+                    self.tenants[idx].iters_done >= *iterations
+                }
+                JobKind::Serving { trace, .. } => {
+                    self.tenants[idx].next_req >= trace.len()
+                        && self.tenants[idx].queue.is_empty()
+                }
+            };
+            if !done {
+                continue;
+            }
+            let at = if self.tenants[idx].spec.is_serving() {
+                round_end
+            } else {
+                self.engine.max_time(&self.tenants[idx].execs).seconds().max(now)
+            };
+            self.finish(idx, at);
+        }
+    }
+
+    fn finish(&mut self, idx: usize, at: f64) {
+        let job = self.tenants[idx].spec.id;
+        let share = self.engine.manager().job_share(job);
+        let members = self.tenants[idx].gmis.len();
+        self.engine.clear_job(job);
+        let gmis: Vec<GmiId> = self.tenants[idx].gmis.drain(..).collect();
+        self.tenants[idx].execs.clear();
+        for g in gmis {
+            let _ = self.engine.remove_gmi(g);
+        }
+        let t = &mut self.tenants[idx];
+        t.state = State::Done;
+        t.completed_s = at;
+        t.share_at_completion = share;
+        t.gmis_at_completion = members;
+        self.push_event(at, idx, SchedAction::Complete, format!("released {members} GMI(s)"));
+    }
+
+    fn track_peaks(&mut self) {
+        for gpu in 0..self.engine.topology().num_gpus() {
+            let (sm, mem) = self.gpu_used(gpu);
+            self.peak_gpu_share = self.peak_gpu_share.max(sm);
+            self.peak_gpu_mem = self.peak_gpu_mem.max(mem);
+        }
+    }
+
+    // ---- reporting ----
+
+    fn into_result(self) -> ClusterRunResult {
+        let mut reports = Vec::with_capacity(self.tenants.len());
+        let mut busies = Vec::with_capacity(self.tenants.len());
+        for t in &self.tenants {
+            let job = t.spec.id;
+            let span = (t.completed_s - t.admitted_s).max(1e-9);
+            let busy = self.engine.job_busy_s(job);
+            let comm = self.engine.job_comm_s(job);
+            let xjob = self.engine.job_xjob_s(job);
+            busies.push(busy);
+            let nominal = t.spec.initial_gmis.max(1) as f64;
+            let utilization = (busy / (span * nominal)).min(1.0);
+            let metrics = match &t.spec.kind {
+                JobKind::Training { .. } => RunMetrics {
+                    steps_per_sec: t.env_steps / span,
+                    pps: t.env_steps / span,
+                    ttop: t.env_steps / span,
+                    span_s: span,
+                    utilization,
+                    comm_s: comm,
+                    ..Default::default()
+                },
+                JobKind::Serving { trace, slo_p99_s, .. } => {
+                    let mut lats = t.latencies.clone();
+                    lats.sort_by(f64::total_cmp);
+                    let within =
+                        lats.iter().filter(|&&l| l <= *slo_p99_s + 1e-12).count();
+                    let mean_s = if lats.is_empty() {
+                        0.0
+                    } else {
+                        lats.iter().sum::<f64>() / lats.len() as f64
+                    };
+                    let mean_batch = if t.batch_sizes.is_empty() {
+                        0.0
+                    } else {
+                        t.batch_sizes.iter().sum::<usize>() as f64
+                            / t.batch_sizes.len() as f64
+                    };
+                    let latency = LatencyStats {
+                        requests: trace.len(),
+                        served: t.served,
+                        rejected: 0,
+                        p50_s: percentile(&lats, 0.50),
+                        p95_s: percentile(&lats, 0.95),
+                        p99_s: percentile(&lats, 0.99),
+                        mean_s,
+                        slo_s: *slo_p99_s,
+                        attainment: if trace.is_empty() {
+                            1.0
+                        } else {
+                            within as f64 / trace.len() as f64
+                        },
+                        mean_batch,
+                        max_queue_depth: t.max_queue_depth,
+                    };
+                    RunMetrics {
+                        steps_per_sec: t.served as f64 / span,
+                        pps: t.served as f64 / span,
+                        span_s: span,
+                        utilization,
+                        comm_s: comm,
+                        latency: Some(latency),
+                        ..Default::default()
+                    }
+                }
+            };
+            reports.push(JobReport {
+                id: job,
+                name: t.spec.name.clone(),
+                priority: t.spec.priority,
+                kind: if t.spec.is_serving() { "serving" } else { "training" },
+                metrics,
+                admitted_s: t.admitted_s,
+                completed_s: t.completed_s,
+                wait_s: (t.admitted_s - t.spec.arrival_s).max(0.0),
+                preemptions: t.preemptions,
+                restores: t.restores,
+                busy_s: busy,
+                xjob_interference_s: xjob,
+                share_at_completion: t.share_at_completion,
+                gmis_at_completion: t.gmis_at_completion,
+            });
+        }
+        ClusterRunResult {
+            jobs: reports,
+            events: self.events,
+            makespan_s: self.engine.span(),
+            cluster_utilization: self.engine.mean_utilization(),
+            fairness: jain_index(&busies),
+            peak_gpu_share: self.peak_gpu_share,
+            peak_gpu_mem_gib: self.peak_gpu_mem,
+        }
+    }
+}
+
+/// Dispatch `n` queued requests at virtual time `t_d` onto the tenant's
+/// least-loaded member through the shared serving dispatch cost model.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_serving(
+    engine: &mut Engine,
+    fabric: &mut Fabric,
+    cost: &CostModel,
+    bench: &BenchInfo,
+    execs: &[ExecutorId],
+    trace: &[Request],
+    queue: &mut VecDeque<usize>,
+    n: usize,
+    t_d: f64,
+    latencies: &mut Vec<f64>,
+    window_lat: &mut Vec<f64>,
+    batch_sizes: &mut Vec<usize>,
+    inflight: &mut BinaryHeap<Reverse<u64>>,
+    max_queue_depth: &mut usize,
+    served: &mut usize,
+) {
+    // Retire completions that landed before this dispatch, then record
+    // the outstanding depth (queued + in flight).
+    while let Some(&Reverse(bits)) = inflight.peek() {
+        if f64::from_bits(bits) <= t_d {
+            inflight.pop();
+        } else {
+            break;
+        }
+    }
+    *max_queue_depth = (*max_queue_depth).max(queue.len() + inflight.len());
+    let ex = least_loaded(engine, execs);
+    let done = execute_dispatch(engine, fabric, cost, bench, ex, t_d, n, false).seconds();
+    for _ in 0..n {
+        let i = queue.pop_front().expect("batch under-run");
+        let lat = done - trace[i].arrival_s;
+        latencies.push(lat);
+        window_lat.push(lat);
+        inflight.push(Reverse(done.to_bits()));
+        *served += 1;
+    }
+    batch_sizes.push(n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+    use crate::serve::{generate_trace, TrafficPattern};
+
+    fn setup() -> (Topology, BenchInfo, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        (Topology::dgx_a100(1), b, cost)
+    }
+
+    #[test]
+    fn single_training_job_runs_to_completion() {
+        let (topo, b, cost) = setup();
+        let jobs = vec![JobSpec::training(0, "solo", 1, 0.0, 2, 0.5, 0.2, 512, 3)];
+        let r = run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+        let j = r.job(0).unwrap();
+        assert_eq!(j.kind, "training");
+        assert!(j.metrics.steps_per_sec > 0.0);
+        assert_eq!(j.wait_s, 0.0);
+        assert_eq!(j.preemptions, 0);
+        assert_eq!(j.gmis_at_completion, 2);
+        assert!((j.share_at_completion - 1.0).abs() < 1e-9);
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+        assert!((r.fairness - 1.0).abs() < 1e-9, "one tenant is trivially fair");
+        assert!(matches!(r.events.first().unwrap().action, SchedAction::Admit));
+        assert!(matches!(r.events.last().unwrap().action, SchedAction::Complete));
+    }
+
+    #[test]
+    fn high_priority_arrival_preempts_and_training_is_restored() {
+        let (topo, b, cost) = setup();
+        // Training owns 0.9 of the single GPU; a high-priority serving
+        // burst arrives and needs 0.5 — admission must shrink the trainer,
+        // and after the burst completes the trainer must be regrown.
+        let trace = generate_trace(&TrafficPattern::Constant { rate: 4000.0 }, 0.2, 3, 4);
+        let jobs = vec![
+            JobSpec::training(0, "train", 1, 0.0, 1, 0.9, 0.2, 512, 30),
+            JobSpec::serving(1, "serve", 9, 0.05, (1, 1, 1), 0.5, 16, 50e-3, trace),
+        ];
+        let cfg = SchedConfig { quantum_s: 0.05, ..Default::default() };
+        let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+        let train = r.job(0).unwrap();
+        let serve = r.job(1).unwrap();
+        assert!(serve.wait_s <= cfg.quantum_s + 1e-9, "serving waited {}", serve.wait_s);
+        assert!(train.preemptions >= 1, "trainer was never preempted");
+        assert!(train.restores >= 1, "trainer was never restored");
+        assert!(
+            (train.share_at_completion - 0.9).abs() < 1e-9,
+            "trainer ended at {} share",
+            train.share_at_completion
+        );
+        assert!(r.events.iter().any(|e| e.action == SchedAction::Preempt && e.job == 0));
+        let served = serve.metrics.latency.as_ref().unwrap();
+        assert_eq!(served.served, served.requests);
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+        // The co-resident window billed cross-job interference to someone.
+        assert!(train.xjob_interference_s + serve.xjob_interference_s > 0.0);
+    }
+
+    #[test]
+    fn non_preemptive_mode_queues_instead_of_preempting() {
+        let (topo, b, cost) = setup();
+        let trace = generate_trace(&TrafficPattern::Constant { rate: 2000.0 }, 0.1, 3, 4);
+        let jobs = vec![
+            JobSpec::training(0, "train", 1, 0.0, 1, 0.9, 0.2, 512, 4),
+            JobSpec::serving(1, "serve", 9, 0.0, (1, 1, 1), 0.5, 16, 50e-3, trace),
+        ];
+        let cfg = SchedConfig { preemptive: false, quantum_s: 0.05, ..Default::default() };
+        let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+        // Serving outranks training and admits first; the trainer queues
+        // behind it until the fleet releases its share.
+        let train = r.job(0).unwrap();
+        assert!(train.wait_s > 0.0, "low-priority trainer should have queued");
+        assert_eq!(train.preemptions, 0);
+        assert!(r.events.iter().any(|e| e.action == SchedAction::Queue && e.job == 0));
+        assert!(r.events.iter().all(|e| e.action != SchedAction::Preempt));
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let (topo, b, cost) = setup();
+        let ok = JobSpec::training(0, "t", 1, 0.0, 1, 0.5, 0.2, 256, 2);
+        assert!(run_cluster(&topo, &b, &cost, &[], &SchedConfig::default()).is_err());
+        let dup = vec![ok.clone(), ok.clone()];
+        assert!(run_cluster(&topo, &b, &cost, &dup, &SchedConfig::default()).is_err());
+        let bad_q = SchedConfig { quantum_s: 0.0, ..Default::default() };
+        assert!(run_cluster(&topo, &b, &cost, &[ok], &bad_q).is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Job descriptions for the multi-tenant cluster scheduler.
+//!
+//! A [`JobSpec`] is the tenancy contract one workload signs with the
+//! cluster: what kind of work it runs ([`JobKind`]), when it arrives, how
+//! important it is, and the GMI envelope it may occupy — between
+//! `min_gmis x min_share` (the guaranteed floor preemption can shrink it
+//! to but never past, enforced by the manager's removal guard) and
+//! `max_gmis x share` (the ceiling elasticity may grow it to).
+
+use anyhow::Result;
+
+use crate::cluster::Topology;
+use crate::gmi::Role;
+use crate::serve::Request;
+
+/// Cluster-unique job identifier.
+pub type JobId = usize;
+
+/// What a tenant actually runs.
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Synchronized PPO-style training: `iterations` of (rollout of
+    /// `horizon` steps over `num_env` envs per GMI, then `minibatches`
+    /// gradient + allreduce rounds). Charges the same rollout ops as
+    /// [`drl::sync`](crate::drl::sync) and reduces over the job's own
+    /// fabric allreduce plan.
+    Training {
+        iterations: usize,
+        horizon: usize,
+        /// Environments per member GMI.
+        num_env: usize,
+        minibatches: usize,
+    },
+    /// Open-loop serving fleet with an SLO class: the trace's requests are
+    /// batched (up to `max_batch`, flushed every scheduling round) onto the
+    /// job's least-loaded GMI through the shared dispatch cost model
+    /// ([`serve::execute_dispatch`](crate::serve::execute_dispatch)). A
+    /// scheduling round whose dispatched p99 violates `slo_p99_s` raises
+    /// pressure: the scheduler grows the fleet, preempting lower-priority
+    /// tenants if it must.
+    Serving {
+        trace: Vec<Request>,
+        slo_p99_s: f64,
+        max_batch: usize,
+    },
+}
+
+/// The tenancy contract of one job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    /// Higher admits first and may preempt lower (never equal or higher).
+    pub priority: u8,
+    /// Cluster time the job joins the queue.
+    pub arrival_s: f64,
+    /// Guaranteed member floor: eviction never drops the job below it.
+    pub min_gmis: usize,
+    /// Members placed at admission (and the restore target).
+    pub initial_gmis: usize,
+    /// Elasticity ceiling (serving growth under SLO pressure).
+    pub max_gmis: usize,
+    /// SM share each member is provisioned at (and restored to).
+    pub share: f64,
+    /// Preemption may shrink a member to this share, never below.
+    pub min_share: f64,
+    /// Device memory per member GMI (GiB).
+    pub mem_gib: f64,
+    /// Restrict placement to these GPUs (None = whole cluster) — the
+    /// static-partitioning baseline pins each tenant to its own slice.
+    pub pin_gpus: Option<Vec<usize>>,
+    pub kind: JobKind,
+}
+
+impl JobSpec {
+    /// A fixed-size training tenant: `gmis` members at `share`, shrinkable
+    /// to `min_share` but never evicted below `gmis` members.
+    #[allow(clippy::too_many_arguments)]
+    pub fn training(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        gmis: usize,
+        share: f64,
+        min_share: f64,
+        num_env: usize,
+        iterations: usize,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: gmis,
+            initial_gmis: gmis,
+            max_gmis: gmis,
+            share,
+            min_share,
+            mem_gib: 4.0,
+            pin_gpus: None,
+            kind: JobKind::Training {
+                iterations,
+                horizon: 16,
+                num_env,
+                minibatches: crate::drl::DEFAULT_MINIBATCHES,
+            },
+        }
+    }
+
+    /// An elastic serving tenant: admitted at `initial` members, growable
+    /// to `max` under SLO pressure, never evicted below `min`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn serving(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        (min, initial, max): (usize, usize, usize),
+        share: f64,
+        max_batch: usize,
+        slo_p99_s: f64,
+        trace: Vec<Request>,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: min,
+            initial_gmis: initial,
+            max_gmis: max,
+            share,
+            min_share: share,
+            mem_gib: 2.0,
+            pin_gpus: None,
+            kind: JobKind::Serving { trace, slo_p99_s, max_batch },
+        }
+    }
+
+    /// Sanity-check the envelope (counts ordered, shares in range, and the
+    /// admitted `initial_gmis` set placeable on an EMPTY allowed slice of
+    /// `topo` — a job that cannot ever start is a config error, not a
+    /// queue entry).
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        anyhow::ensure!(
+            self.min_gmis >= 1
+                && self.min_gmis <= self.initial_gmis
+                && self.initial_gmis <= self.max_gmis,
+            "job {} ({}): GMI counts must satisfy 1 <= min <= initial <= max",
+            self.id,
+            self.name
+        );
+        anyhow::ensure!(
+            self.share > 0.0 && self.share <= 1.0 && self.min_share > 0.0,
+            "job {} ({}): shares must lie in (0, 1]",
+            self.id,
+            self.name
+        );
+        anyhow::ensure!(
+            self.min_share <= self.share + 1e-9,
+            "job {} ({}): min_share {} exceeds share {}",
+            self.id,
+            self.name,
+            self.min_share,
+            self.share
+        );
+        anyhow::ensure!(self.arrival_s >= 0.0, "job {}: negative arrival", self.id);
+        if let JobKind::Serving { trace, slo_p99_s, max_batch } = &self.kind {
+            anyhow::ensure!(*max_batch >= 1, "job {}: max_batch must be >= 1", self.id);
+            anyhow::ensure!(*slo_p99_s > 0.0, "job {}: SLO must be positive", self.id);
+            anyhow::ensure!(
+                trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
+                "job {}: trace must be sorted by arrival",
+                self.id
+            );
+        }
+        let allowed = self.allowed_gpus(topo);
+        anyhow::ensure!(!allowed.is_empty(), "job {}: no allowed GPUs", self.id);
+        for &g in &allowed {
+            anyhow::ensure!(g < topo.num_gpus(), "job {}: pinned GPU {g} not in topology", self.id);
+        }
+        // The ADMITTED set must fit the empty allowed slice: admission
+        // places `initial_gmis` members (>= min_gmis), so a job whose
+        // initial set can never be placed would queue forever — a config
+        // error, not a queue entry.
+        let by_sm = ((1.0 + 1e-9) / self.share) as usize;
+        let by_mem = allowed
+            .iter()
+            .map(|&g| ((topo.gpus[g].mem_gib + 1e-9) / self.mem_gib) as usize)
+            .min()
+            .unwrap_or(0);
+        let cap = allowed.len() * by_sm.min(by_mem);
+        anyhow::ensure!(
+            cap >= self.initial_gmis,
+            "job {} ({}): admitted set of {} x {:.2}-share GMIs cannot fit \
+             its allowed slice of {} GPU(s)",
+            self.id,
+            self.name,
+            self.initial_gmis,
+            self.share,
+            allowed.len()
+        );
+        Ok(())
+    }
+
+    /// GPUs this job may place on, ascending.
+    pub fn allowed_gpus(&self, topo: &Topology) -> Vec<usize> {
+        match &self.pin_gpus {
+            Some(p) => {
+                let mut v = p.clone();
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+            None => (0..topo.num_gpus()).collect(),
+        }
+    }
+
+    /// The aggregate SM-share floor registered with the manager's removal
+    /// guard: preemption may never strand the job below it.
+    pub fn floor_share(&self) -> f64 {
+        self.min_gmis as f64 * self.min_share
+    }
+
+    /// DRL role of this job's member GMIs.
+    pub fn role(&self) -> Role {
+        match self.kind {
+            JobKind::Training { .. } => Role::Holistic,
+            JobKind::Serving { .. } => Role::SimAgent,
+        }
+    }
+
+    /// `num_env` a member GMI is registered with (sizes rollout charges for
+    /// training, the inference slot for serving).
+    pub fn member_num_env(&self) -> usize {
+        match &self.kind {
+            JobKind::Training { num_env, .. } => *num_env,
+            JobKind::Serving { max_batch, .. } => *max_batch,
+        }
+    }
+
+    pub fn is_serving(&self) -> bool {
+        matches!(self.kind, JobKind::Serving { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_bad_envelopes() {
+        let topo = Topology::dgx_a100(2);
+        let ok = JobSpec::training(0, "t", 1, 0.0, 2, 0.5, 0.1, 256, 3);
+        ok.validate(&topo).unwrap();
+
+        let mut bad = ok.clone();
+        bad.min_gmis = 0;
+        assert!(bad.validate(&topo).is_err());
+
+        let mut bad = ok.clone();
+        bad.max_gmis = 1; // initial 2 > max 1
+        assert!(bad.validate(&topo).is_err());
+
+        let mut bad = ok.clone();
+        bad.min_share = 0.9; // above share
+        assert!(bad.validate(&topo).is_err());
+
+        let mut bad = ok.clone();
+        bad.share = 0.8;
+        bad.min_gmis = 3; // three 0.8-share members never fit 2 GPUs
+        bad.initial_gmis = 3;
+        bad.max_gmis = 3;
+        assert!(bad.validate(&topo).is_err());
+
+        let mut bad = ok.clone();
+        bad.pin_gpus = Some(vec![5]);
+        assert!(bad.validate(&topo).is_err());
+
+        // Pins restrict the feasibility check to the pinned slice: two
+        // 0.5-share members fit one GPU, three do not.
+        let mut pinned = ok.clone();
+        pinned.pin_gpus = Some(vec![0]);
+        pinned.validate(&topo).unwrap();
+        pinned.min_gmis = 3;
+        pinned.initial_gmis = 3;
+        pinned.max_gmis = 3;
+        assert!(pinned.validate(&topo).is_err());
+    }
+
+    #[test]
+    fn floors_and_roles() {
+        let t = JobSpec::training(0, "t", 1, 0.0, 2, 0.5, 0.15, 256, 3);
+        assert!((t.floor_share() - 0.3).abs() < 1e-12);
+        assert_eq!(t.role(), Role::Holistic);
+        assert_eq!(t.member_num_env(), 256);
+        assert!(!t.is_serving());
+
+        let s = JobSpec::serving(1, "s", 9, 0.0, (1, 2, 4), 0.25, 16, 10e-3, vec![]);
+        assert_eq!(s.role(), Role::SimAgent);
+        assert_eq!(s.member_num_env(), 16);
+        assert!(s.is_serving());
+        assert!((s.floor_share() - 0.25).abs() < 1e-12);
+        s.validate(&Topology::dgx_a100(1)).unwrap();
+    }
+}

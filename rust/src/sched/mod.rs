@@ -1,0 +1,152 @@
+//! Multi-tenant cluster scheduling: preemptive co-scheduling of
+//! heterogeneous DRL jobs on one shared cluster — the GMI answer to the
+//! paper's §8 "cluster scheduling" direction, grown from the single-job
+//! bin-packer ([`gmi::scheduler`](crate::gmi::scheduler)) into a running
+//! system.
+//!
+//! Every orchestrator in this crate assumes exclusive ownership of the
+//! whole cluster; this module drops that assumption. A queue of
+//! [`JobSpec`]s — sync training runs, serving fleets with SLO classes —
+//! is admitted onto one shared [`Topology`](crate::cluster::Topology),
+//! placed through the [`GmiManager`](crate::gmi::GmiManager)'s validation
+//! (no oversubscription ever, enforced at every placement/resize), and
+//! co-executed on a single shared [`Engine`](crate::engine::Engine) with
+//! per-job event tagging and cross-job interference accounting in the
+//! executors. The scheduler is *preemptive*: a high-priority arrival or a
+//! serving tenant missing its SLO window shrinks and, if needed, evicts
+//! lower-priority tenants' GMIs through the validated
+//! `resize_share`/`remove_gmi` paths — never below the tenant's
+//! guaranteed floor, which the manager's typed
+//! [`RemoveGmiError`](crate::gmi::RemoveGmiError) guard enforces — and
+//! restores them once pressure drops.
+//!
+//! [`run_cluster`] returns per-job [`RunMetrics`](crate::metrics::RunMetrics)
+//! plus cluster-level fairness (Jain's index over per-job busy
+//! GPU-seconds) and utilization, and the full scheduling timeline
+//! ([`SchedEvent`]) — the preemption story `examples/shared_cluster.rs`
+//! prints.
+
+mod cluster;
+mod job;
+
+pub use cluster::{
+    run_cluster, sched_table, ClusterRunResult, JobReport, SchedAction, SchedConfig, SchedEvent,
+};
+pub use job::{JobId, JobKind, JobSpec};
+
+use crate::cluster::Topology;
+use crate::config::BenchInfo;
+use crate::serve::{batch_seconds, generate_trace, TrafficPattern};
+use crate::vtime::CostModel;
+
+/// The canonical two-tenant co-run: a low-priority sync-training job plus
+/// a high-priority diurnal serving fleet sharing `topo`, sized off the
+/// gateway's own capacity yardstick ([`serve::batch_seconds`](crate::serve::batch_seconds))
+/// so the diurnal peak (1.2x the static fleet's capacity) forces the
+/// preemptive schedule to reclaim training share while the trough lets it
+/// give the share back.
+///
+/// `partitioned` selects the static-partitioning baseline: each tenant is
+/// pinned to its own half of the cluster at fixed provisioning (training
+/// gets whole exclusive GPUs, serving a fixed fleet), the classic
+/// one-job-per-GPU-slice arrangement the scheduler is measured against.
+/// Both variants simulate the same total environments and replay the
+/// identical seeded trace, so their per-job metrics are directly
+/// comparable. `topo` needs an even GPU count >= 2.
+pub fn corun_scenario(
+    topo: &Topology,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    duration_s: f64,
+    seed: u64,
+    partitioned: bool,
+) -> Vec<JobSpec> {
+    let g = topo.num_gpus();
+    assert!(g >= 2 && g % 2 == 0, "corun_scenario needs an even GPU count >= 2, got {g}");
+    let serve_share = 0.25;
+    let max_batch = 32;
+    let member_rate = max_batch as f64 / batch_seconds(bench, cost, topo, serve_share, max_batch);
+    // The static baseline packs 4 serving members on each of its g/2 GPUs.
+    let static_members = 4 * (g / 2);
+    let static_capacity = member_rate * static_members as f64;
+    let pattern = TrafficPattern::Diurnal {
+        base: 0.25 * static_capacity,
+        peak: 1.2 * static_capacity,
+        period_s: duration_s,
+    };
+    let trace = generate_trace(&pattern, duration_s, seed, 8);
+    let slo = 20e-3;
+    // Enough training iterations to outlast the serving day.
+    let iters = ((duration_s * 12.0).ceil() as usize).max(4);
+    if partitioned {
+        let mut train = JobSpec::training(0, "train-ppo", 1, 0.0, g / 2, 1.0, 1.0, 2048, iters);
+        train.pin_gpus = Some((0..g / 2).collect());
+        let mut serve = JobSpec::serving(
+            1,
+            "serve-slo",
+            9,
+            0.0,
+            (static_members, static_members, static_members),
+            serve_share,
+            max_batch,
+            slo,
+            trace,
+        );
+        serve.pin_gpus = Some((g / 2..g).collect());
+        vec![train, serve]
+    } else {
+        // Same total envs (g x 1024 vs g/2 x 2048), whole cluster shared:
+        // training spreads one multiplexed GMI per GPU, the serving fleet
+        // starts at one member per GPU and may grow to three under load.
+        let train = JobSpec::training(0, "train-ppo", 1, 0.0, g, 0.5, 0.25, 1024, iters);
+        let serve = JobSpec::serving(
+            1,
+            "serve-slo",
+            9,
+            0.0,
+            (g, g, 3 * g),
+            serve_share,
+            max_batch,
+            slo,
+            trace,
+        );
+        vec![train, serve]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+
+    #[test]
+    fn corun_scenario_variants_are_comparable() {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let stat = corun_scenario(&topo, &b, &cost, 0.5, 7, true);
+        let elas = corun_scenario(&topo, &b, &cost, 0.5, 7, false);
+        assert_eq!(stat.len(), 2);
+        assert_eq!(elas.len(), 2);
+        for s in stat.iter().chain(&elas) {
+            s.validate(&topo).unwrap();
+        }
+        // Identical seeded trace in both variants.
+        let trace_of = |j: &JobSpec| match &j.kind {
+            JobKind::Serving { trace, .. } => trace.clone(),
+            _ => panic!("expected serving"),
+        };
+        assert_eq!(trace_of(&stat[1]), trace_of(&elas[1]));
+        // Same total simulated environments.
+        let envs = |j: &JobSpec| match &j.kind {
+            JobKind::Training { num_env, .. } => num_env * j.initial_gmis,
+            _ => panic!("expected training"),
+        };
+        assert_eq!(envs(&stat[0]), envs(&elas[0]));
+        // Static pins split the cluster; elastic shares it.
+        assert_eq!(stat[0].pin_gpus, Some(vec![0]));
+        assert_eq!(stat[1].pin_gpus, Some(vec![1]));
+        assert!(elas[0].pin_gpus.is_none() && elas[1].pin_gpus.is_none());
+        assert!(elas[1].max_gmis > elas[1].initial_gmis, "elastic fleet must have headroom");
+    }
+}

@@ -214,4 +214,82 @@ mod tests {
         assert!(estimate(4, 4, 100.0) > estimate(2, 4, 100.0));
         assert!(estimate(4, 8, 100.0) > estimate(4, 4, 100.0));
     }
+
+    #[test]
+    fn profile_runnable_boundary_cases() {
+        let (b, c) = at();
+        // The finest budget Algorithm 2 sweeps (1/10 GPU) still clears the
+        // 5% share floor for MPS; a small env count there is runnable.
+        let p = profile(&b, &c, GmiBackend::Mps, 10, 128, 16);
+        assert!(p.runnable, "1/10-GPU GMI at 128 envs must run");
+        // MIG quantizes the same budget UP to a 1g.5gb profile, so it is
+        // runnable too — until its 5 GiB memory quota caps env growth.
+        let mig_small = profile(&b, &c, GmiBackend::Mig, 10, 128, 16);
+        assert!(mig_small.runnable);
+        let mig_big = profile(&b, &c, GmiBackend::Mig, 10, 16384, 16);
+        assert!(!mig_big.runnable, "1g.5gb cannot hold 16k envs ({} GiB)", mig_big.mem_gib);
+        // Non-runnable points report zero throughput, never garbage.
+        assert_eq!(mig_big.top, 0.0);
+        assert!(mig_big.mem_gib > 5.0);
+    }
+
+    #[test]
+    fn profile_throughput_monotone_in_share_budget() {
+        // Strategy-selection edge: fewer GMIs per GPU = more share each;
+        // a single GMI's throughput must never DROP when its budget grows
+        // (saturation flattens it, but never inverts it).
+        let (b, c) = at();
+        let mut prev = 0.0;
+        for gmi_per_gpu in (1..=8).rev() {
+            let p = profile(&b, &c, GmiBackend::Mps, gmi_per_gpu, 1024, 16);
+            if !p.runnable {
+                continue;
+            }
+            assert!(
+                p.top + 1e-9 >= prev,
+                "throughput dropped when share grew: {} then {} at 1/{}",
+                prev,
+                p.top,
+                gmi_per_gpu
+            );
+            prev = p.top;
+        }
+        assert!(prev > 0.0);
+    }
+
+    #[test]
+    fn explore_single_gpu_and_single_point_edges() {
+        let (b, c) = at();
+        // One GPU: the search still returns a runnable multiplexed config.
+        let (best, trace) = explore(&b, &c, GmiBackend::Mps, 1, 16);
+        let best = best.expect("1-GPU search found nothing");
+        assert!(best.gmi_per_gpu >= 1 && best.num_env >= 128);
+        assert!(trace.iter().any(|p| p.runnable));
+        // The selected point is present in the trace and runnable there.
+        assert!(trace
+            .iter()
+            .any(|p| p.runnable
+                && p.gmi_per_gpu == best.gmi_per_gpu
+                && p.num_env == best.num_env));
+        // The projection is consistent with its own profile point.
+        let pt = profile(&b, &c, GmiBackend::Mps, best.gmi_per_gpu, best.num_env, 16);
+        let want = estimate(best.gmi_per_gpu, 1, pt.top);
+        assert!((best.projected_top - want).abs() < 1e-6 * want.max(1.0));
+    }
+
+    #[test]
+    fn saturation_pruning_skips_flat_tail_points() {
+        // The Sat < alpha early-stop must actually prune: for some GMI
+        // budget the sweep stops before the largest env count, so the
+        // trace holds fewer points than the full grid.
+        let (b, c) = at();
+        let (_, trace) = explore(&b, &c, GmiBackend::Mps, 4, 16);
+        let full_grid = 10 * NUM_ENV_SWEEP.len();
+        assert!(
+            trace.len() < full_grid,
+            "no pruning happened: {} == {} grid points",
+            trace.len(),
+            full_grid
+        );
+    }
 }

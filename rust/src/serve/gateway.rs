@@ -154,15 +154,59 @@ pub fn batch_seconds(
     req + fwd + resp
 }
 
+/// Least-loaded executor of `active`: earliest clock, ties to the first.
+/// The dispatch target rule shared by the gateway and the multi-tenant
+/// scheduler's serving stepper.
+pub fn least_loaded(engine: &Engine, active: &[ExecutorId]) -> ExecutorId {
+    let mut ex = active[0];
+    for &e in &active[1..] {
+        if engine.clock(e).seconds() < engine.clock(ex).seconds() {
+            ex = e;
+        }
+    }
+    ex
+}
+
+/// Execute one `n`-request dispatch at virtual time `t` on executor `ex`
+/// as engine events — request payload hop onto the GMI through its GPU's
+/// host path, `PolicyFwd` charged at the batched size, response hop back —
+/// and return the completion clock. The single place the serving dispatch
+/// cost model lives: the gateway's batcher and the multi-tenant
+/// scheduler's serving stepper both charge through it.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_dispatch(
+    engine: &mut Engine,
+    fabric: &mut Fabric,
+    cost: &CostModel,
+    bench: &BenchInfo,
+    ex: ExecutorId,
+    t: f64,
+    n: usize,
+    dedicated: bool,
+) -> Clock {
+    let gpu = engine.gpu(ex);
+    let sharing = engine.co_resident(ex).max(1);
+    let req_plan = fabric.plan_intra_gpu(n * request_bytes(bench), sharing, gpu);
+    engine.recv_plan(fabric, ex, Clock(t), &req_plan);
+    let fwd = if dedicated {
+        tdg_agent_fwd(n, engine.share(ex))
+    } else {
+        OpCharge::recorded(OpKind::PolicyFwd { num_env: n })
+    };
+    engine.charge_steps(cost, ex, 1.0, &[fwd], 0.0);
+    let resp_plan = fabric.plan_intra_gpu(n * response_bytes(bench), sharing, gpu);
+    let after_fwd = engine.clock(ex);
+    engine.recv_plan(fabric, ex, after_fwd, &resp_plan)
+}
+
 /// Immutable per-run dispatch parameters.
 struct BatchSpec<'a> {
     trace: &'a [Request],
+    bench: &'a BenchInfo,
     max_batch: usize,
     /// TDG fleets run the forward on the dedicated agent GMI at a fraction
     /// of the pair budget (same model as drl::serving).
     dedicated: bool,
-    req_bytes: usize,
-    resp_bytes: usize,
 }
 
 /// Mutable dispatch-loop bookkeeping.
@@ -195,35 +239,12 @@ fn dispatch_batch(
     if n == 0 {
         return;
     }
-    // Least-loaded active executor: earliest clock, ties to the first.
-    let mut ex = active[0];
-    for &e in &active[1..] {
-        if engine.clock(e).seconds() < engine.clock(ex).seconds() {
-            ex = e;
-        }
-    }
-    let gpu = engine.gpu(ex);
-    let sharing = engine.co_resident(ex).max(1);
+    let ex = least_loaded(engine, active);
     let batch_idx = log.batch_sizes.len();
-
-    // Request payload onto the GMI through its GPU's host path. Contention
-    // with co-resident GMIs' transfers is handled by the fabric's link
-    // occupancy, which this plan serializes against.
-    let req_plan = fabric.plan_intra_gpu(n * spec.req_bytes, sharing, gpu);
-    engine.recv_plan(fabric, ex, Clock(t), &req_plan);
-    // The batched policy forward (TDG fleets: the shared dedicated-agent
-    // model from drl::serving).
-    let fwd = if spec.dedicated {
-        let share = engine.share(ex);
-        tdg_agent_fwd(n, share)
-    } else {
-        OpCharge::recorded(OpKind::PolicyFwd { num_env: n })
-    };
-    engine.charge_steps(cost, ex, 1.0, &[fwd], 0.0);
-    // Response payload back to the gateway.
-    let resp_plan = fabric.plan_intra_gpu(n * spec.resp_bytes, sharing, gpu);
-    let after_fwd = engine.clock(ex);
-    let done = engine.recv_plan(fabric, ex, after_fwd, &resp_plan);
+    // Hops + batched forward as engine events; contention with co-resident
+    // GMIs' transfers is handled by the fabric's link occupancy, which the
+    // dispatch plans serialize against.
+    let done = execute_dispatch(engine, fabric, cost, spec.bench, ex, t, n, spec.dedicated);
 
     let done_s = done.seconds();
     for _ in 0..n {
@@ -274,13 +295,7 @@ pub fn run_gateway(
     };
     let window_s = cfg.autoscale.as_ref().map(|a| a.window_s);
 
-    let spec = BatchSpec {
-        trace,
-        max_batch: cfg.max_batch,
-        dedicated,
-        req_bytes: request_bytes(bench),
-        resp_bytes: response_bytes(bench),
-    };
+    let spec = BatchSpec { trace, bench, max_batch: cfg.max_batch, dedicated };
     let mut log = DispatchLog {
         served: Vec::with_capacity(trace.len()),
         batch_sizes: Vec::new(),

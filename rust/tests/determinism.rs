@@ -17,6 +17,7 @@ use gmi_drl::mapping::{
     MappingTemplate,
 };
 use gmi_drl::metrics::RunMetrics;
+use gmi_drl::sched::{corun_scenario, run_cluster, SchedConfig};
 use gmi_drl::serve::{generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, TrafficPattern};
 use gmi_drl::vtime::CostModel;
 
@@ -103,6 +104,42 @@ fn serving_is_bit_identical_across_runs() {
         let r2 = run_serving(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
         assert_metrics_identical(&r1, &r2, &format!("serving {template:?}"));
     }
+}
+
+#[test]
+fn multi_job_corun_is_bit_identical_across_runs() {
+    // The multi-tenant golden: a training + diurnal-serving co-run on one
+    // shared cluster replays bit-identically — per-job RunMetrics, the
+    // scheduling timeline (every preemption/grow/restore decision), and
+    // the cluster-level aggregates.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let cfg = SchedConfig::default();
+    let jobs1 = corun_scenario(&topo, &b, &cost, 0.4, 11, false);
+    let jobs2 = corun_scenario(&topo, &b, &cost, 0.4, 11, false);
+    let r1 = run_cluster(&topo, &b, &cost, &jobs1, &cfg).unwrap();
+    let r2 = run_cluster(&topo, &b, &cost, &jobs2, &cfg).unwrap();
+    assert_eq!(r1.jobs.len(), r2.jobs.len());
+    for (a, c) in r1.jobs.iter().zip(&r2.jobs) {
+        assert_eq!(a.id, c.id);
+        assert_metrics_identical(&a.metrics, &c.metrics, &format!("corun job {}", a.id));
+        assert_eq!(bits(a.admitted_s), bits(c.admitted_s), "job {} admitted_s", a.id);
+        assert_eq!(bits(a.completed_s), bits(c.completed_s), "job {} completed_s", a.id);
+        assert_eq!(bits(a.busy_s), bits(c.busy_s), "job {} busy_s", a.id);
+        assert_eq!(
+            bits(a.xjob_interference_s),
+            bits(c.xjob_interference_s),
+            "job {} xjob",
+            a.id
+        );
+        assert_eq!(a.preemptions, c.preemptions, "job {} preemptions", a.id);
+        assert_eq!(a.restores, c.restores, "job {} restores", a.id);
+    }
+    assert_eq!(r1.events, r2.events, "scheduling timeline drifted");
+    assert_eq!(bits(r1.makespan_s), bits(r2.makespan_s));
+    assert_eq!(bits(r1.cluster_utilization), bits(r2.cluster_utilization));
+    assert_eq!(bits(r1.fairness), bits(r2.fairness));
 }
 
 #[test]

@@ -1,0 +1,283 @@
+//! Property-based tests on the multi-tenant cluster scheduler, plus the
+//! headline integration claim: preemptive co-scheduling strictly beats
+//! static partitioning on BOTH training throughput and serving p99 over
+//! the same seeded trace.
+//!
+//! Same methodology as the other property suites: no proptest crate
+//! offline, so a seeded SplitMix64 generator drives many random cases
+//! with universal assertions (deterministic on failure via the case
+//! index).
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::sched::{
+    corun_scenario, run_cluster, JobSpec, SchedAction, SchedConfig,
+};
+use gmi_drl::serve::{generate_trace, TrafficPattern};
+use gmi_drl::vtime::CostModel;
+
+/// Deterministic PRNG (SplitMix64).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+
+    fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * ((self.next() >> 11) as f64 / (1u64 << 53) as f64)
+    }
+}
+
+/// A random mixed tenant: shares stay <= 0.5 and counts <= 2, so every
+/// job's guaranteed minimum fits even a 1-GPU cluster and admission is
+/// always eventually possible.
+fn random_job(rng: &mut Rng, id: usize, priority: u8, case: usize) -> JobSpec {
+    let arrival = rng.f64(0.0, 0.12);
+    let gmis = rng.range(1, 2);
+    let share = (rng.range(20, 50) as f64) / 100.0;
+    if rng.range(0, 1) == 0 {
+        let num_env = 128 * rng.range(1, 4);
+        JobSpec::training(id, "t", priority, arrival, gmis, share, 0.1, num_env, rng.range(1, 3))
+    } else {
+        let rate = rng.f64(1000.0, 8000.0);
+        let dur = rng.f64(0.06, 0.15);
+        let trace = generate_trace(
+            &TrafficPattern::Poisson { rate },
+            dur,
+            (case * 31 + id) as u64,
+            4,
+        );
+        let mut s = JobSpec::serving(
+            id,
+            "s",
+            priority,
+            arrival,
+            (1, gmis, gmis + 1),
+            share,
+            8,
+            30e-3,
+            trace,
+        );
+        s.min_gmis = 1;
+        s
+    }
+}
+
+#[test]
+fn prop_no_oversubscription_under_any_arrival_sequence() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let mut rng = Rng(0x5eed);
+    for case in 0..8 {
+        let gpus = rng.range(1, 2);
+        let topo = Topology::dgx_a100(gpus);
+        let n_jobs = rng.range(2, 4);
+        // Distinct priorities, shuffled deterministically.
+        let mut prios: Vec<u8> = (1..=n_jobs as u8).collect();
+        for i in (1..prios.len()).rev() {
+            prios.swap(i, rng.range(0, i));
+        }
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| random_job(&mut rng, i, prios[i], case))
+            .collect();
+        let cfg = SchedConfig { quantum_s: 0.02, ..Default::default() };
+        let r = run_cluster(&topo, &b, &cost, &jobs, &cfg)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // The invariant: no arrival sequence may ever oversubscribe a
+        // GPU's SMs or memory.
+        assert!(
+            r.peak_gpu_share <= 1.0 + 1e-6,
+            "case {case}: peak GPU share {}",
+            r.peak_gpu_share
+        );
+        assert!(
+            r.peak_gpu_mem_gib <= 40.0 + 1e-6,
+            "case {case}: peak GPU mem {}",
+            r.peak_gpu_mem_gib
+        );
+        // Every job was admitted and ran to completion.
+        for j in &r.jobs {
+            assert!(j.admitted_s >= 0.0 && j.wait_s >= 0.0, "case {case} job {}", j.id);
+            assert!(
+                j.completed_s > j.admitted_s - 1e-12,
+                "case {case} job {} never completed",
+                j.id
+            );
+            assert!(j.busy_s > 0.0 || j.metrics.latency.is_some(), "case {case}: idle job");
+        }
+        // Fairness is a well-formed Jain index.
+        assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12, "case {case}");
+        // Every serving request was dispatched exactly once.
+        for j in r.jobs.iter().filter(|j| j.kind == "serving") {
+            let l = j.metrics.latency.as_ref().unwrap();
+            assert_eq!(l.served, l.requests, "case {case} job {}: dropped requests", j.id);
+        }
+    }
+}
+
+#[test]
+fn prop_priority_inversion_never_persists_past_one_round() {
+    // A top-priority arrival into a cluster packed by lower-priority
+    // tenants must be admitted at its first scheduling round: the
+    // admission path shrinks and evicts lower tenants in the same round,
+    // so inversion never outlives one quantum.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let mut rng = Rng(0xabcd);
+    for case in 0..8 {
+        let topo = Topology::dgx_a100(1);
+        let hog_share = (rng.range(60, 90) as f64) / 100.0;
+        // Demand always exceeds the free share left by the hog, so
+        // admission is impossible without preemption — but always fits
+        // once the hog is shrunk to its 0.1 floor.
+        let want_share = ((1.0 - hog_share) + 0.2).min(0.8);
+        let arrival = rng.f64(0.03, 0.1);
+        let trace =
+            generate_trace(&TrafficPattern::Poisson { rate: 2000.0 }, 0.08, case as u64, 4);
+        let jobs = vec![
+            JobSpec::training(0, "hog", 1, 0.0, 1, hog_share, 0.1, 256, 40),
+            JobSpec::serving(1, "vip", 9, arrival, (1, 1, 1), want_share, 8, 30e-3, trace),
+        ];
+        let cfg = SchedConfig { quantum_s: 0.02, ..Default::default() };
+        let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+        let vip = r.job(1).unwrap();
+        assert!(
+            vip.wait_s <= cfg.quantum_s + 1e-9,
+            "case {case}: priority inversion persisted {}s (> one {}s round)",
+            vip.wait_s,
+            cfg.quantum_s
+        );
+        // The hog was preempted to make room, never below its floor.
+        let hog = r.job(0).unwrap();
+        assert!(hog.preemptions >= 1, "case {case}: no preemption recorded");
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6, "case {case}");
+    }
+}
+
+#[test]
+fn prop_preempted_jobs_are_restored_when_capacity_frees() {
+    // After the preempting tenant completes, the preempted trainer must
+    // be regrown to its admitted provisioning — and finish there.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let mut rng = Rng(0xfade);
+    for case in 0..6 {
+        let topo = Topology::dgx_a100(1);
+        let share = (rng.range(70, 90) as f64) / 100.0;
+        let trace =
+            generate_trace(&TrafficPattern::Poisson { rate: 3000.0 }, 0.1, case as u64, 4);
+        let jobs = vec![
+            JobSpec::training(0, "train", 1, 0.0, 1, share, 0.15, 256, 40),
+            JobSpec::serving(1, "burst", 9, 0.04, (1, 1, 1), 0.5, 8, 30e-3, trace),
+        ];
+        let cfg = SchedConfig { quantum_s: 0.02, ..Default::default() };
+        let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+        let train = r.job(0).unwrap();
+        assert!(train.preemptions >= 1, "case {case}: never preempted");
+        assert!(train.restores >= 1, "case {case}: never restored");
+        assert!(
+            (train.share_at_completion - share).abs() < 1e-9,
+            "case {case}: trainer finished at {} share, admitted at {share}",
+            train.share_at_completion
+        );
+        // The restore fires after the burst released its capacity.
+        let burst_done = r
+            .events
+            .iter()
+            .find(|e| e.job == 1 && e.action == SchedAction::Complete)
+            .map(|e| e.t_s)
+            .expect("burst completion event");
+        assert!(
+            r.events
+                .iter()
+                .any(|e| e.job == 0 && e.action == SchedAction::Restore && e.t_s >= burst_done),
+            "case {case}: no restore after the burst completed"
+        );
+    }
+}
+
+#[test]
+fn prop_placement_decisions_identical_across_two_runs() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let mk = || {
+        let trace =
+            generate_trace(&TrafficPattern::Poisson { rate: 4000.0 }, 0.12, 17, 4);
+        vec![
+            JobSpec::training(0, "t0", 2, 0.0, 2, 0.4, 0.1, 256, 3),
+            JobSpec::serving(1, "s1", 9, 0.03, (1, 2, 3), 0.25, 8, 10e-3, trace),
+            JobSpec::training(2, "t2", 1, 0.06, 1, 0.3, 0.1, 128, 2),
+        ]
+    };
+    let topo = Topology::dgx_a100(2);
+    let cfg = SchedConfig::default();
+    let r1 = run_cluster(&topo, &b, &cost, &mk(), &cfg).unwrap();
+    let r2 = run_cluster(&topo, &b, &cost, &mk(), &cfg).unwrap();
+    // The full timeline — every placement, preemption, and restore — is
+    // identical, and so is every per-job outcome, bit for bit.
+    assert_eq!(r1.events, r2.events, "scheduling timeline drifted");
+    assert_eq!(r1.jobs.len(), r2.jobs.len());
+    for (a, c) in r1.jobs.iter().zip(&r2.jobs) {
+        assert_eq!(a.metrics.steps_per_sec.to_bits(), c.metrics.steps_per_sec.to_bits());
+        assert_eq!(a.metrics.span_s.to_bits(), c.metrics.span_s.to_bits());
+        assert_eq!(a.busy_s.to_bits(), c.busy_s.to_bits());
+        assert_eq!(a.xjob_interference_s.to_bits(), c.xjob_interference_s.to_bits());
+        assert_eq!(a.preemptions, c.preemptions);
+        assert_eq!(a.restores, c.restores);
+    }
+    assert_eq!(r1.fairness.to_bits(), r2.fairness.to_bits());
+}
+
+/// The acceptance claim (and the story `examples/shared_cluster.rs`
+/// prints): over the same seeded diurnal day and the same total simulated
+/// environments, the preemptive co-schedule strictly beats static
+/// partitioning on BOTH training throughput and serving p99.
+#[test]
+fn preemptive_corun_beats_static_partitioning_on_both_axes() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let day = 0.8;
+    let static_jobs = corun_scenario(&topo, &b, &cost, day, 7, true);
+    let elastic_jobs = corun_scenario(&topo, &b, &cost, day, 7, false);
+    let stat = run_cluster(
+        &topo,
+        &b,
+        &cost,
+        &static_jobs,
+        &SchedConfig { preemptive: false, ..Default::default() },
+    )
+    .unwrap();
+    let elas = run_cluster(&topo, &b, &cost, &elastic_jobs, &SchedConfig::default()).unwrap();
+
+    let s_train = stat.job(0).unwrap();
+    let e_train = elas.job(0).unwrap();
+    assert!(
+        e_train.metrics.steps_per_sec > s_train.metrics.steps_per_sec,
+        "training: preemptive {} !> static {}",
+        e_train.metrics.steps_per_sec,
+        s_train.metrics.steps_per_sec
+    );
+
+    let s_p99 = stat.job(1).unwrap().metrics.latency.as_ref().unwrap().p99_s;
+    let e_p99 = elas.job(1).unwrap().metrics.latency.as_ref().unwrap().p99_s;
+    assert!(e_p99 < s_p99, "serving p99: preemptive {e_p99} !< static {s_p99}");
+
+    // The win came from actual preemptive elasticity, not sizing slack.
+    assert!(elas.events.iter().any(|e| e.action == SchedAction::Preempt));
+    assert!(elas.events.iter().any(|e| e.action == SchedAction::Grow));
+    assert!(elas.events.iter().any(|e| e.action == SchedAction::Restore));
+    assert!(stat.events.iter().all(|e| e.action != SchedAction::Preempt));
+    // Neither schedule ever oversubscribed.
+    assert!(stat.peak_gpu_share <= 1.0 + 1e-6);
+    assert!(elas.peak_gpu_share <= 1.0 + 1e-6);
+}

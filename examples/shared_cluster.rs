@@ -1,12 +1,15 @@
-//! One shared cluster, two tenants: a sync-training job (low priority)
+//! One shared cluster, three tenants: a sync-training job (low priority)
 //! co-runs with a diurnal SLO serving fleet (high priority) under the
 //! preemptive multi-tenant scheduler, against the classic static
 //! partitioning baseline (each tenant pinned to its own GPU half) over
 //! the SAME seeded trace and the same total simulated environments.
-//! Prints the preemption timeline and the head-to-head comparison: the
-//! preemptive schedule must win on BOTH training throughput and serving
-//! p99 (asserted, like the paper's co-location claims, in
-//! `rust/tests/prop_sched.rs`).
+//! Mid-day an A3C training tenant (agents + compressor channels +
+//! trainers — a Workload program like every other tenant) joins the
+//! preemptive schedule; the static partition has no spare slice for it
+//! at all. Prints the preemption timeline and the head-to-head
+//! comparison: the preemptive schedule must win on BOTH training
+//! throughput and serving p99 (asserted, like the paper's co-location
+//! claims, in `rust/tests/prop_sched.rs`).
 //!
 //!     cargo run --release --example shared_cluster -- [bench]
 
@@ -14,8 +17,11 @@ use anyhow::Result;
 
 use gmi_drl::cluster::Topology;
 use gmi_drl::config::static_registry;
+use gmi_drl::drl::a3c::AsyncConfig;
 use gmi_drl::metrics::{fmt_rate, Table};
-use gmi_drl::sched::{corun_scenario, run_cluster, sched_table, SchedAction, SchedConfig};
+use gmi_drl::sched::{
+    corun_scenario, run_cluster, sched_table, JobSpec, SchedAction, SchedConfig,
+};
 use gmi_drl::vtime::CostModel;
 
 const GPUS: usize = 2;
@@ -36,7 +42,23 @@ fn main() -> Result<()> {
     // GPUs; the scheduler reclaims training share at the diurnal peak and
     // gives it back at the trough.
     let static_jobs = corun_scenario(&topo, &bench, &cost, DAY_S, SEED, true);
-    let elastic_jobs = corun_scenario(&topo, &bench, &cost, DAY_S, SEED, false);
+    let mut elastic_jobs = corun_scenario(&topo, &bench, &cost, DAY_S, SEED, false);
+    // A third tenant only the preemptive schedule can absorb: an A3C
+    // training job (1 agent + 1 trainer over the compressor channels)
+    // arriving 20% into the day. The static partition's slices are full,
+    // so it has no home there — scenario diversity the Workload-program
+    // scheduler unlocked.
+    elastic_jobs.push(JobSpec::a3c(
+        2,
+        "train-a3c",
+        2,
+        0.2 * DAY_S,
+        (1, 1),
+        0.3,
+        0.1,
+        1024,
+        AsyncConfig { rounds: 8, batch_samples: 4096, ..AsyncConfig::default() },
+    ));
     let static_cfg = SchedConfig { preemptive: false, ..SchedConfig::default() };
     let elastic_cfg = SchedConfig::default();
 
@@ -69,6 +91,16 @@ fn main() -> Result<()> {
         ]);
     }
     t.print();
+
+    let a3c = elas.job(2).expect("a3c report");
+    println!(
+        "\na3c tenant (preemptive only): {} preds/s | ttop {} | waited {:.1}ms | \
+         {} preemption(s)",
+        fmt_rate(a3c.metrics.pps),
+        fmt_rate(a3c.metrics.ttop),
+        a3c.wait_s * 1e3,
+        a3c.preemptions,
+    );
 
     println!("\npreemption timeline (preemptive schedule):");
     sched_table(&elas.events).print();

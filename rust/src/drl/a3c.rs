@@ -12,23 +12,26 @@
 //! experience and parameter movement flows over the communication
 //! [`fabric`](crate::fabric): the migrator executes per-packet routes with
 //! per-link occupancy (contended links serialize), and the periodic
-//! parameter push-back is a fabric plan.
-
-use std::collections::BTreeMap;
+//! parameter push-back is a fabric plan. The round loop lives in the
+//! steppable workload program
+//! ([`workload::AsyncProgram`](crate::workload::AsyncProgram)) shared with
+//! the multi-tenant scheduler — which is what lets compressor-channel A3C
+//! jobs co-run as cluster tenants; [`run_async`] is the thin standalone
+//! driver. With [`AsyncConfig::elastic`] set, the engine's elastic
+//! controller shifts SM share toward the bottleneck role group between
+//! rounds, mirroring sync training's support.
 
 use anyhow::Result;
 
 use super::compute::Compute;
-use crate::channels::{
-    Batcher, ChannelStats, Compressor, Dispenser, Migrator, RolloutSegment, ShareMode,
-    TrainerEndpoint,
-};
+use crate::channels::ShareMode;
 use crate::config::BenchInfo;
-use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::engine::{ElasticConfig, Engine};
 use crate::fabric::Fabric;
 use crate::mapping::Layout;
-use crate::metrics::{RewardTracker, RunMetrics};
-use crate::vtime::{CostModel, OpKind};
+use crate::metrics::RunMetrics;
+use crate::vtime::CostModel;
+use crate::workload::{run_to_completion, AsyncProgram, Workload};
 
 #[derive(Debug, Clone)]
 pub struct AsyncConfig {
@@ -51,6 +54,11 @@ pub struct AsyncConfig {
     /// channel queue older than this flushes below the size threshold, so
     /// low-traffic channels (e.g. `Done`) can't stall the batcher.
     pub staging_interval_s: f64,
+    /// Elastic mid-run re-provisioning: between rounds, shift SM share
+    /// toward the bottleneck role group on GPUs hosting both agents and
+    /// trainers (None = static provisioning) — sync training's
+    /// bottleneck-shifting support, mirrored for the async pipeline.
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for AsyncConfig {
@@ -65,6 +73,7 @@ impl Default for AsyncConfig {
             real_replicas: 1,
             compressor_granularity: 256 << 10,
             staging_interval_s: 1.0,
+            elastic: None,
         }
     }
 }
@@ -72,9 +81,11 @@ impl Default for AsyncConfig {
 /// Result: run metrics + channel traffic statistics.
 pub struct AsyncRunResult {
     pub metrics: RunMetrics,
-    pub channel_stats: ChannelStats,
+    pub channel_stats: crate::channels::ChannelStats,
     /// trainer updates performed.
     pub updates: usize,
+    /// Elastic re-provisioning adjustments applied (0 when disabled).
+    pub elastic_shifts: usize,
 }
 
 pub fn run_async(
@@ -84,232 +95,28 @@ pub fn run_async(
     compute: &Compute,
     cfg: &AsyncConfig,
 ) -> Result<AsyncRunResult> {
-    let agents = &layout.rollout_gmis;
-    let trainers = &layout.trainer_gmis;
-    anyhow::ensure!(!agents.is_empty() && !trainers.is_empty(), "async layout needs both");
-
-    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
-    let endpoints: Vec<TrainerEndpoint> = trainers
-        .iter()
-        .map(|&g| TrainerEndpoint { gmi: g, gpu: layout.manager.gmi(g).unwrap().gpu })
-        .collect();
-    let mut migrator = Migrator::new(endpoints);
-    let mut agent_gpus: Vec<usize> = Vec::new();
-    for &a in agents {
-        let gpu = layout.manager.gmi(a).unwrap().gpu;
-        migrator.register_agent(a, gpu);
-        if !agent_gpus.contains(&gpu) {
-            agent_gpus.push(gpu);
-        }
-    }
-    let mut dispensers: Vec<Dispenser> = agents
-        .iter()
-        .map(|&a| Dispenser::new(a, bench.obs_dim, bench.act_dim))
-        .collect();
-    let mut compressor = Compressor::with_staging_interval(
-        cfg.share_mode,
-        cfg.compressor_granularity,
-        cfg.staging_interval_s,
+    anyhow::ensure!(
+        !layout.rollout_gmis.is_empty() && !layout.trainer_gmis.is_empty(),
+        "async layout needs both"
     );
-    let mut batchers: BTreeMap<usize, Batcher> = trainers
-        .iter()
-        .map(|&t| (t, Batcher::new(t, cfg.share_mode, cfg.batch_samples)))
-        .collect();
-
-    // Real numerics on replica 0 only (agents mirror; trainers re-use the
-    // last real rollout for real gradient calls — same bytes the pipeline
-    // carries, see DESIGN.md §5).
-    let real_n = cfg.real_replicas.min(agents.len()).max(1);
-    let mut agent_workers = Vec::with_capacity(real_n);
-    for _ in 0..real_n {
-        agent_workers.push(compute.init(bench, cfg.seed)?);
-    }
-    let mut trainer_worker = compute.init(bench, cfg.seed)?;
-    let mut last_real_rollout = None;
 
     let mut engine = Engine::new(&layout.manager, cost);
-    let agent_ids = engine.add_group(agents)?;
-    let trainer_ids: BTreeMap<usize, ExecutorId> = trainers
-        .iter()
-        .copied()
-        .zip(engine.add_group(trainers)?)
-        .collect();
-    let mut stats = ChannelStats::default();
-    let mut rewards = RewardTracker::default();
-    let m = bench.horizon;
-    let mut updates = 0usize;
-    let mut samples_trained = 0usize;
-    let mut reward_sum = 0.0f64;
-    let mut reward_n = 0usize;
-    // (trainer batch queue handled inline: batches process on arrival.)
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
+    let agent_ids = engine.add_group(&layout.rollout_gmis)?;
+    let trainer_ids = engine.add_group(&layout.trainer_gmis)?;
+    let members = crate::workload::member_union(agent_ids, trainer_ids);
 
-    for round in 0..cfg.rounds {
-        let mut round_reward = 0.0f64;
-        let mut round_n = 0usize;
-        for i in 0..agents.len() {
-            let n_env = engine.num_env(agent_ids[i]);
+    let mut program = AsyncProgram::new(cfg.clone());
+    program.bind(&engine, &mut fabric, bench, &members)?;
+    run_to_completion(&mut program, &mut engine, &mut fabric, cost, bench, compute)?;
 
-            // rollout segment (sim + fwd per step); only the simulation
-            // records occupancy — the agent forward overlaps the pipeline.
-            let now = engine.charge_steps(
-                cost,
-                agent_ids[i],
-                m as f64,
-                &[
-                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
-                    OpCharge::unrecorded(OpKind::PolicyFwd { num_env: n_env }),
-                ],
-                0.0,
-            );
-
-            // Rollout numerics on the real replicas. Under Null compute
-            // only the deterministic pseudo reward is needed for the
-            // Fig 9-style curve — no tensors are materialized.
-            let seed = cfg.seed + (round * 257 + i) as i32;
-            let ro = if compute.is_real() && i < real_n {
-                Some(compute.rollout(bench, &mut agent_workers[i], seed)?)
-            } else {
-                None
-            };
-            if i < real_n {
-                let r = ro
-                    .as_ref()
-                    .map(|ro| ro.mean_reward)
-                    .unwrap_or_else(|| Compute::null_mean_reward(seed))
-                    as f64;
-                reward_sum += r;
-                reward_n += 1;
-                round_reward += r;
-                round_n += 1;
-            }
-
-            // experience: real bytes on real replicas, synthetic otherwise.
-            // In Null mode everything is synthetic at the GMI's own env
-            // count (the artifact batch size is irrelevant without real
-            // numerics).
-            let seg = match &ro {
-                Some(ro) => RolloutSegment {
-                    steps: bench.horizon,
-                    envs: bench.num_env,
-                    obs: ro.obs.as_f32()?.to_vec(),
-                    actions: ro.actions.as_f32()?.to_vec(),
-                    logps: ro.logps.as_f32()?.to_vec(),
-                    rewards: ro.rewards.as_f32()?.to_vec(),
-                    values: ro.values.as_f32()?.to_vec(),
-                    dones: ro.dones.as_f32()?.to_vec(),
-                },
-                None => RolloutSegment::synthetic(m, n_env, bench.obs_dim, bench.act_dim),
-            };
-            if let Some(ro) = ro {
-                last_real_rollout = Some(ro);
-            }
-
-            // DP -> CP -> MG -> BT. Chunks are grouped along the step axis
-            // at training-batch granularity; the migrator's sticky
-            // per-agent routing keeps all channels of an agent aligned at
-            // one trainer while agents balance across trainers.
-            let steps_per_group = (cfg.batch_samples / n_env.max(1)).max(1);
-            let groups =
-                dispensers[i].dispense_groups(&seg, now, cfg.share_mode, steps_per_group);
-            let mut packets = Vec::new();
-            for group in groups {
-                stats.chunks_in += group.len() as u64;
-                packets.extend(compressor.push(group));
-            }
-            for pkt in packets {
-                let decision = migrator.route(&mut fabric, &pkt);
-                // The sender pays a per-message submission overhead on its
-                // own timeline (IPC rendezvous + serialization) — the cost
-                // that makes fine-grained UCC sharing slow on the agent
-                // side (§4.2 / Table 8's PPS gap).
-                engine.pay(agent_ids[i], decision.sender_s);
-                stats.transfer_seconds += decision.transfer_s;
-                stats.transfer_ops += 1;
-                stats.packets_out += 1;
-                stats.bytes_moved += pkt.bytes() as u64;
-                let ready_batches = {
-                    let batcher = batchers.get_mut(&decision.trainer).unwrap();
-                    batcher.push(pkt, decision.arrival)
-                };
-
-                // trainer consumes ready batches immediately (async)
-                for batch in ready_batches {
-                    let tid = trainer_ids[&decision.trainer];
-                    engine.charge_after(
-                        cost,
-                        tid,
-                        batch.ready,
-                        &[
-                            OpCharge::recorded(OpKind::TrainGrad { samples: batch.samples }),
-                            OpCharge::unrecorded(OpKind::AdamApply),
-                        ],
-                    );
-                    migrator.complete(decision.trainer, batch.samples);
-                    samples_trained += batch.samples;
-                    updates += 1;
-
-                    // real gradient + update on the trainer worker
-                    if compute.is_real() {
-                        if let Some(ro) = &last_real_rollout {
-                            let (g, _) = compute.grad(bench, &trainer_worker, ro)?;
-                            compute.apply(bench, &mut trainer_worker, &g, cfg.lr)?;
-                        }
-                    }
-
-                    // param push-back every k updates. A3C is asynchronous:
-                    // agents never BLOCK on the trainer (they keep acting
-                    // on stale parameters); they only pay the receive cost
-                    // of the pushed tensor on their own timeline. The push
-                    // is a fabric plan (NVLink crossing + host delivery
-                    // into each agent GMI).
-                    if updates % cfg.param_sync_every == 0 {
-                        let push = fabric.plan_param_push(bench.param_bytes(), &agent_gpus);
-                        fabric.tally(&push, 1.0);
-                        engine.pay_group(&agent_ids, push.total_s());
-                        for w in agent_workers.iter_mut() {
-                            w.params = trainer_worker.params.clone();
-                        }
-                    }
-                }
-            }
-        }
-
-        // Fig 9-style learning signal: accumulate this round's mean reward
-        // into the cumulative curve at the agents' current virtual time
-        // (same RewardTracker semantics as run_sync).
-        if round_n > 0 {
-            rewards.push(
-                engine.max_time(&agent_ids).seconds(),
-                round_reward / round_n as f64,
-            );
-        }
-    }
-
-    // flush stragglers through the pipeline (counted but not trained)
-    let leftover = compressor.flush();
-    for pkt in leftover {
-        stats.packets_out += 1;
-        stats.bytes_moved += pkt.bytes() as u64;
-    }
-
-    let agent_span = engine.max_time(&agent_ids).seconds();
-    let span = engine.span();
-    let total_preds =
-        (cfg.rounds * m) as f64 * agents.len() as f64 * layout.num_env_per_gmi as f64;
-    let metrics = RunMetrics {
-        steps_per_sec: total_preds / span,
-        pps: total_preds / agent_span,
-        ttop: samples_trained as f64 / span,
-        span_s: span,
-        utilization: engine.mean_utilization(),
-        final_reward: if reward_n > 0 { reward_sum / reward_n as f64 } else { 0.0 },
-        reward_curve: rewards.curve.clone(),
-        comm_s: stats.transfer_seconds,
-        peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
-        links: fabric.link_report(),
-        latency: None,
-    };
-    Ok(AsyncRunResult { metrics, channel_stats: stats, updates })
+    let metrics = program.finish(&engine, &fabric);
+    Ok(AsyncRunResult {
+        metrics,
+        channel_stats: program.take_channel_stats(),
+        updates: program.updates(),
+        elastic_shifts: program.elastic_shifts(),
+    })
 }
 
 #[cfg(test)]
@@ -430,5 +237,90 @@ mod tests {
         assert_eq!(a.metrics.pps, c.metrics.pps);
         assert_eq!(a.updates, c.updates);
         assert_eq!(a.metrics.reward_curve, c.metrics.reward_curve);
+    }
+
+    /// A deliberately imbalanced async layout: starved agent GMIs
+    /// co-resident with an over-provisioned trainer on every GPU — the
+    /// shape the elastic controller exists to fix (agents and trainers
+    /// must share a GPU for share to move between them).
+    fn imbalanced_async_layout(topo: &Topology) -> Layout {
+        use crate::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+        let mut manager = GmiManager::new(topo.clone());
+        let mut rollout = Vec::new();
+        let mut trainers = Vec::new();
+        let mut id = 0usize;
+        for gpu in 0..topo.num_gpus() {
+            for _ in 0..2 {
+                manager
+                    .add_gmi(GmiSpec {
+                        id,
+                        gpu,
+                        sm_share: 0.15,
+                        mem_gib: 6.0,
+                        backend: GmiBackend::Mps,
+                        role: Role::SimAgent,
+                        num_env: 2048,
+                    })
+                    .unwrap();
+                rollout.push(id);
+                id += 1;
+            }
+            manager
+                .add_gmi(GmiSpec {
+                    id,
+                    gpu,
+                    sm_share: 0.7,
+                    mem_gib: 10.0,
+                    backend: GmiBackend::Mps,
+                    role: Role::Trainer,
+                    num_env: 0,
+                })
+                .unwrap();
+            trainers.push(id);
+            id += 1;
+        }
+        Layout {
+            manager,
+            rollout_gmis: rollout,
+            trainer_gmis: trainers,
+            gmi_per_gpu: 3,
+            num_env_per_gmi: 2048,
+            backend: GmiBackend::Mps,
+        }
+    }
+
+    #[test]
+    fn elastic_reprovisioning_beats_static_on_imbalanced_async_layout() {
+        // The A3C mirror of sync's bottleneck-shifting claim: a mostly
+        // idle co-resident trainer donates SM share to the starved agents
+        // between rounds, so agent predictions/s strictly improves.
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(1);
+        let cfg_static = AsyncConfig { rounds: 8, batch_samples: 4096, ..Default::default() };
+        let cfg_elastic = AsyncConfig {
+            rounds: 8,
+            batch_samples: 4096,
+            elastic: Some(ElasticConfig::default()),
+            ..Default::default()
+        };
+        let s = run_async(&imbalanced_async_layout(&topo), &b, &cost, &Compute::Null, &cfg_static)
+            .unwrap();
+        let e =
+            run_async(&imbalanced_async_layout(&topo), &b, &cost, &Compute::Null, &cfg_elastic)
+                .unwrap();
+        assert_eq!(s.elastic_shifts, 0, "static run must not re-provision");
+        assert!(e.elastic_shifts > 0, "controller never re-provisioned");
+        assert!(
+            e.metrics.pps > s.metrics.pps,
+            "elastic {} vs static {}",
+            e.metrics.pps,
+            s.metrics.pps
+        );
+        // The caller's layout is a static description: elastic runs never
+        // mutate it (the engine re-provisions its own live clone).
+        let layout = imbalanced_async_layout(&topo);
+        run_async(&layout, &b, &cost, &Compute::Null, &cfg_elastic).unwrap();
+        assert_eq!(layout.manager.gmi(0).unwrap().sm_share, 0.15);
     }
 }

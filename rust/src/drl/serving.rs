@@ -8,7 +8,11 @@
 //! Timing runs on the shared [`engine`](crate::engine): each serving GMI is
 //! one executor; the TDG boundary crossing is a [`fabric`](crate::fabric)
 //! intra-GPU plan charged as unoccupied per-step time on the same timeline
-//! (and tallied into the per-link traffic report).
+//! (and tallied into the per-link traffic report). The round loop lives in
+//! the steppable workload program
+//! ([`workload::ClosedServingProgram`](crate::workload::ClosedServingProgram))
+//! shared with the multi-tenant scheduler; [`run_serving`] is the thin
+//! standalone driver.
 
 use anyhow::Result;
 
@@ -20,6 +24,7 @@ use crate::gmi::Role;
 use crate::mapping::Layout;
 use crate::metrics::RunMetrics;
 use crate::vtime::{CostModel, OpKind};
+use crate::workload::{run_to_completion, ClosedServingProgram, Workload};
 
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -62,83 +67,16 @@ pub fn run_serving(
     compute: &Compute,
     cfg: &ServingConfig,
 ) -> Result<RunMetrics> {
-    let gmis = &layout.rollout_gmis;
-    anyhow::ensure!(!gmis.is_empty(), "no serving GMIs");
-
-    // TDG pairs: each simulator GMI has a dedicated agent GMI (the paper's
-    // rejected design); interactions bounce state/action across the host.
-    let dedicated = is_dedicated(layout);
-
-    let real_n = cfg.real_replicas.min(gmis.len()).max(1);
-    let mut workers = Vec::with_capacity(real_n);
-    for _ in 0..real_n {
-        workers.push(compute.init(bench, cfg.seed)?);
-    }
+    anyhow::ensure!(!layout.rollout_gmis.is_empty(), "no serving GMIs");
 
     let mut engine = Engine::new(&layout.manager, cost);
     let mut fabric = Fabric::single_node(layout.manager.topology().clone());
-    let ids = engine.add_group(gmis)?;
-    let m = bench.horizon;
-    let mut reward_sum = 0.0f64;
-    let mut reward_count = 0usize;
-    // Fabric seconds of the TDG boundary crossings (charged in aggregate
-    // on the executors' timelines, tallied here for the comm report).
-    let mut comm_s = 0.0f64;
+    let ids = engine.add_group(&layout.rollout_gmis)?;
 
-    for round in 0..cfg.rounds {
-        for (i, &id) in ids.iter().enumerate() {
-            let n_env = engine.num_env(id);
-            let share = engine.share(id);
-
-            let sim = OpCharge::recorded(OpKind::SimStep { num_env: n_env });
-            // In TDG the agent runs on its own small GMI; model its forward
-            // at the agent GMI's slice of the pair budget.
-            let fwd = if dedicated {
-                tdg_agent_fwd(n_env, share)
-            } else {
-                OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
-            };
-            // TDG: per interaction step, 2S + A + W bytes cross the GMI
-            // boundary through the host (Table 4) — a fabric intra-GPU
-            // plan, tallied once per step.
-            let t_comm = if dedicated {
-                let bytes = n_env * 4 * (2 * bench.obs_dim + bench.act_dim + 1);
-                let hop =
-                    fabric.plan_intra_gpu(bytes, engine.co_resident(id).max(1), engine.gpu(id));
-                fabric.tally(&hop, m as f64);
-                comm_s += hop.total_s() * m as f64;
-                hop.total_s()
-            } else {
-                0.0
-            };
-            engine.charge_steps(cost, id, m as f64, &[sim, fwd], t_comm);
-
-            if i < real_n {
-                let ro =
-                    compute.rollout(bench, &mut workers[i], cfg.seed + (round * 37 + i) as i32)?;
-                reward_sum += ro.mean_reward as f64;
-                reward_count += 1;
-            }
-        }
-    }
-
-    let span = engine.span();
-    let total_steps = (cfg.rounds * m) as f64
-        * gmis.len() as f64
-        * layout.num_env_per_gmi as f64;
-    Ok(RunMetrics {
-        steps_per_sec: total_steps / span,
-        pps: total_steps / span,
-        ttop: 0.0,
-        span_s: span,
-        utilization: engine.mean_utilization(),
-        final_reward: if reward_count > 0 { reward_sum / reward_count as f64 } else { 0.0 },
-        reward_curve: vec![],
-        comm_s,
-        peak_mem_gib: cost.mem_gib(layout.num_env_per_gmi, m, true, false),
-        links: fabric.link_report(),
-        latency: None,
-    })
+    let mut program = ClosedServingProgram::new(cfg.clone());
+    program.bind(&engine, &mut fabric, bench, &ids)?;
+    run_to_completion(&mut program, &mut engine, &mut fabric, cost, bench, compute)?;
+    Ok(program.finish(&engine, &fabric))
 }
 
 #[cfg(test)]

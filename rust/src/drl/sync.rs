@@ -7,13 +7,16 @@
 //! layouts the experience additionally crosses GMI boundaries (the cost the
 //! paper's TCG_EX avoids).
 //!
-//! All timing runs on the shared [`engine`](crate::engine): this module
-//! describes *what* executes where; clocks, share math, and utilization
-//! accounting live in the engine, and every transfer (gradient reduction,
-//! TDG experience/parameter movement) is a [`fabric`](crate::fabric) plan
-//! executed as an engine event. With [`SyncConfig::elastic`] set, the
-//! engine's elastic controller re-provisions SM shares between iterations
-//! toward the bottleneck role.
+//! The iteration loop itself lives in the steppable workload program
+//! ([`workload::SyncProgram`](crate::workload::SyncProgram)) — ONE
+//! implementation shared with the multi-tenant scheduler — and
+//! [`run_sync`] is the thin standalone driver: build the engine + fabric
+//! from the layout, bind the program, and step it to completion. All
+//! timing runs on the shared [`engine`](crate::engine); every transfer
+//! (gradient reduction, TDG experience/parameter movement) is a
+//! [`fabric`](crate::fabric) plan executed as an engine event. With
+//! [`SyncConfig::elastic`] set, the engine's elastic controller
+//! re-provisions SM shares between iterations toward the bottleneck role.
 //!
 //! ## Overlap semantics ([`SyncConfig::overlap`], on by default)
 //!
@@ -31,14 +34,15 @@
 
 use anyhow::Result;
 
-use super::compute::{Compute, WorkerState};
+use super::compute::Compute;
 use crate::comm::ReduceStrategy;
 use crate::config::BenchInfo;
-use crate::engine::{ElasticConfig, ElasticController, Engine, OpCharge};
+use crate::engine::{ElasticConfig, Engine};
 use crate::fabric::Fabric;
 use crate::mapping::Layout;
-use crate::metrics::{RewardTracker, RunMetrics};
-use crate::vtime::{Clock, CostModel, OpKind};
+use crate::metrics::RunMetrics;
+use crate::vtime::CostModel;
+use crate::workload::{run_to_completion, SyncProgram, Workload};
 
 /// Sync-training run configuration.
 #[derive(Debug, Clone)]
@@ -104,245 +108,27 @@ pub fn run_sync(
     let n_roll = layout.rollout_gmis.len();
     let n_train = layout.trainer_gmis.len();
     anyhow::ensure!(n_roll > 0 && n_train > 0, "layout has no rollout/trainer GMIs");
-    let colocated = layout.rollout_gmis == layout.trainer_gmis;
 
-    // LGR over the trainer GMIs: the run's one fabric both plans the
-    // reduction (cheapest valid plan unless pinned via `--reduce`) and
-    // executes it, so every plan's link ids refer to the fabric that
-    // drains it. All transfer timing below runs through fabric plans
-    // executed as engine events.
-    let mpl = layout.manager.mapping_list(|r| r.has_trainer());
-    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
-    let (strategy, reduce_plan) = match cfg.strategy_override {
-        Some(s) => (s, fabric.plan_allreduce(&mpl, bench.param_bytes(), s)?),
-        None => fabric.cheapest_allreduce(&mpl, bench.param_bytes()),
-    };
-
-    // The execution engine: one executor per role task. Colocated layouts
-    // (TCG_EX holistic GMIs) alias rollout and trainer onto one timeline.
+    // The engine clones the layout's manager (the caller's static layout
+    // is never mutated, even by elastic runs) and the run's one fabric
+    // both plans and executes every transfer.
     let mut engine = Engine::new(&layout.manager, cost);
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
     let roll_ids = engine.add_group(&layout.rollout_gmis)?;
     let tr_ids = engine.add_group(&layout.trainer_gmis)?;
-    let mut elastic = cfg.elastic.clone().map(ElasticController::new);
-    // Completion of the last issued overlapped reduction: the next
-    // parameter consumer blocks on it (None until the first reduction).
-    let mut params_ready: Option<Clock> = None;
+    let members = crate::workload::member_union(roll_ids, tr_ids);
 
-    // Worker state per rollout GMI (params/adam/env); trainers in TDG_EX
-    // share the leader worker state of their GPU's serving GMIs.
-    let real_n = cfg.real_replicas.min(n_roll).max(1);
-    let mut workers: Vec<WorkerState> = Vec::with_capacity(n_roll);
-    for (i, _) in layout.rollout_gmis.iter().enumerate() {
-        if i < real_n {
-            workers.push(compute.init(bench, cfg.seed)?);
-        } else {
-            workers.push(workers[0].clone());
-        }
-    }
+    let mut program = SyncProgram::new(cfg.clone(), bench.horizon);
+    program.bind(&engine, &mut fabric, bench, &members)?;
+    run_to_completion(&mut program, &mut engine, &mut fabric, cost, bench, compute)?;
 
-    let mut rewards = RewardTracker::default();
-    let mut stats_per_iter = Vec::new();
-    let mut peak_mem: f64 = 0.0;
-
-    let m = bench.horizon;
-    let exp_bytes_per_gmi =
-        layout.num_env_per_gmi * m * bench.experience_bytes_per_step();
-
-    for iter in 0..cfg.iterations {
-        // ---- (i) experience collection on every rollout GMI ----
-        let mut rollouts: Vec<super::RolloutOut> = Vec::with_capacity(n_roll);
-        for i in 0..n_roll {
-            let n_env = engine.num_env(roll_ids[i]);
-            engine.charge_steps(cost, roll_ids[i], m as f64, &super::rollout_charges(n_env), 0.0);
-            peak_mem = peak_mem.max(cost.mem_gib(n_env, m, true, colocated));
-
-            let ro = if i < real_n {
-                compute.rollout(bench, &mut workers[i], cfg.seed + (iter * 131 + i) as i32)?
-            } else {
-                // mirror replica 0's experience (identical distribution)
-                rollouts[0].clone()
-            };
-            rollouts.push(ro);
-        }
-
-        // TDG_EX: ship experience from serving GMIs to their GPU's trainer
-        // and later ship parameters back (the Table 5 COM term). The gather
-        // is a fabric plan: the k feeders contend and serialize on the
-        // trainer GPU's host path.
-        if !colocated {
-            for (t_idx, _) in layout.trainer_gmis.iter().enumerate() {
-                let tgpu = engine.gpu(tr_ids[t_idx]);
-                // serving GMIs on the same GPU feed this trainer.
-                let feeders: Vec<usize> = roll_ids
-                    .iter()
-                    .copied()
-                    .filter(|&e| engine.gpu(e) == tgpu)
-                    .collect();
-                let k = feeders.len().max(1);
-                let gather = fabric.plan_gather(k, exp_bytes_per_gmi, tgpu);
-                // trainer waits for the slowest feeder, then the transfer.
-                let feed_max = engine.max_time(&feeders);
-                engine.recv_plan(&mut fabric, tr_ids[t_idx], feed_max, &gather);
-            }
-        }
-
-        // ---- (ii) PPO epochs of minibatch updates ----
-        // Virtual time: every (epoch, minibatch) is a gradient over
-        // samples/minibatches plus one LGR reduction plus an Adam apply —
-        // the collective traffic pattern Table 7 measures. Real numerics:
-        // the grad artifact operates on the full batch, so the real
-        // gradient/reduction/update runs once per epoch (the minibatch
-        // partitioning changes traffic, not the per-epoch math).
-        let mut iter_stats = super::TrainStats::default();
-        let mb = cfg.minibatches.max(1);
-        for _epoch in 0..cfg.ppo_epochs {
-            // Real gradients, once per epoch. Only the real replicas are
-            // materialized; the reduced gradient is their mean with
-            // replica 0 weighted by the mirror count (mirrors hold exact
-            // copies of replica 0's gradient, so this equals the full
-            // n_train-way mean without n_train vector clones — §Perf L3
-            // iteration 2).
-            let mut real_grads: Vec<Vec<f32>> = Vec::with_capacity(real_n);
-            for widx in 0..real_n.min(n_train) {
-                let (g, st) = compute.grad(bench, &workers[widx], &rollouts[widx])?;
-                if widx == 0 {
-                    iter_stats = st;
-                }
-                real_grads.push(g);
-            }
-            let reduced = if real_grads.len() == 1 || n_train == 1 {
-                real_grads.swap_remove(0)
-            } else {
-                let k = real_grads.len();
-                let w0 = (n_train - k + 1) as f32;
-                let mut acc = real_grads.swap_remove(0);
-                for v in acc.iter_mut() {
-                    *v *= w0;
-                }
-                for g in &real_grads {
-                    for (a, v) in acc.iter_mut().zip(g.iter()) {
-                        *a += v;
-                    }
-                }
-                let inv = 1.0 / n_train as f32;
-                for v in acc.iter_mut() {
-                    *v *= inv;
-                }
-                acc
-            };
-
-            // virtual minibatch loop: grad/apply on the compute stream, one
-            // LGR reduction per minibatch on the fabric. Sequential mode
-            // blocks every trainer on every reduction (the PR 1 schedule);
-            // overlap mode lets reduction k drain while minibatch k+1
-            // computes, re-synchronizing at the next epoch's first gradient
-            // (the point that consumes the reduced parameters).
-            for mb_i in 0..mb {
-                for t_idx in 0..n_train {
-                    let total_samples = if colocated {
-                        layout.num_env_per_gmi * m
-                    } else {
-                        layout.num_env_per_gmi * m * (n_roll / n_train).max(1)
-                    };
-                    let samples = (total_samples / mb).max(1);
-                    let ops = [
-                        OpCharge::recorded(OpKind::TrainGrad { samples }),
-                        OpCharge::recorded(OpKind::AdamApply),
-                    ];
-                    match (mb_i, params_ready) {
-                        // First gradient after an overlapped reduction:
-                        // block on the reduced parameters landing.
-                        (0, Some(ready)) => {
-                            engine.charge_after(cost, tr_ids[t_idx], ready, &ops);
-                        }
-                        _ => {
-                            engine.charge_steps(cost, tr_ids[t_idx], 1.0, &ops, 0.0);
-                        }
-                    }
-                }
-                if reduce_plan.is_empty() {
-                    continue;
-                }
-                if cfg.overlap {
-                    params_ready =
-                        Some(engine.collective_overlapped(&mut fabric, &tr_ids, &reduce_plan));
-                } else {
-                    engine.collective(&mut fabric, &tr_ids, &reduce_plan);
-                }
-            }
-
-            // real update, once per epoch
-            for w in workers.iter_mut().take(real_n) {
-                compute.apply(bench, w, &reduced, cfg.lr)?;
-            }
-            for i in real_n..n_roll {
-                workers[i] = workers[0].clone();
-            }
-        }
-
-        // TDG_EX: parameters flow back to the serving GMIs once the last
-        // reduction has drained.
-        if !colocated {
-            let roll_gpus: Vec<usize> = {
-                let mut g: Vec<usize> = roll_ids.iter().map(|&r| engine.gpu(r)).collect();
-                g.sort_unstable();
-                g.dedup();
-                g
-            };
-            let fan = fabric.plan_fanout(
-                bench.param_bytes(),
-                n_roll / n_train.max(1),
-                &roll_gpus,
-            );
-            let mut from = engine.max_time(&tr_ids);
-            if let Some(ready) = params_ready {
-                from = Clock(from.seconds().max(ready.seconds()));
-            }
-            engine.broadcast_plan(&mut fabric, &roll_ids, from, &fan);
-        }
-
-        let mean_r = rollouts.iter().map(|r| r.mean_reward as f64).sum::<f64>()
-            / rollouts.len() as f64;
-        rewards.push(engine.max_time(&roll_ids).seconds(), mean_r);
-        stats_per_iter.push(iter_stats);
-
-        // ---- (iii) elastic re-provisioning between iterations ----
-        if let Some(ctl) = elastic.as_mut() {
-            ctl.rebalance(&mut engine, &roll_ids, &tr_ids);
-        }
-    }
-
-    // The final overlapped reduction drains past the last compute charge:
-    // the run isn't over until its parameters landed.
-    if let Some(ready) = params_ready {
-        engine.wait_group(&tr_ids, ready);
-    }
-
-    // ---- metrics ----
-    let span = engine.span();
-    let total_env_steps = (cfg.iterations * m) as f64
-        * layout.rollout_gmis.len() as f64
-        * layout.num_env_per_gmi as f64;
-    let total_samples = total_env_steps * cfg.ppo_epochs as f64;
-    let metrics = RunMetrics {
-        steps_per_sec: total_env_steps / span,
-        pps: total_env_steps / span,
-        ttop: total_samples / span,
-        span_s: span,
-        utilization: engine.mean_utilization(),
-        final_reward: rewards.final_reward(),
-        reward_curve: rewards.curve.clone(),
-        comm_s: engine.comm_s(),
-        peak_mem_gib: peak_mem,
-        links: fabric.link_report(),
-        latency: None,
-    };
+    let metrics = program.finish(&engine, &fabric);
     Ok(SyncRunResult {
         metrics,
-        strategy,
-        final_params: workers.into_iter().next().map(|w| w.params).unwrap_or_default(),
-        stats_per_iter,
-        elastic_shifts: elastic.map(|c| c.shifts()).unwrap_or(0),
+        strategy: program.strategy(),
+        final_params: program.take_final_params(),
+        stats_per_iter: program.take_stats(),
+        elastic_shifts: program.elastic_shifts(),
     })
 }
 

@@ -22,9 +22,13 @@
 //! ```text
 //! scheduler       sched::{run_cluster, JobSpec}          multi-tenant co-scheduling:
 //!       │                                                admission, priority preemption,
-//!       │  admit / preempt / restore                     SLO pressure, restore, fairness
+//!       │  bind / step / slo_signal / finish             SLO pressure, restore, fairness
 //!       ▼
-//! orchestrators   drl::{serving, sync, a3c}, baselines,  what runs when
+//! workloads       workload::{SyncProgram, AsyncProgram,  steppable workload programs —
+//!                 ClosedServingProgram, GatewayProgram}  ONE implementation per workload
+//!       ▲  build + step to completion
+//!       │
+//! drivers         drl::{serving, sync, a3c}, baselines,  thin standalone entrypoints
 //!                 serve::{gateway, autoscale}
 //!       │  charge(ops) / collectives / transfers
 //!       ▼
@@ -65,10 +69,23 @@
 //! percentiles land in [`metrics::LatencyStats`] on the run's
 //! [`metrics::RunMetrics`].
 //!
+//! The [`workload`] layer is what keeps the standalone drivers and the
+//! scheduler from diverging: every workload (sync PPO, A3C, closed-loop
+//! serving, the open-loop gateway) is ONE steppable
+//! [`workload::Workload`] program — a round-based coroutine over the
+//! shared engine + fabric with `bind` (membership hooks for
+//! preempt/resize/restore), `step` (charge up to a horizon), and `finish`
+//! (fold to [`metrics::RunMetrics`]). Standalone drivers step a program
+//! with an infinite horizon; the scheduler steps the same program one
+//! scheduling round at a time, so a single-tenant cluster run is
+//! bit-identical to the standalone run (`rust/tests/prop_workload.rs`).
+//!
 //! The [`sched`] layer drops the one-job-per-cluster assumption: a queue
-//! of heterogeneous tenants ([`sched::JobSpec`] — training runs, serving
-//! fleets with SLO classes) co-executes on ONE shared engine. Executors
-//! carry job tags, so per-job busy/communication totals and cross-job
+//! of heterogeneous tenants ([`sched::JobSpec`] — training runs, A3C
+//! pipelines, closed-loop collectors, serving fleets with SLO classes)
+//! co-executes on ONE shared engine, each tenant a [`workload::Workload`]
+//! program built by its [`sched::JobKind`] constructor. Executors carry
+//! job tags, so per-job busy/communication totals and cross-job
 //! interference seconds fall out of the same accounting, and the
 //! scheduler preempts (validated shrink + evict, floor-guarded by the
 //! manager's typed [`gmi::RemoveGmiError`]) and restores tenants as
@@ -91,6 +108,7 @@ pub mod sched;
 pub mod selection;
 pub mod serve;
 pub mod vtime;
+pub mod workload;
 
 pub use config::{BenchInfo, Manifest};
 pub use runtime::{ArtifactKind, ExecHandle, HostTensor};

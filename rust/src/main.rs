@@ -185,7 +185,7 @@ COMMON OPTIONS:
   --backend mps|mig|direct    force a GMI backend
   --mode mcc|ucc              async experience sharing mode
   --elastic                   re-provision SM shares toward the bottleneck
-                              role between sync iterations
+                              role between sync iterations / async rounds
   --no-overlap                disable compute/communication overlap (sync):
                               strictly sequential per-minibatch reductions
   --granularity BYTES         per-channel compressor staging threshold
@@ -464,6 +464,9 @@ fn cmd_train_async(args: &Args) -> Result<()> {
             .get("granularity", AsyncConfig::default().compressor_granularity)?,
         staging_interval_s: args
             .get("staging-interval", AsyncConfig::default().staging_interval_s)?,
+        elastic: args
+            .flag("elastic")
+            .then(gmi_drl::engine::ElasticConfig::default),
     };
     let layout = build_async_layout(
         &topo,
@@ -498,7 +501,7 @@ fn cmd_multi(args: &Args) -> Result<()> {
     let bench = bench_info(&args.str("bench", "AT"), false)?;
     let cost = CostModel::new(&bench);
     let gpus: usize = args.get("gpus", 2)?;
-    anyhow::ensure!(gpus >= 2 && gpus % 2 == 0, "multi needs an even GPU count >= 2");
+    anyhow::ensure!(gpus >= 2, "multi needs at least 2 GPUs");
     let topo = Topology::dgx_a100(gpus);
     let duration: f64 = args.get("duration", 1.0)?;
     let seed: u64 = args.get("seed", 7)?;

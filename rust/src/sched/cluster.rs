@@ -3,27 +3,38 @@
 //!
 //! One [`run_cluster`] call owns a single shared [`Engine`] + [`Fabric`]
 //! pair and advances cluster time in fixed scheduling rounds
-//! ([`SchedConfig::quantum_s`]). Each round, in order:
+//! ([`SchedConfig::quantum_s`]). Each tenant IS a steppable
+//! [`Workload`](crate::workload::Workload) program — the identical
+//! implementation its standalone run loop drives
+//! ([`JobSpec::build_program`]) — so the scheduler contains no per-kind
+//! execution logic: it only places, preempts, restores, and steps. Each
+//! round, in order:
 //!
-//! 1. **SLO decisions** — a serving tenant whose previous round's
-//!    dispatched p99 violated its SLO grows (a new member GMI, preempting
-//!    lower-priority tenants if placement needs room); one comfortably
-//!    under `restore_frac x SLO` retires its most recently grown member.
+//! 1. **SLO decisions** — a latency-sensitive tenant whose previous
+//!    round's dispatched p99 ([`Workload::slo_signal`]) violated its SLO
+//!    grows (a new member GMI, preempting lower-priority tenants if
+//!    placement needs room); one comfortably under `restore_frac x SLO`
+//!    retires its most recently grown member.
 //! 2. **Admissions** — arrived queued jobs admit in priority order; when
 //!    placement fails, lower-priority tenants are first *shrunk* to their
 //!    per-member `min_share` (validated resizes) and then *evicted* one
 //!    member at a time down to their `min_gmis` floor — the manager's
 //!    [`RemoveGmiError::BelowJobFloor`](crate::gmi::RemoveGmiError) guard
-//!    makes over-eviction impossible by construction.
-//! 3. **Restores** — when no serving tenant is under SLO pressure,
-//!    preempted tenants get one action per round back toward their
-//!    admitted provisioning: re-add an evicted member, else regrow
-//!    shrunken members into free share.
-//! 4. **Steps** — serving tenants batch and dispatch the round's arrivals
-//!    through the shared dispatch cost model
-//!    ([`serve::execute_dispatch`](crate::serve::execute_dispatch));
-//!    training tenants run whole sync iterations until their executor
-//!    frontier passes the round boundary.
+//!    makes over-eviction impossible by construction. An admitted tenant
+//!    gets its program built and bound to the placed members.
+//! 3. **Restores** — when no tenant is under SLO pressure, preempted
+//!    tenants get one action per round back toward their admitted
+//!    provisioning: re-add an evicted member, else regrow shrunken
+//!    members into free share.
+//! 4. **Steps** — every running program is stepped to the round boundary
+//!    (`Workload::step` with the boundary as horizon). Programs own every
+//!    piece of run state, so preempt → restore resumes mid-program
+//!    without re-charging completed work; a program reporting
+//!    [`StepOutcome::Done`] completes and releases its GMIs.
+//!
+//! After any membership or provisioning change the affected tenant's
+//! program is re-bound ([`Workload::bind`]) so placement-derived caches
+//! (e.g. a training tenant's allreduce plan) track the live fleet.
 //!
 //! Every placement, resize, and removal goes through the engine's live
 //! [`GmiManager`](crate::gmi::GmiManager) validation, so no arrival
@@ -33,22 +44,25 @@
 //! exactly that. Per-job service (busy seconds, communication seconds,
 //! cross-job interference seconds) comes from the engine's job tagging;
 //! cluster fairness is Jain's index over per-job busy GPU-seconds.
+//!
+//! A single-tenant cluster run is bit-identical to the standalone run of
+//! the same workload program (asserted in `rust/tests/prop_workload.rs`).
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
+use std::collections::BTreeSet;
 
 use anyhow::Result;
 
-use super::job::{JobId, JobKind, JobSpec};
+use super::job::{JobId, JobSpec};
 use crate::cluster::Topology;
 use crate::config::BenchInfo;
-use crate::drl::rollout_charges;
-use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::drl::Compute;
+use crate::engine::{Engine, ExecutorId};
 use crate::fabric::Fabric;
 use crate::gmi::{GmiBackend, GmiId, GmiSpec};
-use crate::metrics::{jain_index, percentile, LatencyStats, RunMetrics, Table};
-use crate::serve::{execute_dispatch, least_loaded, Request};
-use crate::vtime::{CostModel, OpKind};
+use crate::metrics::{jain_index, RunMetrics, Table};
+use crate::vtime::CostModel;
+use crate::workload::{StepCtx, StepOutcome, Workload};
 
 /// Scheduler policy knobs.
 #[derive(Debug, Clone)]
@@ -147,11 +161,14 @@ pub struct JobReport {
     pub id: JobId,
     pub name: String,
     pub priority: u8,
-    /// "training" or "serving".
+    /// "training", "serving", "gateway", "closed", or "async".
     pub kind: &'static str,
-    /// Per-job throughput/latency view; `latency` is set for serving
-    /// tenants, `steps_per_sec` is env-steps/s (training) or served
-    /// requests/s (serving) over the job's own admitted-to-completed span.
+    /// The workload program's own metrics ([`Workload::finish`]) — for a
+    /// single-tenant cluster, bit-identical to the standalone run's.
+    /// Span, rates, and `comm_s` are scoped to the job (comm via the
+    /// engine's job tags); engine-wide aggregates (utilization, links)
+    /// reflect the shared cluster at the job's completion; per-job service
+    /// attribution is in `busy_s` / `xjob_interference_s` below.
     pub metrics: RunMetrics,
     pub admitted_s: f64,
     pub completed_s: f64,
@@ -239,13 +256,20 @@ enum State {
     Done,
 }
 
-/// Per-tenant runtime bookkeeping.
+/// Per-tenant runtime bookkeeping. Everything workload-specific lives in
+/// the program; the scheduler only tracks placement and timeline facts.
 struct Tenant {
     spec: JobSpec,
     state: State,
     /// Active member GMIs and their executors (parallel vectors).
     gmis: Vec<GmiId>,
     execs: Vec<ExecutorId>,
+    /// The steppable workload program (built at admission).
+    program: Option<Box<dyn Workload>>,
+    /// Program reported [`StepOutcome::Done`]; completes this round.
+    done: bool,
+    /// The program's final metrics, captured at completion.
+    final_metrics: Option<RunMetrics>,
     admitted_s: f64,
     completed_s: f64,
     queued_logged: bool,
@@ -253,20 +277,9 @@ struct Tenant {
     restores: usize,
     share_at_completion: f64,
     gmis_at_completion: usize,
-    // serving bookkeeping
-    next_req: usize,
-    queue: VecDeque<usize>,
-    latencies: Vec<f64>,
-    window_lat: Vec<f64>,
-    last_p99: Option<f64>,
+    /// Members gained under SLO pressure, most recent last (shrink
+    /// retires these first, LIFO).
     grown: Vec<GmiId>,
-    batch_sizes: Vec<usize>,
-    inflight: BinaryHeap<Reverse<u64>>,
-    max_queue_depth: usize,
-    served: usize,
-    // training bookkeeping
-    iters_done: usize,
-    env_steps: f64,
 }
 
 impl Tenant {
@@ -276,6 +289,9 @@ impl Tenant {
             state: State::Queued,
             gmis: Vec::new(),
             execs: Vec::new(),
+            program: None,
+            done: false,
+            final_metrics: None,
             admitted_s: 0.0,
             completed_s: 0.0,
             queued_logged: false,
@@ -283,18 +299,7 @@ impl Tenant {
             restores: 0,
             share_at_completion: 0.0,
             gmis_at_completion: 0,
-            next_req: 0,
-            queue: VecDeque::new(),
-            latencies: Vec::new(),
-            window_lat: Vec::new(),
-            last_p99: None,
             grown: Vec::new(),
-            batch_sizes: Vec::new(),
-            inflight: BinaryHeap::new(),
-            max_queue_depth: 0,
-            served: 0,
-            iters_done: 0,
-            env_steps: 0.0,
         }
     }
 }
@@ -305,6 +310,8 @@ struct Cluster<'a> {
     cfg: &'a SchedConfig,
     engine: Engine,
     fabric: Fabric,
+    /// Cluster tenants run Null numerics (virtual timing is identical).
+    compute: Compute,
     tenants: Vec<Tenant>,
     events: Vec<SchedEvent>,
     next_gmi: GmiId,
@@ -337,6 +344,7 @@ pub fn run_cluster(
         cfg,
         engine: Engine::new(&manager, cost),
         fabric: Fabric::single_node(topo.clone()),
+        compute: Compute::Null,
         tenants: jobs.iter().cloned().map(Tenant::new).collect(),
         events: Vec::new(),
         next_gmi: 0,
@@ -366,15 +374,15 @@ impl Cluster<'_> {
             if self.cfg.preemptive {
                 self.slo_decisions(now);
             }
-            self.admissions(now);
+            self.admissions(now)?;
             if self.cfg.preemptive {
                 self.restore_pass(now);
             }
             for idx in self.order_running(true) {
-                self.step_serving(idx, round_end);
+                self.step_tenant(idx, round_end)?;
             }
             for idx in self.order_running(false) {
-                self.step_training(idx, round_end);
+                self.step_tenant(idx, round_end)?;
             }
             // Sample occupancy peaks BEFORE completions release GMIs, so a
             // tenant admitted and finished within one round is observed.
@@ -409,6 +417,45 @@ impl Cluster<'_> {
         });
     }
 
+    /// Step one running tenant's program to the round boundary.
+    fn step_tenant(&mut self, idx: usize, round_end: f64) -> Result<()> {
+        if self.tenants[idx].state != State::Running || self.tenants[idx].done {
+            return Ok(());
+        }
+        let mut program =
+            self.tenants[idx].program.take().expect("running tenant has a program");
+        let outcome = {
+            let mut ctx = StepCtx {
+                engine: &mut self.engine,
+                fabric: &mut self.fabric,
+                cost: self.cost,
+                bench: self.bench,
+                compute: &self.compute,
+                horizon_s: round_end,
+            };
+            program.step(&mut ctx)
+        };
+        self.tenants[idx].program = Some(program);
+        if outcome? == StepOutcome::Done {
+            self.tenants[idx].done = true;
+        }
+        Ok(())
+    }
+
+    /// Re-bind a running tenant's program after a membership or
+    /// provisioning change (the preempt/resize/restore hook).
+    fn rebind(&mut self, idx: usize) {
+        if self.tenants[idx].state != State::Running {
+            return;
+        }
+        let Some(mut program) = self.tenants[idx].program.take() else { return };
+        let execs = self.tenants[idx].execs.clone();
+        program
+            .bind(&self.engine, &mut self.fabric, self.bench, &execs)
+            .expect("re-bind of a placed tenant cannot fail");
+        self.tenants[idx].program = Some(program);
+    }
+
     // ---- capacity / placement ----
 
     /// Used (SM share, memory GiB) of one GPU per the engine's live
@@ -433,15 +480,18 @@ impl Cluster<'_> {
 
     /// Place ONE member for tenant `idx` at its spec share on the allowed
     /// GPU with the most free share (ties to the lowest index), register
-    /// its executor, tag its job, and advance its clock to `now`.
+    /// its executor, tag its job, and advance its clock to `now`. The
+    /// member's role and env count come from its index in the member list
+    /// (async tenants mix agent and trainer members).
     fn place_one(&mut self, idx: usize, now: f64) -> Option<GmiId> {
+        let member_idx = self.tenants[idx].gmis.len();
         let (share, mem, role, num_env, job, allowed) = {
             let s = &self.tenants[idx].spec;
             (
                 s.share,
                 s.mem_gib,
-                s.role(),
-                s.member_num_env(),
+                s.member_role(member_idx),
+                s.member_num_env(member_idx),
                 s.id,
                 s.allowed_gpus(self.engine.topology()),
             )
@@ -529,6 +579,7 @@ impl Cluster<'_> {
             }
             if changed > 0 {
                 self.tenants[i].preemptions += 1;
+                self.rebind(i);
                 self.push_event(
                     now,
                     i,
@@ -575,13 +626,14 @@ impl Cluster<'_> {
         t.execs.pop();
         t.grown.retain(|&g| g != gmi);
         t.preemptions += 1;
+        self.rebind(i);
         self.push_event(now, i, SchedAction::Evict, format!("evicted member GMI {gmi}"));
         true
     }
 
     // ---- admission ----
 
-    fn admissions(&mut self, now: f64) {
+    fn admissions(&mut self, now: f64) -> Result<()> {
         let mut order: Vec<usize> = (0..self.tenants.len())
             .filter(|&i| {
                 self.tenants[i].state == State::Queued
@@ -596,11 +648,12 @@ impl Cluster<'_> {
                 .then(ta.id.cmp(&tb.id))
         });
         for idx in order {
-            self.try_admit(idx, now);
+            self.try_admit(idx, now)?;
         }
+        Ok(())
     }
 
-    fn try_admit(&mut self, idx: usize, now: f64) {
+    fn try_admit(&mut self, idx: usize, now: f64) -> Result<()> {
         let prio = self.tenants[idx].spec.priority;
         let mut ok = self.try_place_initial(idx, now);
         if !ok && self.cfg.preemptive {
@@ -618,23 +671,28 @@ impl Cluster<'_> {
                 (t.spec.id, t.spec.floor_share())
             };
             self.engine.set_job_floor(job, floor);
+            // Build the workload program and bind it to the placed
+            // members: from here on the tenant is just stepped.
+            let mut program = self.tenants[idx].spec.build_program();
+            let execs = self.tenants[idx].execs.clone();
+            program.bind(&self.engine, &mut self.fabric, self.bench, &execs)?;
+            self.tenants[idx].program = Some(program);
             let n = self.tenants[idx].gmis.len();
             self.push_event(now, idx, SchedAction::Admit, format!("placed {n} member(s)"));
         } else if !self.tenants[idx].queued_logged {
             self.tenants[idx].queued_logged = true;
             self.push_event(now, idx, SchedAction::Queue, "insufficient capacity".into());
         }
+        Ok(())
     }
 
     // ---- SLO pressure / elasticity ----
 
     fn slo_decisions(&mut self, now: f64) {
         for idx in self.order_running(true) {
-            let slo = match &self.tenants[idx].spec.kind {
-                JobKind::Serving { slo_p99_s, .. } => *slo_p99_s,
-                _ => continue,
-            };
-            let Some(p99) = self.tenants[idx].last_p99 else { continue };
+            let Some(slo) = self.tenants[idx].spec.slo_p99_s() else { continue };
+            let signal = self.tenants[idx].program.as_ref().and_then(|p| p.slo_signal());
+            let Some(p99) = signal else { continue };
             if p99 > slo {
                 self.grow_serving(idx, now, p99);
             } else if p99 < self.cfg.restore_frac * slo {
@@ -659,6 +717,7 @@ impl Cluster<'_> {
         }
         if let Some(g) = placed {
             self.tenants[idx].grown.push(g);
+            self.rebind(idx);
             self.push_event(
                 now,
                 idx,
@@ -679,6 +738,7 @@ impl Cluster<'_> {
             t.gmis.remove(pos);
             t.execs.remove(pos);
         }
+        self.rebind(idx);
         self.push_event(
             now,
             idx,
@@ -694,8 +754,8 @@ impl Cluster<'_> {
     fn restore_pass(&mut self, now: f64) {
         let pressure = self.tenants.iter().any(|t| {
             t.state == State::Running
-                && match (&t.spec.kind, t.last_p99) {
-                    (JobKind::Serving { slo_p99_s, .. }, Some(p)) => p > *slo_p99_s,
+                && match (t.spec.slo_p99_s(), t.program.as_ref().and_then(|p| p.slo_signal())) {
+                    (Some(slo), Some(p)) => p > slo,
                     _ => false,
                 }
         });
@@ -712,6 +772,7 @@ impl Cluster<'_> {
             if self.tenants[idx].gmis.len() < initial {
                 if let Some(g) = self.place_one(idx, now) {
                     self.tenants[idx].restores += 1;
+                    self.rebind(idx);
                     self.push_event(
                         now,
                         idx,
@@ -739,6 +800,7 @@ impl Cluster<'_> {
             }
             if grew > 0 {
                 self.tenants[idx].restores += 1;
+                self.rebind(idx);
                 self.push_event(
                     now,
                     idx,
@@ -749,159 +811,16 @@ impl Cluster<'_> {
         }
     }
 
-    // ---- job steppers ----
-
-    /// One scheduling round of a serving tenant: drain the round's
-    /// arrivals, dispatch full batches at the arrival of their closing
-    /// request, flush the remainder at the round boundary, and evaluate
-    /// the round's p99 (next round's SLO signal).
-    fn step_serving(&mut self, idx: usize, round_end: f64) {
-        let cost = self.cost;
-        let bench = self.bench;
-        let t = &mut self.tenants[idx];
-        let Tenant {
-            spec,
-            execs,
-            next_req,
-            queue,
-            latencies,
-            window_lat,
-            last_p99,
-            batch_sizes,
-            inflight,
-            max_queue_depth,
-            served,
-            ..
-        } = t;
-        let (trace, max_batch) = match &spec.kind {
-            JobKind::Serving { trace, max_batch, .. } => (trace.as_slice(), *max_batch),
-            _ => return,
-        };
-        window_lat.clear();
-        while *next_req < trace.len() && trace[*next_req].arrival_s < round_end {
-            queue.push_back(*next_req);
-            *next_req += 1;
-        }
-        while queue.len() >= max_batch {
-            let t_d = trace[queue[max_batch - 1]].arrival_s;
-            dispatch_serving(
-                &mut self.engine,
-                &mut self.fabric,
-                cost,
-                bench,
-                execs,
-                trace,
-                queue,
-                max_batch,
-                t_d,
-                latencies,
-                window_lat,
-                batch_sizes,
-                inflight,
-                max_queue_depth,
-                served,
-            );
-        }
-        while !queue.is_empty() {
-            let n = queue.len().min(max_batch);
-            dispatch_serving(
-                &mut self.engine,
-                &mut self.fabric,
-                cost,
-                bench,
-                execs,
-                trace,
-                queue,
-                n,
-                round_end,
-                latencies,
-                window_lat,
-                batch_sizes,
-                inflight,
-                max_queue_depth,
-                served,
-            );
-        }
-        *last_p99 = if window_lat.is_empty() {
-            None
-        } else {
-            let mut w = window_lat.clone();
-            w.sort_by(f64::total_cmp);
-            Some(percentile(&w, 0.99))
-        };
-    }
-
-    /// Run whole sync-training iterations until the tenant's executor
-    /// frontier passes the round boundary (or the job finishes).
-    fn step_training(&mut self, idx: usize, round_end: f64) {
-        let cost = self.cost;
-        let bench = self.bench;
-        let (iterations, horizon, num_env, minibatches) = match &self.tenants[idx].spec.kind {
-            JobKind::Training { iterations, horizon, num_env, minibatches } => {
-                (*iterations, *horizon, *num_env, *minibatches)
-            }
-            _ => return,
-        };
-        // Membership is fixed for the whole round (placements, resizes,
-        // and evictions only happen at round boundaries), so the member
-        // set and the job-local allreduce plan are computed once per
-        // round, not once per iteration.
-        let execs = self.tenants[idx].execs.clone();
-        let gmis = self.tenants[idx].gmis.clone();
-        let mut per_gpu: BTreeMap<usize, Vec<GmiId>> = BTreeMap::new();
-        for (&g, &ex) in gmis.iter().zip(&execs) {
-            per_gpu.entry(self.engine.gpu(ex)).or_default().push(g);
-        }
-        let mpl: Vec<Vec<GmiId>> = per_gpu.into_values().collect();
-        let (_, plan) = self.fabric.cheapest_allreduce(&mpl, bench.param_bytes());
-        let mb = minibatches.max(1);
-        let samples = (num_env * horizon / mb).max(1);
-        let ops = [
-            OpCharge::recorded(OpKind::TrainGrad { samples }),
-            OpCharge::recorded(OpKind::AdamApply),
-        ];
-        while self.tenants[idx].iters_done < iterations
-            && self.engine.max_time(&execs).seconds() < round_end
-        {
-            // (i) rollout on every member
-            for &ex in &execs {
-                let n = self.engine.num_env(ex);
-                self.engine.charge_steps(cost, ex, horizon as f64, &rollout_charges(n), 0.0);
-            }
-            // (ii) minibatch gradients, each closed by the LGR reduction
-            for _ in 0..mb {
-                for &ex in &execs {
-                    self.engine.charge_steps(cost, ex, 1.0, &ops, 0.0);
-                }
-                if !plan.is_empty() {
-                    self.engine.collective(&mut self.fabric, &execs, &plan);
-                }
-            }
-            let t = &mut self.tenants[idx];
-            t.iters_done += 1;
-            t.env_steps += (horizon * num_env * execs.len()) as f64;
-        }
-    }
-
     // ---- completion / release ----
 
     fn completions(&mut self, now: f64, round_end: f64) {
         for idx in 0..self.tenants.len() {
-            if self.tenants[idx].state != State::Running {
+            if self.tenants[idx].state != State::Running || !self.tenants[idx].done {
                 continue;
             }
-            let done = match &self.tenants[idx].spec.kind {
-                JobKind::Training { iterations, .. } => {
-                    self.tenants[idx].iters_done >= *iterations
-                }
-                JobKind::Serving { trace, .. } => {
-                    self.tenants[idx].next_req >= trace.len()
-                        && self.tenants[idx].queue.is_empty()
-                }
-            };
-            if !done {
-                continue;
-            }
+            // Open-loop serving tenants complete at the round boundary
+            // their trace drained in; batch tenants at their executor
+            // frontier.
             let at = if self.tenants[idx].spec.is_serving() {
                 round_end
             } else {
@@ -912,6 +831,14 @@ impl Cluster<'_> {
     }
 
     fn finish(&mut self, idx: usize, at: f64) {
+        // Capture the program's metrics BEFORE releasing its GMIs: the
+        // finish fold reads live member provisioning.
+        let mut program =
+            self.tenants[idx].program.take().expect("completing tenant has a program");
+        let metrics = program.finish(&self.engine, &self.fabric);
+        self.tenants[idx].final_metrics = Some(metrics);
+        drop(program);
+
         let job = self.tenants[idx].spec.id;
         let share = self.engine.manager().job_share(job);
         let members = self.tenants[idx].gmis.len();
@@ -944,72 +871,18 @@ impl Cluster<'_> {
         let mut busies = Vec::with_capacity(self.tenants.len());
         for t in &self.tenants {
             let job = t.spec.id;
-            let span = (t.completed_s - t.admitted_s).max(1e-9);
             let busy = self.engine.job_busy_s(job);
-            let comm = self.engine.job_comm_s(job);
             let xjob = self.engine.job_xjob_s(job);
             busies.push(busy);
-            let nominal = t.spec.initial_gmis.max(1) as f64;
-            let utilization = (busy / (span * nominal)).min(1.0);
-            let metrics = match &t.spec.kind {
-                JobKind::Training { .. } => RunMetrics {
-                    steps_per_sec: t.env_steps / span,
-                    pps: t.env_steps / span,
-                    ttop: t.env_steps / span,
-                    span_s: span,
-                    utilization,
-                    comm_s: comm,
-                    ..Default::default()
-                },
-                JobKind::Serving { trace, slo_p99_s, .. } => {
-                    let mut lats = t.latencies.clone();
-                    lats.sort_by(f64::total_cmp);
-                    let within =
-                        lats.iter().filter(|&&l| l <= *slo_p99_s + 1e-12).count();
-                    let mean_s = if lats.is_empty() {
-                        0.0
-                    } else {
-                        lats.iter().sum::<f64>() / lats.len() as f64
-                    };
-                    let mean_batch = if t.batch_sizes.is_empty() {
-                        0.0
-                    } else {
-                        t.batch_sizes.iter().sum::<usize>() as f64
-                            / t.batch_sizes.len() as f64
-                    };
-                    let latency = LatencyStats {
-                        requests: trace.len(),
-                        served: t.served,
-                        rejected: 0,
-                        p50_s: percentile(&lats, 0.50),
-                        p95_s: percentile(&lats, 0.95),
-                        p99_s: percentile(&lats, 0.99),
-                        mean_s,
-                        slo_s: *slo_p99_s,
-                        attainment: if trace.is_empty() {
-                            1.0
-                        } else {
-                            within as f64 / trace.len() as f64
-                        },
-                        mean_batch,
-                        max_queue_depth: t.max_queue_depth,
-                    };
-                    RunMetrics {
-                        steps_per_sec: t.served as f64 / span,
-                        pps: t.served as f64 / span,
-                        span_s: span,
-                        utilization,
-                        comm_s: comm,
-                        latency: Some(latency),
-                        ..Default::default()
-                    }
-                }
-            };
+            let metrics = t
+                .final_metrics
+                .clone()
+                .expect("every tenant completed before into_result");
             reports.push(JobReport {
                 id: job,
                 name: t.spec.name.clone(),
                 priority: t.spec.priority,
-                kind: if t.spec.is_serving() { "serving" } else { "training" },
+                kind: t.spec.kind_label(),
                 metrics,
                 admitted_s: t.admitted_s,
                 completed_s: t.completed_s,
@@ -1034,53 +907,11 @@ impl Cluster<'_> {
     }
 }
 
-/// Dispatch `n` queued requests at virtual time `t_d` onto the tenant's
-/// least-loaded member through the shared serving dispatch cost model.
-#[allow(clippy::too_many_arguments)]
-fn dispatch_serving(
-    engine: &mut Engine,
-    fabric: &mut Fabric,
-    cost: &CostModel,
-    bench: &BenchInfo,
-    execs: &[ExecutorId],
-    trace: &[Request],
-    queue: &mut VecDeque<usize>,
-    n: usize,
-    t_d: f64,
-    latencies: &mut Vec<f64>,
-    window_lat: &mut Vec<f64>,
-    batch_sizes: &mut Vec<usize>,
-    inflight: &mut BinaryHeap<Reverse<u64>>,
-    max_queue_depth: &mut usize,
-    served: &mut usize,
-) {
-    // Retire completions that landed before this dispatch, then record
-    // the outstanding depth (queued + in flight).
-    while let Some(&Reverse(bits)) = inflight.peek() {
-        if f64::from_bits(bits) <= t_d {
-            inflight.pop();
-        } else {
-            break;
-        }
-    }
-    *max_queue_depth = (*max_queue_depth).max(queue.len() + inflight.len());
-    let ex = least_loaded(engine, execs);
-    let done = execute_dispatch(engine, fabric, cost, bench, ex, t_d, n, false).seconds();
-    for _ in 0..n {
-        let i = queue.pop_front().expect("batch under-run");
-        let lat = done - trace[i].arrival_s;
-        latencies.push(lat);
-        window_lat.push(lat);
-        inflight.push(Reverse(done.to_bits()));
-        *served += 1;
-    }
-    batch_sizes.push(n);
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::static_registry;
+    use crate::drl::a3c::AsyncConfig;
     use crate::serve::{generate_trace, TrafficPattern};
 
     fn setup() -> (Topology, BenchInfo, CostModel) {
@@ -1156,6 +987,42 @@ mod tests {
         assert!(r.events.iter().any(|e| e.action == SchedAction::Queue && e.job == 0));
         assert!(r.events.iter().all(|e| e.action != SchedAction::Preempt));
         assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn async_and_closed_tenants_run_to_completion() {
+        // The new workload kinds the Workload refactor unlocked: an A3C
+        // tenant (agents + trainers over the channel pipeline) and a
+        // closed-loop serving tenant co-run with nothing special-cased in
+        // the scheduler.
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let jobs = vec![
+            JobSpec::a3c(
+                0,
+                "a3c",
+                5,
+                0.0,
+                (1, 1),
+                0.4,
+                0.1,
+                1024,
+                AsyncConfig { rounds: 4, batch_samples: 4096, ..Default::default() },
+            ),
+            JobSpec::closed(1, "collect", 1, 0.0, 2, 0.3, 0.1, 512, 4),
+        ];
+        let r = run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+        let a = r.job(0).unwrap();
+        assert_eq!(a.kind, "async");
+        assert!(a.metrics.pps > 0.0, "agents never predicted");
+        assert!(a.metrics.ttop > 0.0, "trainers never consumed a batch");
+        assert_eq!(a.gmis_at_completion, 2);
+        let c = r.job(1).unwrap();
+        assert_eq!(c.kind, "closed");
+        assert!(c.metrics.steps_per_sec > 0.0);
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+        assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
     }
 
     #[test]

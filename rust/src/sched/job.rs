@@ -6,24 +6,36 @@
 //! `min_gmis x min_share` (the guaranteed floor preemption can shrink it
 //! to but never past, enforced by the manager's removal guard) and
 //! `max_gmis x share` (the ceiling elasticity may grow it to).
+//!
+//! A [`JobKind`] is purely a *constructor*: [`JobSpec::build_program`]
+//! turns it into the same steppable [`Workload`] program the standalone
+//! run loops drive, so the scheduler contains no per-kind execution logic
+//! at all — one implementation per workload, shared everywhere.
 
 use anyhow::Result;
 
 use crate::cluster::Topology;
+use crate::drl::a3c::AsyncConfig;
+use crate::drl::serving::ServingConfig;
+use crate::drl::sync::SyncConfig;
 use crate::gmi::Role;
-use crate::serve::Request;
+use crate::serve::{GatewayConfig, Request};
+use crate::workload::{
+    AsyncProgram, ClosedServingProgram, GatewayProgram, SyncProgram, Workload,
+};
 
 /// Cluster-unique job identifier.
 pub type JobId = usize;
 
-/// What a tenant actually runs.
+/// What a tenant actually runs — each variant constructs the matching
+/// [`Workload`] program (see [`JobSpec::build_program`]).
 #[derive(Debug, Clone)]
 pub enum JobKind {
     /// Synchronized PPO-style training: `iterations` of (rollout of
-    /// `horizon` steps over `num_env` envs per GMI, then `minibatches`
-    /// gradient + allreduce rounds). Charges the same rollout ops as
-    /// [`drl::sync`](crate::drl::sync) and reduces over the job's own
-    /// fabric allreduce plan.
+    /// `horizon` steps over `num_env` envs per member, then `minibatches`
+    /// gradient + allreduce rounds) — the
+    /// [`SyncProgram`](crate::workload::SyncProgram) over holistic
+    /// members, reducing over the job's own fabric allreduce plan.
     Training {
         iterations: usize,
         horizon: usize,
@@ -32,16 +44,42 @@ pub enum JobKind {
         minibatches: usize,
     },
     /// Open-loop serving fleet with an SLO class: the trace's requests are
-    /// batched (up to `max_batch`, flushed every scheduling round) onto the
-    /// job's least-loaded GMI through the shared dispatch cost model
-    /// ([`serve::execute_dispatch`](crate::serve::execute_dispatch)). A
-    /// scheduling round whose dispatched p99 violates `slo_p99_s` raises
-    /// pressure: the scheduler grows the fleet, preempting lower-priority
-    /// tenants if it must.
+    /// batched (up to `max_batch`, partial batches flushed every
+    /// scheduling round) onto the job's least-loaded member — the
+    /// [`GatewayProgram`](crate::workload::GatewayProgram) in round-flush
+    /// mode. A scheduling round whose dispatched p99 violates `slo_p99_s`
+    /// raises pressure: the scheduler grows the fleet, preempting
+    /// lower-priority tenants if it must.
     Serving {
         trace: Vec<Request>,
         slo_p99_s: f64,
         max_batch: usize,
+    },
+    /// Open-loop gateway tenant with the standalone gateway's full
+    /// dynamic-batching policy (max-batch x max-wait, optional admission
+    /// cap): the identical [`GatewayProgram`](crate::workload::GatewayProgram)
+    /// `serve::run_gateway` drives. The scheduler owns fleet elasticity,
+    /// so `cfg.autoscale` must be `None`.
+    Gateway { trace: Vec<Request>, cfg: GatewayConfig },
+    /// Closed-loop DRL serving (continuous experience collection, no
+    /// arrival process) — the
+    /// [`ClosedServingProgram`](crate::workload::ClosedServingProgram).
+    Closed {
+        rounds: usize,
+        /// Environments per member GMI.
+        num_env: usize,
+    },
+    /// Asynchronized A3C training with channel-based experience sharing —
+    /// the [`AsyncProgram`](crate::workload::AsyncProgram). The first
+    /// `agents` members place as serving agents, the remaining `trainers`
+    /// as dedicated trainers; membership is fixed for the run (the channel
+    /// pipeline's routing is keyed by it), so preemption is resize-only.
+    Async {
+        agents: usize,
+        trainers: usize,
+        /// Environments per agent member GMI.
+        num_env: usize,
+        cfg: AsyncConfig,
     },
 }
 
@@ -138,6 +176,141 @@ impl JobSpec {
         }
     }
 
+    /// An elastic gateway tenant running the standalone gateway's full
+    /// dynamic-batching policy under the scheduler's fleet elasticity.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gateway(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        (min, initial, max): (usize, usize, usize),
+        share: f64,
+        cfg: GatewayConfig,
+        trace: Vec<Request>,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: min,
+            initial_gmis: initial,
+            max_gmis: max,
+            share,
+            min_share: share,
+            mem_gib: 2.0,
+            pin_gpus: None,
+            kind: JobKind::Gateway { trace, cfg },
+        }
+    }
+
+    /// A fixed-size closed-loop serving tenant (`rounds` interaction
+    /// rounds of continuous experience collection).
+    #[allow(clippy::too_many_arguments)]
+    pub fn closed(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        gmis: usize,
+        share: f64,
+        min_share: f64,
+        num_env: usize,
+        rounds: usize,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: gmis,
+            initial_gmis: gmis,
+            max_gmis: gmis,
+            share,
+            min_share,
+            mem_gib: 2.0,
+            pin_gpus: None,
+            kind: JobKind::Closed { rounds, num_env },
+        }
+    }
+
+    /// An A3C tenant: `agents` serving members feeding `trainers` trainer
+    /// members over the compressor-channel pipeline. Membership is fixed
+    /// (min = initial = max = agents + trainers); preemption is
+    /// resize-only down to `min_share`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn a3c(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        (agents, trainers): (usize, usize),
+        share: f64,
+        min_share: f64,
+        num_env: usize,
+        cfg: AsyncConfig,
+    ) -> JobSpec {
+        let members = agents + trainers;
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: members,
+            initial_gmis: members,
+            max_gmis: members,
+            share,
+            min_share,
+            mem_gib: 4.0,
+            pin_gpus: None,
+            kind: JobKind::Async { agents, trainers, num_env, cfg },
+        }
+    }
+
+    /// Build the steppable [`Workload`] program this tenancy contract
+    /// runs — the SAME program the standalone driver of the kind would
+    /// build, which is what makes a single-tenant cluster run
+    /// bit-identical to the standalone run (`rust/tests/prop_workload.rs`).
+    pub fn build_program(&self) -> Box<dyn Workload> {
+        match &self.kind {
+            JobKind::Training { iterations, horizon, num_env: _, minibatches } => {
+                // The scheduler's historical training model: one PPO epoch
+                // of `minibatches` sequential (non-overlapped) reductions
+                // per iteration, Null-compute numerics.
+                Box::new(SyncProgram::new(
+                    SyncConfig {
+                        iterations: *iterations,
+                        ppo_epochs: 1,
+                        minibatches: *minibatches,
+                        overlap: false,
+                        ..SyncConfig::default()
+                    },
+                    *horizon,
+                ))
+            }
+            JobKind::Serving { trace, slo_p99_s, max_batch } => Box::new(
+                GatewayProgram::round_flush(
+                    GatewayConfig {
+                        max_batch: *max_batch,
+                        max_wait_s: f64::INFINITY,
+                        admission_cap: None,
+                        slo_s: *slo_p99_s,
+                        autoscale: None,
+                    },
+                    trace.clone(),
+                ),
+            ),
+            JobKind::Gateway { trace, cfg } => {
+                Box::new(GatewayProgram::new(cfg.clone(), trace.clone()))
+            }
+            JobKind::Closed { rounds, num_env: _ } => Box::new(ClosedServingProgram::new(
+                ServingConfig { rounds: *rounds, ..ServingConfig::default() },
+            )),
+            JobKind::Async { cfg, .. } => Box::new(AsyncProgram::new(cfg.clone())),
+        }
+    }
+
     /// Sanity-check the envelope (counts ordered, shares in range, and the
     /// admitted `initial_gmis` set placeable on an EMPTY allowed slice of
     /// `topo` — a job that cannot ever start is a config error, not a
@@ -166,14 +339,64 @@ impl JobSpec {
             self.share
         );
         anyhow::ensure!(self.arrival_s >= 0.0, "job {}: negative arrival", self.id);
-        if let JobKind::Serving { trace, slo_p99_s, max_batch } = &self.kind {
-            anyhow::ensure!(*max_batch >= 1, "job {}: max_batch must be >= 1", self.id);
-            anyhow::ensure!(*slo_p99_s > 0.0, "job {}: SLO must be positive", self.id);
-            anyhow::ensure!(
-                trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
-                "job {}: trace must be sorted by arrival",
-                self.id
-            );
+        match &self.kind {
+            JobKind::Serving { trace, slo_p99_s, max_batch } => {
+                anyhow::ensure!(*max_batch >= 1, "job {}: max_batch must be >= 1", self.id);
+                anyhow::ensure!(*slo_p99_s > 0.0, "job {}: SLO must be positive", self.id);
+                anyhow::ensure!(
+                    trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
+                    "job {}: trace must be sorted by arrival",
+                    self.id
+                );
+            }
+            JobKind::Gateway { trace, cfg } => {
+                anyhow::ensure!(cfg.max_batch >= 1, "job {}: max_batch must be >= 1", self.id);
+                anyhow::ensure!(cfg.slo_s > 0.0, "job {}: SLO must be positive", self.id);
+                anyhow::ensure!(
+                    cfg.max_wait_s >= 0.0 && cfg.max_wait_s.is_finite(),
+                    "job {}: max_wait must be finite and non-negative \
+                     (use JobKind::Serving for round-boundary flushing)",
+                    self.id
+                );
+                anyhow::ensure!(
+                    cfg.autoscale.is_none(),
+                    "job {}: the scheduler owns fleet elasticity; gateway tenants \
+                     must not carry their own autoscaler",
+                    self.id
+                );
+                anyhow::ensure!(
+                    trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
+                    "job {}: trace must be sorted by arrival",
+                    self.id
+                );
+            }
+            JobKind::Closed { rounds, num_env } => {
+                anyhow::ensure!(*rounds >= 1, "job {}: rounds must be >= 1", self.id);
+                anyhow::ensure!(*num_env >= 1, "job {}: num_env must be >= 1", self.id);
+            }
+            JobKind::Async { agents, trainers, cfg, .. } => {
+                anyhow::ensure!(
+                    *agents >= 1 && *trainers >= 1,
+                    "job {}: async tenants need agents and trainers",
+                    self.id
+                );
+                anyhow::ensure!(
+                    agents + trainers == self.initial_gmis
+                        && self.min_gmis == self.initial_gmis
+                        && self.max_gmis == self.initial_gmis,
+                    "job {}: async membership is fixed \
+                     (min = initial = max = agents + trainers)",
+                    self.id
+                );
+                anyhow::ensure!(cfg.rounds >= 1, "job {}: rounds must be >= 1", self.id);
+                anyhow::ensure!(
+                    cfg.elastic.is_none(),
+                    "job {}: the scheduler owns re-provisioning; async tenants \
+                     must not carry their own elastic controller",
+                    self.id
+                );
+            }
+            JobKind::Training { .. } => {}
         }
         let allowed = self.allowed_gpus(topo);
         anyhow::ensure!(!allowed.is_empty(), "job {}: no allowed GPUs", self.id);
@@ -223,25 +446,69 @@ impl JobSpec {
         self.min_gmis as f64 * self.min_share
     }
 
-    /// DRL role of this job's member GMIs.
-    pub fn role(&self) -> Role {
-        match self.kind {
+    /// DRL role of the `idx`-th member GMI (async tenants mix agent and
+    /// trainer members; every other kind is homogeneous).
+    pub fn member_role(&self, idx: usize) -> Role {
+        match &self.kind {
             JobKind::Training { .. } => Role::Holistic,
-            JobKind::Serving { .. } => Role::SimAgent,
+            JobKind::Serving { .. } | JobKind::Gateway { .. } | JobKind::Closed { .. } => {
+                Role::SimAgent
+            }
+            JobKind::Async { agents, .. } => {
+                if idx < *agents {
+                    Role::SimAgent
+                } else {
+                    Role::Trainer
+                }
+            }
         }
     }
 
-    /// `num_env` a member GMI is registered with (sizes rollout charges for
-    /// training, the inference slot for serving).
-    pub fn member_num_env(&self) -> usize {
+    /// `num_env` the `idx`-th member GMI is registered with (sizes rollout
+    /// charges for training, the inference slot for serving; trainer
+    /// members of async tenants simulate nothing).
+    pub fn member_num_env(&self, idx: usize) -> usize {
         match &self.kind {
             JobKind::Training { num_env, .. } => *num_env,
             JobKind::Serving { max_batch, .. } => *max_batch,
+            JobKind::Gateway { cfg, .. } => cfg.max_batch,
+            JobKind::Closed { num_env, .. } => *num_env,
+            JobKind::Async { agents, num_env, .. } => {
+                if idx < *agents {
+                    *num_env
+                } else {
+                    0
+                }
+            }
         }
     }
 
+    /// The p99 latency target this tenant is scheduled against (None for
+    /// throughput-oriented kinds): what makes a tenant eligible for SLO
+    /// pressure growth and what the restore hysteresis reads.
+    pub fn slo_p99_s(&self) -> Option<f64> {
+        match &self.kind {
+            JobKind::Serving { slo_p99_s, .. } => Some(*slo_p99_s),
+            JobKind::Gateway { cfg, .. } => Some(cfg.slo_s),
+            _ => None,
+        }
+    }
+
+    /// Latency-sensitive open-loop tenants step first each round and
+    /// complete at round boundaries.
     pub fn is_serving(&self) -> bool {
-        matches!(self.kind, JobKind::Serving { .. })
+        matches!(self.kind, JobKind::Serving { .. } | JobKind::Gateway { .. })
+    }
+
+    /// Human-readable kind tag for reports.
+    pub fn kind_label(&self) -> &'static str {
+        match &self.kind {
+            JobKind::Training { .. } => "training",
+            JobKind::Serving { .. } => "serving",
+            JobKind::Gateway { .. } => "gateway",
+            JobKind::Closed { .. } => "closed",
+            JobKind::Async { .. } => "async",
+        }
     }
 }
 
@@ -290,18 +557,97 @@ mod tests {
     }
 
     #[test]
-    fn floors_and_roles() {
+    fn validate_catches_bad_new_kinds() {
+        let topo = Topology::dgx_a100(2);
+
+        // Async: membership must be fixed and both roles present.
+        let a = JobSpec::a3c(0, "a", 1, 0.0, (1, 1), 0.4, 0.1, 256, AsyncConfig::default());
+        a.validate(&topo).unwrap();
+        let mut bad = a.clone();
+        bad.max_gmis = 3; // elastic membership is not allowed for async
+        assert!(bad.validate(&topo).is_err());
+        let mut bad = a.clone();
+        bad.kind = JobKind::Async {
+            agents: 0,
+            trainers: 2,
+            num_env: 256,
+            cfg: AsyncConfig::default(),
+        };
+        assert!(bad.validate(&topo).is_err());
+        let mut bad = a.clone();
+        if let JobKind::Async { cfg, .. } = &mut bad.kind {
+            cfg.elastic = Some(crate::engine::ElasticConfig::default());
+        }
+        assert!(bad.validate(&topo).is_err(), "tenant-owned elastic must be rejected");
+
+        // Gateway: no tenant-owned autoscaler, sane policy knobs.
+        let g = JobSpec::gateway(
+            1,
+            "g",
+            9,
+            0.0,
+            (1, 2, 4),
+            0.25,
+            GatewayConfig::default(),
+            vec![],
+        );
+        g.validate(&topo).unwrap();
+        let mut bad = g.clone();
+        if let JobKind::Gateway { cfg, .. } = &mut bad.kind {
+            cfg.autoscale = Some(crate::serve::AutoscaleConfig::default());
+        }
+        assert!(bad.validate(&topo).is_err(), "tenant-owned autoscaler must be rejected");
+
+        // Closed: rounds and env counts must be positive.
+        let c = JobSpec::closed(2, "c", 1, 0.0, 1, 0.5, 0.1, 512, 5);
+        c.validate(&topo).unwrap();
+        let mut bad = c.clone();
+        bad.kind = JobKind::Closed { rounds: 0, num_env: 512 };
+        assert!(bad.validate(&topo).is_err());
+    }
+
+    #[test]
+    fn floors_roles_and_labels() {
         let t = JobSpec::training(0, "t", 1, 0.0, 2, 0.5, 0.15, 256, 3);
         assert!((t.floor_share() - 0.3).abs() < 1e-12);
-        assert_eq!(t.role(), Role::Holistic);
-        assert_eq!(t.member_num_env(), 256);
+        assert_eq!(t.member_role(0), Role::Holistic);
+        assert_eq!(t.member_num_env(0), 256);
         assert!(!t.is_serving());
+        assert_eq!(t.kind_label(), "training");
+        assert!(t.slo_p99_s().is_none());
 
         let s = JobSpec::serving(1, "s", 9, 0.0, (1, 2, 4), 0.25, 16, 10e-3, vec![]);
-        assert_eq!(s.role(), Role::SimAgent);
-        assert_eq!(s.member_num_env(), 16);
+        assert_eq!(s.member_role(0), Role::SimAgent);
+        assert_eq!(s.member_num_env(0), 16);
         assert!(s.is_serving());
+        assert_eq!(s.kind_label(), "serving");
+        assert_eq!(s.slo_p99_s(), Some(10e-3));
         assert!((s.floor_share() - 0.25).abs() < 1e-12);
         s.validate(&Topology::dgx_a100(1)).unwrap();
+
+        // Async tenants mix member roles: agents first, then trainers.
+        let a = JobSpec::a3c(2, "a", 5, 0.0, (2, 1), 0.3, 0.1, 1024, AsyncConfig::default());
+        assert_eq!(a.initial_gmis, 3);
+        assert_eq!(a.member_role(0), Role::SimAgent);
+        assert_eq!(a.member_role(1), Role::SimAgent);
+        assert_eq!(a.member_role(2), Role::Trainer);
+        assert_eq!(a.member_num_env(0), 1024);
+        assert_eq!(a.member_num_env(2), 0);
+        assert!(!a.is_serving());
+        assert_eq!(a.kind_label(), "async");
+
+        let g = JobSpec::gateway(
+            3,
+            "g",
+            9,
+            0.0,
+            (1, 1, 2),
+            0.25,
+            GatewayConfig { slo_s: 5e-3, ..GatewayConfig::default() },
+            vec![],
+        );
+        assert!(g.is_serving());
+        assert_eq!(g.slo_p99_s(), Some(5e-3));
+        assert_eq!(g.kind_label(), "gateway");
     }
 }

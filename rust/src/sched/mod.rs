@@ -4,15 +4,20 @@
 //! bin-packer ([`gmi::scheduler`](crate::gmi::scheduler)) into a running
 //! system.
 //!
-//! Every orchestrator in this crate assumes exclusive ownership of the
-//! whole cluster; this module drops that assumption. A queue of
-//! [`JobSpec`]s — sync training runs, serving fleets with SLO classes —
-//! is admitted onto one shared [`Topology`](crate::cluster::Topology),
-//! placed through the [`GmiManager`](crate::gmi::GmiManager)'s validation
-//! (no oversubscription ever, enforced at every placement/resize), and
+//! Every standalone driver in this crate assumes exclusive ownership of
+//! the whole cluster; this module drops that assumption. A queue of
+//! [`JobSpec`]s — sync training runs, A3C pipelines, closed-loop
+//! collectors, serving fleets with SLO classes — is admitted onto one
+//! shared [`Topology`](crate::cluster::Topology), placed through the
+//! [`GmiManager`](crate::gmi::GmiManager)'s validation (no
+//! oversubscription ever, enforced at every placement/resize), and
 //! co-executed on a single shared [`Engine`](crate::engine::Engine) with
 //! per-job event tagging and cross-job interference accounting in the
-//! executors. The scheduler is *preemptive*: a high-priority arrival or a
+//! executors. Each tenant runs as a steppable
+//! [`Workload`](crate::workload::Workload) program — the SAME
+//! implementation its standalone run loop drives — so the scheduler holds
+//! no per-kind execution logic and a single-tenant cluster run is
+//! bit-identical to the standalone run. The scheduler is *preemptive*: a high-priority arrival or a
 //! serving tenant missing its SLO window shrinks and, if needed, evicts
 //! lower-priority tenants' GMIs through the validated
 //! `resize_share`/`remove_gmi` paths — never below the tenant's
@@ -47,12 +52,13 @@ use crate::vtime::CostModel;
 /// give the share back.
 ///
 /// `partitioned` selects the static-partitioning baseline: each tenant is
-/// pinned to its own half of the cluster at fixed provisioning (training
-/// gets whole exclusive GPUs, serving a fixed fleet), the classic
-/// one-job-per-GPU-slice arrangement the scheduler is measured against.
-/// Both variants simulate the same total environments and replay the
-/// identical seeded trace, so their per-job metrics are directly
-/// comparable. `topo` needs an even GPU count >= 2.
+/// pinned to its own side of the cluster at fixed provisioning (training
+/// gets `g/2` whole exclusive GPUs, serving the remaining `g - g/2`),
+/// the classic one-job-per-GPU-slice arrangement the scheduler is
+/// measured against. Both variants simulate the same total environments
+/// and replay the identical seeded trace, so their per-job metrics are
+/// directly comparable. `topo` needs any GPU count >= 2 (odd counts give
+/// serving the larger side).
 pub fn corun_scenario(
     topo: &Topology,
     bench: &BenchInfo,
@@ -62,12 +68,14 @@ pub fn corun_scenario(
     partitioned: bool,
 ) -> Vec<JobSpec> {
     let g = topo.num_gpus();
-    assert!(g >= 2 && g % 2 == 0, "corun_scenario needs an even GPU count >= 2, got {g}");
+    assert!(g >= 2, "corun_scenario needs at least 2 GPUs, got {g}");
+    let train_gpus = g / 2;
+    let serve_gpus = g - train_gpus;
     let serve_share = 0.25;
     let max_batch = 32;
     let member_rate = max_batch as f64 / batch_seconds(bench, cost, topo, serve_share, max_batch);
-    // The static baseline packs 4 serving members on each of its g/2 GPUs.
-    let static_members = 4 * (g / 2);
+    // The static baseline packs 4 serving members on each of its GPUs.
+    let static_members = 4 * serve_gpus;
     let static_capacity = member_rate * static_members as f64;
     let pattern = TrafficPattern::Diurnal {
         base: 0.25 * static_capacity,
@@ -79,8 +87,9 @@ pub fn corun_scenario(
     // Enough training iterations to outlast the serving day.
     let iters = ((duration_s * 12.0).ceil() as usize).max(4);
     if partitioned {
-        let mut train = JobSpec::training(0, "train-ppo", 1, 0.0, g / 2, 1.0, 1.0, 2048, iters);
-        train.pin_gpus = Some((0..g / 2).collect());
+        let mut train =
+            JobSpec::training(0, "train-ppo", 1, 0.0, train_gpus, 1.0, 1.0, 2048, iters);
+        train.pin_gpus = Some((0..train_gpus).collect());
         let mut serve = JobSpec::serving(
             1,
             "serve-slo",
@@ -92,13 +101,15 @@ pub fn corun_scenario(
             slo,
             trace,
         );
-        serve.pin_gpus = Some((g / 2..g).collect());
+        serve.pin_gpus = Some((train_gpus..g).collect());
         vec![train, serve]
     } else {
-        // Same total envs (g x 1024 vs g/2 x 2048), whole cluster shared:
-        // training spreads one multiplexed GMI per GPU, the serving fleet
-        // starts at one member per GPU and may grow to three under load.
-        let train = JobSpec::training(0, "train-ppo", 1, 0.0, g, 0.5, 0.25, 1024, iters);
+        // Same total envs (2 x train_gpus x 1024 vs train_gpus x 2048),
+        // whole cluster shared: training spreads multiplexed GMIs across
+        // GPUs, the serving fleet starts at one member per GPU and may
+        // grow to three under load.
+        let train =
+            JobSpec::training(0, "train-ppo", 1, 0.0, 2 * train_gpus, 0.5, 0.25, 1024, iters);
         let serve = JobSpec::serving(
             1,
             "serve-slo",
@@ -148,5 +159,36 @@ mod tests {
         assert_eq!(stat[1].pin_gpus, Some(vec![1]));
         assert!(elas[0].pin_gpus.is_none() && elas[1].pin_gpus.is_none());
         assert!(elas[1].max_gmis > elas[1].initial_gmis, "elastic fleet must have headroom");
+    }
+
+    #[test]
+    fn corun_scenario_supports_odd_gpu_counts() {
+        // Regression for the arbitrary "even GPU count" restriction: odd
+        // clusters build valid layouts (serving takes the larger side) and
+        // a short preemptive day runs to completion.
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(3);
+        for partitioned in [true, false] {
+            let jobs = corun_scenario(&topo, &b, &cost, 0.2, 7, partitioned);
+            for j in &jobs {
+                j.validate(&topo).unwrap();
+            }
+        }
+        // Static pins split 1 + 2; total envs match across variants.
+        let stat = corun_scenario(&topo, &b, &cost, 0.2, 7, true);
+        let elas = corun_scenario(&topo, &b, &cost, 0.2, 7, false);
+        assert_eq!(stat[0].pin_gpus, Some(vec![0]));
+        assert_eq!(stat[1].pin_gpus, Some(vec![1, 2]));
+        let envs = |j: &JobSpec| match &j.kind {
+            JobKind::Training { num_env, .. } => num_env * j.initial_gmis,
+            _ => panic!("expected training"),
+        };
+        assert_eq!(envs(&stat[0]), envs(&elas[0]));
+
+        let r = crate::sched::run_cluster(&topo, &b, &cost, &elas, &SchedConfig::default())
+            .unwrap();
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+        assert!(r.jobs.iter().all(|j| j.completed_s > 0.0), "a tenant never completed");
     }
 }

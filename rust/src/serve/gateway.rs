@@ -25,23 +25,28 @@
 //!
 //! The whole pipeline is deterministic: the same layout, trace, and config
 //! reproduce bit-identical metrics (locked in by `tests/determinism.rs`).
+//! The event loop itself lives in the steppable workload program
+//! ([`workload::GatewayProgram`](crate::workload::GatewayProgram)) shared
+//! with the multi-tenant scheduler; [`run_gateway`] is the thin standalone
+//! driver.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::cluster::Topology;
 use crate::config::BenchInfo;
-use crate::drl::serving::{is_dedicated, tdg_agent_fwd};
+use crate::drl::serving::tdg_agent_fwd;
+use crate::drl::Compute;
 use crate::engine::{Engine, ExecutorId, OpCharge};
 use crate::fabric::Fabric;
 use crate::gmi::GmiSpec;
 use crate::mapping::Layout;
-use crate::metrics::{percentile, LatencyStats, RunMetrics};
+use crate::metrics::{LatencyStats, RunMetrics};
 use crate::vtime::{Clock, CostModel, OpKind};
+use crate::workload::{run_to_completion, GatewayProgram, Workload};
 
-use super::autoscale::{Autoscaler, ScaleEvent};
+use super::autoscale::ScaleEvent;
 use super::traffic::Request;
 use super::AutoscaleConfig;
 
@@ -199,77 +204,9 @@ pub fn execute_dispatch(
     engine.recv_plan(fabric, ex, after_fwd, &resp_plan)
 }
 
-/// Immutable per-run dispatch parameters.
-struct BatchSpec<'a> {
-    trace: &'a [Request],
-    bench: &'a BenchInfo,
-    max_batch: usize,
-    /// TDG fleets run the forward on the dedicated agent GMI at a fraction
-    /// of the pair budget (same model as drl::serving).
-    dedicated: bool,
-}
-
-/// Mutable dispatch-loop bookkeeping.
-struct DispatchLog {
-    /// Admitted requests in dispatch order.
-    served: Vec<ServedRequest>,
-    /// Size of every dispatched batch, in dispatch order.
-    batch_sizes: Vec<usize>,
-    /// Latencies dispatched in the current autoscale window; `None` when
-    /// no autoscaler is configured (nothing would ever read or clear it).
-    window_lat: Option<Vec<f64>>,
-    /// Completion times (bit patterns) of everything in flight — the
-    /// admission-control ledger.
-    completions: BinaryHeap<Reverse<u64>>,
-}
-
-/// Dispatch up to `max_batch` queued requests at virtual time `t` onto the
-/// least-loaded active executor, as engine events.
-fn dispatch_batch(
-    t: f64,
-    engine: &mut Engine,
-    fabric: &mut Fabric,
-    cost: &CostModel,
-    active: &[ExecutorId],
-    pending: &mut VecDeque<usize>,
-    spec: &BatchSpec,
-    log: &mut DispatchLog,
-) {
-    let n = pending.len().min(spec.max_batch);
-    if n == 0 {
-        return;
-    }
-    let ex = least_loaded(engine, active);
-    let batch_idx = log.batch_sizes.len();
-    // Hops + batched forward as engine events; contention with co-resident
-    // GMIs' transfers is handled by the fabric's link occupancy, which the
-    // dispatch plans serialize against.
-    let done = execute_dispatch(engine, fabric, cost, spec.bench, ex, t, n, spec.dedicated);
-
-    let done_s = done.seconds();
-    for _ in 0..n {
-        let idx = pending.pop_front().expect("batch under-run");
-        let r = spec.trace[idx];
-        log.served.push(ServedRequest {
-            id: r.id,
-            source: r.source,
-            arrival_s: r.arrival_s,
-            batch: batch_idx,
-            dispatch_s: t,
-            completion_s: done_s,
-        });
-        if let Some(w) = log.window_lat.as_mut() {
-            w.push(done_s - r.arrival_s);
-        }
-        // Completion times are non-negative finite, so their bit patterns
-        // order like the values (min-heap via Reverse).
-        log.completions.push(Reverse(done_s.to_bits()));
-    }
-    log.batch_sizes.push(n);
-}
-
 /// Run the gateway over an arrival trace (ascending `arrival_s`). The
-/// layout's rollout GMIs form the initial serving fleet.
+/// layout's rollout GMIs form the initial serving fleet; the event loop
+/// itself is the shared [`GatewayProgram`].
 pub fn run_gateway(
     layout: &Layout,
     bench: &BenchInfo,
@@ -279,181 +216,31 @@ pub fn run_gateway(
 ) -> Result<GatewayRunResult> {
     anyhow::ensure!(!layout.rollout_gmis.is_empty(), "no serving GMIs in layout");
     anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
-    anyhow::ensure!(cfg.max_wait_s >= 0.0, "max_wait_s must be non-negative");
-
-    // TDG fleets (dedicated simulator/agent GMIs) pay the reduced-share
-    // forward of the rejected design — the same shared model drl::serving
-    // charges through.
-    let dedicated = is_dedicated(layout);
+    anyhow::ensure!(
+        cfg.max_wait_s >= 0.0 && cfg.max_wait_s.is_finite(),
+        "max_wait_s must be finite and non-negative"
+    );
 
     let mut engine = Engine::new(&layout.manager, cost);
     let mut fabric = Fabric::single_node(layout.manager.topology().clone());
-    let mut active: Vec<ExecutorId> = engine.add_group(&layout.rollout_gmis)?;
-    let mut scaler = match &cfg.autoscale {
-        Some(a) => Some(Autoscaler::new(a.clone(), &engine, &active)?),
-        None => None,
-    };
-    let window_s = cfg.autoscale.as_ref().map(|a| a.window_s);
+    let active = engine.add_group(&layout.rollout_gmis)?;
 
-    let spec = BatchSpec { trace, bench, max_batch: cfg.max_batch, dedicated };
-    let mut log = DispatchLog {
-        served: Vec::with_capacity(trace.len()),
-        batch_sizes: Vec::new(),
-        window_lat: window_s.map(|_| Vec::new()),
-        completions: BinaryHeap::new(),
-    };
-    let mut pending: VecDeque<usize> = VecDeque::new();
-    let mut rejected = 0usize;
-    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    let mut program = GatewayProgram::new(cfg.clone(), trace.to_vec());
+    program.bind(&engine, &mut fabric, bench, &active)?;
+    // The gateway charges no numerics, but the step contract carries a
+    // backend; Null is the no-op choice.
+    run_to_completion(&mut program, &mut engine, &mut fabric, cost, bench, &Compute::Null)?;
 
-    // Outstanding = admitted and not yet completed (queued + in-flight):
-    // the admission-control and queue-depth quantity.
-    let mut outstanding = 0usize;
-    let mut max_queue_depth = 0usize;
-    let mut next_window = window_s.unwrap_or(f64::INFINITY);
-
-    for (idx, r) in trace.iter().enumerate() {
-        let t = r.arrival_s;
-        // Timed events due before this arrival — batch-wait deadlines and
-        // autoscale window boundaries — fire in chronological order.
-        loop {
-            let deadline = match pending.front() {
-                Some(&i) => trace[i].arrival_s + cfg.max_wait_s,
-                None => f64::INFINITY,
-            };
-            if deadline <= t && deadline <= next_window {
-                dispatch_batch(
-                    deadline,
-                    &mut engine,
-                    &mut fabric,
-                    cost,
-                    &active,
-                    &mut pending,
-                    &spec,
-                    &mut log,
-                );
-            } else if next_window <= t {
-                if let Some(s) = scaler.as_mut() {
-                    let lat = log.window_lat.as_deref().unwrap_or(&[]);
-                    if let Some(ev) = s.evaluate(next_window, &mut engine, &mut active, lat) {
-                        scale_events.push(ev);
-                    }
-                }
-                if let Some(w) = log.window_lat.as_mut() {
-                    w.clear();
-                }
-                next_window += window_s.unwrap_or(f64::INFINITY);
-            } else {
-                break;
-            }
-        }
-        // Retire completions that landed before this arrival.
-        while let Some(&Reverse(bits)) = log.completions.peek() {
-            if f64::from_bits(bits) <= t {
-                log.completions.pop();
-                outstanding -= 1;
-            } else {
-                break;
-            }
-        }
-        // Admission control.
-        if cfg.admission_cap.is_some_and(|cap| outstanding >= cap) {
-            rejected += 1;
-            continue;
-        }
-        outstanding += 1;
-        max_queue_depth = max_queue_depth.max(outstanding);
-        pending.push_back(idx);
-        if pending.len() >= cfg.max_batch {
-            dispatch_batch(
-                t,
-                &mut engine,
-                &mut fabric,
-                cost,
-                &active,
-                &mut pending,
-                &spec,
-                &mut log,
-            );
-        }
-    }
-    // Trace over: remaining partial batches fire at their wait deadlines.
-    while !pending.is_empty() {
-        let deadline = trace[*pending.front().expect("non-empty queue")].arrival_s
-            + cfg.max_wait_s;
-        dispatch_batch(
-            deadline,
-            &mut engine,
-            &mut fabric,
-            cost,
-            &active,
-            &mut pending,
-            &spec,
-            &mut log,
-        );
-    }
-    let DispatchLog { served, batch_sizes, .. } = log;
-
-    // ---- latency distribution ----
-    let mut lats: Vec<f64> = served.iter().map(|s| s.latency_s()).collect();
-    lats.sort_by(f64::total_cmp);
-    let total = trace.len();
-    let served_n = served.len();
-    let within = served
-        .iter()
-        .filter(|s| s.latency_s() <= cfg.slo_s + 1e-12)
-        .count();
-    let mean_s = if served_n > 0 {
-        lats.iter().sum::<f64>() / served_n as f64
-    } else {
-        0.0
-    };
-    let mean_batch = if batch_sizes.is_empty() {
-        0.0
-    } else {
-        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
-    };
-    let latency = LatencyStats {
-        requests: total,
-        served: served_n,
-        rejected,
-        p50_s: percentile(&lats, 0.50),
-        p95_s: percentile(&lats, 0.95),
-        p99_s: percentile(&lats, 0.99),
-        mean_s,
-        slo_s: cfg.slo_s,
-        attainment: if total > 0 { within as f64 / total as f64 } else { 1.0 },
-        mean_batch,
-        max_queue_depth,
-    };
-
-    let span = engine.span();
-    let peak_mem = engine
-        .manager()
-        .all()
-        .map(|g| g.mem_gib)
-        .fold(0.0f64, f64::max);
-    let metrics = RunMetrics {
-        steps_per_sec: if span > 0.0 { served_n as f64 / span } else { 0.0 },
-        pps: if span > 0.0 { served_n as f64 / span } else { 0.0 },
-        ttop: 0.0,
-        span_s: span,
-        utilization: engine.mean_utilization(),
-        final_reward: 0.0,
-        reward_curve: vec![],
-        comm_s: engine.comm_s(),
-        peak_mem_gib: peak_mem,
-        links: fabric.link_report(),
-        latency: Some(latency.clone()),
-    };
+    let metrics = program.finish(&engine, &fabric);
+    let latency = metrics.latency.clone().expect("gateway metrics carry latency");
     let final_fleet = engine.manager().all().cloned().collect();
     Ok(GatewayRunResult {
         metrics,
         latency,
-        served,
-        rejected,
-        batch_sizes,
-        scale_events,
+        served: program.take_served(),
+        rejected: program.rejected(),
+        batch_sizes: program.take_batch_sizes(),
+        scale_events: program.take_scale_events(),
         final_fleet,
     })
 }

@@ -1,0 +1,408 @@
+//! The asynchronized (A3C-style) training workload program:
+//! `drl::a3c::run_async`'s round loop as a steppable [`Workload`].
+//!
+//! Serving members continuously collect experience; the
+//! dispenser/compressor/migrator/batcher pipeline moves it to trainer
+//! members over the fabric; trainers update asynchronously and
+//! periodically push fresh parameters back. The whole pipeline (staged
+//! channel queues, sticky routing, partially filled batches) lives in the
+//! program, so a preempted tenant resumes mid-pipeline without
+//! re-charging completed rounds. With [`AsyncConfig::elastic`] set, the
+//! engine's elastic controller re-provisions SM share toward the
+//! bottleneck role group between rounds — the same bottleneck-shifting
+//! support sync training has had since PR 1.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::{StepCtx, StepOutcome, Workload};
+use crate::channels::{
+    Batcher, ChannelStats, Compressor, Dispenser, Migrator, RolloutSegment, TrainerEndpoint,
+};
+use crate::config::BenchInfo;
+use crate::drl::a3c::AsyncConfig;
+use crate::drl::compute::{Compute, WorkerState};
+use crate::drl::RolloutOut;
+use crate::engine::{ElasticController, Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
+use crate::metrics::{RewardTracker, RunMetrics};
+use crate::vtime::OpKind;
+
+/// Steppable A3C program (see module docs).
+pub struct AsyncProgram {
+    cfg: AsyncConfig,
+    // ---- bound membership ----
+    members: Vec<ExecutorId>,
+    agent_ids: Vec<ExecutorId>,
+    trainer_exec_list: Vec<ExecutorId>,
+    /// trainer GMI id -> executor (the migrator routes by GMI id).
+    trainer_ids: BTreeMap<usize, ExecutorId>,
+    agent_gpus: Vec<usize>,
+    num_env0: usize,
+    bound: bool,
+    // ---- channel pipeline ----
+    migrator: Option<Migrator>,
+    dispensers: Vec<Dispenser>,
+    compressor: Option<Compressor>,
+    batchers: BTreeMap<usize, Batcher>,
+    // ---- run state ----
+    started: bool,
+    start_s: f64,
+    rollout_len: usize,
+    round: usize,
+    flushed: bool,
+    agent_workers: Vec<WorkerState>,
+    trainer_worker: Option<WorkerState>,
+    last_real_rollout: Option<RolloutOut>,
+    stats: ChannelStats,
+    rewards: RewardTracker,
+    updates: usize,
+    samples_trained: usize,
+    reward_sum: f64,
+    reward_n: usize,
+    peak_mem: f64,
+    elastic: Option<ElasticController>,
+}
+
+impl AsyncProgram {
+    pub fn new(cfg: AsyncConfig) -> Self {
+        let elastic = cfg.elastic.clone().map(ElasticController::new);
+        AsyncProgram {
+            cfg,
+            members: Vec::new(),
+            agent_ids: Vec::new(),
+            trainer_exec_list: Vec::new(),
+            trainer_ids: BTreeMap::new(),
+            agent_gpus: Vec::new(),
+            num_env0: 0,
+            bound: false,
+            migrator: None,
+            dispensers: Vec::new(),
+            compressor: None,
+            batchers: BTreeMap::new(),
+            started: false,
+            start_s: 0.0,
+            rollout_len: 0,
+            round: 0,
+            flushed: false,
+            agent_workers: Vec::new(),
+            trainer_worker: None,
+            last_real_rollout: None,
+            stats: ChannelStats::default(),
+            rewards: RewardTracker::default(),
+            updates: 0,
+            samples_trained: 0,
+            reward_sum: 0.0,
+            reward_n: 0,
+            peak_mem: 0.0,
+            elastic,
+        }
+    }
+
+    /// Trainer updates performed so far.
+    pub fn updates(&self) -> usize {
+        self.updates
+    }
+
+    /// Rounds fully charged so far.
+    pub fn rounds_done(&self) -> usize {
+        self.round
+    }
+
+    /// Elastic re-provisioning adjustments applied (0 when disabled).
+    pub fn elastic_shifts(&self) -> usize {
+        self.elastic.as_ref().map(|c| c.shifts()).unwrap_or(0)
+    }
+
+    /// Channel traffic statistics; consumes the log.
+    pub fn take_channel_stats(&mut self) -> ChannelStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// One A3C round over every agent — a verbatim port of the historical
+    /// `run_async` loop body.
+    fn run_round(&mut self, ctx: &mut StepCtx<'_>) -> Result<()> {
+        let m = self.rollout_len;
+        let real_n = self.cfg.real_replicas.min(self.agent_ids.len()).max(1);
+        let mut round_reward = 0.0f64;
+        let mut round_n = 0usize;
+        for i in 0..self.agent_ids.len() {
+            let n_env = ctx.engine.num_env(self.agent_ids[i]);
+
+            // rollout segment (sim + fwd per step); only the simulation
+            // records occupancy — the agent forward overlaps the pipeline.
+            let now = ctx.engine.charge_steps(
+                ctx.cost,
+                self.agent_ids[i],
+                m as f64,
+                &[
+                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
+                    OpCharge::unrecorded(OpKind::PolicyFwd { num_env: n_env }),
+                ],
+                0.0,
+            );
+
+            // Rollout numerics on the real replicas; under Null compute
+            // only the deterministic pseudo reward is needed.
+            let seed = self.cfg.seed + (self.round * 257 + i) as i32;
+            let ro = if ctx.compute.is_real() && i < real_n {
+                Some(ctx.compute.rollout(ctx.bench, &mut self.agent_workers[i], seed)?)
+            } else {
+                None
+            };
+            if i < real_n {
+                let r = ro
+                    .as_ref()
+                    .map(|ro| ro.mean_reward)
+                    .unwrap_or_else(|| Compute::null_mean_reward(seed))
+                    as f64;
+                self.reward_sum += r;
+                self.reward_n += 1;
+                round_reward += r;
+                round_n += 1;
+            }
+
+            // experience: real bytes on real replicas, synthetic otherwise.
+            let seg = match &ro {
+                Some(ro) => RolloutSegment {
+                    steps: ctx.bench.horizon,
+                    envs: ctx.bench.num_env,
+                    obs: ro.obs.as_f32()?.to_vec(),
+                    actions: ro.actions.as_f32()?.to_vec(),
+                    logps: ro.logps.as_f32()?.to_vec(),
+                    rewards: ro.rewards.as_f32()?.to_vec(),
+                    values: ro.values.as_f32()?.to_vec(),
+                    dones: ro.dones.as_f32()?.to_vec(),
+                },
+                None => {
+                    RolloutSegment::synthetic(m, n_env, ctx.bench.obs_dim, ctx.bench.act_dim)
+                }
+            };
+            if let Some(ro) = ro {
+                self.last_real_rollout = Some(ro);
+            }
+
+            // DP -> CP -> MG -> BT, grouped along the step axis at
+            // training-batch granularity.
+            let steps_per_group = (self.cfg.batch_samples / n_env.max(1)).max(1);
+            let groups = self.dispensers[i].dispense_groups(
+                &seg,
+                now,
+                self.cfg.share_mode,
+                steps_per_group,
+            );
+            let compressor = self.compressor.as_mut().expect("bound program");
+            let mut packets = Vec::new();
+            for group in groups {
+                self.stats.chunks_in += group.len() as u64;
+                packets.extend(compressor.push(group));
+            }
+            for pkt in packets {
+                let decision =
+                    self.migrator.as_mut().expect("bound program").route(ctx.fabric, &pkt);
+                // The sender pays a per-message submission overhead on its
+                // own timeline (IPC rendezvous + serialization).
+                ctx.engine.pay(self.agent_ids[i], decision.sender_s);
+                self.stats.transfer_seconds += decision.transfer_s;
+                self.stats.transfer_ops += 1;
+                self.stats.packets_out += 1;
+                self.stats.bytes_moved += pkt.bytes() as u64;
+                let ready_batches = {
+                    let batcher = self.batchers.get_mut(&decision.trainer).unwrap();
+                    batcher.push(pkt, decision.arrival)
+                };
+
+                // trainer consumes ready batches immediately (async)
+                for batch in ready_batches {
+                    let tid = self.trainer_ids[&decision.trainer];
+                    ctx.engine.charge_after(
+                        ctx.cost,
+                        tid,
+                        batch.ready,
+                        &[
+                            OpCharge::recorded(OpKind::TrainGrad { samples: batch.samples }),
+                            OpCharge::unrecorded(OpKind::AdamApply),
+                        ],
+                    );
+                    self.migrator
+                        .as_mut()
+                        .expect("bound program")
+                        .complete(decision.trainer, batch.samples);
+                    self.samples_trained += batch.samples;
+                    self.updates += 1;
+
+                    // real gradient + update on the trainer worker
+                    if ctx.compute.is_real() {
+                        if let Some(ro) = &self.last_real_rollout {
+                            let tw = self.trainer_worker.as_mut().expect("bound program");
+                            let (g, _) = ctx.compute.grad(ctx.bench, tw, ro)?;
+                            ctx.compute.apply(ctx.bench, tw, &g, self.cfg.lr)?;
+                        }
+                    }
+
+                    // param push-back every k updates: agents never BLOCK
+                    // on the trainer; they only pay the receive cost of
+                    // the pushed tensor on their own timeline.
+                    if self.updates % self.cfg.param_sync_every == 0 {
+                        let push = ctx
+                            .fabric
+                            .plan_param_push(ctx.bench.param_bytes(), &self.agent_gpus);
+                        ctx.fabric.tally(&push, 1.0);
+                        ctx.engine.pay_group(&self.agent_ids, push.total_s());
+                        let params =
+                            self.trainer_worker.as_ref().expect("bound program").params.clone();
+                        for w in self.agent_workers.iter_mut() {
+                            w.params = params.clone();
+                        }
+                    }
+                }
+            }
+        }
+
+        // Fig 9-style learning signal: this round's mean reward at the
+        // agents' current virtual time.
+        if round_n > 0 {
+            self.rewards.push(
+                ctx.engine.max_time(&self.agent_ids).seconds(),
+                round_reward / round_n as f64,
+            );
+        }
+        self.round += 1;
+        Ok(())
+    }
+}
+
+impl Workload for AsyncProgram {
+    fn bind(
+        &mut self,
+        engine: &Engine,
+        _fabric: &mut Fabric,
+        bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()> {
+        if self.bound {
+            // The channel pipeline's routing and staged queues are keyed
+            // by the member set; A3C tenancy contracts therefore fix their
+            // membership (min = initial = max), and only share resizes —
+            // which nothing cached depends on — occur mid-run.
+            anyhow::ensure!(
+                self.members == members,
+                "A3C membership is fixed for the run (resize-only elasticity)"
+            );
+            return Ok(());
+        }
+        // Holistic members land in both groups, aliasing agent and trainer
+        // onto one executor — the shape the historical inline loop ran.
+        let (agents, trainers) = super::partition_roles(engine, members)?;
+        anyhow::ensure!(
+            !agents.is_empty() && !trainers.is_empty(),
+            "async layout needs both agents and trainers"
+        );
+        let endpoints: Vec<TrainerEndpoint> = trainers
+            .iter()
+            .map(|&ex| TrainerEndpoint { gmi: engine.gmi_of(ex), gpu: engine.gpu(ex) })
+            .collect();
+        let mut migrator = Migrator::new(endpoints);
+        let mut agent_gpus: Vec<usize> = Vec::new();
+        let mut agent_gmis: Vec<usize> = Vec::new();
+        for &ex in &agents {
+            let gmi = engine.gmi_of(ex);
+            let gpu = engine.gpu(ex);
+            migrator.register_agent(gmi, gpu);
+            agent_gmis.push(gmi);
+            if !agent_gpus.contains(&gpu) {
+                agent_gpus.push(gpu);
+            }
+        }
+        self.dispensers = agent_gmis
+            .iter()
+            .map(|&g| Dispenser::new(g, bench.obs_dim, bench.act_dim))
+            .collect();
+        self.compressor = Some(Compressor::with_staging_interval(
+            self.cfg.share_mode,
+            self.cfg.compressor_granularity,
+            self.cfg.staging_interval_s,
+        ));
+        self.batchers = trainers
+            .iter()
+            .map(|&ex| {
+                let gmi = engine.gmi_of(ex);
+                (gmi, Batcher::new(gmi, self.cfg.share_mode, self.cfg.batch_samples))
+            })
+            .collect();
+        self.trainer_ids =
+            trainers.iter().map(|&ex| (engine.gmi_of(ex), ex)).collect();
+        self.num_env0 = engine.num_env(agents[0]);
+        self.migrator = Some(migrator);
+        self.agent_ids = agents;
+        self.trainer_exec_list = trainers;
+        self.agent_gpus = agent_gpus;
+        self.members = members.to_vec();
+        self.bound = true;
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
+        anyhow::ensure!(self.bound, "async program stepped before bind");
+        if !self.started {
+            self.started = true;
+            self.start_s = ctx.engine.max_time(&self.members).seconds();
+            self.rollout_len = ctx.bench.horizon;
+            self.peak_mem = ctx.cost.mem_gib(self.num_env0, self.rollout_len, true, false);
+            let real_n = self.cfg.real_replicas.min(self.agent_ids.len()).max(1);
+            for _ in 0..real_n {
+                self.agent_workers.push(ctx.compute.init(ctx.bench, self.cfg.seed)?);
+            }
+            self.trainer_worker = Some(ctx.compute.init(ctx.bench, self.cfg.seed)?);
+        }
+        while self.round < self.cfg.rounds
+            && ctx.engine.max_time(&self.agent_ids).seconds() < ctx.horizon_s
+        {
+            self.run_round(ctx)?;
+            // ---- elastic re-provisioning between rounds ----
+            if let Some(ctl) = self.elastic.as_mut() {
+                ctl.rebalance(ctx.engine, &self.agent_ids, &self.trainer_exec_list);
+            }
+        }
+        if self.round >= self.cfg.rounds {
+            if !self.flushed {
+                self.flushed = true;
+                // flush stragglers through the pipeline (counted but not
+                // trained)
+                let leftover = self.compressor.as_mut().expect("bound program").flush();
+                for pkt in leftover {
+                    self.stats.packets_out += 1;
+                    self.stats.bytes_moved += pkt.bytes() as u64;
+                }
+            }
+            return Ok(StepOutcome::Done);
+        }
+        Ok(StepOutcome::Pending)
+    }
+
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
+        let agent_span = engine.max_time(&self.agent_ids).seconds() - self.start_s;
+        let span = engine.max_time(&self.members).seconds() - self.start_s;
+        let total_preds = (self.cfg.rounds * self.rollout_len) as f64
+            * self.agent_ids.len() as f64
+            * self.num_env0 as f64;
+        RunMetrics {
+            steps_per_sec: total_preds / span,
+            pps: total_preds / agent_span,
+            ttop: self.samples_trained as f64 / span,
+            span_s: span,
+            utilization: engine.mean_utilization(),
+            final_reward: if self.reward_n > 0 {
+                self.reward_sum / self.reward_n as f64
+            } else {
+                0.0
+            },
+            reward_curve: self.rewards.curve.clone(),
+            comm_s: self.stats.transfer_seconds,
+            peak_mem_gib: self.peak_mem,
+            links: fabric.link_report(),
+            latency: None,
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! The open-loop serving-gateway workload program:
+//! `serve::gateway::run_gateway`'s admission/batching loop as a steppable
+//! [`Workload`].
+//!
+//! The gateway is a discrete-event loop over three event kinds — request
+//! arrivals, batch-wait deadlines, and autoscale window boundaries — fired
+//! in virtual-time order with the same tie-breaking the standalone loop
+//! always used (a due deadline fires before the arrival that exposes it;
+//! deadlines beat window boundaries on ties). [`Workload::step`] simply
+//! processes every event before the horizon, so partitioning a run into
+//! scheduling rounds reproduces the identical event sequence — and
+//! bit-identical metrics — as one infinite-horizon pass.
+//!
+//! Two dispatch-flush policies share this one implementation:
+//!
+//! * **max-wait** ([`GatewayProgram::new`]) — the standalone gateway's
+//!   dynamic batching: a partial batch dispatches when its oldest request
+//!   has waited [`GatewayConfig::max_wait_s`].
+//! * **round-flush** ([`GatewayProgram::round_flush`]) — the multi-tenant
+//!   scheduler's historical policy for `sched::JobKind::Serving` tenants:
+//!   partial batches flush at the scheduling-round boundary (the step
+//!   horizon) instead.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use anyhow::Result;
+
+use super::{StepCtx, StepOutcome, Workload};
+use crate::config::BenchInfo;
+use crate::engine::{Engine, ExecutorId};
+use crate::fabric::Fabric;
+use crate::gmi::Role;
+use crate::metrics::{percentile, LatencyStats, RunMetrics};
+use crate::serve::autoscale::{Autoscaler, ScaleEvent};
+use crate::serve::gateway::{execute_dispatch, least_loaded, GatewayConfig, ServedRequest};
+use crate::serve::Request;
+
+/// Steppable open-loop gateway program (see module docs).
+pub struct GatewayProgram {
+    cfg: GatewayConfig,
+    trace: Vec<Request>,
+    /// Flush partial batches at the step horizon (the scheduler's round
+    /// boundary) instead of at per-request wait deadlines.
+    flush_at_horizon: bool,
+    // ---- bound membership ----
+    /// The live fleet dispatches target (replaced by `bind`, extended by
+    /// the standalone autoscaler).
+    active: Vec<ExecutorId>,
+    /// Every executor that was ever a member (span accounting).
+    all_members: Vec<ExecutorId>,
+    dedicated: bool,
+    bound: bool,
+    start_s: f64,
+    // ---- run state ----
+    next_idx: usize,
+    pending: VecDeque<usize>,
+    served: Vec<ServedRequest>,
+    batch_sizes: Vec<usize>,
+    rejected: usize,
+    /// Admitted and not yet completed (queued + in-flight).
+    outstanding: usize,
+    max_queue_depth: usize,
+    /// Completion times (bit patterns) of everything in flight.
+    completions: BinaryHeap<Reverse<u64>>,
+    // ---- SLO / autoscale signals ----
+    scaler: Option<Autoscaler>,
+    scale_events: Vec<ScaleEvent>,
+    next_window: f64,
+    /// Latencies dispatched in the current autoscale window (None without
+    /// an autoscaler).
+    window_lat: Option<Vec<f64>>,
+    /// Latencies dispatched during the current step (the scheduler's
+    /// per-round SLO pressure signal).
+    step_lat: Vec<f64>,
+    last_p99: Option<f64>,
+}
+
+impl GatewayProgram {
+    /// Standalone dynamic-batching gateway (max-wait flush).
+    pub fn new(cfg: GatewayConfig, trace: Vec<Request>) -> Self {
+        GatewayProgram {
+            cfg,
+            trace,
+            flush_at_horizon: false,
+            active: Vec::new(),
+            all_members: Vec::new(),
+            dedicated: false,
+            bound: false,
+            start_s: 0.0,
+            next_idx: 0,
+            pending: VecDeque::new(),
+            served: Vec::new(),
+            batch_sizes: Vec::new(),
+            rejected: 0,
+            outstanding: 0,
+            max_queue_depth: 0,
+            completions: BinaryHeap::new(),
+            scaler: None,
+            scale_events: Vec::new(),
+            next_window: f64::INFINITY,
+            window_lat: None,
+            step_lat: Vec::new(),
+            last_p99: None,
+        }
+    }
+
+    /// Scheduler-tenant variant: partial batches flush at each step's
+    /// horizon (the scheduling-round boundary) and wait deadlines are
+    /// disabled.
+    pub fn round_flush(mut cfg: GatewayConfig, trace: Vec<Request>) -> Self {
+        cfg.max_wait_s = f64::INFINITY;
+        let mut p = GatewayProgram::new(cfg, trace);
+        p.flush_at_horizon = true;
+        p
+    }
+
+    /// Admitted requests in dispatch order; consumes the log.
+    pub fn take_served(&mut self) -> Vec<ServedRequest> {
+        std::mem::take(&mut self.served)
+    }
+
+    /// Size of every dispatched batch, in dispatch order; consumes the log.
+    pub fn take_batch_sizes(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.batch_sizes)
+    }
+
+    /// Applied autoscale steps; consumes the log.
+    pub fn take_scale_events(&mut self) -> Vec<ScaleEvent> {
+        std::mem::take(&mut self.scale_events)
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Dispatch up to `max_batch` queued requests at virtual time `t` onto
+    /// the least-loaded active member as engine events (request hop,
+    /// batched `PolicyFwd`, response hop).
+    fn dispatch(&mut self, ctx: &mut StepCtx<'_>, t: f64) {
+        let n = self.pending.len().min(self.cfg.max_batch);
+        if n == 0 {
+            return;
+        }
+        let ex = least_loaded(ctx.engine, &self.active);
+        let batch_idx = self.batch_sizes.len();
+        let done =
+            execute_dispatch(ctx.engine, ctx.fabric, ctx.cost, ctx.bench, ex, t, n, self.dedicated);
+        let done_s = done.seconds();
+        for _ in 0..n {
+            let idx = self.pending.pop_front().expect("batch under-run");
+            let r = self.trace[idx];
+            self.served.push(ServedRequest {
+                id: r.id,
+                source: r.source,
+                arrival_s: r.arrival_s,
+                batch: batch_idx,
+                dispatch_s: t,
+                completion_s: done_s,
+            });
+            let lat = done_s - r.arrival_s;
+            if let Some(w) = self.window_lat.as_mut() {
+                w.push(lat);
+            }
+            self.step_lat.push(lat);
+            // Completion times are non-negative finite, so their bit
+            // patterns order like the values (min-heap via Reverse).
+            self.completions.push(Reverse(done_s.to_bits()));
+        }
+        self.batch_sizes.push(n);
+    }
+
+    /// Process one arrival: retire due completions, apply admission
+    /// control, enqueue, and dispatch a full batch immediately.
+    fn arrive(&mut self, ctx: &mut StepCtx<'_>, idx: usize) {
+        let t = self.trace[idx].arrival_s;
+        while let Some(&Reverse(bits)) = self.completions.peek() {
+            if f64::from_bits(bits) <= t {
+                self.completions.pop();
+                self.outstanding -= 1;
+            } else {
+                break;
+            }
+        }
+        if self.cfg.admission_cap.is_some_and(|cap| self.outstanding >= cap) {
+            self.rejected += 1;
+            return;
+        }
+        self.outstanding += 1;
+        self.max_queue_depth = self.max_queue_depth.max(self.outstanding);
+        self.pending.push_back(idx);
+        if self.pending.len() >= self.cfg.max_batch {
+            self.dispatch(ctx, t);
+        }
+    }
+}
+
+impl Workload for GatewayProgram {
+    fn bind(
+        &mut self,
+        engine: &Engine,
+        _fabric: &mut Fabric,
+        _bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()> {
+        anyhow::ensure!(!members.is_empty(), "no serving GMIs in fleet");
+        anyhow::ensure!(self.cfg.max_batch >= 1, "max_batch must be at least 1");
+        anyhow::ensure!(self.cfg.max_wait_s >= 0.0, "max_wait_s must be non-negative");
+        // An infinite wait means partial batches NEVER flush under the
+        // max-wait policy: the end-of-trace drain would spin forever. Only
+        // the round-flush variant (which flushes at the step horizon
+        // instead) may disable wait deadlines.
+        anyhow::ensure!(
+            self.flush_at_horizon || self.cfg.max_wait_s.is_finite(),
+            "max_wait_s must be finite under the max-wait flush policy"
+        );
+        if !self.bound {
+            self.bound = true;
+            self.start_s = engine.max_time(members).seconds();
+            // TDG fleets (dedicated simulator/agent GMIs) pay the
+            // reduced-share forward of the rejected design.
+            self.dedicated = members.iter().any(|&ex| {
+                engine
+                    .manager()
+                    .gmi(engine.gmi_of(ex))
+                    .is_some_and(|g| matches!(g.role, Role::Simulator | Role::Agent))
+            });
+            if let Some(a) = &self.cfg.autoscale {
+                let scaler = Autoscaler::new(a.clone(), engine, members)?;
+                self.next_window = scaler.window_s();
+                self.window_lat = Some(Vec::new());
+                self.scaler = Some(scaler);
+            }
+        }
+        self.active = members.to_vec();
+        for &ex in members {
+            if !self.all_members.contains(&ex) {
+                self.all_members.push(ex);
+            }
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
+        anyhow::ensure!(self.bound, "gateway program stepped before bind");
+        self.step_lat.clear();
+        let h = ctx.horizon_s;
+        loop {
+            let arrivals_left = self.next_idx < self.trace.len();
+            let t_arr = if arrivals_left {
+                self.trace[self.next_idx].arrival_s
+            } else {
+                f64::INFINITY
+            };
+            let deadline = match self.pending.front() {
+                Some(&i) => self.trace[i].arrival_s + self.cfg.max_wait_s,
+                None => f64::INFINITY,
+            };
+            // Windows only tick while arrivals remain (the standalone
+            // drain after the last arrival never re-evaluates the scaler).
+            let window = if arrivals_left && self.scaler.is_some() {
+                self.next_window
+            } else {
+                f64::INFINITY
+            };
+            if deadline <= t_arr && deadline <= window {
+                if deadline >= h {
+                    break;
+                }
+                self.dispatch(ctx, deadline);
+            } else if window <= t_arr {
+                if window >= h {
+                    break;
+                }
+                let w = window;
+                if let Some(s) = self.scaler.as_mut() {
+                    let lat = self.window_lat.as_deref().unwrap_or(&[]);
+                    if let Some(ev) = s.evaluate(w, ctx.engine, &mut self.active, lat) {
+                        self.scale_events.push(ev);
+                    }
+                }
+                if let Some(wl) = self.window_lat.as_mut() {
+                    wl.clear();
+                }
+                self.next_window =
+                    w + self.scaler.as_ref().map(|s| s.window_s()).unwrap_or(f64::INFINITY);
+                for &ex in &self.active {
+                    if !self.all_members.contains(&ex) {
+                        self.all_members.push(ex);
+                    }
+                }
+            } else if arrivals_left {
+                if t_arr >= h {
+                    break;
+                }
+                self.arrive(ctx, self.next_idx);
+                self.next_idx += 1;
+            } else {
+                break;
+            }
+        }
+        if self.flush_at_horizon && h.is_finite() {
+            while !self.pending.is_empty() {
+                self.dispatch(ctx, h);
+            }
+        }
+        self.last_p99 = if self.step_lat.is_empty() {
+            None
+        } else {
+            let mut w = self.step_lat.clone();
+            w.sort_by(f64::total_cmp);
+            Some(percentile(&w, 0.99))
+        };
+        if self.next_idx >= self.trace.len() && self.pending.is_empty() {
+            return Ok(StepOutcome::Done);
+        }
+        Ok(StepOutcome::Pending)
+    }
+
+    fn slo_signal(&self) -> Option<f64> {
+        self.last_p99
+    }
+
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
+        let mut lats: Vec<f64> = self.served.iter().map(|s| s.latency_s()).collect();
+        lats.sort_by(f64::total_cmp);
+        let total = self.trace.len();
+        let served_n = self.served.len();
+        let within = self
+            .served
+            .iter()
+            .filter(|s| s.latency_s() <= self.cfg.slo_s + 1e-12)
+            .count();
+        let mean_s = if served_n > 0 {
+            lats.iter().sum::<f64>() / served_n as f64
+        } else {
+            0.0
+        };
+        let mean_batch = if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        };
+        let latency = LatencyStats {
+            requests: total,
+            served: served_n,
+            rejected: self.rejected,
+            p50_s: percentile(&lats, 0.50),
+            p95_s: percentile(&lats, 0.95),
+            p99_s: percentile(&lats, 0.99),
+            mean_s,
+            slo_s: self.cfg.slo_s,
+            attainment: if total > 0 { within as f64 / total as f64 } else { 1.0 },
+            mean_batch,
+            max_queue_depth: self.max_queue_depth,
+        };
+        let span = engine.max_time(&self.all_members).seconds() - self.start_s;
+        let peak_mem = self
+            .active
+            .iter()
+            .filter_map(|&ex| engine.manager().gmi(engine.gmi_of(ex)))
+            .map(|g| g.mem_gib)
+            .fold(0.0f64, f64::max);
+        RunMetrics {
+            steps_per_sec: if span > 0.0 { served_n as f64 / span } else { 0.0 },
+            pps: if span > 0.0 { served_n as f64 / span } else { 0.0 },
+            ttop: 0.0,
+            span_s: span,
+            utilization: engine.mean_utilization(),
+            final_reward: 0.0,
+            reward_curve: vec![],
+            comm_s: super::scoped_comm_s(engine, &self.all_members),
+            peak_mem_gib: peak_mem,
+            links: fabric.link_report(),
+            latency: Some(latency),
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Steppable workload programs — ONE implementation per workload, shared
+//! by the standalone run loops and the multi-tenant scheduler.
+//!
+//! Before this layer existed, every workload's inner loop lived twice:
+//! once in its standalone orchestrator (`drl::sync::run_sync`,
+//! `drl::a3c::run_async`, `drl::serving::run_serving`,
+//! `serve::gateway::run_gateway`) and once re-implemented inline in the
+//! cluster scheduler's `JobKind` match — so every cost-model change had to
+//! land in two places, and workloads without an inline re-implementation
+//! (A3C) could not be cluster tenants at all. A [`Workload`] is the single
+//! implementation: a round-based coroutine over the shared
+//! [`Engine`](crate::engine::Engine) + [`Fabric`](crate::fabric::Fabric)
+//! substrate that charges its work in resumable steps.
+//!
+//! ## The contract
+//!
+//! * [`Workload::bind`] — (re)attach the program to its member executors.
+//!   Called once before the first step and again by the scheduler after
+//!   every membership or provisioning change (preemptive shrink, eviction,
+//!   SLO growth, restore), so cached placement-derived state (e.g. the
+//!   sync allreduce plan over the member GPUs) tracks the live fleet.
+//!   Re-binding an unchanged member set is a no-op: program progress
+//!   (completed iterations, queued requests, pipeline state) is never
+//!   reset, which is what makes preempt → restore resume instead of
+//!   re-charging completed work.
+//! * [`Workload::step`] — advance the program, charging engine/fabric
+//!   events until its executor frontier reaches `StepCtx::horizon_s` (one
+//!   scheduling round) or the program completes. A standalone driver
+//!   passes `f64::INFINITY` and the whole run happens in one step; the
+//!   scheduler passes each round's boundary. Crucially, the charge
+//!   sequence depends only on program state — never on where the horizon
+//!   falls — so a single-tenant cluster run is bit-identical to the
+//!   standalone run of the same program (locked in by
+//!   `rust/tests/prop_workload.rs`).
+//! * [`Workload::slo_signal`] — the last step's observed p99 latency
+//!   (serving programs only): the pressure signal the scheduler's SLO
+//!   grow/shrink/restore decisions consume.
+//! * [`Workload::finish`] — fold the program's bookkeeping into
+//!   [`RunMetrics`], exactly as its standalone loop reported them. Span,
+//!   rates, and communication seconds are scoped to the program's own
+//!   members (comm via the engine's job tags when present); engine-wide
+//!   aggregates (utilization, link traffic) reflect the whole engine,
+//!   which for a standalone run *is* the program — multi-tenant runs
+//!   additionally get per-job busy/interference attribution from the
+//!   engine's job tags.
+//!
+//! ## Adding a new workload kind
+//!
+//! 1. Implement [`Workload`] here: hold all mutable run state in the
+//!    program struct, partition members by [`Role`](crate::gmi::Role) in
+//!    `bind`, and gate the work loop on
+//!    `engine.max_time(&members) < ctx.horizon_s`.
+//! 2. Give it a standalone driver (build engine + fabric from a
+//!    [`Layout`](crate::mapping::Layout), bind, step to completion).
+//! 3. Add a [`JobKind`](crate::sched::JobKind) variant whose
+//!    `build_program` constructs it — the scheduler needs nothing else:
+//!    admission, preemption, SLO elasticity, and restore are
+//!    workload-agnostic.
+
+pub mod a3c;
+pub mod gateway;
+pub mod serving;
+pub mod sync;
+
+pub use a3c::AsyncProgram;
+pub use gateway::GatewayProgram;
+pub use serving::ClosedServingProgram;
+pub use sync::SyncProgram;
+
+use anyhow::Result;
+
+use crate::config::BenchInfo;
+use crate::drl::Compute;
+use crate::engine::{Engine, ExecutorId};
+use crate::fabric::Fabric;
+use crate::metrics::RunMetrics;
+use crate::vtime::CostModel;
+
+/// Everything one [`Workload::step`] call may touch: the shared
+/// discrete-event substrate plus the charge horizon for this step.
+pub struct StepCtx<'a> {
+    pub engine: &'a mut Engine,
+    pub fabric: &'a mut Fabric,
+    pub cost: &'a CostModel,
+    pub bench: &'a BenchInfo,
+    /// Numerics backend (real PJRT artifacts or the deterministic Null
+    /// stand-in). Cluster tenants run Null numerics.
+    pub compute: &'a Compute,
+    /// Virtual-time horizon this step may charge up to: the program stops
+    /// issuing work once its executor frontier passes it.
+    /// `f64::INFINITY` runs the program to completion in one step.
+    pub horizon_s: f64,
+}
+
+/// What one [`Workload::step`] call reports back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Work remains beyond the horizon — step again next round.
+    Pending,
+    /// Every charge the program will ever issue has been issued.
+    Done,
+}
+
+/// First-occurrence-ordered union of two executor groups — the standalone
+/// drivers' member list (colocated layouts alias rollout and trainer onto
+/// one executor, which must appear once).
+pub fn member_union(a: Vec<ExecutorId>, b: Vec<ExecutorId>) -> Vec<ExecutorId> {
+    let mut members = a;
+    for id in b {
+        if !members.contains(&id) {
+            members.push(id);
+        }
+    }
+    members
+}
+
+/// Partition members by DRL role capability into (rollout-capable,
+/// trainer-capable), preserving member order. Holistic members appear in
+/// BOTH lists — colocated layouts alias the two role groups onto one
+/// executor/timeline.
+pub(crate) fn partition_roles(
+    engine: &Engine,
+    members: &[ExecutorId],
+) -> Result<(Vec<ExecutorId>, Vec<ExecutorId>)> {
+    let mut rollout = Vec::new();
+    let mut trainers = Vec::new();
+    for &ex in members {
+        let gmi = engine.gmi_of(ex);
+        let role = engine
+            .manager()
+            .gmi(gmi)
+            .ok_or_else(|| anyhow::anyhow!("member GMI {gmi} not registered"))?
+            .role;
+        if role.has_sim() {
+            rollout.push(ex);
+        }
+        if role.has_trainer() {
+            trainers.push(ex);
+        }
+    }
+    Ok((rollout, trainers))
+}
+
+/// Communication seconds attributable to this program: the job-tagged
+/// total when the members carry a job tag (multi-tenant runs attribute
+/// comm per tenant), the engine-wide total otherwise (standalone, where
+/// the engine IS the program). In a single-tenant cluster the two sums
+/// receive identical additions in identical order, so this stays
+/// bit-identical to the standalone figure.
+pub(crate) fn scoped_comm_s(engine: &Engine, members: &[ExecutorId]) -> f64 {
+    members
+        .first()
+        .and_then(|&ex| engine.job_of_executor(ex))
+        .map(|job| engine.job_comm_s(job))
+        .unwrap_or_else(|| engine.comm_s())
+}
+
+/// Drive a bound program to completion — the standalone driver loop: one
+/// infinite-horizon step sequence over the program's own engine + fabric.
+/// (The scheduler instead steps programs one round at a time.)
+pub fn run_to_completion(
+    program: &mut dyn Workload,
+    engine: &mut Engine,
+    fabric: &mut Fabric,
+    cost: &CostModel,
+    bench: &BenchInfo,
+    compute: &Compute,
+) -> Result<()> {
+    let mut ctx = StepCtx { engine, fabric, cost, bench, compute, horizon_s: f64::INFINITY };
+    while program.step(&mut ctx)? != StepOutcome::Done {}
+    Ok(())
+}
+
+/// A resource-adjustable, schedulable workload program (see the module
+/// docs for the step/membership lifecycle).
+pub trait Workload {
+    /// (Re)attach the program to its member executors. Idempotent for an
+    /// unchanged member set; programs with placement-derived caches (the
+    /// sync allreduce plan, the gateway's active fleet) refresh them here.
+    fn bind(
+        &mut self,
+        engine: &Engine,
+        fabric: &mut Fabric,
+        bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()>;
+
+    /// Advance the program up to `ctx.horizon_s` (see [`StepCtx`]).
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome>;
+
+    /// p99 latency of the requests dispatched during the last step (None
+    /// for non-serving programs or steps that dispatched nothing) — the
+    /// scheduler's SLO pressure signal.
+    fn slo_signal(&self) -> Option<f64> {
+        None
+    }
+
+    /// Fold the completed (or preempted-final) program state into the
+    /// metrics its standalone run loop would have reported.
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics;
+}

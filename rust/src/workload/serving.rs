@@ -1,0 +1,208 @@
+//! The closed-loop DRL serving workload program:
+//! `drl::serving::run_serving`'s round loop as a steppable [`Workload`].
+//!
+//! Every round each serving member charges one `horizon`-step
+//! simulator+agent interaction segment; TDG fleets (dedicated
+//! simulator/agent GMIs — the design the paper rejects) additionally pay
+//! the per-step boundary crossing as a fabric intra-GPU plan and run the
+//! forward at the agent GMI's slice of the pair budget.
+
+use anyhow::Result;
+
+use super::{StepCtx, StepOutcome, Workload};
+use crate::config::BenchInfo;
+use crate::drl::compute::WorkerState;
+use crate::drl::serving::{tdg_agent_fwd, ServingConfig};
+use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
+use crate::gmi::Role;
+use crate::metrics::RunMetrics;
+use crate::vtime::OpKind;
+
+/// Steppable closed-loop serving program (see module docs).
+pub struct ClosedServingProgram {
+    cfg: ServingConfig,
+    // ---- bound membership ----
+    members: Vec<ExecutorId>,
+    ids: Vec<ExecutorId>,
+    dedicated: bool,
+    num_env0: usize,
+    bound: bool,
+    // ---- run state ----
+    started: bool,
+    start_s: f64,
+    round: usize,
+    rollout_len: usize,
+    /// Environment steps actually charged (exact integer accumulation):
+    /// robust to mid-run membership changes, bit-identical to the
+    /// closed-form `rounds x members x horizon x num_env` under fixed
+    /// membership.
+    env_steps: usize,
+    workers: Vec<WorkerState>,
+    reward_sum: f64,
+    reward_count: usize,
+    /// Fabric seconds of the TDG boundary crossings (tallied here for the
+    /// per-job comm report; TCG crossings are intra-GMI and free).
+    comm_s: f64,
+    peak_mem: f64,
+}
+
+impl ClosedServingProgram {
+    pub fn new(cfg: ServingConfig) -> Self {
+        ClosedServingProgram {
+            cfg,
+            members: Vec::new(),
+            ids: Vec::new(),
+            dedicated: false,
+            num_env0: 0,
+            bound: false,
+            started: false,
+            start_s: 0.0,
+            round: 0,
+            rollout_len: 0,
+            env_steps: 0,
+            workers: Vec::new(),
+            reward_sum: 0.0,
+            reward_count: 0,
+            comm_s: 0.0,
+            peak_mem: 0.0,
+        }
+    }
+
+    /// Rounds fully charged so far.
+    pub fn rounds_done(&self) -> usize {
+        self.round
+    }
+
+    fn run_round(&mut self, ctx: &mut StepCtx<'_>) -> Result<()> {
+        let m = self.rollout_len;
+        let real_n = self.cfg.real_replicas.min(self.ids.len()).max(1);
+        for i in 0..self.ids.len() {
+            let id = self.ids[i];
+            let n_env = ctx.engine.num_env(id);
+            let share = ctx.engine.share(id);
+
+            let sim = OpCharge::recorded(OpKind::SimStep { num_env: n_env });
+            // In TDG the agent runs on its own small GMI; model its
+            // forward at the agent GMI's slice of the pair budget.
+            let fwd = if self.dedicated {
+                tdg_agent_fwd(n_env, share)
+            } else {
+                OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })
+            };
+            // TDG: per interaction step, 2S + A + W bytes cross the GMI
+            // boundary through the host (Table 4) — a fabric intra-GPU
+            // plan, tallied once per step.
+            let t_comm = if self.dedicated {
+                let bytes = n_env * 4 * (2 * ctx.bench.obs_dim + ctx.bench.act_dim + 1);
+                let hop = ctx.fabric.plan_intra_gpu(
+                    bytes,
+                    ctx.engine.co_resident(id).max(1),
+                    ctx.engine.gpu(id),
+                );
+                ctx.fabric.tally(&hop, m as f64);
+                self.comm_s += hop.total_s() * m as f64;
+                hop.total_s()
+            } else {
+                0.0
+            };
+            ctx.engine.charge_steps(ctx.cost, id, m as f64, &[sim, fwd], t_comm);
+            self.env_steps += m * n_env;
+
+            if i < real_n {
+                let ro = ctx.compute.rollout(
+                    ctx.bench,
+                    &mut self.workers[i],
+                    self.cfg.seed + (self.round * 37 + i) as i32,
+                )?;
+                self.reward_sum += ro.mean_reward as f64;
+                self.reward_count += 1;
+            }
+        }
+        self.round += 1;
+        Ok(())
+    }
+}
+
+impl Workload for ClosedServingProgram {
+    fn bind(
+        &mut self,
+        engine: &Engine,
+        _fabric: &mut Fabric,
+        _bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()> {
+        if self.bound && self.members == members {
+            return Ok(());
+        }
+        let mut ids = Vec::new();
+        let mut dedicated = false;
+        for &ex in members {
+            let gmi = engine.gmi_of(ex);
+            let role = engine
+                .manager()
+                .gmi(gmi)
+                .ok_or_else(|| anyhow::anyhow!("member GMI {gmi} not registered"))?
+                .role;
+            if matches!(role, Role::Simulator | Role::Agent) {
+                dedicated = true;
+            }
+            if role.has_sim() {
+                ids.push(ex);
+            }
+        }
+        anyhow::ensure!(!ids.is_empty(), "no serving members");
+        self.num_env0 = engine.num_env(ids[0]);
+        self.ids = ids;
+        self.dedicated = dedicated;
+        self.members = members.to_vec();
+        self.bound = true;
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
+        anyhow::ensure!(self.bound, "serving program stepped before bind");
+        if !self.started {
+            self.started = true;
+            self.start_s = ctx.engine.max_time(&self.ids).seconds();
+            self.rollout_len = ctx.bench.horizon;
+            self.peak_mem = ctx.cost.mem_gib(self.num_env0, self.rollout_len, true, false);
+            let real_n = self.cfg.real_replicas.min(self.ids.len()).max(1);
+            for _ in 0..real_n {
+                self.workers.push(ctx.compute.init(ctx.bench, self.cfg.seed)?);
+            }
+        }
+        while self.round < self.cfg.rounds
+            && ctx.engine.max_time(&self.ids).seconds() < ctx.horizon_s
+        {
+            self.run_round(ctx)?;
+        }
+        if self.round >= self.cfg.rounds {
+            return Ok(StepOutcome::Done);
+        }
+        Ok(StepOutcome::Pending)
+    }
+
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
+        let span = engine.max_time(&self.ids).seconds() - self.start_s;
+        // What was actually charged — robust to mid-run membership changes.
+        let total_steps = self.env_steps as f64;
+        RunMetrics {
+            steps_per_sec: total_steps / span,
+            pps: total_steps / span,
+            ttop: 0.0,
+            span_s: span,
+            utilization: engine.mean_utilization(),
+            final_reward: if self.reward_count > 0 {
+                self.reward_sum / self.reward_count as f64
+            } else {
+                0.0
+            },
+            reward_curve: vec![],
+            comm_s: self.comm_s,
+            peak_mem_gib: self.peak_mem,
+            links: fabric.link_report(),
+            latency: None,
+        }
+    }
+}

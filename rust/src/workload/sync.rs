@@ -1,0 +1,395 @@
+//! The synchronized-PPO workload program: `drl::sync::run_sync`'s
+//! iteration loop as a steppable [`Workload`].
+//!
+//! One iteration = (i) rollout on every rollout-capable member, (ii)
+//! `ppo_epochs x minibatches` gradient + LGR-reduction + Adam rounds over
+//! the trainer members (overlapped or sequential per
+//! [`SyncConfig::overlap`]), (iii) optional elastic re-provisioning. The
+//! program owns every piece of mutable run state (iteration counter,
+//! worker numerics, reward curve, the in-flight overlapped reduction), so
+//! the scheduler can step it one round at a time and a preempted program
+//! resumes exactly where it stopped. The allreduce plan is derived from
+//! the live member placement at [`Workload::bind`] time and re-derived on
+//! membership changes.
+
+use anyhow::Result;
+
+use super::{StepCtx, StepOutcome, Workload};
+use crate::comm::ReduceStrategy;
+use crate::config::BenchInfo;
+use crate::drl::compute::WorkerState;
+use crate::drl::sync::SyncConfig;
+use crate::drl::{rollout_charges, RolloutOut, TrainStats};
+use crate::engine::{ElasticController, Engine, ExecutorId, OpCharge};
+use crate::fabric::{Fabric, Plan};
+use crate::metrics::{RewardTracker, RunMetrics};
+use crate::vtime::{Clock, OpKind};
+
+/// Steppable sync-PPO program (see module docs).
+pub struct SyncProgram {
+    cfg: SyncConfig,
+    /// Environment steps per rollout segment (`bench.horizon` for
+    /// standalone runs; the tenancy contract's `horizon` in the cluster).
+    rollout_len: usize,
+    // ---- bound membership (refreshed by `bind`) ----
+    members: Vec<ExecutorId>,
+    roll_ids: Vec<ExecutorId>,
+    tr_ids: Vec<ExecutorId>,
+    colocated: bool,
+    num_env0: usize,
+    strategy: ReduceStrategy,
+    plan: Plan,
+    bound: bool,
+    // ---- run state (never reset by re-binds) ----
+    started: bool,
+    start_s: f64,
+    iter: usize,
+    /// Environment steps actually charged (exact integer accumulation):
+    /// robust to mid-run membership changes, and bit-identical to the
+    /// closed-form `iterations x members x num_env` under fixed
+    /// membership (all values are far below 2^53).
+    env_steps: usize,
+    drained: bool,
+    workers: Vec<WorkerState>,
+    rewards: RewardTracker,
+    stats_per_iter: Vec<TrainStats>,
+    peak_mem: f64,
+    /// Completion of the last issued overlapped reduction (None until the
+    /// first reduction, or always with `overlap: false`).
+    params_ready: Option<Clock>,
+    elastic: Option<ElasticController>,
+}
+
+impl SyncProgram {
+    pub fn new(cfg: SyncConfig, rollout_len: usize) -> Self {
+        let elastic = cfg.elastic.clone().map(ElasticController::new);
+        SyncProgram {
+            cfg,
+            rollout_len,
+            members: Vec::new(),
+            roll_ids: Vec::new(),
+            tr_ids: Vec::new(),
+            colocated: false,
+            num_env0: 0,
+            strategy: ReduceStrategy::MultiProcess,
+            plan: Plan::new(),
+            bound: false,
+            started: false,
+            start_s: 0.0,
+            iter: 0,
+            env_steps: 0,
+            drained: false,
+            workers: Vec::new(),
+            rewards: RewardTracker::default(),
+            stats_per_iter: Vec::new(),
+            peak_mem: 0.0,
+            params_ready: None,
+            elastic,
+        }
+    }
+
+    /// Reduction strategy the bound plan uses.
+    pub fn strategy(&self) -> ReduceStrategy {
+        self.strategy
+    }
+
+    /// Iterations fully charged so far.
+    pub fn iterations_done(&self) -> usize {
+        self.iter
+    }
+
+    /// Elastic re-provisioning adjustments applied (0 when disabled).
+    pub fn elastic_shifts(&self) -> usize {
+        self.elastic.as_ref().map(|c| c.shifts()).unwrap_or(0)
+    }
+
+    /// Final parameters of worker 0 (checkpoint-style consumers); consumes
+    /// the workers.
+    pub fn take_final_params(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.workers)
+            .into_iter()
+            .next()
+            .map(|w| w.params)
+            .unwrap_or_default()
+    }
+
+    /// Per-iteration training statistics; consumes the log.
+    pub fn take_stats(&mut self) -> Vec<TrainStats> {
+        std::mem::take(&mut self.stats_per_iter)
+    }
+
+    /// One full sync iteration — a verbatim port of the historical
+    /// `run_sync` loop body, so standalone and cluster runs cannot drift.
+    fn run_iteration(&mut self, ctx: &mut StepCtx<'_>) -> Result<()> {
+        let m = self.rollout_len;
+        let n_roll = self.roll_ids.len();
+        let n_train = self.tr_ids.len();
+        let colocated = self.colocated;
+        let real_n = self.cfg.real_replicas.min(n_roll).max(1);
+
+        // ---- (i) experience collection on every rollout GMI ----
+        let mut rollouts: Vec<RolloutOut> = Vec::with_capacity(n_roll);
+        for i in 0..n_roll {
+            let n_env = ctx.engine.num_env(self.roll_ids[i]);
+            ctx.engine.charge_steps(
+                ctx.cost,
+                self.roll_ids[i],
+                m as f64,
+                &rollout_charges(n_env),
+                0.0,
+            );
+            self.env_steps += m * n_env;
+            self.peak_mem = self.peak_mem.max(ctx.cost.mem_gib(n_env, m, true, colocated));
+
+            let ro = if i < real_n {
+                ctx.compute.rollout(
+                    ctx.bench,
+                    &mut self.workers[i],
+                    self.cfg.seed + (self.iter * 131 + i) as i32,
+                )?
+            } else {
+                // mirror replica 0's experience (identical distribution)
+                rollouts[0].clone()
+            };
+            rollouts.push(ro);
+        }
+
+        // TDG_EX: ship experience from serving GMIs to their GPU's trainer
+        // (the Table 5 COM term); the k feeders contend and serialize on
+        // the trainer GPU's host path.
+        if !colocated {
+            let exp_bytes_per_gmi = self.num_env0 * m * ctx.bench.experience_bytes_per_step();
+            for t_idx in 0..n_train {
+                let tgpu = ctx.engine.gpu(self.tr_ids[t_idx]);
+                let feeders: Vec<ExecutorId> = self
+                    .roll_ids
+                    .iter()
+                    .copied()
+                    .filter(|&e| ctx.engine.gpu(e) == tgpu)
+                    .collect();
+                let k = feeders.len().max(1);
+                let gather = ctx.fabric.plan_gather(k, exp_bytes_per_gmi, tgpu);
+                let feed_max = ctx.engine.max_time(&feeders);
+                ctx.engine.recv_plan(ctx.fabric, self.tr_ids[t_idx], feed_max, &gather);
+            }
+        }
+
+        // ---- (ii) PPO epochs of minibatch updates ----
+        let mut iter_stats = TrainStats::default();
+        let mb = self.cfg.minibatches.max(1);
+        for _epoch in 0..self.cfg.ppo_epochs {
+            // Real gradients, once per epoch: the reduced gradient is the
+            // real replicas' mean with replica 0 weighted by the mirror
+            // count (mirrors hold exact copies of replica 0's gradient).
+            let mut real_grads: Vec<Vec<f32>> = Vec::with_capacity(real_n);
+            for widx in 0..real_n.min(n_train) {
+                let (g, st) = ctx.compute.grad(ctx.bench, &self.workers[widx], &rollouts[widx])?;
+                if widx == 0 {
+                    iter_stats = st;
+                }
+                real_grads.push(g);
+            }
+            let reduced = if real_grads.len() == 1 || n_train == 1 {
+                real_grads.swap_remove(0)
+            } else {
+                let k = real_grads.len();
+                let w0 = (n_train - k + 1) as f32;
+                let mut acc = real_grads.swap_remove(0);
+                for v in acc.iter_mut() {
+                    *v *= w0;
+                }
+                for g in &real_grads {
+                    for (a, v) in acc.iter_mut().zip(g.iter()) {
+                        *a += v;
+                    }
+                }
+                let inv = 1.0 / n_train as f32;
+                for v in acc.iter_mut() {
+                    *v *= inv;
+                }
+                acc
+            };
+
+            // Virtual minibatch loop: grad/apply on the compute stream,
+            // one LGR reduction per minibatch on the fabric. Overlap mode
+            // lets reduction k drain while minibatch k+1 computes,
+            // re-synchronizing at the next epoch's first gradient.
+            for mb_i in 0..mb {
+                for t_idx in 0..n_train {
+                    let total_samples = if colocated {
+                        self.num_env0 * m
+                    } else {
+                        self.num_env0 * m * (n_roll / n_train).max(1)
+                    };
+                    let samples = (total_samples / mb).max(1);
+                    let ops = [
+                        OpCharge::recorded(OpKind::TrainGrad { samples }),
+                        OpCharge::recorded(OpKind::AdamApply),
+                    ];
+                    match (mb_i, self.params_ready) {
+                        // First gradient after an overlapped reduction:
+                        // block on the reduced parameters landing.
+                        (0, Some(ready)) => {
+                            ctx.engine.charge_after(ctx.cost, self.tr_ids[t_idx], ready, &ops);
+                        }
+                        _ => {
+                            ctx.engine.charge_steps(ctx.cost, self.tr_ids[t_idx], 1.0, &ops, 0.0);
+                        }
+                    }
+                }
+                if self.plan.is_empty() {
+                    continue;
+                }
+                if self.cfg.overlap {
+                    self.params_ready = Some(ctx.engine.collective_overlapped(
+                        ctx.fabric,
+                        &self.tr_ids,
+                        &self.plan,
+                    ));
+                } else {
+                    ctx.engine.collective(ctx.fabric, &self.tr_ids, &self.plan);
+                }
+            }
+
+            // real update, once per epoch
+            for w in self.workers.iter_mut().take(real_n) {
+                ctx.compute.apply(ctx.bench, w, &reduced, self.cfg.lr)?;
+            }
+            for i in real_n..n_roll {
+                self.workers[i] = self.workers[0].clone();
+            }
+        }
+
+        // TDG_EX: parameters flow back to the serving GMIs once the last
+        // reduction has drained.
+        if !colocated {
+            let roll_gpus: Vec<usize> = {
+                let mut g: Vec<usize> =
+                    self.roll_ids.iter().map(|&r| ctx.engine.gpu(r)).collect();
+                g.sort_unstable();
+                g.dedup();
+                g
+            };
+            let fan = ctx.fabric.plan_fanout(
+                ctx.bench.param_bytes(),
+                n_roll / n_train.max(1),
+                &roll_gpus,
+            );
+            let mut from = ctx.engine.max_time(&self.tr_ids);
+            if let Some(ready) = self.params_ready {
+                from = Clock(from.seconds().max(ready.seconds()));
+            }
+            ctx.engine.broadcast_plan(ctx.fabric, &self.roll_ids, from, &fan);
+        }
+
+        let mean_r = rollouts.iter().map(|r| r.mean_reward as f64).sum::<f64>()
+            / rollouts.len() as f64;
+        self.rewards.push(ctx.engine.max_time(&self.roll_ids).seconds(), mean_r);
+        self.stats_per_iter.push(iter_stats);
+
+        // ---- (iii) elastic re-provisioning between iterations ----
+        if let Some(ctl) = self.elastic.as_mut() {
+            ctl.rebalance(ctx.engine, &self.roll_ids, &self.tr_ids);
+        }
+        self.iter += 1;
+        Ok(())
+    }
+}
+
+impl Workload for SyncProgram {
+    fn bind(
+        &mut self,
+        engine: &Engine,
+        fabric: &mut Fabric,
+        bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()> {
+        if self.bound && self.members == members {
+            // Resize-only changes: nothing cached depends on SM shares
+            // (charges read live shares; the plan depends on placement).
+            return Ok(());
+        }
+        let (roll, tr) = super::partition_roles(engine, members)?;
+        anyhow::ensure!(
+            !roll.is_empty() && !tr.is_empty(),
+            "sync program needs rollout and trainer members"
+        );
+        // LGR over the trainer members: the mapping list groups them per
+        // GPU (ascending member order within a GPU), and the fabric lowers
+        // the cheapest valid plan unless a strategy is pinned.
+        let mut per_gpu: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for &ex in &tr {
+            per_gpu.entry(engine.gpu(ex)).or_default().push(engine.gmi_of(ex));
+        }
+        let mpl: Vec<Vec<usize>> = per_gpu.into_values().collect();
+        let (strategy, plan) = match self.cfg.strategy_override {
+            Some(s) => (s, fabric.plan_allreduce(&mpl, bench.param_bytes(), s)?),
+            None => fabric.cheapest_allreduce(&mpl, bench.param_bytes()),
+        };
+        self.colocated = roll == tr;
+        self.num_env0 = engine.num_env(roll[0]);
+        self.roll_ids = roll;
+        self.tr_ids = tr;
+        self.members = members.to_vec();
+        self.strategy = strategy;
+        self.plan = plan;
+        self.bound = true;
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
+        anyhow::ensure!(self.bound, "sync program stepped before bind");
+        if !self.started {
+            self.started = true;
+            self.start_s = ctx.engine.max_time(&self.members).seconds();
+            let real_n = self.cfg.real_replicas.min(self.roll_ids.len()).max(1);
+            for i in 0..self.roll_ids.len() {
+                if i < real_n {
+                    self.workers.push(ctx.compute.init(ctx.bench, self.cfg.seed)?);
+                } else {
+                    self.workers.push(self.workers[0].clone());
+                }
+            }
+        }
+        while self.iter < self.cfg.iterations
+            && ctx.engine.max_time(&self.members).seconds() < ctx.horizon_s
+        {
+            self.run_iteration(ctx)?;
+        }
+        if self.iter >= self.cfg.iterations {
+            if !self.drained {
+                self.drained = true;
+                // The final overlapped reduction drains past the last
+                // compute charge: the run isn't over until its parameters
+                // landed.
+                if let Some(ready) = self.params_ready {
+                    ctx.engine.wait_group(&self.tr_ids, ready);
+                }
+            }
+            return Ok(StepOutcome::Done);
+        }
+        Ok(StepOutcome::Pending)
+    }
+
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
+        let span = engine.max_time(&self.members).seconds() - self.start_s;
+        // What was actually charged — NOT a closed-form formula, so a
+        // tenant whose membership shrank mid-run reports true throughput.
+        let total_env_steps = self.env_steps as f64;
+        let total_samples = total_env_steps * self.cfg.ppo_epochs as f64;
+        RunMetrics {
+            steps_per_sec: total_env_steps / span,
+            pps: total_env_steps / span,
+            ttop: total_samples / span,
+            span_s: span,
+            utilization: engine.mean_utilization(),
+            final_reward: self.rewards.final_reward(),
+            reward_curve: self.rewards.curve.clone(),
+            comm_s: super::scoped_comm_s(engine, &self.members),
+            peak_mem_gib: self.peak_mem,
+            links: fabric.link_report(),
+            latency: None,
+        }
+    }
+}

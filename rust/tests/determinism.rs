@@ -17,7 +17,7 @@ use gmi_drl::mapping::{
     MappingTemplate,
 };
 use gmi_drl::metrics::RunMetrics;
-use gmi_drl::sched::{corun_scenario, run_cluster, SchedConfig};
+use gmi_drl::sched::{corun_scenario, run_cluster, JobSpec, SchedConfig};
 use gmi_drl::serve::{generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, TrafficPattern};
 use gmi_drl::vtime::CostModel;
 
@@ -140,6 +140,61 @@ fn multi_job_corun_is_bit_identical_across_runs() {
     assert_eq!(bits(r1.makespan_s), bits(r2.makespan_s));
     assert_eq!(bits(r1.cluster_utilization), bits(r2.cluster_utilization));
     assert_eq!(bits(r1.fairness), bits(r2.fairness));
+}
+
+#[test]
+fn three_kind_corun_is_bit_identical_across_runs() {
+    // The Workload-program golden: training + SLO serving + an A3C
+    // channel-pipeline tenant co-run on one shared cluster and replay
+    // bit-identically — per-job RunMetrics, the full scheduling timeline,
+    // and the cluster aggregates.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let mk = || {
+        let trace = generate_trace(
+            &TrafficPattern::Diurnal { base: 2000.0, peak: 8000.0, period_s: 0.3 },
+            0.3,
+            5,
+            4,
+        );
+        vec![
+            JobSpec::training(0, "train", 1, 0.0, 2, 0.4, 0.1, 512, 6),
+            JobSpec::serving(1, "serve", 9, 0.0, (1, 2, 3), 0.25, 16, 20e-3, trace),
+            JobSpec::a3c(
+                2,
+                "a3c",
+                5,
+                0.04,
+                (1, 1),
+                0.3,
+                0.1,
+                1024,
+                AsyncConfig { rounds: 5, batch_samples: 4096, ..AsyncConfig::default() },
+            ),
+        ]
+    };
+    let cfg = SchedConfig::default();
+    let r1 = run_cluster(&topo, &b, &cost, &mk(), &cfg).unwrap();
+    let r2 = run_cluster(&topo, &b, &cost, &mk(), &cfg).unwrap();
+    assert_eq!(r1.jobs.len(), 3);
+    for (a, c) in r1.jobs.iter().zip(&r2.jobs) {
+        assert_eq!(a.id, c.id);
+        assert_eq!(a.kind, c.kind);
+        assert_metrics_identical(&a.metrics, &c.metrics, &format!("3-kind job {}", a.id));
+        assert_eq!(bits(a.admitted_s), bits(c.admitted_s), "job {} admitted_s", a.id);
+        assert_eq!(bits(a.completed_s), bits(c.completed_s), "job {} completed_s", a.id);
+        assert_eq!(bits(a.busy_s), bits(c.busy_s), "job {} busy_s", a.id);
+        assert_eq!(a.preemptions, c.preemptions, "job {} preemptions", a.id);
+        assert_eq!(a.restores, c.restores, "job {} restores", a.id);
+    }
+    assert_eq!(r1.events, r2.events, "scheduling timeline drifted");
+    assert_eq!(bits(r1.makespan_s), bits(r2.makespan_s));
+    assert_eq!(bits(r1.fairness), bits(r2.fairness));
+    // The async tenant actually ran its pipeline.
+    let a3c = r1.job(2).unwrap();
+    assert_eq!(a3c.kind, "async");
+    assert!(a3c.metrics.ttop > 0.0, "a3c trainers never consumed a batch");
 }
 
 #[test]

@@ -1,0 +1,328 @@
+//! The Workload-program equivalence suite: ONE implementation per
+//! workload means a single-tenant cluster run must be *bit-identical* to
+//! the standalone run of the same program — same engine charges, same
+//! fabric plans, same metrics fold. Each equivalence test mirrors the
+//! scheduler's deterministic placement (most-free-share GPU, ties to the
+//! lowest index, GMI ids in placement order) with a hand-built layout and
+//! compares every `RunMetrics` field bit-for-bit.
+//!
+//! Also locks in the resumability contract: a preempted (shrunk) and
+//! later restored program charges every round exactly once — no work is
+//! re-charged across membership/provisioning changes.
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::drl::a3c::{run_async, AsyncConfig};
+use gmi_drl::drl::serving::{run_serving, ServingConfig};
+use gmi_drl::drl::sync::{run_sync, SyncConfig};
+use gmi_drl::drl::Compute;
+use gmi_drl::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+use gmi_drl::mapping::{build_gateway_fleet, Layout};
+use gmi_drl::metrics::RunMetrics;
+use gmi_drl::sched::{run_cluster, JobKind, JobSpec, SchedAction, SchedConfig};
+use gmi_drl::serve::{generate_trace, run_gateway, GatewayConfig, TrafficPattern};
+use gmi_drl::vtime::CostModel;
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Bit-exact equality over every RunMetrics field.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(bits(a.steps_per_sec), bits(b.steps_per_sec), "{what}: steps_per_sec");
+    assert_eq!(bits(a.pps), bits(b.pps), "{what}: pps");
+    assert_eq!(bits(a.ttop), bits(b.ttop), "{what}: ttop");
+    assert_eq!(bits(a.span_s), bits(b.span_s), "{what}: span_s");
+    assert_eq!(bits(a.utilization), bits(b.utilization), "{what}: utilization");
+    assert_eq!(bits(a.final_reward), bits(b.final_reward), "{what}: final_reward");
+    assert_eq!(bits(a.comm_s), bits(b.comm_s), "{what}: comm_s");
+    assert_eq!(bits(a.peak_mem_gib), bits(b.peak_mem_gib), "{what}: peak_mem_gib");
+    assert_eq!(a.reward_curve.len(), b.reward_curve.len(), "{what}: curve len");
+    for (i, (x, y)) in a.reward_curve.iter().zip(&b.reward_curve).enumerate() {
+        assert_eq!(bits(x.0), bits(y.0), "{what}: curve[{i}].t");
+        assert_eq!(bits(x.1), bits(y.1), "{what}: curve[{i}].r");
+    }
+    assert_eq!(a.links.len(), b.links.len(), "{what}: link count");
+    for (x, y) in a.links.iter().zip(&b.links) {
+        assert_eq!(x.name, y.name, "{what}: link name");
+        assert_eq!(x.bytes, y.bytes, "{what}: link bytes {}", x.name);
+        assert_eq!(bits(x.busy_s), bits(y.busy_s), "{what}: link busy {}", x.name);
+    }
+    assert_eq!(a.latency, b.latency, "{what}: latency stats");
+}
+
+/// A hand-built layout mirroring the scheduler's placement for `specs`:
+/// (gpu, share, mem, role, num_env) per member, GMI ids in order.
+fn mirror_layout(
+    topo: &Topology,
+    specs: &[(usize, f64, f64, Role, usize)],
+) -> (GmiManager, Vec<usize>) {
+    let mut manager = GmiManager::new(topo.clone());
+    let mut ids = Vec::new();
+    for (id, &(gpu, share, mem, role, num_env)) in specs.iter().enumerate() {
+        manager
+            .add_gmi(GmiSpec {
+                id,
+                gpu,
+                sm_share: share,
+                mem_gib: mem,
+                backend: GmiBackend::Mps,
+                role,
+                num_env,
+            })
+            .unwrap();
+        ids.push(id);
+    }
+    (manager, ids)
+}
+
+#[test]
+fn sync_single_tenant_matches_standalone_bit_for_bit() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    // Scheduler placement for 2 x 0.5-share members on an empty 2-GPU
+    // cluster: member 0 -> GPU 0, member 1 -> GPU 1 (most free share,
+    // ties to the lowest index), roles Holistic, 4 GiB each.
+    let (manager, ids) =
+        mirror_layout(&topo, &[
+            (0, 0.5, 4.0, Role::Holistic, 512),
+            (1, 0.5, 4.0, Role::Holistic, 512),
+        ]);
+    let layout = Layout {
+        manager,
+        rollout_gmis: ids.clone(),
+        trainer_gmis: ids,
+        gmi_per_gpu: 1,
+        num_env_per_gmi: 512,
+        backend: GmiBackend::Mps,
+    };
+    // The exact program JobKind::Training builds: one PPO epoch of
+    // sequential (non-overlapped) minibatch reductions per iteration.
+    let cfg = SyncConfig {
+        iterations: 4,
+        ppo_epochs: 1,
+        minibatches: gmi_drl::drl::DEFAULT_MINIBATCHES,
+        overlap: false,
+        ..SyncConfig::default()
+    };
+    let standalone = run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+
+    let spec = JobSpec {
+        id: 0,
+        name: "solo".into(),
+        priority: 1,
+        arrival_s: 0.0,
+        min_gmis: 2,
+        initial_gmis: 2,
+        max_gmis: 2,
+        share: 0.5,
+        min_share: 0.25,
+        mem_gib: 4.0,
+        pin_gpus: None,
+        kind: JobKind::Training {
+            iterations: 4,
+            horizon: b.horizon,
+            num_env: 512,
+            minibatches: gmi_drl::drl::DEFAULT_MINIBATCHES,
+        },
+    };
+    let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
+    assert_metrics_identical(
+        &standalone.metrics,
+        &r.job(0).unwrap().metrics,
+        "sync standalone vs single-tenant",
+    );
+}
+
+#[test]
+fn closed_serving_single_tenant_matches_standalone_bit_for_bit() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+    // Scheduler placement for 2 x 0.5-share members on 1 GPU: both on
+    // GPU 0, SimAgent role, 2 GiB each (JobSpec::closed's footprint).
+    let (manager, ids) =
+        mirror_layout(&topo, &[
+            (0, 0.5, 2.0, Role::SimAgent, 1024),
+            (0, 0.5, 2.0, Role::SimAgent, 1024),
+        ]);
+    let layout = Layout {
+        manager,
+        rollout_gmis: ids,
+        trainer_gmis: vec![],
+        gmi_per_gpu: 2,
+        num_env_per_gmi: 1024,
+        backend: GmiBackend::Mps,
+    };
+    let cfg = ServingConfig { rounds: 5, ..ServingConfig::default() };
+    let standalone = run_serving(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+
+    let spec = JobSpec::closed(0, "collect", 1, 0.0, 2, 0.5, 0.2, 1024, 5);
+    let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
+    assert_metrics_identical(
+        &standalone,
+        &r.job(0).unwrap().metrics,
+        "closed serving standalone vs single-tenant",
+    );
+}
+
+#[test]
+fn gateway_single_tenant_matches_standalone_bit_for_bit() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+    // The standalone fleet builder's exact provisioning, mirrored by the
+    // tenant spec: 2 initial members at floor(100/4)% share on GPU 0.
+    let fleet = build_gateway_fleet(&topo, 2, 4, 16, &cost, None).unwrap();
+    let member_mem = fleet.manager.gmi(0).unwrap().mem_gib;
+    let member_share = fleet.manager.gmi(0).unwrap().sm_share;
+    let trace = generate_trace(&TrafficPattern::Poisson { rate: 3000.0 }, 0.1, 9, 4);
+    let cfg = GatewayConfig {
+        max_batch: 16,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s: 30e-3,
+        autoscale: None,
+    };
+    let standalone = run_gateway(&fleet, &b, &cost, &trace, &cfg).unwrap();
+
+    let mut spec = JobSpec::gateway(
+        0,
+        "gw",
+        9,
+        0.0,
+        (2, 2, 2),
+        member_share,
+        cfg.clone(),
+        trace.clone(),
+    );
+    spec.mem_gib = member_mem;
+    let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
+    let job = r.job(0).unwrap();
+    assert_metrics_identical(
+        &standalone.metrics,
+        &job.metrics,
+        "gateway standalone vs single-tenant",
+    );
+    // Per-request distribution identical too (carried in the metrics).
+    let (sl, cl) = (
+        standalone.metrics.latency.as_ref().unwrap(),
+        job.metrics.latency.as_ref().unwrap(),
+    );
+    assert_eq!(sl.served, cl.served);
+    assert_eq!(sl.requests, cl.requests);
+}
+
+#[test]
+fn a3c_single_tenant_matches_standalone_bit_for_bit() {
+    let b = static_registry()["AY"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    // Scheduler placement for an (agents=1, trainers=1) tenant at 0.5
+    // share: agent member 0 -> GPU 0, trainer member 1 -> GPU 1.
+    let (manager, _) = mirror_layout(&topo, &[
+        (0, 0.5, 4.0, Role::SimAgent, 2048),
+        (1, 0.5, 4.0, Role::Trainer, 0),
+    ]);
+    let layout = Layout {
+        manager,
+        rollout_gmis: vec![0],
+        trainer_gmis: vec![1],
+        gmi_per_gpu: 1,
+        num_env_per_gmi: 2048,
+        backend: GmiBackend::Mps,
+    };
+    let cfg = AsyncConfig { rounds: 6, batch_samples: 4096, ..AsyncConfig::default() };
+    let standalone = run_async(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+
+    let spec = JobSpec::a3c(0, "a3c", 5, 0.0, (1, 1), 0.5, 0.25, 2048, cfg.clone());
+    let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
+    assert_metrics_identical(
+        &standalone.metrics,
+        &r.job(0).unwrap().metrics,
+        "a3c standalone vs single-tenant",
+    );
+}
+
+#[test]
+fn preempted_then_restored_program_never_recharges_completed_rounds() {
+    // A trainer is shrunk mid-run by a high-priority burst and regrown
+    // afterwards. The program resumes where it stopped: the env-step
+    // conservation total comes out exactly once, and the job completes
+    // exactly once at its full admitted share.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+    let iterations = 30usize;
+    let num_env = 256usize;
+    let trace = generate_trace(&TrafficPattern::Constant { rate: 4000.0 }, 0.2, 3, 4);
+    let jobs = vec![
+        JobSpec::training(0, "train", 1, 0.0, 1, 0.9, 0.2, num_env, iterations),
+        JobSpec::serving(1, "burst", 9, 0.05, (1, 1, 1), 0.5, 16, 50e-3, trace),
+    ];
+    let cfg = SchedConfig { quantum_s: 0.05, ..Default::default() };
+    let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    let train = r.job(0).unwrap();
+    assert!(train.preemptions >= 1, "trainer was never preempted");
+    assert!(train.restores >= 1, "trainer was never restored");
+    // Env-step conservation: iterations x horizon x num_env x members,
+    // charged exactly once across the preempt -> restore boundary.
+    let expected = (iterations * 16 * num_env) as f64;
+    let charged = train.metrics.steps_per_sec * train.metrics.span_s;
+    assert!(
+        ((charged - expected) / expected).abs() < 1e-9,
+        "env steps {charged} vs expected {expected}: work re-charged or lost"
+    );
+    assert_eq!(
+        r.events
+            .iter()
+            .filter(|e| e.job == 0 && e.action == SchedAction::Complete)
+            .count(),
+        1,
+        "job completed more than once"
+    );
+    assert!((train.share_at_completion - 0.9).abs() < 1e-9);
+    // The burst's requests were each served exactly once too.
+    let serve = r.job(1).unwrap().metrics.latency.clone().unwrap();
+    assert_eq!(serve.served, serve.requests);
+}
+
+#[test]
+fn four_kind_corun_respects_cluster_invariants() {
+    // Training + open-loop serving + A3C + closed-loop collection on one
+    // shared 2-GPU cluster: everything completes, nothing oversubscribes,
+    // every serving request is dispatched exactly once.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let trace = generate_trace(&TrafficPattern::Poisson { rate: 3000.0 }, 0.12, 17, 4);
+    let jobs = vec![
+        JobSpec::training(0, "train", 1, 0.0, 2, 0.4, 0.1, 512, 5),
+        JobSpec::serving(1, "serve", 9, 0.0, (1, 2, 3), 0.25, 16, 20e-3, trace),
+        JobSpec::a3c(
+            2,
+            "a3c",
+            5,
+            0.04,
+            (1, 1),
+            0.3,
+            0.1,
+            1024,
+            AsyncConfig { rounds: 4, batch_samples: 4096, ..AsyncConfig::default() },
+        ),
+        JobSpec::closed(3, "collect", 2, 0.08, 1, 0.2, 0.1, 512, 4),
+    ];
+    let r = run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+    assert!(r.peak_gpu_share <= 1.0 + 1e-6, "peak share {}", r.peak_gpu_share);
+    assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+    for j in &r.jobs {
+        assert!(j.completed_s > j.admitted_s - 1e-12, "job {} never completed", j.id);
+        assert!(j.busy_s > 0.0, "job {} never computed", j.id);
+    }
+    let serve = r.job(1).unwrap().metrics.latency.clone().unwrap();
+    assert_eq!(serve.served, serve.requests, "dropped or duplicated requests");
+    assert_eq!(r.job(2).unwrap().kind, "async");
+    assert_eq!(r.job(3).unwrap().kind, "closed");
+    assert!(r.job(2).unwrap().metrics.ttop > 0.0, "a3c trainers never trained");
+}

@@ -1,0 +1,124 @@
+//! Cluster-day replay at ramping volumes (the §Perf tentpole bench): the
+//! seeded diurnal co-run scenario — an elastic serving tenant against a
+//! preemptible training tenant on one shared cluster — replayed at
+//! geometrically growing simulated durations. Each scale reports simulated
+//! seconds per wall second, request + scheduling-event throughput, and the
+//! process's peak-RSS proxy, so the trajectory shows whether per-round cost
+//! stays flat as the day grows (the pooled/incremental hot paths) or
+//! degrades (an accidental O(N) scan or per-round allocation creeping back).
+//!
+//! `--bless` writes `BENCH_cluster_day.json`; `--check <baseline.json>`
+//! compares the largest scale's sim-s-per-wall-s against the committed
+//! baseline and fails on a >20% regression (bootstrap/null baselines warn
+//! and pass) — the CI perf gate's second half.
+
+mod common;
+
+use std::time::Instant;
+
+use common::Json;
+use gmi_drl::cluster::Topology;
+use gmi_drl::metrics::Table;
+use gmi_drl::sched::{corun_scenario, run_cluster, SchedConfig};
+
+fn main() {
+    common::header(
+        "cluster day: shared-cluster replay at ramping volumes",
+        "EXPERIMENTS.md §Perf (wall-clock trajectory)",
+    );
+    let (b, cost) = common::bench("AT");
+    let topo = Topology::dgx_a100(2);
+    let cfg = SchedConfig::default();
+
+    let full = std::env::args().any(|a| a == "--full");
+    let mut scales = vec![1.0f64, 4.0, 16.0];
+    if full {
+        scales.push(64.0);
+    }
+
+    let mut t = Table::new(&[
+        "sim day (s)",
+        "rounds",
+        "requests",
+        "wall (ms)",
+        "sim-s/wall-s",
+        "events/s",
+    ]);
+    let mut rows_json = Vec::new();
+    let mut last_sim_per_wall = 0.0;
+    let mut last_events_per_s = 0.0;
+    for &day_s in &scales {
+        // Fresh seeded scenario per scale: the diurnal period stretches
+        // with the day, so every scale exercises the same grow/shrink
+        // cycle shape at proportionally more rounds and requests.
+        let jobs = corun_scenario(&topo, &b, &cost, day_s, 11, false);
+        let requests = jobs
+            .iter()
+            .map(|j| match &j.kind {
+                gmi_drl::sched::JobKind::Serving { trace, .. } => trace.len(),
+                _ => 0,
+            })
+            .sum::<usize>();
+        let t0 = Instant::now();
+        let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+
+        let rounds = (r.makespan_s / cfg.quantum_s).ceil() as u64;
+        let served: usize = r
+            .jobs
+            .iter()
+            .filter_map(|j| j.metrics.latency.as_ref())
+            .map(|l| l.served)
+            .sum();
+        // "Events" = everything the engine retired: served requests plus
+        // scheduling decisions plus round boundaries.
+        let events = served as u64 + r.events.len() as u64 + rounds;
+        let sim_per_wall = r.makespan_s / wall;
+        let events_per_s = events as f64 / wall;
+        last_sim_per_wall = sim_per_wall;
+        last_events_per_s = events_per_s;
+        t.row(vec![
+            format!("{day_s:.0}"),
+            rounds.to_string(),
+            served.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{sim_per_wall:.1}"),
+            format!("{events_per_s:.0}"),
+        ]);
+        rows_json.push(format!(
+            "{{\"sim_day_s\": {day_s}, \"rounds\": {rounds}, \"requests_served\": {served}, \
+             \"wall_s\": {wall}, \"sim_s_per_wall_s\": {sim_per_wall}, \
+             \"events_per_s\": {events_per_s}}}"
+        ));
+    }
+    t.print();
+    if !full {
+        println!("(pass --full for the 64-simulated-second scale)");
+    }
+
+    let (check, bless) = common::perf_args();
+    let fields = [
+        ("bench", Json::Str("cluster_day".into())),
+        ("status", Json::Str("measured".into())),
+        ("sim_s_per_wall_s", Json::Num(last_sim_per_wall)),
+        ("events_per_s", Json::Num(last_events_per_s)),
+        (
+            "peak_rss_kib",
+            common::peak_rss_kib().map_or(Json::Null, Json::Int),
+        ),
+        (
+            "scales",
+            Json::Raw(format!("[\n    {}\n  ]", rows_json.join(",\n    "))),
+        ),
+    ];
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_cluster_day.json");
+    // Gate BEFORE bless: with both pointed at the same path, blessing
+    // first would make the check compare the run against itself.
+    if let Some(baseline) = check {
+        common::gate_throughput(&baseline, "sim_s_per_wall_s", last_sim_per_wall);
+    }
+    if bless {
+        common::write_json(out, &fields).unwrap();
+        println!("blessed {out}");
+    }
+}

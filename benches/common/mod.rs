@@ -35,3 +35,114 @@ pub fn header(title: &str, paper_ref: &str) {
     println!("\n=== {title} ===");
     println!("regenerates: {paper_ref}\n");
 }
+
+// ---------------------------------------------------------------------------
+// Perf-trajectory support (BENCH_*.json emission and the CI regression gate).
+// The offline build has no serde either, so the JSON is written and probed by
+// hand: flat objects of numbers / strings / nulls plus pre-rendered nested
+// values are all the BENCH files need.
+// ---------------------------------------------------------------------------
+
+/// One JSON value in a [`write_json`] object.
+pub enum Json {
+    Num(f64),
+    Int(u64),
+    Str(String),
+    /// Pre-rendered JSON (nested arrays/objects the caller formats).
+    Raw(String),
+    Null,
+}
+
+fn fmt_json(v: &Json) -> String {
+    match v {
+        Json::Num(x) if x.is_finite() => format!("{x}"),
+        Json::Num(_) => "null".into(),
+        Json::Int(x) => format!("{x}"),
+        Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Json::Raw(s) => s.clone(),
+        Json::Null => "null".into(),
+    }
+}
+
+/// Write `fields` as a pretty-printed JSON object at `path`.
+pub fn write_json(path: &str, fields: &[(&str, Json)]) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let comma = if i + 1 == fields.len() { "" } else { "," };
+        out.push_str(&format!("  \"{k}\": {}{comma}\n", fmt_json(v)));
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out)
+}
+
+/// Extract a top-level numeric field from a (flat-ish) JSON text. Returns
+/// `None` when the key is absent or its value is `null` / non-numeric — the
+/// bootstrap-baseline case the gate treats as "no baseline yet".
+pub fn json_num_field(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat)? + pat.len();
+    let rest = text[at..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest.find(|c: char| c == ',' || c == '}' || c == '\n').unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().ok()
+}
+
+/// Loose CLI parsing shared by the perf benches. Returns
+/// `(check_baseline_path, bless)`; every unrecognized argument (e.g. the
+/// `--bench` flag cargo injects) is ignored.
+pub fn perf_args() -> (Option<String>, bool) {
+    let mut check = None;
+    let mut bless = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => check = args.next(),
+            "--bless" => bless = true,
+            _ => {}
+        }
+    }
+    (check, bless)
+}
+
+/// Peak resident set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`) — the bench's memory-footprint proxy. `None` off
+/// Linux or when procfs is unavailable.
+pub fn peak_rss_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// The shared regression gate: compare a freshly measured throughput
+/// against the committed baseline's same-named field. Exits non-zero on a
+/// >20% regression; a missing/null baseline (bootstrap) warns and passes.
+pub fn gate_throughput(baseline_path: &str, field: &str, measured: f64) {
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("gate: baseline {baseline_path} unreadable ({e}); bootstrap pass");
+            return;
+        }
+    };
+    match json_num_field(&text, field) {
+        Some(base) if base > 0.0 => {
+            let floor = 0.8 * base;
+            println!(
+                "gate: {field} measured {measured:.3} vs baseline {base:.3} (floor {floor:.3})"
+            );
+            if measured < floor {
+                eprintln!(
+                    "gate FAILED: {field} regressed more than 20% \
+                     ({measured:.3} < 0.8 x {base:.3})"
+                );
+                std::process::exit(1);
+            }
+            println!("gate: OK");
+        }
+        _ => {
+            println!(
+                "gate: baseline field {field} is null/absent in {baseline_path}; \
+                 bootstrap pass (run with --bless to record one)"
+            );
+        }
+    }
+}

@@ -1,22 +1,29 @@
 //! L3 hot-path micro-benchmarks (the §Perf deliverable): wall-clock timing
 //! of the coordinator's inner loops — LGR reduction arithmetic, the channel
-//! pipeline, and the sync orchestrator — independent of virtual time.
+//! pipeline, the sync orchestrator, the engine's clock-frontier queries
+//! (incremental vs the kept reference scans), and the gateway dispatch
+//! loop end to end — independent of virtual time.
 //!
 //! Used by the performance pass to find and verify hot-path optimizations;
-//! before/after numbers are recorded in EXPERIMENTS.md §Perf.
+//! before/after numbers are recorded in EXPERIMENTS.md §Perf and in
+//! `BENCH_hotpath.json` (written with `--bless`, compared with
+//! `--check <baseline.json>` — the CI perf gate).
 
 mod common;
 
 use std::time::Instant;
 
+use common::Json;
 use gmi_drl::channels::{Compressor, Dispenser, RolloutSegment, ShareMode};
 use gmi_drl::cluster::Topology;
 use gmi_drl::comm::{LgrEngine, ReduceStrategy};
 use gmi_drl::drl::sync::{run_sync, SyncConfig};
 use gmi_drl::drl::Compute;
-use gmi_drl::mapping::{build_sync_layout, MappingTemplate};
+use gmi_drl::engine::{Engine, OpCharge};
+use gmi_drl::mapping::{build_gateway_fleet, build_sync_layout, MappingTemplate};
 use gmi_drl::metrics::Table;
-use gmi_drl::vtime::Clock;
+use gmi_drl::serve::{batch_seconds, generate_trace, run_gateway, GatewayConfig, TrafficPattern};
+use gmi_drl::vtime::{Clock, OpKind};
 
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     // warmup
@@ -79,5 +86,133 @@ fn main() {
         format!("{:.2} ms/iter", s * 1e3 / 10.0),
     ]);
 
+    // 4. Engine clock-frontier round: one charge + span + all per-GPU
+    //    frontiers, the query mix every scheduler/gateway round performs.
+    //    Run once through the incremental fields and once through the kept
+    //    `*_scan` reference implementations — the speedup between them is
+    //    the PR's machine-independent headline and the in-binary half of
+    //    the regression gate (both halves run on the same host in the same
+    //    process, so the ratio survives any hardware).
+    let (b4, cost4) = common::bench("AT");
+    let topo8 = Topology::dgx_a100(8);
+    let gpus = topo8.num_gpus();
+    let fleet8 = build_gateway_fleet(&topo8, 4, 4, 32, &cost4, None).unwrap();
+    let mut engine = Engine::new(&fleet8.manager, &cost4);
+    let execs = engine.add_group(&fleet8.rollout_gmis).unwrap();
+    let fwd = [OpCharge::recorded(OpKind::PolicyFwd { num_env: 32 })];
+    let rounds = 100_000usize;
+    let mut next = 0usize;
+    let mut run_rounds = |engine: &mut Engine, scan: bool| -> f64 {
+        let mut acc = 0.0;
+        for _ in 0..rounds {
+            let ex = execs[next % execs.len()];
+            next += 1;
+            engine.charge_steps(&cost4, ex, 1.0, &fwd, 0.0);
+            if scan {
+                acc += engine.span_scan();
+                for g in 0..gpus {
+                    acc += engine.gpu_time_scan(g);
+                }
+            } else {
+                acc += engine.span();
+                for g in 0..gpus {
+                    acc += engine.gpu_time(g);
+                }
+            }
+        }
+        acc
+    };
+    // Interleave so clock growth (charges accumulate across calls) hits
+    // both variants evenly; the warmup call inside `time` covers the rest.
+    let s_scan = time(3, || {
+        assert!(run_rounds(&mut engine, true).is_finite());
+    }) / rounds as f64;
+    let s_inc = time(3, || {
+        assert!(run_rounds(&mut engine, false).is_finite());
+    }) / rounds as f64;
+    let speedup = s_scan / s_inc;
+    t.row(vec![
+        "engine round (scan ref)".into(),
+        format!("{} execs, {gpus} GPUs", execs.len()),
+        format!("{:.0} ns", s_scan * 1e9),
+        format!("{:.2} Mrounds/s", 1e-6 / s_scan),
+    ]);
+    t.row(vec![
+        "engine round (incremental)".into(),
+        format!("{} execs, {gpus} GPUs", execs.len()),
+        format!("{:.0} ns", s_inc * 1e9),
+        format!("{:.2} Mrounds/s ({speedup:.1}x)", 1e-6 / s_inc),
+    ]);
+
+    // 5. Gateway dispatch loop end to end: a constant-rate open-loop trace
+    //    through `run_gateway` (pooled plans, Arc trace, Fabric-free
+    //    capacity math). Requests/wall-second is the events/s headline.
+    let topo2 = Topology::dgx_a100(2);
+    let batch = 32;
+    let serial = batch_seconds(&b4, &cost4, &topo2, 0.25, batch);
+    let rate = 0.7 * 4.0 * batch as f64 / serial; // 70% of the 4-member fleet
+    let n_requests = 200_000usize;
+    let duration = n_requests as f64 / rate;
+    let trace = generate_trace(&TrafficPattern::Constant { rate }, duration, 17, 8);
+    let fleet2 = build_gateway_fleet(&topo2, 2, 4, batch, &cost4, None).unwrap();
+    let cfg = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s: 20e-3,
+        autoscale: None,
+    };
+    let t0 = Instant::now();
+    let r = run_gateway(&fleet2, &b4, &cost4, &trace, &cfg).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let req_per_s = r.latency.served as f64 / wall;
+    let sim_per_wall = r.metrics.span_s / wall;
+    t.row(vec![
+        "gateway dispatch loop".into(),
+        format!("{} requests", trace.len()),
+        format!("{:.0} ms", wall * 1e3),
+        format!("{:.2} Mreq/s", req_per_s / 1e6),
+    ]);
+
     t.print();
+
+    // BENCH_hotpath.json + regression gate.
+    let (check, bless) = common::perf_args();
+    let fields = [
+        ("bench", Json::Str("hotpath".into())),
+        ("status", Json::Str("measured".into())),
+        ("engine_round_ns_incremental", Json::Num(s_inc * 1e9)),
+        ("engine_round_ns_scan", Json::Num(s_scan * 1e9)),
+        ("incremental_vs_scan_speedup", Json::Num(speedup)),
+        ("gateway_requests", Json::Int(r.latency.served as u64)),
+        ("gateway_wall_s", Json::Num(wall)),
+        ("events_per_s", Json::Num(req_per_s)),
+        ("sim_s_per_wall_s", Json::Num(sim_per_wall)),
+        (
+            "peak_rss_kib",
+            common::peak_rss_kib().map_or(Json::Null, Json::Int),
+        ),
+    ];
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
+    // Gate BEFORE bless: with both pointed at the same path, blessing
+    // first would make the check compare the run against itself.
+    if let Some(baseline) = check {
+        // Machine-independent half: the incremental path must actually be
+        // faster than the reference scans it replaced.
+        if speedup < 1.0 {
+            eprintln!(
+                "gate FAILED: incremental frontier queries slower than the \
+                 reference scans ({speedup:.2}x)"
+            );
+            std::process::exit(1);
+        }
+        println!("gate: incremental vs scan speedup {speedup:.1}x (>= 1.0 required)");
+        // Host-dependent half: only binding once the committed baseline
+        // carries real numbers.
+        common::gate_throughput(&baseline, "events_per_s", req_per_s);
+    }
+    if bless {
+        common::write_json(out, &fields).unwrap();
+        println!("blessed {out}");
+    }
 }

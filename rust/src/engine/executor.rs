@@ -106,10 +106,31 @@ pub struct Engine {
     comm_s: f64,
     /// Communication seconds attributed per job tag (multi-tenant runs).
     job_comm: std::collections::BTreeMap<usize, f64>,
+    /// GMI id -> executor id. Executors are never removed, so entries are
+    /// permanent; an O(log n) lookup replaces the historical O(n)
+    /// `position()` scan that every charge-path caller paid.
+    gmi_index: std::collections::BTreeMap<GmiId, ExecutorId>,
+    /// Incrementally-maintained global clock frontier. Clocks only move
+    /// forward (advance/merge are monotone), so a running max updated at
+    /// every clock mutation is exactly the fold over all executors.
+    span_max: f64,
+    /// Per-GPU clock frontier (same running-max argument). Recomputed by
+    /// scan only when an executor is re-pointed to a different GPU
+    /// ([`Engine::add_gmi`] re-add) — the one event that can lower a GPU's
+    /// frontier.
+    gpu_frontier: Vec<f64>,
+    /// Executor ids per GPU, ascending — refresh and frontier recompute
+    /// walk these instead of scanning the whole fleet.
+    gpu_execs: Vec<Vec<ExecutorId>>,
+    /// Executor ids per job tag, ascending — per-job busy/interference
+    /// totals sum over a job's own executors (same order as the historical
+    /// whole-fleet filter scan, so totals are bit-identical).
+    job_execs: std::collections::BTreeMap<usize, Vec<ExecutorId>>,
 }
 
 impl Engine {
     pub fn new(manager: &GmiManager, cost: &CostModel) -> Self {
+        let gpus = manager.topology().num_gpus();
         Engine {
             manager: manager.clone(),
             heaviness: cost.heaviness,
@@ -117,7 +138,43 @@ impl Engine {
             util: UtilizationTracker::new(),
             comm_s: 0.0,
             job_comm: std::collections::BTreeMap::new(),
+            gmi_index: std::collections::BTreeMap::new(),
+            span_max: 0.0,
+            gpu_frontier: vec![0.0; gpus],
+            gpu_execs: vec![Vec::new(); gpus],
+            job_execs: std::collections::BTreeMap::new(),
         }
+    }
+
+    /// Grow the per-GPU structures to cover `gpu` (multi-node layouts can
+    /// exceed the single-node topology's GPU count).
+    #[inline]
+    fn ensure_gpu(&mut self, gpu: usize) {
+        if gpu >= self.gpu_frontier.len() {
+            self.gpu_frontier.resize(gpu + 1, 0.0);
+            self.gpu_execs.resize(gpu + 1, Vec::new());
+        }
+    }
+
+    /// Fold a clock landing at `t` on `gpu` into the incremental frontiers.
+    #[inline]
+    fn note_time(&mut self, gpu: usize, t: f64) {
+        if t > self.span_max {
+            self.span_max = t;
+        }
+        if t > self.gpu_frontier[gpu] {
+            self.gpu_frontier[gpu] = t;
+        }
+    }
+
+    /// Rebuild one GPU's frontier by scan (only needed after a re-point
+    /// moved an executor's history off this GPU).
+    fn recompute_gpu_frontier(&mut self, gpu: usize) {
+        self.ensure_gpu(gpu);
+        let m = self.gpu_execs[gpu]
+            .iter()
+            .fold(0.0f64, |a, &i| a.max(self.execs[i].clock.seconds()));
+        self.gpu_frontier[gpu] = m;
     }
 
     /// Register an executor for `gmi`. A GMI that already has an executor
@@ -125,15 +182,16 @@ impl Engine {
     /// (TCG_EX holistic GMIs running rollout *and* training) share one
     /// timeline.
     pub fn add_executor(&mut self, gmi: GmiId) -> Result<ExecutorId> {
-        if let Some(i) = self.execs.iter().position(|e| e.gmi == gmi) {
+        if let Some(&i) = self.gmi_index.get(&gmi) {
             return Ok(i);
         }
         let spec = self.manager.gmi(gmi).with_context(|| format!("GMI {gmi} not registered"))?;
         let co = self.manager.co_resident(gmi);
         let interference = spec.backend.interference(co, self.heaviness);
+        let gpu = spec.gpu;
         self.execs.push(GmiExecutor {
             gmi,
-            gpu: spec.gpu,
+            gpu,
             num_env: spec.num_env,
             co_resident: co,
             share: eff_share(spec.backend, spec.sm_share, co),
@@ -145,7 +203,11 @@ impl Engine {
             solo_interference: interference,
             xjob_s: 0.0,
         });
-        Ok(self.execs.len() - 1)
+        let ex = self.execs.len() - 1;
+        self.gmi_index.insert(gmi, ex);
+        self.ensure_gpu(gpu);
+        self.gpu_execs[gpu].push(ex);
+        Ok(ex)
     }
 
     /// Register one executor per GMI id, in order (deduplicating shared
@@ -218,6 +280,7 @@ impl Engine {
             e.xjob_s += reps * op_sum * (1.0 - e.solo_interference / e.interference);
         }
         let (gpu, share) = (e.gpu, e.share);
+        self.note_time(gpu, end.seconds());
         for (k, c) in ops.iter().enumerate() {
             if c.record {
                 let occ = cost.sm_occupancy(c.op, share);
@@ -233,13 +296,20 @@ impl Engine {
     /// submission, a pushed-parameter receive): advances the clock without
     /// touching utilization, busy, or communication accounting.
     pub fn pay(&mut self, id: ExecutorId, dt: f64) -> Clock {
-        self.execs[id].clock.advance(dt)
+        let e = &mut self.execs[id];
+        let end = e.clock.advance(dt);
+        let gpu = e.gpu;
+        self.note_time(gpu, end.seconds());
+        end
     }
 
     /// [`Engine::pay`] on every member of a group.
     pub fn pay_group(&mut self, ids: &[ExecutorId], dt: f64) {
         for &i in ids {
-            self.execs[i].clock.advance(dt);
+            let e = &mut self.execs[i];
+            let end = e.clock.advance(dt);
+            let gpu = e.gpu;
+            self.note_time(gpu, end.seconds());
         }
     }
 
@@ -261,7 +331,10 @@ impl Engine {
     pub fn barrier_advance(&mut self, ids: &[ExecutorId], dt: f64) {
         let barrier = self.max_time(ids);
         for &i in ids {
-            self.execs[i].clock.merge_then_advance(barrier, dt);
+            let e = &mut self.execs[i];
+            let end = e.clock.merge_then_advance(barrier, dt);
+            let gpu = e.gpu;
+            self.note_time(gpu, end.seconds());
         }
         self.charge_comm(ids.first().copied(), dt);
     }
@@ -271,14 +344,21 @@ impl Engine {
     /// counted as communication.
     pub fn recv(&mut self, id: ExecutorId, ready: Clock, dt: f64) -> Clock {
         self.charge_comm(Some(id), dt);
-        self.execs[id].clock.merge_then_advance(ready, dt)
+        let e = &mut self.execs[id];
+        let end = e.clock.merge_then_advance(ready, dt);
+        let gpu = e.gpu;
+        self.note_time(gpu, end.seconds());
+        end
     }
 
     /// One-to-many broadcast: every receiver waits for `from`, then pays
     /// `dt`; counted once as communication (a single fan-out transfer).
     pub fn broadcast(&mut self, ids: &[ExecutorId], from: Clock, dt: f64) {
         for &i in ids {
-            self.execs[i].clock.merge_then_advance(from, dt);
+            let e = &mut self.execs[i];
+            let end = e.clock.merge_then_advance(from, dt);
+            let gpu = e.gpu;
+            self.note_time(gpu, end.seconds());
         }
         self.charge_comm(ids.first().copied(), dt);
     }
@@ -289,7 +369,10 @@ impl Engine {
     /// charge) — the drain point of an overlapped collective.
     pub fn wait_group(&mut self, ids: &[ExecutorId], ready: Clock) {
         for &i in ids {
-            self.execs[i].clock.merge_then_advance(ready, 0.0);
+            let e = &mut self.execs[i];
+            let end = e.clock.merge_then_advance(ready, 0.0);
+            let gpu = e.gpu;
+            self.note_time(gpu, end.seconds());
         }
     }
 
@@ -335,7 +418,10 @@ impl Engine {
         let start = Clock(self.execs[id].clock.seconds().max(ready.seconds()));
         let done = fabric.execute(plan, start);
         self.charge_comm(Some(id), plan.total_s());
-        self.execs[id].clock.merge_then_advance(done, 0.0);
+        let e = &mut self.execs[id];
+        let end = e.clock.merge_then_advance(done, 0.0);
+        let gpu = e.gpu;
+        self.note_time(gpu, end.seconds());
         done
     }
 
@@ -365,13 +451,31 @@ impl Engine {
         Clock(ids.iter().fold(0.0f64, |a, &i| a.max(self.execs[i].clock.seconds())))
     }
 
-    /// Latest clock over every executor — the run's virtual span.
+    /// Latest clock over every executor — the run's virtual span. O(1):
+    /// the frontier is maintained incrementally at every clock mutation
+    /// (clocks are monotone, so a running max is exact).
     pub fn span(&self) -> f64 {
-        self.execs.iter().fold(0.0f64, |a, e| a.max(e.clock.seconds()))
+        self.span_max
     }
 
     /// Latest virtual time of any executor on `gpu` (per-GPU timeline).
+    /// O(1) via the incrementally-maintained per-GPU frontier.
     pub fn gpu_time(&self, gpu: usize) -> f64 {
+        self.gpu_frontier.get(gpu).copied().unwrap_or(0.0)
+    }
+
+    /// Reference fold-over-all-executors implementation of
+    /// [`Engine::span`] — kept for the incremental-vs-scan equivalence
+    /// goldens and benchmarks; not a public API.
+    #[doc(hidden)]
+    pub fn span_scan(&self) -> f64 {
+        self.execs.iter().fold(0.0f64, |a, e| a.max(e.clock.seconds()))
+    }
+
+    /// Reference scan implementation of [`Engine::gpu_time`] (see
+    /// [`Engine::span_scan`]).
+    #[doc(hidden)]
+    pub fn gpu_time_scan(&self, gpu: usize) -> f64 {
         self.execs
             .iter()
             .filter(|e| e.gpu == gpu)
@@ -408,6 +512,20 @@ impl Engine {
         // Manager first: a failure (retired executor, unknown GMI) must
         // leave engine- and manager-side ownership consistent.
         self.manager.tag_job(gmi, job)?;
+        let prev = self.execs[id].job;
+        if prev != Some(job) {
+            if let Some(p) = prev {
+                if let Some(v) = self.job_execs.get_mut(&p) {
+                    if let Ok(k) = v.binary_search(&id) {
+                        v.remove(k);
+                    }
+                }
+            }
+            let v = self.job_execs.entry(job).or_default();
+            if let Err(k) = v.binary_search(&id) {
+                v.insert(k, id);
+            }
+        }
         self.execs[id].job = Some(job);
         self.refresh_gpu(gpu);
         Ok(())
@@ -430,8 +548,21 @@ impl Engine {
     }
 
     /// Total busy seconds across every executor tagged to `job` (retired
-    /// executors included — service already rendered stays counted).
+    /// executors included — service already rendered stays counted). Sums
+    /// over the job's own member list (ascending executor order — the same
+    /// order as the historical whole-fleet filter scan, so the total is
+    /// bit-identical) instead of scanning every executor.
     pub fn job_busy_s(&self, job: usize) -> f64 {
+        self.job_execs
+            .get(&job)
+            .map(|v| v.iter().map(|&i| self.execs[i].busy_s).sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Reference whole-fleet filter-scan implementation of
+    /// [`Engine::job_busy_s`] (equivalence goldens; not a public API).
+    #[doc(hidden)]
+    pub fn job_busy_s_scan(&self, job: usize) -> f64 {
         self.execs.iter().filter(|e| e.job == Some(job)).map(|e| e.busy_s).sum()
     }
 
@@ -446,8 +577,20 @@ impl Engine {
         self.execs[id].xjob_s
     }
 
-    /// Total cross-job interference seconds billed to `job`.
+    /// Total cross-job interference seconds billed to `job` (member-list
+    /// sum, bit-identical to the historical filter scan — see
+    /// [`Engine::job_busy_s`]).
     pub fn job_xjob_s(&self, job: usize) -> f64 {
+        self.job_execs
+            .get(&job)
+            .map(|v| v.iter().map(|&i| self.execs[i].xjob_s).sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Reference filter-scan implementation of [`Engine::job_xjob_s`]
+    /// (equivalence goldens; not a public API).
+    #[doc(hidden)]
+    pub fn job_xjob_s_scan(&self, job: usize) -> f64 {
         self.execs.iter().filter(|e| e.job == Some(job)).map(|e| e.xjob_s).sum()
     }
 
@@ -517,7 +660,7 @@ impl Engine {
         let gpu = spec.gpu;
         let id = spec.id;
         self.manager.add_gmi(spec)?;
-        let ex = match self.execs.iter().position(|e| e.gmi == id) {
+        let ex = match self.gmi_index.get(&id).copied() {
             // A retired executor with this GMI id still exists: re-point
             // it instead of aliasing its stale placement.
             Some(pos) => {
@@ -529,6 +672,20 @@ impl Engine {
                 self.execs[pos].gpu = new_gpu;
                 self.execs[pos].num_env = new_env;
                 if old_gpu != new_gpu {
+                    self.ensure_gpu(new_gpu);
+                    if let Ok(k) = self.gpu_execs[old_gpu].binary_search(&pos) {
+                        self.gpu_execs[old_gpu].remove(k);
+                    }
+                    if let Err(k) = self.gpu_execs[new_gpu].binary_search(&pos) {
+                        self.gpu_execs[new_gpu].insert(k, pos);
+                    }
+                    // The executor's clock history left old_gpu: that
+                    // frontier can shrink, so rebuild it by scan (rare —
+                    // only on cross-GPU re-adds). The new GPU's frontier
+                    // only grows, a running-max update.
+                    self.recompute_gpu_frontier(old_gpu);
+                    let t = self.execs[pos].clock.seconds();
+                    self.note_time(new_gpu, t);
                     self.refresh_gpu(old_gpu);
                 }
                 pos
@@ -553,7 +710,7 @@ impl Engine {
     /// Recompute an executor's share/interference (and its external-tenant
     /// co-resident count) from the live manager.
     fn refresh(&mut self, gmi: GmiId) {
-        let Some(pos) = self.execs.iter().position(|e| e.gmi == gmi) else { return };
+        let Some(&pos) = self.gmi_index.get(&gmi) else { return };
         let spec = self.manager.gmi(gmi).expect("refreshed GMI is registered");
         let co = self.manager.co_resident(gmi);
         // Co-residents tagged to a DIFFERENT job; untagged peers count as
@@ -578,18 +735,64 @@ impl Engine {
     }
 
     /// Refresh every still-registered executor on `gpu` (after a GMI was
-    /// added to or removed from it).
+    /// added to or removed from it). Walks the GPU's own executor list
+    /// (ascending, same order as the historical whole-fleet scan) with no
+    /// temporary allocation.
     fn refresh_gpu(&mut self, gpu: usize) {
-        let gmis: Vec<GmiId> = self
-            .execs
-            .iter()
-            .filter(|e| e.gpu == gpu)
-            .map(|e| e.gmi)
-            .collect();
-        for g in gmis {
+        if gpu >= self.gpu_execs.len() {
+            return;
+        }
+        let mut k = 0;
+        while k < self.gpu_execs[gpu].len() {
+            let ex = self.gpu_execs[gpu][k];
+            let g = self.execs[ex].gmi;
             if self.manager.gmi(g).is_some() {
                 self.refresh(g);
             }
+            k += 1;
+        }
+    }
+
+    /// Assert every incrementally-maintained structure (id→index map,
+    /// span/per-GPU frontiers, per-job member lists) agrees bit-for-bit
+    /// with its reference fold/filter scan. Test and golden support; not a
+    /// public API.
+    #[doc(hidden)]
+    pub fn audit_incremental_state(&self) {
+        assert_eq!(
+            self.span_scan().to_bits(),
+            self.span().to_bits(),
+            "span frontier diverged from scan"
+        );
+        let gpus = self.gpu_frontier.len().max(self.manager.topology().num_gpus());
+        for g in 0..gpus {
+            assert_eq!(
+                self.gpu_time_scan(g).to_bits(),
+                self.gpu_time(g).to_bits(),
+                "gpu {g} frontier diverged from scan"
+            );
+        }
+        for (i, e) in self.execs.iter().enumerate() {
+            assert_eq!(
+                self.gmi_index.get(&e.gmi).copied(),
+                Some(i),
+                "gmi {} index entry diverged",
+                e.gmi
+            );
+        }
+        let jobs: std::collections::BTreeSet<usize> =
+            self.execs.iter().filter_map(|e| e.job).collect();
+        for j in jobs {
+            assert_eq!(
+                self.job_busy_s_scan(j).to_bits(),
+                self.job_busy_s(j).to_bits(),
+                "job {j} busy total diverged from scan"
+            );
+            assert_eq!(
+                self.job_xjob_s_scan(j).to_bits(),
+                self.job_xjob_s(j).to_bits(),
+                "job {j} xjob total diverged from scan"
+            );
         }
     }
 }
@@ -893,6 +1096,104 @@ mod tests {
         );
         assert_eq!(u.xjob_interference_s(uids[0]), 0.0);
         assert_eq!(u.job_comm_s(0), 0.0);
+    }
+
+    /// Equivalence golden for the incremental frontier structures: every
+    /// clock-mutating primitive must leave span / per-GPU frontiers /
+    /// id→index map / per-job totals bit-identical to the reference scans
+    /// they replaced.
+    #[test]
+    fn incremental_frontiers_match_reference_scans() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        e.audit_incremental_state();
+        e.charge_steps(
+            &cost,
+            ids[0],
+            16.0,
+            &[OpCharge::recorded(OpKind::SimStep { num_env: 512 })],
+            0.0,
+        );
+        e.audit_incremental_state();
+        e.pay(ids[1], 0.5);
+        e.pay_group(&ids, 0.25);
+        e.audit_incremental_state();
+        e.barrier_advance(&ids, 0.1);
+        e.audit_incremental_state();
+        e.recv(ids[0], Clock(9.0), 0.2);
+        e.broadcast(&ids, e.max_time(&ids), 0.05);
+        e.wait_group(&ids, Clock(20.0));
+        e.audit_incremental_state();
+        let mut fabric = Fabric::single_node(Topology::dgx_a100(1));
+        let plan = fabric.plan_intra_gpu(8 << 20, 1, 0);
+        e.collective(&mut fabric, &ids, &plan);
+        e.recv_plan(&mut fabric, ids[0], Clock(25.0), &plan);
+        e.audit_incremental_state();
+        assert_eq!(e.span().to_bits(), e.span_scan().to_bits());
+        assert_eq!(e.gpu_time(0).to_bits(), e.gpu_time_scan(0).to_bits());
+    }
+
+    /// Satellite regression for the id→index map: the autoscaler's
+    /// interleaved add / remove / re-add / resize sequence must keep
+    /// lookups, frontiers, and per-job totals consistent throughout —
+    /// including the cross-GPU re-point that rebuilds a GPU frontier.
+    #[test]
+    fn interleaved_add_remove_resize_keeps_lookups_and_totals() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        e.tag_job(ids[0], 1).unwrap();
+        e.tag_job(ids[1], 2).unwrap();
+        let grad = [OpCharge::recorded(OpKind::TrainGrad { samples: 1024 })];
+        e.charge_steps(&cost, ids[0], 4.0, &grad, 0.0);
+        e.audit_incremental_state();
+        // Autoscaler grow: fresh GMI id in the free share.
+        let ex = e
+            .add_gmi(GmiSpec {
+                id: 7,
+                gpu: 0,
+                sm_share: 0.2,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 128,
+            })
+            .unwrap();
+        e.tag_job(ex, 1).unwrap();
+        e.charge_steps(&cost, ex, 2.0, &grad, 0.0);
+        e.audit_incremental_state();
+        // Retire it, resize a survivor into the freed share, charge again.
+        e.remove_gmi(7).unwrap();
+        e.resize_share(0, 0.6).unwrap();
+        e.charge_steps(&cost, ids[0], 1.0, &grad, 0.0);
+        e.audit_incremental_state();
+        // Retired executors keep their job's accumulated service.
+        let busy_with_retired = e.job_busy_s(1);
+        assert_eq!(busy_with_retired.to_bits(), e.job_busy_s_scan(1).to_bits());
+        assert!(busy_with_retired > e.busy_seconds(ids[0]) - 1e-12);
+        // Cross-GPU re-add re-points the retired executor; the old GPU's
+        // frontier is rebuilt, the new one picks up the frozen clock.
+        let ex2 = e
+            .add_gmi(GmiSpec {
+                id: 7,
+                gpu: 1,
+                sm_share: 0.5,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 256,
+            })
+            .unwrap();
+        assert_eq!(ex2, ex, "executor ids stable across re-adds");
+        e.audit_incremental_state();
+        assert_eq!(e.gpu_time(1).to_bits(), e.gpu_time_scan(1).to_bits());
+        e.charge_steps(&cost, ex2, 1.0, &grad, 0.0);
+        // Re-tagging migrates the executor between job member lists.
+        e.tag_job(ex2, 2).unwrap();
+        e.audit_incremental_state();
+        assert_eq!(e.job_busy_s(1).to_bits(), e.job_busy_s_scan(1).to_bits());
+        assert_eq!(e.job_busy_s(2).to_bits(), e.job_busy_s_scan(2).to_bits());
+        assert_eq!(e.job_xjob_s(2).to_bits(), e.job_xjob_s_scan(2).to_bits());
+        // Lookups after the churn still dedup to the stable ids.
+        assert_eq!(e.add_executor(7).unwrap(), ex2);
+        assert_eq!(e.add_group(&[0, 1, 7]).unwrap(), vec![ids[0], ids[1], ex2]);
     }
 
     #[test]

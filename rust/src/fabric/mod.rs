@@ -136,6 +136,22 @@ impl Fabric {
     /// links until the phase ends, and accumulates per-link traffic.
     /// Returns the completion time.
     pub fn execute(&mut self, plan: &Plan, ready: Clock) -> Clock {
+        // Fast lane for the dominant hot-path shape — one phase over one
+        // link (gateway request/response hops): occupancy and traffic are
+        // updated in a single batched touch. Same arithmetic as the
+        // general loop (a fold over one element), so completion times are
+        // bit-identical.
+        if let [step] = plan.steps.as_slice() {
+            if let [u] = step.uses.as_slice() {
+                let start = ready.seconds().max(self.free_at[u.link]);
+                let end = start + step.dur;
+                self.free_at[u.link] = end;
+                let s = &mut self.stats[u.link];
+                s.busy_s += u.busy_s;
+                s.bytes += u.bytes;
+                return Clock(end);
+            }
+        }
         let mut t = ready.seconds();
         for step in &plan.steps {
             let start = step
@@ -145,8 +161,9 @@ impl Fabric {
             let end = start + step.dur;
             for u in &step.uses {
                 self.free_at[u.link] = end;
-                self.stats[u.link].busy_s += u.busy_s;
-                self.stats[u.link].bytes += u.bytes;
+                let s = &mut self.stats[u.link];
+                s.busy_s += u.busy_s;
+                s.bytes += u.bytes;
             }
             t = end;
         }

@@ -69,6 +69,22 @@ impl Plan {
         self.steps.push(step);
     }
 
+    /// Rewrite this plan in place as a single-hop plan (one phase, one
+    /// link), reusing the existing step/use storage when the shape already
+    /// matches — the pooled hot path for per-dispatch gateway hops, which
+    /// would otherwise allocate a fresh `Plan` per event.
+    pub fn reuse_single_hop(&mut self, link: LinkId, dur: f64, bytes: u64) {
+        if let [step] = self.steps.as_mut_slice() {
+            if let [u] = step.uses.as_mut_slice() {
+                step.dur = dur;
+                *u = LinkUse { link, busy_s: dur, bytes };
+                return;
+            }
+        }
+        self.steps.clear();
+        self.steps.push(PlanStep { dur, uses: vec![LinkUse { link, busy_s: dur, bytes }] });
+    }
+
     /// Uncontended duration of the plan (sum of phase durations) — the
     /// planning-time cost used for strategy comparison.
     pub fn total_s(&self) -> f64 {

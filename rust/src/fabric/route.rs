@@ -133,6 +133,15 @@ impl Fabric {
         });
         plan
     }
+
+    /// Pooled variant of [`Fabric::plan_intra_gpu`]: writes the hop into a
+    /// caller-owned plan buffer instead of allocating one (identical
+    /// durations/uses, so execution is bit-identical). The gateway reuses
+    /// two such buffers across every dispatch of a run.
+    pub fn plan_intra_gpu_into(&self, bytes: usize, sharing: usize, gpu: usize, plan: &mut Plan) {
+        let dur = self.topology().host_transfer_time(bytes, sharing);
+        plan.reuse_single_hop(self.host_link(gpu), dur, bytes as u64);
+    }
 }
 
 #[cfg(test)]

@@ -91,6 +91,27 @@
 //! manager's typed [`gmi::RemoveGmiError`]) and restores tenants as
 //! priorities and SLO pressure dictate — see `examples/shared_cluster.rs`
 //! for the preemption timeline against a statically partitioned baseline.
+//!
+//! ## Performance
+//!
+//! The inner loops are sized for million-request cluster days: the engine
+//! maintains its global/per-GPU clock frontiers and per-job service
+//! totals incrementally at charge time (O(1) queries;
+//! `#[doc(hidden)] *_scan()` keeps the fold-over-all-executors reference
+//! implementations, cross-checked by
+//! [`engine::Engine::audit_incremental_state`]), the gateway dispatch
+//! path reuses pooled fabric plans ([`serve::DispatchPlans`]) and shared
+//! `Arc<[Request]>` traces, latency percentiles select in place
+//! ([`metrics::percentile_select`]), and the cluster scheduler's round
+//! loop runs allocation-free in steady state (reused priority-order
+//! scratch; `needs_restore` / placement-dirty flags skip untouched
+//! tenants and unchanged peak scans). Every rewrite preserves arithmetic
+//! and event order bit-for-bit — `rust/tests/determinism.rs` pins a
+//! committed scenario fingerprint (`rust/tests/golden/`) and
+//! `rust/tests/serve_gateway.rs` pins the no-realloc property. Wall-clock
+//! is tracked by `benches/hotpath.rs` and `benches/bench_cluster_day.rs`,
+//! which emit `BENCH_*.json` and gate CI against committed baselines
+//! (EXPERIMENTS.md §Perf).
 
 pub mod baselines;
 pub mod channels;

@@ -73,6 +73,24 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[rank.clamp(1, n) - 1]
 }
 
+/// Nearest-rank percentile of an UNSORTED sample via in-place selection
+/// (`select_nth_unstable` under `f64::total_cmp`) — O(n) instead of the
+/// O(n log n) full sort, and bit-identical to [`percentile`] on the sorted
+/// copy: the nearest-rank statistic is a single order statistic, and
+/// `total_cmp` is a total order, so the k-th element is the same value
+/// either way. The slice is reordered (partitioned around the rank), not
+/// sorted. Empty input reports 0.
+pub fn percentile_select(samples: &mut [f64], q: f64) -> f64 {
+    let n = samples.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = (q * n as f64).ceil() as usize;
+    let k = rank.clamp(1, n) - 1;
+    let (_, kth, _) = samples.select_nth_unstable_by(k, f64::total_cmp);
+    *kth
+}
+
 /// Per-GPU SM-time accounting: utilization = busy SM-seconds / (span * SMs).
 #[derive(Debug, Default, Clone)]
 pub struct UtilizationTracker {
@@ -299,6 +317,48 @@ mod tests {
         assert_eq!(percentile(&[7.0], 0.99), 7.0);
         // three elements: p50 is the middle one
         assert_eq!(percentile(&[1.0, 2.0, 3.0], 0.5), 2.0);
+    }
+
+    /// Property test: on random samples (mixed magnitudes, duplicates,
+    /// negative zeros), selection-based p50/p95/p99 are bit-identical to
+    /// the sorted nearest-rank reference.
+    #[test]
+    fn percentile_select_matches_sorted_reference() {
+        // SplitMix64: deterministic sample generator, no external deps.
+        fn splitmix(state: &mut u64) -> u64 {
+            *state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = *state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+        let mut state = 0xDEADBEEFu64;
+        for trial in 0..200 {
+            let n = (splitmix(&mut state) % 257) as usize;
+            let mut sample: Vec<f64> = (0..n)
+                .map(|_| {
+                    let r = splitmix(&mut state);
+                    // Mixed magnitudes with ~1/8 duplicates and zeros.
+                    match r % 8 {
+                        0 => 0.0,
+                        1 => -0.0,
+                        2 => 0.125,
+                        _ => (r >> 11) as f64 / (1u64 << 53) as f64 * 1e3 - 250.0,
+                    }
+                })
+                .collect();
+            let mut sorted = sample.clone();
+            sorted.sort_by(f64::total_cmp);
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                let want = percentile(&sorted, q);
+                let got = percentile_select(&mut sample, q);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "trial {trial} n {n} q {q}: sorted {want} select {got}"
+                );
+            }
+        }
     }
 
     #[test]

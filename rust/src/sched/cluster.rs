@@ -280,6 +280,10 @@ struct Tenant {
     /// Members gained under SLO pressure, most recent last (shrink
     /// retires these first, LIFO).
     grown: Vec<GmiId>,
+    /// Below admitted provisioning (shrunk or evicted): the restore pass
+    /// only scans flagged tenants, so a steady-state round touches no
+    /// tenant state at all.
+    needs_restore: bool,
 }
 
 impl Tenant {
@@ -300,6 +304,7 @@ impl Tenant {
             share_at_completion: 0.0,
             gmis_at_completion: 0,
             grown: Vec::new(),
+            needs_restore: false,
         }
     }
 }
@@ -317,6 +322,12 @@ struct Cluster<'a> {
     next_gmi: GmiId,
     peak_gpu_share: f64,
     peak_gpu_mem: f64,
+    /// Placement changed since the last peak sample: `track_peaks` only
+    /// rescans the manager after an add/resize/remove (peaks are running
+    /// maxes, so unchanged rounds cannot move them).
+    placement_dirty: bool,
+    /// Reusable tenant-ordering buffer for the per-round passes.
+    order_scratch: Vec<usize>,
 }
 
 /// Admit, co-schedule, and run `jobs` to completion on one shared
@@ -350,6 +361,8 @@ pub fn run_cluster(
         next_gmi: 0,
         peak_gpu_share: 0.0,
         peak_gpu_mem: 0.0,
+        placement_dirty: true,
+        order_scratch: Vec::new(),
     };
     cluster.run()?;
     Ok(cluster.into_result())
@@ -378,12 +391,18 @@ impl Cluster<'_> {
             if self.cfg.preemptive {
                 self.restore_pass(now);
             }
-            for idx in self.order_running(true) {
-                self.step_tenant(idx, round_end)?;
+            // Serving tenants step first, then batch tenants, both through
+            // the one reusable ordering buffer (no per-round allocation).
+            let mut order = std::mem::take(&mut self.order_scratch);
+            self.order_running_into(true, &mut order);
+            for k in 0..order.len() {
+                self.step_tenant(order[k], round_end)?;
             }
-            for idx in self.order_running(false) {
-                self.step_tenant(idx, round_end)?;
+            self.order_running_into(false, &mut order);
+            for k in 0..order.len() {
+                self.step_tenant(order[k], round_end)?;
             }
+            self.order_scratch = order;
             // Sample occupancy peaks BEFORE completions release GMIs, so a
             // tenant admitted and finished within one round is observed.
             self.track_peaks();
@@ -393,16 +412,15 @@ impl Cluster<'_> {
         Ok(())
     }
 
-    /// Running tenants of one kind, priority-descending then id-ascending.
-    fn order_running(&self, serving: bool) -> Vec<usize> {
-        let mut v: Vec<usize> = (0..self.tenants.len())
-            .filter(|&i| {
-                self.tenants[i].state == State::Running
-                    && self.tenants[i].spec.is_serving() == serving
-            })
-            .collect();
-        v.sort_by_key(|&i| (Reverse(self.tenants[i].spec.priority), self.tenants[i].spec.id));
-        v
+    /// Running tenants of one kind, priority-descending then id-ascending,
+    /// written into a caller-owned buffer (the round loop reuses one).
+    fn order_running_into(&self, serving: bool, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.tenants.len()).filter(|&i| {
+            self.tenants[i].state == State::Running
+                && self.tenants[i].spec.is_serving() == serving
+        }));
+        out.sort_by_key(|&i| (Reverse(self.tenants[i].spec.priority), self.tenants[i].spec.id));
     }
 
     fn push_event(&mut self, t_s: f64, idx: usize, action: SchedAction, detail: String) {
@@ -517,6 +535,7 @@ impl Cluster<'_> {
             num_env,
         };
         let ex = self.engine.add_gmi(spec).ok()?;
+        self.placement_dirty = true;
         self.next_gmi += 1;
         self.engine.tag_job(ex, job).expect("member registered above");
         let lag = now - self.engine.clock(ex).seconds();
@@ -543,6 +562,7 @@ impl Cluster<'_> {
                         t.gmis.pop();
                         t.execs.pop();
                         let _ = self.engine.remove_gmi(g);
+                        self.placement_dirty = true;
                     }
                     return false;
                 }
@@ -566,9 +586,11 @@ impl Cluster<'_> {
         let mut any = false;
         for i in order {
             let floor = self.tenants[i].spec.min_share;
-            let members = self.tenants[i].gmis.clone();
             let mut changed = 0usize;
-            for gmi in members {
+            // Index walk: `resize_share` never edits the member list, so
+            // no defensive clone of it is needed.
+            for k in 0..self.tenants[i].gmis.len() {
+                let gmi = self.tenants[i].gmis[k];
                 let cur = match self.engine.manager().gmi(gmi) {
                     Some(s) => s.sm_share,
                     None => continue,
@@ -578,6 +600,8 @@ impl Cluster<'_> {
                 }
             }
             if changed > 0 {
+                self.placement_dirty = true;
+                self.tenants[i].needs_restore = true;
                 self.tenants[i].preemptions += 1;
                 self.rebind(i);
                 self.push_event(
@@ -626,6 +650,8 @@ impl Cluster<'_> {
         t.execs.pop();
         t.grown.retain(|&g| g != gmi);
         t.preemptions += 1;
+        t.needs_restore = true;
+        self.placement_dirty = true;
         self.rebind(i);
         self.push_event(now, i, SchedAction::Evict, format!("evicted member GMI {gmi}"));
         true
@@ -689,7 +715,10 @@ impl Cluster<'_> {
     // ---- SLO pressure / elasticity ----
 
     fn slo_decisions(&mut self, now: f64) {
-        for idx in self.order_running(true) {
+        let mut order = std::mem::take(&mut self.order_scratch);
+        self.order_running_into(true, &mut order);
+        for k in 0..order.len() {
+            let idx = order[k];
             let Some(slo) = self.tenants[idx].spec.slo_p99_s() else { continue };
             let signal = self.tenants[idx].program.as_ref().and_then(|p| p.slo_signal());
             let Some(p99) = signal else { continue };
@@ -699,6 +728,7 @@ impl Cluster<'_> {
                 self.shrink_grown(idx, now, p99);
             }
         }
+        self.order_scratch = order;
     }
 
     fn grow_serving(&mut self, idx: usize, now: f64, p99: f64) {
@@ -738,6 +768,10 @@ impl Cluster<'_> {
             t.gmis.remove(pos);
             t.execs.remove(pos);
         }
+        // Retiring a grown member can leave the tenant below its admitted
+        // provisioning when evictions interleaved with growth.
+        t.needs_restore = true;
+        self.placement_dirty = true;
         self.rebind(idx);
         self.push_event(
             now,
@@ -762,11 +796,16 @@ impl Cluster<'_> {
         if pressure {
             return;
         }
-        let mut order: Vec<usize> = (0..self.tenants.len())
-            .filter(|&i| self.tenants[i].state == State::Running)
-            .collect();
+        // Only tenants flagged by a preemption/eviction/shrink are scanned:
+        // a fully provisioned steady-state round walks an empty order.
+        let mut order = std::mem::take(&mut self.order_scratch);
+        order.clear();
+        order.extend((0..self.tenants.len()).filter(|&i| {
+            self.tenants[i].state == State::Running && self.tenants[i].needs_restore
+        }));
         order.sort_by_key(|&i| (Reverse(self.tenants[i].spec.priority), self.tenants[i].spec.id));
-        for idx in order {
+        for k in 0..order.len() {
+            let idx = order[k];
             let (initial, share) =
                 (self.tenants[idx].spec.initial_gmis, self.tenants[idx].spec.share);
             if self.tenants[idx].gmis.len() < initial {
@@ -782,9 +821,10 @@ impl Cluster<'_> {
                     continue;
                 }
             }
-            let members = self.tenants[idx].gmis.clone();
             let mut grew = 0usize;
-            for gmi in members {
+            let mut still_below = 0usize;
+            for m in 0..self.tenants[idx].gmis.len() {
+                let gmi = self.tenants[idx].gmis[m];
                 let (cur, gpu) = match self.engine.manager().gmi(gmi) {
                     Some(s) => (s.sm_share, s.gpu),
                     None => continue,
@@ -796,9 +836,15 @@ impl Cluster<'_> {
                 let target = (cur + free).min(share);
                 if target > cur + 0.009 && self.engine.resize_share(gmi, target).is_ok() {
                     grew += 1;
+                    if target + 1e-9 < share {
+                        still_below += 1;
+                    }
+                } else {
+                    still_below += 1;
                 }
             }
             if grew > 0 {
+                self.placement_dirty = true;
                 self.tenants[idx].restores += 1;
                 self.rebind(idx);
                 self.push_event(
@@ -808,7 +854,11 @@ impl Cluster<'_> {
                     format!("regrew {grew} member(s) toward {share:.2}"),
                 );
             }
+            if still_below == 0 && self.tenants[idx].gmis.len() >= initial {
+                self.tenants[idx].needs_restore = false;
+            }
         }
+        self.order_scratch = order;
     }
 
     // ---- completion / release ----
@@ -848,6 +898,7 @@ impl Cluster<'_> {
         for g in gmis {
             let _ = self.engine.remove_gmi(g);
         }
+        self.placement_dirty = true;
         let t = &mut self.tenants[idx];
         t.state = State::Done;
         t.completed_s = at;
@@ -857,6 +908,12 @@ impl Cluster<'_> {
     }
 
     fn track_peaks(&mut self) {
+        // Peaks are running maxes over manager placement, which only moves
+        // on an add/resize/remove — rounds without one cannot change them.
+        if !self.placement_dirty {
+            return;
+        }
+        self.placement_dirty = false;
         for gpu in 0..self.engine.topology().num_gpus() {
             let (sm, mem) = self.gpu_used(gpu);
             self.peak_gpu_share = self.peak_gpu_share.max(sm);

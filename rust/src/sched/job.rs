@@ -12,6 +12,8 @@
 //! run loops drive, so the scheduler contains no per-kind execution logic
 //! at all — one implementation per workload, shared everywhere.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::cluster::Topology;
@@ -51,7 +53,9 @@ pub enum JobKind {
     /// raises pressure: the scheduler grows the fleet, preempting
     /// lower-priority tenants if it must.
     Serving {
-        trace: Vec<Request>,
+        /// Shared immutable arrival trace (`Arc`: building the tenant's
+        /// program clones a pointer, not the request log).
+        trace: Arc<[Request]>,
         slo_p99_s: f64,
         max_batch: usize,
     },
@@ -60,7 +64,7 @@ pub enum JobKind {
     /// cap): the identical [`GatewayProgram`](crate::workload::GatewayProgram)
     /// `serve::run_gateway` drives. The scheduler owns fleet elasticity,
     /// so `cfg.autoscale` must be `None`.
-    Gateway { trace: Vec<Request>, cfg: GatewayConfig },
+    Gateway { trace: Arc<[Request]>, cfg: GatewayConfig },
     /// Closed-loop DRL serving (continuous experience collection, no
     /// arrival process) — the
     /// [`ClosedServingProgram`](crate::workload::ClosedServingProgram).
@@ -158,7 +162,7 @@ impl JobSpec {
         share: f64,
         max_batch: usize,
         slo_p99_s: f64,
-        trace: Vec<Request>,
+        trace: impl Into<Arc<[Request]>>,
     ) -> JobSpec {
         JobSpec {
             id,
@@ -172,7 +176,7 @@ impl JobSpec {
             min_share: share,
             mem_gib: 2.0,
             pin_gpus: None,
-            kind: JobKind::Serving { trace, slo_p99_s, max_batch },
+            kind: JobKind::Serving { trace: trace.into(), slo_p99_s, max_batch },
         }
     }
 
@@ -187,7 +191,7 @@ impl JobSpec {
         (min, initial, max): (usize, usize, usize),
         share: f64,
         cfg: GatewayConfig,
-        trace: Vec<Request>,
+        trace: impl Into<Arc<[Request]>>,
     ) -> JobSpec {
         JobSpec {
             id,
@@ -201,7 +205,7 @@ impl JobSpec {
             min_share: share,
             mem_gib: 2.0,
             pin_gpus: None,
-            kind: JobKind::Gateway { trace, cfg },
+            kind: JobKind::Gateway { trace: trace.into(), cfg },
         }
     }
 
@@ -298,11 +302,13 @@ impl JobSpec {
                         slo_s: *slo_p99_s,
                         autoscale: None,
                     },
+                    // An `Arc` clone: every scheduler round that rebuilds a
+                    // program shares the one trace allocation.
                     trace.clone(),
                 ),
             ),
             JobKind::Gateway { trace, cfg } => {
-                Box::new(GatewayProgram::new(cfg.clone(), trace.clone()))
+                Box::new(GatewayProgram::new(*cfg, trace.clone()))
             }
             JobKind::Closed { rounds, num_env: _ } => Box::new(ClosedServingProgram::new(
                 ServingConfig { rounds: *rounds, ..ServingConfig::default() },

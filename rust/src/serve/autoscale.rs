@@ -25,10 +25,10 @@ use anyhow::Result;
 
 use crate::engine::{Engine, ExecutorId};
 use crate::gmi::GmiSpec;
-use crate::metrics::percentile;
+use crate::metrics::percentile_select;
 
 /// Tuning knobs of the SLO-aware autoscaler.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct AutoscaleConfig {
     /// Evaluation window length (virtual seconds of arrival time).
     pub window_s: f64,
@@ -127,6 +127,9 @@ pub struct Autoscaler {
     /// first, LIFO).
     grown: Vec<ExecutorId>,
     cooldown: usize,
+    /// Reusable window-latency scratch for the per-window p99 selection —
+    /// grows to the largest window once, then no per-window allocation.
+    scratch: Vec<f64>,
 }
 
 impl Autoscaler {
@@ -146,7 +149,14 @@ impl Autoscaler {
             .ok_or_else(|| anyhow::anyhow!("fleet GMI {first} not registered"))?
             .clone();
         let next_gmi_id = engine.manager().all().map(|g| g.id).max().unwrap_or(0) + 1;
-        Ok(Autoscaler { cfg, template, next_gmi_id, grown: Vec::new(), cooldown: 0 })
+        Ok(Autoscaler {
+            cfg,
+            template,
+            next_gmi_id,
+            grown: Vec::new(),
+            cooldown: 0,
+            scratch: Vec::new(),
+        })
     }
 
     pub fn window_s(&self) -> f64 {
@@ -175,9 +185,9 @@ impl Autoscaler {
             // exactly when the SLO is violated hardest.
             return None;
         }
-        let mut lat = window_lat.to_vec();
-        lat.sort_by(f64::total_cmp);
-        let p99 = percentile(&lat, 0.99);
+        self.scratch.clear();
+        self.scratch.extend_from_slice(window_lat);
+        let p99 = percentile_select(&mut self.scratch, 0.99);
         let before = active.len();
         let ev = if p99 > self.cfg.slo_p99_s {
             self.grow(engine, active).map(|detail| ScaleEvent {

@@ -39,7 +39,7 @@ use crate::config::BenchInfo;
 use crate::drl::serving::tdg_agent_fwd;
 use crate::drl::Compute;
 use crate::engine::{Engine, ExecutorId, OpCharge};
-use crate::fabric::Fabric;
+use crate::fabric::{Fabric, Plan};
 use crate::gmi::GmiSpec;
 use crate::mapping::Layout;
 use crate::metrics::{LatencyStats, RunMetrics};
@@ -52,7 +52,7 @@ use super::AutoscaleConfig;
 
 /// Gateway policy: admission control, dynamic batching, SLO target, and
 /// the optional autoscaler.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct GatewayConfig {
     /// Largest request batch one dispatch forms.
     pub max_batch: usize,
@@ -148,13 +148,12 @@ pub fn batch_seconds(
     share: f64,
     batch: usize,
 ) -> f64 {
-    let fabric = Fabric::single_node(topo.clone());
-    let req = fabric
-        .plan_intra_gpu(batch * request_bytes(bench), 1, 0)
-        .total_s();
-    let resp = fabric
-        .plan_intra_gpu(batch * response_bytes(bench), 1, 0)
-        .total_s();
+    // An intra-GPU plan is a single host-path hop whose total time IS
+    // `host_transfer_time`, so the hop costs are computed directly from
+    // the topology — no Fabric construction (and no topology clone) per
+    // capacity query. Bit-identical to executing the plans.
+    let req = topo.host_transfer_time(batch * request_bytes(bench), 1);
+    let resp = topo.host_transfer_time(batch * response_bytes(bench), 1);
     let fwd = cost.op_time(OpKind::PolicyFwd { num_env: batch }, share, 1.0);
     req + fwd + resp
 }
@@ -189,19 +188,57 @@ pub fn execute_dispatch(
     n: usize,
     dedicated: bool,
 ) -> Clock {
+    let mut plans = DispatchPlans::default();
+    execute_dispatch_pooled(engine, fabric, cost, bench, ex, t, n, dedicated, &mut plans)
+}
+
+/// Reusable request/response plan buffers for [`execute_dispatch_pooled`]:
+/// one pair per gateway program, rewritten in place on every dispatch so
+/// the steady-state dispatch path allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchPlans {
+    req: Plan,
+    resp: Plan,
+}
+
+impl DispatchPlans {
+    /// Step-buffer capacities of the two pooled plans (no-realloc
+    /// introspection for the capacity regression test).
+    #[doc(hidden)]
+    pub fn step_caps(&self) -> (usize, usize) {
+        (self.req.steps.capacity(), self.resp.steps.capacity())
+    }
+}
+
+/// [`execute_dispatch`] writing its two transfer plans into caller-owned
+/// buffers instead of allocating fresh ones per dispatch. The plans carry
+/// identical durations and link uses, so every charged clock is
+/// bit-identical to the allocating path.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_dispatch_pooled(
+    engine: &mut Engine,
+    fabric: &mut Fabric,
+    cost: &CostModel,
+    bench: &BenchInfo,
+    ex: ExecutorId,
+    t: f64,
+    n: usize,
+    dedicated: bool,
+    plans: &mut DispatchPlans,
+) -> Clock {
     let gpu = engine.gpu(ex);
     let sharing = engine.co_resident(ex).max(1);
-    let req_plan = fabric.plan_intra_gpu(n * request_bytes(bench), sharing, gpu);
-    engine.recv_plan(fabric, ex, Clock(t), &req_plan);
+    fabric.plan_intra_gpu_into(n * request_bytes(bench), sharing, gpu, &mut plans.req);
+    engine.recv_plan(fabric, ex, Clock(t), &plans.req);
     let fwd = if dedicated {
         tdg_agent_fwd(n, engine.share(ex))
     } else {
         OpCharge::recorded(OpKind::PolicyFwd { num_env: n })
     };
     engine.charge_steps(cost, ex, 1.0, &[fwd], 0.0);
-    let resp_plan = fabric.plan_intra_gpu(n * response_bytes(bench), sharing, gpu);
+    fabric.plan_intra_gpu_into(n * response_bytes(bench), sharing, gpu, &mut plans.resp);
     let after_fwd = engine.clock(ex);
-    engine.recv_plan(fabric, ex, after_fwd, &resp_plan)
+    engine.recv_plan(fabric, ex, after_fwd, &plans.resp)
 }
 
 /// Run the gateway over an arrival trace (ascending `arrival_s`). The
@@ -225,7 +262,9 @@ pub fn run_gateway(
     let mut fabric = Fabric::single_node(layout.manager.topology().clone());
     let active = engine.add_group(&layout.rollout_gmis)?;
 
-    let mut program = GatewayProgram::new(cfg.clone(), trace.to_vec());
+    // Config is `Copy`; the trace is copied ONCE here into the shared
+    // `Arc<[Request]>` the program (and any scheduler job) borrows from.
+    let mut program = GatewayProgram::new(*cfg, trace);
     program.bind(&engine, &mut fabric, bench, &active)?;
     // The gateway charges no numerics, but the step contract carries a
     // backend; Null is the no-op choice.

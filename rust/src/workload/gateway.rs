@@ -23,6 +23,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -31,15 +32,20 @@ use crate::config::BenchInfo;
 use crate::engine::{Engine, ExecutorId};
 use crate::fabric::Fabric;
 use crate::gmi::Role;
-use crate::metrics::{percentile, LatencyStats, RunMetrics};
+use crate::metrics::{percentile_select, LatencyStats, RunMetrics};
 use crate::serve::autoscale::{Autoscaler, ScaleEvent};
-use crate::serve::gateway::{execute_dispatch, least_loaded, GatewayConfig, ServedRequest};
+use crate::serve::gateway::{
+    execute_dispatch_pooled, least_loaded, DispatchPlans, GatewayConfig, ServedRequest,
+};
 use crate::serve::Request;
 
 /// Steppable open-loop gateway program (see module docs).
 pub struct GatewayProgram {
     cfg: GatewayConfig,
-    trace: Vec<Request>,
+    /// Shared, immutable arrival trace: the scheduler's job table and every
+    /// program instance borrow one allocation instead of deep-copying the
+    /// (potentially multi-million-request) trace per run.
+    trace: Arc<[Request]>,
     /// Flush partial batches at the step horizon (the scheduler's round
     /// boundary) instead of at per-request wait deadlines.
     flush_at_horizon: bool,
@@ -74,14 +80,17 @@ pub struct GatewayProgram {
     /// per-round SLO pressure signal).
     step_lat: Vec<f64>,
     last_p99: Option<f64>,
+    /// Pooled request/response transfer-plan buffers, rewritten in place
+    /// on every dispatch.
+    plans: DispatchPlans,
 }
 
 impl GatewayProgram {
     /// Standalone dynamic-batching gateway (max-wait flush).
-    pub fn new(cfg: GatewayConfig, trace: Vec<Request>) -> Self {
+    pub fn new(cfg: GatewayConfig, trace: impl Into<Arc<[Request]>>) -> Self {
         GatewayProgram {
             cfg,
-            trace,
+            trace: trace.into(),
             flush_at_horizon: false,
             active: Vec::new(),
             all_members: Vec::new(),
@@ -102,13 +111,14 @@ impl GatewayProgram {
             window_lat: None,
             step_lat: Vec::new(),
             last_p99: None,
+            plans: DispatchPlans::default(),
         }
     }
 
     /// Scheduler-tenant variant: partial batches flush at each step's
     /// horizon (the scheduling-round boundary) and wait deadlines are
     /// disabled.
-    pub fn round_flush(mut cfg: GatewayConfig, trace: Vec<Request>) -> Self {
+    pub fn round_flush(mut cfg: GatewayConfig, trace: impl Into<Arc<[Request]>>) -> Self {
         cfg.max_wait_s = f64::INFINITY;
         let mut p = GatewayProgram::new(cfg, trace);
         p.flush_at_horizon = true;
@@ -134,6 +144,24 @@ impl GatewayProgram {
         self.rejected
     }
 
+    /// Capacities of the per-run reusable hot-path buffers, in a fixed
+    /// order: pending queue, in-flight completion heap, per-step latency
+    /// scratch, autoscale window scratch, pooled request plan steps,
+    /// pooled response plan steps. The no-realloc regression test snapshots
+    /// these after warmup and asserts the steady state never regrows them.
+    #[doc(hidden)]
+    pub fn hot_buffer_caps(&self) -> [usize; 6] {
+        let (req, resp) = self.plans.step_caps();
+        [
+            self.pending.capacity(),
+            self.completions.capacity(),
+            self.step_lat.capacity(),
+            self.window_lat.as_ref().map_or(0, |w| w.capacity()),
+            req,
+            resp,
+        ]
+    }
+
     /// Dispatch up to `max_batch` queued requests at virtual time `t` onto
     /// the least-loaded active member as engine events (request hop,
     /// batched `PolicyFwd`, response hop).
@@ -144,8 +172,17 @@ impl GatewayProgram {
         }
         let ex = least_loaded(ctx.engine, &self.active);
         let batch_idx = self.batch_sizes.len();
-        let done =
-            execute_dispatch(ctx.engine, ctx.fabric, ctx.cost, ctx.bench, ex, t, n, self.dedicated);
+        let done = execute_dispatch_pooled(
+            ctx.engine,
+            ctx.fabric,
+            ctx.cost,
+            ctx.bench,
+            ex,
+            t,
+            n,
+            self.dedicated,
+            &mut self.plans,
+        );
         let done_s = done.seconds();
         for _ in 0..n {
             let idx = self.pending.pop_front().expect("batch under-run");
@@ -225,14 +262,17 @@ impl Workload for GatewayProgram {
                     .gmi(engine.gmi_of(ex))
                     .is_some_and(|g| matches!(g.role, Role::Simulator | Role::Agent))
             });
-            if let Some(a) = &self.cfg.autoscale {
-                let scaler = Autoscaler::new(a.clone(), engine, members)?;
+            if let Some(a) = self.cfg.autoscale {
+                let scaler = Autoscaler::new(a, engine, members)?;
                 self.next_window = scaler.window_s();
                 self.window_lat = Some(Vec::new());
                 self.scaler = Some(scaler);
             }
         }
-        self.active = members.to_vec();
+        // Rebinding (the scheduler re-places tenants every round) reuses
+        // the membership buffer's capacity instead of reallocating.
+        self.active.clear();
+        self.active.extend_from_slice(members);
         for &ex in members {
             if !self.all_members.contains(&ex) {
                 self.all_members.push(ex);
@@ -307,9 +347,10 @@ impl Workload for GatewayProgram {
         self.last_p99 = if self.step_lat.is_empty() {
             None
         } else {
-            let mut w = self.step_lat.clone();
-            w.sort_by(f64::total_cmp);
-            Some(percentile(&w, 0.99))
+            // Selected in place (the scratch is cleared at the next step
+            // anyway): no per-round clone + sort. `percentile_select` is
+            // bit-identical to nearest-rank over a sorted copy.
+            Some(percentile_select(&mut self.step_lat, 0.99))
         };
         if self.next_idx >= self.trace.len() && self.pending.is_empty() {
             return Ok(StepOutcome::Done);
@@ -323,7 +364,6 @@ impl Workload for GatewayProgram {
 
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
         let mut lats: Vec<f64> = self.served.iter().map(|s| s.latency_s()).collect();
-        lats.sort_by(f64::total_cmp);
         let total = self.trace.len();
         let served_n = self.served.len();
         let within = self
@@ -331,6 +371,9 @@ impl Workload for GatewayProgram {
             .iter()
             .filter(|s| s.latency_s() <= self.cfg.slo_s + 1e-12)
             .count();
+        // Mean over dispatch order, BEFORE the selections below permute
+        // the buffer (the sum is order-sensitive in the last bits but the
+        // dispatch order is itself deterministic).
         let mean_s = if served_n > 0 {
             lats.iter().sum::<f64>() / served_n as f64
         } else {
@@ -345,9 +388,9 @@ impl Workload for GatewayProgram {
             requests: total,
             served: served_n,
             rejected: self.rejected,
-            p50_s: percentile(&lats, 0.50),
-            p95_s: percentile(&lats, 0.95),
-            p99_s: percentile(&lats, 0.99),
+            p50_s: percentile_select(&mut lats, 0.50),
+            p95_s: percentile_select(&mut lats, 0.95),
+            p99_s: percentile_select(&mut lats, 0.99),
             mean_s,
             slo_s: self.cfg.slo_s,
             attainment: if total > 0 { within as f64 / total as f64 } else { 1.0 },

@@ -25,6 +25,24 @@ fn bits(x: f64) -> u64 {
     x.to_bits()
 }
 
+/// FNV-1a over a stream of u64s: the fingerprint the pinned golden stores.
+struct Fingerprint(u64);
+
+impl Fingerprint {
+    fn new() -> Self {
+        Fingerprint(0xcbf2_9ce4_8422_2325)
+    }
+    fn fold(&mut self, v: u64) {
+        for byte in v.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn fold_f64(&mut self, v: f64) {
+        self.fold(v.to_bits());
+    }
+}
+
 /// Bit-exact equality over every RunMetrics field.
 fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
     assert_eq!(bits(a.steps_per_sec), bits(b.steps_per_sec), "{what}: steps_per_sec");
@@ -241,5 +259,101 @@ fn gateway_is_bit_identical_across_runs() {
         assert_eq!(x.id, y.id);
         assert_eq!(x.batch, y.batch);
         assert_eq!(bits(x.completion_s), bits(y.completion_s));
+    }
+}
+
+#[test]
+fn pinned_fingerprint_golden_matches_committed_value() {
+    // Run-vs-run goldens above catch nondeterminism WITHIN a build; this
+    // one catches semantic drift ACROSS commits: a fixed gateway run and a
+    // fixed two-tenant cluster day are hashed (every served request's
+    // completion bits, every scheduling decision, every final metric) and
+    // compared against a committed fingerprint. A hot-path "optimization"
+    // that moves any virtual-time result by one ulp fails here.
+    //
+    // Blessing: delete `rust/tests/golden/hotpath_fingerprint.txt` and
+    // re-run — the test writes the current fingerprint and passes. Only
+    // bless after an INTENTIONAL semantic change, and say so in the commit.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let mut fp = Fingerprint::new();
+
+    // Scenario 1: burst-traffic gateway with admission control.
+    let topo = Topology::dgx_a100(1);
+    let pattern =
+        TrafficPattern::Burst { base: 3000.0, burst: 30000.0, start_s: 0.05, len_s: 0.05 };
+    let trace = generate_trace(&pattern, 0.15, 11, 4);
+    let cfg = GatewayConfig {
+        max_batch: 16,
+        max_wait_s: 1e-3,
+        admission_cap: Some(4096),
+        slo_s: 5e-3,
+        autoscale: None,
+    };
+    let layout = build_gateway_fleet(&topo, 2, 6, 16, &cost, None).unwrap();
+    let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
+    fp.fold(r.served.len() as u64);
+    fp.fold(r.rejected as u64);
+    for s in &r.served {
+        fp.fold(s.id as u64);
+        fp.fold(s.batch as u64);
+        fp.fold_f64(s.dispatch_s);
+        fp.fold_f64(s.completion_s);
+    }
+    for &n in &r.batch_sizes {
+        fp.fold(n as u64);
+    }
+    fp.fold_f64(r.metrics.span_s);
+    fp.fold_f64(r.metrics.comm_s);
+    let l = r.metrics.latency.as_ref().unwrap();
+    fp.fold_f64(l.p50_s);
+    fp.fold_f64(l.p95_s);
+    fp.fold_f64(l.p99_s);
+    fp.fold_f64(l.mean_s);
+    fp.fold_f64(l.attainment);
+
+    // Scenario 2: the preemptive training + diurnal serving co-run.
+    let topo2 = Topology::dgx_a100(2);
+    let jobs = corun_scenario(&topo2, &b, &cost, 0.4, 11, false);
+    let rc = run_cluster(&topo2, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+    fp.fold(rc.events.len() as u64);
+    for e in &rc.events {
+        fp.fold_f64(e.t_s);
+        fp.fold(e.job as u64);
+        fp.fold(e.members as u64);
+        fp.fold_f64(e.share);
+    }
+    for j in &rc.jobs {
+        fp.fold_f64(j.metrics.span_s);
+        fp.fold_f64(j.metrics.comm_s);
+        fp.fold_f64(j.busy_s);
+        fp.fold_f64(j.xjob_interference_s);
+        fp.fold_f64(j.completed_s);
+    }
+    fp.fold_f64(rc.makespan_s);
+    fp.fold_f64(rc.fairness);
+    fp.fold_f64(rc.peak_gpu_share);
+
+    let got = format!("{:016x}", fp.0);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/hotpath_fingerprint.txt");
+    match std::fs::read_to_string(path) {
+        Ok(want) => {
+            assert_eq!(
+                got,
+                want.trim(),
+                "pinned golden fingerprint changed — virtual-time results \
+                 drifted from the committed baseline (see {path} for how to \
+                 bless an intentional change)"
+            );
+        }
+        Err(_) => {
+            // Bless-on-absence: first run on a fresh checkout of a commit
+            // that intentionally changed semantics writes the new pin.
+            std::fs::create_dir_all(
+                std::path::Path::new(path).parent().expect("golden dir has a parent"),
+            )
+            .expect("create golden dir");
+            std::fs::write(path, format!("{got}\n")).expect("write golden fingerprint");
+        }
     }
 }

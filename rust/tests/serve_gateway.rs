@@ -4,12 +4,16 @@
 
 use gmi_drl::cluster::Topology;
 use gmi_drl::config::static_registry;
+use gmi_drl::drl::Compute;
+use gmi_drl::engine::Engine;
+use gmi_drl::fabric::Fabric;
 use gmi_drl::mapping::build_gateway_fleet;
 use gmi_drl::serve::{
     batch_seconds, generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, ScaleAction,
     TrafficPattern,
 };
 use gmi_drl::vtime::CostModel;
+use gmi_drl::workload::{GatewayProgram, StepCtx, StepOutcome, Workload};
 
 #[test]
 fn autoscaled_fleet_beats_static_fleet_on_the_same_burst() {
@@ -161,4 +165,90 @@ fn diurnal_day_produces_grow_and_shrink_events() {
         .unwrap();
     assert!(last_shrink > first_grow, "no give-back after the peak");
     assert_eq!(r.latency.served, trace.len());
+}
+
+#[test]
+fn pooled_hot_buffers_do_not_regrow_after_warmup() {
+    // The gateway's per-round state (pending queue, completion heap,
+    // latency scratch, pooled fabric plans) must reach steady-state
+    // capacity during warmup and then stay put: a steady-load round
+    // performs zero heap growth. Catches any future edit that reintroduces
+    // a per-dispatch allocation (e.g. building a fresh `Plan` per batch).
+    let bench = static_registry()["AT"].clone();
+    let cost = CostModel::new(&bench);
+    let topo = Topology::dgx_a100(1);
+    let batch = 16;
+    let max_per = 4;
+    let share = (100.0 / max_per as f64).floor() / 100.0;
+    let serial = batch_seconds(&bench, &cost, &topo, share, batch);
+    // Two members on one GPU, loaded at half capacity: queues stay
+    // bounded, and constant (evenly spaced) arrivals make every round
+    // after warmup look like every other.
+    let fleet_cap = 2.0 * batch as f64 / serial;
+    let rate = 0.5 * fleet_cap;
+    let quantum = 1e-3;
+    let warmup = 300usize;
+    let measured = 1000usize;
+    // Arrivals must outlast the measured window so the program stays
+    // Pending throughout (1500 rounds of trace vs 1300 stepped).
+    let trace = generate_trace(&TrafficPattern::Constant { rate }, 1.5, 3, 4);
+    assert!(trace.len() > 1000, "constant trace unexpectedly small");
+
+    let cfg = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        admission_cap: None,
+        slo_s: 30e-3,
+        autoscale: None,
+    };
+    let fleet = build_gateway_fleet(&topo, 2, max_per, batch, &cost, None).unwrap();
+    let mut engine = Engine::new(&fleet.manager, &cost);
+    let mut fabric = Fabric::single_node(fleet.manager.topology().clone());
+    let active = engine.add_group(&fleet.rollout_gmis).unwrap();
+
+    let mut program = GatewayProgram::new(cfg, trace);
+    program.bind(&engine, &mut fabric, &bench, &active).unwrap();
+
+    let compute = Compute::Null;
+    for round in 0..warmup {
+        let mut ctx = StepCtx {
+            engine: &mut engine,
+            fabric: &mut fabric,
+            cost: &cost,
+            bench: &bench,
+            compute: &compute,
+            horizon_s: (round + 1) as f64 * quantum,
+        };
+        let out = program.step(&mut ctx).unwrap();
+        assert_eq!(out, StepOutcome::Pending, "trace drained during warmup");
+    }
+
+    let caps = program.hot_buffer_caps();
+    // The pools are real: requests queued, batches dispatched, plans
+    // materialized.
+    assert!(caps[0] > 0, "pending queue never held a request");
+    assert!(caps[2] > 0, "latency scratch never recorded a dispatch");
+    assert!(caps[4] > 0 && caps[5] > 0, "pooled plans never materialized");
+
+    for round in warmup..warmup + measured {
+        let mut ctx = StepCtx {
+            engine: &mut engine,
+            fabric: &mut fabric,
+            cost: &cost,
+            bench: &bench,
+            compute: &compute,
+            horizon_s: (round + 1) as f64 * quantum,
+        };
+        let out = program.step(&mut ctx).unwrap();
+        assert_eq!(
+            out,
+            StepOutcome::Pending,
+            "trace drained inside the measured window at round {round}"
+        );
+        assert_eq!(
+            program.hot_buffer_caps(),
+            caps,
+            "a pooled hot-path buffer regrew at round {round}"
+        );
+    }
 }

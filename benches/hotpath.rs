@@ -21,8 +21,10 @@ use gmi_drl::drl::sync::{run_sync, SyncConfig};
 use gmi_drl::drl::Compute;
 use gmi_drl::engine::{Engine, OpCharge};
 use gmi_drl::mapping::{build_gateway_fleet, build_sync_layout, MappingTemplate};
+use gmi_drl::gmi::GmiBackend;
 use gmi_drl::metrics::Table;
 use gmi_drl::serve::{batch_seconds, generate_trace, run_gateway, GatewayConfig, TrafficPattern};
+use gmi_drl::tune::{tune_sync, SyncSpace, TuneConfig};
 use gmi_drl::vtime::{Clock, OpKind};
 
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -174,6 +176,39 @@ fn main() {
         format!("{:.2} Mreq/s", req_per_s / 1e6),
     ]);
 
+    // 6. Auto-tuner probe overhead: one full tune_sync pass over the default
+    //    joint space (saturation pruning + successive halving + final lock).
+    //    Two numbers matter: the wall-clock cost of making the decision, and
+    //    the *virtual* probe time charged against the 1% budget — the latter
+    //    is the machine-independent half of the gate below.
+    let tune_topo = Topology::dgx_a100(2);
+    let tune_base = SyncConfig { iterations: 40_000, ..Default::default() };
+    let tcfg = TuneConfig::default();
+    let mut last_rep = None;
+    let s_tune = time(3, || {
+        let rep = tune_sync(
+            &tune_topo,
+            MappingTemplate::TaskColocated,
+            Some(GmiBackend::Mps),
+            &b4,
+            &cost4,
+            &tune_base,
+            (2, 512),
+            &SyncSpace::default(),
+            &tcfg,
+        )
+        .unwrap();
+        last_rep = Some(rep);
+    });
+    let rep = last_rep.expect("tuner ran");
+    let probe_frac = if rep.run_horizon_s > 0.0 { rep.probe_cost_s / rep.run_horizon_s } else { 0.0 };
+    t.row(vec![
+        "tuner decision (sync)".into(),
+        format!("{} probes / {} cands", rep.probes.len(), rep.candidates),
+        format!("{:.1} ms", s_tune * 1e3),
+        format!("{:.3}% of run", probe_frac * 100.0),
+    ]);
+
     t.print();
 
     // BENCH_hotpath.json + regression gate.
@@ -188,6 +223,11 @@ fn main() {
         ("gateway_wall_s", Json::Num(wall)),
         ("events_per_s", Json::Num(req_per_s)),
         ("sim_s_per_wall_s", Json::Num(sim_per_wall)),
+        ("tune_wall_s", Json::Num(s_tune)),
+        ("tune_probes", Json::Int(rep.probes.len() as u64)),
+        ("tune_probe_cost_s", Json::Num(rep.probe_cost_s)),
+        ("tune_budget_s", Json::Num(rep.budget_s)),
+        ("tune_probe_frac_of_run", Json::Num(probe_frac)),
         (
             "peak_rss_kib",
             common::peak_rss_kib().map_or(Json::Null, Json::Int),
@@ -207,6 +247,22 @@ fn main() {
             std::process::exit(1);
         }
         println!("gate: incremental vs scan speedup {speedup:.1}x (>= 1.0 required)");
+        // Tuner half of the machine-independent gate: the probes charged
+        // must fit the budget the tuner reserved, and the budget itself
+        // must stay within the configured fraction of the run horizon.
+        if rep.probe_cost_s > rep.budget_s + 1e-9 {
+            eprintln!(
+                "gate FAILED: tuner probe cost {:.4}s exceeds its budget {:.4}s",
+                rep.probe_cost_s, rep.budget_s
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "gate: tuner probes {:.4}s within {:.4}s budget ({:.3}% of run)",
+            rep.probe_cost_s,
+            rep.budget_s,
+            probe_frac * 100.0
+        );
         // Host-dependent half: only binding once the committed baseline
         // carries real numbers.
         common::gate_throughput(&baseline, "events_per_s", req_per_s);

@@ -208,6 +208,10 @@ pub fn static_registry() -> BTreeMap<String, BenchInfo> {
 /// All six paper benchmark abbreviations in Table 6 order.
 pub const PAPER_BENCHMARKS: [&str; 6] = ["AT", "AY", "BB", "FC", "HM", "SH"];
 
+/// Default auto-tuner probe budget as a fraction of the projected run
+/// horizon (see `tune`): probe virtual-time is bounded to 1% of the run.
+pub const DEFAULT_TUNE_BUDGET_FRAC: f64 = 0.01;
+
 /// Mirror of python `model.num_params` (separate actor + critic trunks,
 /// heads, log_std). Kept in sync by an integration test against the
 /// manifest.

@@ -73,6 +73,18 @@ impl GmiBackend {
         }
     }
 
+    /// Smallest SM share the backend can actually provision: MPS allocates
+    /// whole percentage points, MIG's finest profile is 1g.5gb (1 of 7
+    /// slices), and Direct-Share has no quantization floor at all (any
+    /// positive request is "provisioned" as whole-GPU contention).
+    pub fn min_quantized_share(&self) -> f64 {
+        match self {
+            GmiBackend::Mps => 0.01,
+            GmiBackend::Mig => MIG_PROFILES[0].sm_share(),
+            GmiBackend::DirectShare => f64::MIN_POSITIVE,
+        }
+    }
+
     /// Memory quota the backend enforces for a share-`s` GMI on a 40 GiB
     /// GPU; `None` = no quota (MPS / Direct-Share can oversubscribe and
     /// crash, which Alg 2's runnable check models).
@@ -130,6 +142,21 @@ mod tests {
         assert!((GmiBackend::Mps.quantize_share(0.333) - 0.34).abs() < 1e-9);
         assert!((GmiBackend::Mig.quantize_share(0.25) - 2.0 / 7.0).abs() < 1e-9);
         assert_eq!(GmiBackend::DirectShare.quantize_share(0.4), 0.4);
+    }
+
+    #[test]
+    fn min_quantized_share_is_the_provisioning_floor() {
+        assert!((GmiBackend::Mps.min_quantized_share() - 0.01).abs() < 1e-12);
+        assert!((GmiBackend::Mig.min_quantized_share() - 1.0 / 7.0).abs() < 1e-12);
+        // Direct-Share never quantizes: the floor is effectively zero but
+        // still positive, so clamping to it cannot zero a share out.
+        let ds = GmiBackend::DirectShare.min_quantized_share();
+        assert!(ds > 0.0 && ds < 1e-100);
+        // The floor is a fixed point of quantization for every backend.
+        for be in [GmiBackend::Mps, GmiBackend::Mig, GmiBackend::DirectShare] {
+            let f = be.min_quantized_share();
+            assert!((be.quantize_share(f) - f).abs() < 1e-12, "{be:?}");
+        }
     }
 
     #[test]

@@ -112,6 +112,30 @@
 //! is tracked by `benches/hotpath.rs` and `benches/bench_cluster_day.rs`,
 //! which emit `BENCH_*.json` and gate CI against committed baselines
 //! (EXPERIMENTS.md §Perf).
+//!
+//! ## Auto-tuning
+//!
+//! [`tune`] generalizes Algorithm 2 into an online auto-tuner: instead of
+//! trusting the calibrated cost model alone, it runs short **measured
+//! probe runs** through the same [`workload::Workload`] programs the long
+//! run will use (scratch Engine+Fabric, reduced rollout / trace prefix /
+//! round count), searching the joint space — GMIs per GPU (which fixes
+//! the quantized SM share) x num_env x minibatches x reduce strategy
+//! (auto/mpr/mrr/har) x overlap for sync training
+//! ([`tune::tune_sync`]), `max_batch x max_wait` against the SLO for the
+//! gateway ([`tune::tune_gateway`]), `num_env x batch_samples x
+//! param_sync_every` for A3C ([`tune::tune_async`]), and the minibatch
+//! count at scheduler admission, charged to the tenant in virtual time
+//! ([`tune::tune_admission_minibatches`], [`sched::JobSpec`]
+//! `with_admission_tuning`). The Algorithm-2 saturation rule prunes the
+//! grid before any probe spends time, successive halving focuses the
+//! budget (default <1% of the projected run horizon,
+//! [`config::DEFAULT_TUNE_BUDGET_FRAC`]) on contenders, and a
+//! full-fidelity final lock probes the composed winner against the
+//! hand-picked default and the `explore()` pick — so the tuned
+//! configuration beats or matches both by measurement. Every decision is
+//! bit-reproducible (`rust/tests/prop_tune.rs`); `--autotune` wires it
+//! into the `train-sync`, `train-async`, and `serve` CLI paths.
 
 pub mod baselines;
 pub mod channels;
@@ -128,6 +152,7 @@ pub mod runtime;
 pub mod sched;
 pub mod selection;
 pub mod serve;
+pub mod tune;
 pub mod vtime;
 pub mod workload;
 

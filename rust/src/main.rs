@@ -40,6 +40,7 @@ use gmi_drl::selection;
 use gmi_drl::serve::{
     generate_trace, run_gateway, scale_table, AutoscaleConfig, GatewayConfig, TrafficPattern,
 };
+use gmi_drl::tune::{self, TuneConfig};
 use gmi_drl::vtime::CostModel;
 
 /// Minimal `--key value` / `--flag` parser (offline build: no clap).
@@ -193,6 +194,15 @@ COMMON OPTIONS:
   --staging-interval SECS     flush partially filled channel queues older
                               than SECS (async anti-starvation; default 1.0)
   --links                     print the per-link fabric traffic table
+  --autotune                  lock the configuration with the online
+                              auto-tuner: measured probe runs through the
+                              real programs on a scratch engine (sync /
+                              async training and the gateway). Explicitly
+                              given --gmi-per-gpu / --num-env /
+                              --minibatches / --reduce / --no-overlap /
+                              --max-batch / --max-wait-ms pin their axes
+  --tune-budget FRAC          probe budget as a fraction of the projected
+                              run horizon (default 0.01)
 
 OPEN-LOOP SERVING (serve --trace ...):
   --trace constant|poisson|diurnal|burst   arrival pattern (enables the
@@ -340,11 +350,26 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
     let max_batch: usize = args.get("max-batch", 32)?;
     let initial: usize = args.get("gmi-per-gpu", 2)?;
     let max_per: usize = args.get("max-per-gpu", (initial * 3).min(8).max(initial))?;
+    let autotune = args.flag("autotune");
+    let mut space = tune::GatewaySpace::default();
+    if args.kv.contains_key("max-batch") {
+        space.max_batch = vec![max_batch];
+    }
+    if args.kv.contains_key("max-wait-ms") {
+        space.max_wait_ms = vec![args.get("max-wait-ms", 2.0)?];
+    }
+    // Under --autotune the fleet is provisioned for the largest batch the
+    // search may lock, so every candidate policy fits the layout.
+    let fleet_batch = if autotune {
+        space.max_batch.iter().copied().max().unwrap_or(max_batch).max(max_batch)
+    } else {
+        max_batch
+    };
     let layout = build_gateway_fleet(
         &topo,
         initial,
         max_per,
-        max_batch,
+        fleet_batch,
         &cost,
         parse_backend(&args.str("backend", "auto"))?,
     )?;
@@ -352,7 +377,7 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
     let slo_ms: f64 = args.get("slo-ms", 30.0)?;
     let window_ms: f64 = args.get("window-ms", 50.0)?;
     let cap: usize = args.get("admission-cap", 0)?;
-    let cfg = GatewayConfig {
+    let mut cfg = GatewayConfig {
         max_batch,
         max_wait_s: args.get("max-wait-ms", 2.0)? / 1e3,
         admission_cap: if cap > 0 { Some(cap) } else { None },
@@ -365,6 +390,16 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
             ..AutoscaleConfig::default()
         }),
     };
+
+    if autotune {
+        let tcfg = TuneConfig {
+            budget_frac: args.get("tune-budget", TuneConfig::default().budget_frac)?,
+            ..TuneConfig::default()
+        };
+        let rep = tune::tune_gateway(&layout, &bench, &cost, &requests, &cfg, &space, &tcfg)?;
+        print_tune_summary(&rep.choice.label(), &rep);
+        cfg = rep.choice.apply(&cfg);
+    }
 
     println!(
         "serve-gateway {} [{pattern}] {} requests over {duration:.2}s, fleet {}x{initial} GMIs\n",
@@ -386,19 +421,34 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
     Ok(())
 }
 
+fn print_tune_summary<C>(label: &str, rep: &tune::TuneReport<C>) {
+    println!(
+        "[autotune] locked {label} | {} probes / {} candidates ({} pruned free) | \
+         probe cost {:.4}s of {:.4}s budget ({:.3}% of the {:.2}s projected run){}",
+        rep.probes.len(),
+        rep.candidates,
+        rep.pruned,
+        rep.probe_cost_s,
+        rep.budget_s,
+        100.0 * rep.probe_cost_s / rep.run_horizon_s.max(1e-12),
+        rep.run_horizon_s,
+        if rep.fallback { " [fallback: cost-model pick, no probe afforded]" } else { "" },
+    );
+}
+
 fn cmd_train_sync(args: &Args) -> Result<()> {
     let real = args.flag("real");
     let bench = bench_info(&args.str("bench", "AT"), real)?;
     let cost = CostModel::new(&bench);
     let gpus: usize = args.get("gpus", 4)?;
     let topo = Topology::dgx_a100(gpus);
-    let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
+    let (mut gmi_per_gpu, mut num_env) = select_config(args, &bench, &cost, gpus)?;
     let template = parse_template(&args.str("template", "tcg"))?;
     let backend = parse_backend(&args.str("backend", "auto"))?;
     // `--reduce` is the canonical strategy override; `--strategy` stays as
     // an alias for older scripts.
     let reduce = args.str("reduce", &args.str("strategy", "auto"));
-    let cfg = SyncConfig {
+    let mut cfg = SyncConfig {
         iterations: args.get("iters", 20)?,
         ppo_epochs: args.get("ppo-epochs", gmi_drl::drl::DEFAULT_PPO_EPOCHS)?,
         minibatches: args.get("minibatches", gmi_drl::drl::DEFAULT_MINIBATCHES)?,
@@ -411,6 +461,44 @@ fn cmd_train_sync(args: &Args) -> Result<()> {
             .then(gmi_drl::engine::ElasticConfig::default),
         overlap: !args.flag("no-overlap"),
     };
+
+    if args.flag("autotune") {
+        let mut space = tune::SyncSpace::default();
+        if args.kv.contains_key("gmi-per-gpu") {
+            space.gmi_per_gpu = vec![gmi_per_gpu];
+        }
+        if args.kv.contains_key("num-env") {
+            space.num_env = vec![num_env];
+        }
+        if args.kv.contains_key("minibatches") {
+            space.minibatches = vec![cfg.minibatches];
+        }
+        if cfg.strategy_override.is_some() {
+            space.strategies = vec![cfg.strategy_override];
+        }
+        if args.flag("no-overlap") {
+            space.overlap = vec![false];
+        }
+        let tcfg = TuneConfig {
+            budget_frac: args.get("tune-budget", TuneConfig::default().budget_frac)?,
+            ..TuneConfig::default()
+        };
+        let rep = tune::tune_sync(
+            &topo,
+            template,
+            backend,
+            &bench,
+            &cost,
+            &cfg,
+            (gmi_per_gpu, num_env),
+            &space,
+            &tcfg,
+        )?;
+        print_tune_summary(&rep.choice.label(), &rep);
+        gmi_per_gpu = rep.choice.gmi_per_gpu;
+        num_env = rep.choice.num_env;
+        cfg = rep.choice.apply(&cfg);
+    }
 
     let layout = build_sync_layout(&topo, template, gmi_per_gpu, num_env, &cost, backend)?;
     let (comp, _server) = compute(real)?;
@@ -446,13 +534,13 @@ fn cmd_train_async(args: &Args) -> Result<()> {
     let gpus: usize = args.get("gpus", 4)?;
     let topo = Topology::dgx_a100(gpus);
     let serving_gpus: usize = args.get("serving-gpus", (gpus / 2).max(1))?;
-    let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
+    let (gmi_per_gpu, mut num_env) = select_config(args, &bench, &cost, gpus)?;
     let mode = match args.str("mode", "mcc").as_str() {
         "mcc" => ShareMode::MultiChannel,
         "ucc" => ShareMode::UniChannel,
         other => bail!("unknown mode {other}"),
     };
-    let cfg = AsyncConfig {
+    let mut cfg = AsyncConfig {
         rounds: args.get("rounds", 20)?,
         seed: args.get("seed", 1)?,
         share_mode: mode,
@@ -468,11 +556,45 @@ fn cmd_train_async(args: &Args) -> Result<()> {
             .flag("elastic")
             .then(gmi_drl::engine::ElasticConfig::default),
     };
+    let trainers_per_gpu: usize = args.get("trainers-per-gpu", 2)?;
+
+    if args.flag("autotune") {
+        let mut space = tune::AsyncSpace::default();
+        if args.kv.contains_key("num-env") {
+            space.num_env = vec![num_env];
+        }
+        if args.kv.contains_key("batch-samples") {
+            space.batch_samples = vec![cfg.batch_samples];
+        }
+        if args.kv.contains_key("param-sync-every") {
+            space.param_sync_every = vec![cfg.param_sync_every];
+        }
+        let tcfg = TuneConfig {
+            budget_frac: args.get("tune-budget", TuneConfig::default().budget_frac)?,
+            ..TuneConfig::default()
+        };
+        let rep = tune::tune_async(
+            &topo,
+            serving_gpus,
+            gmi_per_gpu,
+            trainers_per_gpu,
+            &bench,
+            &cost,
+            &cfg,
+            num_env,
+            &space,
+            &tcfg,
+        )?;
+        print_tune_summary(&rep.choice.label(), &rep);
+        num_env = rep.choice.num_env;
+        cfg = rep.choice.apply(&cfg);
+    }
+
     let layout = build_async_layout(
         &topo,
         serving_gpus,
         gmi_per_gpu,
-        args.get("trainers-per-gpu", 2)?,
+        trainers_per_gpu,
         num_env,
         &cost,
     )?;

@@ -53,7 +53,7 @@ use std::collections::BTreeSet;
 
 use anyhow::Result;
 
-use super::job::{JobId, JobSpec};
+use super::job::{JobId, JobKind, JobSpec};
 use crate::cluster::Topology;
 use crate::config::BenchInfo;
 use crate::drl::Compute;
@@ -92,6 +92,9 @@ impl Default for SchedConfig {
 pub enum SchedAction {
     /// Job placed and started.
     Admit,
+    /// A tenant's admission-time auto-tuning locked a configuration
+    /// (probe virtual-time charged to the tenant's own member clocks).
+    Tune,
     /// Job arrived but could not be placed (logged once; retried every
     /// round).
     Queue,
@@ -113,6 +116,7 @@ impl std::fmt::Display for SchedAction {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
             SchedAction::Admit => "admit",
+            SchedAction::Tune => "tune",
             SchedAction::Queue => "queue",
             SchedAction::Preempt => "preempt",
             SchedAction::Evict => "evict",
@@ -697,6 +701,10 @@ impl Cluster<'_> {
                 (t.spec.id, t.spec.floor_share())
             };
             self.engine.set_job_floor(job, floor);
+            // Admission-time auto-tuning (Training tenants that requested
+            // it) — BEFORE the program is built, so the tuned minibatch
+            // count is what the tenant runs with.
+            self.tune_at_admission(idx, now)?;
             // Build the workload program and bind it to the placed
             // members: from here on the tenant is just stepped.
             let mut program = self.tenants[idx].spec.build_program();
@@ -709,6 +717,55 @@ impl Cluster<'_> {
             self.tenants[idx].queued_logged = true;
             self.push_event(now, idx, SchedAction::Queue, "insufficient capacity".into());
         }
+        Ok(())
+    }
+
+    /// Admission-time minibatch tuning: probe candidates on a scratch
+    /// mirror of the tenant's just-placed members
+    /// ([`crate::tune::tune_admission_minibatches`]), lock the measured
+    /// best into the job's `Training` kind, and charge the probe
+    /// virtual-time to the tenant's own member clocks — co-tenants never
+    /// pay for another job's tuning.
+    fn tune_at_admission(&mut self, idx: usize, now: f64) -> Result<()> {
+        let Some(tr) = self.tenants[idx].spec.tune.clone() else { return Ok(()) };
+        let (iterations, horizon, current_mb) = match &self.tenants[idx].spec.kind {
+            JobKind::Training { iterations, horizon, minibatches, .. } => {
+                (*iterations, *horizon, *minibatches)
+            }
+            // validate() rejects tuning on other kinds; unreachable in a
+            // validated run, harmless otherwise.
+            _ => return Ok(()),
+        };
+        let members: Vec<GmiSpec> = self.tenants[idx]
+            .gmis
+            .iter()
+            .filter_map(|&g| self.engine.manager().gmi(g).cloned())
+            .collect();
+        let topo = self.engine.manager().topology().clone();
+        let rep = crate::tune::tune_admission_minibatches(
+            &topo, &members, self.bench, self.cost, iterations, horizon, current_mb, &tr,
+        )?;
+        if let JobKind::Training { minibatches, .. } = &mut self.tenants[idx].spec.kind {
+            *minibatches = rep.choice;
+        }
+        if rep.probe_cost_s > 0.0 {
+            for k in 0..self.tenants[idx].execs.len() {
+                let ex = self.tenants[idx].execs[k];
+                self.engine.pay(ex, rep.probe_cost_s);
+            }
+        }
+        self.push_event(
+            now,
+            idx,
+            SchedAction::Tune,
+            format!(
+                "minibatches {current_mb} -> {} ({} probes, {:.4}s charged{})",
+                rep.choice,
+                rep.probes.len(),
+                rep.probe_cost_s,
+                if rep.fallback { ", fallback" } else { "" }
+            ),
+        );
         Ok(())
     }
 
@@ -993,6 +1050,34 @@ mod tests {
         assert!((r.fairness - 1.0).abs() < 1e-9, "one tenant is trivially fair");
         assert!(matches!(r.events.first().unwrap().action, SchedAction::Admit));
         assert!(matches!(r.events.last().unwrap().action, SchedAction::Complete));
+    }
+
+    #[test]
+    fn admission_tuning_fires_once_charges_tenant_and_is_deterministic() {
+        let (topo, b, cost) = setup();
+        let tuned = vec![JobSpec::training(0, "solo", 1, 0.0, 2, 0.5, 0.2, 512, 40)
+            .with_admission_tuning(crate::tune::AdmissionTune {
+                budget_frac: 0.05,
+                ..Default::default()
+            })];
+        let r = run_cluster(&topo, &b, &cost, &tuned, &SchedConfig::default()).unwrap();
+        let tune_events: Vec<_> =
+            r.events.iter().filter(|e| e.action == SchedAction::Tune).collect();
+        assert_eq!(tune_events.len(), 1, "tuning fires exactly once, at admission");
+        assert!(tune_events[0].detail.contains("charged"));
+        assert!(r.job(0).unwrap().metrics.steps_per_sec > 0.0);
+        // Bit-identical decision and timeline run-to-run.
+        let r2 = run_cluster(&topo, &b, &cost, &tuned, &SchedConfig::default()).unwrap();
+        assert_eq!(r.events, r2.events);
+        assert_eq!(
+            r.job(0).unwrap().metrics.steps_per_sec.to_bits(),
+            r2.job(0).unwrap().metrics.steps_per_sec.to_bits()
+        );
+        // An untuned run of the same spec emits no Tune event: existing
+        // tenants' timelines are untouched by the feature.
+        let plain = vec![JobSpec::training(0, "solo", 1, 0.0, 2, 0.5, 0.2, 512, 40)];
+        let rp = run_cluster(&topo, &b, &cost, &plain, &SchedConfig::default()).unwrap();
+        assert!(rp.events.iter().all(|e| e.action != SchedAction::Tune));
     }
 
     #[test]

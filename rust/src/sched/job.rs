@@ -22,6 +22,7 @@ use crate::drl::serving::ServingConfig;
 use crate::drl::sync::SyncConfig;
 use crate::gmi::Role;
 use crate::serve::{GatewayConfig, Request};
+use crate::tune::AdmissionTune;
 use crate::workload::{
     AsyncProgram, ClosedServingProgram, GatewayProgram, SyncProgram, Workload,
 };
@@ -112,6 +113,11 @@ pub struct JobSpec {
     /// static-partitioning baseline pins each tenant to its own slice.
     pub pin_gpus: Option<Vec<usize>>,
     pub kind: JobKind,
+    /// Training tenants may request minibatch auto-tuning at admission:
+    /// probe runs execute on a scratch mirror of the placed members and
+    /// their virtual time is charged to the tenant's own clocks
+    /// ([`crate::tune::tune_admission_minibatches`]).
+    pub tune: Option<AdmissionTune>,
 }
 
 impl JobSpec {
@@ -147,6 +153,7 @@ impl JobSpec {
                 num_env,
                 minibatches: crate::drl::DEFAULT_MINIBATCHES,
             },
+            tune: None,
         }
     }
 
@@ -177,6 +184,7 @@ impl JobSpec {
             mem_gib: 2.0,
             pin_gpus: None,
             kind: JobKind::Serving { trace: trace.into(), slo_p99_s, max_batch },
+            tune: None,
         }
     }
 
@@ -206,6 +214,7 @@ impl JobSpec {
             mem_gib: 2.0,
             pin_gpus: None,
             kind: JobKind::Gateway { trace: trace.into(), cfg },
+            tune: None,
         }
     }
 
@@ -236,6 +245,7 @@ impl JobSpec {
             mem_gib: 2.0,
             pin_gpus: None,
             kind: JobKind::Closed { rounds, num_env },
+            tune: None,
         }
     }
 
@@ -269,7 +279,17 @@ impl JobSpec {
             mem_gib: 4.0,
             pin_gpus: None,
             kind: JobKind::Async { agents, trainers, num_env, cfg },
+            tune: None,
         }
+    }
+
+    /// Request minibatch auto-tuning at admission (Training tenants only —
+    /// `validate` rejects it elsewhere): short probe runs on a scratch
+    /// mirror of the placed members pick the minibatch count, and the
+    /// probe virtual-time is charged to the tenant's own member clocks.
+    pub fn with_admission_tuning(mut self, tune: AdmissionTune) -> JobSpec {
+        self.tune = Some(tune);
+        self
     }
 
     /// Build the steppable [`Workload`] program this tenancy contract
@@ -403,6 +423,21 @@ impl JobSpec {
                 );
             }
             JobKind::Training { .. } => {}
+        }
+        if let Some(t) = &self.tune {
+            anyhow::ensure!(
+                matches!(self.kind, JobKind::Training { .. }),
+                "job {} ({}): admission tuning is only defined for Training tenants",
+                self.id,
+                self.name
+            );
+            anyhow::ensure!(
+                t.budget_frac > 0.0 && t.probe_iters >= 1 && !t.minibatches.is_empty(),
+                "job {} ({}): admission tuning needs a positive budget, probe \
+                 iterations, and at least one minibatch candidate",
+                self.id,
+                self.name
+            );
         }
         let allowed = self.allowed_gpus(topo);
         anyhow::ensure!(!allowed.is_empty(), "job {}: no allowed GPUs", self.id);
@@ -610,6 +645,22 @@ mod tests {
         let mut bad = c.clone();
         bad.kind = JobKind::Closed { rounds: 0, num_env: 512 };
         assert!(bad.validate(&topo).is_err());
+    }
+
+    #[test]
+    fn admission_tuning_only_for_training() {
+        let topo = Topology::dgx_a100(2);
+        let t = JobSpec::training(0, "t", 1, 0.0, 2, 0.5, 0.1, 256, 3)
+            .with_admission_tuning(AdmissionTune::default());
+        t.validate(&topo).unwrap();
+
+        let s = JobSpec::serving(1, "s", 9, 0.0, (1, 2, 4), 0.25, 16, 10e-3, vec![])
+            .with_admission_tuning(AdmissionTune::default());
+        assert!(s.validate(&topo).is_err(), "non-training tuning must be rejected");
+
+        let mut bad = t.clone();
+        bad.tune = Some(AdmissionTune { minibatches: vec![], ..AdmissionTune::default() });
+        assert!(bad.validate(&topo).is_err(), "empty candidate list must be rejected");
     }
 
     #[test]

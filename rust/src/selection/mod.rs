@@ -41,6 +41,17 @@ pub struct Selection {
     pub projected_top: f64,
 }
 
+/// The SM share ONE of `gmi_per_gpu` co-resident GMIs effectively holds:
+/// the quantized fair split, capped at the raw fair share (quantizing UP
+/// would let co-residents oversubscribe the GPU), but never below the
+/// backend's smallest provisionable partition — a backend cannot hand out
+/// less than its granularity floor, so modeling a sub-floor share would
+/// bypass the quantization it exists to represent.
+pub fn effective_share(backend: GmiBackend, gmi_per_gpu: usize) -> f64 {
+    let raw = 1.0 / gmi_per_gpu as f64;
+    backend.quantize_share(raw).min(raw).max(backend.min_quantized_share())
+}
+
 /// The `profile(DRL_bench, GMIperGPU, num_env)` primitive: evaluate one GMI
 /// running the full training pipeline at `1/gmi_per_gpu` of a GPU.
 pub fn profile(
@@ -51,8 +62,7 @@ pub fn profile(
     num_env: usize,
     horizon: usize,
 ) -> ProfilePoint {
-    let share = backend.quantize_share(1.0 / gmi_per_gpu as f64).min(1.0 / gmi_per_gpu as f64);
-    let share = if share <= 0.0 { 1.0 / gmi_per_gpu as f64 } else { share };
+    let share = effective_share(backend, gmi_per_gpu);
     let inter = backend.interference(gmi_per_gpu - 1, cost.heaviness);
     let mem = cost.mem_gib(num_env, horizon, true, true);
     // Runnable: the GMI's memory quota (MIG) or a fair share of the GPU
@@ -231,6 +241,31 @@ mod tests {
         // Non-runnable points report zero throughput, never garbage.
         assert_eq!(mig_big.top, 0.0);
         assert!(mig_big.mem_gib > 5.0);
+    }
+
+    #[test]
+    fn high_gmi_per_gpu_clamps_to_backend_granularity_floor() {
+        // Regression for the old `<= 0.0 -> raw 1/gmi_per_gpu` fallback:
+        // the profiled share must never drop below what the backend can
+        // provision. At 20 GMIs/GPU the fair split (0.05) is under MIG's
+        // smallest partition (1g.5gb = 1/7); both 14- and 20-way splits
+        // land on that same slice, so their single-GMI profiles (MIG has
+        // no co-residency interference) must be identical — the old code
+        // modeled a phantom 0.05-share instance instead.
+        let (b, c) = at();
+        assert!((effective_share(GmiBackend::Mig, 20) - 1.0 / 7.0).abs() < 1e-12);
+        assert!((effective_share(GmiBackend::Mig, 14) - 1.0 / 7.0).abs() < 1e-12);
+        let p20 = profile(&b, &c, GmiBackend::Mig, 20, 128, 16);
+        let p14 = profile(&b, &c, GmiBackend::Mig, 14, 128, 16);
+        assert!(p20.runnable && p14.runnable);
+        assert_eq!(p20.top, p14.top, "both land on 1g.5gb; share clamps to 1/7");
+        // MPS's floor is one percentage point: a 200-way split models the
+        // 1% floor (not raw 0.005) and stays below the runtime share floor.
+        assert!((effective_share(GmiBackend::Mps, 200) - 0.01).abs() < 1e-12);
+        assert!(!profile(&b, &c, GmiBackend::Mps, 200, 128, 16).runnable);
+        // Where quantization is exact the clamp is a no-op.
+        assert!((effective_share(GmiBackend::Mps, 4) - 0.25).abs() < 1e-12);
+        assert!((effective_share(GmiBackend::DirectShare, 8) - 0.125).abs() < 1e-12);
     }
 
     #[test]

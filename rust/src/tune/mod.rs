@@ -1,0 +1,1332 @@
+//! Online throughput auto-tuner — measured probe runs over the joint
+//! configuration space.
+//!
+//! Algorithm 2 (see [`crate::selection`]) searches (GMIperGPU, num_env)
+//! against the calibrated cost model only. This module generalizes it into
+//! an *online* tuner: short **measured probe runs** executed through the
+//! exact same [`crate::workload::Workload`] programs the long run will use
+//! (`run_sync` / `run_async` / `run_gateway` on a scratch Engine+Fabric),
+//! searching the joint space
+//!
+//! - sync training: num_env per GMI x GMIs per GPU (which fixes the SM
+//!   share via the backend's quantization) x minibatch count x reduce
+//!   strategy (auto/mpr/mrr/har) x compute/comm overlap on/off,
+//! - serving gateway: max_batch x max_wait against the SLO target,
+//! - A3C: num_env x batch_samples x param_sync_every,
+//! - scheduler admission: minibatch count for a Training tenant, probed on
+//!   a scratch mirror of its placed members and charged to the tenant in
+//!   virtual time ([`AdmissionTune`]).
+//!
+//! ## Probe protocol
+//!
+//! 1. **Saturation pruning (free).** The Algorithm-2 grid over the layout
+//!    axes is evaluated on the cost model first; unrunnable points and the
+//!    flat tail past `Sat = R_top/R_mem < alpha` are cut before any probe
+//!    spends time, and the survivors are ranked by the projected system
+//!    throughput ([`crate::selection::estimate`]) to seed the search
+//!    deterministically.
+//! 2. **Successive halving.** Survivors are probed at a short fidelity
+//!    (reduced rollout length / trace prefix / round count), the better
+//!    half advances, the fidelity doubles — so most probe time goes to the
+//!    contenders. Layout axes are halved first, then the knob axes
+//!    (minibatches x strategy x overlap) on the winning layout.
+//! 3. **Final lock.** The composed winner is probed at full fidelity
+//!    against two protected references — the hand-picked default and the
+//!    Algorithm-2 `explore()` pick — and the measured best is locked. The
+//!    tuned configuration therefore beats or matches both *by measurement*,
+//!    not by projection.
+//!
+//! ## Budget accounting
+//!
+//! Probe time is virtual seconds on the scratch engine, charged against a
+//! budget of `budget_frac` (default 1%, [`crate::config`]
+//! `DEFAULT_TUNE_BUDGET_FRAC`) of the projected long-run horizon. Every
+//! probe is admitted against a conservative (4x cost-model) bound *before*
+//! it runs, so charging never exceeds the budget; when the budget cannot
+//! fund even one probe the tuner degrades deterministically to the pure
+//! Algorithm-2 pick (`fallback = true` in the report). The final-lock
+//! probes are funded by a reservation carved out up front, so the
+//! protected comparison happens whenever the budget allows any probing at
+//! all. Everything — seeding, pruning, halving, tie-breaks (earlier seed
+//! rank wins) — is deterministic, so tuner decisions are bit-identical
+//! run-to-run (`rust/tests/prop_tune.rs`).
+//!
+//! ## How to add a knob
+//!
+//! Extend the relevant `*Space` (axis values) and `*Choice` (the locked
+//! value + `apply()` onto the base config), include the axis when the knob
+//! candidates are enumerated in `tune_*`, and make sure the probe's config
+//! actually consumes it — nothing else changes: budgeting, halving, and
+//! the protected final lock are shared machinery.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Topology;
+use crate::comm::ReduceStrategy;
+use crate::config::BenchInfo;
+use crate::drl::a3c::{run_async, AsyncConfig};
+use crate::drl::sync::{run_sync, SyncConfig};
+use crate::drl::Compute;
+use crate::engine::Engine;
+use crate::fabric::Fabric;
+use crate::gmi::{GmiBackend, GmiManager, GmiSpec};
+use crate::mapping::{build_async_layout, build_sync_layout, Layout, MappingTemplate};
+use crate::selection::{self, effective_share, SAT_ALPHA};
+use crate::serve::{batch_seconds, run_gateway, GatewayConfig, Request};
+use crate::vtime::{CostModel, OpKind};
+use crate::workload::{run_to_completion, SyncProgram, Workload};
+
+// ---------------------------------------------------------------------------
+// Budget
+// ---------------------------------------------------------------------------
+
+/// Virtual-time probe budget: probes are admitted against a conservative
+/// cost bound BEFORE running (so spending never overshoots), then charged
+/// their actual measured span.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneBudget {
+    pub budget_s: f64,
+    pub spent_s: f64,
+}
+
+impl TuneBudget {
+    pub fn fraction_of(run_horizon_s: f64, frac: f64) -> TuneBudget {
+        TuneBudget { budget_s: (run_horizon_s * frac).max(0.0), spent_s: 0.0 }
+    }
+
+    /// Can a probe with conservative cost bound `bound_s` still run?
+    pub fn admits(&self, bound_s: f64) -> bool {
+        self.spent_s + bound_s <= self.budget_s + 1e-12
+    }
+
+    pub fn charge(&mut self, actual_s: f64) {
+        self.spent_s += actual_s.max(0.0);
+    }
+
+    pub fn remaining_s(&self) -> f64 {
+        (self.budget_s - self.spent_s).max(0.0)
+    }
+}
+
+/// Tuner-wide settings; the per-workload search spaces live in
+/// [`SyncSpace`] / [`GatewaySpace`] / [`AsyncSpace`].
+#[derive(Debug, Clone, Copy)]
+pub struct TuneConfig {
+    /// Probe budget as a fraction of the projected run horizon.
+    pub budget_frac: f64,
+    /// Rollout length of the cheapest sync probe rung (doubles per rung up
+    /// to the benchmark's full horizon).
+    pub probe_rollout: usize,
+    /// Training iterations per probe run.
+    pub probe_iters: usize,
+    /// Layout candidates entering successive halving (knob candidates get
+    /// twice this).
+    pub max_candidates: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            budget_frac: crate::config::DEFAULT_TUNE_BUDGET_FRAC,
+            probe_rollout: 2,
+            probe_iters: 2,
+            max_candidates: 8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probe records + report
+// ---------------------------------------------------------------------------
+
+/// One measured probe run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProbeRecord {
+    pub label: String,
+    /// Probe fidelity: rollout length (sync), trace-prefix requests
+    /// (gateway), rounds (A3C), or iterations (admission tuning).
+    pub fidelity: usize,
+    /// Measured objective: env-steps/s for training; for the gateway,
+    /// served/s when the SLO held and `-p99` when it did not.
+    pub objective: f64,
+    /// Virtual seconds charged against the budget.
+    pub cost_s: f64,
+}
+
+/// What the tuner decided and what it cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneReport<C> {
+    pub choice: C,
+    /// Measured objective of the locked choice (cost-model projection when
+    /// `fallback` is set).
+    pub objective: f64,
+    pub probes: Vec<ProbeRecord>,
+    /// Total virtual seconds charged; never exceeds `budget_s`.
+    pub probe_cost_s: f64,
+    pub budget_s: f64,
+    /// Projected horizon of the long run the budget was sized against.
+    pub run_horizon_s: f64,
+    /// Grid points cut by the runnable check + saturation pruning before
+    /// any probe ran.
+    pub pruned: usize,
+    /// Candidates that entered successive halving (all phases).
+    pub candidates: usize,
+    /// True when the budget funded no probe and the decision degraded to
+    /// the cost-model pick.
+    pub fallback: bool,
+}
+
+pub type SyncTuneReport = TuneReport<SyncChoice>;
+pub type GatewayTuneReport = TuneReport<GatewayChoice>;
+pub type AsyncTuneReport = TuneReport<AsyncChoice>;
+
+// ---------------------------------------------------------------------------
+// Successive halving (shared by all tuners)
+// ---------------------------------------------------------------------------
+
+struct ProbeOutcome {
+    objective: f64,
+    cost_s: f64,
+}
+
+/// Geometric fidelity ladder: `r0, 2*r0, ... , full`.
+fn rung_fidelities(r0: usize, full: usize) -> Vec<usize> {
+    let full = full.max(1);
+    let mut r = r0.clamp(1, full);
+    let mut v = Vec::new();
+    loop {
+        v.push(r);
+        if r >= full {
+            break;
+        }
+        r = (r * 2).min(full);
+    }
+    v
+}
+
+/// Deterministic budget-gated successive halving.
+///
+/// Probes every surviving candidate at each rung's fidelity (in current
+/// rank order, best-measured first, so if the budget runs dry mid-rung the
+/// strongest contenders were measured); keeps the better half (ties to the
+/// earlier seed rank). A probe whose conservative `bound` the budget
+/// cannot admit ends the rung — whatever has been measured decides.
+/// Returns `(winner index, winner's last measured objective)`, or `None`
+/// if no candidate was ever successfully probed.
+fn successive_halving<C>(
+    cands: &[C],
+    rungs: &[usize],
+    budget: &mut TuneBudget,
+    probes: &mut Vec<ProbeRecord>,
+    label: impl Fn(&C) -> String,
+    bound: impl Fn(&C, usize) -> f64,
+    mut probe: impl FnMut(&C, usize) -> Result<Option<ProbeOutcome>>,
+) -> Result<Option<(usize, f64)>> {
+    let mut alive: Vec<usize> = (0..cands.len()).collect();
+    let mut scores: Vec<f64> = vec![f64::NEG_INFINITY; cands.len()];
+    for (ri, &fid) in rungs.iter().enumerate() {
+        let mut measured: Vec<usize> = Vec::new();
+        for &ci in &alive {
+            if !budget.admits(bound(&cands[ci], fid)) {
+                break;
+            }
+            match probe(&cands[ci], fid)? {
+                Some(out) => {
+                    budget.charge(out.cost_s);
+                    probes.push(ProbeRecord {
+                        label: label(&cands[ci]),
+                        fidelity: fid,
+                        objective: out.objective,
+                        cost_s: out.cost_s,
+                    });
+                    scores[ci] = out.objective;
+                    measured.push(ci);
+                }
+                // Invalid candidate (e.g. a reduce strategy the layout
+                // cannot plan): drops out without charging the budget.
+                None => scores[ci] = f64::NEG_INFINITY,
+            }
+        }
+        if measured.is_empty() {
+            break;
+        }
+        measured.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let keep = if ri + 1 == rungs.len() { 1 } else { measured.len().div_ceil(2) };
+        measured.truncate(keep.max(1));
+        alive = measured;
+    }
+    let winner = alive.first().copied().filter(|&i| scores[i].is_finite());
+    Ok(winner.map(|i| (i, scores[i])))
+}
+
+// ---------------------------------------------------------------------------
+// Cost-model estimates (probe admission bounds + horizon projection)
+// ---------------------------------------------------------------------------
+
+/// One modeled sync training iteration at an explicit share/interference
+/// (the probe-admission bound core; a safety factor is applied on top).
+#[allow(clippy::too_many_arguments)]
+fn model_iter_core(
+    cost: &CostModel,
+    share: f64,
+    inter: f64,
+    num_env: usize,
+    rollout: usize,
+    epochs: usize,
+    minibatches: usize,
+) -> f64 {
+    let t_sim = cost.op_time(OpKind::SimStep { num_env }, share, inter);
+    let t_fwd = cost.op_time(OpKind::PolicyFwd { num_env }, share, inter);
+    let mb = minibatches.max(1);
+    let samples = (num_env * rollout).max(1);
+    let t_train = cost.op_time(OpKind::TrainGrad { samples: samples.div_ceil(mb) }, share, inter);
+    let t_adam = cost.op_time(OpKind::AdamApply, share, inter);
+    rollout as f64 * (t_sim + t_fwd) + epochs.max(1) as f64 * mb as f64 * (t_train + t_adam)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn model_sync_iter_s(
+    cost: &CostModel,
+    backend: GmiBackend,
+    gmi_per_gpu: usize,
+    num_env: usize,
+    rollout: usize,
+    epochs: usize,
+    minibatches: usize,
+) -> f64 {
+    let share = effective_share(backend, gmi_per_gpu);
+    let inter = backend.interference(gmi_per_gpu.saturating_sub(1), cost.heaviness);
+    model_iter_core(cost, share, inter, num_env, rollout, epochs, minibatches)
+}
+
+/// Safety factor on every probe-admission bound: the model omits
+/// communication, experience shipping, and drain, so admission is gated at
+/// 4x the modeled compute.
+const BOUND_SAFETY: f64 = 4.0;
+
+// ---------------------------------------------------------------------------
+// Sync training tuner
+// ---------------------------------------------------------------------------
+
+/// Search space for sync training. Axis order is the deterministic
+/// candidate enumeration order; pin an axis by shrinking it to one value.
+#[derive(Debug, Clone)]
+pub struct SyncSpace {
+    pub gmi_per_gpu: Vec<usize>,
+    pub num_env: Vec<usize>,
+    pub minibatches: Vec<usize>,
+    pub strategies: Vec<Option<ReduceStrategy>>,
+    pub overlap: Vec<bool>,
+}
+
+impl Default for SyncSpace {
+    fn default() -> Self {
+        SyncSpace {
+            gmi_per_gpu: vec![1, 2, 3, 4, 6, 8],
+            num_env: vec![256, 512, 1024, 2048, 4096],
+            minibatches: vec![2, 4, 8],
+            strategies: vec![
+                None,
+                Some(ReduceStrategy::MultiProcess),
+                Some(ReduceStrategy::MultiRing),
+                Some(ReduceStrategy::Hierarchical),
+            ],
+            overlap: vec![true, false],
+        }
+    }
+}
+
+pub fn strategy_name(s: Option<ReduceStrategy>) -> &'static str {
+    match s {
+        None => "auto",
+        Some(ReduceStrategy::MultiProcess) => "mpr",
+        Some(ReduceStrategy::MultiRing) => "mrr",
+        Some(ReduceStrategy::Hierarchical) => "har",
+    }
+}
+
+/// A locked sync training configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyncChoice {
+    pub gmi_per_gpu: usize,
+    pub num_env: usize,
+    pub minibatches: usize,
+    pub strategy: Option<ReduceStrategy>,
+    pub overlap: bool,
+}
+
+impl SyncChoice {
+    /// Overlay the tuned knobs on a base config (iterations, epochs, lr,
+    /// seed, elasticity are the run's own business).
+    pub fn apply(&self, base: &SyncConfig) -> SyncConfig {
+        SyncConfig {
+            minibatches: self.minibatches,
+            strategy_override: self.strategy,
+            overlap: self.overlap,
+            ..base.clone()
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "g{}xe{} mb{} {} {}",
+            self.gmi_per_gpu,
+            self.num_env,
+            self.minibatches,
+            strategy_name(self.strategy),
+            if self.overlap { "ov" } else { "seq" }
+        )
+    }
+}
+
+/// Algorithm-2-style saturation-pruned grid over the layout axes, ranked
+/// by projected system throughput. Returns `(runnable points (g, e,
+/// score) best-first, pruned count)`.
+fn pruned_layout_grid(
+    bench: &BenchInfo,
+    cost: &CostModel,
+    backend: GmiBackend,
+    num_gpu: usize,
+    space: &SyncSpace,
+) -> (Vec<(usize, usize, f64)>, usize) {
+    let mut envs = space.num_env.clone();
+    envs.sort_unstable();
+    envs.dedup();
+    let mut gs = space.gmi_per_gpu.clone();
+    gs.sort_unstable();
+    gs.dedup();
+    let mut points = Vec::new();
+    let mut pruned = 0usize;
+    for &g in gs.iter().rev() {
+        let mut pre_top = 0.0f64;
+        let mut pre_mem = 0.0f64;
+        for (i, &e) in envs.iter().enumerate() {
+            let p = selection::profile(bench, cost, backend, g, e, bench.horizon);
+            if !p.runnable {
+                pruned += 1;
+                continue;
+            }
+            if pre_top > 0.0 && pre_mem > 0.0 {
+                let r_top = (p.top - pre_top) / pre_top;
+                let r_mem = (p.mem_gib - pre_mem) / pre_mem;
+                let sat = if r_mem.abs() > 1e-12 { r_top / r_mem } else { f64::INFINITY };
+                if sat < SAT_ALPHA {
+                    // This point and the rest of the sweep are saturated.
+                    pruned += envs.len() - i;
+                    break;
+                }
+            }
+            pre_top = p.top;
+            pre_mem = p.mem_gib;
+            points.push((g, e, selection::estimate(g, num_gpu, p.top)));
+        }
+    }
+    points.sort_by(|a, b| {
+        b.2.partial_cmp(&a.2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+            .then(a.1.cmp(&b.1))
+    });
+    (points, pruned)
+}
+
+/// One measured sync probe: the real `run_sync` driver on a scratch
+/// Engine+Fabric, with the benchmark's rollout shortened to `rollout` —
+/// the exact code path of the long run at reduced fidelity. Returns
+/// `None` for candidates the layout/planner rejects (e.g. an invalid
+/// reduce strategy).
+#[allow(clippy::too_many_arguments)]
+fn sync_probe(
+    topo: &Topology,
+    template: MappingTemplate,
+    backend: GmiBackend,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    base: &SyncConfig,
+    choice: &SyncChoice,
+    rollout: usize,
+    probe_iters: usize,
+) -> Result<Option<ProbeOutcome>> {
+    let layout = match build_sync_layout(
+        topo,
+        template,
+        choice.gmi_per_gpu,
+        choice.num_env,
+        cost,
+        Some(backend),
+    ) {
+        Ok(l) => l,
+        Err(_) => return Ok(None),
+    };
+    let mut pb = bench.clone();
+    pb.horizon = rollout;
+    // Probes measure the static configuration: elasticity would shift
+    // shares mid-probe and add noise the short run cannot average out.
+    let cfg = SyncConfig { iterations: probe_iters.max(1), elastic: None, ..choice.apply(base) };
+    match run_sync(&layout, &pb, cost, &Compute::Null, &cfg) {
+        Ok(r) => Ok(Some(ProbeOutcome {
+            objective: r.metrics.steps_per_sec,
+            cost_s: r.metrics.span_s,
+        })),
+        Err(_) => Ok(None),
+    }
+}
+
+/// Tune sync training over the joint (layout x knob) space. `default_point`
+/// is the hand-picked `(gmi_per_gpu, num_env)` the run would otherwise use
+/// — it is probed as a protected reference in the final lock, as is the
+/// Algorithm-2 `explore()` pick.
+#[allow(clippy::too_many_arguments)]
+pub fn tune_sync(
+    topo: &Topology,
+    template: MappingTemplate,
+    backend: Option<GmiBackend>,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    base: &SyncConfig,
+    default_point: (usize, usize),
+    space: &SyncSpace,
+    tcfg: &TuneConfig,
+) -> Result<SyncTuneReport> {
+    let be = backend.unwrap_or_else(|| GmiBackend::auto_select(true, topo.gpus[0].sm_arch));
+    let (g_d, e_d) = default_point;
+    anyhow::ensure!(g_d >= 1 && e_d >= 1, "auto-tuner: default point must be positive");
+
+    // Phase 0 (free): saturation-pruned cost-model grid seeds the search.
+    let (points, pruned) = pruned_layout_grid(bench, cost, be, topo.num_gpus(), space);
+    anyhow::ensure!(
+        !points.is_empty(),
+        "auto-tuner: no runnable layout point in the search space"
+    );
+
+    // The budget is a fraction of the projected hand-picked long run.
+    let run_horizon_s = base.iterations as f64
+        * model_sync_iter_s(cost, be, g_d, e_d, bench.horizon, base.ppo_epochs, base.minibatches);
+    let mut budget = TuneBudget::fraction_of(run_horizon_s, tcfg.budget_frac);
+
+    let base_choice_at = |g: usize, e: usize| SyncChoice {
+        gmi_per_gpu: g,
+        num_env: e,
+        minibatches: base.minibatches,
+        strategy: base.strategy_override,
+        overlap: base.overlap,
+    };
+    let explore_pick = selection::explore(bench, cost, be, topo.num_gpus(), bench.horizon).0;
+    let probe_bound = |c: &SyncChoice, fid: usize| {
+        BOUND_SAFETY
+            * tcfg.probe_iters.max(1) as f64
+            * model_sync_iter_s(cost, be, c.gmi_per_gpu, c.num_env, fid, base.ppo_epochs, c.minibatches)
+    };
+
+    // Reserve the final-lock probes (composed winner + explore pick +
+    // hand-picked default, at full fidelity) up front, so the protected
+    // comparison happens whenever the budget allows any probing at all.
+    let full = bench.horizon;
+    let mut reserve = probe_bound(&base_choice_at(g_d, e_d), full);
+    if let Some(s) = explore_pick {
+        reserve += probe_bound(&base_choice_at(s.gmi_per_gpu, s.num_env), full);
+    }
+    reserve += points
+        .iter()
+        .map(|&(g, e, _)| probe_bound(&base_choice_at(g, e), full))
+        .fold(0.0, f64::max);
+    let mut work =
+        TuneBudget { budget_s: (budget.budget_s - reserve).max(0.0), spent_s: 0.0 };
+
+    let mut probes = Vec::new();
+    let rungs = rung_fidelities(tcfg.probe_rollout, full);
+
+    // Phase 1: halve the layout axes under measured probes.
+    let l_cands: Vec<SyncChoice> = points
+        .iter()
+        .take(tcfg.max_candidates.max(1))
+        .map(|&(g, e, _)| base_choice_at(g, e))
+        .collect();
+    let w1 = successive_halving(
+        &l_cands,
+        &rungs,
+        &mut work,
+        &mut probes,
+        SyncChoice::label,
+        probe_bound,
+        |c, fid| sync_probe(topo, template, be, bench, cost, base, c, fid, tcfg.probe_iters),
+    )?;
+    let mut candidates = l_cands.len();
+
+    let layout_winner = w1.map(|(i, _)| l_cands[i]);
+
+    // Phase 2: halve the knob axes on the winning layout.
+    let phase2 = if let Some(inc) = layout_winner {
+        let mut knob_cands = vec![inc];
+        for &st in &space.strategies {
+            for &ov in &space.overlap {
+                for &mb in &space.minibatches {
+                    let c = SyncChoice {
+                        minibatches: mb.max(1),
+                        strategy: st,
+                        overlap: ov,
+                        ..inc
+                    };
+                    if !knob_cands.contains(&c) {
+                        knob_cands.push(c);
+                    }
+                }
+            }
+        }
+        knob_cands.truncate((2 * tcfg.max_candidates).max(1));
+        let w2 = successive_halving(
+            &knob_cands,
+            &rungs,
+            &mut work,
+            &mut probes,
+            SyncChoice::label,
+            probe_bound,
+            |c, fid| sync_probe(topo, template, be, bench, cost, base, c, fid, tcfg.probe_iters),
+        )?;
+        candidates += knob_cands.len();
+        Some(w2.map(|(i, obj)| (knob_cands[i], obj)).unwrap_or_else(|| {
+            (inc, w1.map(|(_, o)| o).unwrap_or(f64::NEG_INFINITY))
+        }))
+    } else {
+        None
+    };
+    budget.charge(work.spent_s);
+
+    let (winner, winner_obj) = match phase2 {
+        Some(w) => w,
+        None => {
+            // No probe ever ran: degrade deterministically to the
+            // Algorithm-2 pick (or the best-ranked grid point).
+            let (g, e) = explore_pick
+                .map(|s| (s.gmi_per_gpu, s.num_env))
+                .unwrap_or((points[0].0, points[0].1));
+            let choice = base_choice_at(g, e);
+            let p = selection::profile(bench, cost, be, g, e, full);
+            return Ok(TuneReport {
+                choice,
+                objective: selection::estimate(g, topo.num_gpus(), p.top),
+                probe_cost_s: budget.spent_s,
+                budget_s: budget.budget_s,
+                run_horizon_s,
+                pruned,
+                candidates,
+                fallback: true,
+                probes,
+            });
+        }
+    };
+
+    // Phase 3: final lock at full fidelity against the protected
+    // references (dedup keeps the winner's seed rank 0 on ties).
+    let mut finals = vec![winner];
+    if let Some(s) = explore_pick {
+        let c = base_choice_at(s.gmi_per_gpu, s.num_env);
+        if !finals.contains(&c) {
+            finals.push(c);
+        }
+    }
+    let c = base_choice_at(g_d, e_d);
+    if !finals.contains(&c) {
+        finals.push(c);
+    }
+    let w3 = successive_halving(
+        &finals,
+        &[full],
+        &mut budget,
+        &mut probes,
+        SyncChoice::label,
+        probe_bound,
+        |c, fid| sync_probe(topo, template, be, bench, cost, base, c, fid, tcfg.probe_iters),
+    )?;
+    candidates += finals.len();
+    let (choice, objective) =
+        w3.map(|(i, obj)| (finals[i], obj)).unwrap_or((winner, winner_obj));
+
+    Ok(TuneReport {
+        choice,
+        objective,
+        probe_cost_s: budget.spent_s,
+        budget_s: budget.budget_s,
+        run_horizon_s,
+        pruned,
+        candidates,
+        fallback: false,
+        probes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Serving gateway tuner
+// ---------------------------------------------------------------------------
+
+/// Search space for the gateway's dynamic-batching policy.
+#[derive(Debug, Clone)]
+pub struct GatewaySpace {
+    pub max_batch: Vec<usize>,
+    pub max_wait_ms: Vec<f64>,
+}
+
+impl Default for GatewaySpace {
+    fn default() -> Self {
+        GatewaySpace {
+            max_batch: vec![8, 16, 32, 64],
+            max_wait_ms: vec![0.5, 1.0, 2.0, 4.0],
+        }
+    }
+}
+
+/// A locked gateway batching policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatewayChoice {
+    pub max_batch: usize,
+    pub max_wait_s: f64,
+}
+
+impl GatewayChoice {
+    pub fn apply(&self, base: &GatewayConfig) -> GatewayConfig {
+        GatewayConfig { max_batch: self.max_batch, max_wait_s: self.max_wait_s, ..*base }
+    }
+
+    pub fn label(&self) -> String {
+        format!("b{} w{:.2}ms", self.max_batch, self.max_wait_s * 1e3)
+    }
+}
+
+/// Tune the gateway's `max_batch x max_wait` against the SLO target by
+/// replaying prefixes of the real trace through `run_gateway` (autoscale
+/// disabled in probes — the tuner locks the static batching policy).
+/// Objective: among SLO-feasible policies the highest served/s, otherwise
+/// the lowest p99 (encoded as `-p99`, so any feasible policy dominates).
+pub fn tune_gateway(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    trace: &[Request],
+    base: &GatewayConfig,
+    space: &GatewaySpace,
+    tcfg: &TuneConfig,
+) -> Result<GatewayTuneReport> {
+    anyhow::ensure!(!trace.is_empty(), "auto-tuner: empty trace");
+    anyhow::ensure!(!layout.rollout_gmis.is_empty(), "auto-tuner: empty fleet");
+    let n = trace.len();
+    let run_horizon_s = trace[n - 1].arrival_s.max(1e-9);
+    let mut budget = TuneBudget::fraction_of(run_horizon_s, tcfg.budget_frac);
+
+    // Candidates: the hand-picked default first (protected), then the grid
+    // in deterministic axis order.
+    let default_choice =
+        GatewayChoice { max_batch: base.max_batch, max_wait_s: base.max_wait_s };
+    let mut cands = vec![default_choice];
+    for &bsz in &space.max_batch {
+        for &wms in &space.max_wait_ms {
+            let c = GatewayChoice { max_batch: bsz.max(1), max_wait_s: wms.max(0.0) * 1e-3 };
+            if !cands.contains(&c) {
+                cands.push(c);
+            }
+        }
+    }
+    cands.truncate((4 * tcfg.max_candidates).max(1));
+
+    let fleet = layout.rollout_gmis.len() as f64;
+    let share = layout
+        .manager
+        .gmi(layout.rollout_gmis[0])
+        .map(|s| s.sm_share)
+        .unwrap_or(1.0);
+    // Conservative per-request serial time: unbatched forward on one GMI.
+    let serial_1 = batch_seconds(bench, cost, layout.manager.topology(), share, 1);
+    let probe_bound = |_c: &GatewayChoice, fid: usize| {
+        let d = trace[fid.min(n) - 1].arrival_s;
+        2.0 * (d + fid as f64 * serial_1 / fleet.max(1.0))
+    };
+
+    // Fidelity = trace-prefix length, sized so the first rung's full scan
+    // fits well inside the budget, then growing 4x per rung.
+    let prefix_for = |t: f64| trace.partition_point(|r| r.arrival_s <= t);
+    let target0 = budget.budget_s / (4.0 * (cands.len() as f64 + 2.0));
+    let mut r = prefix_for(target0).clamp(8.min(n), n);
+    let mut rungs = Vec::new();
+    loop {
+        rungs.push(r);
+        if r >= n {
+            break;
+        }
+        r = (r * 4).min(n);
+    }
+    let rung_last = *rungs.last().unwrap();
+
+    // Reserve the final winner-vs-default comparison at the top fidelity.
+    let reserve = 2.0 * probe_bound(&default_choice, rung_last);
+    let mut work =
+        TuneBudget { budget_s: (budget.budget_s - reserve).max(0.0), spent_s: 0.0 };
+
+    let mut probes = Vec::new();
+    let mut probe = |c: &GatewayChoice, fid: usize| -> Result<Option<ProbeOutcome>> {
+        let pcfg = GatewayConfig {
+            max_batch: c.max_batch,
+            max_wait_s: c.max_wait_s,
+            autoscale: None,
+            ..*base
+        };
+        match run_gateway(layout, bench, cost, &trace[..fid.min(n)], &pcfg) {
+            Ok(r) => {
+                let span = r.metrics.span_s.max(1e-12);
+                let feasible = r.latency.p99_s <= base.slo_s;
+                let objective =
+                    if feasible { r.latency.served as f64 / span } else { -r.latency.p99_s };
+                Ok(Some(ProbeOutcome { objective, cost_s: r.metrics.span_s }))
+            }
+            Err(_) => Ok(None),
+        }
+    };
+
+    let w1 = successive_halving(
+        &cands,
+        &rungs,
+        &mut work,
+        &mut probes,
+        GatewayChoice::label,
+        probe_bound,
+        &mut probe,
+    )?;
+    budget.charge(work.spent_s);
+    let mut candidates = cands.len();
+
+    let (winner, winner_obj) = match w1 {
+        Some((i, obj)) => (cands[i], obj),
+        None => {
+            // Budget funded nothing: keep the hand-picked policy.
+            return Ok(TuneReport {
+                choice: default_choice,
+                objective: f64::NEG_INFINITY,
+                probe_cost_s: budget.spent_s,
+                budget_s: budget.budget_s,
+                run_horizon_s,
+                pruned: 0,
+                candidates,
+                fallback: true,
+                probes,
+            });
+        }
+    };
+
+    // Final lock: winner vs the protected default at the top fidelity.
+    let mut finals = vec![winner];
+    if !finals.contains(&default_choice) {
+        finals.push(default_choice);
+    }
+    let w2 = successive_halving(
+        &finals,
+        &[rung_last],
+        &mut budget,
+        &mut probes,
+        GatewayChoice::label,
+        probe_bound,
+        &mut probe,
+    )?;
+    candidates += finals.len();
+    let (choice, objective) =
+        w2.map(|(i, obj)| (finals[i], obj)).unwrap_or((winner, winner_obj));
+
+    Ok(TuneReport {
+        choice,
+        objective,
+        probe_cost_s: budget.spent_s,
+        budget_s: budget.budget_s,
+        run_horizon_s,
+        pruned: 0,
+        candidates,
+        fallback: false,
+        probes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// A3C tuner
+// ---------------------------------------------------------------------------
+
+/// Search space for the async (A3C) pipeline.
+#[derive(Debug, Clone)]
+pub struct AsyncSpace {
+    pub num_env: Vec<usize>,
+    pub batch_samples: Vec<usize>,
+    pub param_sync_every: Vec<usize>,
+}
+
+impl Default for AsyncSpace {
+    fn default() -> Self {
+        AsyncSpace {
+            num_env: vec![1024, 2048, 4096],
+            batch_samples: vec![4096, 8192, 16384],
+            param_sync_every: vec![2, 4, 8],
+        }
+    }
+}
+
+/// A locked A3C configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncChoice {
+    pub num_env: usize,
+    pub batch_samples: usize,
+    pub param_sync_every: usize,
+}
+
+impl AsyncChoice {
+    pub fn apply(&self, base: &AsyncConfig) -> AsyncConfig {
+        AsyncConfig {
+            batch_samples: self.batch_samples,
+            param_sync_every: self.param_sync_every,
+            ..base.clone()
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("e{} bs{} ps{}", self.num_env, self.batch_samples, self.param_sync_every)
+    }
+}
+
+/// Tune the A3C pipeline's `num_env x batch_samples x param_sync_every`
+/// with short measured `run_async` probes (fidelity = round count).
+#[allow(clippy::too_many_arguments)]
+pub fn tune_async(
+    topo: &Topology,
+    serving_gpus: usize,
+    serving_per_gpu: usize,
+    trainers_per_gpu: usize,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    base: &AsyncConfig,
+    default_num_env: usize,
+    space: &AsyncSpace,
+    tcfg: &TuneConfig,
+) -> Result<AsyncTuneReport> {
+    let be = GmiBackend::Mps; // async layouts are MPS (cross-GMI channels)
+    let agents = (serving_gpus * serving_per_gpu).max(1);
+    let trainers = ((topo.num_gpus() - serving_gpus) * trainers_per_gpu).max(1);
+
+    // Saturation-prune the num_env axis on the cost model (agents' view).
+    let mut envs = space.num_env.clone();
+    envs.sort_unstable();
+    envs.dedup();
+    let mut kept = Vec::new();
+    let mut pruned = 0usize;
+    let mut pre_top = 0.0f64;
+    let mut pre_mem = 0.0f64;
+    for (i, &e) in envs.iter().enumerate() {
+        let p = selection::profile(bench, cost, be, serving_per_gpu, e, bench.horizon);
+        if !p.runnable {
+            pruned += 1;
+            continue;
+        }
+        if pre_top > 0.0 && pre_mem > 0.0 {
+            let r_top = (p.top - pre_top) / pre_top;
+            let r_mem = (p.mem_gib - pre_mem) / pre_mem;
+            let sat = if r_mem.abs() > 1e-12 { r_top / r_mem } else { f64::INFINITY };
+            if sat < SAT_ALPHA {
+                pruned += envs.len() - i;
+                break;
+            }
+        }
+        pre_top = p.top;
+        pre_mem = p.mem_gib;
+        kept.push(e);
+    }
+    if kept.is_empty() {
+        kept.push(default_num_env.max(1));
+    }
+
+    // Modeled seconds of one round: agents roll `horizon` steps, trainers
+    // consume the produced samples in `batch_samples` slices.
+    let share = effective_share(be, serving_per_gpu);
+    let inter = be.interference(serving_per_gpu.saturating_sub(1), cost.heaviness);
+    let round_s = |c: &AsyncChoice| {
+        let t_sim = cost.op_time(OpKind::SimStep { num_env: c.num_env }, share, inter);
+        let t_fwd = cost.op_time(OpKind::PolicyFwd { num_env: c.num_env }, share, inter);
+        let produced = agents * c.num_env * bench.horizon;
+        let batches = produced.div_ceil(c.batch_samples.max(1));
+        let t_train =
+            cost.op_time(OpKind::TrainGrad { samples: c.batch_samples.max(1) }, share, inter);
+        bench.horizon as f64 * (t_sim + t_fwd)
+            + batches as f64 * t_train / trainers as f64
+    };
+
+    let default_choice = AsyncChoice {
+        num_env: default_num_env.max(1),
+        batch_samples: base.batch_samples,
+        param_sync_every: base.param_sync_every,
+    };
+    let run_horizon_s = base.rounds as f64 * round_s(&default_choice);
+    let mut budget = TuneBudget::fraction_of(run_horizon_s, tcfg.budget_frac);
+
+    let mut cands = vec![default_choice];
+    for &e in &kept {
+        for &bs in &space.batch_samples {
+            for &ps in &space.param_sync_every {
+                let c = AsyncChoice {
+                    num_env: e,
+                    batch_samples: bs.max(1),
+                    param_sync_every: ps.max(1),
+                };
+                if !cands.contains(&c) {
+                    cands.push(c);
+                }
+            }
+        }
+    }
+    cands.truncate((2 * tcfg.max_candidates).max(1));
+
+    let probe_bound = |c: &AsyncChoice, fid: usize| BOUND_SAFETY * fid as f64 * round_s(c);
+    let rungs = rung_fidelities(1, base.rounds.clamp(1, 4));
+    let rung_last = *rungs.last().unwrap();
+    let reserve = 2.0 * probe_bound(&default_choice, rung_last);
+    let mut work =
+        TuneBudget { budget_s: (budget.budget_s - reserve).max(0.0), spent_s: 0.0 };
+
+    let mut probes = Vec::new();
+    let mut probe = |c: &AsyncChoice, fid: usize| -> Result<Option<ProbeOutcome>> {
+        let layout = match build_async_layout(
+            topo,
+            serving_gpus,
+            serving_per_gpu,
+            trainers_per_gpu,
+            c.num_env,
+            cost,
+        ) {
+            Ok(l) => l,
+            Err(_) => return Ok(None),
+        };
+        let cfg = AsyncConfig { rounds: fid.max(1), elastic: None, ..c.apply(base) };
+        match run_async(&layout, bench, cost, &Compute::Null, &cfg) {
+            Ok(r) => Ok(Some(ProbeOutcome {
+                objective: r.metrics.steps_per_sec,
+                cost_s: r.metrics.span_s,
+            })),
+            Err(_) => Ok(None),
+        }
+    };
+
+    let w1 = successive_halving(
+        &cands,
+        &rungs,
+        &mut work,
+        &mut probes,
+        AsyncChoice::label,
+        probe_bound,
+        &mut probe,
+    )?;
+    budget.charge(work.spent_s);
+    let mut candidates = cands.len();
+
+    let (winner, winner_obj) = match w1 {
+        Some((i, obj)) => (cands[i], obj),
+        None => {
+            return Ok(TuneReport {
+                choice: default_choice,
+                objective: f64::NEG_INFINITY,
+                probe_cost_s: budget.spent_s,
+                budget_s: budget.budget_s,
+                run_horizon_s,
+                pruned,
+                candidates,
+                fallback: true,
+                probes,
+            });
+        }
+    };
+
+    let mut finals = vec![winner];
+    if !finals.contains(&default_choice) {
+        finals.push(default_choice);
+    }
+    let w2 = successive_halving(
+        &finals,
+        &[rung_last],
+        &mut budget,
+        &mut probes,
+        AsyncChoice::label,
+        probe_bound,
+        &mut probe,
+    )?;
+    candidates += finals.len();
+    let (choice, objective) =
+        w2.map(|(i, obj)| (finals[i], obj)).unwrap_or((winner, winner_obj));
+
+    Ok(TuneReport {
+        choice,
+        objective,
+        probe_cost_s: budget.spent_s,
+        budget_s: budget.budget_s,
+        run_horizon_s,
+        pruned,
+        candidates,
+        fallback: false,
+        probes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler admission tuning
+// ---------------------------------------------------------------------------
+
+/// A Training tenant's request to tune its minibatch count at admission:
+/// probes run on a scratch mirror of the placed members and the probe time
+/// is charged to the tenant in virtual time (every member's clock pays).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionTune {
+    /// Minibatch candidates (the tenant's current count is always probed).
+    pub minibatches: Vec<usize>,
+    /// Budget as a fraction of the tenant's projected run horizon.
+    pub budget_frac: f64,
+    /// Training iterations per probe.
+    pub probe_iters: usize,
+}
+
+impl Default for AdmissionTune {
+    fn default() -> Self {
+        AdmissionTune {
+            minibatches: vec![1, 2, 4, 8],
+            budget_frac: crate::config::DEFAULT_TUNE_BUDGET_FRAC,
+            probe_iters: 2,
+        }
+    }
+}
+
+/// Probe minibatch candidates for a placed Training tenant on a scratch
+/// mirror of its members (same GPUs, shares, roles — an empty manager, so
+/// co-tenant interference is not modeled; the probe measures the tenant's
+/// own pipeline). The probe config mirrors `JobKind::Training`'s program
+/// (one PPO epoch, sequential reductions).
+#[allow(clippy::too_many_arguments)]
+pub fn tune_admission_minibatches(
+    topo: &Topology,
+    members: &[GmiSpec],
+    bench: &BenchInfo,
+    cost: &CostModel,
+    iterations: usize,
+    rollout_len: usize,
+    current_mb: usize,
+    tr: &AdmissionTune,
+) -> Result<TuneReport<usize>> {
+    anyhow::ensure!(!members.is_empty(), "admission tuning: no placed members");
+    let mut manager = GmiManager::new(topo.clone());
+    let mut ids = Vec::with_capacity(members.len());
+    for (i, spec) in members.iter().enumerate() {
+        let mut s = spec.clone();
+        s.id = i;
+        ids.push(manager.add_gmi(s)?);
+    }
+
+    let share = members[0].sm_share;
+    let num_env = members.iter().map(|m| m.num_env).find(|&n| n > 0).unwrap_or(bench.num_env);
+    let iter_s = |mb: usize| model_iter_core(cost, share, 1.0, num_env, rollout_len, 1, mb);
+    let run_horizon_s = iterations.max(1) as f64 * iter_s(current_mb.max(1));
+    let mut budget = TuneBudget::fraction_of(run_horizon_s, tr.budget_frac);
+
+    let mut cands = vec![current_mb.max(1)];
+    for &mb in &tr.minibatches {
+        if !cands.contains(&mb.max(1)) {
+            cands.push(mb.max(1));
+        }
+    }
+
+    let rungs = rung_fidelities(1, tr.probe_iters.max(1));
+    let mut probes = Vec::new();
+    let w = successive_halving(
+        &cands,
+        &rungs,
+        &mut budget,
+        &mut probes,
+        |mb| format!("mb{mb}"),
+        |&mb, fid| BOUND_SAFETY * fid as f64 * iter_s(mb),
+        |&mb, fid| {
+            let cfg = SyncConfig {
+                iterations: fid.max(1),
+                ppo_epochs: 1,
+                minibatches: mb,
+                overlap: false,
+                ..SyncConfig::default()
+            };
+            let mut engine = Engine::new(&manager, cost);
+            let mut fabric = Fabric::single_node(topo.clone());
+            let execs = engine.add_group(&ids)?;
+            let mut program = SyncProgram::new(cfg, rollout_len);
+            if program.bind(&engine, &mut fabric, bench, &execs).is_err() {
+                return Ok(None);
+            }
+            if run_to_completion(&mut program, &mut engine, &mut fabric, cost, bench, &Compute::Null)
+                .is_err()
+            {
+                return Ok(None);
+            }
+            let m = program.finish(&engine, &fabric);
+            Ok(Some(ProbeOutcome { objective: m.steps_per_sec, cost_s: m.span_s }))
+        },
+    )
+    .context("admission tuning probes")?;
+
+    let candidates = cands.len();
+    let (choice, objective, fallback) = match w {
+        Some((i, obj)) => (cands[i], obj, false),
+        None => (current_mb.max(1), f64::NEG_INFINITY, true),
+    };
+    Ok(TuneReport {
+        choice,
+        objective,
+        probe_cost_s: budget.spent_s,
+        budget_s: budget.budget_s,
+        run_horizon_s,
+        pruned: 0,
+        candidates,
+        fallback,
+        probes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+    use crate::gmi::Role;
+
+    fn at() -> (BenchInfo, CostModel) {
+        let b = static_registry()["AT"].clone();
+        let c = CostModel::new(&b);
+        (b, c)
+    }
+
+    #[test]
+    fn rung_ladder_doubles_to_full() {
+        assert_eq!(rung_fidelities(2, 16), vec![2, 4, 8, 16]);
+        assert_eq!(rung_fidelities(3, 16), vec![3, 6, 12, 16]);
+        assert_eq!(rung_fidelities(16, 16), vec![16]);
+        assert_eq!(rung_fidelities(32, 16), vec![16]);
+        assert_eq!(rung_fidelities(0, 1), vec![1]);
+    }
+
+    #[test]
+    fn budget_admission_is_conservative() {
+        let mut b = TuneBudget::fraction_of(100.0, 0.01);
+        assert!((b.budget_s - 1.0).abs() < 1e-12);
+        assert!(b.admits(1.0));
+        assert!(!b.admits(1.1));
+        b.charge(0.6);
+        assert!(b.admits(0.4));
+        assert!(!b.admits(0.5));
+        assert!((b.remaining_s() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halving_picks_measured_best_and_respects_budget() {
+        // Synthetic probes: objective = candidate value, cost 1s each.
+        let cands = [3usize, 9, 5, 7];
+        let mut budget = TuneBudget { budget_s: 100.0, spent_s: 0.0 };
+        let mut probes = Vec::new();
+        let w = successive_halving(
+            &cands,
+            &[1, 2],
+            &mut budget,
+            &mut probes,
+            |c| format!("c{c}"),
+            |_, _| 1.0,
+            |&c, _| Ok(Some(ProbeOutcome { objective: c as f64, cost_s: 1.0 })),
+        )
+        .unwrap();
+        let (i, obj) = w.expect("winner");
+        assert_eq!(cands[i], 9);
+        assert_eq!(obj, 9.0);
+        // Rung 0 probes all 4, rung 1 the surviving 2.
+        assert_eq!(probes.len(), 6);
+        assert_eq!(budget.spent_s, 6.0);
+
+        // Zero budget: nothing runs, no winner, nothing charged.
+        let mut empty = TuneBudget { budget_s: 0.0, spent_s: 0.0 };
+        let mut p2 = Vec::new();
+        let w2 = successive_halving(
+            &cands,
+            &[1, 2],
+            &mut empty,
+            &mut p2,
+            |c| format!("c{c}"),
+            |_, _| 1.0,
+            |&c, _| Ok(Some(ProbeOutcome { objective: c as f64, cost_s: 1.0 })),
+        )
+        .unwrap();
+        assert!(w2.is_none());
+        assert!(p2.is_empty());
+        assert_eq!(empty.spent_s, 0.0);
+    }
+
+    #[test]
+    fn halving_skips_invalid_candidates_without_charging() {
+        let cands = [1usize, 2, 3];
+        let mut budget = TuneBudget { budget_s: 100.0, spent_s: 0.0 };
+        let mut probes = Vec::new();
+        let w = successive_halving(
+            &cands,
+            &[1],
+            &mut budget,
+            &mut probes,
+            |c| format!("c{c}"),
+            |_, _| 1.0,
+            |&c, _| {
+                if c == 2 {
+                    Ok(None) // invalid
+                } else {
+                    Ok(Some(ProbeOutcome { objective: c as f64, cost_s: 1.0 }))
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(cands[w.unwrap().0], 3);
+        assert_eq!(probes.len(), 2);
+        assert_eq!(budget.spent_s, 2.0);
+    }
+
+    #[test]
+    fn pruned_grid_is_ranked_and_prunes() {
+        let (b, c) = at();
+        let space = SyncSpace::default();
+        let (points, pruned) = pruned_layout_grid(&b, &c, GmiBackend::Mps, 4, &space);
+        assert!(!points.is_empty());
+        // Best-first by projected throughput.
+        for w in points.windows(2) {
+            assert!(w[0].2 >= w[1].2);
+        }
+        // The full grid was NOT kept: saturation/runnable pruning bit.
+        assert!(points.len() + pruned <= space.gmi_per_gpu.len() * space.num_env.len());
+        assert!(pruned > 0, "expected some pruning on the default space");
+    }
+
+    #[test]
+    fn admission_tuning_charges_within_budget_and_picks_candidate() {
+        let (b, c) = at();
+        let topo = Topology::dgx_a100(1);
+        let members: Vec<GmiSpec> = (0..2)
+            .map(|i| GmiSpec {
+                id: 100 + i, // deliberately non-contiguous: the mirror re-ids
+                gpu: 0,
+                sm_share: 0.25,
+                mem_gib: 4.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 512,
+            })
+            .collect();
+        let tr = AdmissionTune { minibatches: vec![1, 2, 4], budget_frac: 0.05, probe_iters: 2 };
+        let r =
+            tune_admission_minibatches(&topo, &members, &b, &c, 400, b.horizon, 4, &tr).unwrap();
+        assert!(!r.fallback, "5% of 400 iterations funds probes");
+        assert!([1, 2, 4].contains(&r.choice));
+        assert!(r.probe_cost_s <= r.budget_s + 1e-9);
+        assert!(!r.probes.is_empty());
+        // Deterministic run-to-run.
+        let r2 =
+            tune_admission_minibatches(&topo, &members, &b, &c, 400, b.horizon, 4, &tr).unwrap();
+        assert_eq!(r, r2);
+    }
+}

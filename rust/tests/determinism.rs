@@ -18,7 +18,9 @@ use gmi_drl::mapping::{
 };
 use gmi_drl::metrics::RunMetrics;
 use gmi_drl::sched::{corun_scenario, run_cluster, JobSpec, SchedConfig};
+use gmi_drl::gmi::GmiBackend;
 use gmi_drl::serve::{generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, TrafficPattern};
+use gmi_drl::tune::{tune_gateway, tune_sync, GatewaySpace, SyncSpace, TuneConfig};
 use gmi_drl::vtime::CostModel;
 
 fn bits(x: f64) -> u64 {
@@ -263,11 +265,94 @@ fn gateway_is_bit_identical_across_runs() {
 }
 
 #[test]
+fn tuned_sync_run_is_bit_identical_across_runs() {
+    // The auto-tuned path end-to-end: tuner decision AND the long run it
+    // hands the locked config to must both replay bit-for-bit.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let base = SyncConfig { iterations: 20_000, ..SyncConfig::default() };
+    let tcfg = TuneConfig::default();
+    let tune_once = || {
+        tune_sync(
+            &topo,
+            MappingTemplate::TaskColocated,
+            Some(GmiBackend::Mps),
+            &b,
+            &cost,
+            &base,
+            (2, 512),
+            &SyncSpace::default(),
+            &tcfg,
+        )
+        .unwrap()
+    };
+    let rep1 = tune_once();
+    let rep2 = tune_once();
+    assert_eq!(rep1.choice, rep2.choice, "tuner choice drifted");
+    assert_eq!(rep1, rep2, "tuner report drifted");
+
+    // Hand the locked config to a (short) long run, twice.
+    let run_once = |rep: &gmi_drl::tune::SyncTuneReport| {
+        let layout = build_sync_layout(
+            &topo,
+            MappingTemplate::TaskColocated,
+            rep.choice.gmi_per_gpu,
+            rep.choice.num_env,
+            &cost,
+            Some(GmiBackend::Mps),
+        )
+        .unwrap();
+        let cfg = SyncConfig { iterations: 5, ..rep.choice.apply(&base) };
+        run_sync(&layout, &b, &cost, &Compute::Null, &cfg).unwrap()
+    };
+    let r1 = run_once(&rep1);
+    let r2 = run_once(&rep2);
+    assert_metrics_identical(&r1.metrics, &r2.metrics, "tuned sync");
+    assert_eq!(r1.strategy, r2.strategy);
+    for (a, b) in r1.final_params.iter().zip(&r2.final_params) {
+        assert_eq!(a.to_bits(), b.to_bits(), "tuned sync: final params");
+    }
+}
+
+#[test]
+fn tuned_gateway_run_is_bit_identical_across_runs() {
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+    let trace =
+        generate_trace(&TrafficPattern::Poisson { rate: 3000.0 }, 0.3, 11, 4);
+    let layout = build_gateway_fleet(&topo, 2, 4, 64, &cost, None).unwrap();
+    let base = GatewayConfig { slo_s: 20e-3, ..GatewayConfig::default() };
+    let tcfg = TuneConfig { budget_frac: 0.5, ..TuneConfig::default() };
+    let rep1 =
+        tune_gateway(&layout, &b, &cost, &trace, &base, &GatewaySpace::default(), &tcfg).unwrap();
+    let rep2 =
+        tune_gateway(&layout, &b, &cost, &trace, &base, &GatewaySpace::default(), &tcfg).unwrap();
+    assert_eq!(rep1.choice, rep2.choice, "gateway tuner choice drifted");
+    assert_eq!(rep1, rep2, "gateway tuner report drifted");
+
+    let run_once = || {
+        let cfg = rep1.choice.apply(&base);
+        run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap()
+    };
+    let r1 = run_once();
+    let r2 = run_once();
+    assert_metrics_identical(&r1.metrics, &r2.metrics, "tuned gateway");
+    assert_eq!(r1.served.len(), r2.served.len());
+    for (x, y) in r1.served.iter().zip(&r2.served) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(bits(x.completion_s), bits(y.completion_s));
+    }
+}
+
+#[test]
 fn pinned_fingerprint_golden_matches_committed_value() {
     // Run-vs-run goldens above catch nondeterminism WITHIN a build; this
     // one catches semantic drift ACROSS commits: a fixed gateway run and a
-    // fixed two-tenant cluster day are hashed (every served request's
-    // completion bits, every scheduling decision, every final metric) and
+    // fixed two-tenant cluster day, and a fixed auto-tuned sync run are
+    // hashed (every served request's completion bits, every scheduling
+    // decision, every tuner choice field, every final metric) and
     // compared against a committed fingerprint. A hot-path "optimization"
     // that moves any virtual-time result by one ulp fails here.
     //
@@ -333,6 +418,50 @@ fn pinned_fingerprint_golden_matches_committed_value() {
     fp.fold_f64(rc.makespan_s);
     fp.fold_f64(rc.fairness);
     fp.fold_f64(rc.peak_gpu_share);
+
+    // Scenario 3: the auto-tuner's decision plus the tuned run it locks.
+    // Every probe measurement feeds the choice, so a one-ulp drift anywhere
+    // in the probe path shows up either in the report fields or in the
+    // tuned run's metrics.
+    let base = SyncConfig { iterations: 20_000, ..SyncConfig::default() };
+    let rep = tune_sync(
+        &topo2,
+        MappingTemplate::TaskColocated,
+        Some(GmiBackend::Mps),
+        &b,
+        &cost,
+        &base,
+        (2, 512),
+        &SyncSpace::default(),
+        &TuneConfig::default(),
+    )
+    .unwrap();
+    fp.fold(rep.choice.gmi_per_gpu as u64);
+    fp.fold(rep.choice.num_env as u64);
+    fp.fold(rep.choice.minibatches as u64);
+    for byte in gmi_drl::tune::strategy_name(rep.choice.strategy).bytes() {
+        fp.fold(byte as u64);
+    }
+    fp.fold(rep.choice.overlap as u64);
+    fp.fold_f64(rep.objective);
+    fp.fold_f64(rep.probe_cost_s);
+    fp.fold(rep.probes.len() as u64);
+    fp.fold(rep.pruned as u64);
+    let tuned_layout = build_sync_layout(
+        &topo2,
+        MappingTemplate::TaskColocated,
+        rep.choice.gmi_per_gpu,
+        rep.choice.num_env,
+        &cost,
+        Some(GmiBackend::Mps),
+    )
+    .unwrap();
+    let tuned_cfg = SyncConfig { iterations: 4, ..rep.choice.apply(&base) };
+    let tr = run_sync(&tuned_layout, &b, &cost, &Compute::Null, &tuned_cfg).unwrap();
+    fp.fold_f64(tr.metrics.steps_per_sec);
+    fp.fold_f64(tr.metrics.span_s);
+    fp.fold_f64(tr.metrics.comm_s);
+    fp.fold_f64(tr.metrics.final_reward);
 
     let got = format!("{:016x}", fp.0);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/hotpath_fingerprint.txt");

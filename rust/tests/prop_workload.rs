@@ -126,6 +126,7 @@ fn sync_single_tenant_matches_standalone_bit_for_bit() {
             num_env: 512,
             minibatches: gmi_drl::drl::DEFAULT_MINIBATCHES,
         },
+        tune: None,
     };
     let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
     assert_metrics_identical(

@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use common::Json;
 use gmi_drl::cluster::Topology;
+use gmi_drl::fault::{FaultPlan, FaultTrace};
 use gmi_drl::metrics::Table;
 use gmi_drl::sched::{corun_scenario, run_cluster, SchedConfig};
 
@@ -96,12 +97,64 @@ fn main() {
         println!("(pass --full for the 64-simulated-second scale)");
     }
 
+    // `--faulted`: replay one day under failure injection + charged
+    // checkpoints (a GPU loss and an NVSwitch outage, both repaired, on
+    // the same seeded scenario) so the fault passes' wall-clock cost is
+    // tracked next to the clean day's. Deterministic like everything
+    // else: the kills, re-admissions, and goodput-lost figure replay
+    // bit-for-bit for a given seed.
+    let faulted = std::env::args().any(|a| a == "--faulted");
+    let mut faulted_sim_per_wall = None;
+    let mut faulted_lost = None;
+    if faulted {
+        let day_s = 4.0;
+        let trace_text = format!(
+            "{} fail gpu 1\n{} fail nvswitch\n{} repair gpu 1\n{} repair nvswitch\n",
+            0.15 * day_s,
+            0.25 * day_s,
+            0.40 * day_s,
+            0.45 * day_s,
+        );
+        let trace = FaultTrace::parse(&trace_text, 1).unwrap();
+        let fcfg = SchedConfig {
+            faults: Some(FaultPlan::new(trace).with_checkpoint_interval(day_s / 40.0)),
+            ..SchedConfig::default()
+        };
+        let jobs = corun_scenario(&topo, &b, &cost, day_s, 11, false);
+        let t0 = Instant::now();
+        let r = run_cluster(&topo, &b, &cost, &jobs, &fcfg).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let sim_per_wall = r.makespan_s / wall;
+        let kills: usize = r.jobs.iter().map(|j| j.kills).sum();
+        faulted_sim_per_wall = Some(sim_per_wall);
+        faulted_lost = Some(r.goodput_lost_s);
+        println!(
+            "\nfaulted day ({day_s:.0}s sim): {:.1} sim-s/wall-s | {} hardware events | \
+             {kills} kill(s) | goodput lost {:.3} GPU-s | clean day {last_sim_per_wall:.1} \
+             sim-s/wall-s",
+            sim_per_wall, r.fault_events, r.goodput_lost_s,
+        );
+        assert!(kills > 0, "the faulted bench day must exercise the kill path");
+        assert!(
+            r.jobs.iter().all(|j| j.completed_s > 0.0),
+            "a killed tenant was never re-admitted in the faulted bench day"
+        );
+    }
+
     let (check, bless) = common::perf_args();
     let fields = [
         ("bench", Json::Str("cluster_day".into())),
         ("status", Json::Str("measured".into())),
         ("sim_s_per_wall_s", Json::Num(last_sim_per_wall)),
         ("events_per_s", Json::Num(last_events_per_s)),
+        (
+            "faulted_sim_s_per_wall_s",
+            faulted_sim_per_wall.map_or(Json::Null, Json::Num),
+        ),
+        (
+            "faulted_goodput_lost_s",
+            faulted_lost.map_or(Json::Null, Json::Num),
+        ),
         (
             "peak_rss_kib",
             common::peak_rss_kib().map_or(Json::Null, Json::Int),

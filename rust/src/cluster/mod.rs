@@ -81,6 +81,20 @@ impl Topology {
         Topology { gpus: (0..n).map(GpuDevice::a100).collect(), has_nvlink: true }
     }
 
+    /// A cluster of `num_nodes` identical A100 nodes flattened into one
+    /// GPU index space (`node * gpus_per_node + local`): the scheduler's
+    /// view of a 16-node fleet, where node-granular failures take down a
+    /// contiguous GPU range. Per-GPU host paths stay per-GPU; the shared
+    /// NVSwitch link approximates the (never-saturated) inter-node fabric
+    /// for the scheduler's co-run traffic.
+    pub fn flat_cluster(num_nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(num_nodes >= 1 && gpus_per_node >= 1);
+        Topology {
+            gpus: (0..num_nodes * gpus_per_node).map(GpuDevice::a100).collect(),
+            has_nvlink: true,
+        }
+    }
+
     /// A V100 box (sm_70): MPS only, no MIG (§3).
     pub fn v100_box(n: usize) -> Self {
         Topology { gpus: (0..n).map(GpuDevice::v100).collect(), has_nvlink: n > 1 }

@@ -183,6 +183,17 @@ impl Engine {
     /// timeline.
     pub fn add_executor(&mut self, gmi: GmiId) -> Result<ExecutorId> {
         if let Some(&i) = self.gmi_index.get(&gmi) {
+            // The index keeps entries for removed GMIs (their executors
+            // are retired, never deleted). Handing such an executor out
+            // here would let a caller silently charge work to a
+            // deregistered GMI — the lifecycle bug behind dangling
+            // post-`remove_gmi` references. Only a live registration may
+            // resolve through the index; re-adding the id goes through
+            // [`Engine::add_gmi`], which re-points the executor first.
+            anyhow::ensure!(
+                self.manager.gmi(gmi).is_some(),
+                "GMI {gmi} was removed; its retired executor cannot be reused"
+            );
             return Ok(i);
         }
         let spec = self.manager.gmi(gmi).with_context(|| format!("GMI {gmi} not registered"))?;
@@ -1194,6 +1205,43 @@ mod tests {
         // Lookups after the churn still dedup to the stable ids.
         assert_eq!(e.add_executor(7).unwrap(), ex2);
         assert_eq!(e.add_group(&[0, 1, 7]).unwrap(), vec![ids[0], ids[1], ex2]);
+    }
+
+    /// Regression: a removed GMI's id must not resolve to its retired
+    /// executor. `gmi_index` keeps entries for retired executors (their
+    /// service history stays attributable), and `add_executor` used to
+    /// hand such an executor straight back out — so a caller holding a
+    /// deregistered id could keep charging work against placement the
+    /// manager no longer validates. Only `add_gmi` (which re-points the
+    /// executor at freshly validated placement) may revive the id.
+    #[test]
+    fn removed_gmi_does_not_resolve_to_its_retired_executor() {
+        let (mut e, ids, cost) = setup(&[0.4, 0.4]);
+        let grad = [OpCharge::recorded(OpKind::TrainGrad { samples: 1024 })];
+        e.charge_steps(&cost, ids[1], 2.0, &grad, 0.0);
+        e.remove_gmi(1).unwrap();
+        // The dangling id is rejected everywhere executors resolve from
+        // GMI ids, not silently aliased to the retired executor.
+        let err = e.add_executor(1).unwrap_err().to_string();
+        assert!(err.contains("removed"), "unexpected error: {err}");
+        assert!(e.add_group(&[0, 1]).is_err(), "group over a removed GMI must fail");
+        // The live sibling still resolves, and a validated re-add revives
+        // the id through the re-point path.
+        assert_eq!(e.add_executor(0).unwrap(), ids[0]);
+        let revived = e
+            .add_gmi(GmiSpec {
+                id: 1,
+                gpu: 0,
+                sm_share: 0.3,
+                mem_gib: 5.0,
+                backend: GmiBackend::Mps,
+                role: Role::Holistic,
+                num_env: 256,
+            })
+            .unwrap();
+        assert_eq!(revived, ids[1], "re-add re-points the stable executor");
+        assert_eq!(e.add_executor(1).unwrap(), revived);
+        e.audit_incremental_state();
     }
 
     #[test]

@@ -54,6 +54,13 @@ pub struct Fabric {
     nvswitch: LinkId,
     cpu: LinkId,
     ib: Option<LinkId>,
+    /// Links taken down explicitly by [`Fabric::fail_link`].
+    failed_links: Vec<bool>,
+    /// GPUs taken down by [`Fabric::fail_gpu`] (a failed GPU also fails
+    /// its host-staged path — nothing can stage through dead HBM).
+    failed_gpus: Vec<bool>,
+    /// One-branch hot-path gate: true iff any link or GPU is failed.
+    has_failures: bool,
 }
 
 impl Fabric {
@@ -87,6 +94,7 @@ impl Fabric {
             id
         });
         let n = links.len();
+        let num_gpus = topo.num_gpus();
         Fabric {
             topo,
             multi,
@@ -97,6 +105,9 @@ impl Fabric {
             nvswitch,
             cpu,
             ib,
+            failed_links: vec![false; n],
+            failed_gpus: vec![false; num_gpus],
+            has_failures: false,
         }
     }
 
@@ -124,6 +135,76 @@ impl Fabric {
         self.ib
     }
 
+    /// Take a link out of service: routes and collective plans that would
+    /// use it become invalid, forcing the planner onto the next-cheapest
+    /// valid plan (or a partition error when none remains).
+    pub fn fail_link(&mut self, id: LinkId) {
+        self.failed_links[id] = true;
+        self.has_failures = true;
+    }
+
+    /// Bring an explicitly failed link back into service.
+    pub fn repair_link(&mut self, id: LinkId) {
+        self.failed_links[id] = false;
+        self.refresh_failure_gate();
+    }
+
+    /// Take a GPU out of service. Its host-staged path fails with it;
+    /// GMIs resident on the GPU must be drained by the scheduler before
+    /// the next plan executes.
+    pub fn fail_gpu(&mut self, gpu: usize) {
+        self.failed_gpus[gpu] = true;
+        self.has_failures = true;
+    }
+
+    /// Bring a failed GPU back into service (its host path recovers too,
+    /// unless the link was also failed explicitly).
+    pub fn repair_gpu(&mut self, gpu: usize) {
+        self.failed_gpus[gpu] = false;
+        self.refresh_failure_gate();
+    }
+
+    fn refresh_failure_gate(&mut self) {
+        self.has_failures =
+            self.failed_links.iter().any(|&f| f) || self.failed_gpus.iter().any(|&f| f);
+    }
+
+    pub fn gpu_failed(&self, gpu: usize) -> bool {
+        self.failed_gpus.get(gpu).copied().unwrap_or(false)
+    }
+
+    /// Whether a link is out of service — either failed explicitly or the
+    /// host path of a failed GPU.
+    pub fn link_failed(&self, id: LinkId) -> bool {
+        if self.failed_links[id] {
+            return true;
+        }
+        match self.links[id].kind {
+            LinkKind::HostPath { gpu } => self.failed_gpus[gpu],
+            _ => false,
+        }
+    }
+
+    pub fn has_failures(&self) -> bool {
+        self.has_failures
+    }
+
+    /// GPUs currently out of service, ascending.
+    pub fn failed_gpu_list(&self) -> Vec<usize> {
+        (0..self.failed_gpus.len()).filter(|&g| self.failed_gpus[g]).collect()
+    }
+
+    /// A plan is valid iff no phase touches an out-of-service link. Always
+    /// true on a healthy fabric.
+    pub fn plan_valid(&self, plan: &Plan) -> bool {
+        if !self.has_failures {
+            return true;
+        }
+        plan.steps
+            .iter()
+            .all(|step| step.uses.iter().all(|u| !self.link_failed(u.link)))
+    }
+
     /// Per-message sender-side submission overhead of a host-staged
     /// transfer (process wakeup + pickling + IPC rendezvous) — the cost a
     /// producer pays on its own timeline per packet it ships.
@@ -136,6 +217,22 @@ impl Fabric {
     /// links until the phase ends, and accumulates per-link traffic.
     /// Returns the completion time.
     pub fn execute(&mut self, plan: &Plan, ready: Clock) -> Clock {
+        // Degraded-fabric guard: replaying a (possibly pooled) plan over a
+        // failed link is a lifecycle bug upstream — the scheduler must
+        // drain tenants off dead hardware before their next plan executes.
+        // Costs one predictable branch on the healthy hot path.
+        if self.has_failures {
+            for step in &plan.steps {
+                for u in &step.uses {
+                    assert!(
+                        !self.link_failed(u.link),
+                        "plan executes over failed link {} — stale pooled plan or \
+                         undrained tenant",
+                        self.links[u.link].name()
+                    );
+                }
+            }
+        }
         // Fast lane for the dominant hot-path shape — one phase over one
         // link (gateway request/response hops): occupancy and traffic are
         // updated in a single batched touch. Same arithmetic as the

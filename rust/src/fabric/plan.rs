@@ -124,11 +124,15 @@ impl Fabric {
         if total <= 1 {
             return Ok(Plan::new());
         }
-        match strategy {
-            ReduceStrategy::MultiProcess => Ok(self.plan_mpr(mpl, bytes)),
-            ReduceStrategy::MultiRing => self.plan_mrr(mpl, bytes),
-            ReduceStrategy::Hierarchical => Ok(self.plan_har(mpl, bytes)),
+        let plan = match strategy {
+            ReduceStrategy::MultiProcess => self.plan_mpr(mpl, bytes),
+            ReduceStrategy::MultiRing => self.plan_mrr(mpl, bytes)?,
+            ReduceStrategy::Hierarchical => self.plan_har(mpl, bytes),
+        };
+        if !self.plan_valid(&plan) {
+            bail!("{strategy} routes over a failed link on the degraded fabric");
         }
+        Ok(plan)
     }
 
     /// Pick the cheapest valid strategy for the layout under the one cost
@@ -136,6 +140,20 @@ impl Fabric {
     /// (which it is validated against: never costlier, never an invalid
     /// MRR).
     pub fn cheapest_allreduce(&self, mpl: &[Vec<usize>], bytes: usize) -> (ReduceStrategy, Plan) {
+        self.try_cheapest_allreduce(mpl, bytes)
+            .expect("MPR is always a valid plan on a healthy fabric")
+    }
+
+    /// Fallible [`Fabric::cheapest_allreduce`] for degraded fabrics: when
+    /// failed links leave NO strategy with a valid route between the
+    /// participants, the group is partitioned and this returns the error a
+    /// caller (the scheduler's rebind path) must handle by evicting or
+    /// re-placing the tenant.
+    pub fn try_cheapest_allreduce(
+        &self,
+        mpl: &[Vec<usize>],
+        bytes: usize,
+    ) -> Result<(ReduceStrategy, Plan)> {
         let mut best: Option<(ReduceStrategy, Plan)> = None;
         for s in [
             ReduceStrategy::MultiProcess,
@@ -151,7 +169,12 @@ impl Fabric {
                 best = Some((s, p));
             }
         }
-        best.expect("MPR is always a valid plan")
+        best.ok_or_else(|| {
+            anyhow::anyhow!(
+                "allreduce participants are partitioned: no reduction strategy has a \
+                 valid route over the degraded fabric"
+            )
+        })
     }
 
     /// MPR: all `g*t` GMIs stage D2H (contending their GPU's host path),

@@ -19,10 +19,18 @@ pub struct Route {
 }
 
 impl Fabric {
-    /// Resolve the route between two GPUs' GMIs.
+    /// Resolve the route between two GPUs' GMIs. On a degraded fabric with
+    /// the NVSwitch down, cross-GPU payloads bounce through host memory on
+    /// both ends instead — slower, but it keeps surviving tenants
+    /// connected.
     pub fn route(&self, src_gpu: usize, dst_gpu: usize) -> Route {
         if src_gpu == dst_gpu {
             Route { hops: vec![self.host_link(dst_gpu)], cross_gpu: false }
+        } else if self.has_failures() && self.link_failed(self.nvswitch_link()) {
+            Route {
+                hops: vec![self.host_link(src_gpu), self.host_link(dst_gpu)],
+                cross_gpu: true,
+            }
         } else {
             Route {
                 hops: vec![self.nvswitch_link(), self.host_link(dst_gpu)],
@@ -106,10 +114,16 @@ impl Fabric {
     pub fn plan_param_push(&self, bytes: usize, dst_gpus: &[usize]) -> Plan {
         let topo = self.topology();
         let mut plan = Plan::new();
-        let nv = bytes as f64 / topo.inter_gpu_bw();
+        // Degraded fabric: with the NVSwitch down the parameter payload
+        // stages through pinned host memory (the CPU path) instead.
+        let (cross_link, nv) = if self.link_failed(self.nvswitch_link()) {
+            (self.cpu_link(), topo.host_transfer_time(bytes, 1))
+        } else {
+            (self.nvswitch_link(), bytes as f64 / topo.inter_gpu_bw())
+        };
         plan.push_step(PlanStep {
             dur: nv,
-            uses: vec![LinkUse { link: self.nvswitch_link(), busy_s: nv, bytes: bytes as u64 }],
+            uses: vec![LinkUse { link: cross_link, busy_s: nv, bytes: bytes as u64 }],
         });
         let host = topo.host_transfer_time(bytes, 1);
         plan.push_step(PlanStep {

@@ -1,0 +1,371 @@
+//! Seeded failure injection and the cluster fault model (ROADMAP item:
+//! "survive a 16-node day"; paper §8 direction).
+//!
+//! A [`FaultTrace`] is a time-sorted list of [`FaultEvent`]s — GPU, node,
+//! NVSwitch, or InfiniBand failures and (optionally) repairs — produced
+//! either by the seeded generator ([`FaultTrace::generate`], a splitmix64
+//! stream with exponential inter-arrival times, bit-reproducible for a
+//! given [`FaultTraceConfig`]) or parsed from a declarative trace file
+//! ([`FaultTrace::parse`], `"<t_s> fail|repair gpu <i>|node <i>|nvswitch|ib"`
+//! lines).
+//!
+//! The scheduler consumes a trace through a [`FaultPlan`]
+//! ([`SchedConfig::faults`](crate::sched::SchedConfig)): events due at a
+//! round boundary are applied to the shared [`Fabric`] (marking links and
+//! GPUs out of service — the planner then reroutes or reports a partition),
+//! tenants with members on dead GPUs are killed and re-queued, and —
+//! when `checkpoint_interval_s` is finite — running tenants are
+//! periodically checkpointed via [`Workload::snapshot`]
+//! (crate::workload::Workload::snapshot), with the capture cost charged to
+//! the tenant's own executors in virtual time, so a killed tenant restarts
+//! from its last checkpoint instead of from scratch.
+
+use anyhow::{bail, Context, Result};
+
+use crate::fabric::Fabric;
+
+/// What fails (or recovers). Node indices address `gpus_per_node`-sized
+/// contiguous GPU ranges of a flattened cluster topology
+/// ([`Topology::flat_cluster`](crate::cluster::Topology::flat_cluster)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    Gpu(usize),
+    Node(usize),
+    NvSwitch,
+    Ib,
+}
+
+impl std::fmt::Display for FaultTarget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultTarget::Gpu(g) => write!(f, "gpu {g}"),
+            FaultTarget::Node(n) => write!(f, "node {n}"),
+            FaultTarget::NvSwitch => f.write_str("nvswitch"),
+            FaultTarget::Ib => f.write_str("ib"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Fail,
+    Repair,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultKind::Fail => "fail",
+            FaultKind::Repair => "repair",
+        })
+    }
+}
+
+/// One scheduled hardware event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t_s: f64,
+    pub kind: FaultKind,
+    pub target: FaultTarget,
+}
+
+impl FaultEvent {
+    /// The GPUs this event takes down (or brings back). Link events return
+    /// an empty range.
+    pub fn gpus(&self, gpus_per_node: usize, num_gpus: usize) -> std::ops::Range<usize> {
+        match self.target {
+            FaultTarget::Gpu(g) if g < num_gpus => g..g + 1,
+            FaultTarget::Node(n) => {
+                let lo = (n * gpus_per_node).min(num_gpus);
+                let hi = ((n + 1) * gpus_per_node).min(num_gpus);
+                lo..hi
+            }
+            _ => 0..0,
+        }
+    }
+
+    /// Mark the event on the fabric: dead GPUs and links invalidate routes
+    /// and collective plans until repaired. An `ib` event on a fabric
+    /// without an InfiniBand link is a no-op.
+    pub fn apply(&self, fabric: &mut Fabric, gpus_per_node: usize) {
+        let num_gpus = fabric.topology().num_gpus();
+        match self.target {
+            FaultTarget::Gpu(_) | FaultTarget::Node(_) => {
+                for g in self.gpus(gpus_per_node, num_gpus) {
+                    match self.kind {
+                        FaultKind::Fail => fabric.fail_gpu(g),
+                        FaultKind::Repair => fabric.repair_gpu(g),
+                    }
+                }
+            }
+            FaultTarget::NvSwitch => {
+                let l = fabric.nvswitch_link();
+                match self.kind {
+                    FaultKind::Fail => fabric.fail_link(l),
+                    FaultKind::Repair => fabric.repair_link(l),
+                }
+            }
+            FaultTarget::Ib => {
+                if let Some(l) = fabric.ib_link() {
+                    match self.kind {
+                        FaultKind::Fail => fabric.fail_link(l),
+                        FaultKind::Repair => fabric.repair_link(l),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Knobs of the seeded trace generator. Mean-time-between-failure values
+/// are per *fleet* (one draw stream per failure class); `f64::INFINITY`
+/// disables a class.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultTraceConfig {
+    pub seed: u64,
+    /// Trace horizon: no failure is emitted at or past this time.
+    pub duration_s: f64,
+    pub num_gpus: usize,
+    pub gpus_per_node: usize,
+    /// Mean virtual seconds between single-GPU failures across the fleet.
+    pub gpu_mtbf_s: f64,
+    /// Mean virtual seconds between whole-node failures.
+    pub node_mtbf_s: f64,
+    /// Mean virtual seconds between fabric-link (NVSwitch) failures.
+    pub link_mtbf_s: f64,
+    /// Mean repair delay after a failure; `None` means nothing recovers.
+    pub repair_after_s: Option<f64>,
+}
+
+/// A time-sorted hardware event schedule over one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultTrace {
+    pub events: Vec<FaultEvent>,
+    /// Node granularity used to resolve `node` targets on a flattened
+    /// cluster topology.
+    pub gpus_per_node: usize,
+}
+
+// splitmix64 — the repo's dependency-free deterministic RNG idiom.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn unit(state: &mut u64) -> f64 {
+    (splitmix64(state) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Exponential inter-arrival draw with the given mean (never 0, never inf).
+fn exp_draw(state: &mut u64, mean_s: f64) -> f64 {
+    -mean_s * (1.0 - unit(state)).max(1e-12).ln()
+}
+
+impl FaultTrace {
+    /// A trace with the events sorted by time (ties keep insertion order).
+    pub fn new(mut events: Vec<FaultEvent>, gpus_per_node: usize) -> Self {
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("fault times are not NaN"));
+        FaultTrace { events, gpus_per_node: gpus_per_node.max(1) }
+    }
+
+    /// Seeded, deterministic generation: three independent Poisson-ish
+    /// streams (GPU / node / NVSwitch-link failures), each an exponential
+    /// inter-arrival walk over one splitmix64 stream, targets drawn
+    /// uniformly. Identical config ⇒ identical trace, bit-for-bit.
+    pub fn generate(cfg: &FaultTraceConfig) -> Self {
+        let mut events = Vec::new();
+        let mut emit = |mtbf: f64, stream: u64, pick: &mut dyn FnMut(&mut u64) -> FaultTarget| {
+            if !mtbf.is_finite() || mtbf <= 0.0 {
+                return;
+            }
+            let mut state = cfg.seed ^ stream;
+            let mut t = exp_draw(&mut state, mtbf);
+            while t < cfg.duration_s {
+                let target = pick(&mut state);
+                events.push(FaultEvent { t_s: t, kind: FaultKind::Fail, target });
+                if let Some(mean_repair) = cfg.repair_after_s {
+                    let back = t + exp_draw(&mut state, mean_repair);
+                    if back < cfg.duration_s {
+                        events.push(FaultEvent { t_s: back, kind: FaultKind::Repair, target });
+                    }
+                }
+                t += exp_draw(&mut state, mtbf);
+            }
+        };
+        let num_gpus = cfg.num_gpus.max(1);
+        let num_nodes = (num_gpus / cfg.gpus_per_node.max(1)).max(1);
+        emit(cfg.gpu_mtbf_s, 0x6770_7573, &mut |s| {
+            FaultTarget::Gpu((splitmix64(s) % num_gpus as u64) as usize)
+        });
+        emit(cfg.node_mtbf_s, 0x6e6f_6465, &mut |s| {
+            FaultTarget::Node((splitmix64(s) % num_nodes as u64) as usize)
+        });
+        emit(cfg.link_mtbf_s, 0x6c69_6e6b, &mut |_| FaultTarget::NvSwitch);
+        FaultTrace::new(events, cfg.gpus_per_node)
+    }
+
+    /// Parse a declarative trace file: one event per line,
+    /// `"<t_s> fail|repair gpu <i>|node <i>|nvswitch|ib"`; blank lines and
+    /// `#` comments are skipped.
+    pub fn parse(text: &str, gpus_per_node: usize) -> Result<Self> {
+        let mut events = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let err = || format!("fault trace line {}: {raw:?}", lineno + 1);
+            let t_s: f64 = it
+                .next()
+                .with_context(err)?
+                .parse()
+                .with_context(err)?;
+            let kind = match it.next().with_context(err)? {
+                "fail" => FaultKind::Fail,
+                "repair" => FaultKind::Repair,
+                other => bail!("unknown fault kind {other:?} ({})", err()),
+            };
+            let target = match it.next().with_context(err)? {
+                "gpu" => FaultTarget::Gpu(it.next().with_context(err)?.parse().with_context(err)?),
+                "node" => {
+                    FaultTarget::Node(it.next().with_context(err)?.parse().with_context(err)?)
+                }
+                "nvswitch" => FaultTarget::NvSwitch,
+                "ib" => FaultTarget::Ib,
+                other => bail!("unknown fault target {other:?} ({})", err()),
+            };
+            if it.next().is_some() {
+                bail!("trailing tokens ({})", err());
+            }
+            events.push(FaultEvent { t_s, kind, target });
+        }
+        Ok(FaultTrace::new(events, gpus_per_node))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Render back to the declarative line format (round-trips `parse`).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for ev in &self.events {
+            let _ = writeln!(out, "{} {} {}", ev.t_s, ev.kind, ev.target);
+        }
+        out
+    }
+}
+
+/// The scheduler's fault-tolerance configuration: the hardware event
+/// schedule plus the checkpoint cadence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub trace: FaultTrace,
+    /// Virtual seconds between [`Workload::snapshot`]
+    /// (crate::workload::Workload::snapshot) captures of every running
+    /// tenant. The capture cost (one host-staged parameter dump per
+    /// member) is charged to the tenant's own executors.
+    /// `f64::INFINITY` disables checkpointing — a killed tenant then
+    /// restarts from scratch.
+    pub checkpoint_interval_s: f64,
+}
+
+impl FaultPlan {
+    pub fn new(trace: FaultTrace) -> Self {
+        FaultPlan { trace, checkpoint_interval_s: f64::INFINITY }
+    }
+
+    pub fn with_checkpoint_interval(mut self, interval_s: f64) -> Self {
+        self.checkpoint_interval_s = interval_s;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+
+    fn cfg(seed: u64) -> FaultTraceConfig {
+        FaultTraceConfig {
+            seed,
+            duration_s: 10.0,
+            num_gpus: 8,
+            gpus_per_node: 2,
+            gpu_mtbf_s: 2.0,
+            node_mtbf_s: 6.0,
+            link_mtbf_s: 8.0,
+            repair_after_s: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_sorted() {
+        let a = FaultTrace::generate(&cfg(7));
+        let b = FaultTrace::generate(&cfg(7));
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.events.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        assert!(a.events.iter().all(|e| e.t_s < 10.0));
+        let c = FaultTrace::generate(&cfg(8));
+        assert_ne!(a, c, "different seeds give different traces");
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        let text = "0.25 fail gpu 3\n0.4 fail node 1\n0.6 repair gpu 3\n0.8 fail nvswitch\n";
+        let t = FaultTrace::parse(text, 2).unwrap();
+        assert_eq!(t.events.len(), 4);
+        assert_eq!(t.events[1].target, FaultTarget::Node(1));
+        let again = FaultTrace::parse(&t.to_text(), 2).unwrap();
+        assert_eq!(t, again);
+        // comments + blank lines + sorting
+        let t2 = FaultTrace::parse("# hi\n\n0.5 fail gpu 1 # inline\n0.1 fail ib\n", 1).unwrap();
+        assert_eq!(t2.events[0].target, FaultTarget::Ib);
+        // malformed lines error
+        assert!(FaultTrace::parse("0.5 explode gpu 1", 1).is_err());
+        assert!(FaultTrace::parse("0.5 fail gpu", 1).is_err());
+        assert!(FaultTrace::parse("x fail gpu 1", 1).is_err());
+    }
+
+    #[test]
+    fn apply_marks_and_repairs_fabric() {
+        let mut f = Fabric::single_node(Topology::flat_cluster(2, 2));
+        let ev = |t_s, kind, target| FaultEvent { t_s, kind, target };
+        ev(0.0, FaultKind::Fail, FaultTarget::Node(1)).apply(&mut f, 2);
+        assert!(f.gpu_failed(2) && f.gpu_failed(3) && !f.gpu_failed(0));
+        assert_eq!(f.failed_gpu_list(), vec![2, 3]);
+        // a dead GPU's host path is out of service
+        assert!(f.link_failed(f.host_link(2)));
+        ev(0.0, FaultKind::Fail, FaultTarget::NvSwitch).apply(&mut f, 2);
+        assert!(f.link_failed(f.nvswitch_link()));
+        ev(1.0, FaultKind::Repair, FaultTarget::Node(1)).apply(&mut f, 2);
+        ev(1.0, FaultKind::Repair, FaultTarget::NvSwitch).apply(&mut f, 2);
+        assert!(!f.has_failures());
+        // ib on a single-node fabric is a no-op
+        ev(2.0, FaultKind::Fail, FaultTarget::Ib).apply(&mut f, 2);
+        assert!(!f.has_failures());
+    }
+
+    #[test]
+    fn degraded_planner_reroutes_then_partitions() {
+        let mut f = Fabric::single_node(Topology::dgx_a100(4));
+        let mpl: Vec<Vec<usize>> = (0..4).map(|g| vec![2 * g, 2 * g + 1]).collect();
+        let bytes = 6 << 20;
+        let (healthy, _) = f.try_cheapest_allreduce(&mpl, bytes).unwrap();
+        f.fail_link(f.nvswitch_link());
+        let (degraded, plan) = f.try_cheapest_allreduce(&mpl, bytes).unwrap();
+        assert_ne!(healthy, degraded, "NVSwitch death must force a different strategy");
+        assert!(f.plan_valid(&plan));
+        // killing every host path too partitions the group
+        for g in 0..4 {
+            f.fail_gpu(g);
+        }
+        assert!(f.try_cheapest_allreduce(&mpl, bytes).is_err());
+    }
+}

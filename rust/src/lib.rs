@@ -136,6 +136,30 @@
 //! configuration beats or matches both by measurement. Every decision is
 //! bit-reproducible (`rust/tests/prop_tune.rs`); `--autotune` wires it
 //! into the `train-sync`, `train-async`, and `serve` CLI paths.
+//!
+//! ## Fault tolerance
+//!
+//! [`fault`] makes the shared cluster survivable: a seeded, deterministic
+//! failure-trace generator ([`fault::FaultTrace::generate`] — splitmix64
+//! streams with exponential inter-arrival per failure class) or a
+//! declarative trace file ([`fault::FaultTrace::parse`]) schedules GPU,
+//! whole-node, NVSwitch, and InfiniBand failures (and repairs), which the
+//! scheduler applies to the shared [`fabric::Fabric`] between rounds
+//! ([`sched::SchedConfig`] `faults`). Dead GPUs and links invalidate
+//! routes: the collective planner falls to the next-cheapest valid plan
+//! ([`fabric::Fabric::try_cheapest_allreduce`]) or reports a partition,
+//! running tenants are re-planned over the degraded fabric, tenants with
+//! members on dead hardware are killed and re-queued, and a failed GPU is
+//! never a placement target. With a finite `checkpoint_interval_s`, every
+//! running tenant is periodically captured through
+//! [`workload::Workload::snapshot`] — the capture cost charged to the
+//! tenant's own executor clocks in virtual time — so a killed tenant is
+//! re-admitted onto surviving capacity resumed from its last checkpoint,
+//! bounding goodput loss to one interval per kill. Per-job kills, lost
+//! GPU-seconds, recovery latency, and checkpoint overhead land in
+//! [`sched::JobReport`]; the whole faulted day is bit-reproducible
+//! (`rust/tests/prop_fault.rs`, the pinned golden in
+//! `rust/tests/determinism.rs`, and `examples/failure_day.rs`).
 
 pub mod baselines;
 pub mod channels;
@@ -145,6 +169,7 @@ pub mod config;
 pub mod drl;
 pub mod engine;
 pub mod fabric;
+pub mod fault;
 pub mod gmi;
 pub mod mapping;
 pub mod metrics;

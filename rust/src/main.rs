@@ -28,6 +28,7 @@ use gmi_drl::drl::a3c::{run_async, AsyncConfig};
 use gmi_drl::drl::serving::{run_serving, ServingConfig};
 use gmi_drl::drl::sync::{run_sync, SyncConfig};
 use gmi_drl::drl::Compute;
+use gmi_drl::fault::{FaultPlan, FaultTrace};
 use gmi_drl::gmi::GmiBackend;
 use gmi_drl::mapping::{
     build_async_layout, build_gateway_fleet, build_serving_layout, build_sync_layout,
@@ -226,6 +227,17 @@ MULTI-TENANT CO-RUN (multi):
   --static                    static partitioning baseline: tenants pinned
                               to disjoint GPU halves, no preemption
   --seed N                    trace seed (default 7)
+  --fault-trace FILE          inject hardware failures from a declarative
+                              trace file: one event per line,
+                              \"<t_s> fail|repair gpu <i>|node <i>|nvswitch|ib\"
+                              (# comments allowed). Killed tenants are
+                              re-admitted onto surviving capacity
+  --checkpoint-interval S     periodic Workload snapshots every S virtual
+                              seconds, cost charged to the tenant's own
+                              executors; killed tenants resume from the
+                              last checkpoint (default off)
+  --gpus-per-node N           node granularity for \"node <i>\" fault
+                              targets (default 2)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -628,9 +640,31 @@ fn cmd_multi(args: &Args) -> Result<()> {
     let duration: f64 = args.get("duration", 1.0)?;
     let seed: u64 = args.get("seed", 7)?;
     let partitioned = args.flag("static");
+    let ckpt_s: f64 = args.get("checkpoint-interval", 0.0)?;
+    let fault_file = args.str("fault-trace", "");
+    let faults = if fault_file.is_empty() && ckpt_s <= 0.0 {
+        None
+    } else {
+        let gpus_per_node: usize = args.get("gpus-per-node", 2)?;
+        let trace = if fault_file.is_empty() {
+            // Checkpointing without injected failures is still meaningful:
+            // the overhead column shows what the insurance costs.
+            FaultTrace::new(Vec::new(), gpus_per_node)
+        } else {
+            let text = std::fs::read_to_string(&fault_file)
+                .with_context(|| format!("reading fault trace {fault_file}"))?;
+            FaultTrace::parse(&text, gpus_per_node)?
+        };
+        let mut plan = FaultPlan::new(trace);
+        if ckpt_s > 0.0 {
+            plan = plan.with_checkpoint_interval(ckpt_s);
+        }
+        Some(plan)
+    };
     let cfg = SchedConfig {
         quantum_s: args.get("quantum-ms", 20.0)? / 1e3,
         preemptive: !partitioned,
+        faults,
         ..SchedConfig::default()
     };
     let jobs = corun_scenario(&topo, &bench, &cost, duration, seed, partitioned);
@@ -651,6 +685,12 @@ fn cmd_multi(args: &Args) -> Result<()> {
         r.fairness,
         r.peak_gpu_share,
     );
+    if cfg.faults.is_some() {
+        println!(
+            "faults: {} hardware events applied | goodput lost to kills {:.3} GPU-s",
+            r.fault_events, r.goodput_lost_s,
+        );
+    }
     Ok(())
 }
 

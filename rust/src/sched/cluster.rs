@@ -59,6 +59,7 @@ use crate::config::BenchInfo;
 use crate::drl::Compute;
 use crate::engine::{Engine, ExecutorId};
 use crate::fabric::Fabric;
+use crate::fault::{FaultKind, FaultPlan};
 use crate::gmi::{GmiBackend, GmiId, GmiSpec};
 use crate::metrics::{jain_index, RunMetrics, Table};
 use crate::vtime::CostModel;
@@ -79,13 +80,27 @@ pub struct SchedConfig {
     pub restore_frac: f64,
     /// Hard cap on scheduling rounds (runaway guard).
     pub max_rounds: usize,
+    /// Failure injection + checkpoint cadence ([`FaultPlan`]); `None`
+    /// runs the cluster failure-free (the historical behavior,
+    /// bit-identical timelines).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { quantum_s: 0.02, preemptive: true, restore_frac: 0.5, max_rounds: 1_000_000 }
+        SchedConfig {
+            quantum_s: 0.02,
+            preemptive: true,
+            restore_frac: 0.5,
+            max_rounds: 1_000_000,
+            faults: None,
+        }
     }
 }
+
+/// Sentinel [`JobId`] on cluster-scoped timeline entries (hardware
+/// fail/repair events, which belong to no tenant).
+pub const CLUSTER_EVENT: JobId = JobId::MAX;
 
 /// What one timeline entry records.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,6 +125,17 @@ pub enum SchedAction {
     Restore,
     /// Job finished and released its GMIs.
     Complete,
+    /// Hardware failed (cluster-scoped entry: `job` is [`CLUSTER_EVENT`]).
+    Fail,
+    /// Hardware recovered (cluster-scoped entry).
+    Repair,
+    /// A running tenant's program state was captured; the capture cost was
+    /// charged to the tenant's own member clocks.
+    Checkpoint,
+    /// A tenant lost members to a hardware failure (or was partitioned by
+    /// one): its live program was discarded and it re-queued to resume
+    /// from its last checkpoint.
+    Kill,
 }
 
 impl std::fmt::Display for SchedAction {
@@ -124,6 +150,10 @@ impl std::fmt::Display for SchedAction {
             SchedAction::Shrink => "shrink",
             SchedAction::Restore => "restore",
             SchedAction::Complete => "complete",
+            SchedAction::Fail => "fail",
+            SchedAction::Repair => "repair",
+            SchedAction::Checkpoint => "checkpoint",
+            SchedAction::Kill => "kill",
         })
     }
 }
@@ -149,7 +179,7 @@ pub fn sched_table(events: &[SchedEvent]) -> Table {
     for e in events {
         t.row(vec![
             format!("{:.3}", e.t_s),
-            e.job.to_string(),
+            if e.job == CLUSTER_EVENT { "-".into() } else { e.job.to_string() },
             e.action.to_string(),
             e.members.to_string(),
             format!("{:.2}", e.share),
@@ -190,6 +220,18 @@ pub struct JobReport {
     /// admitted provisioning).
     pub share_at_completion: f64,
     pub gmis_at_completion: usize,
+    /// Hardware-failure kills suffered (each discarded the live program
+    /// and re-queued the tenant).
+    pub kills: usize,
+    /// Busy GPU-seconds of un-checkpointed service discarded by kills —
+    /// the goodput the failures cost this job.
+    pub goodput_lost_s: f64,
+    /// Total virtual seconds between each kill and the re-admission that
+    /// resumed the job.
+    pub recovery_s: f64,
+    /// Total checkpoint capture cost charged to this job's member clocks
+    /// (GPU-seconds).
+    pub checkpoint_s: f64,
 }
 
 /// Everything one [`run_cluster`] call produced.
@@ -210,6 +252,10 @@ pub struct ClusterRunResult {
     pub peak_gpu_share: f64,
     /// Worst per-GPU memory sum ever observed (GiB).
     pub peak_gpu_mem_gib: f64,
+    /// Hardware fail/repair events applied from the fault trace.
+    pub fault_events: usize,
+    /// Cluster-wide busy GPU-seconds discarded by failure kills.
+    pub goodput_lost_s: f64,
 }
 
 impl ClusterRunResult {
@@ -230,6 +276,10 @@ impl ClusterRunResult {
             "preempt",
             "restore",
             "xjob (ms)",
+            "kills",
+            "lost (s)",
+            "recov (s)",
+            "ckpt (s)",
         ]);
         for j in &self.jobs {
             t.row(vec![
@@ -247,6 +297,10 @@ impl ClusterRunResult {
                 j.preemptions.to_string(),
                 j.restores.to_string(),
                 format!("{:.1}", j.xjob_interference_s * 1e3),
+                j.kills.to_string(),
+                format!("{:.3}", j.goodput_lost_s),
+                format!("{:.3}", j.recovery_s),
+                format!("{:.3}", j.checkpoint_s),
             ]);
         }
         t
@@ -288,6 +342,19 @@ struct Tenant {
     /// only scans flagged tenants, so a steady-state round touches no
     /// tenant state at all.
     needs_restore: bool,
+    /// Last periodic [`Workload::snapshot`] capture. A kill resumes from
+    /// this (via a fresh re-snapshot, so one checkpoint survives repeated
+    /// kills); `None` means a kill restarts the job from scratch.
+    ckpt: Option<Box<dyn Workload>>,
+    kills: usize,
+    /// Set at kill, cleared (into `recovery_s`) at re-admission.
+    killed_at: Option<f64>,
+    recovery_s: f64,
+    checkpoint_s: f64,
+    goodput_lost_s: f64,
+    /// `engine.job_busy_s` at the last checkpoint (or [re-]admission):
+    /// the baseline for goodput-lost accounting at a kill.
+    busy_at_ckpt: f64,
 }
 
 impl Tenant {
@@ -309,6 +376,13 @@ impl Tenant {
             gmis_at_completion: 0,
             grown: Vec::new(),
             needs_restore: false,
+            ckpt: None,
+            kills: 0,
+            killed_at: None,
+            recovery_s: 0.0,
+            checkpoint_s: 0.0,
+            goodput_lost_s: 0.0,
+            busy_at_ckpt: 0.0,
         }
     }
 }
@@ -332,6 +406,10 @@ struct Cluster<'a> {
     placement_dirty: bool,
     /// Reusable tenant-ordering buffer for the per-round passes.
     order_scratch: Vec<usize>,
+    /// Next unapplied event of `cfg.faults` (the trace is time-sorted).
+    fault_cursor: usize,
+    /// Next periodic checkpoint boundary (INFINITY when disabled).
+    next_checkpoint_s: f64,
 }
 
 /// Admit, co-schedule, and run `jobs` to completion on one shared
@@ -346,6 +424,12 @@ pub fn run_cluster(
 ) -> Result<ClusterRunResult> {
     anyhow::ensure!(cfg.quantum_s > 0.0, "scheduling quantum must be positive");
     anyhow::ensure!(!jobs.is_empty(), "no jobs submitted");
+    if let Some(p) = &cfg.faults {
+        anyhow::ensure!(
+            p.checkpoint_interval_s > 0.0,
+            "checkpoint interval must be positive (f64::INFINITY disables checkpointing)"
+        );
+    }
     let mut seen = BTreeSet::new();
     for j in jobs {
         j.validate(topo)?;
@@ -367,6 +451,12 @@ pub fn run_cluster(
         peak_gpu_mem: 0.0,
         placement_dirty: true,
         order_scratch: Vec::new(),
+        fault_cursor: 0,
+        next_checkpoint_s: cfg
+            .faults
+            .as_ref()
+            .map(|p| p.checkpoint_interval_s)
+            .unwrap_or(f64::INFINITY),
     };
     cluster.run()?;
     Ok(cluster.into_result())
@@ -388,6 +478,11 @@ impl Cluster<'_> {
             // Computed the same way the next round's `now` will be, so
             // round boundaries are bit-identical across rounds.
             let round_end = (round + 1) as f64 * q;
+            // Hardware events land first (pessimistic: a failure at the
+            // checkpoint boundary loses the full interval), then the
+            // checkpoint pass captures the survivors.
+            self.fault_pass(now);
+            self.checkpoint_pass(now);
             if self.cfg.preemptive {
                 self.slo_decisions(now);
             }
@@ -465,17 +560,197 @@ impl Cluster<'_> {
     }
 
     /// Re-bind a running tenant's program after a membership or
-    /// provisioning change (the preempt/resize/restore hook).
-    fn rebind(&mut self, idx: usize) {
+    /// provisioning change (the preempt/resize/restore hook). On a
+    /// healthy fabric a re-bind of placed members cannot fail; on a
+    /// degraded one it can (the planner finds no valid route), which
+    /// kills the tenant back to its last checkpoint.
+    fn rebind(&mut self, idx: usize, now: f64) {
         if self.tenants[idx].state != State::Running {
             return;
         }
         let Some(mut program) = self.tenants[idx].program.take() else { return };
         let execs = self.tenants[idx].execs.clone();
-        program
-            .bind(&self.engine, &mut self.fabric, self.bench, &execs)
-            .expect("re-bind of a placed tenant cannot fail");
-        self.tenants[idx].program = Some(program);
+        match program.bind(&self.engine, &mut self.fabric, self.bench, &execs) {
+            Ok(()) => self.tenants[idx].program = Some(program),
+            Err(e) => {
+                assert!(
+                    self.fabric.has_failures(),
+                    "re-bind of a placed tenant failed on a healthy fabric: {e}"
+                );
+                drop(program);
+                self.kill_tenant(idx, now, format!("re-bind failed on degraded fabric ({e})"));
+            }
+        }
+    }
+
+    // ---- failure injection / checkpoint / recovery ----
+
+    /// Timeline entry that belongs to the cluster, not a tenant.
+    fn push_cluster_event(&mut self, t_s: f64, action: SchedAction, detail: String) {
+        self.events.push(SchedEvent {
+            t_s,
+            job: CLUSTER_EVENT,
+            action,
+            members: 0,
+            share: 0.0,
+            detail,
+        });
+    }
+
+    /// Apply every fault-trace event due by `now` to the fabric, kill
+    /// tenants left with members on dead GPUs, and re-plan the survivors
+    /// against the changed fabric (next-cheapest valid routes; a tenant
+    /// the planner cannot route at all — partitioned — is killed too).
+    fn fault_pass(&mut self, now: f64) {
+        let cfg = self.cfg;
+        let Some(plan) = cfg.faults.as_ref() else { return };
+        let events = &plan.trace.events;
+        let mut changed = false;
+        while self.fault_cursor < events.len() && events[self.fault_cursor].t_s <= now + 1e-12 {
+            let ev = events[self.fault_cursor];
+            self.fault_cursor += 1;
+            ev.apply(&mut self.fabric, plan.trace.gpus_per_node);
+            changed = true;
+            let action = match ev.kind {
+                FaultKind::Fail => SchedAction::Fail,
+                FaultKind::Repair => SchedAction::Repair,
+            };
+            self.push_cluster_event(now, action, format!("{} (trace t={:.4})", ev.target, ev.t_s));
+        }
+        if !changed {
+            return;
+        }
+        if self.fabric.has_failures() {
+            for idx in 0..self.tenants.len() {
+                if self.tenants[idx].state != State::Running {
+                    continue;
+                }
+                let on_dead_gpu = self.tenants[idx].gmis.iter().any(|&g| {
+                    self.engine
+                        .manager()
+                        .gmi(g)
+                        .map_or(false, |s| self.fabric.gpu_failed(s.gpu))
+                });
+                if on_dead_gpu {
+                    self.kill_tenant(idx, now, "member GPU failed".into());
+                }
+            }
+        }
+        self.replan_running(now);
+    }
+
+    /// Swap every running tenant's program for an unbound snapshot and
+    /// re-bind it, so placement-derived plans (collective routes, pooled
+    /// dispatch plans) are recomputed against the fabric as it now is —
+    /// both after failures (reroute or die) and after repairs (take the
+    /// cheap routes back). Run state carries over; a program without
+    /// snapshot support falls back to a plain re-bind.
+    fn replan_running(&mut self, now: f64) {
+        for idx in 0..self.tenants.len() {
+            if self.tenants[idx].state != State::Running {
+                continue;
+            }
+            let Some(program) = self.tenants[idx].program.take() else { continue };
+            let mut fresh = program.snapshot().unwrap_or(program);
+            let execs = self.tenants[idx].execs.clone();
+            match fresh.bind(&self.engine, &mut self.fabric, self.bench, &execs) {
+                Ok(()) => self.tenants[idx].program = Some(fresh),
+                Err(e) => {
+                    drop(fresh);
+                    self.kill_tenant(idx, now, format!("partitioned by fabric failure ({e})"));
+                }
+            }
+        }
+    }
+
+    /// Periodic program-state capture: snapshot every running tenant and
+    /// charge the capture (one host-staged parameter dump per member) to
+    /// the tenant's own executors — co-tenants never pay for another
+    /// job's checkpoints.
+    fn checkpoint_pass(&mut self, now: f64) {
+        if now + 1e-12 < self.next_checkpoint_s {
+            return;
+        }
+        let interval = self
+            .cfg
+            .faults
+            .as_ref()
+            .map(|p| p.checkpoint_interval_s)
+            .expect("finite next_checkpoint_s implies a fault plan");
+        while self.next_checkpoint_s <= now + 1e-12 {
+            self.next_checkpoint_s += interval;
+        }
+        let cost_s =
+            self.engine.topology().host_transfer_time(self.bench.num_params * 4, 1);
+        for idx in 0..self.tenants.len() {
+            if self.tenants[idx].state != State::Running || self.tenants[idx].done {
+                continue;
+            }
+            let Some(snap) = self.tenants[idx].program.as_ref().and_then(|p| p.snapshot())
+            else {
+                continue;
+            };
+            for k in 0..self.tenants[idx].execs.len() {
+                let ex = self.tenants[idx].execs[k];
+                self.engine.pay(ex, cost_s);
+            }
+            let members = self.tenants[idx].execs.len();
+            let job = self.tenants[idx].spec.id;
+            let busy = self.engine.job_busy_s(job);
+            let t = &mut self.tenants[idx];
+            t.ckpt = Some(snap);
+            t.checkpoint_s += cost_s * members as f64;
+            t.busy_at_ckpt = busy;
+            self.push_event(
+                now,
+                idx,
+                SchedAction::Checkpoint,
+                format!("captured; {cost_s:.5}s charged to each of {members} member(s)"),
+            );
+        }
+    }
+
+    /// Release a tenant's members back to the cluster (the shared tail of
+    /// completion and kill).
+    fn release_members(&mut self, idx: usize) {
+        let job = self.tenants[idx].spec.id;
+        self.engine.clear_job(job);
+        let gmis: Vec<GmiId> = self.tenants[idx].gmis.drain(..).collect();
+        self.tenants[idx].execs.clear();
+        for g in gmis {
+            let _ = self.engine.remove_gmi(g);
+        }
+        self.placement_dirty = true;
+    }
+
+    /// A hardware failure took this tenant down: discard the live program
+    /// (its un-checkpointed service is the goodput lost), release every
+    /// member, and re-queue. The admissions pass re-admits it onto
+    /// surviving capacity, resuming from `ckpt` when one exists.
+    fn kill_tenant(&mut self, idx: usize, now: f64, detail: String) {
+        if self.tenants[idx].state != State::Running {
+            return;
+        }
+        let job = self.tenants[idx].spec.id;
+        let lost = (self.engine.job_busy_s(job) - self.tenants[idx].busy_at_ckpt).max(0.0);
+        drop(self.tenants[idx].program.take());
+        self.release_members(idx);
+        let t = &mut self.tenants[idx];
+        t.state = State::Queued;
+        t.done = false;
+        t.kills += 1;
+        t.killed_at = Some(now);
+        t.goodput_lost_s += lost;
+        t.grown.clear();
+        t.needs_restore = false;
+        t.queued_logged = false;
+        let from = if t.ckpt.is_some() { "last checkpoint" } else { "scratch" };
+        self.push_event(
+            now,
+            idx,
+            SchedAction::Kill,
+            format!("{detail}; {lost:.4}s service lost, will resume from {from}"),
+        );
     }
 
     // ---- capacity / placement ----
@@ -520,6 +795,10 @@ impl Cluster<'_> {
         };
         let mut best: Option<(usize, f64)> = None;
         for &g in &allowed {
+            // A dead GPU is never a placement target, no matter how free.
+            if self.fabric.gpu_failed(g) {
+                continue;
+            }
             let (free_sm, free_mem) = self.gpu_free(g);
             if free_sm + 1e-9 >= share && free_mem + 1e-9 >= mem {
                 if best.map_or(true, |(_, f)| free_sm > f + 1e-12) {
@@ -607,7 +886,7 @@ impl Cluster<'_> {
                 self.placement_dirty = true;
                 self.tenants[i].needs_restore = true;
                 self.tenants[i].preemptions += 1;
-                self.rebind(i);
+                self.rebind(i, now);
                 self.push_event(
                     now,
                     i,
@@ -656,7 +935,7 @@ impl Cluster<'_> {
         t.preemptions += 1;
         t.needs_restore = true;
         self.placement_dirty = true;
-        self.rebind(i);
+        self.rebind(i, now);
         self.push_event(now, i, SchedAction::Evict, format!("evicted member GMI {gmi}"));
         true
     }
@@ -694,25 +973,66 @@ impl Cluster<'_> {
             }
         }
         if ok {
+            let resuming = self.tenants[idx].kills > 0;
             let (job, floor) = {
                 let t = &mut self.tenants[idx];
                 t.state = State::Running;
-                t.admitted_s = now;
+                // Re-admissions after a kill keep the original admission
+                // time (wait_s stays queue wait; the outage is recovery_s).
+                if !resuming {
+                    t.admitted_s = now;
+                }
                 (t.spec.id, t.spec.floor_share())
             };
             self.engine.set_job_floor(job, floor);
             // Admission-time auto-tuning (Training tenants that requested
             // it) — BEFORE the program is built, so the tuned minibatch
-            // count is what the tenant runs with.
-            self.tune_at_admission(idx, now)?;
+            // count is what the tenant runs with. A resumed tenant keeps
+            // its first admission's locked choice instead of re-probing.
+            if !resuming {
+                self.tune_at_admission(idx, now)?;
+            }
             // Build the workload program and bind it to the placed
-            // members: from here on the tenant is just stepped.
-            let mut program = self.tenants[idx].spec.build_program();
+            // members: a killed tenant resumes from a re-snapshot of its
+            // last checkpoint (the stored one survives further kills),
+            // anything else starts fresh. From here on the tenant is just
+            // stepped.
+            let mut program = match self.tenants[idx].ckpt.as_ref() {
+                Some(c) => c.snapshot().expect("a stored checkpoint can re-snapshot"),
+                None => self.tenants[idx].spec.build_program(),
+            };
             let execs = self.tenants[idx].execs.clone();
-            program.bind(&self.engine, &mut self.fabric, self.bench, &execs)?;
+            if let Err(e) = program.bind(&self.engine, &mut self.fabric, self.bench, &execs) {
+                // Only a degraded fabric can make freshly validated
+                // placement unbindable (partitioned members): back the
+                // admission out and retry on a later round.
+                anyhow::ensure!(
+                    self.fabric.has_failures(),
+                    "bind of a freshly placed tenant failed on a healthy fabric: {e}"
+                );
+                drop(program);
+                self.release_members(idx);
+                let t = &mut self.tenants[idx];
+                t.state = State::Queued;
+                if !t.queued_logged {
+                    t.queued_logged = true;
+                    self.push_event(now, idx, SchedAction::Queue, format!("unbindable: {e}"));
+                }
+                return Ok(());
+            }
             self.tenants[idx].program = Some(program);
+            self.tenants[idx].busy_at_ckpt = self.engine.job_busy_s(job);
+            if let Some(killed) = self.tenants[idx].killed_at.take() {
+                self.tenants[idx].recovery_s += now - killed;
+            }
             let n = self.tenants[idx].gmis.len();
-            self.push_event(now, idx, SchedAction::Admit, format!("placed {n} member(s)"));
+            let detail = if resuming {
+                let src = if self.tenants[idx].ckpt.is_some() { "last checkpoint" } else { "scratch" };
+                format!("re-admitted {n} member(s) on surviving capacity, resumed from {src}")
+            } else {
+                format!("placed {n} member(s)")
+            };
+            self.push_event(now, idx, SchedAction::Admit, detail);
         } else if !self.tenants[idx].queued_logged {
             self.tenants[idx].queued_logged = true;
             self.push_event(now, idx, SchedAction::Queue, "insufficient capacity".into());
@@ -804,7 +1124,7 @@ impl Cluster<'_> {
         }
         if let Some(g) = placed {
             self.tenants[idx].grown.push(g);
-            self.rebind(idx);
+            self.rebind(idx, now);
             self.push_event(
                 now,
                 idx,
@@ -829,7 +1149,7 @@ impl Cluster<'_> {
         // provisioning when evictions interleaved with growth.
         t.needs_restore = true;
         self.placement_dirty = true;
-        self.rebind(idx);
+        self.rebind(idx, now);
         self.push_event(
             now,
             idx,
@@ -868,7 +1188,7 @@ impl Cluster<'_> {
             if self.tenants[idx].gmis.len() < initial {
                 if let Some(g) = self.place_one(idx, now) {
                     self.tenants[idx].restores += 1;
-                    self.rebind(idx);
+                    self.rebind(idx, now);
                     self.push_event(
                         now,
                         idx,
@@ -903,7 +1223,7 @@ impl Cluster<'_> {
             if grew > 0 {
                 self.placement_dirty = true;
                 self.tenants[idx].restores += 1;
-                self.rebind(idx);
+                self.rebind(idx, now);
                 self.push_event(
                     now,
                     idx,
@@ -949,13 +1269,7 @@ impl Cluster<'_> {
         let job = self.tenants[idx].spec.id;
         let share = self.engine.manager().job_share(job);
         let members = self.tenants[idx].gmis.len();
-        self.engine.clear_job(job);
-        let gmis: Vec<GmiId> = self.tenants[idx].gmis.drain(..).collect();
-        self.tenants[idx].execs.clear();
-        for g in gmis {
-            let _ = self.engine.remove_gmi(g);
-        }
-        self.placement_dirty = true;
+        self.release_members(idx);
         let t = &mut self.tenants[idx];
         t.state = State::Done;
         t.completed_s = at;
@@ -1007,8 +1321,13 @@ impl Cluster<'_> {
                 xjob_interference_s: xjob,
                 share_at_completion: t.share_at_completion,
                 gmis_at_completion: t.gmis_at_completion,
+                kills: t.kills,
+                goodput_lost_s: t.goodput_lost_s,
+                recovery_s: t.recovery_s,
+                checkpoint_s: t.checkpoint_s,
             });
         }
+        let goodput_lost_s = reports.iter().map(|j| j.goodput_lost_s).sum();
         ClusterRunResult {
             jobs: reports,
             events: self.events,
@@ -1017,6 +1336,8 @@ impl Cluster<'_> {
             fairness: jain_index(&busies),
             peak_gpu_share: self.peak_gpu_share,
             peak_gpu_mem_gib: self.peak_gpu_mem,
+            fault_events: self.fault_cursor,
+            goodput_lost_s,
         }
     }
 }

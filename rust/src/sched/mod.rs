@@ -36,6 +36,7 @@ mod job;
 
 pub use cluster::{
     run_cluster, sched_table, ClusterRunResult, JobReport, SchedAction, SchedConfig, SchedEvent,
+    CLUSTER_EVENT,
 };
 pub use job::{JobId, JobKind, JobSpec};
 

@@ -208,6 +208,20 @@ impl DispatchPlans {
     pub fn step_caps(&self) -> (usize, usize) {
         (self.req.steps.capacity(), self.resp.steps.capacity())
     }
+
+    /// Drop the buffered hops (keeping the allocations) — called whenever
+    /// the fleet the plans were built against changes (autoscale shrink,
+    /// GMI death, re-placement), so the in-place single-hop reuse path can
+    /// never replay a hop over a link that no longer serves the fleet.
+    pub fn clear(&mut self) {
+        self.req.steps.clear();
+        self.resp.steps.clear();
+    }
+
+    /// Whether both pooled plans still route over in-service links.
+    pub fn valid_for(&self, fabric: &Fabric) -> bool {
+        fabric.plan_valid(&self.req) && fabric.plan_valid(&self.resp)
+    }
 }
 
 /// [`execute_dispatch`] writing its two transfer plans into caller-owned
@@ -356,6 +370,51 @@ mod tests {
         assert!(r2.latency.max_queue_depth > 64);
     }
 
+    /// Regression (zero-completions window): a run in which nothing is
+    /// ever served — every arrival rejected by admission control — must
+    /// still yield a fully defined, NaN-free latency report, and an
+    /// autoscaler evaluating the resulting empty windows must treat them
+    /// as no-signal instead of a perfect p99.
+    #[test]
+    fn zero_completion_window_reports_are_nan_free() {
+        let (layout, b, cost) = setup();
+        let trace =
+            generate_trace(&TrafficPattern::Constant { rate: 5000.0 }, 0.05, 3, 4);
+        let starved = GatewayConfig {
+            max_batch: 16,
+            max_wait_s: 1e-3,
+            admission_cap: Some(0),
+            autoscale: Some(crate::serve::AutoscaleConfig::default()),
+            ..Default::default()
+        };
+        let r = run_gateway(&layout, &b, &cost, &trace, &starved).unwrap();
+        assert_eq!(r.served.len(), 0, "cap 0 must starve the fleet");
+        assert_eq!(r.rejected, trace.len());
+        let l = &r.latency;
+        assert_eq!(l.served, 0);
+        assert_eq!((l.p50_s, l.p95_s, l.p99_s, l.mean_s), (0.0, 0.0, 0.0, 0.0));
+        assert_eq!(l.attainment, 0.0, "every rejection is an SLO miss");
+        assert_eq!(l.mean_batch, 0.0);
+        for v in [
+            l.p50_s,
+            l.p95_s,
+            l.p99_s,
+            l.mean_s,
+            l.attainment,
+            l.mean_batch,
+            r.metrics.steps_per_sec,
+            r.metrics.span_s,
+        ] {
+            assert!(v.is_finite(), "zero-completion stat is not finite: {v}");
+        }
+        // Zero dispatches is no autoscale signal: the starved fleet must
+        // not have scaled in either direction.
+        assert!(r.scale_events.is_empty(), "empty windows must not drive scaling");
+        // The rendered table carries no NaN artifacts.
+        let rendered = crate::metrics::report::latency_table(l).render();
+        assert!(!rendered.contains("NaN"), "{rendered}");
+    }
+
     #[test]
     fn partial_batches_dispatch_at_the_wait_deadline() {
         let (layout, b, cost) = setup();
@@ -369,6 +428,105 @@ mod tests {
         }
         // And the batch histogram reflects it.
         assert_eq!(r.batch_histogram(), vec![(1, trace.len())]);
+    }
+
+    /// Regression (stale pooled dispatch plans across a topology change):
+    /// the pooled request/response `Plan` pair outlives membership
+    /// changes, so after a fleet shrink its hops can reference a GPU the
+    /// fleet no longer serves from — and on a degraded fabric, a dead
+    /// GPU's host path. `valid_for` must flag such plans, re-`bind` with
+    /// a changed fleet must clear them (keeping capacity), and a
+    /// shrink-then-dispatch run must complete without ever charging the
+    /// dead GPU's host link again.
+    #[test]
+    fn shrink_then_dispatch_never_replays_stale_pooled_hops() {
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+
+        // Direct invariant: a plan pair pooled for GPU 1 goes invalid the
+        // moment GPU 1 dies, and clearing restores validity without
+        // shrinking the pooled step buffers.
+        let mut fabric = Fabric::single_node(topo.clone());
+        let mut plans = DispatchPlans::default();
+        fabric.plan_intra_gpu_into(4096, 1, 1, &mut plans.req);
+        fabric.plan_intra_gpu_into(4096, 1, 1, &mut plans.resp);
+        assert!(plans.valid_for(&fabric));
+        fabric.fail_gpu(1);
+        assert!(
+            !plans.valid_for(&fabric),
+            "pooled hops over a dead GPU's host path must read invalid"
+        );
+        let caps = plans.step_caps();
+        plans.clear();
+        assert!(plans.valid_for(&fabric), "cleared plans are trivially valid");
+        assert_eq!(plans.step_caps(), caps, "clear keeps pooled capacity");
+
+        // End to end: dispatch on both GPUs, kill GPU 1 and shrink the
+        // fleet to GPU 0's member, keep dispatching. The fabric's
+        // failed-link execution guard panics on any stale replay, and GPU
+        // 1's host link must see no traffic after the shrink.
+        let fleet = build_gateway_fleet(&topo, 1, 4, 16, &cost, None).unwrap();
+        let mut engine = crate::engine::Engine::new(&fleet.manager, &cost);
+        let mut fabric = Fabric::single_node(fleet.manager.topology().clone());
+        let active = engine.add_group(&fleet.rollout_gmis).unwrap();
+        assert_eq!(active.len(), 2);
+        let trace =
+            generate_trace(&TrafficPattern::Constant { rate: 3000.0 }, 0.2, 5, 4);
+        let cfg = GatewayConfig { max_batch: 16, max_wait_s: 1e-3, ..Default::default() };
+        let mut program = crate::workload::GatewayProgram::new(cfg, &trace);
+        use crate::workload::Workload as _;
+        program.bind(&engine, &mut fabric, &b, &active).unwrap();
+        let compute = crate::drl::Compute::Null;
+        let quantum = 5e-3;
+        let mut round = 0usize;
+        let step = |program: &mut crate::workload::GatewayProgram,
+                    engine: &mut crate::engine::Engine,
+                    fabric: &mut Fabric,
+                    round: usize| {
+            let mut ctx = crate::workload::StepCtx {
+                engine,
+                fabric,
+                cost: &cost,
+                bench: &b,
+                compute: &compute,
+                horizon_s: (round + 1) as f64 * quantum,
+            };
+            program.step(&mut ctx).unwrap()
+        };
+        for _ in 0..10 {
+            step(&mut program, &mut engine, &mut fabric, round);
+            round += 1;
+        }
+        let gpu1_bytes = |fabric: &Fabric| {
+            fabric
+                .link_report()
+                .iter()
+                .find(|l| l.name == "host:gpu1")
+                .map(|l| l.bytes)
+                .unwrap_or(0)
+        };
+        let before = gpu1_bytes(&fabric);
+        assert!(before > 0, "warmup never dispatched on GPU 1");
+        fabric.fail_gpu(1);
+        let survivors: Vec<_> =
+            active.iter().copied().filter(|&ex| engine.gpu(ex) == 0).collect();
+        assert_eq!(survivors.len(), 1);
+        program.bind(&engine, &mut fabric, &b, &survivors).unwrap();
+        loop {
+            if step(&mut program, &mut engine, &mut fabric, round)
+                == crate::workload::StepOutcome::Done
+            {
+                break;
+            }
+            round += 1;
+            assert!(round < 10_000, "run never drained");
+        }
+        assert_eq!(
+            gpu1_bytes(&fabric),
+            before,
+            "a pooled plan replayed a hop over the dead GPU's host path"
+        );
     }
 
     #[test]

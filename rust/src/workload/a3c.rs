@@ -381,6 +381,44 @@ impl Workload for AsyncProgram {
         Ok(StepOutcome::Pending)
     }
 
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        // Rounds, worker params, reward/channel logs survive; the staged
+        // channel pipeline (dispensers, compressor queue, batchers,
+        // migrator routing) is membership-keyed and is rebuilt fresh at
+        // the restore bind — packets in flight at the kill are the
+        // at-most-one-interval loss.
+        Some(Box::new(AsyncProgram {
+            cfg: self.cfg.clone(),
+            members: Vec::new(),
+            agent_ids: Vec::new(),
+            trainer_exec_list: Vec::new(),
+            trainer_ids: BTreeMap::new(),
+            agent_gpus: Vec::new(),
+            num_env0: 0,
+            bound: false,
+            migrator: None,
+            dispensers: Vec::new(),
+            compressor: None,
+            batchers: BTreeMap::new(),
+            started: self.started,
+            start_s: self.start_s,
+            rollout_len: self.rollout_len,
+            round: self.round,
+            flushed: self.flushed,
+            agent_workers: self.agent_workers.clone(),
+            trainer_worker: self.trainer_worker.clone(),
+            last_real_rollout: self.last_real_rollout.clone(),
+            stats: self.stats.clone(),
+            rewards: self.rewards.clone(),
+            updates: self.updates,
+            samples_trained: self.samples_trained,
+            reward_sum: self.reward_sum,
+            reward_n: self.reward_n,
+            peak_mem: self.peak_mem,
+            elastic: self.cfg.elastic.clone().map(ElasticController::new),
+        }))
+    }
+
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
         let agent_span = engine.max_time(&self.agent_ids).seconds() - self.start_s;
         let span = engine.max_time(&self.members).seconds() - self.start_s;

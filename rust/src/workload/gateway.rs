@@ -269,6 +269,14 @@ impl Workload for GatewayProgram {
                 self.scaler = Some(scaler);
             }
         }
+        // A changed fleet invalidates the pooled dispatch plans: a
+        // shrunken fleet's buffers may hold hops over a departed (possibly
+        // failed) GPU's host path, and the single-hop reuse fast path
+        // would replay them. Unchanged-membership rebinds (the steady
+        // state) keep the buffers — and their capacity — untouched.
+        if self.active.as_slice() != members {
+            self.plans.clear();
+        }
         // Rebinding (the scheduler re-places tenants every round) reuses
         // the membership buffer's capacity instead of reallocating.
         self.active.clear();
@@ -360,6 +368,41 @@ impl Workload for GatewayProgram {
 
     fn slo_signal(&self) -> Option<f64> {
         self.last_p99
+    }
+
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        // Trace position, served/latency logs, and admission state
+        // survive; the fleet, pooled dispatch plans, and autoscaler state
+        // do not — the restore placement rebinds a fresh fleet.
+        // `bound`/`start_s` carry over so the resumed program keeps its
+        // original span accounting. Queued and in-flight requests ride
+        // along (their indices and completion clocks are
+        // placement-independent global virtual times).
+        Some(Box::new(GatewayProgram {
+            cfg: self.cfg,
+            trace: Arc::clone(&self.trace),
+            flush_at_horizon: self.flush_at_horizon,
+            active: Vec::new(),
+            all_members: self.all_members.clone(),
+            dedicated: self.dedicated,
+            bound: self.bound,
+            start_s: self.start_s,
+            next_idx: self.next_idx,
+            pending: self.pending.clone(),
+            served: self.served.clone(),
+            batch_sizes: self.batch_sizes.clone(),
+            rejected: self.rejected,
+            outstanding: self.outstanding,
+            max_queue_depth: self.max_queue_depth,
+            completions: self.completions.clone(),
+            scaler: None,
+            scale_events: self.scale_events.clone(),
+            next_window: f64::INFINITY,
+            window_lat: None,
+            step_lat: Vec::new(),
+            last_p99: None,
+            plans: DispatchPlans::default(),
+        }))
     }
 
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {

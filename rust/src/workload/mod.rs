@@ -198,4 +198,19 @@ pub trait Workload {
     /// Fold the completed (or preempted-final) program state into the
     /// metrics its standalone run loop would have reported.
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics;
+
+    /// Capture a restartable copy of the program's progress — the
+    /// checkpoint the fault-tolerant scheduler resumes a killed tenant
+    /// from ([`crate::fault::FaultPlan::checkpoint_interval_s`]). The
+    /// snapshot is UNBOUND: placement-derived caches (member lists, the
+    /// allreduce plan, pooled dispatch plans, channel pipelines) are
+    /// dropped, and the next `bind` rebuilds them against whatever
+    /// surviving GPUs the tenant lands on. In-flight, un-checkpointed
+    /// work (the current round's partial charges, queued pipeline
+    /// packets) is lost — that is the at-most-one-interval guarantee,
+    /// not a bug. `None` (the default) marks a program that cannot
+    /// checkpoint; a kill then restarts it from scratch.
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        None
+    }
 }

@@ -183,6 +183,27 @@ impl Workload for ClosedServingProgram {
         Ok(StepOutcome::Pending)
     }
 
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        Some(Box::new(ClosedServingProgram {
+            cfg: self.cfg.clone(),
+            members: Vec::new(),
+            ids: Vec::new(),
+            dedicated: false,
+            num_env0: 0,
+            bound: false,
+            started: self.started,
+            start_s: self.start_s,
+            round: self.round,
+            rollout_len: self.rollout_len,
+            env_steps: self.env_steps,
+            workers: self.workers.clone(),
+            reward_sum: self.reward_sum,
+            reward_count: self.reward_count,
+            comm_s: self.comm_s,
+            peak_mem: self.peak_mem,
+        }))
+    }
+
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
         let span = engine.max_time(&self.ids).seconds() - self.start_s;
         // What was actually charged — robust to mid-run membership changes.

@@ -372,6 +372,36 @@ impl Workload for SyncProgram {
         Ok(StepOutcome::Pending)
     }
 
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        // Progress (iterations, worker params, reward curve, charged
+        // env-steps) survives; binding-derived caches (role partition,
+        // allreduce plan) and the in-flight overlapped reduction do not —
+        // the restore placement re-derives them at bind.
+        Some(Box::new(SyncProgram {
+            cfg: self.cfg.clone(),
+            rollout_len: self.rollout_len,
+            members: Vec::new(),
+            roll_ids: Vec::new(),
+            tr_ids: Vec::new(),
+            colocated: false,
+            num_env0: 0,
+            strategy: ReduceStrategy::MultiProcess,
+            plan: Plan::new(),
+            bound: false,
+            started: self.started,
+            start_s: self.start_s,
+            iter: self.iter,
+            env_steps: self.env_steps,
+            drained: self.drained,
+            workers: self.workers.clone(),
+            rewards: self.rewards.clone(),
+            stats_per_iter: self.stats_per_iter.clone(),
+            peak_mem: self.peak_mem,
+            params_ready: None,
+            elastic: self.cfg.elastic.clone().map(ElasticController::new),
+        }))
+    }
+
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
         let span = engine.max_time(&self.members).seconds() - self.start_s;
         // What was actually charged — NOT a closed-form formula, so a

@@ -12,6 +12,7 @@ use gmi_drl::drl::serving::{run_serving, ServingConfig};
 use gmi_drl::drl::sync::{run_sync, SyncConfig};
 use gmi_drl::drl::Compute;
 use gmi_drl::engine::ElasticConfig;
+use gmi_drl::fault::{FaultPlan, FaultTrace};
 use gmi_drl::mapping::{
     build_async_layout, build_gateway_fleet, build_serving_layout, build_sync_layout,
     MappingTemplate,
@@ -465,6 +466,13 @@ fn pinned_fingerprint_golden_matches_committed_value() {
 
     let got = format!("{:016x}", fp.0);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/hotpath_fingerprint.txt");
+    check_golden(&got, path);
+}
+
+/// Compare against a committed pin, blessing on absence: first run on a
+/// fresh checkout of a commit that intentionally changed semantics writes
+/// the new pin.
+fn check_golden(got: &str, path: &str) {
     match std::fs::read_to_string(path) {
         Ok(want) => {
             assert_eq!(
@@ -476,8 +484,6 @@ fn pinned_fingerprint_golden_matches_committed_value() {
             );
         }
         Err(_) => {
-            // Bless-on-absence: first run on a fresh checkout of a commit
-            // that intentionally changed semantics writes the new pin.
             std::fs::create_dir_all(
                 std::path::Path::new(path).parent().expect("golden dir has a parent"),
             )
@@ -485,4 +491,64 @@ fn pinned_fingerprint_golden_matches_committed_value() {
             std::fs::write(path, format!("{got}\n")).expect("write golden fingerprint");
         }
     }
+}
+
+#[test]
+fn faulted_corun_fingerprint_golden_matches_committed_value() {
+    // The fault-tolerance golden: a fixed two-tenant day under a fixed
+    // declarative failure schedule (GPU loss + repair, an NVSwitch outage
+    // forcing a mid-run replan) with periodic charged checkpoints. Every
+    // scheduling decision — including every fail/repair/checkpoint/kill —
+    // and every recovery metric is hashed and pinned, so a drift anywhere
+    // in the kill/re-admit/replan path fails here.
+    //
+    // Blessing: delete `rust/tests/golden/fault_fingerprint.txt`, re-run,
+    // and say so in the commit.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let trace = "\
+        0.03 fail gpu 1\n\
+        0.05 fail nvswitch\n\
+        0.08 repair gpu 1\n\
+        0.09 repair nvswitch\n";
+    let jobs = corun_scenario(&topo, &b, &cost, 0.2, 7, false);
+    let cfg = SchedConfig {
+        faults: Some(
+            FaultPlan::new(FaultTrace::parse(trace, 1).unwrap()).with_checkpoint_interval(0.02),
+        ),
+        ..SchedConfig::default()
+    };
+    let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    assert_eq!(r.fault_events, 4);
+
+    let mut fp = Fingerprint::new();
+    fp.fold(r.events.len() as u64);
+    for e in &r.events {
+        fp.fold_f64(e.t_s);
+        fp.fold(e.job as u64);
+        for byte in e.action.to_string().bytes() {
+            fp.fold(byte as u64);
+        }
+        fp.fold(e.members as u64);
+        fp.fold_f64(e.share);
+        fp.fold(e.detail.len() as u64);
+    }
+    for j in &r.jobs {
+        fp.fold_f64(j.metrics.span_s);
+        fp.fold_f64(j.metrics.steps_per_sec);
+        fp.fold_f64(j.busy_s);
+        fp.fold_f64(j.completed_s);
+        fp.fold(j.kills as u64);
+        fp.fold_f64(j.goodput_lost_s);
+        fp.fold_f64(j.recovery_s);
+        fp.fold_f64(j.checkpoint_s);
+    }
+    fp.fold_f64(r.makespan_s);
+    fp.fold_f64(r.goodput_lost_s);
+    fp.fold(r.fault_events as u64);
+
+    let got = format!("{:016x}", fp.0);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/fault_fingerprint.txt");
+    check_golden(&got, path);
 }

@@ -1,0 +1,246 @@
+//! Property tests for the fault-tolerance subsystem: seeded failure
+//! injection, charged checkpoints, kill/re-admit recovery, and
+//! degraded-fabric rerouting.
+//!
+//! Same methodology as the other `prop_*` suites: deterministic scenarios
+//! (the offline build has no proptest crate), each asserting an invariant
+//! the scheduler must hold under hardware failure:
+//!
+//!   1. a failed GPU is never a placement target;
+//!   2. a killed tenant resumes from its last checkpoint, losing at most
+//!      one checkpoint interval (plus a round of slack) of service;
+//!   3. the collective planner reroutes around failed links or reports a
+//!      partition — never a plan over a dead link;
+//!   4. a faulted day is bit-reproducible;
+//!   5. checkpoint capture cost is charged to the tenant's own clocks.
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::fabric::{Fabric, ReduceStrategy};
+use gmi_drl::fault::{
+    FaultEvent, FaultKind, FaultPlan, FaultTarget, FaultTrace, FaultTraceConfig,
+};
+use gmi_drl::sched::{corun_scenario, run_cluster, ClusterRunResult, JobSpec, SchedAction, SchedConfig};
+use gmi_drl::vtime::CostModel;
+
+fn bench() -> gmi_drl::BenchInfo {
+    static_registry()["AT"].clone()
+}
+
+/// Equal strings of `{:?}`-formatted floats mean equal bits (shortest
+/// round-trip representation).
+fn fingerprint(r: &ClusterRunResult) -> Vec<String> {
+    let mut out: Vec<String> = r
+        .events
+        .iter()
+        .map(|e| {
+            format!("{:?} {} {} {} {:?} {}", e.t_s, e.job, e.action, e.members, e.share, e.detail)
+        })
+        .collect();
+    for j in &r.jobs {
+        out.push(format!(
+            "job {}: rate {:?} busy {:?} kills {} lost {:?} ckpt {:?}",
+            j.id, j.metrics.steps_per_sec, j.busy_s, j.kills, j.goodput_lost_s, j.checkpoint_s
+        ));
+    }
+    out.push(format!("{:?} {:?} {}", r.makespan_s, r.goodput_lost_s, r.fault_events));
+    out
+}
+
+#[test]
+fn a_failed_gpu_is_never_a_placement_target() {
+    // GPU 1 dies at t=0, before the tenant is admitted. Both members must
+    // land on GPU 0 — if either were placed on the dead GPU, the fault
+    // pass would kill the tenant in the next round.
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let trace = FaultTrace::parse("0.0 fail gpu 1", 1).unwrap();
+    let cfg = SchedConfig { faults: Some(FaultPlan::new(trace)), ..SchedConfig::default() };
+    let jobs = vec![JobSpec::training(0, "train", 1, 0.0, 2, 0.4, 0.2, 512, 6)];
+    let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    assert_eq!(r.fault_events, 1);
+    assert!(r.events.iter().any(|e| e.action == SchedAction::Fail));
+    let j = r.job(0).unwrap();
+    assert_eq!(j.kills, 0, "a member was placed on the dead GPU");
+    assert!(r.events.iter().all(|e| e.action != SchedAction::Kill));
+    assert!(j.completed_s > 0.0, "tenant never completed on the surviving GPU");
+    assert_eq!(j.goodput_lost_s, 0.0);
+}
+
+#[test]
+fn a_killed_tenant_resumes_from_checkpoint_with_bounded_loss() {
+    // Two members spread over two GPUs; GPU 1 dies mid-run and never
+    // recovers. The tenant is killed, re-admitted entirely onto GPU 0,
+    // and resumes from its last periodic checkpoint — losing at most one
+    // checkpoint interval (plus one scheduling round) of service.
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let ckpt = 0.02;
+    let trace = FaultTrace::parse("0.05 fail gpu 1", 1).unwrap();
+    let cfg = SchedConfig {
+        faults: Some(FaultPlan::new(trace).with_checkpoint_interval(ckpt)),
+        ..SchedConfig::default()
+    };
+    let jobs = vec![JobSpec::training(0, "train", 1, 0.0, 2, 0.4, 0.2, 1024, 40)];
+    let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    let j = r.job(0).unwrap();
+    assert!(j.kills >= 1, "the GPU loss must kill the spread tenant");
+    assert!(j.completed_s > 0.0, "killed tenant was never re-admitted to completion");
+    assert!(j.checkpoint_s > 0.0, "no checkpoint cost was charged before the kill");
+    assert!(r.events.iter().any(|e| e.action == SchedAction::Checkpoint));
+    assert!(r.events.iter().any(|e| e.action == SchedAction::Kill));
+    // Resume came from a checkpoint, not from scratch.
+    let readmit = r
+        .events
+        .iter()
+        .find(|e| e.action == SchedAction::Admit && e.detail.contains("re-admitted"))
+        .expect("no re-admission event");
+    assert!(
+        readmit.detail.contains("checkpoint"),
+        "re-admission did not resume from the stored checkpoint: {}",
+        readmit.detail
+    );
+    let bound = j.kills as f64 * (ckpt + cfg.quantum_s) * topo.num_gpus() as f64;
+    assert!(
+        j.goodput_lost_s <= bound + 1e-9,
+        "lost {} GPU-s, checkpoint bound {}",
+        j.goodput_lost_s,
+        bound
+    );
+    assert_eq!(r.goodput_lost_s, j.goodput_lost_s);
+}
+
+#[test]
+fn planner_reroutes_around_failed_links_or_reports_partition() {
+    let topo = Topology::dgx_a100(4);
+    let mut fabric = Fabric::single_node(topo);
+    let mpl: Vec<Vec<usize>> = vec![vec![0], vec![1], vec![2], vec![3]];
+    let bytes = 1 << 20;
+    let (healthy_strategy, healthy_plan) =
+        fabric.try_cheapest_allreduce(&mpl, bytes).expect("healthy fabric plans");
+    assert!(fabric.plan_valid(&healthy_plan));
+
+    // NVSwitch down: the ring strategies lose their only link; the planner
+    // must fall to the host-staged multi-process reduce, and the plan it
+    // returns must be valid on the degraded fabric.
+    let nv_fail =
+        FaultEvent { t_s: 0.0, kind: FaultKind::Fail, target: FaultTarget::NvSwitch };
+    nv_fail.apply(&mut fabric, 1);
+    let (deg_strategy, deg_plan) =
+        fabric.try_cheapest_allreduce(&mpl, bytes).expect("host path still routes");
+    assert_eq!(deg_strategy, ReduceStrategy::MultiProcess);
+    assert!(fabric.plan_valid(&deg_plan));
+
+    // A participant GPU dies too: its host path goes with it, so no
+    // strategy has a valid route — the group is partitioned, an error,
+    // never a silently-invalid plan.
+    let gpu_fail =
+        FaultEvent { t_s: 0.0, kind: FaultKind::Fail, target: FaultTarget::Gpu(1) };
+    gpu_fail.apply(&mut fabric, 1);
+    let err = fabric.try_cheapest_allreduce(&mpl, bytes).unwrap_err();
+    assert!(err.to_string().contains("partitioned"), "unexpected error: {err}");
+
+    // Full repair restores the healthy plan bit-for-bit.
+    FaultEvent { t_s: 0.0, kind: FaultKind::Repair, target: FaultTarget::NvSwitch }
+        .apply(&mut fabric, 1);
+    FaultEvent { t_s: 0.0, kind: FaultKind::Repair, target: FaultTarget::Gpu(1) }
+        .apply(&mut fabric, 1);
+    assert!(!fabric.has_failures());
+    let (repaired_strategy, repaired_plan) =
+        fabric.try_cheapest_allreduce(&mpl, bytes).unwrap();
+    assert_eq!(repaired_strategy, healthy_strategy);
+    assert_eq!(repaired_plan.total_s().to_bits(), healthy_plan.total_s().to_bits());
+}
+
+#[test]
+fn a_faulted_day_is_bit_reproducible() {
+    // The canonical co-run day under a declarative failure schedule that
+    // exercises every event class: GPU loss and repair, an NVSwitch
+    // outage forcing a mid-run replan, and checkpoints throughout. Two
+    // runs of the same inputs must agree down to the float bits.
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let trace = "\
+        0.03 fail gpu 1\n\
+        0.05 fail nvswitch\n\
+        0.08 repair gpu 1\n\
+        0.09 repair nvswitch\n";
+    let jobs = corun_scenario(&topo, &b, &cost, 0.2, 7, false);
+    let cfg = SchedConfig {
+        faults: Some(
+            FaultPlan::new(FaultTrace::parse(trace, 1).unwrap()).with_checkpoint_interval(0.02),
+        ),
+        ..SchedConfig::default()
+    };
+    let r1 = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    let r2 = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    assert_eq!(r1.fault_events, 4);
+    assert_eq!(fingerprint(&r1), fingerprint(&r2), "faulted day diverged between runs");
+    // Every tenant survived the outage to completion.
+    assert!(r1.jobs.iter().all(|j| j.completed_s > 0.0));
+}
+
+#[test]
+fn generated_traces_are_deterministic_and_respect_the_horizon() {
+    let cfg = FaultTraceConfig {
+        seed: 0xdead,
+        duration_s: 2.0,
+        num_gpus: 16,
+        gpus_per_node: 2,
+        gpu_mtbf_s: 0.2,
+        node_mtbf_s: 0.7,
+        link_mtbf_s: 0.9,
+        repair_after_s: Some(0.1),
+    };
+    let a = FaultTrace::generate(&cfg);
+    let b = FaultTrace::generate(&cfg);
+    assert_eq!(a, b, "same config must generate the identical trace");
+    assert!(!a.is_empty(), "MTBFs well under the horizon must yield events");
+    assert!(a.events.iter().all(|e| e.t_s < cfg.duration_s));
+    assert!(a.events.windows(2).all(|w| w[0].t_s <= w[1].t_s), "trace not time-sorted");
+    // The declarative format round-trips.
+    let reparsed = FaultTrace::parse(&a.to_text(), cfg.gpus_per_node).unwrap();
+    assert_eq!(a, reparsed);
+    // A different seed gives a different schedule.
+    let other = FaultTrace::generate(&FaultTraceConfig { seed: 0xbeef, ..cfg });
+    assert_ne!(a, other);
+}
+
+#[test]
+fn checkpoint_cost_is_charged_to_the_tenants_own_clocks() {
+    // Checkpointing with NO failures: pure insurance. The capture cost
+    // lands on the tenant's member clocks (virtual time), so the
+    // checkpointed day finishes no earlier than the plain one, the
+    // overhead column is populated, and nothing is killed or lost.
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let jobs = vec![JobSpec::training(0, "train", 1, 0.0, 2, 0.4, 0.2, 1024, 12)];
+    let plain_cfg = SchedConfig::default();
+    let ckpt_cfg = SchedConfig {
+        faults: Some(
+            FaultPlan::new(FaultTrace::new(Vec::new(), 1)).with_checkpoint_interval(0.01),
+        ),
+        ..SchedConfig::default()
+    };
+    let plain = run_cluster(&topo, &b, &cost, &jobs, &plain_cfg).unwrap();
+    let ckpt = run_cluster(&topo, &b, &cost, &jobs, &ckpt_cfg).unwrap();
+    let pj = plain.job(0).unwrap();
+    let cj = ckpt.job(0).unwrap();
+    assert_eq!(ckpt.fault_events, 0);
+    assert_eq!(cj.kills, 0);
+    assert_eq!(cj.goodput_lost_s, 0.0);
+    assert!(cj.checkpoint_s > 0.0, "no capture cost charged");
+    assert!(ckpt.events.iter().any(|e| e.action == SchedAction::Checkpoint));
+    assert!(plain.events.iter().all(|e| e.action != SchedAction::Checkpoint));
+    assert_eq!(pj.checkpoint_s, 0.0);
+    assert!(
+        cj.completed_s >= pj.completed_s,
+        "charged checkpoints cannot make the job finish earlier ({} < {})",
+        cj.completed_s,
+        pj.completed_s
+    );
+}

@@ -154,6 +154,17 @@ impl Compressor {
             .map(|c| c.steps * c.envs)
             .sum()
     }
+
+    /// Samples of one channel staged for one producing agent. Snapshots
+    /// read this per agent: staged-but-unflushed work is dropped by a
+    /// restore, so the owning program must re-charge and re-dispense it
+    /// (the `Workload::snapshot` lost-and-redone contract).
+    pub fn staged_samples_for(&self, agent: usize, ch: ChannelKind) -> usize {
+        self.staged
+            .get(&(agent, ch))
+            .map(|q| q.iter().map(|c| c.steps * c.envs).sum())
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]

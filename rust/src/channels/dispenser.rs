@@ -64,6 +64,20 @@ impl Dispenser {
         Dispenser { agent, obs_dim, act_dim, seq: 0 }
     }
 
+    /// Resume a dispenser whose stream already issued `seq` chunk groups.
+    /// Restored programs carry the counter through [`Workload::snapshot`]
+    /// (`crate::workload::Workload::snapshot`) so a post-restore chunk can
+    /// never collide with a seq id the consumer saw before the kill.
+    pub fn with_seq(agent: usize, obs_dim: usize, act_dim: usize, seq: u64) -> Self {
+        Dispenser { agent, obs_dim, act_dim, seq }
+    }
+
+    /// The next chunk-group sequence id this dispenser will issue (the
+    /// value a snapshot must carry to keep the stream collision-free).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
     /// Categorize one rollout segment into chunks. `ready` is the agent's
     /// virtual clock after producing the segment.
     pub fn dispense(&mut self, seg: &RolloutSegment, ready: Clock, mode: ShareMode) -> Vec<Chunk> {
@@ -213,5 +227,24 @@ mod tests {
         let b = dp.dispense(&seg, Clock(0.1), ShareMode::MultiChannel);
         assert_eq!(a[0].seq, 0);
         assert_eq!(b[0].seq, 1);
+    }
+
+    #[test]
+    fn restored_dispenser_continues_the_seq_stream_without_collisions() {
+        // A dispenser that issued two groups is snapshotted (seq carried)
+        // and rebuilt; the resumed stream must continue at seq 2 — the
+        // pre-fix `new()` rebuild restarted at 0 and collided with ids the
+        // consumer already saw.
+        let seg = RolloutSegment::synthetic(1, 2, 4, 2);
+        let mut dp = Dispenser::new(7, 4, 2);
+        let mut seen: Vec<u64> = Vec::new();
+        seen.push(dp.dispense(&seg, Clock(0.0), ShareMode::MultiChannel)[0].seq);
+        seen.push(dp.dispense(&seg, Clock(0.1), ShareMode::MultiChannel)[0].seq);
+        let carried = dp.seq();
+        assert_eq!(carried, 2);
+        let mut restored = Dispenser::with_seq(7, 4, 2, carried);
+        let after = restored.dispense(&seg, Clock(0.2), ShareMode::MultiChannel)[0].seq;
+        assert!(!seen.contains(&after), "post-restore seq {after} collides with {seen:?}");
+        assert_eq!(after, 2);
     }
 }

@@ -25,7 +25,8 @@
 //!       │  bind / step / slo_signal / finish             SLO pressure, restore, fairness
 //!       ▼
 //! workloads       workload::{SyncProgram, AsyncProgram,  steppable workload programs —
-//!                 ClosedServingProgram, GatewayProgram}  ONE implementation per workload
+//!                 ClosedServingProgram, GatewayProgram,   ONE implementation per workload
+//!                 ReplayProgram, LeagueProgram}
 //!       ▲  build + step to completion
 //!       │
 //! drivers         drl::{serving, sync, a3c}, baselines,  thin standalone entrypoints
@@ -71,7 +72,8 @@
 //!
 //! The [`workload`] layer is what keeps the standalone drivers and the
 //! scheduler from diverging: every workload (sync PPO, A3C, closed-loop
-//! serving, the open-loop gateway) is ONE steppable
+//! serving, the open-loop gateway, the off-policy replay learner, the
+//! self-play league) is ONE steppable
 //! [`workload::Workload`] program — a round-based coroutine over the
 //! shared engine + fabric with `bind` (membership hooks for
 //! preempt/resize/restore), `step` (charge up to a horizon), and `finish`
@@ -79,6 +81,22 @@
 //! with an infinite horizon; the scheduler steps the same program one
 //! scheduling round at a time, so a single-tenant cluster run is
 //! bit-identical to the standalone run (`rust/tests/prop_workload.rs`).
+//!
+//! Two off-policy kinds stress what on-policy tenants never touch. The
+//! replay learner ([`workload::replay`], [`sched::JobSpec::replay`])
+//! streams collector transitions through the compressor-channel pipeline
+//! into a memory-budgeted buffer (FIFO or seeded-reservoir eviction)
+//! that a decoupled learner samples at its own rate — buffer pressure and
+//! sample staleness land in [`metrics::ReplayStats`], and delivery is
+//! conserved exactly across preemption and fault kills. The self-play
+//! league ([`workload::league`], [`sched::JobSpec::league`]) is a
+//! coordinator that creates tenants at runtime: matches paired by a
+//! closed-form circle schedule are spawned as child jobs through
+//! [`workload::Workload::take_spawn_requests`], admitted through the
+//! scheduler's normal path, and folded back into an Elo win-rate table
+//! via [`workload::Workload::child_result`] (dedup-by-tag, so a faulted
+//! season replays bit-identically). `rust/tests/prop_offpolicy.rs` locks
+//! the churn invariants.
 //!
 //! The [`sched`] layer drops the one-job-per-cluster assumption: a queue
 //! of heterogeneous tenants ([`sched::JobSpec`] — training runs, A3C

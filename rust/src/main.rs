@@ -36,13 +36,18 @@ use gmi_drl::mapping::{
 };
 use gmi_drl::metrics::{fmt_rate, latency_table, Table};
 use gmi_drl::runtime::ExecServer;
-use gmi_drl::sched::{corun_scenario, run_cluster, sched_table, SchedConfig};
+use gmi_drl::sched::{
+    corun_scenario, offpolicy_corun_scenario, run_cluster, sched_table, SchedConfig,
+};
 use gmi_drl::selection;
 use gmi_drl::serve::{
     generate_trace, run_gateway, scale_table, AutoscaleConfig, GatewayConfig, TrafficPattern,
 };
 use gmi_drl::tune::{self, TuneConfig};
 use gmi_drl::vtime::CostModel;
+use gmi_drl::workload::league::run_league;
+use gmi_drl::workload::replay::run_replay;
+use gmi_drl::workload::{Eviction, LeagueConfig, ReplayConfig};
 
 /// Minimal `--key value` / `--flag` parser (offline build: no clap).
 struct Args {
@@ -149,6 +154,8 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "train-sync" => cmd_train_sync(&args),
         "train-async" => cmd_train_async(&args),
+        "train-replay" => cmd_train_replay(&args),
+        "league" => cmd_league(&args),
         "multi" => cmd_multi(&args),
         "search" => cmd_search(&args),
         "help" | "--help" | "-h" => {
@@ -170,6 +177,10 @@ COMMANDS:
                open-loop SLO gateway with --trace <pattern>
   train-sync   synchronized PPO training with layout-aware gradient reduction
   train-async  asynchronized A3C training with channel-based experience sharing
+  train-replay off-policy training: collectors stream transitions into a
+               memory-budgeted replay buffer; a learner samples at its own rate
+  league       self-play league: a coordinator spawns match jobs as cluster
+               tenants through the scheduler's admission path
   multi        multi-tenant co-run: training + a diurnal SLO serving fleet
                preemptively co-scheduled on one shared cluster
   search       workload-aware GMI selection (Algorithm 2)
@@ -221,7 +232,29 @@ OPEN-LOOP SERVING (serve --trace ...):
   --max-per-gpu K             fleet headroom per GPU (default 3x initial)
   --period S                  diurnal period (default duration/2)
 
+OFF-POLICY REPLAY (train-replay):
+  --buffer-gib G              replay-buffer memory budget, charged against
+                              the learner GMI's memory (default 1.0)
+  --eviction fifo|reservoir   full-buffer eviction policy (default fifo)
+  --push-samples N            transitions each collector streams per round
+                              (default 4096)
+  --batch-samples N           learner minibatch size (default 1024)
+  --learner-batches N         learner sampling ticks per round (default 2)
+
+SELF-PLAY LEAGUE (league):
+  --players N                 league size, even (default 4)
+  --matches N                 season length in matches (default 12)
+  --max-concurrent N          match jobs in flight at once (default 2)
+  --match-rounds N            interaction rounds per match (default 3)
+  --match-num-env N           environments per match member (default 256)
+  --match-share S             SM share per match member (default 0.25)
+  --share S                   coordinator SM share (default 0.25)
+  --quantum-ms MS             scheduling round length (default 20)
+
 MULTI-TENANT CO-RUN (multi):
+  --offpolicy                 co-run PPO training + a replay learner + a
+                              self-play league (dynamic tenants) instead of
+                              the training + serving day
   --duration S                length of the serving day (default 1.0)
   --quantum-ms MS             scheduling round length (default 20)
   --static                    static partitioning baseline: tenants pinned
@@ -628,9 +661,115 @@ fn cmd_train_async(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Off-policy replay training: collectors stream transitions through the
+/// channels layer into a memory-budgeted replay buffer; one learner
+/// samples seeded minibatches at its own rate.
+fn cmd_train_replay(args: &Args) -> Result<()> {
+    let real = args.flag("real");
+    let bench = bench_info(&args.str("bench", "AY"), real)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 2)?;
+    anyhow::ensure!(gpus >= 2, "train-replay needs at least 2 GPUs");
+    let topo = Topology::dgx_a100(gpus);
+    // One learner GMI on the last GPU; the rest collect.
+    let collector_gpus: usize = args.get("collector-gpus", gpus - 1)?;
+    let (gmi_per_gpu, num_env) = select_config(args, &bench, &cost, gpus)?;
+    let mode = match args.str("mode", "mcc").as_str() {
+        "mcc" => ShareMode::MultiChannel,
+        "ucc" => ShareMode::UniChannel,
+        other => bail!("unknown mode {other}"),
+    };
+    let eviction = match args.str("eviction", "fifo").as_str() {
+        "fifo" => Eviction::Fifo,
+        "reservoir" => Eviction::Reservoir,
+        other => bail!("unknown eviction policy {other}"),
+    };
+    let defaults = ReplayConfig::default();
+    let cfg = ReplayConfig {
+        rounds: args.get("rounds", 20)?,
+        seed: args.get("seed", 1)?,
+        share_mode: mode,
+        push_samples: args.get("push-samples", defaults.push_samples)?,
+        batch_samples: args.get("batch-samples", defaults.batch_samples)?,
+        buffer_gib: args.get("buffer-gib", defaults.buffer_gib)?,
+        eviction,
+        learner_batches_per_round: args.get("learner-batches", defaults.learner_batches_per_round)?,
+        param_sync_every: args.get("param-sync-every", defaults.param_sync_every)?,
+        compressor_granularity: args.get("granularity", defaults.compressor_granularity)?,
+        staging_interval_s: args.get("staging-interval", defaults.staging_interval_s)?,
+    };
+    let layout = build_async_layout(&topo, collector_gpus, gmi_per_gpu, 1, num_env, &cost)?;
+    let (comp, _server) = compute(real)?;
+    let r = run_replay(&layout, &bench, &cost, &comp, &cfg)?;
+    r.metrics.print_summary(&format!(
+        "train-replay {} ({} collector GPUs, {:?}, {:?})",
+        bench.abbr, collector_gpus, mode, eviction
+    ));
+    r.metrics.print_replay();
+    println!(
+        "updates: {} | packets: {} | mean packet: {:.0} KiB",
+        r.updates,
+        r.channel_stats.packets_out,
+        r.channel_stats.mean_packet_bytes() / 1024.0
+    );
+    if args.flag("links") {
+        r.metrics.print_links();
+    }
+    Ok(())
+}
+
+/// Self-play league season: a coordinator tenant spawns every match as a
+/// child cluster tenant through the scheduler's admission path and folds
+/// the results into a win-rate table.
+fn cmd_league(args: &Args) -> Result<()> {
+    let bench = bench_info(&args.str("bench", "AY"), false)?;
+    let cost = CostModel::new(&bench);
+    let gpus: usize = args.get("gpus", 2)?;
+    let topo = Topology::dgx_a100(gpus);
+    let defaults = LeagueConfig::default();
+    let cfg = LeagueConfig {
+        players: args.get("players", defaults.players)?,
+        total_matches: args.get("matches", defaults.total_matches)?,
+        max_concurrent: args.get("max-concurrent", defaults.max_concurrent)?,
+        match_rounds: args.get("match-rounds", defaults.match_rounds)?,
+        match_num_env: args.get("match-num-env", defaults.match_num_env)?,
+        match_share: args.get("match-share", defaults.match_share)?,
+        match_priority: args.get("match-priority", defaults.match_priority)?,
+        seed: args.get("seed", defaults.seed)?,
+    };
+    let share: f64 = args.get("share", 0.25)?;
+    let sched = SchedConfig {
+        quantum_s: args.get("quantum-ms", 20.0)? / 1e3,
+        ..SchedConfig::default()
+    };
+    println!(
+        "league {} on {gpus} GPUs: {} players, {} matches (<= {} in flight)\n",
+        bench.abbr, cfg.players, cfg.total_matches, cfg.max_concurrent,
+    );
+    let r = run_league(&topo, &bench, &cost, &cfg, share, &sched)?;
+    r.job_table().print();
+    println!("\nscheduling timeline:");
+    sched_table(&r.events).print();
+    let coord = r.job(0).expect("coordinator report");
+    let mut t = Table::new(&["player", "win rate"]);
+    for &(player, rate) in &coord.metrics.reward_curve {
+        t.row(vec![format!("{}", player as usize), format!("{rate:.3}")]);
+    }
+    println!("\nleague table ({} matches decided):", r.jobs.len() - 1);
+    t.print();
+    println!(
+        "\nmakespan {:.2}s | cluster util {:.1}% | best win rate {:.3}",
+        r.makespan_s,
+        100.0 * r.cluster_utilization,
+        coord.metrics.final_reward,
+    );
+    Ok(())
+}
+
 /// Multi-tenant co-run: preemptively co-schedule a training tenant and a
 /// diurnal SLO serving fleet on one shared cluster (`--static` runs the
-/// pinned static-partitioning baseline instead).
+/// pinned static-partitioning baseline instead; `--offpolicy` swaps in
+/// the training + replay + league scenario with dynamic tenants).
 fn cmd_multi(args: &Args) -> Result<()> {
     let bench = bench_info(&args.str("bench", "AT"), false)?;
     let cost = CostModel::new(&bench);
@@ -667,13 +806,26 @@ fn cmd_multi(args: &Args) -> Result<()> {
         faults,
         ..SchedConfig::default()
     };
-    let jobs = corun_scenario(&topo, &bench, &cost, duration, seed, partitioned);
-    println!(
-        "multi {} on {gpus} GPUs [{}]: {} tenants over a {duration:.2}s serving day\n",
-        bench.abbr,
-        if partitioned { "static partition" } else { "preemptive co-schedule" },
-        jobs.len(),
-    );
+    let offpolicy = args.flag("offpolicy");
+    let jobs = if offpolicy {
+        offpolicy_corun_scenario(&topo, &bench, &cost, seed)
+    } else {
+        corun_scenario(&topo, &bench, &cost, duration, seed, partitioned)
+    };
+    if offpolicy {
+        println!(
+            "multi {} on {gpus} GPUs [off-policy]: {} tenants (+ league match spawns)\n",
+            bench.abbr,
+            jobs.len(),
+        );
+    } else {
+        println!(
+            "multi {} on {gpus} GPUs [{}]: {} tenants over a {duration:.2}s serving day\n",
+            bench.abbr,
+            if partitioned { "static partition" } else { "preemptive co-schedule" },
+            jobs.len(),
+        );
+    }
     let r = run_cluster(&topo, &bench, &cost, &jobs, &cfg)?;
     r.job_table().print();
     println!("\nscheduling timeline:");

@@ -158,6 +158,9 @@ pub struct RunMetrics {
     /// request-latency distribution, for open-loop serving runs
     /// (closed-loop runs have no request arrivals to measure).
     pub latency: Option<LatencyStats>,
+    /// replay-buffer occupancy and sample-staleness statistics, for
+    /// off-policy runs (on-policy and serving runs have no buffer).
+    pub replay: Option<ReplayStats>,
 }
 
 impl RunMetrics {
@@ -207,6 +210,55 @@ impl RunMetrics {
             latency_table(l).print();
         }
     }
+
+    /// Print the replay-buffer summary line (no-op for on-policy runs).
+    pub fn print_replay(&self) {
+        if let Some(r) = &self.replay {
+            println!(
+                "replay: {} in / {} sampled / {} evicted (cap {}) | staleness mean {:.4}s max {:.4}s | pressure mean {:.2} peak {:.2} | {} empty tick(s)",
+                r.transitions_in,
+                r.transitions_sampled,
+                r.evicted,
+                r.capacity,
+                r.mean_staleness_s,
+                r.max_staleness_s,
+                r.mean_pressure,
+                r.peak_pressure,
+                r.empty_ticks,
+            );
+        }
+    }
+}
+
+/// Replay-buffer statistics an off-policy run reports in
+/// [`RunMetrics::replay`]. Every mean is guarded against empty windows
+/// (a learner that ticks before any collector flush reports zeros, never
+/// NaN) — the same audit discipline as [`LatencyStats`] on empty windows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplayStats {
+    /// Buffer capacity in transitions (derived from the memory budget).
+    pub capacity: usize,
+    /// Transitions delivered into the buffer over the run. Conserved
+    /// across preemption and fault kills: lost in-flight transitions are
+    /// re-done, so this matches the collection schedule exactly.
+    pub transitions_in: usize,
+    /// Transitions the learner sampled (with replacement) over the run.
+    pub transitions_sampled: usize,
+    /// Transitions evicted by the (FIFO or reservoir) policy.
+    pub evicted: usize,
+    /// Learner gradient updates applied.
+    pub updates: usize,
+    /// Learner ticks that found the buffer empty (sampled nothing).
+    pub empty_ticks: usize,
+    /// Mean age (virtual seconds since collection) of sampled
+    /// transitions; 0 when nothing was sampled.
+    pub mean_staleness_s: f64,
+    /// Worst sampled-transition age (virtual seconds).
+    pub max_staleness_s: f64,
+    /// Mean buffer occupancy / capacity at learner ticks; 0 without ticks.
+    pub mean_pressure: f64,
+    /// Peak buffer occupancy / capacity ever observed.
+    pub peak_pressure: f64,
 }
 
 /// Accumulates reward samples during a run.

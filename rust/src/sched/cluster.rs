@@ -36,6 +36,16 @@
 //! program is re-bound ([`Workload::bind`]) so placement-derived caches
 //! (e.g. a training tenant's allreduce plan) track the live fleet.
 //!
+//! Tenants are not only the submitted jobs: a coordinator program (the
+//! self-play league) may spawn *child tenants* at runtime. After the step
+//! pass each round, [`Workload::take_spawn_requests`] is drained; every
+//! request becomes a fresh tenant (cluster-assigned id, arrival stamped at
+//! the round boundary) that goes through the identical admission path.
+//! Completed children hand their metrics back to the coordinator via
+//! [`Workload::child_result`] before its next step; deliveries are kept in
+//! a per-coordinator history so a coordinator kill + restore replays them
+//! (programs deduplicate by tag).
+//!
 //! Every placement, resize, and removal goes through the engine's live
 //! [`GmiManager`](crate::gmi::GmiManager) validation, so no arrival
 //! sequence can oversubscribe a GPU's SMs or memory — `run_cluster`
@@ -136,6 +146,9 @@ pub enum SchedAction {
     /// one): its live program was discarded and it re-queued to resume
     /// from its last checkpoint.
     Kill,
+    /// A coordinator tenant created this job at runtime (it enters the
+    /// admission queue like any arrival).
+    Spawn,
 }
 
 impl std::fmt::Display for SchedAction {
@@ -154,6 +167,7 @@ impl std::fmt::Display for SchedAction {
             SchedAction::Repair => "repair",
             SchedAction::Checkpoint => "checkpoint",
             SchedAction::Kill => "kill",
+            SchedAction::Spawn => "spawn",
         })
     }
 }
@@ -237,7 +251,8 @@ pub struct JobReport {
 /// Everything one [`run_cluster`] call produced.
 #[derive(Debug, Clone)]
 pub struct ClusterRunResult {
-    /// One report per input job, in input order.
+    /// One report per job: input jobs in input order, then tenants a
+    /// coordinator spawned at runtime, in spawn order.
     pub jobs: Vec<JobReport>,
     /// The scheduling timeline, in decision order.
     pub events: Vec<SchedEvent>,
@@ -355,6 +370,24 @@ struct Tenant {
     /// `engine.job_busy_s` at the last checkpoint (or [re-]admission):
     /// the baseline for goodput-lost accounting at a kill.
     busy_at_ckpt: f64,
+    /// Set once the admission-time auto-tuner has locked a configuration:
+    /// a bind-failure backout re-queues a tenant without a kill, and the
+    /// retried admission must not probe (and charge) again.
+    tuned: bool,
+    /// The coordinator that spawned this tenant at runtime, with the tag
+    /// it chose (`None` for submitted jobs).
+    parent: Option<(JobId, u64)>,
+    /// Tags of children this coordinator already spawned: a restored
+    /// coordinator's replayed requests are deduplicated here (the live
+    /// children kept running through the coordinator's outage).
+    spawned_tags: BTreeSet<u64>,
+    /// Completed child results awaiting delivery to this coordinator's
+    /// program (drained before its next step).
+    pending: Vec<(u64, RunMetrics)>,
+    /// Every completed child result, in completion order — replayed into
+    /// `pending` when this coordinator resumes from a checkpoint that
+    /// predates some completions.
+    history: Vec<(u64, RunMetrics)>,
 }
 
 impl Tenant {
@@ -383,6 +416,11 @@ impl Tenant {
             checkpoint_s: 0.0,
             goodput_lost_s: 0.0,
             busy_at_ckpt: 0.0,
+            tuned: false,
+            parent: None,
+            spawned_tags: BTreeSet::new(),
+            pending: Vec::new(),
+            history: Vec::new(),
         }
     }
 }
@@ -410,6 +448,9 @@ struct Cluster<'a> {
     fault_cursor: usize,
     /// Next periodic checkpoint boundary (INFINITY when disabled).
     next_checkpoint_s: f64,
+    /// Id assigned to the next runtime-spawned child tenant (starts past
+    /// every submitted job's id).
+    next_job_id: JobId,
 }
 
 /// Admit, co-schedule, and run `jobs` to completion on one shared
@@ -457,6 +498,7 @@ pub fn run_cluster(
             .as_ref()
             .map(|p| p.checkpoint_interval_s)
             .unwrap_or(f64::INFINITY),
+        next_job_id: jobs.iter().map(|j| j.id).max().unwrap_or(0).saturating_add(1),
     };
     cluster.run()?;
     Ok(cluster.into_result())
@@ -502,6 +544,9 @@ impl Cluster<'_> {
                 self.step_tenant(order[k], round_end)?;
             }
             self.order_scratch = order;
+            // Coordinator programs may have requested child tenants while
+            // stepping; they join the queue and admit from the next round.
+            self.drain_spawn_requests(now, round_end)?;
             // Sample occupancy peaks BEFORE completions release GMIs, so a
             // tenant admitted and finished within one round is observed.
             self.track_peaks();
@@ -541,6 +586,12 @@ impl Cluster<'_> {
         }
         let mut program =
             self.tenants[idx].program.take().expect("running tenant has a program");
+        // Completed child results land before the coordinator's next
+        // charges — a post-restore replay re-delivers the full history and
+        // the program deduplicates by tag.
+        for (tag, m) in std::mem::take(&mut self.tenants[idx].pending) {
+            program.child_result(tag, &m);
+        }
         let outcome = {
             let mut ctx = StepCtx {
                 engine: &mut self.engine,
@@ -555,6 +606,55 @@ impl Cluster<'_> {
         self.tenants[idx].program = Some(program);
         if outcome? == StepOutcome::Done {
             self.tenants[idx].done = true;
+        }
+        Ok(())
+    }
+
+    /// Turn every running coordinator's pending [`SpawnRequest`]s into
+    /// queued tenants. The scheduler owns child identity: each request
+    /// gets a fresh cluster-unique job id and an arrival at this round's
+    /// boundary, then competes for admission like any submitted job. A
+    /// restored coordinator may replay requests for children that already
+    /// exist (and kept running through its outage) — `spawned_tags`
+    /// deduplicates those.
+    ///
+    /// [`SpawnRequest`]: crate::workload::SpawnRequest
+    fn drain_spawn_requests(&mut self, now: f64, round_end: f64) -> Result<()> {
+        for idx in 0..self.tenants.len() {
+            if self.tenants[idx].state != State::Running {
+                continue;
+            }
+            let Some(program) = self.tenants[idx].program.as_mut() else { continue };
+            let requests = program.take_spawn_requests();
+            if requests.is_empty() {
+                continue;
+            }
+            let parent_job = self.tenants[idx].spec.id;
+            for req in requests {
+                if !self.tenants[idx].spawned_tags.insert(req.tag) {
+                    continue;
+                }
+                let mut spec = req.spec;
+                spec.id = self.next_job_id;
+                spec.arrival_s = round_end;
+                spec.validate(self.engine.topology()).map_err(|e| {
+                    e.context(format!(
+                        "job {parent_job} spawned an invalid child (tag {})",
+                        req.tag
+                    ))
+                })?;
+                self.next_job_id += 1;
+                let mut child = Tenant::new(spec);
+                child.parent = Some((parent_job, req.tag));
+                self.tenants.push(child);
+                let child_idx = self.tenants.len() - 1;
+                self.push_event(
+                    now,
+                    child_idx,
+                    SchedAction::Spawn,
+                    format!("spawned by job {parent_job} (tag {})", req.tag),
+                );
+            }
         }
         Ok(())
     }
@@ -1022,6 +1122,12 @@ impl Cluster<'_> {
             }
             self.tenants[idx].program = Some(program);
             self.tenants[idx].busy_at_ckpt = self.engine.job_busy_s(job);
+            if resuming {
+                // The restored program is a checkpoint that may predate
+                // some child completions: replay the full result history
+                // (programs deduplicate deliveries by tag).
+                self.tenants[idx].pending = self.tenants[idx].history.clone();
+            }
             if let Some(killed) = self.tenants[idx].killed_at.take() {
                 self.tenants[idx].recovery_s += now - killed;
             }
@@ -1047,6 +1153,13 @@ impl Cluster<'_> {
     /// virtual-time to the tenant's own member clocks — co-tenants never
     /// pay for another job's tuning.
     fn tune_at_admission(&mut self, idx: usize, now: f64) -> Result<()> {
+        // Once per tenant, ever: the `!resuming` gate at the call site only
+        // covers kill + re-admission, not a bind-failure backout (which
+        // re-queues without a kill) — without this flag the retried
+        // admission would probe and charge a second time.
+        if self.tenants[idx].tuned {
+            return Ok(());
+        }
         let Some(tr) = self.tenants[idx].spec.tune.clone() else { return Ok(()) };
         let (iterations, horizon, current_mb) = match &self.tenants[idx].spec.kind {
             JobKind::Training { iterations, horizon, minibatches, .. } => {
@@ -1068,6 +1181,7 @@ impl Cluster<'_> {
         if let JobKind::Training { minibatches, .. } = &mut self.tenants[idx].spec.kind {
             *minibatches = rep.choice;
         }
+        self.tenants[idx].tuned = true;
         if rep.probe_cost_s > 0.0 {
             for k in 0..self.tenants[idx].execs.len() {
                 let ex = self.tenants[idx].execs[k];
@@ -1263,6 +1377,15 @@ impl Cluster<'_> {
         let mut program =
             self.tenants[idx].program.take().expect("completing tenant has a program");
         let metrics = program.finish(&self.engine, &self.fabric);
+        // A spawned child's result flows back to its coordinator: queued
+        // for delivery before the coordinator's next step, and kept in its
+        // history so a later coordinator restore can replay it.
+        if let Some((pjob, tag)) = self.tenants[idx].parent {
+            if let Some(p) = self.tenants.iter().position(|t| t.spec.id == pjob) {
+                self.tenants[p].pending.push((tag, metrics.clone()));
+                self.tenants[p].history.push((tag, metrics.clone()));
+            }
+        }
         self.tenants[idx].final_metrics = Some(metrics);
         drop(program);
 
@@ -1486,6 +1609,77 @@ mod tests {
         assert!(c.metrics.steps_per_sec > 0.0);
         assert!(r.peak_gpu_share <= 1.0 + 1e-6);
         assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn replay_tenant_runs_to_completion_in_the_cluster() {
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let cfg = crate::workload::ReplayConfig {
+            rounds: 3,
+            push_samples: 2048,
+            batch_samples: 1024,
+            buffer_gib: 0.5,
+            ..Default::default()
+        };
+        let jobs = vec![JobSpec::replay(0, "replay", 5, 0.0, 2, 0.4, 0.1, 1024, cfg)];
+        let r = run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+        let j = r.job(0).unwrap();
+        assert_eq!(j.kind, "replay");
+        assert_eq!(j.gmis_at_completion, 3, "2 collectors + 1 learner");
+        let stats = j.metrics.replay.as_ref().expect("replay tenant reports buffer stats");
+        assert!(stats.transitions_in > 0, "collectors never filled the buffer");
+        assert!(stats.updates > 0, "learner never consumed a batch");
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn league_tenant_spawns_matches_through_admission() {
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(1);
+        let cfg = crate::workload::LeagueConfig {
+            players: 4,
+            total_matches: 6,
+            max_concurrent: 2,
+            match_rounds: 2,
+            match_num_env: 256,
+            match_share: 0.2,
+            match_priority: 3,
+            seed: 7,
+        };
+        let jobs = vec![JobSpec::league(0, "league", 5, 0.0, 0.2, cfg)];
+        let run = || run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+        let r = run();
+        // Coordinator first (input order), then one report per match.
+        assert_eq!(r.jobs.len(), 7, "coordinator + 6 spawned matches");
+        let coord = r.job(0).unwrap();
+        assert_eq!(coord.kind, "league");
+        assert!(coord.metrics.final_reward > 0.0, "no player ever won a match");
+        assert_eq!(
+            r.events.iter().filter(|e| e.action == SchedAction::Spawn).count(),
+            6,
+            "every match spawns exactly once"
+        );
+        for j in r.jobs.iter().skip(1) {
+            // Children are ordinary closed-loop tenants that went through
+            // the normal admission path and ran to completion.
+            assert_eq!(j.kind, "closed");
+            assert!(j.metrics.steps_per_sec > 0.0);
+            assert!(j.id > 0, "children get fresh cluster-assigned ids");
+            assert!(r
+                .events
+                .iter()
+                .any(|e| e.job == j.id && e.action == SchedAction::Admit));
+        }
+        // The dynamic-spawn timeline is bit-identical run to run.
+        let r2 = run();
+        assert_eq!(r.events, r2.events);
+        assert_eq!(
+            r.job(0).unwrap().metrics.final_reward.to_bits(),
+            r2.job(0).unwrap().metrics.final_reward.to_bits()
+        );
     }
 
     #[test]

@@ -24,7 +24,8 @@ use crate::gmi::Role;
 use crate::serve::{GatewayConfig, Request};
 use crate::tune::AdmissionTune;
 use crate::workload::{
-    AsyncProgram, ClosedServingProgram, GatewayProgram, SyncProgram, Workload,
+    AsyncProgram, ClosedServingProgram, GatewayProgram, LeagueConfig, LeagueProgram,
+    ReplayConfig, ReplayProgram, SyncProgram, Workload,
 };
 
 /// Cluster-unique job identifier.
@@ -86,6 +87,25 @@ pub enum JobKind {
         num_env: usize,
         cfg: AsyncConfig,
     },
+    /// Off-policy replay-buffer training — the
+    /// [`ReplayProgram`](crate::workload::ReplayProgram). The first
+    /// `collectors` members place as experience collectors, the last as
+    /// the learner owning the memory-budgeted replay buffer; membership is
+    /// fixed for the run (the channel pipeline and buffer provenance are
+    /// keyed by it), so preemption is resize-only.
+    Replay {
+        collectors: usize,
+        /// Environments per collector member GMI.
+        num_env: usize,
+        cfg: ReplayConfig,
+    },
+    /// Self-play league coordinator — the
+    /// [`LeagueProgram`](crate::workload::LeagueProgram): a single
+    /// matchmaker member that spawns match jobs as child tenants through
+    /// the scheduler's normal admission path and folds their results into
+    /// a win-rate table. The first workload kind to exercise dynamic
+    /// tenant creation ([`Workload::take_spawn_requests`]).
+    League { cfg: LeagueConfig },
 }
 
 /// The tenancy contract of one job.
@@ -283,6 +303,69 @@ impl JobSpec {
         }
     }
 
+    /// An off-policy replay tenant: `collectors` collector members feeding
+    /// one learner member's replay buffer over the compressor-channel
+    /// pipeline. Membership is fixed (min = initial = max = collectors +
+    /// 1); preemption is resize-only down to `min_share`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn replay(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        collectors: usize,
+        share: f64,
+        min_share: f64,
+        num_env: usize,
+        cfg: ReplayConfig,
+    ) -> JobSpec {
+        let members = collectors + 1;
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: members,
+            initial_gmis: members,
+            max_gmis: members,
+            share,
+            min_share,
+            mem_gib: 4.0,
+            pin_gpus: None,
+            kind: JobKind::Replay { collectors, num_env, cfg },
+            tune: None,
+        }
+    }
+
+    /// A self-play league coordinator tenant: one lightweight matchmaker
+    /// member; the matches it runs are spawned as child tenants through
+    /// the normal admission path, so the coordinator's own envelope stays
+    /// a single small GMI.
+    pub fn league(
+        id: JobId,
+        name: &str,
+        priority: u8,
+        arrival_s: f64,
+        share: f64,
+        cfg: LeagueConfig,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            name: name.to_string(),
+            priority,
+            arrival_s,
+            min_gmis: 1,
+            initial_gmis: 1,
+            max_gmis: 1,
+            share,
+            min_share: share,
+            mem_gib: 2.0,
+            pin_gpus: None,
+            kind: JobKind::League { cfg },
+            tune: None,
+        }
+    }
+
     /// Request minibatch auto-tuning at admission (Training tenants only —
     /// `validate` rejects it elsewhere): short probe runs on a scratch
     /// mirror of the placed members pick the minibatch count, and the
@@ -334,6 +417,8 @@ impl JobSpec {
                 ServingConfig { rounds: *rounds, ..ServingConfig::default() },
             )),
             JobKind::Async { cfg, .. } => Box::new(AsyncProgram::new(cfg.clone())),
+            JobKind::Replay { cfg, .. } => Box::new(ReplayProgram::new(cfg.clone())),
+            JobKind::League { cfg } => Box::new(LeagueProgram::new(cfg.clone())),
         }
     }
 
@@ -422,6 +507,58 @@ impl JobSpec {
                     self.id
                 );
             }
+            JobKind::Replay { collectors, cfg, num_env } => {
+                anyhow::ensure!(
+                    *collectors >= 1,
+                    "job {}: replay tenants need at least one collector",
+                    self.id
+                );
+                anyhow::ensure!(*num_env >= 1, "job {}: num_env must be >= 1", self.id);
+                anyhow::ensure!(
+                    collectors + 1 == self.initial_gmis
+                        && self.min_gmis == self.initial_gmis
+                        && self.max_gmis == self.initial_gmis,
+                    "job {}: replay membership is fixed \
+                     (min = initial = max = collectors + 1)",
+                    self.id
+                );
+                anyhow::ensure!(cfg.rounds >= 1, "job {}: rounds must be >= 1", self.id);
+                anyhow::ensure!(
+                    cfg.buffer_gib > 0.0 && cfg.buffer_gib <= self.mem_gib,
+                    "job {}: replay buffer budget must be positive and fit the \
+                     learner member's {} GiB memory grant",
+                    self.id,
+                    self.mem_gib
+                );
+                anyhow::ensure!(
+                    cfg.batch_samples >= 1 && cfg.push_samples >= 1,
+                    "job {}: replay batch/push sizes must be >= 1",
+                    self.id
+                );
+            }
+            JobKind::League { cfg } => {
+                anyhow::ensure!(
+                    cfg.players >= 2 && cfg.players % 2 == 0,
+                    "job {}: a league needs an even number of players >= 2",
+                    self.id
+                );
+                anyhow::ensure!(
+                    cfg.total_matches >= 1 && cfg.max_concurrent >= 1,
+                    "job {}: league match counts must be >= 1",
+                    self.id
+                );
+                anyhow::ensure!(
+                    cfg.match_rounds >= 1 && cfg.match_num_env >= 1,
+                    "job {}: match rounds and env counts must be >= 1",
+                    self.id
+                );
+                // The children must themselves be admissible: probe a
+                // representative match spec against the same topology.
+                let probe = cfg.match_spec(JobId::MAX - 1, 0, 0.0);
+                probe.validate(topo).map_err(|e| {
+                    anyhow::anyhow!("job {}: league match spec is invalid: {e}", self.id)
+                })?;
+            }
             JobKind::Training { .. } => {}
         }
         if let Some(t) = &self.tune {
@@ -502,6 +639,16 @@ impl JobSpec {
                     Role::Trainer
                 }
             }
+            JobKind::Replay { collectors, .. } => {
+                if idx < *collectors {
+                    Role::SimAgent
+                } else {
+                    Role::Trainer
+                }
+            }
+            // The matchmaker both evaluates policies (inference) and owns
+            // the league state — a holistic single-member tenant.
+            JobKind::League { .. } => Role::Holistic,
         }
     }
 
@@ -521,6 +668,15 @@ impl JobSpec {
                     0
                 }
             }
+            JobKind::Replay { collectors, num_env, .. } => {
+                if idx < *collectors {
+                    *num_env
+                } else {
+                    0
+                }
+            }
+            // One matchmaker inference slot per league player.
+            JobKind::League { cfg } => cfg.players,
         }
     }
 
@@ -549,6 +705,8 @@ impl JobSpec {
             JobKind::Gateway { .. } => "gateway",
             JobKind::Closed { .. } => "closed",
             JobKind::Async { .. } => "async",
+            JobKind::Replay { .. } => "replay",
+            JobKind::League { .. } => "league",
         }
     }
 }
@@ -645,6 +803,32 @@ mod tests {
         let mut bad = c.clone();
         bad.kind = JobKind::Closed { rounds: 0, num_env: 512 };
         assert!(bad.validate(&topo).is_err());
+
+        // Replay: fixed membership, buffer within the memory grant.
+        let r = JobSpec::replay(3, "r", 1, 0.0, 2, 0.4, 0.1, 1024, ReplayConfig::default());
+        r.validate(&topo).unwrap();
+        let mut bad = r.clone();
+        bad.max_gmis = 5; // elastic membership is not allowed for replay
+        assert!(bad.validate(&topo).is_err());
+        let mut bad = r.clone();
+        if let JobKind::Replay { cfg, .. } = &mut bad.kind {
+            cfg.buffer_gib = 100.0; // exceeds the member memory grant
+        }
+        assert!(bad.validate(&topo).is_err(), "oversized buffer must be rejected");
+
+        // League: even player count, valid child match spec.
+        let l = JobSpec::league(4, "l", 2, 0.0, 0.2, LeagueConfig::default());
+        l.validate(&topo).unwrap();
+        let mut bad = l.clone();
+        if let JobKind::League { cfg } = &mut bad.kind {
+            cfg.players = 3;
+        }
+        assert!(bad.validate(&topo).is_err(), "odd player count must be rejected");
+        let mut bad = l.clone();
+        if let JobKind::League { cfg } = &mut bad.kind {
+            cfg.match_share = 2.0; // child spec share out of range
+        }
+        assert!(bad.validate(&topo).is_err(), "invalid match spec must be rejected");
     }
 
     #[test]
@@ -706,5 +890,22 @@ mod tests {
         assert!(g.is_serving());
         assert_eq!(g.slo_p99_s(), Some(5e-3));
         assert_eq!(g.kind_label(), "gateway");
+
+        // Replay tenants mirror async member mixing: collectors first,
+        // then the learner.
+        let r = JobSpec::replay(4, "r", 3, 0.0, 2, 0.3, 0.1, 1024, ReplayConfig::default());
+        assert_eq!(r.initial_gmis, 3);
+        assert_eq!(r.member_role(0), Role::SimAgent);
+        assert_eq!(r.member_role(2), Role::Trainer);
+        assert_eq!(r.member_num_env(0), 1024);
+        assert_eq!(r.member_num_env(2), 0);
+        assert!(!r.is_serving());
+        assert_eq!(r.kind_label(), "replay");
+
+        let l = JobSpec::league(5, "l", 2, 0.0, 0.2, LeagueConfig::default());
+        assert_eq!(l.initial_gmis, 1);
+        assert_eq!(l.member_role(0), Role::Holistic);
+        assert_eq!(l.member_num_env(0), LeagueConfig::default().players);
+        assert_eq!(l.kind_label(), "league");
     }
 }

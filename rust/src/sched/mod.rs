@@ -126,6 +126,53 @@ pub fn corun_scenario(
     }
 }
 
+/// The off-policy co-run: an on-policy PPO trainer, an off-policy
+/// replay-buffer learner, and a self-play league coordinator sharing
+/// `topo`. The three stress different scheduler paths at once — steady
+/// batch tenancy (training), memory-budgeted buffer tenancy with a
+/// collector/learner split (replay), and dynamic tenant churn (the league
+/// spawns and retires match jobs through the admission path for the whole
+/// run). Deterministic in `seed`; `topo` needs >= 2 GPUs.
+pub fn offpolicy_corun_scenario(
+    topo: &Topology,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    seed: u64,
+) -> Vec<JobSpec> {
+    let g = topo.num_gpus();
+    assert!(g >= 2, "offpolicy_corun_scenario needs at least 2 GPUs, got {g}");
+    let train = JobSpec::training(0, "train-ppo", 1, 0.0, g, 0.3, 0.15, 1024, 12);
+    let replay = JobSpec::replay(
+        1,
+        "replay-learner",
+        4,
+        0.0,
+        g,
+        0.25,
+        0.1,
+        1024,
+        crate::workload::ReplayConfig { rounds: 6, seed, ..Default::default() },
+    );
+    let league = JobSpec::league(
+        2,
+        "league",
+        6,
+        0.0,
+        0.1,
+        crate::workload::LeagueConfig {
+            players: 4,
+            total_matches: 8,
+            max_concurrent: 2,
+            match_rounds: 2,
+            match_num_env: 256,
+            match_share: 0.15,
+            match_priority: 3,
+            seed,
+        },
+    );
+    vec![train, replay, league]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +207,24 @@ mod tests {
         assert_eq!(stat[1].pin_gpus, Some(vec![1]));
         assert!(elas[0].pin_gpus.is_none() && elas[1].pin_gpus.is_none());
         assert!(elas[1].max_gmis > elas[1].initial_gmis, "elastic fleet must have headroom");
+    }
+
+    #[test]
+    fn offpolicy_corun_scenario_validates_and_runs() {
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        let jobs = offpolicy_corun_scenario(&topo, &b, &cost, 7);
+        assert_eq!(jobs.len(), 3);
+        for j in &jobs {
+            j.validate(&topo).unwrap();
+        }
+        let r = run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+        // All three tenants plus every spawned match completed.
+        assert!(r.jobs.len() > 3, "the league never spawned a match");
+        assert!(r.jobs.iter().all(|j| j.completed_s > 0.0), "a tenant never completed");
+        assert!(r.job(1).unwrap().metrics.replay.is_some());
+        assert!(r.peak_gpu_share <= 1.0 + 1e-6);
     }
 
     #[test]

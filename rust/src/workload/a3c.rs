@@ -18,7 +18,8 @@ use anyhow::Result;
 
 use super::{StepCtx, StepOutcome, Workload};
 use crate::channels::{
-    Batcher, ChannelStats, Compressor, Dispenser, Migrator, RolloutSegment, TrainerEndpoint,
+    Batcher, ChannelKind, ChannelStats, Compressor, Dispenser, Migrator, RolloutSegment,
+    TrainerEndpoint,
 };
 use crate::config::BenchInfo;
 use crate::drl::a3c::AsyncConfig;
@@ -46,6 +47,15 @@ pub struct AsyncProgram {
     dispensers: Vec<Dispenser>,
     compressor: Option<Compressor>,
     batchers: BTreeMap<usize, Batcher>,
+    /// Per-agent chunk-group sequence counters carried across
+    /// snapshot/restore: a restored dispenser resumes the stream where the
+    /// killed one left off, so post-restore seq ids never collide with ids
+    /// the trainer-side consumer already saw.
+    dispenser_seqs: Vec<u64>,
+    /// Per-agent sample counts that were staged in the compressor (charged
+    /// but never flushed) at snapshot time. The lost-and-redone contract:
+    /// the first post-restore round re-charges and re-dispenses them.
+    redo_samples: Vec<usize>,
     // ---- run state ----
     started: bool,
     start_s: f64,
@@ -81,6 +91,8 @@ impl AsyncProgram {
             dispensers: Vec::new(),
             compressor: None,
             batchers: BTreeMap::new(),
+            dispenser_seqs: Vec::new(),
+            redo_samples: Vec::new(),
             started: false,
             start_s: 0.0,
             rollout_len: 0,
@@ -118,6 +130,155 @@ impl AsyncProgram {
     /// Channel traffic statistics; consumes the log.
     pub fn take_channel_stats(&mut self) -> ChannelStats {
         std::mem::take(&mut self.stats)
+    }
+
+    /// Per-agent chunk-group sequence counters as the pipeline would
+    /// snapshot them: live dispenser counters when bound, the carried
+    /// restore state otherwise. Exposed for the seq-continuity regression
+    /// tests.
+    pub fn dispenser_seqs(&self) -> Vec<u64> {
+        if self.dispensers.is_empty() {
+            self.dispenser_seqs.clone()
+        } else {
+            self.dispensers.iter().map(Dispenser::seq).collect()
+        }
+    }
+
+    /// Per-agent staged-but-unflushed samples a snapshot would mark for
+    /// redo (plus any carried redo debt not yet repaid). Exposed for the
+    /// transition-conservation regression tests.
+    pub fn redo_samples(&self) -> Vec<usize> {
+        self.snapshot_redo()
+    }
+
+    /// Per-agent redo debt at snapshot time: samples staged in the
+    /// compressor for that agent's State channel (charged on the agent's
+    /// timeline but dropped with the pipeline at restore) plus carried
+    /// debt from an earlier kill that this incarnation has not repaid yet.
+    fn snapshot_redo(&self) -> Vec<usize> {
+        let n = if self.dispensers.is_empty() {
+            self.redo_samples.len().max(self.dispenser_seqs.len())
+        } else {
+            self.dispensers.len()
+        };
+        (0..n)
+            .map(|i| {
+                let staged = match (&self.compressor, self.dispensers.get(i)) {
+                    (Some(cp), Some(d)) => cp.staged_samples_for(d.agent, ChannelKind::State),
+                    _ => 0,
+                };
+                staged + self.redo_samples.get(i).copied().unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Repay the redo debt carried through a snapshot: re-charge the
+    /// rollout work whose staged experience died with the old pipeline and
+    /// re-dispense equivalent synthetic segments through the fresh one.
+    /// Runs once, on the first step after a restore bind.
+    fn redo_lost_samples(&mut self, ctx: &mut StepCtx<'_>) -> Result<()> {
+        let debts = std::mem::take(&mut self.redo_samples);
+        for (i, &lost) in debts.iter().enumerate() {
+            if lost == 0 || i >= self.agent_ids.len() {
+                continue;
+            }
+            let n_env = ctx.engine.num_env(self.agent_ids[i]);
+            let steps = lost.div_ceil(n_env.max(1)).max(1);
+            let now = ctx.engine.charge_steps(
+                ctx.cost,
+                self.agent_ids[i],
+                steps as f64,
+                &[
+                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
+                    OpCharge::unrecorded(OpKind::PolicyFwd { num_env: n_env }),
+                ],
+                0.0,
+            );
+            let seg = RolloutSegment::synthetic(steps, n_env, ctx.bench.obs_dim, ctx.bench.act_dim);
+            let steps_per_group = (self.cfg.batch_samples / n_env.max(1)).max(1);
+            let groups =
+                self.dispensers[i].dispense_groups(&seg, now, self.cfg.share_mode, steps_per_group);
+            let compressor = self.compressor.as_mut().expect("bound program");
+            let mut packets = Vec::new();
+            for group in groups {
+                self.stats.chunks_in += group.len() as u64;
+                packets.extend(compressor.push(group));
+            }
+            // Re-staged chunks that crossed the threshold flow on to a
+            // trainer exactly as first-run traffic would.
+            self.drain_packets(ctx, i, packets)?;
+        }
+        Ok(())
+    }
+
+    /// Pipeline tail shared by the round loop and the redo path: route
+    /// ready packets to trainers, charge the async updates they complete,
+    /// and push parameters back on schedule.
+    fn drain_packets(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        i: usize,
+        packets: Vec<crate::channels::Packet>,
+    ) -> Result<()> {
+        for pkt in packets {
+            let decision = self.migrator.as_mut().expect("bound program").route(ctx.fabric, &pkt);
+            // The sender pays a per-message submission overhead on its
+            // own timeline (IPC rendezvous + serialization).
+            ctx.engine.pay(self.agent_ids[i], decision.sender_s);
+            self.stats.transfer_seconds += decision.transfer_s;
+            self.stats.transfer_ops += 1;
+            self.stats.packets_out += 1;
+            self.stats.bytes_moved += pkt.bytes() as u64;
+            let ready_batches = {
+                let batcher = self.batchers.get_mut(&decision.trainer).unwrap();
+                batcher.push(pkt, decision.arrival)
+            };
+
+            // trainer consumes ready batches immediately (async)
+            for batch in ready_batches {
+                let tid = self.trainer_ids[&decision.trainer];
+                ctx.engine.charge_after(
+                    ctx.cost,
+                    tid,
+                    batch.ready,
+                    &[
+                        OpCharge::recorded(OpKind::TrainGrad { samples: batch.samples }),
+                        OpCharge::unrecorded(OpKind::AdamApply),
+                    ],
+                );
+                self.migrator
+                    .as_mut()
+                    .expect("bound program")
+                    .complete(decision.trainer, batch.samples);
+                self.samples_trained += batch.samples;
+                self.updates += 1;
+
+                // real gradient + update on the trainer worker
+                if ctx.compute.is_real() {
+                    if let Some(ro) = &self.last_real_rollout {
+                        let tw = self.trainer_worker.as_mut().expect("bound program");
+                        let (g, _) = ctx.compute.grad(ctx.bench, tw, ro)?;
+                        ctx.compute.apply(ctx.bench, tw, &g, self.cfg.lr)?;
+                    }
+                }
+
+                // param push-back every k updates: agents never BLOCK
+                // on the trainer; they only pay the receive cost of
+                // the pushed tensor on their own timeline.
+                if self.updates % self.cfg.param_sync_every == 0 {
+                    let push =
+                        ctx.fabric.plan_param_push(ctx.bench.param_bytes(), &self.agent_gpus);
+                    ctx.fabric.tally(&push, 1.0);
+                    ctx.engine.pay_group(&self.agent_ids, push.total_s());
+                    let params =
+                        self.trainer_worker.as_ref().expect("bound program").params.clone();
+                    for w in self.agent_workers.iter_mut() {
+                        w.params = params.clone();
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// One A3C round over every agent — a verbatim port of the historical
@@ -198,66 +359,7 @@ impl AsyncProgram {
                 self.stats.chunks_in += group.len() as u64;
                 packets.extend(compressor.push(group));
             }
-            for pkt in packets {
-                let decision =
-                    self.migrator.as_mut().expect("bound program").route(ctx.fabric, &pkt);
-                // The sender pays a per-message submission overhead on its
-                // own timeline (IPC rendezvous + serialization).
-                ctx.engine.pay(self.agent_ids[i], decision.sender_s);
-                self.stats.transfer_seconds += decision.transfer_s;
-                self.stats.transfer_ops += 1;
-                self.stats.packets_out += 1;
-                self.stats.bytes_moved += pkt.bytes() as u64;
-                let ready_batches = {
-                    let batcher = self.batchers.get_mut(&decision.trainer).unwrap();
-                    batcher.push(pkt, decision.arrival)
-                };
-
-                // trainer consumes ready batches immediately (async)
-                for batch in ready_batches {
-                    let tid = self.trainer_ids[&decision.trainer];
-                    ctx.engine.charge_after(
-                        ctx.cost,
-                        tid,
-                        batch.ready,
-                        &[
-                            OpCharge::recorded(OpKind::TrainGrad { samples: batch.samples }),
-                            OpCharge::unrecorded(OpKind::AdamApply),
-                        ],
-                    );
-                    self.migrator
-                        .as_mut()
-                        .expect("bound program")
-                        .complete(decision.trainer, batch.samples);
-                    self.samples_trained += batch.samples;
-                    self.updates += 1;
-
-                    // real gradient + update on the trainer worker
-                    if ctx.compute.is_real() {
-                        if let Some(ro) = &self.last_real_rollout {
-                            let tw = self.trainer_worker.as_mut().expect("bound program");
-                            let (g, _) = ctx.compute.grad(ctx.bench, tw, ro)?;
-                            ctx.compute.apply(ctx.bench, tw, &g, self.cfg.lr)?;
-                        }
-                    }
-
-                    // param push-back every k updates: agents never BLOCK
-                    // on the trainer; they only pay the receive cost of
-                    // the pushed tensor on their own timeline.
-                    if self.updates % self.cfg.param_sync_every == 0 {
-                        let push = ctx
-                            .fabric
-                            .plan_param_push(ctx.bench.param_bytes(), &self.agent_gpus);
-                        ctx.fabric.tally(&push, 1.0);
-                        ctx.engine.pay_group(&self.agent_ids, push.total_s());
-                        let params =
-                            self.trainer_worker.as_ref().expect("bound program").params.clone();
-                        for w in self.agent_workers.iter_mut() {
-                            w.params = params.clone();
-                        }
-                    }
-                }
-            }
+            self.drain_packets(ctx, i, packets)?;
         }
 
         // Fig 9-style learning signal: this round's mean reward at the
@@ -315,9 +417,22 @@ impl Workload for AsyncProgram {
                 agent_gpus.push(gpu);
             }
         }
+        // A restore bind resumes each agent's chunk-group stream at the
+        // carried sequence counter: membership is fixed for the run, so
+        // agent i of the restored program IS agent i of the killed one,
+        // and reusing already-issued seq ids would collide at the
+        // trainer-side consumer.
+        let carried = std::mem::take(&mut self.dispenser_seqs);
         self.dispensers = agent_gmis
             .iter()
-            .map(|&g| Dispenser::new(g, bench.obs_dim, bench.act_dim))
+            .enumerate()
+            .map(|(i, &g)| {
+                if carried.len() == agent_gmis.len() {
+                    Dispenser::with_seq(g, bench.obs_dim, bench.act_dim, carried[i])
+                } else {
+                    Dispenser::new(g, bench.obs_dim, bench.act_dim)
+                }
+            })
             .collect();
         self.compressor = Some(Compressor::with_staging_interval(
             self.cfg.share_mode,
@@ -356,6 +471,9 @@ impl Workload for AsyncProgram {
             }
             self.trainer_worker = Some(ctx.compute.init(ctx.bench, self.cfg.seed)?);
         }
+        // Lost-and-redone: repay the staged-experience debt carried through
+        // a snapshot before charging any new rounds.
+        self.redo_lost_samples(ctx)?;
         while self.round < self.cfg.rounds
             && ctx.engine.max_time(&self.agent_ids).seconds() < ctx.horizon_s
         {
@@ -383,10 +501,15 @@ impl Workload for AsyncProgram {
 
     fn snapshot(&self) -> Option<Box<dyn Workload>> {
         // Rounds, worker params, reward/channel logs survive; the staged
-        // channel pipeline (dispensers, compressor queue, batchers,
-        // migrator routing) is membership-keyed and is rebuilt fresh at
-        // the restore bind — packets in flight at the kill are the
-        // at-most-one-interval loss.
+        // channel pipeline (compressor queue, batchers, migrator routing)
+        // is membership-keyed and is rebuilt fresh at the restore bind.
+        // Two things are carried ACROSS the rebuild: each dispenser's
+        // chunk-group sequence counter (so the resumed stream never
+        // reissues a seq id the consumer already saw) and the per-agent
+        // count of samples staged-but-unflushed in the compressor (charged
+        // work whose experience dies with the pipeline — the restored
+        // program re-charges and re-dispenses it, the lost-and-redone
+        // contract).
         Some(Box::new(AsyncProgram {
             cfg: self.cfg.clone(),
             members: Vec::new(),
@@ -400,6 +523,8 @@ impl Workload for AsyncProgram {
             dispensers: Vec::new(),
             compressor: None,
             batchers: BTreeMap::new(),
+            dispenser_seqs: self.dispenser_seqs(),
+            redo_samples: self.snapshot_redo(),
             started: self.started,
             start_s: self.start_s,
             rollout_len: self.rollout_len,
@@ -441,6 +566,149 @@ impl Workload for AsyncProgram {
             peak_mem_gib: self.peak_mem,
             links: fabric.link_report(),
             latency: None,
+            replay: None,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::static_registry;
+    use crate::drl::a3c::AsyncConfig;
+    use crate::engine::Engine;
+    use crate::fabric::Fabric;
+    use crate::gmi::{GmiBackend, GmiManager, GmiSpec, Role};
+    use crate::topo::Topology;
+    use crate::vtime::CostModel;
+
+    fn two_gpu_async() -> (Engine, Fabric, crate::config::BenchInfo, CostModel) {
+        let topo = Topology::dgx_a100(1);
+        let bench = static_registry()["AY"].clone();
+        let cost = CostModel::new(&bench);
+        let mut manager = GmiManager::new(topo.clone());
+        manager
+            .add_gmi(GmiSpec {
+                id: 0,
+                gpu: 0,
+                sm_share: 0.5,
+                mem_gib: 4.0,
+                backend: GmiBackend::Mps,
+                role: Role::SimAgent,
+                num_env: 512,
+            })
+            .unwrap();
+        manager
+            .add_gmi(GmiSpec {
+                id: 1,
+                gpu: 1,
+                sm_share: 0.5,
+                mem_gib: 4.0,
+                backend: GmiBackend::Mps,
+                role: Role::Trainer,
+                num_env: 0,
+            })
+            .unwrap();
+        let mut engine = Engine::new(&manager, &cost);
+        engine.add_group(&[0, 1]).unwrap();
+        let fabric = Fabric::single_node(topo);
+        (engine, fabric, bench, cost)
+    }
+
+    fn small_cfg() -> AsyncConfig {
+        AsyncConfig {
+            rounds: 4,
+            batch_samples: 4096,
+            // Big granularity + long staging interval: chunks stay staged
+            // in the compressor across rounds, the churn the satellite
+            // fixes target.
+            compressor_granularity: 64 << 20,
+            staging_interval_s: 1e9,
+            ..AsyncConfig::default()
+        }
+    }
+
+    fn run_partially(program: &mut AsyncProgram, horizon_s: f64) {
+        let (mut engine, mut fabric, bench, cost) = two_gpu_async();
+        let compute = Compute::Null;
+        let members: Vec<ExecutorId> = vec![0, 1];
+        program.bind(&engine, &mut fabric, &bench, &members).unwrap();
+        let mut ctx = StepCtx {
+            engine: &mut engine,
+            fabric: &mut fabric,
+            cost: &cost,
+            bench: &bench,
+            compute: &compute,
+            horizon_s,
+        };
+        let _ = program.step(&mut ctx).unwrap();
+    }
+
+    /// Satellite regression: pre-PR snapshots rebuilt dispensers from
+    /// constructor state, so a restored stream re-issued seq ids 0..n that
+    /// the trainer-side consumer had already seen.
+    #[test]
+    fn snapshot_carries_dispenser_seq_counters() {
+        let mut program = AsyncProgram::new(small_cfg());
+        run_partially(&mut program, 0.05);
+        let seqs_before = program.dispenser_seqs();
+        assert!(
+            seqs_before.iter().any(|&s| s > 0),
+            "partial run should have dispensed chunk groups, got {seqs_before:?}"
+        );
+        // Rebuild from the same carried state the snapshot records (tests
+        // live in this module, so the carried fields are reachable without
+        // downcasting the Box<dyn Workload>).
+        let mut restored = AsyncProgram::new(small_cfg());
+        restored.dispenser_seqs = seqs_before.clone();
+        run_partially(&mut restored, 0.05);
+        let seqs_after = restored.dispenser_seqs();
+        for (b, a) in seqs_before.iter().zip(&seqs_after) {
+            assert!(
+                a > b,
+                "restored dispenser must continue past the carried counter \
+                 (before {b}, after {a}) — a fresh counter would collide"
+            );
+        }
+    }
+
+    /// Satellite regression: samples staged in the compressor at snapshot
+    /// time died silently pre-PR — neither flushed nor re-charged. The
+    /// snapshot must mark them for redo and the restored program must
+    /// repay the debt on its first step.
+    #[test]
+    fn staged_compressor_samples_are_redone_after_restore() {
+        let mut program = AsyncProgram::new(small_cfg());
+        run_partially(&mut program, 0.05);
+        let redo = program.redo_samples();
+        assert!(
+            redo.iter().any(|&s| s > 0),
+            "huge granularity should leave staged samples, got {redo:?}"
+        );
+        // The snapshot carries the debt even though the pipeline dies.
+        let mut restored = AsyncProgram::new(small_cfg());
+        restored.dispenser_seqs = program.dispenser_seqs();
+        restored.redo_samples = redo.clone();
+        restored.started = true;
+        restored.rollout_len = 64;
+        run_partially(&mut restored, f64::INFINITY);
+        // Control: identical restore but with no carried debt — exactly
+        // what the pre-PR snapshot produced. The debt-carrying restore
+        // must dispense strictly more chunk groups (the redone samples).
+        let mut control = AsyncProgram::new(small_cfg());
+        control.dispenser_seqs = program.dispenser_seqs();
+        control.started = true;
+        control.rollout_len = 64;
+        run_partially(&mut control, f64::INFINITY);
+        assert!(
+            restored.stats.chunks_in > control.stats.chunks_in,
+            "redo must re-dispense the staged samples (restored {} vs control {})",
+            restored.stats.chunks_in,
+            control.stats.chunks_in
+        );
+        assert!(
+            restored.redo_samples.iter().all(|&s| s == 0),
+            "carried redo debt must be consumed on the first restored step"
+        );
     }
 }

@@ -459,6 +459,7 @@ impl Workload for GatewayProgram {
             peak_mem_gib: peak_mem,
             links: fabric.link_report(),
             latency: Some(latency),
+            replay: None,
         }
     }
 }

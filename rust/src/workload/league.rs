@@ -1,0 +1,413 @@
+//! The self-play league coordinator workload program.
+//!
+//! A single matchmaker member runs a league season over
+//! [`LeagueConfig::players`] policies: it pairs players with a
+//! round-robin circle schedule, spawns each match as a *child tenant*
+//! through the scheduler's normal admission path
+//! ([`Workload::take_spawn_requests`] / [`SpawnRequest`]), and folds each
+//! completed match back into an Elo-rated win-rate table via
+//! [`Workload::child_result`]. Matches are ordinary [`JobKind::Closed`]
+//! tenants — they queue, place, preempt, checkpoint, and fail exactly
+//! like input jobs, which is the point: the league exercises the
+//! scheduler's dynamic tenant-churn paths end to end.
+//!
+//! Determinism: the pairing schedule is closed-form in the match index,
+//! match outcomes draw from a SplitMix64 stream seeded by
+//! [`LeagueConfig::seed`] in result-delivery order (which the scheduler's
+//! round loop makes deterministic), and re-delivered results after a
+//! coordinator kill + restore are deduplicated by tag — so a faulted
+//! season reproduces bit-identically run to run.
+//!
+//! [`JobKind::Closed`]: crate::sched::JobKind::Closed
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::{SpawnRequest, StepCtx, StepOutcome, Workload};
+use crate::config::BenchInfo;
+use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
+use crate::metrics::RunMetrics;
+use crate::sched::JobSpec;
+use crate::vtime::OpKind;
+
+/// Self-play league configuration.
+#[derive(Debug, Clone)]
+pub struct LeagueConfig {
+    /// League size (even, >= 2): the circle schedule pairs everyone.
+    pub players: usize,
+    /// Matches in the season.
+    pub total_matches: usize,
+    /// Matches allowed in flight at once (spawned, result not yet seen).
+    pub max_concurrent: usize,
+    /// Interaction rounds each match job runs.
+    pub match_rounds: usize,
+    /// Environments per match member GMI.
+    pub match_num_env: usize,
+    /// SM share each match member is provisioned at.
+    pub match_share: f64,
+    /// Priority match jobs are admitted at.
+    pub match_priority: u8,
+    /// Seed for the outcome SplitMix64 stream.
+    pub seed: u64,
+}
+
+impl Default for LeagueConfig {
+    fn default() -> Self {
+        LeagueConfig {
+            players: 4,
+            total_matches: 12,
+            max_concurrent: 2,
+            match_rounds: 3,
+            match_num_env: 256,
+            match_share: 0.25,
+            match_priority: 3,
+            seed: 1,
+        }
+    }
+}
+
+impl LeagueConfig {
+    /// The child tenancy contract for match `tag`: a one-member
+    /// closed-loop serving job (the match simulation). `id` and
+    /// `arrival_s` are the scheduler's to overwrite — `validate` probes
+    /// this spec to reject leagues whose children could never admit.
+    pub fn match_spec(&self, id: usize, tag: u64, arrival_s: f64) -> JobSpec {
+        JobSpec::closed(
+            id,
+            &format!("match{tag}"),
+            self.match_priority,
+            arrival_s,
+            1,
+            self.match_share,
+            self.match_share,
+            self.match_num_env,
+            self.match_rounds,
+        )
+    }
+
+    /// Round-robin circle pairing for match index `k`: schedule rounds of
+    /// `players/2` simultaneous pairs; within a full cycle of `players-1`
+    /// schedule rounds every player meets every other exactly once, and
+    /// any prefix of the schedule keeps per-player match counts within
+    /// one of each other (the fairness invariant the property tests lock).
+    pub fn pairing(&self, k: u64) -> (usize, usize) {
+        let p = self.players;
+        let half = p / 2;
+        let sr = (k as usize / half) % (p - 1).max(1);
+        let j = k as usize % half;
+        // Circle method: player p-1 stays fixed; the rest rotate by `sr`.
+        let a = if j == 0 { p - 1 } else { (sr + j) % (p - 1) };
+        let b = (sr + p - 1 - j) % (p - 1);
+        (a.min(b), a.max(b))
+    }
+}
+
+/// SplitMix64 (same local copy the replay workload carries; the fault
+/// layer's is module-private).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Steppable league coordinator program (see module docs).
+pub struct LeagueProgram {
+    cfg: LeagueConfig,
+    // ---- bound membership ----
+    member: Option<ExecutorId>,
+    members: Vec<ExecutorId>,
+    bound: bool,
+    // ---- league ledger (all of it survives snapshot/restore) ----
+    /// Next match index to spawn.
+    next_match: u64,
+    /// Spawned matches awaiting a result: tag -> (player a, player b).
+    outstanding: BTreeMap<u64, (usize, usize)>,
+    /// Requests created but not yet drained by the scheduler (normally
+    /// empty at snapshot time; carried defensively so a kill between
+    /// creation and drain cannot strand a match).
+    pending_spawns: Vec<SpawnRequest>,
+    /// Decided matches: tag -> winning player.
+    results: BTreeMap<u64, usize>,
+    wins: Vec<usize>,
+    played: Vec<usize>,
+    /// Elo-style ratings driving the seeded outcome draws.
+    ratings: Vec<f64>,
+    rng: u64,
+    // ---- run state ----
+    started: bool,
+    start_s: f64,
+    ticks: usize,
+    peak_mem: f64,
+}
+
+impl LeagueProgram {
+    pub fn new(cfg: LeagueConfig) -> Self {
+        let players = cfg.players;
+        let rng = cfg.seed;
+        LeagueProgram {
+            cfg,
+            member: None,
+            members: Vec::new(),
+            bound: false,
+            next_match: 0,
+            outstanding: BTreeMap::new(),
+            pending_spawns: Vec::new(),
+            results: BTreeMap::new(),
+            wins: vec![0; players],
+            played: vec![0; players],
+            ratings: vec![1000.0; players],
+            rng,
+            started: false,
+            start_s: 0.0,
+            ticks: 0,
+            peak_mem: 0.0,
+        }
+    }
+
+    /// Matches decided so far.
+    pub fn matches_done(&self) -> usize {
+        self.results.len()
+    }
+
+    /// Per-player (wins, matches played) — the league table.
+    pub fn table(&self) -> Vec<(usize, usize)> {
+        self.wins.iter().copied().zip(self.played.iter().copied()).collect()
+    }
+
+    fn season_over(&self) -> bool {
+        self.results.len() >= self.cfg.total_matches
+    }
+
+    /// One matchmaker tick: charge the pairing/evaluation inference and
+    /// top outstanding matches up to the concurrency cap.
+    fn run_tick(&mut self, ctx: &mut StepCtx<'_>) {
+        let member = self.member.expect("bound program");
+        let n_env = ctx.engine.num_env(member);
+        ctx.engine.charge_steps(
+            ctx.cost,
+            member,
+            1.0,
+            &[OpCharge::recorded(OpKind::PolicyFwd { num_env: n_env })],
+            0.0,
+        );
+        while self.outstanding.len() + self.pending_spawns.len() < self.cfg.max_concurrent
+            && (self.next_match as usize) < self.cfg.total_matches
+        {
+            let tag = self.next_match;
+            let pair = self.cfg.pairing(tag);
+            self.outstanding.insert(tag, pair);
+            // id/arrival are placeholders the scheduler overwrites.
+            self.pending_spawns.push(SpawnRequest { tag, spec: self.cfg.match_spec(0, tag, 0.0) });
+            self.next_match += 1;
+        }
+        self.ticks += 1;
+    }
+}
+
+impl Workload for LeagueProgram {
+    fn bind(
+        &mut self,
+        _engine: &Engine,
+        _fabric: &mut Fabric,
+        _bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()> {
+        anyhow::ensure!(members.len() == 1, "a league coordinator is a single member");
+        self.member = Some(members[0]);
+        self.members = members.to_vec();
+        self.bound = true;
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
+        anyhow::ensure!(self.bound, "league program stepped before bind");
+        // Progress comes from child tenants the scheduler admits between
+        // rounds; an infinite-horizon (standalone) step would spin forever
+        // waiting for results that can never arrive.
+        anyhow::ensure!(
+            ctx.horizon_s.is_finite() || self.season_over(),
+            "the league coordinator cannot run standalone — drive it through the \
+             cluster scheduler (its matches are spawned tenants)"
+        );
+        if !self.started {
+            self.started = true;
+            self.start_s = ctx.engine.max_time(&self.members).seconds();
+            let n_env = ctx.engine.num_env(self.member.expect("bound program"));
+            self.peak_mem = ctx.cost.mem_gib(n_env, 1, true, false);
+        }
+        while !self.season_over()
+            && ctx.engine.max_time(&self.members).seconds() < ctx.horizon_s
+        {
+            self.run_tick(ctx);
+        }
+        if self.season_over() {
+            return Ok(StepOutcome::Done);
+        }
+        Ok(StepOutcome::Pending)
+    }
+
+    fn take_spawn_requests(&mut self) -> Vec<SpawnRequest> {
+        std::mem::take(&mut self.pending_spawns)
+    }
+
+    fn child_result(&mut self, tag: u64, metrics: &RunMetrics) {
+        // Re-delivery after a restore replays every completed child —
+        // results are keyed by tag, so a decided match never re-draws.
+        if self.results.contains_key(&tag) {
+            return;
+        }
+        let Some((a, b)) = self.outstanding.remove(&tag) else {
+            return;
+        };
+        // The match ran to completion under the scheduler; its metrics
+        // prove the work happened. The OUTCOME draws from the seeded
+        // stream against the Elo expectation, so season timelines stay
+        // bit-reproducible while stronger players keep winning more.
+        let _ = metrics;
+        let e_a = 1.0 / (1.0 + 10f64.powf((self.ratings[b] - self.ratings[a]) / 400.0));
+        let u = (splitmix64(&mut self.rng) >> 11) as f64 / (1u64 << 53) as f64;
+        let (winner, loser) = if u < e_a { (a, b) } else { (b, a) };
+        let k = 32.0;
+        let e_w = if winner == a { e_a } else { 1.0 - e_a };
+        self.ratings[winner] += k * (1.0 - e_w);
+        self.ratings[loser] -= k * (1.0 - e_w);
+        self.wins[winner] += 1;
+        self.played[a] += 1;
+        self.played[b] += 1;
+        self.results.insert(tag, winner);
+    }
+
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        // The whole league ledger survives: schedule cursor, outstanding
+        // matches (their child tenants keep running independently of the
+        // coordinator's kill), decided results, ratings, and the RNG
+        // cursor. Undrained spawn requests are carried defensively.
+        Some(Box::new(LeagueProgram {
+            cfg: self.cfg.clone(),
+            member: None,
+            members: Vec::new(),
+            bound: false,
+            next_match: self.next_match,
+            outstanding: self.outstanding.clone(),
+            pending_spawns: self.pending_spawns.clone(),
+            results: self.results.clone(),
+            wins: self.wins.clone(),
+            played: self.played.clone(),
+            ratings: self.ratings.clone(),
+            rng: self.rng,
+            started: self.started,
+            start_s: self.start_s,
+            ticks: self.ticks,
+            peak_mem: self.peak_mem,
+        }))
+    }
+
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
+        let span = engine.max_time(&self.members).seconds() - self.start_s;
+        let rate = |num: f64, den: f64| if den > 0.0 { num / den } else { 0.0 };
+        // The learning signal is the league table: one curve point per
+        // player, (player index, win rate). The final reward is the top
+        // win rate — the strongest policy the season produced.
+        let curve: Vec<(f64, f64)> = self
+            .wins
+            .iter()
+            .zip(&self.played)
+            .enumerate()
+            .map(|(i, (&w, &p))| (i as f64, rate(w as f64, p as f64)))
+            .collect();
+        let best = curve.iter().map(|&(_, r)| r).fold(0.0f64, f64::max);
+        RunMetrics {
+            // Matches decided per coordinator second — the season's
+            // throughput figure.
+            steps_per_sec: rate(self.results.len() as f64, span),
+            pps: rate(self.ticks as f64, span),
+            ttop: 0.0,
+            span_s: span,
+            utilization: engine.mean_utilization(),
+            final_reward: best,
+            reward_curve: curve,
+            comm_s: 0.0,
+            peak_mem_gib: self.peak_mem,
+            links: fabric.link_report(),
+            latency: None,
+            replay: None,
+        }
+    }
+}
+
+/// Standalone league driver: one coordinator tenant on an otherwise empty
+/// cluster — "standalone" still means the scheduler, because the matches
+/// ARE tenants. Returns the full cluster result: the coordinator's report
+/// first (input order), then one report per spawned match.
+pub fn run_league(
+    topo: &crate::cluster::Topology,
+    bench: &BenchInfo,
+    cost: &crate::vtime::CostModel,
+    cfg: &LeagueConfig,
+    share: f64,
+    sched: &crate::sched::SchedConfig,
+) -> Result<crate::sched::ClusterRunResult> {
+    let spec = JobSpec::league(0, "league", 5, 0.0, share, cfg.clone());
+    crate::sched::run_cluster(topo, bench, cost, &[spec], sched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circle_pairing_is_fair_and_complete() {
+        for players in [2usize, 4, 6, 8] {
+            let cfg = LeagueConfig { players, ..LeagueConfig::default() };
+            let half = players / 2;
+            let cycle = half * (players - 1).max(1);
+            // One full cycle: every unordered pair exactly once.
+            let mut seen = std::collections::BTreeSet::new();
+            for k in 0..cycle as u64 {
+                let (a, b) = cfg.pairing(k);
+                assert!(a < b && b < players, "bad pair ({a},{b})");
+                assert!(seen.insert((a, b)), "pair ({a},{b}) repeated in a cycle");
+            }
+            assert_eq!(seen.len(), players * (players - 1) / 2);
+            // Any prefix: per-player counts within 1 of each other.
+            for prefix in 1..=cycle as u64 {
+                let mut counts = vec![0usize; players];
+                for k in 0..prefix {
+                    let (a, b) = cfg.pairing(k);
+                    counts[a] += 1;
+                    counts[b] += 1;
+                }
+                let max = *counts.iter().max().unwrap();
+                let min = *counts.iter().min().unwrap();
+                assert!(
+                    max - min <= 1,
+                    "prefix {prefix} of {players}-league unfair: {counts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn results_dedup_by_tag_and_update_the_table() {
+        let cfg = LeagueConfig::default();
+        let mut prog = LeagueProgram::new(cfg.clone());
+        let pair = cfg.pairing(0);
+        prog.outstanding.insert(0, pair);
+        let m = RunMetrics::default();
+        prog.child_result(0, &m);
+        assert_eq!(prog.matches_done(), 1);
+        let table = prog.table();
+        let rng_after = prog.rng;
+        // Redelivery (the post-restore replay) must be a no-op.
+        prog.child_result(0, &m);
+        assert_eq!(prog.matches_done(), 1);
+        assert_eq!(prog.table(), table);
+        assert_eq!(prog.rng, rng_after, "redelivery must not consume the RNG");
+        assert_eq!(prog.played[pair.0] + prog.played[pair.1], 2);
+        assert_eq!(prog.wins.iter().sum::<usize>(), 1);
+    }
+}

@@ -56,14 +56,32 @@
 //!    `build_program` constructs it — the scheduler needs nothing else:
 //!    admission, preemption, SLO elasticity, and restore are
 //!    workload-agnostic.
+//!
+//! ## Dynamic tenants
+//!
+//! A program may also act as a *coordinator* that creates cluster tenants
+//! at runtime: [`Workload::take_spawn_requests`] is drained by the
+//! scheduler after every round, and each returned [`SpawnRequest`] becomes
+//! a child [`JobSpec`](crate::sched::JobSpec) that goes through the normal
+//! admission path — queueing, placement, preemption, and fault handling
+//! apply to children exactly as to input jobs. When a child completes, the
+//! scheduler hands its [`RunMetrics`] back through
+//! [`Workload::child_result`], keyed by the coordinator-chosen tag. The
+//! self-play league ([`league::LeagueProgram`]) is the reference user:
+//! it spawns match jobs, collects their results into a win-rate table,
+//! and keeps spawning until its season completes.
 
 pub mod a3c;
 pub mod gateway;
+pub mod league;
+pub mod replay;
 pub mod serving;
 pub mod sync;
 
 pub use a3c::AsyncProgram;
 pub use gateway::GatewayProgram;
+pub use league::{LeagueConfig, LeagueProgram};
+pub use replay::{Eviction, ReplayConfig, ReplayProgram};
 pub use serving::ClosedServingProgram;
 pub use sync::SyncProgram;
 
@@ -74,7 +92,28 @@ use crate::drl::Compute;
 use crate::engine::{Engine, ExecutorId};
 use crate::fabric::Fabric;
 use crate::metrics::RunMetrics;
+use crate::sched::JobSpec;
 use crate::vtime::CostModel;
+
+/// A coordinator program's request to create a cluster tenant at runtime
+/// (drained by the scheduler via [`Workload::take_spawn_requests`]).
+///
+/// The `spec.id` and `spec.arrival_s` the coordinator fills in are
+/// placeholders: the scheduler assigns a fresh cluster-unique job id and
+/// stamps the arrival at the round boundary the request was drained on, so
+/// the child enters the same admission queue as any input job. The `tag`
+/// is the coordinator's own stable key for the child — it survives
+/// checkpoint/restore (the scheduler re-delivers completed child results
+/// after a coordinator kill, deduplicated by tag).
+#[derive(Debug, Clone)]
+pub struct SpawnRequest {
+    /// Coordinator-chosen stable identifier for this child (unique per
+    /// coordinator; used for result delivery and re-spawn deduplication).
+    pub tag: u64,
+    /// The child job to admit. `id` and `arrival_s` are overwritten by the
+    /// scheduler.
+    pub spec: JobSpec,
+}
 
 /// Everything one [`Workload::step`] call may touch: the shared
 /// discrete-event substrate plus the charge horizon for this step.
@@ -212,5 +251,24 @@ pub trait Workload {
     /// checkpoint; a kill then restarts it from scratch.
     fn snapshot(&self) -> Option<Box<dyn Workload>> {
         None
+    }
+
+    /// Drain this program's pending requests to create cluster tenants
+    /// (see [`SpawnRequest`]). The scheduler calls this after stepping the
+    /// program each round; non-coordinator programs use the default (no
+    /// requests). Requests must be idempotent under re-delivery of child
+    /// results: after a coordinator kill + restore, the scheduler replays
+    /// every completed child result, and the coordinator must not re-spawn
+    /// a tag it has already seen a result for.
+    fn take_spawn_requests(&mut self) -> Vec<SpawnRequest> {
+        Vec::new()
+    }
+
+    /// Deliver a completed child tenant's metrics back to the coordinator
+    /// that spawned it (keyed by the [`SpawnRequest::tag`]). May be called
+    /// more than once per tag across kill/restore cycles — implementations
+    /// deduplicate by tag.
+    fn child_result(&mut self, tag: u64, metrics: &RunMetrics) {
+        let _ = (tag, metrics);
     }
 }

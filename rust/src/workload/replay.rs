@@ -1,0 +1,813 @@
+//! The off-policy replay-buffer training workload program.
+//!
+//! Collector members stream experience through the
+//! dispenser/compressor/migrator channel pipeline to a single learner
+//! member that owns a memory-budgeted replay buffer; the learner samples
+//! minibatches from the buffer at its own rate, decoupled from the
+//! collection rate — the off-policy counterpart of the A3C pipeline
+//! ([`super::a3c::AsyncProgram`]).
+//!
+//! The buffer is charged against the learner GMI's memory budget:
+//! [`ReplayConfig::buffer_gib`] converts to a transition capacity at bind
+//! time, and insertions beyond it evict — FIFO (oldest experience first)
+//! or seeded random-victim ([`Eviction::Reservoir`]). Per-run staleness
+//! (learner virtual time minus each sampled transition's arrival time)
+//! and buffer pressure (occupancy / capacity) are reported in
+//! [`ReplayStats`] via [`RunMetrics::replay`].
+//!
+//! Determinism: sampling and eviction draw from a SplitMix64 stream
+//! seeded by [`ReplayConfig::seed`], and every charge depends only on
+//! program state — a single-tenant cluster run is bit-identical to the
+//! standalone [`run_replay`] driver (locked by `prop_workload.rs`), and
+//! the full state (buffer ledger, RNG cursor, staleness accumulators,
+//! dispenser seq counters, staged-sample redo debt) travels through
+//! [`Workload::snapshot`] so a fault kill + restore loses no transitions.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::{StepCtx, StepOutcome, Workload};
+use crate::channels::{
+    ChannelKind, ChannelStats, Compressor, Dispenser, Migrator, RolloutSegment, ShareMode,
+    TrainerEndpoint,
+};
+use crate::config::BenchInfo;
+use crate::drl::compute::Compute;
+use crate::engine::{Engine, ExecutorId, OpCharge};
+use crate::fabric::Fabric;
+use crate::mapping::Layout;
+use crate::metrics::{ReplayStats, RewardTracker, RunMetrics};
+use crate::vtime::{CostModel, OpKind};
+
+/// Replay-buffer eviction policy once the memory budget is exceeded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Eviction {
+    /// Drop the oldest buffered experience first.
+    Fifo,
+    /// Drop a seeded-uniform random victim (reservoir-style turnover:
+    /// surviving experience is an unbiased sample of everything inserted).
+    Reservoir,
+}
+
+/// Off-policy replay training configuration.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Collection rounds per collector.
+    pub rounds: usize,
+    /// Seed for the sampling/eviction SplitMix64 stream.
+    pub seed: u64,
+    pub share_mode: ShareMode,
+    /// Transitions each collector pushes per round (rounded up to whole
+    /// environment steps).
+    pub push_samples: usize,
+    /// Learner minibatch size in transitions.
+    pub batch_samples: usize,
+    /// Replay-buffer memory budget in GiB, charged against the learner
+    /// GMI; converts to a transition capacity from the benchmark's
+    /// transition width.
+    pub buffer_gib: f64,
+    pub eviction: Eviction,
+    /// Learner sampling passes per collection round (the off-policy
+    /// replay ratio knob).
+    pub learner_batches_per_round: usize,
+    /// Push fresh params back to collectors every k learner updates.
+    pub param_sync_every: usize,
+    /// Per-channel transfer granularity in bytes (the CP staging
+    /// threshold).
+    pub compressor_granularity: usize,
+    /// Anti-starvation staging bound (virtual seconds).
+    pub staging_interval_s: f64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            rounds: 10,
+            seed: 1,
+            share_mode: ShareMode::MultiChannel,
+            push_samples: 4096,
+            batch_samples: 1024,
+            buffer_gib: 1.0,
+            eviction: Eviction::Fifo,
+            learner_batches_per_round: 2,
+            param_sync_every: 4,
+            compressor_granularity: 256 << 10,
+            staging_interval_s: 1.0,
+        }
+    }
+}
+
+/// SplitMix64: the same tiny seeded generator the fault layer uses (its
+/// copy is module-private); one u64 of state, full-period, deterministic.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One buffered insertion: a chunk group's worth of transitions from one
+/// collector. The buffer holds the ledger, not the f32 payloads — the
+/// learner's compute is charged synthetically per sampled batch, so only
+/// counts, provenance, and birth times matter.
+#[derive(Debug, Clone)]
+struct BufferEntry {
+    /// Producing collector's GMI id (provenance; keeps entries distinct).
+    #[allow(dead_code)]
+    agent: usize,
+    /// Dispenser sequence id of the originating chunk group.
+    #[allow(dead_code)]
+    seq: u64,
+    /// Transitions in this entry.
+    samples: usize,
+    /// Learner-side arrival time (virtual seconds) — staleness baseline.
+    born_s: f64,
+}
+
+/// Steppable off-policy replay program (see module docs).
+pub struct ReplayProgram {
+    cfg: ReplayConfig,
+    // ---- bound membership ----
+    members: Vec<ExecutorId>,
+    collector_ids: Vec<ExecutorId>,
+    learner_id: Option<ExecutorId>,
+    collector_gpus: Vec<usize>,
+    bound: bool,
+    // ---- channel pipeline ----
+    migrator: Option<Migrator>,
+    dispensers: Vec<Dispenser>,
+    compressor: Option<Compressor>,
+    /// Carried across snapshot/restore (same churn contract as A3C): seq
+    /// counters resume the stream, redo debt re-charges staged-but-lost
+    /// samples.
+    dispenser_seqs: Vec<u64>,
+    redo_samples: Vec<usize>,
+    // ---- replay buffer ----
+    capacity: usize,
+    buffer: VecDeque<BufferEntry>,
+    buffer_samples: usize,
+    rng: u64,
+    // ---- run state ----
+    started: bool,
+    start_s: f64,
+    round: usize,
+    flushed: bool,
+    env_steps: usize,
+    transitions_in: usize,
+    transitions_sampled: usize,
+    evicted: usize,
+    updates: usize,
+    empty_ticks: usize,
+    staleness_sum: f64,
+    staleness_n: usize,
+    max_staleness_s: f64,
+    pressure_sum: f64,
+    pressure_n: usize,
+    peak_pressure: f64,
+    stats: ChannelStats,
+    rewards: RewardTracker,
+    reward_sum: f64,
+    reward_n: usize,
+    peak_mem: f64,
+}
+
+impl ReplayProgram {
+    pub fn new(cfg: ReplayConfig) -> Self {
+        let rng = cfg.seed;
+        ReplayProgram {
+            cfg,
+            members: Vec::new(),
+            collector_ids: Vec::new(),
+            learner_id: None,
+            collector_gpus: Vec::new(),
+            bound: false,
+            migrator: None,
+            dispensers: Vec::new(),
+            compressor: None,
+            dispenser_seqs: Vec::new(),
+            redo_samples: Vec::new(),
+            capacity: 0,
+            buffer: VecDeque::new(),
+            buffer_samples: 0,
+            rng,
+            started: false,
+            start_s: 0.0,
+            round: 0,
+            flushed: false,
+            env_steps: 0,
+            transitions_in: 0,
+            transitions_sampled: 0,
+            evicted: 0,
+            updates: 0,
+            empty_ticks: 0,
+            staleness_sum: 0.0,
+            staleness_n: 0,
+            max_staleness_s: 0.0,
+            pressure_sum: 0.0,
+            pressure_n: 0,
+            peak_pressure: 0.0,
+            stats: ChannelStats::default(),
+            rewards: RewardTracker::default(),
+            reward_sum: 0.0,
+            reward_n: 0,
+            peak_mem: 0.0,
+        }
+    }
+
+    /// Learner updates performed so far.
+    pub fn updates(&self) -> usize {
+        self.updates
+    }
+
+    /// Rounds fully charged so far.
+    pub fn rounds_done(&self) -> usize {
+        self.round
+    }
+
+    /// Transitions currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buffer_samples
+    }
+
+    /// Transition capacity derived from the memory budget.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Channel traffic statistics; consumes the log.
+    pub fn take_channel_stats(&mut self) -> ChannelStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Bytes one buffered transition occupies: obs + action + logp +
+    /// reward + value + done, all f32 (the channel set's full width).
+    fn transition_bytes(bench: &BenchInfo) -> usize {
+        4 * (bench.obs_dim + bench.act_dim + 4)
+    }
+
+    /// Record one buffer-pressure observation (occupancy over capacity,
+    /// clamped to [0, 1]; 0 when capacity is degenerate). Every learner
+    /// tick samples pressure — including empty-buffer ticks, so the mean
+    /// reflects the whole run, never a 0/0.
+    fn pressure_tick(&mut self) {
+        let p = if self.capacity > 0 {
+            (self.buffer_samples as f64 / self.capacity as f64).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        self.pressure_sum += p;
+        self.pressure_n += 1;
+        if p > self.peak_pressure {
+            self.peak_pressure = p;
+        }
+    }
+
+    /// Evict down to capacity after an insertion, per the configured
+    /// policy. Counts evicted transitions; never touches the RNG unless a
+    /// random victim is actually needed (keeps FIFO and under-budget runs
+    /// on the same RNG stream as their no-eviction twins).
+    fn evict_to_capacity(&mut self) {
+        while self.buffer_samples > self.capacity && !self.buffer.is_empty() {
+            let victim = match self.cfg.eviction {
+                Eviction::Fifo => 0,
+                Eviction::Reservoir => {
+                    (splitmix64(&mut self.rng) % self.buffer.len() as u64) as usize
+                }
+            };
+            let e = self.buffer.remove(victim).expect("victim index in range");
+            self.buffer_samples -= e.samples;
+            self.evicted += e.samples;
+        }
+    }
+
+    /// Insert a packet's State-channel chunks into the buffer (the other
+    /// five channels ride the same packets; counting one canonical channel
+    /// counts each transition exactly once).
+    fn insert_packet(&mut self, pkt: &crate::channels::Packet, arrival_s: f64) {
+        for c in pkt.chunks.iter().filter(|c| c.channel == ChannelKind::State) {
+            let samples = c.steps * c.envs;
+            if samples == 0 {
+                continue;
+            }
+            self.buffer.push_back(BufferEntry {
+                agent: c.agent,
+                seq: c.seq,
+                samples,
+                born_s: arrival_s,
+            });
+            self.buffer_samples += samples;
+            self.transitions_in += samples;
+        }
+        self.evict_to_capacity();
+    }
+
+    /// Route ready packets to the learner over the fabric and insert them.
+    fn drain_packets(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        collector: ExecutorId,
+        packets: Vec<crate::channels::Packet>,
+    ) {
+        for pkt in packets {
+            let decision = self.migrator.as_mut().expect("bound program").route(ctx.fabric, &pkt);
+            // The sender pays the per-message submission overhead on its
+            // own timeline (IPC rendezvous + serialization).
+            ctx.engine.pay(collector, decision.sender_s);
+            self.stats.transfer_seconds += decision.transfer_s;
+            self.stats.transfer_ops += 1;
+            self.stats.packets_out += 1;
+            self.stats.bytes_moved += pkt.bytes() as u64;
+            // The buffer absorbs the packet the moment it lands; there is
+            // no batcher — the learner samples on its own schedule.
+            self.migrator
+                .as_mut()
+                .expect("bound program")
+                .complete(decision.trainer, pkt.samples());
+            self.insert_packet(&pkt, decision.arrival.seconds());
+        }
+    }
+
+    /// Repay the staged-experience debt carried through a snapshot:
+    /// re-charge the collection work whose staged samples died with the
+    /// old pipeline and re-dispense equivalent synthetic segments, so the
+    /// transition count over the whole run is conserved exactly.
+    fn redo_lost_samples(&mut self, ctx: &mut StepCtx<'_>) {
+        let debts = std::mem::take(&mut self.redo_samples);
+        for (i, &lost) in debts.iter().enumerate() {
+            if lost == 0 || i >= self.collector_ids.len() {
+                continue;
+            }
+            let id = self.collector_ids[i];
+            let n_env = ctx.engine.num_env(id);
+            let steps = lost.div_ceil(n_env.max(1)).max(1);
+            let now = ctx.engine.charge_steps(
+                ctx.cost,
+                id,
+                steps as f64,
+                &[
+                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
+                    OpCharge::unrecorded(OpKind::PolicyFwd { num_env: n_env }),
+                ],
+                0.0,
+            );
+            let seg = RolloutSegment::synthetic(steps, n_env, ctx.bench.obs_dim, ctx.bench.act_dim);
+            let steps_per_group = (self.cfg.batch_samples / n_env.max(1)).max(1);
+            let groups =
+                self.dispensers[i].dispense_groups(&seg, now, self.cfg.share_mode, steps_per_group);
+            let compressor = self.compressor.as_mut().expect("bound program");
+            let mut packets = Vec::new();
+            for group in groups {
+                self.stats.chunks_in += group.len() as u64;
+                packets.extend(compressor.push(group));
+            }
+            self.drain_packets(ctx, id, packets);
+        }
+    }
+
+    /// Per-agent redo debt a snapshot must carry: State-channel samples
+    /// staged in the compressor (charged but unflushed) plus any carried
+    /// debt this incarnation has not repaid yet.
+    fn snapshot_redo(&self) -> Vec<usize> {
+        let n = if self.dispensers.is_empty() {
+            self.redo_samples.len().max(self.dispenser_seqs.len())
+        } else {
+            self.dispensers.len()
+        };
+        (0..n)
+            .map(|i| {
+                let staged = match (&self.compressor, self.dispensers.get(i)) {
+                    (Some(cp), Some(d)) => cp.staged_samples_for(d.agent, ChannelKind::State),
+                    _ => 0,
+                };
+                staged + self.redo_samples.get(i).copied().unwrap_or(0)
+            })
+            .collect()
+    }
+
+    fn snapshot_seqs(&self) -> Vec<u64> {
+        if self.dispensers.is_empty() {
+            self.dispenser_seqs.clone()
+        } else {
+            self.dispensers.iter().map(Dispenser::seq).collect()
+        }
+    }
+
+    /// The learner's sampling passes for this round. Sampling runs BEFORE
+    /// this round's collection lands (sample-then-insert), so round 0
+    /// naturally exercises the empty-buffer path: an empty tick records
+    /// zero pressure and no staleness instead of dividing by zero.
+    fn learner_pass(&mut self, ctx: &mut StepCtx<'_>) {
+        let learner = self.learner_id.expect("bound program");
+        for _ in 0..self.cfg.learner_batches_per_round {
+            self.pressure_tick();
+            if self.buffer_samples == 0 {
+                self.empty_ticks += 1;
+                continue;
+            }
+            // Staleness baseline: the learner's clock as this batch is
+            // assembled (before the update's own compute is charged).
+            let t_l = ctx.engine.max_time(&[learner]).seconds();
+            let mut remaining = self.cfg.batch_samples.min(self.buffer_samples);
+            let batch = remaining;
+            while remaining > 0 {
+                let idx = (splitmix64(&mut self.rng) % self.buffer.len() as u64) as usize;
+                let e = &self.buffer[idx];
+                let take = e.samples.min(remaining);
+                remaining -= take;
+                let stale = (t_l - e.born_s).max(0.0);
+                self.staleness_sum += stale * take as f64;
+                self.staleness_n += take;
+                if stale > self.max_staleness_s {
+                    self.max_staleness_s = stale;
+                }
+            }
+            ctx.engine.charge_steps(
+                ctx.cost,
+                learner,
+                1.0,
+                &[
+                    OpCharge::recorded(OpKind::TrainGrad { samples: batch }),
+                    OpCharge::unrecorded(OpKind::AdamApply),
+                ],
+                0.0,
+            );
+            self.transitions_sampled += batch;
+            self.updates += 1;
+
+            // Param push-back every k updates: collectors never block on
+            // the learner; they only pay the receive cost.
+            if self.updates % self.cfg.param_sync_every == 0 {
+                let push =
+                    ctx.fabric.plan_param_push(ctx.bench.param_bytes(), &self.collector_gpus);
+                ctx.fabric.tally(&push, 1.0);
+                ctx.engine.pay_group(&self.collector_ids, push.total_s());
+            }
+        }
+    }
+
+    /// One replay round: learner sampling passes, then every collector's
+    /// collection segment streamed through the channel pipeline into the
+    /// buffer.
+    fn run_round(&mut self, ctx: &mut StepCtx<'_>) {
+        self.learner_pass(ctx);
+
+        let mut round_reward = 0.0f64;
+        let mut round_n = 0usize;
+        for i in 0..self.collector_ids.len() {
+            let id = self.collector_ids[i];
+            let n_env = ctx.engine.num_env(id);
+            let m = (self.cfg.push_samples / n_env.max(1)).max(1);
+            let now = ctx.engine.charge_steps(
+                ctx.cost,
+                id,
+                m as f64,
+                &[
+                    OpCharge::recorded(OpKind::SimStep { num_env: n_env }),
+                    OpCharge::unrecorded(OpKind::PolicyFwd { num_env: n_env }),
+                ],
+                0.0,
+            );
+            self.env_steps += m * n_env;
+
+            let seed = (self.cfg.seed as i32).wrapping_add((self.round * 257 + i) as i32);
+            let r = Compute::null_mean_reward(seed) as f64;
+            self.reward_sum += r;
+            self.reward_n += 1;
+            round_reward += r;
+            round_n += 1;
+
+            let seg = RolloutSegment::synthetic(m, n_env, ctx.bench.obs_dim, ctx.bench.act_dim);
+            let steps_per_group = (self.cfg.batch_samples / n_env.max(1)).max(1);
+            let groups =
+                self.dispensers[i].dispense_groups(&seg, now, self.cfg.share_mode, steps_per_group);
+            let compressor = self.compressor.as_mut().expect("bound program");
+            let mut packets = Vec::new();
+            for group in groups {
+                self.stats.chunks_in += group.len() as u64;
+                packets.extend(compressor.push(group));
+            }
+            self.drain_packets(ctx, id, packets);
+        }
+
+        if round_n > 0 {
+            self.rewards.push(
+                ctx.engine.max_time(&self.collector_ids).seconds(),
+                round_reward / round_n as f64,
+            );
+        }
+        self.round += 1;
+    }
+}
+
+impl Workload for ReplayProgram {
+    fn bind(
+        &mut self,
+        engine: &Engine,
+        _fabric: &mut Fabric,
+        bench: &BenchInfo,
+        members: &[ExecutorId],
+    ) -> Result<()> {
+        if self.bound {
+            // Like A3C, the channel pipeline and buffer provenance are
+            // keyed by the member set: replay tenancy contracts fix their
+            // membership and only share resizes occur mid-run.
+            anyhow::ensure!(
+                self.members == members,
+                "replay membership is fixed for the run (resize-only elasticity)"
+            );
+            return Ok(());
+        }
+        let (collectors, learners) = super::partition_roles(engine, members)?;
+        anyhow::ensure!(
+            !collectors.is_empty(),
+            "replay layout needs at least one collector"
+        );
+        anyhow::ensure!(
+            learners.len() == 1,
+            "replay layout needs exactly one learner (got {})",
+            learners.len()
+        );
+        let learner = learners[0];
+        let mut migrator = Migrator::new(vec![TrainerEndpoint {
+            gmi: engine.gmi_of(learner),
+            gpu: engine.gpu(learner),
+        }]);
+        let mut collector_gpus: Vec<usize> = Vec::new();
+        let mut collector_gmis: Vec<usize> = Vec::new();
+        for &ex in &collectors {
+            let gmi = engine.gmi_of(ex);
+            let gpu = engine.gpu(ex);
+            migrator.register_agent(gmi, gpu);
+            collector_gmis.push(gmi);
+            if !collector_gpus.contains(&gpu) {
+                collector_gpus.push(gpu);
+            }
+        }
+        // Restore binds resume each collector's chunk-group stream at the
+        // carried counter (membership is fixed, so collector i of the
+        // restored program IS collector i of the killed one).
+        let carried = std::mem::take(&mut self.dispenser_seqs);
+        self.dispensers = collector_gmis
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| {
+                if carried.len() == collector_gmis.len() {
+                    Dispenser::with_seq(g, bench.obs_dim, bench.act_dim, carried[i])
+                } else {
+                    Dispenser::new(g, bench.obs_dim, bench.act_dim)
+                }
+            })
+            .collect();
+        self.compressor = Some(Compressor::with_staging_interval(
+            self.cfg.share_mode,
+            self.cfg.compressor_granularity,
+            self.cfg.staging_interval_s,
+        ));
+        self.capacity = ((self.cfg.buffer_gib * (1u64 << 30) as f64)
+            / Self::transition_bytes(bench) as f64)
+            .floor() as usize;
+        anyhow::ensure!(self.capacity > 0, "replay buffer budget below one transition");
+        self.migrator = Some(migrator);
+        self.collector_ids = collectors;
+        self.learner_id = Some(learner);
+        self.collector_gpus = collector_gpus;
+        self.members = members.to_vec();
+        self.bound = true;
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
+        anyhow::ensure!(self.bound, "replay program stepped before bind");
+        if !self.started {
+            self.started = true;
+            self.start_s = ctx.engine.max_time(&self.members).seconds();
+            let n_env0 = ctx.engine.num_env(self.collector_ids[0]);
+            // Collector-side rollout memory plus the learner-side buffer
+            // budget: the footprint the tenant's GMI memory grant covers.
+            self.peak_mem =
+                ctx.cost.mem_gib(n_env0, ctx.bench.horizon, true, false) + self.cfg.buffer_gib;
+        }
+        // Lost-and-redone: repay the staged-experience debt carried
+        // through a snapshot before charging any new rounds.
+        self.redo_lost_samples(ctx);
+        while self.round < self.cfg.rounds
+            && ctx.engine.max_time(&self.members).seconds() < ctx.horizon_s
+        {
+            self.run_round(ctx);
+        }
+        if self.round >= self.cfg.rounds {
+            if !self.flushed {
+                self.flushed = true;
+                // Final drain: staged stragglers enter the buffer so every
+                // dispensed transition is accounted for exactly once.
+                let leftover = self.compressor.as_mut().expect("bound program").flush();
+                for pkt in leftover {
+                    // Flush routes like regular traffic — the first
+                    // collector pays the submission overhead (the flush is
+                    // a single end-of-run sweep).
+                    let sender = self.collector_ids[0];
+                    self.drain_packets(ctx, sender, vec![pkt]);
+                }
+            }
+            return Ok(StepOutcome::Done);
+        }
+        Ok(StepOutcome::Pending)
+    }
+
+    fn snapshot(&self) -> Option<Box<dyn Workload>> {
+        // The buffer ledger, RNG cursor, and every accumulator survive;
+        // the channel pipeline is rebuilt at the restore bind. Carried
+        // ACROSS the rebuild: dispenser seq counters (stream continuity)
+        // and the per-collector staged-sample redo debt (transition
+        // conservation) — the same contract as the A3C snapshot.
+        Some(Box::new(ReplayProgram {
+            cfg: self.cfg.clone(),
+            members: Vec::new(),
+            collector_ids: Vec::new(),
+            learner_id: None,
+            collector_gpus: Vec::new(),
+            bound: false,
+            migrator: None,
+            dispensers: Vec::new(),
+            compressor: None,
+            dispenser_seqs: self.snapshot_seqs(),
+            redo_samples: self.snapshot_redo(),
+            capacity: self.capacity,
+            buffer: self.buffer.clone(),
+            buffer_samples: self.buffer_samples,
+            rng: self.rng,
+            started: self.started,
+            start_s: self.start_s,
+            round: self.round,
+            flushed: self.flushed,
+            env_steps: self.env_steps,
+            transitions_in: self.transitions_in,
+            transitions_sampled: self.transitions_sampled,
+            evicted: self.evicted,
+            updates: self.updates,
+            empty_ticks: self.empty_ticks,
+            staleness_sum: self.staleness_sum,
+            staleness_n: self.staleness_n,
+            max_staleness_s: self.max_staleness_s,
+            pressure_sum: self.pressure_sum,
+            pressure_n: self.pressure_n,
+            peak_pressure: self.peak_pressure,
+            stats: self.stats.clone(),
+            rewards: self.rewards.clone(),
+            reward_sum: self.reward_sum,
+            reward_n: self.reward_n,
+            peak_mem: self.peak_mem,
+        }))
+    }
+
+    fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
+        let collector_span = engine.max_time(&self.collector_ids).seconds() - self.start_s;
+        let span = engine.max_time(&self.members).seconds() - self.start_s;
+        let total_steps = self.env_steps as f64;
+        // Every ratio is guarded: a zero-round or zero-sample run reports
+        // zeros, never NaN (locked by prop_offpolicy.rs).
+        let rate = |num: f64, den: f64| if den > 0.0 { num / den } else { 0.0 };
+        let replay = ReplayStats {
+            capacity: self.capacity,
+            transitions_in: self.transitions_in,
+            transitions_sampled: self.transitions_sampled,
+            evicted: self.evicted,
+            updates: self.updates,
+            empty_ticks: self.empty_ticks,
+            mean_staleness_s: rate(self.staleness_sum, self.staleness_n as f64),
+            max_staleness_s: self.max_staleness_s,
+            mean_pressure: rate(self.pressure_sum, self.pressure_n as f64),
+            peak_pressure: self.peak_pressure,
+        };
+        RunMetrics {
+            steps_per_sec: rate(total_steps, span),
+            pps: rate(total_steps, collector_span),
+            ttop: rate(self.transitions_sampled as f64, span),
+            span_s: span,
+            utilization: engine.mean_utilization(),
+            final_reward: rate(self.reward_sum, self.reward_n as f64),
+            reward_curve: self.rewards.curve.clone(),
+            comm_s: self.stats.transfer_seconds,
+            peak_mem_gib: self.peak_mem,
+            links: fabric.link_report(),
+            latency: None,
+            replay: Some(replay),
+        }
+    }
+}
+
+/// Result of a standalone replay run.
+pub struct ReplayRunResult {
+    pub metrics: RunMetrics,
+    pub channel_stats: ChannelStats,
+    /// Learner updates performed.
+    pub updates: usize,
+}
+
+/// Standalone off-policy driver: collectors + one learner from an async
+/// layout, run to completion on a private engine + fabric (the same
+/// program the scheduler steps round-by-round — `prop_workload.rs` locks
+/// the two paths bit-identical).
+pub fn run_replay(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    compute: &Compute,
+    cfg: &ReplayConfig,
+) -> Result<ReplayRunResult> {
+    anyhow::ensure!(
+        !layout.rollout_gmis.is_empty() && !layout.trainer_gmis.is_empty(),
+        "replay layout needs collectors and a learner"
+    );
+    let mut engine = Engine::new(&layout.manager, cost);
+    let mut fabric = Fabric::single_node(layout.manager.topology().clone());
+    let collector_ids = engine.add_group(&layout.rollout_gmis)?;
+    let learner_ids = engine.add_group(&layout.trainer_gmis)?;
+    let members = super::member_union(collector_ids, learner_ids);
+
+    let mut program = ReplayProgram::new(cfg.clone());
+    program.bind(&engine, &mut fabric, bench, &members)?;
+    super::run_to_completion(&mut program, &mut engine, &mut fabric, cost, bench, compute)?;
+
+    let metrics = program.finish(&engine, &fabric);
+    Ok(ReplayRunResult { metrics, channel_stats: program.take_channel_stats(), updates: program.updates() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::static_registry;
+    use crate::mapping::build_async_layout;
+
+    fn setup() -> (Layout, BenchInfo, CostModel) {
+        let b = static_registry()["AY"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        // 1 serving GPU x 2 collectors, 1 trainer GPU x 1 learner.
+        let layout = build_async_layout(&topo, 1, 2, 1, 2048, &cost).unwrap();
+        (layout, b, cost)
+    }
+
+    #[test]
+    fn replay_runs_samples_and_reports_stats() {
+        let (layout, b, cost) = setup();
+        let cfg = ReplayConfig { rounds: 8, ..ReplayConfig::default() };
+        let r = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let stats = r.metrics.replay.as_ref().expect("replay stats present");
+        assert!(stats.capacity > 0);
+        // Exact conservation: every dispensed transition lands exactly
+        // once (collection is in whole env-steps).
+        let n_env = 2048;
+        let m = (cfg.push_samples / n_env).max(1);
+        assert_eq!(stats.transitions_in, cfg.rounds * 2 * m * n_env);
+        assert!(r.updates > 0, "learner never sampled");
+        assert!(stats.transitions_sampled > 0);
+        // Round 0 samples before any insertion: the empty path is hit.
+        assert!(stats.empty_ticks >= 1);
+        assert!(stats.mean_staleness_s.is_finite() && stats.mean_staleness_s >= 0.0);
+        assert!(stats.max_staleness_s >= stats.mean_staleness_s);
+        assert!((0.0..=1.0).contains(&stats.mean_pressure));
+        assert!((0.0..=1.0).contains(&stats.peak_pressure));
+        assert!(r.metrics.pps > 0.0 && r.metrics.ttop > 0.0);
+    }
+
+    #[test]
+    fn eviction_keeps_buffer_at_capacity() {
+        let (layout, b, cost) = setup();
+        // Tiny budget: capacity of a few thousand transitions forces
+        // steady eviction under both policies.
+        let bytes = ReplayProgram::transition_bytes(&b);
+        let tiny_gib = (4096 * bytes) as f64 / (1u64 << 30) as f64;
+        for eviction in [Eviction::Fifo, Eviction::Reservoir] {
+            let cfg = ReplayConfig {
+                rounds: 6,
+                buffer_gib: tiny_gib,
+                eviction,
+                ..ReplayConfig::default()
+            };
+            let r = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+            let stats = r.metrics.replay.unwrap();
+            assert!(stats.evicted > 0, "{eviction:?} never evicted");
+            assert!(
+                stats.transitions_in - stats.evicted <= stats.capacity,
+                "{eviction:?} buffer exceeded capacity"
+            );
+            assert!(stats.peak_pressure <= 1.0);
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic_run_to_run() {
+        let (layout, b, cost) = setup();
+        let cfg = ReplayConfig { rounds: 6, eviction: Eviction::Reservoir, ..Default::default() };
+        let a = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+        let (layout2, b2, cost2) = setup();
+        let c = run_replay(&layout2, &b2, &cost2, &Compute::Null, &cfg).unwrap();
+        assert_eq!(a.metrics.replay, c.metrics.replay);
+        assert_eq!(a.metrics.span_s.to_bits(), c.metrics.span_s.to_bits());
+        assert_eq!(a.updates, c.updates);
+    }
+}

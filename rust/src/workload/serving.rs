@@ -224,6 +224,7 @@ impl Workload for ClosedServingProgram {
             peak_mem_gib: self.peak_mem,
             links: fabric.link_report(),
             latency: None,
+            replay: None,
         }
     }
 }

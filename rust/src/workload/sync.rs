@@ -420,6 +420,7 @@ impl Workload for SyncProgram {
             peak_mem_gib: self.peak_mem,
             links: fabric.link_report(),
             latency: None,
+            replay: None,
         }
     }
 }

@@ -18,7 +18,10 @@ use gmi_drl::mapping::{
     MappingTemplate,
 };
 use gmi_drl::metrics::RunMetrics;
-use gmi_drl::sched::{corun_scenario, run_cluster, JobSpec, SchedConfig};
+use gmi_drl::sched::{corun_scenario, offpolicy_corun_scenario, run_cluster, JobSpec, SchedConfig};
+use gmi_drl::workload::league::run_league;
+use gmi_drl::workload::replay::run_replay;
+use gmi_drl::workload::{Eviction, LeagueConfig, ReplayConfig};
 use gmi_drl::gmi::GmiBackend;
 use gmi_drl::serve::{generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, TrafficPattern};
 use gmi_drl::tune::{tune_gateway, tune_sync, GatewaySpace, SyncSpace, TuneConfig};
@@ -70,6 +73,9 @@ fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
     // LatencyStats is PartialEq over plain fields; identical runs must
     // produce the identical distribution.
     assert_eq!(a.latency, b.latency, "{what}: latency stats");
+    // ReplayStats likewise: buffer ledger, staleness, and pressure must
+    // replay exactly.
+    assert_eq!(a.replay, b.replay, "{what}: replay stats");
 }
 
 #[test]
@@ -111,6 +117,30 @@ fn a3c_training_is_bit_identical_across_runs() {
     assert_metrics_identical(&r1.metrics, &r2.metrics, "a3c");
     assert_eq!(r1.updates, r2.updates);
     assert_eq!(r1.channel_stats.packets_out, r2.channel_stats.packets_out);
+}
+
+#[test]
+fn replay_training_is_bit_identical_across_runs() {
+    // Reservoir eviction draws from the seeded stream on every full-buffer
+    // insert, and the learner's minibatch draws interleave with it — the
+    // whole off-policy pipeline must still replay exactly.
+    let b = static_registry()["AY"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let layout = build_async_layout(&topo, 1, 2, 1, 2048, &cost).unwrap();
+    let cfg = ReplayConfig {
+        rounds: 6,
+        eviction: Eviction::Reservoir,
+        buffer_gib: 0.002,
+        ..ReplayConfig::default()
+    };
+    let r1 = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    let r2 = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    assert_metrics_identical(&r1.metrics, &r2.metrics, "replay");
+    assert_eq!(r1.updates, r2.updates);
+    assert_eq!(r1.channel_stats.packets_out, r2.channel_stats.packets_out);
+    let stats = r1.metrics.replay.as_ref().unwrap();
+    assert!(stats.evicted > 0, "tiny buffer never evicted: eviction path untested");
 }
 
 #[test]
@@ -491,6 +521,99 @@ fn check_golden(got: &str, path: &str) {
             std::fs::write(path, format!("{got}\n")).expect("write golden fingerprint");
         }
     }
+}
+
+#[test]
+fn offpolicy_fingerprint_golden_matches_committed_value() {
+    // The off-policy golden: a standalone replay run (buffer ledger,
+    // staleness, pressure), a self-play league season (dynamic tenant
+    // spawns through admission, Elo outcomes), and the three-tenant
+    // off-policy co-run are hashed and pinned. Drift anywhere in the
+    // replay sampling stream, the spawn/admission interleaving, or the
+    // result-delivery order fails here.
+    //
+    // Blessing: delete `rust/tests/golden/offpolicy_fingerprint.txt`,
+    // re-run, and say so in the commit.
+    let b = static_registry()["AY"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let mut fp = Fingerprint::new();
+
+    // Scenario 1: standalone replay with reservoir turnover.
+    let layout = build_async_layout(&topo, 1, 2, 1, 2048, &cost).unwrap();
+    let rcfg = ReplayConfig {
+        rounds: 6,
+        eviction: Eviction::Reservoir,
+        buffer_gib: 0.002,
+        seed: 13,
+        ..ReplayConfig::default()
+    };
+    let rr = run_replay(&layout, &b, &cost, &Compute::Null, &rcfg).unwrap();
+    let stats = rr.metrics.replay.as_ref().unwrap();
+    fp.fold(stats.capacity as u64);
+    fp.fold(stats.transitions_in as u64);
+    fp.fold(stats.transitions_sampled as u64);
+    fp.fold(stats.evicted as u64);
+    fp.fold(stats.updates as u64);
+    fp.fold(stats.empty_ticks as u64);
+    fp.fold_f64(stats.mean_staleness_s);
+    fp.fold_f64(stats.max_staleness_s);
+    fp.fold_f64(stats.mean_pressure);
+    fp.fold_f64(stats.peak_pressure);
+    fp.fold_f64(rr.metrics.span_s);
+    fp.fold_f64(rr.metrics.steps_per_sec);
+    fp.fold_f64(rr.metrics.ttop);
+    fp.fold(rr.updates as u64);
+    fp.fold(rr.channel_stats.packets_out as u64);
+
+    // Scenario 2: a league season — every spawn/admit/complete decision
+    // and the final table.
+    let lcfg = LeagueConfig { total_matches: 6, seed: 13, ..LeagueConfig::default() };
+    let lr = run_league(&topo, &b, &cost, &lcfg, 0.2, &SchedConfig::default()).unwrap();
+    fp.fold(lr.jobs.len() as u64);
+    fp.fold(lr.events.len() as u64);
+    for e in &lr.events {
+        fp.fold_f64(e.t_s);
+        fp.fold(e.job as u64);
+        for byte in e.action.to_string().bytes() {
+            fp.fold(byte as u64);
+        }
+        fp.fold(e.members as u64);
+    }
+    let coord = lr.job(0).unwrap();
+    for &(p, w) in &coord.metrics.reward_curve {
+        fp.fold_f64(p);
+        fp.fold_f64(w);
+    }
+    fp.fold_f64(coord.metrics.final_reward);
+    fp.fold_f64(lr.makespan_s);
+
+    // Scenario 3: the full off-policy co-run (training + replay + league
+    // churning spawned matches through the shared cluster).
+    let jobs = offpolicy_corun_scenario(&topo, &b, &cost, 13);
+    let cr = run_cluster(&topo, &b, &cost, &jobs, &SchedConfig::default()).unwrap();
+    fp.fold(cr.jobs.len() as u64);
+    fp.fold(cr.events.len() as u64);
+    for j in &cr.jobs {
+        fp.fold(j.id as u64);
+        fp.fold_f64(j.metrics.span_s);
+        fp.fold_f64(j.metrics.steps_per_sec);
+        fp.fold_f64(j.busy_s);
+        fp.fold_f64(j.completed_s);
+        if let Some(s) = &j.metrics.replay {
+            fp.fold(s.transitions_in as u64);
+            fp.fold(s.transitions_sampled as u64);
+            fp.fold(s.evicted as u64);
+        }
+    }
+    fp.fold_f64(cr.makespan_s);
+    fp.fold_f64(cr.fairness);
+    fp.fold_f64(cr.peak_gpu_share);
+
+    let got = format!("{:016x}", fp.0);
+    let path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/offpolicy_fingerprint.txt");
+    check_golden(&got, path);
 }
 
 #[test]

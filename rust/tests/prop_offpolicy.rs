@@ -1,0 +1,226 @@
+//! Property tests for the off-policy workloads and the tenant-churn
+//! scheduler paths they stress: the replay-buffer learner (collector ->
+//! channel -> buffer -> learner pipeline) and the self-play league
+//! coordinator (dynamic match tenants through the normal admission path).
+//!
+//! Same methodology as the other `prop_*` suites: deterministic scenarios
+//! (the offline build has no proptest crate), each asserting an invariant
+//! that must hold under churn:
+//!
+//!   1. transitions are conserved exactly across a fault kill and the
+//!      checkpoint restore — lost in-flight samples are re-done, never
+//!      dropped and never double-counted;
+//!   2. sample staleness is finite and bounded by the run's span, and the
+//!      empty-buffer learner path is NaN-free;
+//!   3. the league matchmaker is fair (per-player match counts within one)
+//!      and every match it spawns goes through real admission;
+//!   4. a fault kill + re-admission preserves the first admission's queue
+//!      wait — the outage is reported as recovery, not re-queueing
+//!      (regression for the wait_s/recovery_s conflation).
+
+use gmi_drl::cluster::Topology;
+use gmi_drl::config::static_registry;
+use gmi_drl::drl::Compute;
+use gmi_drl::fault::{FaultPlan, FaultTrace};
+use gmi_drl::mapping::build_async_layout;
+use gmi_drl::sched::{run_cluster, JobSpec, SchedAction, SchedConfig};
+use gmi_drl::vtime::CostModel;
+use gmi_drl::workload::replay::run_replay;
+use gmi_drl::workload::{LeagueConfig, ReplayConfig};
+
+fn bench() -> gmi_drl::BenchInfo {
+    static_registry()["AY"].clone()
+}
+
+/// A replay tenant whose three members (2 collectors + 1 learner) cannot
+/// fit on one GPU (3 x 0.45 share > 1.0), so placement must spread it and
+/// the GPU-1 failure is guaranteed to kill it.
+fn spread_replay_spec(rounds: usize) -> JobSpec {
+    JobSpec::replay(
+        0,
+        "replay",
+        5,
+        0.0,
+        2,
+        0.45,
+        0.2,
+        1024,
+        ReplayConfig { rounds, ..ReplayConfig::default() },
+    )
+}
+
+/// GPU 1 dies mid-run and is repaired shortly after; periodic checkpoints
+/// let the killed tenant resume from stored state.
+fn outage_cfg() -> SchedConfig {
+    let trace = FaultTrace::parse("0.03 fail gpu 1\n0.05 repair gpu 1", 1).unwrap();
+    SchedConfig {
+        faults: Some(FaultPlan::new(trace).with_checkpoint_interval(0.02)),
+        ..SchedConfig::default()
+    }
+}
+
+#[test]
+fn replay_transitions_are_conserved_across_kill_and_restore() {
+    // The collection schedule is fixed by the config: every round, every
+    // collector dispenses m whole env-steps of n_env transitions each.
+    // A mid-run GPU loss kills the tenant; the restore re-does whatever
+    // the checkpoint had not yet captured. The delivered-transition count
+    // must come out EXACT — not "at least" (nothing dropped) and not
+    // "more" (nothing double-counted by the redo).
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let spec = spread_replay_spec(20);
+    let r = run_cluster(&topo, &b, &cost, &[spec], &outage_cfg()).unwrap();
+    assert_eq!(r.fault_events, 2);
+    let j = r.job(0).unwrap();
+    assert!(j.kills >= 1, "the GPU loss must kill the spread tenant");
+    assert!(r.events.iter().any(|e| e.action == SchedAction::Kill));
+    assert!(j.completed_s > 0.0, "killed tenant never resumed to completion");
+    assert!(j.checkpoint_s > 0.0, "no checkpoint cost was charged before the kill");
+
+    let stats = j.metrics.replay.as_ref().expect("replay stats present");
+    let cfg = ReplayConfig::default();
+    let (rounds, collectors, n_env) = (20, 2, 1024);
+    let m = (cfg.push_samples / n_env).max(1);
+    assert_eq!(
+        stats.transitions_in,
+        rounds * collectors * m * n_env,
+        "transitions not conserved across kill + restore"
+    );
+    assert!(stats.updates > 0, "learner never applied an update");
+}
+
+#[test]
+fn replay_staleness_is_bounded_and_nan_free() {
+    // Round 0 runs the learner pass before any collection, so the
+    // empty-buffer path is exercised on every run — it must count empty
+    // ticks and keep every staleness/pressure statistic finite (the
+    // historical failure mode is 0/0 -> NaN on the empty buffer).
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let layout = build_async_layout(&topo, 1, 2, 1, 2048, &cost).unwrap();
+    let cfg = ReplayConfig { rounds: 8, ..ReplayConfig::default() };
+    let r = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+    let stats = r.metrics.replay.as_ref().expect("replay stats present");
+    assert!(stats.empty_ticks >= 1, "round-0 learner pass must hit the empty buffer");
+    assert!(stats.updates > 0 && stats.transitions_sampled > 0, "learner never sampled");
+    for (name, v) in [
+        ("mean_staleness_s", stats.mean_staleness_s),
+        ("max_staleness_s", stats.max_staleness_s),
+        ("mean_pressure", stats.mean_pressure),
+        ("peak_pressure", stats.peak_pressure),
+    ] {
+        assert!(v.is_finite(), "{name} is not finite: {v}");
+    }
+    assert!(stats.mean_staleness_s >= 0.0);
+    assert!(stats.mean_staleness_s <= stats.max_staleness_s);
+    assert!(
+        stats.max_staleness_s <= r.metrics.span_s,
+        "a sampled transition cannot be older than the run itself ({} > {})",
+        stats.max_staleness_s,
+        r.metrics.span_s
+    );
+    assert!(stats.mean_pressure >= 0.0 && stats.mean_pressure <= stats.peak_pressure);
+    assert!(stats.peak_pressure <= 1.0, "buffer exceeded its memory budget");
+    assert!(r.metrics.final_reward.is_finite());
+}
+
+#[test]
+fn league_matchmaker_is_fair_and_spawns_through_admission() {
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(1);
+    let cfg = LeagueConfig {
+        players: 4,
+        total_matches: 8,
+        max_concurrent: 2,
+        match_rounds: 2,
+        match_num_env: 256,
+        match_share: 0.2,
+        match_priority: 3,
+        seed: 11,
+    };
+    let spec = JobSpec::league(0, "league", 5, 0.0, 0.2, cfg.clone());
+    let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
+
+    // Every match exists as a real tenant: spawned, admitted, completed.
+    assert_eq!(r.jobs.len(), 1 + cfg.total_matches);
+    let spawns = r.events.iter().filter(|e| e.action == SchedAction::Spawn).count();
+    assert_eq!(spawns, cfg.total_matches);
+    let mut names: Vec<&str> = Vec::new();
+    for j in &r.jobs {
+        if j.id == 0 {
+            assert_eq!(j.kind, "league");
+            continue;
+        }
+        assert_eq!(j.kind, "closed", "match tenants are closed-loop jobs");
+        assert!(j.completed_s > 0.0, "match {} never completed", j.id);
+        assert!(
+            r.events
+                .iter()
+                .any(|e| e.action == SchedAction::Admit && e.job == j.id),
+            "match {} was never admitted through the normal path",
+            j.id
+        );
+        names.push(&j.name);
+    }
+    names.sort_unstable();
+    let mut expected: Vec<String> =
+        (0..cfg.total_matches).map(|k| format!("match{k}")).collect();
+    expected.sort_unstable();
+    assert_eq!(names, expected, "spawned matches are not the scheduled set");
+
+    // Fairness of the circle schedule: over any prefix, per-player match
+    // counts stay within one of each other.
+    for prefix in 1..=cfg.total_matches {
+        let mut counts = vec![0usize; cfg.players];
+        for k in 0..prefix {
+            let (a, bb) = cfg.pairing(k as u64);
+            counts[a] += 1;
+            counts[bb] += 1;
+        }
+        let lo = *counts.iter().min().unwrap();
+        let hi = *counts.iter().max().unwrap();
+        assert!(
+            hi - lo <= 1,
+            "unfair matchmaking after {prefix} matches: counts {counts:?}"
+        );
+    }
+
+    // The coordinator reported a win-rate table (one curve point per
+    // player) built from real match outcomes.
+    let coord = r.job(0).unwrap();
+    assert_eq!(coord.metrics.reward_curve.len(), cfg.players);
+    assert!(coord.metrics.final_reward > 0.0, "nobody ever won a match");
+}
+
+#[test]
+fn kill_preserves_first_admission_wait_and_reports_recovery_separately() {
+    // Regression: a tenant admitted at arrival (wait 0) that is killed by
+    // a hardware failure and re-admitted after the repair must still
+    // report zero queue wait — the time spent waiting out the outage is
+    // recovery_s, not wait_s. Conflating the two made faulted days look
+    // like admission-queue congestion.
+    let b = bench();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let spec = spread_replay_spec(20);
+    let r = run_cluster(&topo, &b, &cost, &[spec], &outage_cfg()).unwrap();
+    let j = r.job(0).unwrap();
+    assert!(j.kills >= 1, "the GPU loss must kill the spread tenant");
+    assert!(j.completed_s > 0.0);
+    let readmit = r
+        .events
+        .iter()
+        .find(|e| e.action == SchedAction::Admit && e.detail.contains("re-admitted"))
+        .expect("no re-admission event after the repair");
+    assert!(readmit.t_s > 0.0);
+    assert_eq!(j.wait_s, 0.0, "outage time leaked into queue wait");
+    assert_eq!(j.admitted_s, 0.0, "re-admission overwrote the first admission time");
+    assert!(
+        j.recovery_s > 0.0,
+        "the kill-to-resume outage must be accounted as recovery"
+    );
+}

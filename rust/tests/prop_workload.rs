@@ -22,6 +22,8 @@ use gmi_drl::metrics::RunMetrics;
 use gmi_drl::sched::{run_cluster, JobKind, JobSpec, SchedAction, SchedConfig};
 use gmi_drl::serve::{generate_trace, run_gateway, GatewayConfig, TrafficPattern};
 use gmi_drl::vtime::CostModel;
+use gmi_drl::workload::replay::run_replay;
+use gmi_drl::workload::ReplayConfig;
 
 fn bits(x: f64) -> u64 {
     x.to_bits()
@@ -49,6 +51,7 @@ fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
         assert_eq!(bits(x.busy_s), bits(y.busy_s), "{what}: link busy {}", x.name);
     }
     assert_eq!(a.latency, b.latency, "{what}: latency stats");
+    assert_eq!(a.replay, b.replay, "{what}: replay stats");
 }
 
 /// A hand-built layout mirroring the scheduler's placement for `specs`:
@@ -244,6 +247,43 @@ fn a3c_single_tenant_matches_standalone_bit_for_bit() {
         &r.job(0).unwrap().metrics,
         "a3c standalone vs single-tenant",
     );
+}
+
+#[test]
+fn replay_single_tenant_matches_standalone_bit_for_bit() {
+    let b = static_registry()["AY"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    // Scheduler placement for a (collectors=1) + learner tenant at 0.5
+    // share: collector member 0 -> GPU 0, learner member 1 -> GPU 1
+    // (JobSpec::replay's 4 GiB footprint).
+    let (manager, _) = mirror_layout(&topo, &[
+        (0, 0.5, 4.0, Role::SimAgent, 2048),
+        (1, 0.5, 4.0, Role::Trainer, 0),
+    ]);
+    let layout = Layout {
+        manager,
+        rollout_gmis: vec![0],
+        trainer_gmis: vec![1],
+        gmi_per_gpu: 1,
+        num_env_per_gmi: 2048,
+        backend: GmiBackend::Mps,
+    };
+    let cfg = ReplayConfig { rounds: 6, push_samples: 4096, ..ReplayConfig::default() };
+    let standalone = run_replay(&layout, &b, &cost, &Compute::Null, &cfg).unwrap();
+
+    let spec = JobSpec::replay(0, "replay", 5, 0.0, 1, 0.5, 0.25, 2048, cfg.clone());
+    let r = run_cluster(&topo, &b, &cost, &[spec], &SchedConfig::default()).unwrap();
+    let job = r.job(0).unwrap();
+    assert_metrics_identical(
+        &standalone.metrics,
+        &job.metrics,
+        "replay standalone vs single-tenant",
+    );
+    // The buffer ledger itself is part of the metrics — identical too
+    // (covered by assert_metrics_identical, spot-checked here for sanity).
+    let stats = job.metrics.replay.as_ref().unwrap();
+    assert!(stats.transitions_in > 0 && stats.updates > 0);
 }
 
 #[test]

@@ -56,7 +56,9 @@ fn main() {
         let requests = jobs
             .iter()
             .map(|j| match &j.kind {
-                gmi_drl::sched::JobKind::Serving { trace, .. } => trace.len(),
+                gmi_drl::sched::JobKind::Serving { trace, .. } => {
+                    trace.len_hint().unwrap_or_else(|| trace.count_and_last().0)
+                }
                 _ => 0,
             })
             .sum::<usize>();

@@ -1,0 +1,198 @@
+//! Cluster-week replay (the week-scale fast-path tentpole bench): the
+//! seeded week scenario — an early-finishing training tenant, a diurnal
+//! serving fleet cycling through seven day/night swings, and a bursty
+//! gateway with a mid-week spike — run twice on the same topology:
+//!
+//! * **fast**: streaming traces, macro-request aggregation, capped
+//!   seeded-reservoir latency windows, and idle-round fast-forward;
+//! * **naive**: every optimization disabled — materialized traces, no
+//!   coalescing, exact latency logs, every quantum stepped.
+//!
+//! Both runs report simulated seconds per wall second, retired events per
+//! second, and the process's peak-RSS watermark. The fast run executes
+//! FIRST because `VmHWM` is monotonic: its watermark is read before the
+//! naive run can raise it, so the RSS ratio is a true fast-vs-naive
+//! comparison inside one process.
+//!
+//! Default mode shrinks the week 8x so CI stays quick (the naive loop is
+//! the cost; a full naive week is ~30 M quanta). `--full` runs the real
+//! 604 800-second week and enforces the tentpole gates in-binary:
+//! >= 10x sim-s/wall-s and >= 5x lower peak RSS than the naive week.
+//!
+//! `--bless` writes `BENCH_cluster_week.json`; `--check <baseline.json>`
+//! compares the fast configuration's sim-s-per-wall-s against the
+//! committed baseline (bootstrap/null baselines warn and pass).
+
+mod common;
+
+use std::time::Instant;
+
+use common::Json;
+use gmi_drl::cluster::Topology;
+use gmi_drl::metrics::Table;
+use gmi_drl::sched::{run_cluster, week_scenario, FastForward, SchedConfig, WeekOpts};
+
+const WEEK_S: f64 = 604_800.0;
+
+struct Run {
+    label: &'static str,
+    wall_s: f64,
+    sim_per_wall: f64,
+    events_per_s: f64,
+    served: usize,
+    rss_kib: Option<u64>,
+}
+
+fn one_run(
+    topo: &Topology,
+    b: &gmi_drl::BenchInfo,
+    cost: &gmi_drl::vtime::CostModel,
+    week_s: f64,
+    opts: &WeekOpts,
+    ff: FastForward,
+    label: &'static str,
+) -> Run {
+    let cfg = SchedConfig { fast_forward: ff, ..SchedConfig::default() };
+    let jobs = week_scenario(topo, week_s, 11, opts);
+    let t0 = Instant::now();
+    let r = run_cluster(topo, b, cost, &jobs, &cfg).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let rounds = (r.makespan_s / cfg.quantum_s).ceil() as u64;
+    let served: usize = r
+        .jobs
+        .iter()
+        .filter_map(|j| j.metrics.latency.as_ref())
+        .map(|l| l.served)
+        .sum();
+    let events = served as u64 + r.events.len() as u64 + rounds;
+    Run {
+        label,
+        wall_s: wall,
+        sim_per_wall: r.makespan_s / wall,
+        events_per_s: events as f64 / wall,
+        served,
+        // Monotonic high watermark: meaningful only in fast-then-naive order.
+        rss_kib: common::peak_rss_kib(),
+    }
+}
+
+fn main() {
+    common::header(
+        "cluster week: streaming + aggregation + fast-forward vs the naive loop",
+        "EXPERIMENTS.md §Scale protocol",
+    );
+    let (b, cost) = common::bench("AT");
+    let topo = Topology::dgx_a100(2);
+
+    let full = std::env::args().any(|a| a == "--full");
+    let week_s = if full { WEEK_S } else { WEEK_S / 8.0 };
+
+    // Fast FIRST (see the module docs: VmHWM only goes up).
+    let fast = one_run(
+        &topo,
+        &b,
+        &cost,
+        week_s,
+        &WeekOpts::fast(),
+        FastForward::On,
+        "fast",
+    );
+    let naive = one_run(
+        &topo,
+        &b,
+        &cost,
+        week_s,
+        &WeekOpts::disabled(),
+        FastForward::Off,
+        "naive",
+    );
+
+    let mut t = Table::new(&[
+        "config",
+        "served",
+        "wall (s)",
+        "sim-s/wall-s",
+        "events/s",
+        "peak RSS (KiB)",
+    ]);
+    for r in [&fast, &naive] {
+        t.row(vec![
+            r.label.to_string(),
+            r.served.to_string(),
+            format!("{:.2}", r.wall_s),
+            format!("{:.0}", r.sim_per_wall),
+            format!("{:.0}", r.events_per_s),
+            r.rss_kib.map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+
+    let speed_ratio = fast.sim_per_wall / naive.sim_per_wall.max(1e-12);
+    let rss_ratio = match (fast.rss_kib, naive.rss_kib) {
+        (Some(f), Some(n)) if f > 0 => Some(n as f64 / f as f64),
+        _ => None,
+    };
+    println!(
+        "\n{} week ({week_s:.0}s sim): fast path {speed_ratio:.1}x the naive loop{}",
+        if full { "full" } else { "1/8-scale" },
+        rss_ratio
+            .map(|r| format!(", {r:.1}x lower peak RSS"))
+            .unwrap_or_default(),
+    );
+    if !full {
+        println!("(pass --full for the real 604800s week and the tentpole gates)");
+    }
+
+    // The tentpole gates bind on the full week; the shrunken CI week still
+    // sanity-checks that fast-forward is actually engaged.
+    if full {
+        assert!(
+            speed_ratio >= 10.0,
+            "week-scale gate: fast path only {speed_ratio:.1}x the naive loop (need >= 10x)"
+        );
+        if let Some(r) = rss_ratio {
+            assert!(
+                r >= 5.0,
+                "week-scale gate: peak RSS only {r:.1}x lower than naive (need >= 5x)"
+            );
+        }
+    } else {
+        assert!(
+            speed_ratio >= 2.0,
+            "shrunken week: fast path only {speed_ratio:.1}x the naive loop (need >= 2x)"
+        );
+    }
+
+    let (check, bless) = common::perf_args();
+    let fields = [
+        ("bench", Json::Str("cluster_week".into())),
+        ("status", Json::Str("measured".into())),
+        ("week_s", Json::Num(week_s)),
+        ("full", Json::Str(full.to_string())),
+        ("sim_s_per_wall_s", Json::Num(fast.sim_per_wall)),
+        ("events_per_s", Json::Num(fast.events_per_s)),
+        ("naive_sim_s_per_wall_s", Json::Num(naive.sim_per_wall)),
+        ("speed_ratio", Json::Num(speed_ratio)),
+        (
+            "fast_peak_rss_kib",
+            fast.rss_kib.map_or(Json::Null, Json::Int),
+        ),
+        (
+            "naive_peak_rss_kib",
+            naive.rss_kib.map_or(Json::Null, Json::Int),
+        ),
+        (
+            "rss_ratio",
+            rss_ratio.map_or(Json::Null, Json::Num),
+        ),
+    ];
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_cluster_week.json");
+    // Gate BEFORE bless (same-path self-comparison hazard).
+    if let Some(baseline) = check {
+        common::gate_throughput(&baseline, "sim_s_per_wall_s", fast.sim_per_wall);
+    }
+    if bless {
+        common::write_json(out, &fields).unwrap();
+        println!("blessed {out}");
+    }
+}

@@ -163,6 +163,7 @@ fn main() {
         admission_cap: None,
         slo_s: 20e-3,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     let t0 = Instant::now();
     let r = run_gateway(&fleet2, &b4, &cost4, &trace, &cfg).unwrap();

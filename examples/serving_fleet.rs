@@ -60,6 +60,7 @@ fn main() -> Result<()> {
         admission_cap: None,
         slo_s,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     let static_fleet = build_gateway_fleet(&topo, INITIAL_PER_GPU, MAX_PER_GPU, MAX_BATCH, &cost, None)?;
     let static_run = run_gateway(&static_fleet, &bench, &cost, &trace, &base_cfg)?;

@@ -37,11 +37,13 @@ use gmi_drl::mapping::{
 use gmi_drl::metrics::{fmt_rate, latency_table, Table};
 use gmi_drl::runtime::ExecServer;
 use gmi_drl::sched::{
-    corun_scenario, offpolicy_corun_scenario, run_cluster, sched_table, SchedConfig,
+    corun_scenario, offpolicy_corun_scenario, run_cluster, sched_table, week_scenario, FastForward,
+    SchedConfig, WeekOpts,
 };
 use gmi_drl::selection;
 use gmi_drl::serve::{
-    generate_trace, run_gateway, scale_table, AutoscaleConfig, GatewayConfig, TrafficPattern,
+    generate_trace, run_gateway_source, scale_table, AutoscaleConfig, GatewayConfig, TraceSource,
+    TrafficPattern,
 };
 use gmi_drl::tune::{self, TuneConfig};
 use gmi_drl::vtime::CostModel;
@@ -231,6 +233,13 @@ OPEN-LOOP SERVING (serve --trace ...):
   --window-ms MS              autoscaler evaluation window (default 50)
   --max-per-gpu K             fleet headroom per GPU (default 3x initial)
   --period S                  diurnal period (default duration/2)
+  --stream                    lazy seeded arrival stream (O(1) memory,
+                              bit-identical to the materialized trace)
+  --aggregation K             coalesce K arrivals into one macro-request
+                              (fabric hops + forward charged once per
+                              macro; default 1 = off, bit-identical)
+  --sample-cap N              seeded-reservoir latency windows capped at N
+                              samples (0 = exact/unbounded, the default)
 
 OFF-POLICY REPLAY (train-replay):
   --buffer-gib G              replay-buffer memory budget, charged against
@@ -271,6 +280,19 @@ MULTI-TENANT CO-RUN (multi):
                               last checkpoint (default off)
   --gpus-per-node N           node granularity for \"node <i>\" fault
                               targets (default 2)
+  --week                      week-scale co-run: training + a diurnal fleet
+                              + a bursty gateway over seven day/night
+                              swings (pass --duration 604800 for the full
+                              week; accepts --aggregation / --sample-cap /
+                              --materialize)
+  --materialize               with --week: materialize traces up front
+                              instead of streaming (the memory baseline)
+  --fast-forward              skip provably-quiescent scheduler rounds
+                              (timeline and metrics stay bit-identical)
+  --audit-ff                  step would-be-skipped rounds naively and
+                              error if one does observable work
+  --max-rounds N              pin the runaway guard (0 = derive from the
+                              jobs' horizon and quantum, the default)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -390,7 +412,13 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
         },
         other => bail!("unknown trace pattern {other} (constant|poisson|diurnal|burst)"),
     };
-    let requests = generate_trace(&pat, duration, seed, sources);
+    // --stream keeps the arrival trace lazy (O(1) memory, bit-identical
+    // request sequence) — the week-scale default for long durations.
+    let source = if args.flag("stream") {
+        TraceSource::streaming(&pat, duration, seed, sources)
+    } else {
+        TraceSource::from(generate_trace(&pat, duration, seed, sources))
+    };
 
     let max_batch: usize = args.get("max-batch", 32)?;
     let initial: usize = args.get("gmi-per-gpu", 2)?;
@@ -422,6 +450,8 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
     let slo_ms: f64 = args.get("slo-ms", 30.0)?;
     let window_ms: f64 = args.get("window-ms", 50.0)?;
     let cap: usize = args.get("admission-cap", 0)?;
+    let aggregation: usize = args.get("aggregation", 1)?;
+    let sample_cap: usize = args.get("sample-cap", 0)?;
     let mut cfg = GatewayConfig {
         max_batch,
         max_wait_s: args.get("max-wait-ms", 2.0)? / 1e3,
@@ -434,6 +464,8 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
             max_per_gpu: max_per,
             ..AutoscaleConfig::default()
         }),
+        aggregation: aggregation.max(1),
+        sample_cap: if sample_cap > 0 { Some(sample_cap) } else { None },
     };
 
     if autotune {
@@ -441,18 +473,20 @@ fn cmd_serve_open(args: &Args, pattern: &str) -> Result<()> {
             budget_frac: args.get("tune-budget", TuneConfig::default().budget_frac)?,
             ..TuneConfig::default()
         };
-        let rep = tune::tune_gateway(&layout, &bench, &cost, &requests, &cfg, &space, &tcfg)?;
+        let rep = tune::tune_gateway_source(&layout, &bench, &cost, &source, &cfg, &space, &tcfg)?;
         print_tune_summary(&rep.choice.label(), &rep);
         cfg = rep.choice.apply(&cfg);
     }
 
+    let shown = source
+        .len_hint()
+        .map(|n| format!("{} requests", fmt_rate(n as f64)))
+        .unwrap_or_else(|| "streamed requests".into());
     println!(
-        "serve-gateway {} [{pattern}] {} requests over {duration:.2}s, fleet {}x{initial} GMIs\n",
-        bench.abbr,
-        fmt_rate(requests.len() as f64),
-        gpus
+        "serve-gateway {} [{pattern}] {shown} over {duration:.2}s, fleet {}x{initial} GMIs\n",
+        bench.abbr, gpus
     );
-    let r = run_gateway(&layout, &bench, &cost, &requests, &cfg)?;
+    let r = run_gateway_source(&layout, &bench, &cost, source, &cfg)?;
     r.metrics
         .print_summary(&format!("serve-gateway {} ({pattern})", bench.abbr));
     latency_table(&r.latency).print();
@@ -800,19 +834,48 @@ fn cmd_multi(args: &Args) -> Result<()> {
         }
         Some(plan)
     };
+    // --audit-ff cross-checks every span --fast-forward would skip by
+    // stepping it naively and erroring on observable work.
+    let fast_forward = if args.flag("audit-ff") {
+        FastForward::Audit
+    } else if args.flag("fast-forward") {
+        FastForward::On
+    } else {
+        FastForward::Off
+    };
+    let max_rounds: usize = args.get("max-rounds", 0)?;
     let cfg = SchedConfig {
         quantum_s: args.get("quantum-ms", 20.0)? / 1e3,
         preemptive: !partitioned,
         faults,
+        fast_forward,
+        max_rounds: if max_rounds > 0 { Some(max_rounds) } else { None },
         ..SchedConfig::default()
     };
+    let week = args.flag("week");
     let offpolicy = args.flag("offpolicy");
-    let jobs = if offpolicy {
+    let jobs = if week {
+        let aggregation: usize = args.get("aggregation", WeekOpts::fast().aggregation)?;
+        let sample_cap: usize = args.get("sample-cap", 8192)?;
+        let opts = WeekOpts {
+            streaming: !args.flag("materialize"),
+            aggregation: aggregation.max(1),
+            sample_cap: if sample_cap > 0 { Some(sample_cap) } else { None },
+        };
+        week_scenario(&topo, duration, seed, &opts)
+    } else if offpolicy {
         offpolicy_corun_scenario(&topo, &bench, &cost, seed)
     } else {
         corun_scenario(&topo, &bench, &cost, duration, seed, partitioned)
     };
-    if offpolicy {
+    if week {
+        println!(
+            "multi {} on {gpus} GPUs [week-scale]: {} tenants over {duration:.0}s ({:.2} days)\n",
+            bench.abbr,
+            jobs.len(),
+            duration / 86_400.0,
+        );
+    } else if offpolicy {
         println!(
             "multi {} on {gpus} GPUs [off-policy]: {} tenants (+ league match spawns)\n",
             bench.abbr,

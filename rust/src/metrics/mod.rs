@@ -91,6 +91,112 @@ pub fn percentile_select(samples: &mut [f64], q: f64) -> f64 {
     *kth
 }
 
+/// Bounded sample pool for percentile estimation: **exact below the cap,
+/// a seeded Algorithm-R reservoir above it**. The week-scale serving path
+/// pushes one latency per request; holding 10^7 f64s per window is the
+/// memory cost this bounds. Two guarantees make it safe to substitute for
+/// a plain `Vec<f64>`:
+///
+/// * while `seen() <= cap` every sample is retained in push order, so any
+///   statistic over [`samples`](Self::samples) is bit-identical to the
+///   unbounded path (the sub-cap identity the property suite locks in);
+/// * [`sum`](Self::sum) (and therefore the mean) accumulates every pushed
+///   sample in push order regardless of the cap, so means stay exact even
+///   when percentiles come from the reservoir.
+///
+/// Replacement draws come from a dedicated SplitMix64 stream seeded at
+/// construction, so capped runs replay bit-identically too.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleReservoir {
+    cap: usize,
+    rng_state: u64,
+    seen: u64,
+    sum: f64,
+    samples: Vec<f64>,
+}
+
+impl SampleReservoir {
+    /// Unbounded: behaves exactly like a `Vec<f64>` push log.
+    pub fn unbounded() -> Self {
+        SampleReservoir::capped(usize::MAX, 0)
+    }
+
+    /// Retain at most `cap` samples (`cap >= 1`), replacing uniformly at
+    /// random from the seeded stream once full.
+    pub fn capped(cap: usize, seed: u64) -> Self {
+        SampleReservoir {
+            cap: cap.max(1),
+            rng_state: seed,
+            seen: 0,
+            sum: 0.0,
+            samples: Vec::new(),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.rng_state = self.rng_state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng_state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.sum += v;
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Algorithm R: replace slot j ~ U[0, seen) if it lands in the
+            // reservoir. `seen` already counts v, so the draw is over the
+            // full stream so far.
+            let j = (self.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    /// Total samples pushed (not the retained count).
+    pub fn seen(&self) -> usize {
+        self.seen as usize
+    }
+
+    /// Exact running sum over every pushed sample, in push order.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Whether every pushed sample is still retained (sub-cap regime).
+    pub fn is_exact(&self) -> bool {
+        self.seen as usize <= self.cap
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Heap capacity of the retained-sample buffer (pool-stability
+    /// checks; NOT the configured cap).
+    pub fn capacity(&self) -> usize {
+        self.samples.capacity()
+    }
+
+    /// Mutable view for in-place [`percentile_select`].
+    pub fn samples_mut(&mut self) -> &mut [f64] {
+        &mut self.samples
+    }
+
+    /// Reset the sample log and accumulators for the next window. The
+    /// replacement RNG stream intentionally carries across windows — one
+    /// seed per program replays the whole run deterministically.
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.seen = 0;
+        self.sum = 0.0;
+    }
+}
+
 /// Per-GPU SM-time accounting: utilization = busy SM-seconds / (span * SMs).
 #[derive(Debug, Default, Clone)]
 pub struct UtilizationTracker {
@@ -411,6 +517,62 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Sub-cap identity: while the stream fits under the cap, the
+    /// reservoir IS the plain push log — identical retained samples (in
+    /// push order), identical sums, so every downstream statistic is
+    /// bit-identical to the unbounded path.
+    #[test]
+    fn reservoir_below_cap_is_bit_identical_to_a_vec() {
+        let mut state = 0x1234_5678u64;
+        let mut next = move || {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            (z ^ (z >> 31)) as f64 / u64::MAX as f64
+        };
+        let stream: Vec<f64> = (0..500).map(|_| next()).collect();
+        let mut res = SampleReservoir::capped(500, 99);
+        let mut unb = SampleReservoir::unbounded();
+        let mut vec_sum = 0.0;
+        for &v in &stream {
+            res.push(v);
+            unb.push(v);
+            vec_sum += v;
+        }
+        assert!(res.is_exact());
+        assert_eq!(res.samples(), &stream[..]);
+        assert_eq!(res.samples(), unb.samples());
+        assert_eq!(res.sum().to_bits(), vec_sum.to_bits());
+        assert_eq!(res.seen(), 500);
+
+        // Over the cap: bounded retention, exact sum, deterministic replay.
+        let mut a = SampleReservoir::capped(64, 7);
+        let mut b = SampleReservoir::capped(64, 7);
+        let mut sum = 0.0;
+        for i in 0..10_000 {
+            let v = (i as f64).sin().abs();
+            a.push(v);
+            b.push(v);
+            sum += v;
+        }
+        assert!(!a.is_exact());
+        assert_eq!(a.samples().len(), 64);
+        assert_eq!(a.seen(), 10_000);
+        assert_eq!(a.sum().to_bits(), sum.to_bits(), "sum must stay exact past the cap");
+        assert_eq!(a, b, "capped reservoir drifted across identical replays");
+        // A different seed retains a different subset (overwhelmingly).
+        let mut c = SampleReservoir::capped(64, 8);
+        for i in 0..10_000 {
+            c.push((i as f64).sin().abs());
+        }
+        assert_ne!(a.samples(), c.samples());
+        // clear() resets the window but keeps replaying deterministically.
+        a.clear();
+        assert_eq!((a.seen(), a.samples().len()), (0, 0));
+        assert_eq!(a.sum(), 0.0);
     }
 
     #[test]

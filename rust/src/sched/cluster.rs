@@ -88,12 +88,21 @@ pub struct SchedConfig {
     /// pressure-off: grown members retire and preempted tenants restore.
     /// Between the two thresholds nothing moves (hysteresis).
     pub restore_frac: f64,
-    /// Hard cap on scheduling rounds (runaway guard).
-    pub max_rounds: usize,
+    /// Hard cap on scheduling rounds (runaway guard). `None` (the
+    /// default) derives the cap from the jobs' own horizon: four times
+    /// the rounds their serving traces span at `quantum_s`, floored at
+    /// the historical 1,000,000 so short runs keep the old guard. A flat
+    /// cap would silently forbid long runs — a simulated week at the
+    /// default 0.02 s quantum is ~30.2 M rounds — so only set `Some(n)`
+    /// to pin an explicit budget.
+    pub max_rounds: Option<usize>,
     /// Failure injection + checkpoint cadence ([`FaultPlan`]); `None`
     /// runs the cluster failure-free (the historical behavior,
     /// bit-identical timelines).
     pub faults: Option<FaultPlan>,
+    /// Idle-round fast-forward: skip provably-quiescent quanta (see
+    /// [`FastForward`]). `Off` preserves the historical naive cadence.
+    pub fast_forward: FastForward,
 }
 
 impl Default for SchedConfig {
@@ -102,10 +111,32 @@ impl Default for SchedConfig {
             quantum_s: 0.02,
             preemptive: true,
             restore_frac: 0.5,
-            max_rounds: 1_000_000,
+            max_rounds: None,
             faults: None,
+            fast_forward: FastForward::Off,
         }
     }
+}
+
+/// Idle-round fast-forward policy: whether the round loop may jump the
+/// clock over quanta in which provably nothing observable can happen
+/// (every running tenant's [`Workload::next_event_hint`] lies beyond the
+/// span, no queued arrival is due, no restore is pending, and no fault or
+/// checkpoint boundary falls inside it). Skipping whole integer rounds
+/// preserves `now = round * quantum` bit-for-bit, so the produced
+/// timeline and metrics are identical to the naive loop's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FastForward {
+    /// Never skip: step every round (the historical behavior).
+    #[default]
+    Off,
+    /// Jump directly from each active round to the next round that can
+    /// observe an event.
+    On,
+    /// Compute the same skip spans as [`FastForward::On`] but step them
+    /// naively, erroring if a "quiescent" round did observable work.
+    /// The cross-check mode for validating hint implementations.
+    Audit,
 }
 
 /// Sentinel [`JobId`] on cluster-scoped timeline entries (hardware
@@ -509,13 +540,21 @@ impl Cluster<'_> {
 
     fn run(&mut self) -> Result<()> {
         let q = self.cfg.quantum_s;
+        let max_rounds = self.cfg.max_rounds.unwrap_or_else(|| self.derived_max_rounds(q));
         let mut round = 0usize;
+        // Audit mode: rounds below this index were predicted quiescent by
+        // an earlier `next_active_round` and must not do observable work.
+        let mut audit_until = 0usize;
         while self.tenants.iter().any(|t| t.state != State::Done) {
             anyhow::ensure!(
-                round < self.cfg.max_rounds,
-                "scheduler exceeded {} rounds (runaway guard)",
-                self.cfg.max_rounds
+                round < max_rounds,
+                "scheduler exceeded {} rounds (runaway guard; set \
+                 SchedConfig::max_rounds = Some(n) to raise the derived cap)",
+                max_rounds
             );
+            let audited = round < audit_until;
+            let pre_events = self.events.len();
+            let pre_fault_cursor = self.fault_cursor;
             let now = round as f64 * q;
             // Computed the same way the next round's `now` will be, so
             // round boundaries are bit-identical across rounds.
@@ -547,13 +586,118 @@ impl Cluster<'_> {
             // Coordinator programs may have requested child tenants while
             // stepping; they join the queue and admit from the next round.
             self.drain_spawn_requests(now, round_end)?;
+            if audited {
+                // `placement_dirty` was cleared by the previous round's
+                // track_peaks, so it is set here iff THIS round moved
+                // placement; checked before track_peaks clears it again.
+                let quiet = self.events.len() == pre_events
+                    && self.fault_cursor == pre_fault_cursor
+                    && !self.placement_dirty
+                    && self.tenants.iter().all(|t| !t.done);
+                anyhow::ensure!(
+                    quiet,
+                    "fast-forward audit: round {round} (t = {now:.4}s) was \
+                     predicted quiescent but did observable work"
+                );
+            }
             // Sample occupancy peaks BEFORE completions release GMIs, so a
             // tenant admitted and finished within one round is observed.
             self.track_peaks();
             self.completions(now, round_end);
-            round += 1;
+            round = match self.cfg.fast_forward {
+                FastForward::Off => round + 1,
+                FastForward::On => self.next_active_round(round, q, max_rounds),
+                FastForward::Audit => {
+                    let target = self.next_active_round(round, q, max_rounds);
+                    audit_until = audit_until.max(target);
+                    round + 1
+                }
+            };
         }
         Ok(())
+    }
+
+    /// Runaway cap when `SchedConfig::max_rounds` is `None`: four times
+    /// the rounds the jobs' own horizons imply (serving-trace end plus
+    /// arrival offset), floored at the historical 1,000,000. Training
+    /// tenants have no intrinsic horizon; the 4x slack over the serving
+    /// span (plus the floor) covers their drain time.
+    fn derived_max_rounds(&self, q: f64) -> usize {
+        let mut horizon = 0.0f64;
+        for t in &self.tenants {
+            let end = match &t.spec.kind {
+                JobKind::Serving { trace, .. } | JobKind::Gateway { trace, .. } => trace.end_s(),
+                _ => 0.0,
+            };
+            horizon = horizon.max(t.spec.arrival_s + end);
+        }
+        let derived = (4.0 * (horizon / q).ceil()).min(1e18);
+        (derived as usize).max(1_000_000)
+    }
+
+    /// Fast-forward: the next round index that could observe an event.
+    /// Returns `round + 1` (the naive cadence) unless EVERY per-round
+    /// pass is provably a no-op over the skipped span:
+    ///
+    /// - every Running tenant's program gives a [`Workload::next_event_hint`]
+    ///   (a `None` hint means "step me every round"), and has no pending
+    ///   child results and no restore flag (restore_pass acts each round);
+    /// - no Queued tenant is already due (admission retries each round);
+    /// - the span contains no fault event, no checkpoint boundary, no
+    ///   queued arrival, and no tenant hint.
+    ///
+    /// The target is computed conservatively LOW — an early stop just
+    /// steps one naive (idle) round; a late one would skip observable
+    /// work. Jumping whole integer rounds keeps `now = round * q`
+    /// bit-identical with the naive loop at every processed round.
+    fn next_active_round(&mut self, round: usize, q: f64, max_rounds: usize) -> usize {
+        let next = round + 1;
+        let now_next = next as f64 * q;
+        let mut bound = f64::INFINITY;
+        for t in &self.tenants {
+            match t.state {
+                State::Queued => {
+                    if t.spec.arrival_s <= now_next + 1e-12 {
+                        return next;
+                    }
+                    bound = bound.min(t.spec.arrival_s);
+                }
+                State::Running => {
+                    if t.needs_restore || !t.pending.is_empty() {
+                        return next;
+                    }
+                }
+                State::Done => {}
+            }
+        }
+        for i in 0..self.tenants.len() {
+            if self.tenants[i].state != State::Running {
+                continue;
+            }
+            let Some(p) = self.tenants[i].program.as_mut() else {
+                return next;
+            };
+            match p.next_event_hint() {
+                Some(t_ev) => bound = bound.min(t_ev),
+                None => return next,
+            }
+        }
+        if let Some(plan) = self.cfg.faults.as_ref() {
+            if let Some(ev) = plan.trace.events.get(self.fault_cursor) {
+                bound = bound.min(ev.t_s);
+            }
+        }
+        bound = bound.min(self.next_checkpoint_s);
+        if !bound.is_finite() {
+            // No future event yet tenants aren't Done — unreachable (a
+            // drained program hints None), but step naively over spinning.
+            return next;
+        }
+        // First round whose quantum can interact with an event at `bound`,
+        // biased low so float rounding can only cost extra naive rounds.
+        let cap = (max_rounds.saturating_sub(1)) as f64;
+        let lo = (((bound - 1e-12) / q).floor().max(0.0)).min(cap) as usize;
+        lo.max(next)
     }
 
     /// Running tenants of one kind, priority-descending then id-ascending,

@@ -12,8 +12,6 @@
 //! run loops drive, so the scheduler contains no per-kind execution logic
 //! at all — one implementation per workload, shared everywhere.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use crate::cluster::Topology;
@@ -21,7 +19,7 @@ use crate::drl::a3c::AsyncConfig;
 use crate::drl::serving::ServingConfig;
 use crate::drl::sync::SyncConfig;
 use crate::gmi::Role;
-use crate::serve::{GatewayConfig, Request};
+use crate::serve::{GatewayConfig, TraceSource};
 use crate::tune::AdmissionTune;
 use crate::workload::{
     AsyncProgram, ClosedServingProgram, GatewayProgram, LeagueConfig, LeagueProgram,
@@ -55,9 +53,12 @@ pub enum JobKind {
     /// raises pressure: the scheduler grows the fleet, preempting
     /// lower-priority tenants if it must.
     Serving {
-        /// Shared immutable arrival trace (`Arc`: building the tenant's
-        /// program clones a pointer, not the request log).
-        trace: Arc<[Request]>,
+        /// Arrival stream: either a shared materialized trace (`Arc`
+        /// backing — building the tenant's program clones a pointer, not
+        /// the request log) or a lazily generated seeded stream
+        /// ([`TraceSource::streaming`] — a week-long trace at O(1)
+        /// memory).
+        trace: TraceSource,
         slo_p99_s: f64,
         max_batch: usize,
     },
@@ -66,7 +67,7 @@ pub enum JobKind {
     /// cap): the identical [`GatewayProgram`](crate::workload::GatewayProgram)
     /// `serve::run_gateway` drives. The scheduler owns fleet elasticity,
     /// so `cfg.autoscale` must be `None`.
-    Gateway { trace: Arc<[Request]>, cfg: GatewayConfig },
+    Gateway { trace: TraceSource, cfg: GatewayConfig },
     /// Closed-loop DRL serving (continuous experience collection, no
     /// arrival process) — the
     /// [`ClosedServingProgram`](crate::workload::ClosedServingProgram).
@@ -189,7 +190,7 @@ impl JobSpec {
         share: f64,
         max_batch: usize,
         slo_p99_s: f64,
-        trace: impl Into<Arc<[Request]>>,
+        trace: impl Into<TraceSource>,
     ) -> JobSpec {
         JobSpec {
             id,
@@ -219,7 +220,7 @@ impl JobSpec {
         (min, initial, max): (usize, usize, usize),
         share: f64,
         cfg: GatewayConfig,
-        trace: impl Into<Arc<[Request]>>,
+        trace: impl Into<TraceSource>,
     ) -> JobSpec {
         JobSpec {
             id,
@@ -401,12 +402,11 @@ impl JobSpec {
                     GatewayConfig {
                         max_batch: *max_batch,
                         max_wait_s: f64::INFINITY,
-                        admission_cap: None,
                         slo_s: *slo_p99_s,
-                        autoscale: None,
+                        ..GatewayConfig::default()
                     },
-                    // An `Arc` clone: every scheduler round that rebuilds a
-                    // program shares the one trace allocation.
+                    // A cursor clone: a materialized backing shares the one
+                    // trace allocation, a streaming one rewinds its seeds.
                     trace.clone(),
                 ),
             ),
@@ -455,7 +455,7 @@ impl JobSpec {
                 anyhow::ensure!(*max_batch >= 1, "job {}: max_batch must be >= 1", self.id);
                 anyhow::ensure!(*slo_p99_s > 0.0, "job {}: SLO must be positive", self.id);
                 anyhow::ensure!(
-                    trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
+                    trace.is_sorted(),
                     "job {}: trace must be sorted by arrival",
                     self.id
                 );
@@ -476,8 +476,13 @@ impl JobSpec {
                     self.id
                 );
                 anyhow::ensure!(
-                    trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
+                    trace.is_sorted(),
                     "job {}: trace must be sorted by arrival",
+                    self.id
+                );
+                anyhow::ensure!(
+                    cfg.aggregation >= 1,
+                    "job {}: aggregation must be >= 1 (1 disables coalescing)",
                     self.id
                 );
             }

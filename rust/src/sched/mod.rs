@@ -35,14 +35,14 @@ mod cluster;
 mod job;
 
 pub use cluster::{
-    run_cluster, sched_table, ClusterRunResult, JobReport, SchedAction, SchedConfig, SchedEvent,
-    CLUSTER_EVENT,
+    run_cluster, sched_table, ClusterRunResult, FastForward, JobReport, SchedAction, SchedConfig,
+    SchedEvent, CLUSTER_EVENT,
 };
 pub use job::{JobId, JobKind, JobSpec};
 
 use crate::cluster::Topology;
 use crate::config::BenchInfo;
-use crate::serve::{batch_seconds, generate_trace, TrafficPattern};
+use crate::serve::{batch_seconds, generate_trace, GatewayConfig, TraceSource, TrafficPattern};
 use crate::vtime::CostModel;
 
 /// The canonical two-tenant co-run: a low-priority sync-training job plus
@@ -83,7 +83,11 @@ pub fn corun_scenario(
         peak: 1.2 * static_capacity,
         period_s: duration_s,
     };
-    let trace = generate_trace(&pattern, duration_s, seed, 8);
+    // Streamed lazily: bit-identical to `generate_trace` on the same
+    // seeds (the traffic property suite locks this in), so the pinned
+    // scheduler goldens are unchanged while the trace itself never
+    // materializes.
+    let trace = TraceSource::streaming(&pattern, duration_s, seed, 8);
     let slo = 20e-3;
     // Enough training iterations to outlast the serving day.
     let iters = ((duration_s * 12.0).ceil() as usize).max(4);
@@ -173,6 +177,113 @@ pub fn offpolicy_corun_scenario(
     vec![train, replay, league]
 }
 
+/// Knobs of the week-scale scenario ([`week_scenario`]): which of the
+/// three cooperating fast-path mechanisms are engaged. `disabled()` is
+/// the exact-baseline configuration the week benchmark measures against.
+#[derive(Debug, Clone, Copy)]
+pub struct WeekOpts {
+    /// Stream the arrival traces lazily (O(1) memory) instead of
+    /// materializing them up front. Either way the request sequence is
+    /// bit-identical.
+    pub streaming: bool,
+    /// Macro-request aggregation factor for the serving tenants
+    /// ([`GatewayConfig::aggregation`]); 1 disables coalescing.
+    pub aggregation: usize,
+    /// Latency sample cap for the serving tenants
+    /// ([`GatewayConfig::sample_cap`]); `None` keeps every sample.
+    pub sample_cap: Option<usize>,
+}
+
+impl WeekOpts {
+    /// All three mechanisms on, sized for a simulated week.
+    pub fn fast() -> WeekOpts {
+        WeekOpts { streaming: true, aggregation: 8, sample_cap: Some(8192) }
+    }
+
+    /// The exact baseline: materialized traces, no coalescing, every
+    /// sample retained.
+    pub fn disabled() -> WeekOpts {
+        WeekOpts { streaming: false, aggregation: 1, sample_cap: None }
+    }
+}
+
+/// The week-scale co-run: an early-finishing training job plus two
+/// open-loop serving tenants — a diurnal fleet cycling through seven deep
+/// day/night swings and a bursty low-rate gateway with a mid-week spike —
+/// sharing `topo` for `duration_s` simulated seconds (a week at the
+/// default 604 800). Absolute request rates are fixed (mean ~1.5 req/s on
+/// the diurnal tenant, ~0.02 req/s plus the spike on the bursty one), so
+/// the trough stretches between arrivals span thousands of scheduler
+/// quanta — the workload the idle-round fast-forward and streaming traces
+/// exist for. Deterministic in `seed`; `topo` needs >= 2 GPUs.
+pub fn week_scenario(
+    topo: &Topology,
+    duration_s: f64,
+    seed: u64,
+    opts: &WeekOpts,
+) -> Vec<JobSpec> {
+    let g = topo.num_gpus();
+    assert!(g >= 2, "week_scenario needs at least 2 GPUs, got {g}");
+    // Seven diurnal periods regardless of the horizon, so shortened runs
+    // (tests, the bench's quick mode) keep the week's shape.
+    let day_s = duration_s / 7.0;
+    let diurnal = TrafficPattern::Diurnal { base: 0.05, peak: 3.0, period_s: day_s };
+    let burst = TrafficPattern::Burst {
+        base: 0.02,
+        burst: 50.0,
+        start_s: duration_s * 0.5,
+        len_s: day_s * 0.01,
+    };
+    let mk_trace = |pattern: &TrafficPattern, seed: u64, sources: usize| {
+        if opts.streaming {
+            TraceSource::streaming(pattern, duration_s, seed, sources)
+        } else {
+            TraceSource::from(generate_trace(pattern, duration_s, seed, sources))
+        }
+    };
+    // A training tenant that finishes early in the week: once it drains,
+    // the cluster is serving-only and the trough rounds become provably
+    // quiescent.
+    let train = JobSpec::training(0, "train-ppo", 1, 0.0, 2, 0.5, 0.25, 1024, 64);
+    let serve_cfg = GatewayConfig {
+        max_batch: 32,
+        max_wait_s: 0.05,
+        slo_s: 0.2,
+        aggregation: opts.aggregation.max(1),
+        sample_cap: opts.sample_cap,
+        ..GatewayConfig::default()
+    };
+    let serve = JobSpec::gateway(
+        1,
+        "serve-diurnal",
+        9,
+        0.0,
+        (1, 2, 4),
+        0.25,
+        serve_cfg,
+        mk_trace(&diurnal, seed, 8),
+    );
+    let spike_cfg = GatewayConfig {
+        max_batch: 64,
+        max_wait_s: 0.1,
+        slo_s: 0.5,
+        aggregation: opts.aggregation.max(1),
+        sample_cap: opts.sample_cap,
+        ..GatewayConfig::default()
+    };
+    let spike = JobSpec::gateway(
+        2,
+        "serve-burst",
+        8,
+        0.0,
+        (1, 1, 2),
+        0.25,
+        spike_cfg,
+        mk_trace(&burst, seed.wrapping_add(1), 4),
+    );
+    vec![train, serve, spike]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,5 +367,34 @@ mod tests {
             .unwrap();
         assert!(r.peak_gpu_share <= 1.0 + 1e-6);
         assert!(r.jobs.iter().all(|j| j.completed_s > 0.0), "a tenant never completed");
+    }
+
+    #[test]
+    fn week_scenario_validates_and_runs_at_a_short_horizon() {
+        // Smoke over both WeekOpts presets at a shrunken horizon: jobs
+        // pass cluster validation, the three tenants complete, and the
+        // serving jobs actually see traffic. The bit-identity of fast vs
+        // disabled is covered by the determinism suite.
+        let b = static_registry()["AT"].clone();
+        let cost = CostModel::new(&b);
+        let topo = Topology::dgx_a100(2);
+        for opts in [WeekOpts::fast(), WeekOpts::disabled()] {
+            let jobs = week_scenario(&topo, 20.0, 11, &opts);
+            assert_eq!(jobs.len(), 3);
+            for j in &jobs {
+                j.validate(&topo).unwrap();
+            }
+            let cfg = SchedConfig { fast_forward: FastForward::On, ..SchedConfig::default() };
+            let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+            assert!(r.jobs.iter().all(|j| j.completed_s > 0.0), "a tenant never completed");
+            let served: usize = r
+                .jobs
+                .iter()
+                .filter_map(|j| j.metrics.latency.as_ref())
+                .map(|l| l.served)
+                .sum();
+            assert!(served > 0, "the week's serving tenants saw no traffic");
+            assert!(r.peak_gpu_share <= 1.0 + 1e-6);
+        }
     }
 }

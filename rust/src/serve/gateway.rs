@@ -47,7 +47,7 @@ use crate::vtime::{Clock, CostModel, OpKind};
 use crate::workload::{run_to_completion, GatewayProgram, Workload};
 
 use super::autoscale::ScaleEvent;
-use super::traffic::Request;
+use super::traffic::{Request, TraceSource};
 use super::AutoscaleConfig;
 
 /// Gateway policy: admission control, dynamic batching, SLO target, and
@@ -65,6 +65,21 @@ pub struct GatewayConfig {
     pub slo_s: f64,
     /// SLO-aware elastic scaling between evaluation windows.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Macro-request aggregation factor `K`: the gateway coalesces up to
+    /// `K` consecutive arrivals into one macro-request, so fabric hops and
+    /// `PolicyFwd` are charged once at the aggregate batch size while
+    /// per-request latencies are still recorded individually (a member's
+    /// latency runs from its own arrival to the shared completion).
+    /// `K = 1` (the default) is bit-identical to no aggregation — the
+    /// week-scale fast path's opt-in coarsening knob.
+    pub aggregation: usize,
+    /// Bound on retained per-request samples (latency windows, the served
+    /// ledger, batch-size log). `None` keeps every sample (today's exact
+    /// behavior); `Some(cap)` switches latency percentiles to a seeded
+    /// reservoir that is exact below the cap, while mean/attainment stay
+    /// exact at any cap via running accumulators. A 10^7-request day then
+    /// holds O(cap) f64s per fleet instead of O(requests).
+    pub sample_cap: Option<usize>,
 }
 
 impl Default for GatewayConfig {
@@ -75,6 +90,8 @@ impl Default for GatewayConfig {
             admission_cap: None,
             slo_s: 30e-3,
             autoscale: None,
+            aggregation: 1,
+            sample_cap: None,
         }
     }
 }
@@ -265,8 +282,25 @@ pub fn run_gateway(
     trace: &[Request],
     cfg: &GatewayConfig,
 ) -> Result<GatewayRunResult> {
+    // The trace is copied ONCE here into the shared `Arc<[Request]>` the
+    // program (and any scheduler job) borrows from.
+    run_gateway_source(layout, bench, cost, TraceSource::from(trace), cfg)
+}
+
+/// [`run_gateway`] over a [`TraceSource`] — the week-scale entry point: a
+/// streaming source never materializes the trace, so arrival memory stays
+/// O(chunk) regardless of run length. Bit-identical to [`run_gateway`] on
+/// the equivalent materialized trace.
+pub fn run_gateway_source(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    trace: TraceSource,
+    cfg: &GatewayConfig,
+) -> Result<GatewayRunResult> {
     anyhow::ensure!(!layout.rollout_gmis.is_empty(), "no serving GMIs in layout");
     anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+    anyhow::ensure!(cfg.aggregation >= 1, "aggregation must be at least 1");
     anyhow::ensure!(
         cfg.max_wait_s >= 0.0 && cfg.max_wait_s.is_finite(),
         "max_wait_s must be finite and non-negative"
@@ -276,8 +310,6 @@ pub fn run_gateway(
     let mut fabric = Fabric::single_node(layout.manager.topology().clone());
     let active = engine.add_group(&layout.rollout_gmis)?;
 
-    // Config is `Copy`; the trace is copied ONCE here into the shared
-    // `Arc<[Request]>` the program (and any scheduler job) borrows from.
     let mut program = GatewayProgram::new(*cfg, trace);
     program.bind(&engine, &mut fabric, bench, &active)?;
     // The gateway charges no numerics, but the step contract carries a

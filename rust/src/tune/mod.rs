@@ -72,7 +72,7 @@ use crate::fabric::Fabric;
 use crate::gmi::{GmiBackend, GmiManager, GmiSpec};
 use crate::mapping::{build_async_layout, build_sync_layout, Layout, MappingTemplate};
 use crate::selection::{self, effective_share, SAT_ALPHA};
-use crate::serve::{batch_seconds, run_gateway, GatewayConfig, Request};
+use crate::serve::{batch_seconds, run_gateway_source, GatewayConfig, Request, TraceSource};
 use crate::vtime::{CostModel, OpKind};
 use crate::workload::{run_to_completion, SyncProgram, Workload};
 
@@ -711,10 +711,28 @@ pub fn tune_gateway(
     space: &GatewaySpace,
     tcfg: &TuneConfig,
 ) -> Result<GatewayTuneReport> {
-    anyhow::ensure!(!trace.is_empty(), "auto-tuner: empty trace");
+    // One Arc copy here; every probe prefix then shares the backing.
+    tune_gateway_source(layout, bench, cost, &TraceSource::from(trace), base, space, tcfg)
+}
+
+/// [`tune_gateway`] over a [`TraceSource`] — probes replay seeded prefix
+/// streams directly, so tuning against a week-long generated trace never
+/// materializes it (three O(prefix) sizing scans at O(1) memory, then the
+/// probes themselves). Bit-identical to the slice path on materialized
+/// traces.
+pub fn tune_gateway_source(
+    layout: &Layout,
+    bench: &BenchInfo,
+    cost: &CostModel,
+    trace: &TraceSource,
+    base: &GatewayConfig,
+    space: &GatewaySpace,
+    tcfg: &TuneConfig,
+) -> Result<GatewayTuneReport> {
     anyhow::ensure!(!layout.rollout_gmis.is_empty(), "auto-tuner: empty fleet");
-    let n = trace.len();
-    let run_horizon_s = trace[n - 1].arrival_s.max(1e-9);
+    let (n, last_arrival) = trace.count_and_last();
+    anyhow::ensure!(n > 0, "auto-tuner: empty trace");
+    let run_horizon_s = last_arrival.max(1e-9);
     let mut budget = TuneBudget::fraction_of(run_horizon_s, tcfg.budget_frac);
 
     // Candidates: the hand-picked default first (protected), then the grid
@@ -740,14 +758,23 @@ pub fn tune_gateway(
         .unwrap_or(1.0);
     // Conservative per-request serial time: unbatched forward on one GMI.
     let serial_1 = batch_seconds(bench, cost, layout.manager.topology(), share, 1);
-    let probe_bound = |_c: &GatewayChoice, fid: usize| {
-        let d = trace[fid.min(n) - 1].arrival_s;
-        2.0 * (d + fid as f64 * serial_1 / fleet.max(1.0))
-    };
 
     // Fidelity = trace-prefix length, sized so the first rung's full scan
-    // fits well inside the budget, then growing 4x per rung.
-    let prefix_for = |t: f64| trace.partition_point(|r| r.arrival_s <= t);
+    // fits well inside the budget, then growing 4x per rung. The count of
+    // arrivals inside the first budget slice comes from a lazy prefix walk
+    // (== partition_point on the materialized backing, O(1) memory on the
+    // streaming one).
+    let prefix_for = |t: f64| -> usize {
+        let mut k = 0usize;
+        for req in trace.prefix(usize::MAX) {
+            if req.arrival_s <= t {
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        k
+    };
     let target0 = budget.budget_s / (4.0 * (cands.len() as f64 + 2.0));
     let mut r = prefix_for(target0).clamp(8.min(n), n);
     let mut rungs = Vec::new();
@@ -759,6 +786,31 @@ pub fn tune_gateway(
         r = (r * 4).min(n);
     }
     let rung_last = *rungs.last().unwrap();
+
+    // Arrival time at each rung boundary (probe_bound's inputs are always
+    // rung fidelities), collected in one pass over the stream.
+    let mut rung_arrivals: Vec<(usize, f64)> = rungs.iter().map(|&v| (v, run_horizon_s)).collect();
+    {
+        let mut k = 0usize;
+        let mut i = 0usize;
+        for req in trace.prefix(rung_last) {
+            i += 1;
+            while k < rung_arrivals.len() && rung_arrivals[k].0 == i {
+                rung_arrivals[k].1 = req.arrival_s;
+                k += 1;
+            }
+        }
+    }
+    let arrival_at = |fid: usize| -> f64 {
+        rung_arrivals
+            .iter()
+            .find(|(v, _)| *v == fid.min(n))
+            .map(|&(_, a)| a)
+            .unwrap_or(run_horizon_s)
+    };
+    let probe_bound = |_c: &GatewayChoice, fid: usize| {
+        2.0 * (arrival_at(fid) + fid as f64 * serial_1 / fleet.max(1.0))
+    };
 
     // Reserve the final winner-vs-default comparison at the top fidelity.
     let reserve = 2.0 * probe_bound(&default_choice, rung_last);
@@ -773,7 +825,7 @@ pub fn tune_gateway(
             autoscale: None,
             ..*base
         };
-        match run_gateway(layout, bench, cost, &trace[..fid.min(n)], &pcfg) {
+        match run_gateway_source(layout, bench, cost, trace.prefix(fid.min(n)), &pcfg) {
             Ok(r) => {
                 let span = r.metrics.span_s.max(1e-12);
                 let feasible = r.latency.p99_s <= base.slo_s;

@@ -20,10 +20,27 @@
 //!   scheduler's historical policy for `sched::JobKind::Serving` tenants:
 //!   partial batches flush at the scheduling-round boundary (the step
 //!   horizon) instead.
+//!
+//! Three week-scale mechanisms live here too, each bit-identical to the
+//! exact path when disabled:
+//!
+//! * **Streaming arrivals** — the program consumes a [`TraceSource`]
+//!   cursor, so a lazily generated week-long trace is never materialized;
+//!   a wrapped `Arc<[Request]>` replays the classic path unchanged.
+//! * **Macro-request aggregation** ([`GatewayConfig::aggregation`]) — `K`
+//!   consecutive admitted arrivals coalesce into one macro-request. A
+//!   dispatch takes up to `max_batch` *macros*, charging the fabric hops
+//!   and `PolicyFwd` once at the aggregate request count, while each
+//!   member request's latency still runs from its own arrival to the
+//!   shared completion. `K = 1` closes every macro on arrival and replays
+//!   today's per-request path bit-for-bit.
+//! * **Bounded samples** ([`GatewayConfig::sample_cap`]) — latency
+//!   accumulation runs through seeded [`SampleReservoir`]s (exact below
+//!   the cap) and the diagnostic ledgers stop growing at the cap, so
+//!   memory stays O(cap) over a 10^7-request day.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
-use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -32,20 +49,37 @@ use crate::config::BenchInfo;
 use crate::engine::{Engine, ExecutorId};
 use crate::fabric::Fabric;
 use crate::gmi::Role;
-use crate::metrics::{percentile_select, LatencyStats, RunMetrics};
+use crate::metrics::{percentile_select, LatencyStats, RunMetrics, SampleReservoir};
 use crate::serve::autoscale::{Autoscaler, ScaleEvent};
 use crate::serve::gateway::{
     execute_dispatch_pooled, least_loaded, DispatchPlans, GatewayConfig, ServedRequest,
 };
-use crate::serve::Request;
+use crate::serve::{Request, TraceSource};
+
+/// Seed for the final latency reservoir (only drawn from once the sample
+/// cap is exceeded); fixed so every run replays bit-identically.
+const FINAL_LAT_SEED: u64 = 0x9A7E_11A7_5EED_0001;
+/// Seed for the per-window latency reservoir.
+const WINDOW_LAT_SEED: u64 = 0x9A7E_11A7_5EED_0002;
+
+/// One closed macro-request waiting in the batching queue: `count`
+/// consecutive admitted requests (their payloads sit in order on the flat
+/// request queue), plus the wait-deadline anchor of its oldest member.
+/// Plain `Copy` data — no per-macro allocation on the dispatch hot path.
+#[derive(Debug, Clone, Copy)]
+struct MacroEntry {
+    count: usize,
+    /// Arrival of the macro's FIRST member: the max-wait anchor.
+    anchor_s: f64,
+}
 
 /// Steppable open-loop gateway program (see module docs).
 pub struct GatewayProgram {
     cfg: GatewayConfig,
-    /// Shared, immutable arrival trace: the scheduler's job table and every
-    /// program instance borrow one allocation instead of deep-copying the
-    /// (potentially multi-million-request) trace per run.
-    trace: Arc<[Request]>,
+    /// Arrival cursor: either a shared materialized trace or the lazy
+    /// seeded generator. Cloned wholesale by `snapshot`, so a restored
+    /// tenant resumes mid-stream.
+    source: TraceSource,
     /// Flush partial batches at the step horizon (the scheduler's round
     /// boundary) instead of at per-request wait deadlines.
     flush_at_horizon: bool,
@@ -59,23 +93,41 @@ pub struct GatewayProgram {
     bound: bool,
     start_s: f64,
     // ---- run state ----
-    next_idx: usize,
-    pending: VecDeque<usize>,
+    /// Arrivals consumed from the source so far (admitted + rejected).
+    arrivals_seen: usize,
+    /// Admitted requests in queue order, flattened across macros.
+    pending_reqs: VecDeque<Request>,
+    /// Closed macro-requests over the head of `pending_reqs`.
+    pending_macros: VecDeque<MacroEntry>,
+    /// Members accumulated into the still-open macro (the tail of
+    /// `pending_reqs` not yet covered by `pending_macros`).
+    open_count: usize,
+    open_anchor_s: f64,
     served: Vec<ServedRequest>,
     batch_sizes: Vec<usize>,
+    /// Running dispatch counters (exact even when the ledgers are capped).
+    served_count: usize,
+    slo_hits: usize,
+    dispatch_count: usize,
+    dispatched_reqs: usize,
     rejected: usize,
     /// Admitted and not yet completed (queued + in-flight).
     outstanding: usize,
     max_queue_depth: usize,
-    /// Completion times (bit patterns) of everything in flight.
-    completions: BinaryHeap<Reverse<u64>>,
+    /// In-flight dispatches as (completion bits, request count): bit
+    /// patterns of non-negative finite times order like the values
+    /// (min-heap via Reverse), and one entry covers the whole batch.
+    completions: BinaryHeap<Reverse<(u64, usize)>>,
+    /// End-to-end latency of every served request, dispatch order; exact
+    /// until `cfg.sample_cap`, seeded reservoir beyond it.
+    final_lat: SampleReservoir,
     // ---- SLO / autoscale signals ----
     scaler: Option<Autoscaler>,
     scale_events: Vec<ScaleEvent>,
     next_window: f64,
     /// Latencies dispatched in the current autoscale window (None without
     /// an autoscaler).
-    window_lat: Option<Vec<f64>>,
+    window_lat: Option<SampleReservoir>,
     /// Latencies dispatched during the current step (the scheduler's
     /// per-round SLO pressure signal).
     step_lat: Vec<f64>,
@@ -87,24 +139,36 @@ pub struct GatewayProgram {
 
 impl GatewayProgram {
     /// Standalone dynamic-batching gateway (max-wait flush).
-    pub fn new(cfg: GatewayConfig, trace: impl Into<Arc<[Request]>>) -> Self {
+    pub fn new(cfg: GatewayConfig, trace: impl Into<TraceSource>) -> Self {
+        let final_lat = match cfg.sample_cap {
+            Some(cap) => SampleReservoir::capped(cap, FINAL_LAT_SEED),
+            None => SampleReservoir::unbounded(),
+        };
         GatewayProgram {
             cfg,
-            trace: trace.into(),
+            source: trace.into(),
             flush_at_horizon: false,
             active: Vec::new(),
             all_members: Vec::new(),
             dedicated: false,
             bound: false,
             start_s: 0.0,
-            next_idx: 0,
-            pending: VecDeque::new(),
+            arrivals_seen: 0,
+            pending_reqs: VecDeque::new(),
+            pending_macros: VecDeque::new(),
+            open_count: 0,
+            open_anchor_s: 0.0,
             served: Vec::new(),
             batch_sizes: Vec::new(),
+            served_count: 0,
+            slo_hits: 0,
+            dispatch_count: 0,
+            dispatched_reqs: 0,
             rejected: 0,
             outstanding: 0,
             max_queue_depth: 0,
             completions: BinaryHeap::new(),
+            final_lat,
             scaler: None,
             scale_events: Vec::new(),
             next_window: f64::INFINITY,
@@ -118,19 +182,22 @@ impl GatewayProgram {
     /// Scheduler-tenant variant: partial batches flush at each step's
     /// horizon (the scheduling-round boundary) and wait deadlines are
     /// disabled.
-    pub fn round_flush(mut cfg: GatewayConfig, trace: impl Into<Arc<[Request]>>) -> Self {
+    pub fn round_flush(mut cfg: GatewayConfig, trace: impl Into<TraceSource>) -> Self {
         cfg.max_wait_s = f64::INFINITY;
         let mut p = GatewayProgram::new(cfg, trace);
         p.flush_at_horizon = true;
         p
     }
 
-    /// Admitted requests in dispatch order; consumes the log.
+    /// Admitted requests in dispatch order; consumes the log. Truncated at
+    /// `cfg.sample_cap` entries when a cap is set (the running counters
+    /// and reservoirs stay exact).
     pub fn take_served(&mut self) -> Vec<ServedRequest> {
         std::mem::take(&mut self.served)
     }
 
-    /// Size of every dispatched batch, in dispatch order; consumes the log.
+    /// Size of every dispatched batch, in dispatch order; consumes the
+    /// log. Truncated at `cfg.sample_cap` entries when a cap is set.
     pub fn take_batch_sizes(&mut self) -> Vec<usize> {
         std::mem::take(&mut self.batch_sizes)
     }
@@ -145,15 +212,16 @@ impl GatewayProgram {
     }
 
     /// Capacities of the per-run reusable hot-path buffers, in a fixed
-    /// order: pending queue, in-flight completion heap, per-step latency
-    /// scratch, autoscale window scratch, pooled request plan steps,
-    /// pooled response plan steps. The no-realloc regression test snapshots
-    /// these after warmup and asserts the steady state never regrows them.
+    /// order: pending request queue, in-flight completion heap, per-step
+    /// latency scratch, autoscale window scratch, pooled request plan
+    /// steps, pooled response plan steps. The no-realloc regression test
+    /// snapshots these after warmup and asserts the steady state never
+    /// regrows them.
     #[doc(hidden)]
     pub fn hot_buffer_caps(&self) -> [usize; 6] {
         let (req, resp) = self.plans.step_caps();
         [
-            self.pending.capacity(),
+            self.pending_reqs.capacity(),
             self.completions.capacity(),
             self.step_lat.capacity(),
             self.window_lat.as_ref().map_or(0, |w| w.capacity()),
@@ -162,16 +230,38 @@ impl GatewayProgram {
         ]
     }
 
-    /// Dispatch up to `max_batch` queued requests at virtual time `t` onto
-    /// the least-loaded active member as engine events (request hop,
-    /// batched `PolicyFwd`, response hop).
+    /// Whether the ledgers (`served`, `batch_sizes`) may still grow.
+    fn ledger_open(&self, len: usize) -> bool {
+        match self.cfg.sample_cap {
+            Some(cap) => len < cap,
+            None => true,
+        }
+    }
+
+    /// Close the open partial macro (if any) into the dispatchable queue.
+    fn close_open(&mut self) {
+        if self.open_count > 0 {
+            self.pending_macros
+                .push_back(MacroEntry { count: self.open_count, anchor_s: self.open_anchor_s });
+            self.open_count = 0;
+        }
+    }
+
+    /// Dispatch up to `max_batch` queued macro-requests at virtual time
+    /// `t` onto the least-loaded active member as engine events (request
+    /// hop, `PolicyFwd`, response hop — each charged ONCE at the aggregate
+    /// request count).
     fn dispatch(&mut self, ctx: &mut StepCtx<'_>, t: f64) {
-        let n = self.pending.len().min(self.cfg.max_batch);
-        if n == 0 {
+        let n_macros = self.pending_macros.len().min(self.cfg.max_batch);
+        if n_macros == 0 {
             return;
         }
+        let mut n = 0usize;
+        for _ in 0..n_macros {
+            n += self.pending_macros.pop_front().expect("macro under-run").count;
+        }
         let ex = least_loaded(ctx.engine, &self.active);
-        let batch_idx = self.batch_sizes.len();
+        let batch_idx = self.dispatch_count;
         let done = execute_dispatch_pooled(
             ctx.engine,
             ctx.fabric,
@@ -185,36 +275,47 @@ impl GatewayProgram {
         );
         let done_s = done.seconds();
         for _ in 0..n {
-            let idx = self.pending.pop_front().expect("batch under-run");
-            let r = self.trace[idx];
-            self.served.push(ServedRequest {
-                id: r.id,
-                source: r.source,
-                arrival_s: r.arrival_s,
-                batch: batch_idx,
-                dispatch_s: t,
-                completion_s: done_s,
-            });
+            let r = self.pending_reqs.pop_front().expect("batch under-run");
+            if self.ledger_open(self.served.len()) {
+                self.served.push(ServedRequest {
+                    id: r.id,
+                    source: r.source,
+                    arrival_s: r.arrival_s,
+                    batch: batch_idx,
+                    dispatch_s: t,
+                    completion_s: done_s,
+                });
+            }
             let lat = done_s - r.arrival_s;
+            self.served_count += 1;
+            if lat <= self.cfg.slo_s + 1e-12 {
+                self.slo_hits += 1;
+            }
+            self.final_lat.push(lat);
             if let Some(w) = self.window_lat.as_mut() {
                 w.push(lat);
             }
             self.step_lat.push(lat);
-            // Completion times are non-negative finite, so their bit
-            // patterns order like the values (min-heap via Reverse).
-            self.completions.push(Reverse(done_s.to_bits()));
         }
-        self.batch_sizes.push(n);
+        // One heap entry per dispatch, not per request: retiring pops the
+        // whole batch at once (identical `outstanding` trajectory).
+        self.completions.push(Reverse((done_s.to_bits(), n)));
+        if self.ledger_open(self.batch_sizes.len()) {
+            self.batch_sizes.push(n);
+        }
+        self.dispatch_count += 1;
+        self.dispatched_reqs += n;
     }
 
     /// Process one arrival: retire due completions, apply admission
-    /// control, enqueue, and dispatch a full batch immediately.
-    fn arrive(&mut self, ctx: &mut StepCtx<'_>, idx: usize) {
-        let t = self.trace[idx].arrival_s;
-        while let Some(&Reverse(bits)) = self.completions.peek() {
+    /// control, accumulate into the open macro, and dispatch a full batch
+    /// immediately.
+    fn arrive(&mut self, ctx: &mut StepCtx<'_>, r: Request) {
+        let t = r.arrival_s;
+        while let Some(&Reverse((bits, cnt))) = self.completions.peek() {
             if f64::from_bits(bits) <= t {
                 self.completions.pop();
-                self.outstanding -= 1;
+                self.outstanding -= cnt;
             } else {
                 break;
             }
@@ -225,9 +326,26 @@ impl GatewayProgram {
         }
         self.outstanding += 1;
         self.max_queue_depth = self.max_queue_depth.max(self.outstanding);
-        self.pending.push_back(idx);
-        if self.pending.len() >= self.cfg.max_batch {
+        if self.open_count == 0 {
+            self.open_anchor_s = t;
+        }
+        self.pending_reqs.push_back(r);
+        self.open_count += 1;
+        if self.open_count >= self.cfg.aggregation.max(1) {
+            self.close_open();
+        }
+        if self.pending_macros.len() >= self.cfg.max_batch {
             self.dispatch(ctx, t);
+        }
+    }
+
+    /// Wait-deadline of the oldest queued request: the front closed macro
+    /// if any, otherwise the open partial one.
+    fn oldest_anchor(&self) -> Option<f64> {
+        match self.pending_macros.front() {
+            Some(m) => Some(m.anchor_s),
+            None if self.open_count > 0 => Some(self.open_anchor_s),
+            None => None,
         }
     }
 }
@@ -242,6 +360,7 @@ impl Workload for GatewayProgram {
     ) -> Result<()> {
         anyhow::ensure!(!members.is_empty(), "no serving GMIs in fleet");
         anyhow::ensure!(self.cfg.max_batch >= 1, "max_batch must be at least 1");
+        anyhow::ensure!(self.cfg.aggregation >= 1, "aggregation must be at least 1");
         anyhow::ensure!(self.cfg.max_wait_s >= 0.0, "max_wait_s must be non-negative");
         // An infinite wait means partial batches NEVER flush under the
         // max-wait policy: the end-of-trace drain would spin forever. Only
@@ -265,7 +384,10 @@ impl Workload for GatewayProgram {
             if let Some(a) = self.cfg.autoscale {
                 let scaler = Autoscaler::new(a, engine, members)?;
                 self.next_window = scaler.window_s();
-                self.window_lat = Some(Vec::new());
+                self.window_lat = Some(match self.cfg.sample_cap {
+                    Some(cap) => SampleReservoir::capped(cap, WINDOW_LAT_SEED),
+                    None => SampleReservoir::unbounded(),
+                });
                 self.scaler = Some(scaler);
             }
         }
@@ -294,14 +416,10 @@ impl Workload for GatewayProgram {
         self.step_lat.clear();
         let h = ctx.horizon_s;
         loop {
-            let arrivals_left = self.next_idx < self.trace.len();
-            let t_arr = if arrivals_left {
-                self.trace[self.next_idx].arrival_s
-            } else {
-                f64::INFINITY
-            };
-            let deadline = match self.pending.front() {
-                Some(&i) => self.trace[i].arrival_s + self.cfg.max_wait_s,
+            let t_arr = self.source.peek_arrival_s().unwrap_or(f64::INFINITY);
+            let arrivals_left = t_arr.is_finite();
+            let deadline = match self.oldest_anchor() {
+                Some(a) => a + self.cfg.max_wait_s,
                 None => f64::INFINITY,
             };
             // Windows only tick while arrivals remain (the standalone
@@ -315,6 +433,11 @@ impl Workload for GatewayProgram {
                 if deadline >= h {
                     break;
                 }
+                // A deadline with no closed macro is the open partial one
+                // timing out: seal it so it rides this dispatch.
+                if self.pending_macros.is_empty() {
+                    self.close_open();
+                }
                 self.dispatch(ctx, deadline);
             } else if window <= t_arr {
                 if window >= h {
@@ -322,7 +445,8 @@ impl Workload for GatewayProgram {
                 }
                 let w = window;
                 if let Some(s) = self.scaler.as_mut() {
-                    let lat = self.window_lat.as_deref().unwrap_or(&[]);
+                    let lat =
+                        self.window_lat.as_ref().map(|r| r.samples()).unwrap_or(&[]);
                     if let Some(ev) = s.evaluate(w, ctx.engine, &mut self.active, lat) {
                         self.scale_events.push(ev);
                     }
@@ -341,14 +465,16 @@ impl Workload for GatewayProgram {
                 if t_arr >= h {
                     break;
                 }
-                self.arrive(ctx, self.next_idx);
-                self.next_idx += 1;
+                let r = self.source.next().expect("peeked arrival vanished");
+                self.arrivals_seen += 1;
+                self.arrive(ctx, r);
             } else {
                 break;
             }
         }
         if self.flush_at_horizon && h.is_finite() {
-            while !self.pending.is_empty() {
+            self.close_open();
+            while !self.pending_macros.is_empty() {
                 self.dispatch(ctx, h);
             }
         }
@@ -360,7 +486,10 @@ impl Workload for GatewayProgram {
             // bit-identical to nearest-rank over a sorted copy.
             Some(percentile_select(&mut self.step_lat, 0.99))
         };
-        if self.next_idx >= self.trace.len() && self.pending.is_empty() {
+        if self.source.peek().is_none()
+            && self.pending_macros.is_empty()
+            && self.open_count == 0
+        {
             return Ok(StepOutcome::Done);
         }
         Ok(StepOutcome::Pending)
@@ -370,31 +499,70 @@ impl Workload for GatewayProgram {
         self.last_p99
     }
 
+    fn next_event_hint(&mut self) -> Option<f64> {
+        if !self.bound {
+            return None;
+        }
+        // The round after a dispatching one must run: it decays
+        // `slo_signal` to None exactly as the naive loop observes it.
+        if self.last_p99.is_some() {
+            return None;
+        }
+        let next_arr = self.source.peek_arrival_s();
+        let queued = !self.pending_macros.is_empty() || self.open_count > 0;
+        // Drained stream: the next step reports Done — let it run.
+        if next_arr.is_none() && !queued {
+            return None;
+        }
+        // Round-flush tenants flush queued work at every horizon.
+        if self.flush_at_horizon && queued {
+            return None;
+        }
+        let mut t = next_arr.unwrap_or(f64::INFINITY);
+        if !self.flush_at_horizon {
+            if let Some(a) = self.oldest_anchor() {
+                t = t.min(a + self.cfg.max_wait_s);
+            }
+        }
+        if next_arr.is_some() && self.scaler.is_some() {
+            t = t.min(self.next_window);
+        }
+        t.is_finite().then_some(t)
+    }
+
     fn snapshot(&self) -> Option<Box<dyn Workload>> {
-        // Trace position, served/latency logs, and admission state
-        // survive; the fleet, pooled dispatch plans, and autoscaler state
-        // do not — the restore placement rebinds a fresh fleet.
-        // `bound`/`start_s` carry over so the resumed program keeps its
-        // original span accounting. Queued and in-flight requests ride
-        // along (their indices and completion clocks are
-        // placement-independent global virtual times).
+        // Trace cursor, served/latency logs, and admission state survive;
+        // the fleet, pooled dispatch plans, and autoscaler state do not —
+        // the restore placement rebinds a fresh fleet. `bound`/`start_s`
+        // carry over so the resumed program keeps its original span
+        // accounting. Queued and in-flight requests ride along (their
+        // payloads and completion clocks are placement-independent global
+        // virtual times).
         Some(Box::new(GatewayProgram {
             cfg: self.cfg,
-            trace: Arc::clone(&self.trace),
+            source: self.source.clone(),
             flush_at_horizon: self.flush_at_horizon,
             active: Vec::new(),
             all_members: self.all_members.clone(),
             dedicated: self.dedicated,
             bound: self.bound,
             start_s: self.start_s,
-            next_idx: self.next_idx,
-            pending: self.pending.clone(),
+            arrivals_seen: self.arrivals_seen,
+            pending_reqs: self.pending_reqs.clone(),
+            pending_macros: self.pending_macros.clone(),
+            open_count: self.open_count,
+            open_anchor_s: self.open_anchor_s,
             served: self.served.clone(),
             batch_sizes: self.batch_sizes.clone(),
+            served_count: self.served_count,
+            slo_hits: self.slo_hits,
+            dispatch_count: self.dispatch_count,
+            dispatched_reqs: self.dispatched_reqs,
             rejected: self.rejected,
             outstanding: self.outstanding,
             max_queue_depth: self.max_queue_depth,
             completions: self.completions.clone(),
+            final_lat: self.final_lat.clone(),
             scaler: None,
             scale_events: self.scale_events.clone(),
             next_window: f64::INFINITY,
@@ -406,37 +574,31 @@ impl Workload for GatewayProgram {
     }
 
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics {
-        let mut lats: Vec<f64> = self.served.iter().map(|s| s.latency_s()).collect();
-        let total = self.trace.len();
-        let served_n = self.served.len();
-        let within = self
-            .served
-            .iter()
-            .filter(|s| s.latency_s() <= self.cfg.slo_s + 1e-12)
-            .count();
-        // Mean over dispatch order, BEFORE the selections below permute
-        // the buffer (the sum is order-sensitive in the last bits but the
-        // dispatch order is itself deterministic).
-        let mean_s = if served_n > 0 {
-            lats.iter().sum::<f64>() / served_n as f64
-        } else {
-            0.0
-        };
-        let mean_batch = if self.batch_sizes.is_empty() {
+        // `requests` counts the whole trace: consumed arrivals plus (for a
+        // materialized backing) whatever remains unconsumed. A streaming
+        // source reports what it has actually emitted.
+        let total = self.arrivals_seen + self.source.len_hint().unwrap_or(0);
+        let served_n = self.served_count;
+        // Mean over dispatch order from the reservoir's running sum — the
+        // identical fold the exact path computed, taken BEFORE the
+        // selections below permute the sample buffer.
+        let mean_s = if served_n > 0 { self.final_lat.sum() / served_n as f64 } else { 0.0 };
+        let mean_batch = if self.dispatch_count == 0 {
             0.0
         } else {
-            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+            self.dispatched_reqs as f64 / self.dispatch_count as f64
         };
+        let lats = self.final_lat.samples_mut();
         let latency = LatencyStats {
             requests: total,
             served: served_n,
             rejected: self.rejected,
-            p50_s: percentile_select(&mut lats, 0.50),
-            p95_s: percentile_select(&mut lats, 0.95),
-            p99_s: percentile_select(&mut lats, 0.99),
+            p50_s: percentile_select(lats, 0.50),
+            p95_s: percentile_select(lats, 0.95),
+            p99_s: percentile_select(lats, 0.99),
             mean_s,
             slo_s: self.cfg.slo_s,
-            attainment: if total > 0 { within as f64 / total as f64 } else { 1.0 },
+            attainment: if total > 0 { self.slo_hits as f64 / total as f64 } else { 1.0 },
             mean_batch,
             max_queue_depth: self.max_queue_depth,
         };

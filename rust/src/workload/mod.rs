@@ -234,6 +234,22 @@ pub trait Workload {
         None
     }
 
+    /// Virtual time of this program's next observable event, for the
+    /// scheduler's idle-round fast-forward
+    /// ([`crate::sched::FastForward`]): the earliest instant at which a
+    /// future `step` would do ANY work or change ANY externally observable
+    /// signal (including `slo_signal` decaying back to None). A round
+    /// whose whole quantum lies strictly before every tenant's hint is
+    /// provably quiescent and may be skipped. `None` (the default) means
+    /// "unknown — never skip over me"; it is always safe, merely slow.
+    /// Only programs whose step is a pure function of virtual-time events
+    /// (the gateway's arrival/deadline/window loop) should override this;
+    /// per-step programs (training loops, closed-loop serving) do work
+    /// every round and must keep the default.
+    fn next_event_hint(&mut self) -> Option<f64> {
+        None
+    }
+
     /// Fold the completed (or preempted-final) program state into the
     /// metrics its standalone run loop would have reported.
     fn finish(&mut self, engine: &Engine, fabric: &Fabric) -> RunMetrics;

@@ -160,6 +160,14 @@ impl Workload for ClosedServingProgram {
         Ok(())
     }
 
+    /// Closed-loop serving has an always-full queue: every round issues
+    /// real dispatch work, so no round is ever quiescent. Keep the trait
+    /// default (None = never fast-forward over this tenant) explicit so
+    /// the contrast with the open-loop gateway is visible.
+    fn next_event_hint(&mut self) -> Option<f64> {
+        None
+    }
+
     fn step(&mut self, ctx: &mut StepCtx) -> Result<StepOutcome> {
         anyhow::ensure!(self.bound, "serving program stepped before bind");
         if !self.started {

@@ -18,7 +18,10 @@ use gmi_drl::mapping::{
     MappingTemplate,
 };
 use gmi_drl::metrics::RunMetrics;
-use gmi_drl::sched::{corun_scenario, offpolicy_corun_scenario, run_cluster, JobSpec, SchedConfig};
+use gmi_drl::sched::{
+    corun_scenario, offpolicy_corun_scenario, run_cluster, week_scenario, ClusterRunResult,
+    FastForward, JobSpec, SchedConfig, WeekOpts,
+};
 use gmi_drl::workload::league::run_league;
 use gmi_drl::workload::replay::run_replay;
 use gmi_drl::workload::{Eviction, LeagueConfig, ReplayConfig};
@@ -272,6 +275,7 @@ fn gateway_is_bit_identical_across_runs() {
             max_per_gpu: 6,
             ..Default::default()
         }),
+        ..GatewayConfig::default()
     };
     let l1 = build_gateway_fleet(&topo, 2, 6, 16, &cost, None).unwrap();
     let l2 = build_gateway_fleet(&topo, 2, 6, 16, &cost, None).unwrap();
@@ -405,6 +409,7 @@ fn pinned_fingerprint_golden_matches_committed_value() {
         admission_cap: Some(4096),
         slo_s: 5e-3,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     let layout = build_gateway_fleet(&topo, 2, 6, 16, &cost, None).unwrap();
     let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
@@ -673,5 +678,163 @@ fn faulted_corun_fingerprint_golden_matches_committed_value() {
 
     let got = format!("{:016x}", fp.0);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/fault_fingerprint.txt");
+    check_golden(&got, path);
+}
+
+/// Bit-exact equality over two whole cluster runs: the scheduling
+/// timeline event-by-event plus every per-job report field. This is the
+/// contract the idle-round fast-forward must honor — skipping quanta is
+/// only legal if no observer could tell.
+fn assert_cluster_identical(a: &ClusterRunResult, b: &ClusterRunResult, what: &str) {
+    assert_eq!(a.events, b.events, "{what}: scheduling timeline diverged");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{what}: job count");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        let tag = format!("{what}: job {} ({})", x.id, x.name);
+        assert_eq!(x.id, y.id, "{tag}: id");
+        assert_eq!(x.kind, y.kind, "{tag}: kind");
+        assert_metrics_identical(&x.metrics, &y.metrics, &tag);
+        assert_eq!(bits(x.admitted_s), bits(y.admitted_s), "{tag}: admitted_s");
+        assert_eq!(bits(x.completed_s), bits(y.completed_s), "{tag}: completed_s");
+        assert_eq!(bits(x.wait_s), bits(y.wait_s), "{tag}: wait_s");
+        assert_eq!(x.preemptions, y.preemptions, "{tag}: preemptions");
+        assert_eq!(x.restores, y.restores, "{tag}: restores");
+        assert_eq!(bits(x.busy_s), bits(y.busy_s), "{tag}: busy_s");
+        assert_eq!(
+            bits(x.xjob_interference_s),
+            bits(y.xjob_interference_s),
+            "{tag}: xjob_interference_s"
+        );
+        assert_eq!(x.kills, y.kills, "{tag}: kills");
+        assert_eq!(bits(x.goodput_lost_s), bits(y.goodput_lost_s), "{tag}: goodput_lost_s");
+        assert_eq!(bits(x.recovery_s), bits(y.recovery_s), "{tag}: recovery_s");
+        assert_eq!(bits(x.checkpoint_s), bits(y.checkpoint_s), "{tag}: checkpoint_s");
+    }
+    assert_eq!(bits(a.makespan_s), bits(b.makespan_s), "{what}: makespan");
+    assert_eq!(
+        bits(a.cluster_utilization),
+        bits(b.cluster_utilization),
+        "{what}: cluster_utilization"
+    );
+    assert_eq!(bits(a.fairness), bits(b.fairness), "{what}: fairness");
+    assert_eq!(bits(a.peak_gpu_share), bits(b.peak_gpu_share), "{what}: peak_gpu_share");
+    assert_eq!(a.fault_events, b.fault_events, "{what}: fault_events");
+    assert_eq!(bits(a.goodput_lost_s), bits(b.goodput_lost_s), "{what}: goodput_lost_s");
+}
+
+#[test]
+fn fast_forward_is_bit_identical_to_the_naive_loop() {
+    // The fast-forward contract on the hardest scenario we have: the
+    // fault golden's two-tenant day (GPU loss + repair, an NVSwitch
+    // outage, periodic charged checkpoints), where skips must stop short
+    // of every fault event and checkpoint boundary. `Audit` additionally
+    // re-steps every predicted-quiescent round naively and errors if one
+    // did observable work, so it passing is the proof the hints are
+    // conservative.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let trace = "\
+        0.03 fail gpu 1\n\
+        0.05 fail nvswitch\n\
+        0.08 repair gpu 1\n\
+        0.09 repair nvswitch\n";
+    let jobs = corun_scenario(&topo, &b, &cost, 0.2, 7, false);
+    let mk = |ff: FastForward| SchedConfig {
+        faults: Some(
+            FaultPlan::new(FaultTrace::parse(trace, 1).unwrap()).with_checkpoint_interval(0.02),
+        ),
+        fast_forward: ff,
+        ..SchedConfig::default()
+    };
+    let off = run_cluster(&topo, &b, &cost, &jobs, &mk(FastForward::Off)).unwrap();
+    let on = run_cluster(&topo, &b, &cost, &jobs, &mk(FastForward::On)).unwrap();
+    let audit = run_cluster(&topo, &b, &cost, &jobs, &mk(FastForward::Audit)).unwrap();
+    assert_eq!(off.fault_events, 4);
+    assert_cluster_identical(&off, &on, "faulted day off-vs-on");
+    assert_cluster_identical(&off, &audit, "faulted day off-vs-audit");
+}
+
+#[test]
+fn fast_forward_on_a_sparse_week_slice_matches_the_naive_loop() {
+    // A shortened week scenario: the diurnal troughs put thousands of
+    // empty quanta between arrivals, so the fast-forward actually engages
+    // (unlike the dense faulted day above, where skips are rare). A fault
+    // plan in the middle of the slice checks that skips also stop short
+    // of hardware events when the gaps are long. Trace representation is
+    // pinned to the naive one (WeekOpts::disabled) so the ONLY varying
+    // knob is the round loop; streaming/aggregation identities have their
+    // own tests in prop_serve.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let jobs = week_scenario(&topo, 30.0, 11, &WeekOpts::disabled());
+    let trace = "\
+        3.0 fail gpu 1\n\
+        5.5 fail nvswitch\n\
+        8.0 repair gpu 1\n\
+        9.0 repair nvswitch\n";
+    let mk = |ff: FastForward| SchedConfig {
+        faults: Some(
+            FaultPlan::new(FaultTrace::parse(trace, 1).unwrap()).with_checkpoint_interval(1.0),
+        ),
+        fast_forward: ff,
+        ..SchedConfig::default()
+    };
+    let off = run_cluster(&topo, &b, &cost, &jobs, &mk(FastForward::Off)).unwrap();
+    let on = run_cluster(&topo, &b, &cost, &jobs, &mk(FastForward::On)).unwrap();
+    let audit = run_cluster(&topo, &b, &cost, &jobs, &mk(FastForward::Audit)).unwrap();
+    assert_eq!(off.fault_events, 4);
+    assert_cluster_identical(&off, &on, "week slice off-vs-on");
+    assert_cluster_identical(&off, &audit, "week slice off-vs-audit");
+}
+
+#[test]
+fn scale_fingerprint_golden_matches_committed_value() {
+    // The week-scale golden: a shortened week scenario under the FULL
+    // fast path — streaming traces, macro-request aggregation, capped
+    // latency reservoirs, and idle-round fast-forward all on at once.
+    // Every scheduling decision and per-job outcome is hashed and pinned,
+    // so a drift anywhere in the fast path (a skipped observable round, a
+    // coalescing change, a reservoir reseed) fails here.
+    //
+    // Blessing: delete `rust/tests/golden/scale_fingerprint.txt`, re-run,
+    // and say so in the commit.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let opts = WeekOpts { streaming: true, aggregation: 4, sample_cap: Some(512) };
+    let jobs = week_scenario(&topo, 30.0, 11, &opts);
+    let cfg = SchedConfig { fast_forward: FastForward::On, ..SchedConfig::default() };
+    let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+
+    let mut fp = Fingerprint::new();
+    fp.fold(r.events.len() as u64);
+    for e in &r.events {
+        fp.fold_f64(e.t_s);
+        fp.fold(e.job as u64);
+        for byte in e.action.to_string().bytes() {
+            fp.fold(byte as u64);
+        }
+        fp.fold(e.members as u64);
+        fp.fold_f64(e.share);
+        fp.fold(e.detail.len() as u64);
+    }
+    for j in &r.jobs {
+        fp.fold(j.id as u64);
+        fp.fold_f64(j.metrics.span_s);
+        fp.fold_f64(j.metrics.steps_per_sec);
+        fp.fold_f64(j.busy_s);
+        fp.fold_f64(j.completed_s);
+        if let Some(l) = &j.metrics.latency {
+            fp.fold(l.served as u64);
+            fp.fold_f64(l.mean_s);
+            fp.fold_f64(l.p99_s);
+        }
+    }
+    fp.fold_f64(r.makespan_s);
+    fp.fold_f64(r.cluster_utilization);
+
+    let got = format!("{:016x}", fp.0);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/scale_fingerprint.txt");
     check_golden(&got, path);
 }

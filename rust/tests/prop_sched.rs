@@ -11,9 +11,9 @@
 use gmi_drl::cluster::Topology;
 use gmi_drl::config::static_registry;
 use gmi_drl::sched::{
-    corun_scenario, run_cluster, JobSpec, SchedAction, SchedConfig,
+    corun_scenario, run_cluster, FastForward, JobSpec, SchedAction, SchedConfig,
 };
-use gmi_drl::serve::{generate_trace, TrafficPattern};
+use gmi_drl::serve::{generate_trace, GatewayConfig, TrafficPattern};
 use gmi_drl::vtime::CostModel;
 
 /// Deterministic PRNG (SplitMix64).
@@ -280,4 +280,55 @@ fn preemptive_corun_beats_static_partitioning_on_both_axes() {
     // Neither schedule ever oversubscribed.
     assert!(stat.peak_gpu_share <= 1.0 + 1e-6);
     assert!(elas.peak_gpu_share <= 1.0 + 1e-6);
+}
+
+#[test]
+fn derived_round_cap_admits_week_scale_horizons() {
+    // The runaway guard used to be a flat 1,000,000-round cap, which
+    // forbids exactly the workloads the fast path exists for (a week at
+    // the 0.02s quantum is 30.2M quanta). The cap is now derived from the
+    // tenants' trace horizons: a sparse gateway over 200 simulated
+    // seconds at a 1e-4 quantum needs ~2M rounds — double the old flat
+    // cap — and must now run to completion.
+    let b = static_registry()["AT"].clone();
+    let cost = CostModel::new(&b);
+    let topo = Topology::dgx_a100(2);
+    let pat = TrafficPattern::Constant { rate: 0.05 };
+    let trace = generate_trace(&pat, 200.0, 7, 1);
+    let jobs = vec![JobSpec::gateway(
+        0,
+        "sparse",
+        5,
+        0.0,
+        (1, 1, 2),
+        0.25,
+        GatewayConfig { max_batch: 8, max_wait_s: 0.05, slo_s: 0.5, ..GatewayConfig::default() },
+        trace,
+    )];
+    let cfg = SchedConfig {
+        quantum_s: 1e-4,
+        fast_forward: FastForward::On,
+        ..SchedConfig::default()
+    };
+    let r = run_cluster(&topo, &b, &cost, &jobs, &cfg).unwrap();
+    assert!(
+        r.makespan_s / cfg.quantum_s > 1_000_000.0,
+        "scenario too short to exercise the old flat cap: {} rounds",
+        r.makespan_s / cfg.quantum_s
+    );
+    let served: usize =
+        r.jobs.iter().filter_map(|j| j.metrics.latency.as_ref()).map(|l| l.served).sum();
+    assert!(served > 0, "sparse gateway served nothing");
+
+    // An explicit override still pins the cap — and still trips fast.
+    let pinned = SchedConfig {
+        quantum_s: 1e-4,
+        max_rounds: Some(1_000),
+        ..SchedConfig::default()
+    };
+    let err = run_cluster(&topo, &b, &cost, &jobs, &pinned).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("runaway guard"),
+        "expected the runaway-guard error, got: {err:#}"
+    );
 }

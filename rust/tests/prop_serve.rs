@@ -9,9 +9,10 @@
 use gmi_drl::cluster::Topology;
 use gmi_drl::config::static_registry;
 use gmi_drl::mapping::{build_gateway_fleet, Layout};
+use gmi_drl::metrics::SampleReservoir;
 use gmi_drl::serve::{
-    batch_seconds, generate_trace, run_gateway, AutoscaleConfig, GatewayConfig, ScaleAction,
-    TrafficPattern,
+    batch_seconds, generate_trace, run_gateway, run_gateway_source, AutoscaleConfig,
+    GatewayConfig, ScaleAction, TraceSource, TrafficPattern,
 };
 use gmi_drl::vtime::CostModel;
 use gmi_drl::BenchInfo;
@@ -61,6 +62,7 @@ fn prop_p99_monotone_nondecreasing_in_arrival_rate() {
         admission_cap: None,
         slo_s: 10e-3,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     let mut last = 0.0f64;
     for frac in [0.2, 0.5, 0.8, 1.2, 1.6, 2.0] {
@@ -97,6 +99,7 @@ fn prop_queue_stays_bounded_below_capacity() {
         admission_cap: None,
         slo_s: 10e-3,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     for (seed, duration) in [(1u64, 0.3f64), (2, 0.6)] {
         let trace =
@@ -152,6 +155,7 @@ fn prop_batching_never_reorders_requests_from_one_source() {
             admission_cap: None,
             slo_s: 10e-3,
             autoscale: None,
+            ..GatewayConfig::default()
         };
         let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
         assert_eq!(r.served.len(), trace.len(), "case {case}: request lost");
@@ -226,6 +230,7 @@ fn prop_autoscaler_never_oversubscribes_and_respects_floors() {
             admission_cap: None,
             slo_s: 4e-3,
             autoscale: Some(auto.clone()),
+            ..GatewayConfig::default()
         };
         let r = run_gateway(&layout, &b, &cost, &trace, &cfg).unwrap();
         // Placement validity of the final fleet.
@@ -277,4 +282,249 @@ fn prop_autoscaler_never_oversubscribes_and_respects_floors() {
         // Nothing was lost regardless of scaling.
         assert_eq!(r.served.len(), trace.len(), "case {case}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Week-scale fast path: streaming traces, macro aggregation, reservoirs
+// ---------------------------------------------------------------------------
+
+/// Bit-exact equality over everything a gateway run reports.
+fn assert_runs_identical(
+    a: &gmi_drl::serve::GatewayRunResult,
+    b: &gmi_drl::serve::GatewayRunResult,
+    what: &str,
+) {
+    assert_eq!(a.latency, b.latency, "{what}: latency stats");
+    assert_eq!(a.served, b.served, "{what}: served ledger");
+    assert_eq!(a.rejected, b.rejected, "{what}: rejected");
+    assert_eq!(a.batch_sizes, b.batch_sizes, "{what}: batch sizes");
+    assert_eq!(a.scale_events.len(), b.scale_events.len(), "{what}: scale events");
+    assert_eq!(
+        a.metrics.span_s.to_bits(),
+        b.metrics.span_s.to_bits(),
+        "{what}: span bits"
+    );
+    assert_eq!(
+        a.metrics.steps_per_sec.to_bits(),
+        b.metrics.steps_per_sec.to_bits(),
+        "{what}: steps/s bits"
+    );
+    assert_eq!(
+        a.metrics.utilization.to_bits(),
+        b.metrics.utilization.to_bits(),
+        "{what}: utilization bits"
+    );
+}
+
+#[test]
+fn prop_streaming_source_bit_identical_to_materialized() {
+    // The tentpole identity: the lazy seeded stream must replay the eager
+    // `generate_trace` sequence bit-for-bit (across its chunked refills),
+    // and a gateway run fed the stream must report the bit-identical
+    // result — latency distribution, served ledger, batch sizes, spans.
+    let (b, cost) = bench_and_cost();
+    let topo = Topology::dgx_a100(1);
+    let batch = 16;
+    let layout = fleet(&topo, 2, 4, batch, &cost);
+    let serial = batch_seconds(&b, &cost, &topo, 0.25, batch);
+    let rate = 0.7 * 2.0 * batch as f64 / serial;
+    let mut rng = Rng(0x57e4_11);
+    for case in 0..6 {
+        let seed = rng.next();
+        let sources = rng.range(1, 9);
+        let duration = 0.2 + 0.1 * (case % 3) as f64;
+        let pattern = match case % 3 {
+            0 => TrafficPattern::Poisson { rate },
+            1 => TrafficPattern::Diurnal { base: 0.2 * rate, peak: rate, period_s: duration },
+            _ => TrafficPattern::Burst {
+                base: 0.3 * rate,
+                burst: 1.5 * rate,
+                start_s: 0.3 * duration,
+                len_s: 0.2 * duration,
+            },
+        };
+        let eager = generate_trace(&pattern, duration, seed, sources);
+        let streamed: Vec<_> =
+            TraceSource::streaming(&pattern, duration, seed, sources).collect();
+        assert_eq!(eager.len(), streamed.len(), "case {case}: stream length");
+        for (i, (x, y)) in eager.iter().zip(&streamed).enumerate() {
+            assert_eq!(x.id, y.id, "case {case}: id at {i}");
+            assert_eq!(x.source, y.source, "case {case}: source at {i}");
+            assert_eq!(
+                x.arrival_s.to_bits(),
+                y.arrival_s.to_bits(),
+                "case {case}: arrival bits at {i}"
+            );
+        }
+        if eager.is_empty() {
+            continue;
+        }
+        let cfg = GatewayConfig {
+            max_batch: batch,
+            max_wait_s: 1e-3,
+            slo_s: 10e-3,
+            ..GatewayConfig::default()
+        };
+        let m = run_gateway(&layout, &b, &cost, &eager, &cfg).unwrap();
+        let s = run_gateway_source(
+            &layout,
+            &b,
+            &cost,
+            TraceSource::streaming(&pattern, duration, seed, sources),
+            &cfg,
+        )
+        .unwrap();
+        assert_runs_identical(&m, &s, &format!("case {case}: streaming vs materialized"));
+    }
+}
+
+#[test]
+fn prop_aggregation_one_bit_identical_and_k_lossless() {
+    // K = 1 macro-requests close on arrival, so the explicit setting must
+    // be bit-identical to the default config. K > 1 coalesces: every
+    // request is still served exactly once (no losses, no duplicates),
+    // dispatched batches carry whole macros, and the dispatch count drops.
+    let (b, cost) = bench_and_cost();
+    let topo = Topology::dgx_a100(1);
+    let batch = 16;
+    let layout = fleet(&topo, 2, 4, batch, &cost);
+    let serial = batch_seconds(&b, &cost, &topo, 0.25, batch);
+    let rate = 0.6 * 2.0 * batch as f64 / serial;
+    let trace = generate_trace(&TrafficPattern::Poisson { rate }, 0.4, 21, 4);
+    assert!(trace.len() > 200, "aggregation trace unexpectedly small");
+    let base = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        slo_s: 10e-3,
+        ..GatewayConfig::default()
+    };
+
+    let plain = run_gateway(&layout, &b, &cost, &trace, &base).unwrap();
+    let k1 = run_gateway(
+        &layout,
+        &b,
+        &cost,
+        &trace,
+        &GatewayConfig { aggregation: 1, ..base.clone() },
+    )
+    .unwrap();
+    assert_runs_identical(&plain, &k1, "aggregation 1 vs default");
+
+    let mut last_dispatches = plain.batch_sizes.len();
+    for k in [2usize, 4, 8] {
+        let r = run_gateway(
+            &layout,
+            &b,
+            &cost,
+            &trace,
+            &GatewayConfig { aggregation: k, ..base.clone() },
+        )
+        .unwrap();
+        assert_eq!(r.served.len(), trace.len(), "K={k}: request lost");
+        assert_eq!(r.rejected, 0, "K={k}: spurious rejection");
+        let mut ids: Vec<usize> = r.served.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "K={k}: duplicate serve");
+        assert_eq!(
+            r.batch_sizes.iter().sum::<usize>(),
+            trace.len(),
+            "K={k}: batch ledger out of balance"
+        );
+        assert!(
+            r.batch_sizes.len() <= last_dispatches,
+            "K={k}: coalescing did not reduce dispatches ({} > {last_dispatches})",
+            r.batch_sizes.len()
+        );
+        last_dispatches = r.batch_sizes.len();
+    }
+}
+
+#[test]
+fn prop_latency_reservoir_exact_below_cap_and_bounded_above() {
+    // The reservoir satellite, unit level: below the cap every pushed
+    // sample is retained in push order (any downstream statistic is
+    // bit-identical to the unbounded log); above it the retained set stays
+    // at the cap while the running sum remains exact — and the whole thing
+    // replays bit-for-bit from its seed.
+    let mut rng = Rng(0xca9);
+    for case in 0..8 {
+        let cap = rng.range(4, 64);
+        let n = rng.range(1, 3 * cap);
+        let seed = rng.next();
+        let mut res = SampleReservoir::capped(cap, seed);
+        let mut res2 = SampleReservoir::capped(cap, seed);
+        let mut exact = Vec::new();
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let v = ((i as f64) * 0.37).sin().abs() + 1e-3;
+            res.push(v);
+            res2.push(v);
+            exact.push(v);
+            sum += v;
+        }
+        assert_eq!(res.seen(), n, "case {case}: seen");
+        assert_eq!(res.sum().to_bits(), sum.to_bits(), "case {case}: exact sum");
+        assert_eq!(res.samples(), res2.samples(), "case {case}: seeded replay");
+        if n <= cap {
+            assert!(res.is_exact(), "case {case}: sub-cap must be exact");
+            assert_eq!(res.samples(), &exact[..], "case {case}: push-order retention");
+        } else {
+            assert_eq!(res.samples().len(), cap, "case {case}: cap respected");
+            for s in res.samples() {
+                assert!(exact.contains(s), "case {case}: foreign sample");
+            }
+        }
+    }
+
+    // Gateway level: a cap at or above the served count must leave every
+    // reported statistic bit-identical to the unbounded run.
+    let (b, cost) = bench_and_cost();
+    let topo = Topology::dgx_a100(1);
+    let batch = 16;
+    let layout = fleet(&topo, 2, 4, batch, &cost);
+    let serial = batch_seconds(&b, &cost, &topo, 0.25, batch);
+    let rate = 0.5 * 2.0 * batch as f64 / serial;
+    let trace = generate_trace(&TrafficPattern::Poisson { rate }, 0.3, 5, 4);
+    let base = GatewayConfig {
+        max_batch: batch,
+        max_wait_s: 1e-3,
+        slo_s: 10e-3,
+        ..GatewayConfig::default()
+    };
+    let unbounded = run_gateway(&layout, &b, &cost, &trace, &base).unwrap();
+    let roomy = run_gateway(
+        &layout,
+        &b,
+        &cost,
+        &trace,
+        &GatewayConfig { sample_cap: Some(trace.len() + 1), ..base.clone() },
+    )
+    .unwrap();
+    assert_runs_identical(&unbounded, &roomy, "sub-cap reservoir vs unbounded");
+
+    // A small cap still reports exact counts, exact mean (running sum),
+    // and exact attainment (running SLO counter) — only the percentiles
+    // come from the sampled reservoir.
+    let capped = run_gateway(
+        &layout,
+        &b,
+        &cost,
+        &trace,
+        &GatewayConfig { sample_cap: Some(32), ..base.clone() },
+    )
+    .unwrap();
+    assert_eq!(capped.latency.served, unbounded.latency.served, "capped: served");
+    assert_eq!(capped.latency.requests, unbounded.latency.requests, "capped: requests");
+    assert_eq!(
+        capped.latency.mean_s.to_bits(),
+        unbounded.latency.mean_s.to_bits(),
+        "capped: exact mean"
+    );
+    assert_eq!(
+        capped.latency.attainment.to_bits(),
+        unbounded.latency.attainment.to_bits(),
+        "capped: exact attainment"
+    );
+    assert!(capped.latency.p99_s.is_finite() && capped.latency.p99_s > 0.0);
 }

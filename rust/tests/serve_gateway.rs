@@ -45,6 +45,7 @@ fn autoscaled_fleet_beats_static_fleet_on_the_same_burst() {
         admission_cap: None,
         slo_s,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     let mut cfg_auto = cfg_static.clone();
     cfg_auto.autoscale = Some(AutoscaleConfig {
@@ -135,6 +136,7 @@ fn diurnal_day_produces_grow_and_shrink_events() {
             max_per_gpu: max_per,
             ..Default::default()
         }),
+        ..GatewayConfig::default()
     };
     let fleet = build_gateway_fleet(&topo, 1, max_per, batch, &cost, None).unwrap();
     let r = run_gateway(&fleet, &bench, &cost, &trace, &cfg).unwrap();
@@ -200,6 +202,7 @@ fn pooled_hot_buffers_do_not_regrow_after_warmup() {
         admission_cap: None,
         slo_s: 30e-3,
         autoscale: None,
+        ..GatewayConfig::default()
     };
     let fleet = build_gateway_fleet(&topo, 2, max_per, batch, &cost, None).unwrap();
     let mut engine = Engine::new(&fleet.manager, &cost);
